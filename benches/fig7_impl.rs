@@ -1,0 +1,75 @@
+//! Figure 7 / Appendix A.6: FP16-vs-W4A16 relative speed is
+//! implementation-dependent. Three "implementations" compared:
+//!   atom-stack : our serving stack, L20 virtual clock (Atom-calibrated —
+//!                FP16 beats AWQ, as in the paper's main tables)
+//!   wall-clock : the same runs measured on this CPU substrate
+//!   dummy      : static-batch "benchmark style" (no continuous refill,
+//!                weight-traffic dominated — AWQ wins, like AutoAWQ's
+//!                dummy benchmark in the paper)
+//! Normalized throughput of W16A16 vs W4A16 at batches 8/16/32.
+
+use qspec::bench::runner::{full_mode, open_session, run_ar, RunSpec};
+use qspec::bench::{f2, Table};
+use qspec::costmodel::{twins::Twin, CostModel, Phase};
+use qspec::model::Mode;
+use qspec::util::json::{num, obj, s, Json};
+
+fn main() {
+    let (sess, tok) = open_session().expect("artifacts missing");
+    let full = full_mode();
+    let batches: Vec<usize> = if full { vec![8, 16, 32] } else { vec![8, 16] };
+    let n_req = if full { 24 } else { 10 };
+
+    let mut table = Table::new(&["impl", "batch", "FP16 (norm)", "W4A16 (norm)", "winner"]);
+    let mut out = Vec::new();
+    for &b in &batches {
+        let spec = RunSpec::new("s", b, "sharegpt", n_req.max(b + 2));
+        let fp = run_ar(&sess, &tok, Mode::W16A16, &spec).expect("fp");
+        let awq = run_ar(&sess, &tok, Mode::W4A16, &spec).expect("awq");
+
+        // (a) atom-stack: virtual clock
+        let (a_fp, a_awq) = (fp.virt_tokens_per_s(), awq.virt_tokens_per_s());
+        // (b) wall-clock on this substrate
+        let (w_fp, w_awq) = (fp.wall_tokens_per_s(), awq.wall_tokens_per_s());
+        // (c) dummy benchmark: single weight-traffic-bound decode kernel,
+        //     no serving overheads (pure roofline step cost)
+        let twin = Twin::lookup("llama3.2-3b");
+        let d_fp = 1e9 / CostModel::ns_for(&twin, Mode::W16A16, Phase::Decode, b, 1, 512) as f64;
+        // the dummy path models an *optimized* AWQ kernel (fused dequant,
+        // FlashAttention) — weight traffic 0.56p, no serving dequant tax
+        let d_awq_ns = {
+            let base = CostModel::ns_for(&twin, Mode::W4A4, Phase::Decode, b, 1, 512);
+            // int4 weights but fp16 KV + fp16 math: between W4A4 and FP16
+            let kv_extra = CostModel::ns_for(&twin, Mode::W16A16, Phase::Decode, b, 1, 512)
+                .saturating_sub(CostModel::ns_for(&twin, Mode::W4A4, Phase::Decode, b, 1, 512))
+                / 3;
+            base + kv_extra
+        };
+        let d_awq = 1e9 / d_awq_ns as f64;
+
+        for (name, f, a) in [
+            ("atom-stack(virt)", a_fp, a_awq),
+            ("this-cpu(wall)", w_fp, w_awq),
+            ("dummy-bench", d_fp, d_awq),
+        ] {
+            let m = f.max(a);
+            table.row(&[
+                name.into(),
+                b.to_string(),
+                f2(f / m),
+                f2(a / m),
+                if f > a { "FP16" } else { "W4A16" }.into(),
+            ]);
+            out.push(obj(vec![
+                ("impl", s(name)),
+                ("batch", num(b as f64)),
+                ("fp16_norm", num(f / m)),
+                ("awq_norm", num(a / m)),
+            ]));
+        }
+    }
+    table.print("Figure 7 — FP16 vs W4A16 across implementations (normalized)");
+    println!("\npaper reference: Atom's stack FP16 > AWQ at all batches; AutoAWQ dummy");
+    println!("benchmark reverses it; vLLM mixed. Implementation determines the winner.");
+    qspec::bench::write_json("fig7_impl", &Json::Arr(out)).unwrap();
+}

@@ -1,0 +1,50 @@
+//! Microbenchmarks of the compiled per-entry modules (not a paper table;
+//! the §Perf baseline): wall time per prefill/decode/draft/verify call
+//! and the derived host-overhead estimate.
+
+use qspec::bench::runner::open_session;
+use qspec::bench::{measure, Table};
+use qspec::coordinator::{QSpecConfig, QSpecEngine};
+use qspec::model::Tokenizer;
+
+fn main() {
+    let (sess, tok) = open_session().expect("artifacts missing");
+    let mut table = Table::new(&["op", "mean ms", "std ms", "min ms"]);
+
+    for (size, b) in [("s", 8usize), ("m", 8)] {
+        // one engine drives a synthetic prompt so each phase is hot
+        let mut e = QSpecEngine::new(&sess, QSpecConfig::new(size, b)).expect("engine");
+        for _ in 0..b {
+            e.submit(tok.encode_prompt("q: g xyxxy ?\n"), 24);
+        }
+        // prefill happens on the first step
+        let t0 = std::time::Instant::now();
+        let _ = e.step().expect("step");
+        let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let s = measure(2, 8, || {
+            // steady-state cycle: draft + verify + host
+            if e.has_work() {
+                let _ = e.step().expect("step");
+            } else {
+                for _ in 0..b {
+                    e.submit(tok.encode_prompt("q: g xyxxy ?\n"), 24);
+                }
+                let _ = e.step().expect("step");
+            }
+        });
+        table.row(&[
+            format!("{size}@{b} prefill+step"),
+            format!("{prefill_ms:.2}"),
+            "-".into(),
+            "-".into(),
+        ]);
+        table.row(&[
+            format!("{size}@{b} spec-cycle"),
+            format!("{:.2}", s.mean() * 1e3),
+            format!("{:.2}", s.std() * 1e3),
+            format!("{:.2}", s.min() * 1e3),
+        ]);
+    }
+    table.print("microbench — per-call wall times (perf baseline)");
+}

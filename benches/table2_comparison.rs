@@ -1,0 +1,68 @@
+//! Table 2: method comparison matrix — memory (draft weights / draft KV),
+//! computation (W4A4 kernels, draft-verify), generation (acceptance,
+//! fidelity). Mixed analytical (cost-model bytes) + measured (acceptance
+//! with and without KV-overwriting; the "QSpec (no-overwrite)" row).
+
+use qspec::bench::runner::{full_mode, open_session, run_qspec, RunSpec};
+use qspec::bench::Table;
+use qspec::costmodel::{twins::Twin, CostModel};
+use qspec::model::Mode;
+use qspec::util::json::{num, obj, s, Json};
+
+fn main() {
+    let (sess, tok) = open_session().expect("artifacts missing");
+    let n_req = if full_mode() { 32 } else { 12 };
+    let spec = RunSpec::new("s", 8, "chain", n_req);
+
+    // measured acceptance with/without overwriting
+    let (m_over, _) = run_qspec(&sess, &tok, &spec, true, false).expect("run");
+    let (m_no, _) = run_qspec(&sess, &tok, &spec, false, false).expect("run");
+    let acc_ratio = if m_over.acceptance_rate() > 0.0 {
+        m_no.acceptance_rate() / m_over.acceptance_rate()
+    } else {
+        0.0
+    };
+
+    // analytical memory (7B twin): draft weights / KV relative to W4A16
+    let cm = CostModel::new(Twin::lookup("llama2-7b"));
+    let base_w = cm.weight_bytes(Mode::W4A16) as f64;
+    let eagle_w = (cm.weight_bytes(Mode::W4A16) + 2 * Twin::lookup("eagle-head").n_params) as f64;
+    let base_kv = cm.kv_bytes(Mode::W4A16, 8, 1024) as f64;
+    let dual_kv = base_kv + cm.kv_bytes(Mode::W4A4, 8, 1024) as f64;
+
+    let mut t = Table::new(&[
+        "method", "draft weights", "draft KV", "W4A4 kernel", "draft-verify",
+        "high acceptance", "high fidelity",
+    ]);
+    t.row(&["W4A16".into(), "none (1x)".into(), "none (1x)".into(),
+            "no".into(), "no".into(), "-".into(), "yes".into()]);
+    t.row(&["W4A4".into(), "none (1x)".into(), "none (1x)".into(),
+            "yes".into(), "no".into(), "-".into(), "NO".into()]);
+    t.row(&["SpecDecode".into(),
+            format!("extra ({:.2}x)", eagle_w / base_w),
+            "extra".into(), "?".into(), "yes".into(), "?".into(), "yes".into()]);
+    t.row(&["QSpec(no-ovw)".into(), "shared (1x)".into(),
+            format!("dual ({:.2}x)", dual_kv / base_kv),
+            "yes".into(), "yes".into(),
+            format!("NO ({:.2}x)", acc_ratio),
+            "yes".into()]);
+    t.row(&["QSPEC".into(), "shared (1x)".into(), "shared (1x)".into(),
+            "yes".into(), "yes".into(),
+            format!("yes ({:.1}%)", 100.0 * m_over.acceptance_rate()),
+            "yes".into()]);
+    t.print("Table 2 — method comparison (measured acceptance, modeled memory)");
+    println!("\npaper reference: no-overwrite acceptance ~0.8x of QSPEC; dual KV ~1.25x");
+    println!("(our dual cache is f32+f32 = 2x; the paper's draft cache is int4 = 1.25x)");
+
+    qspec::bench::write_json(
+        "table2_comparison",
+        &obj(vec![
+            ("acceptance_overwrite", num(m_over.acceptance_rate())),
+            ("acceptance_no_overwrite", num(m_no.acceptance_rate())),
+            ("no_overwrite_ratio", num(acc_ratio)),
+            ("spec_weight_overhead", num(eagle_w / base_w)),
+            ("paper_ref", s("no-overwrite ~0.8x acceptance")),
+        ]),
+    )
+    .unwrap();
+}

@@ -1,0 +1,82 @@
+//! Tables 4 & 6: token-generation throughput across model sizes,
+//! quantization configurations, batch sizes and datasets.
+//!
+//! Prints tokens/s on the L20 virtual clock (paper-comparable) plus the
+//! measured wall-clock column, and the QSPEC/W4A16 speedup the paper
+//! headlines. Quick mode covers s/m x {8,16} x {chain, sharegpt};
+//! QSPEC_BENCH_FULL=1 runs the full grid.
+
+use qspec::bench::runner::{full_mode, load_workload, open_session, run_ar, run_qspec, RunSpec};
+use qspec::bench::{speedup, Table};
+use qspec::model::Mode;
+use qspec::util::json::{arr, num, obj, s, Json};
+use qspec::workload::paper_name;
+
+fn main() {
+    let (sess, tok) = open_session().expect("artifacts missing: run `make artifacts`");
+    let full = full_mode();
+    let sizes: Vec<&str> = if full { vec!["s", "m", "l", "xl"] } else { vec!["s", "m"] };
+    let datasets: Vec<&str> = if full {
+        vec!["chain", "chain_hard", "trace", "cloze", "sharegpt", "lmsys"]
+    } else {
+        vec!["chain", "sharegpt"]
+    };
+    let n_req = if full { 32 } else { 12 };
+
+    let mut out_rows = Vec::new();
+    let mut table = Table::new(&[
+        "model", "dataset", "batch", "method", "tok/s(virt)", "tok/s(wall)", "vs W4A16",
+    ]);
+
+    for size in &sizes {
+        let batches: Vec<usize> = if full {
+            if *size == "xl" { vec![8, 16] } else { vec![8, 16, 32] }
+        } else {
+            vec![8, 16]
+        };
+        for ds in &datasets {
+            for &b in &batches {
+                let spec = RunSpec::new(size, b, ds, n_req.max(b + 4));
+                let _ = load_workload(&sess, &tok, &spec).expect("workload");
+                let mut results: Vec<(String, f64, f64)> = Vec::new();
+                for mode in [Mode::W16A16, Mode::W4A4, Mode::W4A16] {
+                    let m = run_ar(&sess, &tok, mode, &spec).expect("ar run");
+                    results.push((mode.to_string(), m.virt_tokens_per_s(), m.wall_tokens_per_s()));
+                }
+                let (qm, _) = run_qspec(&sess, &tok, &spec, true, false).expect("qspec run");
+                results.push(("qspec".into(), qm.virt_tokens_per_s(), qm.wall_tokens_per_s()));
+                let w4a16_virt = results[2].1;
+                let w4a16_wall = results[2].2;
+                for (name, virt, wall) in &results {
+                    let su_v = virt / w4a16_virt;
+                    let su_w = wall / w4a16_wall;
+                    table.row(&[
+                        size.to_string(),
+                        paper_name(ds).to_string(),
+                        b.to_string(),
+                        name.clone(),
+                        format!("{virt:.0}"),
+                        format!("{wall:.1}"),
+                        format!("{} / {} wall", speedup(su_v), speedup(su_w)),
+                    ]);
+                    out_rows.push(obj(vec![
+                        ("size", s(size)),
+                        ("dataset", s(ds)),
+                        ("batch", num(b as f64)),
+                        ("method", s(name)),
+                        ("virt_tok_s", num(*virt)),
+                        ("wall_tok_s", num(*wall)),
+                        ("speedup_virt", num(su_v)),
+                        ("speedup_wall", num(su_w)),
+                    ]));
+                }
+            }
+        }
+    }
+    table.print("Table 4/6 — throughput (virtual clock = paper scale)");
+    println!(
+        "\npaper reference (7B/GSM8K b=32): QSPEC 1.64x over W4A16; \
+         grid average 1.2-1.6x; W4A4 ~2x; W16A16 ~1.2x"
+    );
+    qspec::bench::write_json("table4_throughput", &Json::Arr(out_rows)).unwrap();
+}

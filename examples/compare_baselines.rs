@@ -1,0 +1,40 @@
+//! Compare every serving configuration on one workload: the paper's
+//! Figure 1 story in one run — W4A4 is fast but wrong, W4A16 is right
+//! but slow, QSPEC is right *and* fast.
+//!
+//!     cargo run --release --example compare_baselines
+
+use qspec::bench::runner::{open_session, run_ar, run_qspec, RunSpec};
+use qspec::bench::Table;
+use qspec::coordinator::{ArEngine, QSpecConfig, QSpecEngine};
+use qspec::evalsuite::{self, load_eval};
+use qspec::model::Mode;
+
+fn main() -> qspec::Result<()> {
+    let (sess, tok) = open_session()?;
+    let items = load_eval(&sess.store.eval_path("chain"))?;
+    let items = &items[..24.min(items.len())];
+    let spec = RunSpec::new("s", 8, "chain", 16);
+
+    let mut table = Table::new(&["method", "chain EM", "virt tok/s", "verdict"]);
+    for mode in [Mode::W16A16, Mode::W4A16, Mode::W4A4] {
+        let mut e = ArEngine::new(&sess, "s", "atom", mode, 8)?;
+        let (em, _) = evalsuite::eval_ar(&mut e, &tok, items, 96)?;
+        let thr = run_ar(&sess, &tok, mode, &spec)?.virt_tokens_per_s();
+        let verdict = match mode {
+            Mode::W16A16 => "accurate, heavy memory",
+            Mode::W4A16 => "accurate, slow",
+            Mode::W4A4 => "fast, degraded on multi-step",
+        };
+        table.row(&[mode.to_string(), format!("{:.1}%", 100.0 * em),
+                    format!("{thr:.0}"), verdict.into()]);
+    }
+    let mut q = QSpecEngine::new(&sess, QSpecConfig::new("s", 8))?;
+    let (em, _) = evalsuite::eval_qspec(&mut q, &tok, items, 96)?;
+    let (qm, _) = run_qspec(&sess, &tok, &spec, true, false)?;
+    table.row(&["qspec".into(), format!("{:.1}%", 100.0 * em),
+                format!("{:.0}", qm.virt_tokens_per_s()),
+                "accurate AND fast (the paper's point)".into()]);
+    table.print("figure-1 story: quality/speed across configurations");
+    Ok(())
+}

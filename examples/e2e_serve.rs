@@ -1,0 +1,88 @@
+//! End-to-end serving driver (DESIGN.md "end-to-end validation"): load
+//! the trained small model, serve a realistic mixed batched workload
+//! through the full QSPEC stack (FCFS queue -> continuous batcher ->
+//! W4A4 fused draft -> W4A16 parallel verify -> KV overwriting), and
+//! report latency/throughput/acceptance against the W4A16 baseline.
+//!
+//!     cargo run --release --example e2e_serve [-- --size m --batch 16 --n 48]
+//!
+//! The run recorded in EXPERIMENTS.md §E2E used the defaults.
+
+use qspec::bench::runner::{load_workload, RunSpec};
+use qspec::bench::Table;
+use qspec::cli::Args;
+use qspec::coordinator::{ArEngine, QSpecConfig, QSpecEngine};
+use qspec::model::{Mode, Tokenizer};
+use qspec::runtime::{ArtifactStore, Session};
+
+fn main() -> qspec::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let size = args.get_or("size", "s");
+    let batch = args.get_usize("batch", 8)?;
+    let n = args.get_usize("n", 32)?;
+
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let sess = Session::new(ArtifactStore::open(&root)?)?;
+    let tok = Tokenizer::load(&sess.store.tokenizer_path())?;
+
+    // realistic mixed workload: chat + math + code analogs
+    let mut work = Vec::new();
+    for ds in ["sharegpt", "chain", "trace"] {
+        let spec = RunSpec::new(&size, batch, ds, n / 3 + 1);
+        work.extend(load_workload(&sess, &tok, &spec)?);
+    }
+    work.truncate(n);
+    println!("serving {} requests on size={size} batch={batch} (mixed workload)", work.len());
+
+    let mut table = Table::new(&[
+        "engine", "req", "tok", "wall tok/s", "virt tok/s", "p50 ms", "p99 ms", "accept",
+    ]);
+
+    // --- QSPEC -------------------------------------------------------
+    let mut q = QSpecEngine::new(&sess, QSpecConfig::new(&size, batch))?;
+    for (p, mt) in &work {
+        q.submit(p.clone(), *mt);
+    }
+    let fins = q.run_to_completion()?;
+    assert_eq!(fins.len(), work.len(), "all requests must complete");
+    let m = &q.metrics;
+    table.row(&[
+        "qspec".into(),
+        m.requests_done.to_string(),
+        m.tokens_out.to_string(),
+        format!("{:.1}", m.wall_tokens_per_s()),
+        format!("{:.0}", m.virt_tokens_per_s()),
+        format!("{:.1}", m.req_latency.percentile(50.0) as f64 / 1e6),
+        format!("{:.1}", m.req_latency.percentile(99.0) as f64 / 1e6),
+        format!("{:.1}%", 100.0 * m.acceptance_rate()),
+    ]);
+    let q_wall = m.wall_tokens_per_s();
+    let q_virt = m.virt_tokens_per_s();
+
+    // --- W4A16 baseline ------------------------------------------------
+    let mut a = ArEngine::new(&sess, &size, "atom", Mode::W4A16, batch)?;
+    for (p, mt) in &work {
+        a.submit(p.clone(), *mt);
+    }
+    let fins = a.run_to_completion()?;
+    assert_eq!(fins.len(), work.len());
+    let m = &a.metrics;
+    table.row(&[
+        "w4a16".into(),
+        m.requests_done.to_string(),
+        m.tokens_out.to_string(),
+        format!("{:.1}", m.wall_tokens_per_s()),
+        format!("{:.0}", m.virt_tokens_per_s()),
+        format!("{:.1}", m.req_latency.percentile(50.0) as f64 / 1e6),
+        format!("{:.1}", m.req_latency.percentile(99.0) as f64 / 1e6),
+        "-".into(),
+    ]);
+
+    table.print("end-to-end serving");
+    println!(
+        "\nQSPEC speedup over W4A16: {:.2}x wall, {:.2}x virtual (paper: 1.2-1.64x)",
+        q_wall / a.metrics.wall_tokens_per_s(),
+        q_virt / a.metrics.virt_tokens_per_s(),
+    );
+    Ok(())
+}

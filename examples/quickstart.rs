@@ -1,0 +1,47 @@
+//! Quickstart: load the artifacts, build a QSPEC engine, and generate.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Demonstrates the core API surface: ArtifactStore -> Session ->
+//! QSpecEngine -> submit/run_to_completion.
+
+use qspec::coordinator::{QSpecConfig, QSpecEngine};
+use qspec::model::Tokenizer;
+use qspec::runtime::{ArtifactStore, Session};
+
+fn main() -> qspec::Result<()> {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let sess = Session::new(ArtifactStore::open(&root)?)?;
+    let tok = Tokenizer::load(&sess.store.tokenizer_path())?;
+
+    // The QSPEC engine: W4A4 drafting + W4A16 verification over shared
+    // int4 weights and a single KV cache.
+    let mut engine = QSpecEngine::new(&sess, QSpecConfig::new("s", 8))?;
+
+    // The synthetic "chain" task (GSM8K analog): apply the secret
+    // permutation x/y step by step. The model emits the steps + answer.
+    let prompts = [
+        "q: g xyx ?\n",
+        "q: a xx ?\n",
+        "q: m yxy ?\n",
+        "q: t xyyx ?\n",
+    ];
+    for p in &prompts {
+        engine.submit(tok.encode_prompt(p), 48);
+    }
+    let mut finished = engine.run_to_completion()?;
+    finished.sort_by_key(|f| f.id);
+
+    for (p, f) in prompts.iter().zip(&finished) {
+        println!("--- request {} ({} tokens, {:.1} ms) ---", f.id,
+                 f.tokens.len(), f.latency_ns as f64 / 1e6);
+        print!("{p}{}", tok.decode(&f.tokens));
+    }
+    println!("\nacceptance rate: {:.1}%", 100.0 * engine.metrics.acceptance_rate());
+    println!("mean accepted drafts/cycle: {:.2} of gamma={}",
+             engine.metrics.accept_len.mean(), engine.cfg.gamma);
+    println!("throughput: {:.1} tok/s wall, {:.0} tok/s on the L20 virtual clock",
+             engine.metrics.wall_tokens_per_s(),
+             engine.metrics.virt_tokens_per_s());
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! TCP serving demo: spawns the `qspec serve` binary, sends concurrent
+//! requests over the line protocol, prints the responses, shuts down.
+//!
+//!     cargo build --release && cargo run --release --example tcp_server_demo
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command};
+use std::time::Duration;
+
+fn wait_for_port(addr: &str, tries: u32) -> bool {
+    for _ in 0..tries {
+        if TcpStream::connect(addr).is_ok() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(500));
+    }
+    false
+}
+
+fn query(addr: &str, prompt: &str, max_tokens: usize) -> std::io::Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(
+        stream,
+        r#"{{"prompt":"{}","max_tokens":{max_tokens}}}"#,
+        prompt.replace('\n', "\\n")
+    )?;
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line)?;
+    Ok(line.trim().to_string())
+}
+
+fn main() {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let bin = root.join("target/release/qspec");
+    if !bin.exists() {
+        eprintln!("build the binary first: cargo build --release");
+        std::process::exit(1);
+    }
+    let port = 7413u16;
+    let mut child: Child = Command::new(&bin)
+        .current_dir(&root)
+        .args(["serve", "--size", "s", "--batch", "8", "--port", &port.to_string()])
+        .spawn()
+        .expect("spawn qspec serve");
+
+    let addr = format!("127.0.0.1:{port}");
+    if !wait_for_port(&addr, 120) {
+        let _ = child.kill();
+        panic!("server did not come up");
+    }
+    println!("server up on {addr}; sending concurrent requests\n");
+
+    let prompts = ["q: g xyx ?\n", "q: b yy ?\n", "q: [3,1,2] rev ?\n", "q: k x ?\n"];
+    let handles: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            let addr = addr.clone();
+            let p = p.to_string();
+            std::thread::spawn(move || (p.clone(), query(&addr, &p, 48)))
+        })
+        .collect();
+    for h in handles {
+        let (p, r) = h.join().unwrap();
+        println!("prompt: {:?}\nresponse: {}\n", p, r.unwrap_or_else(|e| e.to_string()));
+    }
+
+    let _ = child.kill();
+    let _ = child.wait();
+    println!("server stopped.");
+}

@@ -1,0 +1,197 @@
+"""AOT exporter: lowers every manifest module to HLO text and dumps
+weights/tokenizer/eval-sets/workloads for the rust runtime.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Parameter order contract with rust (runtime/artifacts.rs): the exported
+HLO takes the entry's data args first, then the weight tensors in
+*sorted key order* (jax flattens dict pytrees in sorted-key order). The
+QTNS weight files are written in that same order.
+"""
+
+import argparse
+import json
+import os
+import struct
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, model, tokenizer, train
+from .configs import (GAMMA, GROUP, MODELS, N_OUTLIER, PREFILL_T,
+                      default_manifest)
+from .quant import quantize
+
+DT_F32, DT_I8, DT_I32 = 0, 1, 2
+_DT = {np.dtype(np.float32): DT_F32, np.dtype(np.int8): DT_I8,
+       np.dtype(np.int32): DT_I32}
+
+
+def write_qtns(path: str, tensors):
+    """QTNS binary tensor container (rust reader: util/binfmt.rs).
+
+    layout: b"QTNS1\\0\\0\\0" | u32 n | per tensor:
+            u16 name_len | name | u8 dtype | u8 ndim | u32 dims[] | raw LE data
+    """
+    with open(path, "wb") as f:
+        f.write(b"QTNS1\0\0\0")
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DT[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False)
+    return comp.as_hlo_text()
+
+
+def quantized_params(size, scheme, mode, ckpt_dir, calib_cache):
+    """(Possibly) quantized param dict for a weights_key."""
+    fp = train.load_or_train(size, ckpt_dir)
+    if mode == "w16a16":
+        return fp
+    calib = None
+    if scheme == "atom" and mode == "w4a4":
+        if size not in calib_cache:
+            cfg = MODELS[size]
+            rows = np.asarray(
+                corpus.training_stream(seed=99, n_rows=8, seq_len=64), np.int32)
+            calib_cache[size] = model.calibrate(cfg, fp, rows)
+        calib = calib_cache[size]
+    return quantize(scheme, mode, fp, calib)
+
+
+def export_module(cfg, spec, params, hlo_dir):
+    """Lower one ModuleSpec to HLO text. Returns (path, n_weights)."""
+    fn = model.make_entry_fn(cfg, spec)
+    args = model.entry_arg_specs(cfg, spec)
+    pspec = {k: jax.ShapeDtypeStruct(v.shape, jnp.dtype(v.dtype))
+             for k, v in params.items()}
+    lowered = jax.jit(fn).lower(*args, pspec)
+    text = to_hlo_text(lowered)
+    path = os.path.join(hlo_dir, spec.name + ".hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return path, len(pspec)
+
+
+def main():
+    ap = argparse.ArgumentParser(description="QSPEC AOT artifact builder")
+    ap.add_argument("--out", default=None, help="artifacts dir")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module-name substrings to export")
+    ap.add_argument("--sizes", default=None,
+                    help="restrict to these model sizes (comma-separated)")
+    args = ap.parse_args()
+
+    root = args.out or os.path.join(os.path.dirname(__file__), "..", "..",
+                                    "artifacts")
+    root = os.path.abspath(root)
+    hlo_dir = os.path.join(root, "hlo")
+    w_dir = os.path.join(root, "weights")
+    ckpt_dir = os.path.join(root, "ckpt")
+    eval_dir = os.path.join(root, "eval")
+    wl_dir = os.path.join(root, "workloads")
+    for d in (root, hlo_dir, w_dir, ckpt_dir, eval_dir, wl_dir):
+        os.makedirs(d, exist_ok=True)
+
+    manifest = default_manifest()
+    if args.sizes:
+        keep = set(args.sizes.split(","))
+        manifest = [m for m in manifest if m.size in keep]
+    if args.only:
+        subs = args.only.split(",")
+        manifest = [m for m in manifest if any(s in m.name for s in subs)]
+
+    # ---- weights -----------------------------------------------------
+    calib_cache: dict = {}
+    weight_files = {}
+    params_by_key = {}
+    for spec in manifest:
+        wk = spec.weights_key()
+        if wk in params_by_key:
+            continue
+        size, scheme, mode = spec.size, spec.scheme, spec.mode
+        t0 = time.time()
+        p = quantized_params(size, scheme, mode, ckpt_dir, calib_cache)
+        params_by_key[wk] = p
+        fname = f"{wk}.qtns"
+        write_qtns(os.path.join(w_dir, fname),
+                   [(k, p[k]) for k in sorted(p)])
+        weight_files[wk] = {"file": "weights/" + fname,
+                            "names": sorted(p),
+                            }
+        print(f"[aot] weights {wk}: {len(p)} tensors "
+              f"({time.time() - t0:.1f}s)", flush=True)
+
+    # ---- HLO modules ---------------------------------------------------
+    modules = []
+    for i, spec in enumerate(manifest):
+        cfg = MODELS[spec.size]
+        p = params_by_key[spec.weights_key()]
+        t0 = time.time()
+        path, n_w = export_module(cfg, spec, p, hlo_dir)
+        modules.append({
+            "name": spec.name, "entry": spec.entry, "size": spec.size,
+            "scheme": spec.scheme, "mode": spec.mode, "batch": spec.batch,
+            "gamma": spec.gamma, "hlo": "hlo/" + spec.name + ".hlo.txt",
+            "weights": spec.weights_key(), "n_weights": n_w,
+        })
+        print(f"[aot] ({i + 1}/{len(manifest)}) {spec.name} "
+              f"({time.time() - t0:.1f}s)", flush=True)
+
+    # ---- tokenizer / eval sets / workloads ---------------------------
+    tokenizer.dump(os.path.join(root, "tokenizer.json"))
+    eval_counts = {"chain": 200, "chain_hard": 200, "trace": 200, "cloze": 500}
+    for task, n in eval_counts.items():
+        with open(os.path.join(eval_dir, task + ".json"), "w") as f:
+            json.dump(corpus.eval_set(task, n, seed=1), f)
+    text_rows = corpus.text_eval_rows(64, model.SCORE_T, seed=1)
+    with open(os.path.join(eval_dir, "text_ppl.json"), "w") as f:
+        json.dump(text_rows, f)
+    for ds in list(corpus.TASKS) + ["sharegpt", "lmsys"]:
+        with open(os.path.join(wl_dir, ds + ".json"), "w") as f:
+            json.dump(corpus.workload(ds, 100, seed=2), f)
+
+    # ---- manifest ------------------------------------------------------
+    models_meta = {
+        name: {
+            "d_model": c.d_model, "n_layers": c.n_layers, "n_heads": c.n_heads,
+            "n_kv_heads": c.n_kv_heads, "d_ff": c.d_ff, "vocab": c.vocab,
+            "max_seq": c.max_seq, "head_dim": c.head_dim,
+            "n_params": c.n_params(), "paper_twin": c.paper_twin,
+        }
+        for name, c in MODELS.items()
+    }
+    with open(os.path.join(root, "manifest.json"), "w") as f:
+        json.dump({
+            "version": 1,
+            "group": GROUP,
+            "n_outlier": N_OUTLIER,
+            "gamma_default": GAMMA,
+            "prefill_t": PREFILL_T,
+            "score_t": model.SCORE_T,
+            "models": models_meta,
+            "weights": weight_files,
+            "modules": modules,
+        }, f, indent=1)
+    print(f"[aot] wrote {len(modules)} modules -> {root}", flush=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

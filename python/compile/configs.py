@@ -1,0 +1,190 @@
+"""Model / quantization / artifact configuration for the QSPEC reproduction.
+
+Four transformer sizes stand in for the paper's Llama family (see
+DESIGN.md §3 — the L20 cost model maps each config onto its paper-scale
+twin for virtual-time reporting):
+
+    S  -> Llama-3.2-3B   (GQA)
+    M  -> Llama-2-7B     (MHA)
+    L  -> Llama-3-8B     (GQA)
+    XL -> Llama-2-13B    (MHA)
+
+All hidden dims are c * 64 so that group-wise quantization (group = 64)
+and block-Hadamard rotation (blocks of 64) tile exactly.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters of one transformer size."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int = 64
+    max_seq: int = 256
+    # paper-scale twin used by the rust cost model (bytes are computed there)
+    paper_twin: str = ""
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        """Total parameter count (fp reference)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab
+        per_layer = (
+            d * d                                   # wq
+            + d * self.n_kv_heads * self.head_dim   # wk
+            + d * self.n_kv_heads * self.head_dim   # wv
+            + d * d                                 # wo
+            + 2 * d * ff                            # w_gate, w_up
+            + ff * d                                # w_down
+            + 2 * d                                 # norms
+        )
+        return v * d + self.max_seq * d + self.n_layers * per_layer + d + d * v
+
+
+# Quantization group size along the reduction dimension (paper: 128; our
+# dims are smaller so one group = 64 channels keeps >= 2 groups per linear).
+GROUP = 64
+# Atom-like scheme: one full group of outlier channels kept at int8.
+N_OUTLIER = 64
+
+MODELS = {
+    "tiny": ModelConfig("tiny", d_model=64, n_layers=2, n_heads=2, n_kv_heads=1,
+                        d_ff=128, max_seq=128, paper_twin="llama-1b"),
+    "s": ModelConfig("s", d_model=128, n_layers=3, n_heads=4, n_kv_heads=2,
+                     d_ff=256, paper_twin="llama3.2-3b"),
+    "m": ModelConfig("m", d_model=192, n_layers=4, n_heads=3, n_kv_heads=3,
+                     d_ff=384, paper_twin="llama2-7b"),
+    "l": ModelConfig("l", d_model=256, n_layers=5, n_heads=4, n_kv_heads=2,
+                     d_ff=512, paper_twin="llama3-8b"),
+    "xl": ModelConfig("xl", d_model=320, n_layers=6, n_heads=5, n_kv_heads=5,
+                      d_ff=640, paper_twin="llama2-13b"),
+    # EAGLE-style standalone draft model (separate weights, same tokenizer).
+    "eagle": ModelConfig("eagle", d_model=64, n_layers=2, n_heads=2, n_kv_heads=2,
+                         d_ff=128, max_seq=256, paper_twin="eagle-head"),
+}
+
+# Training schedule per size (steps chosen so the synthetic tasks converge;
+# they are permutation-lookup tasks, learnable within a few hundred steps).
+TRAIN_STEPS = {"tiny": 600, "s": 4000, "m": 3000, "l": 1500, "xl": 1200, "eagle": 2500}
+TRAIN_BATCH = 8
+TRAIN_SEQ = 96
+TRAIN_LR = 3e-3
+
+# Prefill chunk length (max prompt chars, left-padded); see DESIGN.md.
+PREFILL_T = 96
+# Default draft length gamma (paper default: 3).
+GAMMA = 3
+
+SCHEMES = ("atom", "quarot")
+MODES = ("w16a16", "w4a16", "w4a4")
+
+
+@dataclass(frozen=True)
+class ModuleSpec:
+    """One AOT-exported HLO module."""
+
+    size: str        # model config name
+    scheme: str      # atom | quarot (ignored for w16a16)
+    mode: str        # w16a16 | w4a16 | w4a4
+    entry: str       # prefill | decode | draft | verify | score
+    batch: int
+    gamma: int = GAMMA  # draft length (draft/verify entries)
+
+    @property
+    def name(self) -> str:
+        g = f"_g{self.gamma}" if self.entry in ("draft", "verify") else ""
+        return f"{self.size}_{self.scheme}_{self.mode}_{self.entry}_b{self.batch}{g}"
+
+    def weights_key(self) -> str:
+        """Weight-file key: w16a16 shares fp weights across schemes."""
+        if self.mode == "w16a16":
+            return f"{self.size}_fp"
+        return f"{self.size}_{self.scheme}_{self.mode}"
+
+
+def default_manifest() -> list:
+    """The module set built by `make artifacts`.
+
+    Kept intentionally tight (each module is a separate XLA compile); bench
+    targets that need more (gamma sweeps, extra batches) are all included
+    here so the rust side never needs python at runtime.
+    """
+    mods: list = []
+
+    def add(size, scheme, mode, entry, batch, gamma=GAMMA):
+        mods.append(ModuleSpec(size, scheme, mode, entry, batch, gamma))
+
+    # --- core serving grid: atom scheme ------------------------------
+    grid = {
+        "s": (8, 16, 32),
+        "m": (1, 8, 16, 32),
+        "l": (8, 16, 32),
+        "xl": (8, 16),
+    }
+    for size, batches in grid.items():
+        for b in batches:
+            for mode in MODES:
+                add(size, "atom", mode, "prefill", b)
+                add(size, "atom", mode, "decode", b)
+            add(size, "atom", "w4a4", "draft", b)
+            add(size, "atom", "w4a16", "verify", b)
+
+    # --- gamma ablation (fig5): s@8 and m@16 -------------------------
+    for size, b in (("s", 8), ("m", 16)):
+        for g in (2, 4, 5, 6):  # gamma=3 already in the core grid
+            add(size, "atom", "w4a4", "draft", b, g)
+            add(size, "atom", "w4a16", "verify", b, g)
+
+    # --- quarot scheme (table3 fidelity, table9 acceptance): s@8 -----
+    for mode in ("w4a16", "w4a4"):
+        add("s", "quarot", mode, "prefill", 8)
+        add("s", "quarot", mode, "decode", 8)
+    add("s", "quarot", "w4a4", "draft", 8)
+    add("s", "quarot", "w4a16", "verify", 8)
+
+    # --- fidelity scoring (tables 1/3): perplexity entries -----------
+    for mode in MODES:
+        add("s", "atom", mode, "score", 8)
+    for mode in ("w4a16", "w4a4"):
+        add("s", "quarot", mode, "score", 8)
+
+    # --- EAGLE baseline (tables 5/7): standalone draft model ---------
+    for b in (1, 8, 16):
+        add("eagle", "atom", "w16a16", "prefill", b)
+        add("eagle", "atom", "w16a16", "draft", b, 5)      # fp chain draft
+        add("m", "atom", "w4a16", "verify", b, 5)          # target verify
+        if b != 8:  # b=8 already in core grid
+            add("m", "atom", "w4a16", "prefill", b)
+            add("m", "atom", "w4a16", "decode", b)
+
+    # --- vLLM-mode serving (table 8): m model small batches ----------
+    for b in (2, 4):
+        add("m", "atom", "w4a16", "prefill", b)
+        add("m", "atom", "w4a16", "decode", b)
+        add("m", "atom", "w4a4", "draft", b)
+        add("m", "atom", "w4a16", "verify", b)
+
+    # --- tiny config for rust integration tests ----------------------
+    for mode in MODES:
+        add("tiny", "atom", mode, "prefill", 4)
+        add("tiny", "atom", mode, "decode", 4)
+    add("tiny", "atom", "w4a4", "draft", 4)
+    add("tiny", "atom", "w4a16", "verify", 4)
+    add("tiny", "atom", "w4a16", "score", 4)
+
+    # dedupe (order-preserving)
+    seen, out = set(), []
+    for m in mods:
+        if m.name not in seen:
+            seen.add(m.name)
+            out.append(m)
+    return out

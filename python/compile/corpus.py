@@ -1,0 +1,232 @@
+"""Synthetic task corpus — the benchmark-suite analog (DESIGN.md §3).
+
+The paper evaluates on GSM8K/MATH (multi-step math), MBPP/HumanEval
+(code), PIQA/WinoGrande (single-step commonsense), WikiText-2 (LM) and
+ShareGPT/LMsys (chat). We reproduce the *structure* that drives its
+fidelity results: multi-step tasks where each step is conditioned on the
+previous one (so a single quantization-induced token flip snowballs), and
+single-step tasks that are robust to such flips.
+
+Task families (all deterministic, all learnable by a ~1M-param char model):
+
+  chain       GSM8K analog.  Two fixed secret permutations over the 26
+              letters ("x" and "y").  Prompt gives a start symbol and an
+              op string; the model must emit every intermediate symbol:
+                  q: g xyx ?\n s: x m y c x q\n a: q\n
+              Each step output feeds the next — the snowball mechanism.
+  chain_hard  MATH analog: longer op strings (6..9 steps).
+  trace       MBPP/HumanEval analog: digit-list programs:
+                  q: [3,1,2] rev rot ?\n s: rev [2,1,3] rot [3,2,1]\n a: [3,2,1]\n
+  cloze       PIQA/WinoGrande analog: one lookup, single-step:
+                  q: g x ?\n a: m\n
+  text        WikiText-2 analog: template grammar sentences (for PPL).
+  chat        ShareGPT/LMsys analogs: mixed prompts, throughput only.
+"""
+
+import random
+
+SYMBOLS = "abcdefghijklmnopqrstuvwxyz"
+
+# Secret permutations (fixed seeds — part of the "language", not the data).
+_rng_x = random.Random(1234)
+_rng_y = random.Random(5678)
+PERM_X = list(SYMBOLS)
+PERM_Y = list(SYMBOLS)
+_rng_x.shuffle(PERM_X)
+_rng_y.shuffle(PERM_Y)
+X_MAP = {s: PERM_X[i] for i, s in enumerate(SYMBOLS)}
+Y_MAP = {s: PERM_Y[i] for i, s in enumerate(SYMBOLS)}
+
+LIST_OPS = ("rev", "rot", "inc", "swp")
+
+
+def apply_op(op: str, sym: str) -> str:
+    return X_MAP[sym] if op == "x" else Y_MAP[sym]
+
+
+def apply_list_op(op: str, xs: list) -> list:
+    if op == "rev":
+        return xs[::-1]
+    if op == "rot":
+        return [xs[-1]] + xs[:-1]
+    if op == "inc":
+        return [(v + 1) % 10 for v in xs]
+    if op == "swp":
+        return [xs[1], xs[0]] + xs[2:] if len(xs) >= 2 else xs
+    raise ValueError(op)
+
+
+def fmt_list(xs: list) -> str:
+    return "[" + ",".join(str(v) for v in xs) + "]"
+
+
+def make_chain(rng: random.Random, hard: bool = False):
+    """Returns (prompt, completion, answer)."""
+    k = rng.randint(6, 9) if hard else rng.randint(3, 5)
+    start = rng.choice(SYMBOLS)
+    ops = "".join(rng.choice("xy") for _ in range(k))
+    prompt = f"q: {start} {ops} ?\n"
+    steps, cur = [], start
+    for op in ops:
+        cur = apply_op(op, cur)
+        steps.append(f"{op} {cur}")
+    completion = "s: " + " ".join(steps) + f"\na: {cur}\n"
+    return prompt, completion, cur
+
+
+def make_trace(rng: random.Random):
+    n = rng.randint(3, 5)
+    xs = [rng.randint(0, 9) for _ in range(n)]
+    n_ops = rng.randint(2, 3)
+    ops = [rng.choice(LIST_OPS) for _ in range(n_ops)]
+    prompt = f"q: {fmt_list(xs)} {' '.join(ops)} ?\n"
+    steps, cur = [], xs
+    for op in ops:
+        cur = apply_list_op(op, cur)
+        steps.append(f"{op} {fmt_list(cur)}")
+    ans = fmt_list(cur)
+    completion = "s: " + " ".join(steps) + f"\na: {ans}\n"
+    return prompt, completion, ans
+
+
+def make_cloze(rng: random.Random):
+    start = rng.choice(SYMBOLS)
+    op = rng.choice("xy")
+    ans = apply_op(op, start)
+    return f"q: {start} {op} ?\n", f"a: {ans}\n", ans
+
+
+_ADJ = ["big", "old", "red", "new", "odd", "dim", "raw", "shy"]
+_NOUN = ["cat", "dog", "sun", "map", "car", "bee", "fox", "owl", "ant", "elk"]
+_VERB = ["sees", "takes", "likes", "finds", "meets", "calls"]
+
+
+def _zipf(rng: random.Random, items: list) -> str:
+    """Zipfian pick — natural-language-ish frequency skew."""
+    n = len(items)
+    w = [1.0 / (i + 1) for i in range(n)]
+    return rng.choices(items, weights=w, k=1)[0]
+
+
+def make_text(rng: random.Random):
+    """One template sentence (WikiText analog)."""
+    s = (
+        f"the {_zipf(rng, _ADJ)} {_zipf(rng, _NOUN)} {_zipf(rng, _VERB)} "
+        f"the {_zipf(rng, _ADJ)} {_zipf(rng, _NOUN)}.\n"
+    )
+    return s
+
+
+def make_chat(rng: random.Random, long_output: bool):
+    """Chat-workload prompt (throughput only; no gold answer).
+
+    ShareGPT analog = longer outputs; LMsys analog = shorter.
+    """
+    kind = rng.random()
+    if kind < 0.4:
+        p, _, _ = make_chain(rng, hard=rng.random() < 0.3)
+    elif kind < 0.6:
+        p, _, _ = make_trace(rng)
+    elif kind < 0.8:
+        p, _, _ = make_cloze(rng)
+    else:
+        p = "q: " + " ".join(make_text(rng).split()[:6]) + " ?\n"
+    max_tokens = rng.randint(60, 160) if long_output else rng.randint(20, 100)
+    return p, max_tokens
+
+
+TASKS = ("chain", "chain_hard", "trace", "cloze")
+
+
+def make_example(task: str, rng: random.Random):
+    if task == "chain":
+        return make_chain(rng, hard=False)
+    if task == "chain_hard":
+        return make_chain(rng, hard=True)
+    if task == "trace":
+        return make_trace(rng)
+    if task == "cloze":
+        return make_cloze(rng)
+    raise ValueError(task)
+
+
+def training_stream(seed: int, n_rows: int, seq_len: int):
+    """Packed training rows: token ids [n_rows, seq_len] + targets.
+
+    Mixture: 35% chain, 20% chain_hard, 20% trace, 15% cloze, 10% text.
+    """
+    from . import tokenizer as tok
+
+    rng = random.Random(seed)
+    rows = []
+    buf: list = []
+    while len(rows) < n_rows:
+        r = rng.random()
+        if r < 0.35:
+            p, c, _ = make_chain(rng)
+            ids = tok.encode(p + c, bos=True, eos=True)
+        elif r < 0.55:
+            p, c, _ = make_chain(rng, hard=True)
+            ids = tok.encode(p + c, bos=True, eos=True)
+        elif r < 0.75:
+            p, c, _ = make_trace(rng)
+            ids = tok.encode(p + c, bos=True, eos=True)
+        elif r < 0.90:
+            p, c, _ = make_cloze(rng)
+            ids = tok.encode(p + c, bos=True, eos=True)
+        else:
+            ids = tok.encode(make_text(rng), bos=True, eos=True)
+        buf.extend(ids)
+        while len(buf) >= seq_len + 1 and len(rows) < n_rows:
+            rows.append(buf[: seq_len + 1])
+            buf = buf[seq_len + 1:]
+    return rows
+
+
+def eval_set(task: str, n: int, seed: int):
+    """Held-out eval examples: list of dicts {prompt, completion, answer}."""
+    rng = random.Random(10_000 + seed)
+    out = []
+    for _ in range(n):
+        p, c, a = make_example(task, rng)
+        out.append({"prompt": p, "completion": c, "answer": a})
+    return out
+
+
+def text_eval_rows(n_rows: int, seq_len: int, seed: int):
+    """Held-out text rows for perplexity (WikiText analog)."""
+    from . import tokenizer as tok
+
+    rng = random.Random(77_000 + seed)
+    rows, buf = [], []
+    while len(rows) < n_rows:
+        buf.extend(tok.encode(make_text(rng), bos=True, eos=True))
+        while len(buf) >= seq_len + 1 and len(rows) < n_rows:
+            rows.append(buf[: seq_len + 1])
+            buf = buf[seq_len + 1:]
+    return rows
+
+
+def workload(dataset: str, n: int, seed: int):
+    """Serving workload traces: list of {prompt, max_tokens}.
+
+    Mirrors the paper's acceleration datasets: the four task analogs plus
+    sharegpt (long outputs) and lmsys (short outputs).
+    """
+    rng = random.Random(42 + seed)  # paper fixes seed 42 for sampling
+    out = []
+    for _ in range(n):
+        if dataset in TASKS:
+            p, c, _ = make_example(dataset, rng)
+            # measured like the paper: generate up to 200 tokens, tasks
+            # stop early at EOS
+            out.append({"prompt": p, "max_tokens": min(len(c) + 24, 160)})
+        elif dataset == "sharegpt":
+            p, mt = make_chat(rng, long_output=True)
+            out.append({"prompt": p, "max_tokens": mt})
+        elif dataset == "lmsys":
+            p, mt = make_chat(rng, long_output=False)
+            out.append({"prompt": p, "max_tokens": mt})
+        else:
+            raise ValueError(dataset)
+    return out

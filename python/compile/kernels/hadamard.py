@@ -1,0 +1,59 @@
+"""Pallas kernel: blocked randomized Hadamard transform (QuaRot prologue).
+
+QuaRot suppresses activation outliers by rotating the hidden space with a
+randomized Hadamard matrix before quantization (computational invariance:
+W is pre-rotated offline, so H^T H = I cancels). For hidden sizes
+c * 64 we use the Kronecker form (I_c  kron  H_64) — orthonormal, exact,
+and the in-kernel butterfly is 6 add/sub stages per 64-block, the same
+O(K log 64) structure as the CUDA fast-Hadamard kernel.
+
+The sign vector implements the *randomized* part (H diag(s)); it is
+folded into the offline weight rotation by the quantizer.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import GROUP
+
+
+def _hadamard_kernel(x_ref, sign_ref, o_ref, *, block):
+    x = x_ref[...] * sign_ref[...]          # [B, K] randomized signs
+    b, k = x.shape
+    nb = k // block
+    y = x.reshape(b * nb, block)
+    # in-register fast Walsh-Hadamard butterfly: log2(block) stages
+    h = 1
+    while h < block:
+        y = y.reshape(b * nb, block // (2 * h), 2, h)
+        lo = y[:, :, 0, :]
+        hi = y[:, :, 1, :]
+        y = jnp.concatenate([(lo + hi)[:, :, None, :], (lo - hi)[:, :, None, :]], axis=2)
+        h *= 2
+    y = y.reshape(b, k) * (1.0 / jnp.sqrt(jnp.float32(block)))
+    o_ref[...] = y
+
+
+def hadamard(x, sign, *, block=GROUP, interpret=True):
+    """Apply (I kron H_block) diag(sign) to the last dim of x [B,K]."""
+    x = jnp.asarray(x, jnp.float32)
+    b, k = x.shape
+    assert k % block == 0, (k, block)
+    return pl.pallas_call(
+        functools.partial(_hadamard_kernel, block=block),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((b, k), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=interpret,
+    )(x, sign)
+
+
+def vmem_bytes(b, k):
+    return 2 * 4 * b * k + 4 * k

@@ -1,0 +1,132 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has an exact counterpart here; pytest
+(python/tests/test_kernels.py) asserts allclose between the two across
+hypothesis-generated shapes and values. These refs are also what the
+quantizers (compile/quant/*) use offline, so kernel == ref == quantizer
+semantics by construction.
+
+Quantization grids:
+  int4 symmetric: q = clamp(round(x / s), -7, 7),  s = max|x| / 7   (per group)
+  int8 symmetric: q = clamp(round(x / s), -127, 127), s = max|x| / 127
+
+All integer values are *represented in f32*: products and group-wise sums
+of int4/int8 integers stay far below 2^24, so f32 arithmetic on them is
+exact integer arithmetic — numerically identical to an int32-accumulate
+kernel (DESIGN.md §4).
+"""
+
+import jax.numpy as jnp
+
+GROUP = 64
+INT4_MAX = 7.0
+INT8_MAX = 127.0
+
+
+def quant_group_sym(x, qmax, group=GROUP, axis=0, eps=1e-8):
+    """Group-wise symmetric fake-quant along `axis`.
+
+    Returns (q, scale): q integer-valued (f32), scale with the grouped
+    axis reduced to n_groups.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    shp = x.shape
+    k = shp[axis]
+    assert k % group == 0, (k, group)
+    g = k // group
+    new = shp[:axis] + (g, group) + shp[axis + 1:]
+    xg = x.reshape(new)
+    amax = jnp.max(jnp.abs(xg), axis=axis + 1, keepdims=True)
+    scale = jnp.maximum(amax / qmax, eps)
+    q = jnp.clip(jnp.round(xg / scale), -qmax, qmax)
+    return q.reshape(shp), scale.squeeze(axis + 1)
+
+
+def dequant_weight(wq, ws, group=GROUP):
+    """Expand per-group scales and dequantize: [K,N] i-valued, [G,N] -> [K,N]."""
+    k = wq.shape[0]
+    s_full = jnp.repeat(ws, group, axis=0)[:k]
+    return wq.astype(jnp.float32) * s_full
+
+
+def w4a16_ref(x, wq, ws, group=GROUP):
+    """AWQ-style weight-only path: dequantize W, fp matmul."""
+    return jnp.asarray(x, jnp.float32) @ dequant_weight(wq, ws, group)
+
+
+def quant_act_groups(x, n_outlier=0, group=GROUP):
+    """Activation quantization, Atom-style.
+
+    x: [B, K]. The final `n_outlier` channels (after offline permutation)
+    form the outlier region quantized to int8; the rest to int4. Scales
+    are per-token per-group (computed at runtime, as on real HW).
+    Returns (q [B,K] integer-valued f32, scales [B, G]).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    b, k = x.shape
+    g = k // group
+    xg = x.reshape(b, g, group)
+    amax = jnp.max(jnp.abs(xg), axis=2)
+    if n_outlier:
+        assert n_outlier % group == 0
+        n_og = n_outlier // group
+        qmax = jnp.concatenate(
+            [jnp.full((g - n_og,), INT4_MAX), jnp.full((n_og,), INT8_MAX)]
+        )
+    else:
+        qmax = jnp.full((g,), INT4_MAX)
+    scale = jnp.maximum(amax / qmax, 1e-8)  # [B, G]
+    q = jnp.clip(
+        jnp.round(xg / scale[:, :, None]), -qmax[None, :, None], qmax[None, :, None]
+    )
+    return q.reshape(b, k), scale
+
+
+def w4a4_ref(x, wq, ws, perm=None, n_outlier=0, group=GROUP):
+    """Joint weight-activation path, Atom-style.
+
+    x [B,K] fp; wq [K,N] integer-valued (int4 grid except the outlier
+    rows which are int8-grid); ws [G,N]; perm permutes activation
+    channels so outliers sit in the trailing group(s).
+
+    out = sum_g (xq_g @ wq_g) * (sx_g  outer  ws_g)
+    """
+    x = jnp.asarray(x, jnp.float32)
+    if perm is not None:
+        x = x[:, perm]
+    b, k = x.shape
+    g = k // group
+    xq, sx = quant_act_groups(x, n_outlier, group)  # [B,K], [B,G]
+    xqg = xq.reshape(b, g, group)
+    wqg = wq.astype(jnp.float32).reshape(g, group, -1)
+    # per-group integer matmul + scale application
+    acc = jnp.einsum("bgk,gkn->bgn", xqg, wqg)
+    out = jnp.einsum("bgn,bg,gn->bn", acc, sx, ws)
+    return out
+
+
+def hadamard_ref(x, sign, block=GROUP):
+    """Blocked randomized Hadamard transform (QuaRot), exact version.
+
+    x [.., K] with K % block == 0; sign [K] in {+-1}. Applies
+    H_block (orthonormal) on each block of (x * sign).
+    """
+    x = jnp.asarray(x, jnp.float32) * sign
+    shp = x.shape
+    k = shp[-1]
+    nb = k // block
+    h = _hadamard_matrix(block)
+    xb = x.reshape(shp[:-1] + (nb, block))
+    yb = jnp.einsum("...nk,kj->...nj", xb, h)
+    return yb.reshape(shp)
+
+
+def _hadamard_matrix(n):
+    """Orthonormal Hadamard matrix of power-of-two size n."""
+    import numpy as np
+
+    assert n & (n - 1) == 0, n
+    h = np.array([[1.0]])
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return jnp.asarray(h / np.sqrt(n), jnp.float32)

@@ -1,0 +1,72 @@
+"""Pallas kernel: fused dequant + matmul (W4A16 / AWQ-style verify path).
+
+GPU-to-TPU adaptation (DESIGN.md §4): the CUDA W4A16 kernel streams int4
+weights from HBM and dequantizes in registers inside the matmul
+threadblock. The Pallas equivalent tiles the output dimension N with a
+BlockSpec so each grid step holds one (K x N_blk) int4 weight tile plus
+its (G x N_blk) scales in VMEM, dequantizes in-register, and feeds the
+MXU — int4 weights are the only weight traffic from HBM.
+
+On this image Pallas runs interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls), so the kernel lowers to plain HLO; the BlockSpec structure
+is still what a real TPU build would compile.
+
+Cost structure faithfully reproduced: every call pays the O(K*N) dequant
+(the reason the W4A4 draft path is cheaper per token at small batch).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import GROUP
+
+
+def _w4a16_kernel(x_ref, wq_ref, ws_ref, o_ref, *, group):
+    """One grid step: full K reduction for one N-tile."""
+    x = x_ref[...]                       # [B, K]
+    wq = wq_ref[...].astype(jnp.float32)  # [K, Nb]
+    ws = ws_ref[...]                     # [G, Nb]
+    k = wq.shape[0]
+    # in-register dequant: expand per-group scales along K
+    s_full = jnp.repeat(ws, group, axis=0)[:k]
+    o_ref[...] = x @ (wq * s_full)
+
+
+def w4a16_matmul(x, wq, ws, *, group=GROUP, n_block=None, interpret=True):
+    """x [B,K] f32 @ dequant(wq [K,N] i8, ws [G,N] f32) -> [B,N] f32."""
+    b, k = x.shape
+    _, n = wq.shape
+    g = k // group
+    if n_block is None:
+        n_block = 128 if n % 128 == 0 else 64
+        n_block = min(n, n_block)
+    assert n % n_block == 0, (n, n_block)
+    grid = (n // n_block,)
+    return pl.pallas_call(
+        functools.partial(_w4a16_kernel, group=group),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, n_block), lambda i: (0, i)),
+            pl.BlockSpec((g, n_block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((b, n_block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(x, wq, ws)
+
+
+def vmem_bytes(b, k, n, group=GROUP, n_block=128):
+    """Analytic VMEM footprint of one grid step (perf est., DESIGN.md §8)."""
+    n_block = min(n, n_block)
+    g = k // group
+    return 4 * b * k + 1 * k * n_block + 4 * g * n_block + 4 * b * n_block
+
+
+def mxu_util_estimate(b, k, n):
+    """MXU utilization estimate: fraction of 128x128 systolic tiles filled."""
+    eff_b = min(b, 128) / 128.0
+    return eff_b  # K, N tile fully; batch is the underfilled dim

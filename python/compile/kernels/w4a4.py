@@ -1,0 +1,101 @@
+"""Pallas kernel: W4A4 group-quantized matmul (Atom-style draft path).
+
+The paper's draft phase runs int4-weight x int4-activation kernels. The
+kernel below reproduces their structure:
+
+  1. (Atom) permute activation channels so calibrated outlier channels
+     occupy the trailing group(s);
+  2. per-token, per-group activation quantization at runtime — int4 grid
+     for normal groups, int8 for the outlier group;
+  3. grid over reduction groups: integer partial matmul per group,
+     accumulated with the (token-scale x weight-scale) outer product —
+     the f32 analog of an int32 accumulator with scale epilogue.
+
+TPU adaptation (DESIGN.md §4): the grid dimension is the quantization
+group, so each grid step holds a (B x group) activation tile and a
+(group x N) int4 weight tile in VMEM; the MXU consumes integer-valued
+bf16/f32 tiles. No weight dequant pass exists in this path — that is the
+draft phase's cost advantage.
+
+Integer-in-f32 arithmetic is exact (DESIGN.md §4), so this kernel matches
+ref.w4a4_ref bit-for-bit up to f32 sum order.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import GROUP, INT4_MAX, INT8_MAX
+
+
+def _w4a4_group_kernel(x_ref, wq_ref, ws_ref, o_ref, *, qmax):
+    """One grid step = one reduction group g.
+
+    x_ref [B, group] (already permuted), wq_ref [group, N] int grid,
+    ws_ref [1, N] weight scales for this group, o_ref [B, N] accumulator.
+    """
+    g = pl.program_id(0)
+    x = x_ref[...]
+    # runtime per-token activation quantization for this group
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    sx = jnp.maximum(amax / qmax, 1e-8)            # [B, 1]
+    xq = jnp.clip(jnp.round(x / sx), -qmax, qmax)  # integer-valued f32
+    wq = wq_ref[...].astype(jnp.float32)           # [group, N]
+    ws = ws_ref[...]                               # [1, N]
+    part = (xq @ wq) * (sx * ws)                   # scale epilogue
+
+    @pl.when(g == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(g > 0)
+    def _acc():
+        o_ref[...] += part
+
+
+def _w4a4_groups(x, wq, ws, qmax, group, interpret):
+    b, k = x.shape
+    _, n = wq.shape
+    g = k // group
+    return pl.pallas_call(
+        functools.partial(_w4a4_group_kernel, qmax=qmax),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((b, group), lambda i: (0, i)),
+            pl.BlockSpec((group, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(x, wq, ws)
+
+
+def w4a4_matmul(x, wq, ws, perm=None, *, n_outlier=0, group=GROUP, interpret=True):
+    """Atom-style W4A4 matmul.
+
+    x [B,K] f32; wq [K,N] i8 (int4 grid; trailing n_outlier rows int8
+    grid); ws [G,N] f32; perm [K] i32 channel permutation (outliers last)
+    or None.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    if perm is not None:
+        x = jnp.take(x, perm, axis=1)
+    b, k = x.shape
+    if n_outlier:
+        assert n_outlier % group == 0
+        split = k - n_outlier
+        gs = split // group
+        out8 = _w4a4_groups(x[:, split:], wq[split:], ws[gs:], INT8_MAX, group, interpret)
+        if split == 0:  # tiny configs: every channel is in the outlier group
+            return out8
+        out4 = _w4a4_groups(x[:, :split], wq[:split], ws[:gs], INT4_MAX, group, interpret)
+        return out4 + out8
+    return _w4a4_groups(x, wq, ws, INT4_MAX, group, interpret)
+
+
+def vmem_bytes(b, k, n, group=GROUP):
+    """Analytic VMEM footprint of one grid step (perf est., DESIGN.md §8)."""
+    return 4 * b * group + 1 * group * n + 4 * n + 4 * b * n

@@ -1,0 +1,380 @@
+"""L2: the transformer compute graph (JAX, build-time only).
+
+A GQA decoder-only transformer whose linear layers dispatch on the
+(scheme, mode) quantization configuration and call the L1 Pallas kernels:
+
+  w16a16        : plain fp matmul (also the training path — no Pallas)
+  atom/w4a16    : kernels.w4a16 fused dequant-matmul
+  atom/w4a4     : kernels.w4a4 permuted group-quant matmul (int8 outliers)
+  quarot/w4a16  : kernels.hadamard rotation + kernels.w4a16
+  quarot/w4a4   : kernels.hadamard rotation + kernels.w4a4 (no outliers)
+
+Serving entries (exported to HLO text by aot.py, executed from rust):
+
+  prefill : (tokens[B,P], start[B], mask[B], kv, *w) -> (tok[B], p[B], kv')
+  decode  : (tok[B], pos[B], start[B], kv, *w)       -> (tok[B], p[B], kv')
+  draft   : (tok[B], pos[B], start[B], kv, *w)       -> (toks[B,G], p[B,G], kv')
+  verify  : (tokens[B,G1], pos[B], start[B], mask[B], kv, *w)
+                -> (vtok[B,G1], vtop[B,G1], pfed[B,G1], kv')
+  score   : (rows[B,T1], *w)                         -> (nll[B], cnt[B])
+
+Cache convention (DESIGN.md §7): kv[L,2,B,Hkv,S,hd] holds K/V for all
+*committed* tokens; pos[b] = the write index of the pending token. A
+chunk of T tokens writes K/V at pos..pos+T-1 and its logits at offset t
+predict the token after position pos+t. Queries at absolute position q
+attend cache slots s with start[b] <= s <= q (left-padded prompts).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .configs import N_OUTLIER, PREFILL_T, ModelConfig
+from .kernels import hadamard as khad
+from .kernels import w4a4 as kw4a4
+from .kernels import w4a16 as kw4a16
+from .tokenizer import PAD
+
+NEG_INF = -1e9
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """fp32 parameter pytree (flat dict; key order = sorted = export order)."""
+    rng = np.random.RandomState(seed)
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    hd, h, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+
+    def w(shape, std=0.02):
+        return rng.normal(0.0, std, size=shape).astype(np.float32)
+
+    p = {
+        "tok_emb": w((v, d)),
+        "pos_emb": w((cfg.max_seq, d), std=0.01),
+        "out_norm": np.ones((d,), np.float32),
+        "lm_head": w((d, v)),
+    }
+    res_std = 0.02 / np.sqrt(2.0 * cfg.n_layers)
+    for i in range(cfg.n_layers):
+        k = f"l{i:02d}"
+        p[f"{k}.attn_norm"] = np.ones((d,), np.float32)
+        p[f"{k}.mlp_norm"] = np.ones((d,), np.float32)
+        p[f"{k}.wq"] = w((d, h * hd))
+        p[f"{k}.wk"] = w((d, hkv * hd))
+        p[f"{k}.wv"] = w((d, hkv * hd))
+        p[f"{k}.wo"] = w((h * hd, d), std=res_std)
+        p[f"{k}.gate"] = w((d, ff))
+        p[f"{k}.up"] = w((d, ff))
+        p[f"{k}.down"] = w((ff, d), std=res_std)
+    return p
+
+
+# --------------------------------------------------------------------------
+# quantization-aware linear dispatch
+# --------------------------------------------------------------------------
+
+def linear(params, key, x, mode, scheme, interpret=True):
+    """x [.., K] @ W[key] -> [.., N] under the (scheme, mode) config."""
+    shp = x.shape
+    x2 = x.reshape(-1, shp[-1])
+    if mode == "w16a16":
+        y = x2 @ params[key]
+    elif mode == "w4a16":
+        if scheme == "quarot":
+            x2 = khad.hadamard(x2, params[key + ".sign"], interpret=interpret)
+        y = kw4a16.w4a16_matmul(x2, params[key + ".q"], params[key + ".s"],
+                                interpret=interpret)
+    elif mode == "w4a4":
+        if scheme == "quarot":
+            x2 = khad.hadamard(x2, params[key + ".sign"], interpret=interpret)
+            y = kw4a4.w4a4_matmul(x2, params[key + ".q"], params[key + ".s"],
+                                  None, n_outlier=0, interpret=interpret)
+        else:
+            y = kw4a4.w4a4_matmul(x2, params[key + ".q"], params[key + ".s"],
+                                  params[key + ".perm"], n_outlier=N_OUTLIER,
+                                  interpret=interpret)
+    else:
+        raise ValueError(mode)
+    return y.reshape(shp[:-1] + (y.shape[-1],))
+
+
+def rmsnorm(x, g, eps=1e-5):
+    return x * lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# --------------------------------------------------------------------------
+# cached (serving) forward
+# --------------------------------------------------------------------------
+
+def forward_chunk(cfg, params, tokens, pos, start, kv, mode, scheme,
+                  update_mask=None, interpret=True, taps=None):
+    """Process a chunk of T tokens for every slot; returns (logits, kv').
+
+    tokens [B,T] i32, pos [B] i32 (write index of tokens[:,0]),
+    start [B] i32 (left-pad offset), kv [L,2,B,Hkv,S,hd] f32,
+    update_mask [B] i32/None — slots with 0 keep their old cache.
+    """
+    b, t = tokens.shape
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s_max = cfg.max_seq
+    grp = h // hkv
+
+    ap = pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]      # [B,T] abs pos
+    emb_idx = jnp.clip(ap - start[:, None], 0, s_max - 1)
+    x = params["tok_emb"][tokens] + params["pos_emb"][emb_idx]       # [B,T,d]
+
+    s_idx = jnp.arange(s_max, dtype=jnp.int32)
+    # mask [B,T,S]: attend start <= s <= ap
+    attn_mask = (s_idx[None, None, :] >= start[:, None, None]) & (
+        s_idx[None, None, :] <= ap[:, :, None]
+    )
+    bias = jnp.where(attn_mask, 0.0, NEG_INF)[:, None, :, :]          # [B,1,T,S]
+
+    def write_cache(cache, new, pos_, mask_):
+        """cache [B,Hkv,S,hd] <- new [B,T,Hkv,hd] at per-slot pos."""
+        def one(c, nb, p):
+            return lax.dynamic_update_slice(c, nb.transpose(1, 0, 2), (0, p, 0))
+        upd = jax.vmap(one)(cache, new, pos_)
+        if mask_ is None:
+            return upd
+        keep = (mask_ > 0)[:, None, None, None]
+        return jnp.where(keep, upd, cache)
+
+    for i in range(cfg.n_layers):
+        lk = f"l{i:02d}"
+        xa = rmsnorm(x, params[f"{lk}.attn_norm"])
+        if taps is not None:
+            taps.setdefault(f"{lk}.wq", []).append(xa.reshape(-1, d))
+        q = linear(params, f"{lk}.wq", xa, mode, scheme, interpret).reshape(b, t, h, hd)
+        k = linear(params, f"{lk}.wk", xa, mode, scheme, interpret).reshape(b, t, hkv, hd)
+        v = linear(params, f"{lk}.wv", xa, mode, scheme, interpret).reshape(b, t, hkv, hd)
+
+        kc = write_cache(kv[i, 0], k, pos, update_mask)               # [B,Hkv,S,hd]
+        vc = write_cache(kv[i, 1], v, pos, update_mask)
+        kv = kv.at[i, 0].set(kc).at[i, 1].set(vc)
+
+        qh = q.reshape(b, t, hkv, grp, hd)
+        scores = jnp.einsum("btkgh,bksh->bkgts", qh, kc) / np.sqrt(hd)
+        scores = scores.reshape(b, hkv * grp, t, s_max) + bias
+        probs = jax.nn.softmax(scores, axis=-1)
+        probs = probs.reshape(b, hkv, grp, t, s_max)
+        ctx = jnp.einsum("bkgts,bksh->btkgh", probs, vc).reshape(b, t, h * hd)
+        if taps is not None:
+            taps.setdefault(f"{lk}.wo", []).append(ctx.reshape(-1, h * hd))
+        x = x + linear(params, f"{lk}.wo", ctx, mode, scheme, interpret)
+
+        xm = rmsnorm(x, params[f"{lk}.mlp_norm"])
+        if taps is not None:
+            taps.setdefault(f"{lk}.gate", []).append(xm.reshape(-1, d))
+        hm = _silu(linear(params, f"{lk}.gate", xm, mode, scheme, interpret)) * \
+            linear(params, f"{lk}.up", xm, mode, scheme, interpret)
+        if taps is not None:
+            taps.setdefault(f"{lk}.down", []).append(hm.reshape(-1, cfg.d_ff))
+        x = x + linear(params, f"{lk}.down", hm, mode, scheme, interpret)
+
+    x = rmsnorm(x, params["out_norm"])
+    logits = x @ params["lm_head"]                                    # [B,T,V] fp head
+    return logits, kv
+
+
+# --------------------------------------------------------------------------
+# dense (cache-free) forward: training + scoring + calibration
+# --------------------------------------------------------------------------
+
+def dense_forward(cfg, params, tokens, mode="w16a16", scheme="atom",
+                  interpret=True, taps=None):
+    """Causal forward over tokens [B,T] without a KV cache -> logits [B,T,V]."""
+    b, t = tokens.shape
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    grp = h // hkv
+    pos_ids = jnp.arange(t, dtype=jnp.int32)
+    x = params["tok_emb"][tokens] + params["pos_emb"][pos_ids][None]
+    causal = jnp.where(
+        pos_ids[None, :] <= pos_ids[:, None], 0.0, NEG_INF
+    )[None, None, :, :]
+
+    for i in range(cfg.n_layers):
+        lk = f"l{i:02d}"
+        xa = rmsnorm(x, params[f"{lk}.attn_norm"])
+        if taps is not None:
+            taps.setdefault(f"{lk}.wq", []).append(xa.reshape(-1, d))
+        q = linear(params, f"{lk}.wq", xa, mode, scheme, interpret).reshape(b, t, h, hd)
+        k = linear(params, f"{lk}.wk", xa, mode, scheme, interpret).reshape(b, t, hkv, hd)
+        v = linear(params, f"{lk}.wv", xa, mode, scheme, interpret).reshape(b, t, hkv, hd)
+        qh = q.reshape(b, t, hkv, grp, hd)
+        scores = jnp.einsum("btkgh,bskh->bkgts", qh, k) / np.sqrt(hd)
+        scores = scores.reshape(b, h, t, t) + causal
+        probs = jax.nn.softmax(scores, axis=-1).reshape(b, hkv, grp, t, t)
+        ctx = jnp.einsum("bkgts,bskh->btkgh", probs, v).reshape(b, t, h * hd)
+        if taps is not None:
+            taps.setdefault(f"{lk}.wo", []).append(ctx.reshape(-1, h * hd))
+        x = x + linear(params, f"{lk}.wo", ctx, mode, scheme, interpret)
+        xm = rmsnorm(x, params[f"{lk}.mlp_norm"])
+        if taps is not None:
+            taps.setdefault(f"{lk}.gate", []).append(xm.reshape(-1, d))
+        hm = _silu(linear(params, f"{lk}.gate", xm, mode, scheme, interpret)) * \
+            linear(params, f"{lk}.up", xm, mode, scheme, interpret)
+        if taps is not None:
+            taps.setdefault(f"{lk}.down", []).append(hm.reshape(-1, cfg.d_ff))
+        x = x + linear(params, f"{lk}.down", hm, mode, scheme, interpret)
+
+    return rmsnorm(x, params["out_norm"]) @ params["lm_head"]
+
+
+def loss_fn(cfg, params, rows):
+    """Next-token CE over packed rows [B, T+1], ignoring PAD targets."""
+    inp, tgt = rows[:, :-1], rows[:, 1:]
+    logits = dense_forward(cfg, params, inp)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[:, :, None], axis=2)[:, :, 0]
+    mask = (tgt != PAD).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def calibrate(cfg, params, rows):
+    """Per-linear input-channel |activation| maxima over calibration rows
+    (Atom outlier identification). wq/wk/wv share the attn_norm tap;
+    gate/up share the mlp_norm tap."""
+    taps: dict = {}
+    dense_forward(cfg, params, jnp.asarray(rows, jnp.int32), taps=taps)
+    out = {}
+    for key, xs in taps.items():
+        amax = np.asarray(jnp.max(jnp.abs(jnp.concatenate(xs, 0)), axis=0))
+        out[key] = amax
+        lk, which = key.rsplit(".", 1)
+        if which == "wq":
+            out[f"{lk}.wk"] = amax
+            out[f"{lk}.wv"] = amax
+        elif which == "gate":
+            out[f"{lk}.up"] = amax
+    return out
+
+
+# --------------------------------------------------------------------------
+# serving entries (AOT-exported)
+# --------------------------------------------------------------------------
+
+def _top1(logits):
+    """(argmax token i32, its softmax prob f32) along the last axis."""
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    p = jax.nn.softmax(logits, axis=-1)
+    top = jnp.take_along_axis(p, tok[..., None], axis=-1)[..., 0]
+    return tok, top
+
+
+def prefill_entry(cfg, mode, scheme, params, tokens, start, mask, kv):
+    """Left-padded prompt chunk [B,P]; pos=0. Returns next token per slot."""
+    b, _ = tokens.shape
+    zeros = jnp.zeros((b,), jnp.int32)
+    logits, kv = forward_chunk(cfg, params, tokens, zeros, start, kv, mode,
+                               scheme, update_mask=mask)
+    tok, p = _top1(logits[:, -1, :])
+    return tok, p, kv
+
+
+def decode_entry(cfg, mode, scheme, params, tok, pos, start, kv):
+    """One autoregressive step (baselines / single-step path)."""
+    logits, kv = forward_chunk(cfg, params, tok[:, None], pos, start, kv,
+                               mode, scheme)
+    t, p = _top1(logits[:, 0, :])
+    return t, p, kv
+
+
+def draft_entry(cfg, mode, scheme, gamma, params, tok, pos, start, kv):
+    """Fused gamma-step greedy draft loop (the QSPEC draft phase).
+
+    One HLO module = one host round-trip per draft phase (DESIGN.md §8).
+    """
+    def step(carry, _):
+        tok, pos, kv = carry
+        logits, kv = forward_chunk(cfg, params, tok[:, None], pos, start, kv,
+                                   mode, scheme)
+        t, p = _top1(logits[:, 0, :])
+        return (t, pos + 1, kv), (t, p)
+
+    (tok, pos, kv), (toks, probs) = lax.scan(step, (tok, pos, kv), None,
+                                             length=gamma)
+    return toks.T, probs.T, kv  # [B,gamma]
+
+
+def verify_entry(cfg, mode, scheme, params, tokens, pos, start, mask, kv):
+    """Parallel verification of gamma+1 tokens (the QSPEC verify phase).
+
+    tokens[:,0] is the pending token, tokens[:,1:] the draft tokens.
+    Returns per position j: the verify-argmax token, its probability, and
+    the probability of the *fed* draft token (fig2 similarity data).
+    Writes A16 K/V for every fed position — the KV-overwriting step.
+    """
+    logits, kv = forward_chunk(cfg, params, tokens, pos, start, kv, mode,
+                               scheme, update_mask=mask)
+    vtok, vtop = _top1(logits)                      # [B,T]
+    p = jax.nn.softmax(logits, axis=-1)
+    fed = jnp.concatenate([tokens[:, 1:], vtok[:, -1:]], axis=1)
+    pfed = jnp.take_along_axis(p, fed[:, :, None], axis=2)[:, :, 0]
+    return vtok, vtop, pfed, kv
+
+
+def score_entry(cfg, mode, scheme, params, rows):
+    """Perplexity scoring: rows [B,T+1] -> (nll_sum[B], token_count[B])."""
+    inp, tgt = rows[:, :-1], rows[:, 1:]
+    logits = dense_forward(cfg, params, inp, mode, scheme)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[:, :, None], axis=2)[:, :, 0]
+    mask = (tgt != PAD).astype(jnp.float32)
+    return jnp.sum(nll * mask, axis=1), jnp.sum(mask, axis=1)
+
+
+def kv_shape(cfg, batch):
+    return (cfg.n_layers, 2, batch, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim)
+
+
+def make_entry_fn(cfg, spec):
+    """Bind a ModuleSpec to a callable fn(*data_args, params) — params last
+    (export order; see aot.py)."""
+    mode, scheme, g = spec.mode, spec.scheme, spec.gamma
+    e = spec.entry
+    if e == "prefill":
+        return lambda tokens, start, mask, kv, params: prefill_entry(
+            cfg, mode, scheme, params, tokens, start, mask, kv)
+    if e == "decode":
+        return lambda tok, pos, start, kv, params: decode_entry(
+            cfg, mode, scheme, params, tok, pos, start, kv)
+    if e == "draft":
+        return lambda tok, pos, start, kv, params: draft_entry(
+            cfg, mode, scheme, g, params, tok, pos, start, kv)
+    if e == "verify":
+        return lambda tokens, pos, start, mask, kv, params: verify_entry(
+            cfg, mode, scheme, params, tokens, pos, start, mask, kv)
+    if e == "score":
+        return lambda rows, params: score_entry(cfg, mode, scheme, params, rows)
+    raise ValueError(e)
+
+
+SCORE_T = 128
+
+
+def entry_arg_specs(cfg, spec, score_t=SCORE_T):
+    """ShapeDtypeStructs of the data args for `spec` (excludes params)."""
+    b = spec.batch
+    i32, f32 = jnp.int32, jnp.float32
+    kv = jax.ShapeDtypeStruct(kv_shape(cfg, b), f32)
+    vec = jax.ShapeDtypeStruct((b,), i32)
+    if spec.entry == "prefill":
+        return [jax.ShapeDtypeStruct((b, PREFILL_T), i32), vec, vec, kv]
+    if spec.entry == "decode":
+        return [vec, vec, vec, kv]
+    if spec.entry == "draft":
+        return [vec, vec, vec, kv]
+    if spec.entry == "verify":
+        return [jax.ShapeDtypeStruct((b, spec.gamma + 1), i32), vec, vec, vec, kv]
+    if spec.entry == "score":
+        return [jax.ShapeDtypeStruct((b, score_t + 1), i32)]
+    raise ValueError(spec.entry)

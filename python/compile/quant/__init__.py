@@ -1,0 +1,14 @@
+"""Offline quantizers: fp checkpoint -> mode-specific parameter pytrees."""
+
+from . import atom, quarot  # noqa: F401
+
+
+def quantize(scheme: str, mode: str, params, calib=None):
+    """Dispatch: returns the parameter pytree for (scheme, mode)."""
+    if mode == "w16a16":
+        return params
+    if scheme == "atom":
+        return atom.quantize(params, mode, calib)
+    if scheme == "quarot":
+        return quarot.quantize(params, mode)
+    raise ValueError(scheme)

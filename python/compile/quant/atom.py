@@ -1,0 +1,60 @@
+"""Atom-like quantizer (Zhao et al. 2024b).
+
+Atom's mechanisms reproduced here (DESIGN.md §3):
+  * group-wise symmetric int4 weights (group = 64);
+  * activation outlier channels identified by offline calibration and
+    *reordered* to the trailing group, which is kept at int8 — the
+    runtime kernel (kernels/w4a4.py) applies the same permutation to the
+    activations and quantizes that group on the int8 grid;
+  * weight rows permuted to match, so x[:, perm] @ W[perm] == x @ W.
+
+Modes:
+  w4a16 — int4 weights + fp activations (no permutation needed).
+  w4a4  — int4(+int8 outlier) weights + runtime-quantized activations.
+"""
+
+import numpy as np
+
+from ..configs import N_OUTLIER
+from .common import (
+    is_linear_key,
+    quantize_weight_int4,
+    quantize_weight_mixed,
+    weight_channel_proxy,
+)
+
+
+def outlier_perm(amax, n_outlier=N_OUTLIER):
+    """Permutation placing the n_outlier largest-|activation| channels last,
+    preserving relative order elsewhere (stable, like Atom's reorder)."""
+    k = len(amax)
+    order = np.argsort(amax, kind="stable")  # ascending
+    normal = np.sort(order[: k - n_outlier])
+    outl = np.sort(order[k - n_outlier:])
+    return np.concatenate([normal, outl]).astype(np.int32)
+
+
+def quantize(params, mode: str, calib=None):
+    """fp param pytree -> Atom (scheme) pytree for `mode`."""
+    out = {}
+    for key, w in params.items():
+        if not is_linear_key(key):
+            out[key] = np.asarray(w, np.float32)
+            continue
+        w = np.asarray(w, np.float32)
+        if mode == "w4a16":
+            q, s = quantize_weight_int4(w)
+            out[key + ".q"] = q
+            out[key + ".s"] = s
+        elif mode == "w4a4":
+            amax = None if calib is None else calib.get(key)
+            if amax is None:
+                amax = weight_channel_proxy(w)
+            perm = outlier_perm(np.asarray(amax))
+            q, s = quantize_weight_mixed(w[perm], N_OUTLIER)
+            out[key + ".q"] = q
+            out[key + ".s"] = s
+            out[key + ".perm"] = perm
+        else:
+            raise ValueError(mode)
+    return out

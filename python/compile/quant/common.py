@@ -1,0 +1,40 @@
+"""Shared offline weight-quantization helpers."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.ref import GROUP, INT4_MAX, INT8_MAX, quant_group_sym
+
+# model.py parameter keys that are quantized linears (per layer)
+LINEAR_SUFFIXES = ("wq", "wk", "wv", "wo", "gate", "up", "down")
+
+
+def is_linear_key(key: str) -> bool:
+    return "." in key and key.split(".")[-1] in LINEAR_SUFFIXES
+
+
+def quantize_weight_int4(w, group=GROUP):
+    """Plain group-wise int4: returns (q int8, s f32[G,N])."""
+    q, s = quant_group_sym(w, INT4_MAX, group=group, axis=0)
+    return np.asarray(q, np.int8), np.asarray(s, np.float32)
+
+
+def quantize_weight_mixed(w, n_outlier, group=GROUP):
+    """Atom W4A4 weights: int4 grid except the trailing outlier rows (int8).
+
+    `w` must already be permuted so outlier channels are last.
+    Returns (q int8, s f32[G,N]).
+    """
+    k = w.shape[0]
+    split = k - n_outlier
+    q4, s4 = quant_group_sym(w[:split], INT4_MAX, group=group, axis=0)
+    q8, s8 = quant_group_sym(w[split:], INT8_MAX, group=group, axis=0)
+    q = np.concatenate([np.asarray(q4, np.int8), np.asarray(q8, np.int8)], axis=0)
+    s = np.concatenate([np.asarray(s4, np.float32), np.asarray(s8, np.float32)], axis=0)
+    return q, s
+
+
+def weight_channel_proxy(w):
+    """Fallback outlier metric when no activation calibration is available:
+    per-input-channel weight magnitude."""
+    return np.asarray(jnp.max(jnp.abs(w), axis=1))

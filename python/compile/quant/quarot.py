@@ -1,0 +1,59 @@
+"""QuaRot-like quantizer (Ashkboos et al. 2024).
+
+QuaRot makes activations outlier-free by rotating the hidden space with a
+randomized Hadamard matrix R = diag(sign) . H and pre-rotating weights
+with R^T (computational invariance: (xR)(R^T W) = xW). Quantization then
+needs no outlier handling.
+
+We use the blocked Kronecker form (I kron H_64) — see
+kernels/hadamard.py — with a per-linear random sign vector, applied to
+*every* quantized linear's input (simplification documented in
+DESIGN.md §3: full QuaRot also rotates inside attention; our A16 KV cache
+makes that unnecessary here).
+"""
+
+import numpy as np
+
+from ..kernels.ref import hadamard_ref
+from .common import is_linear_key, quantize_weight_int4
+
+
+def _sign_vector(key: str, k: int) -> np.ndarray:
+    """Deterministic per-linear random signs (content-hashed seed —
+    python's builtin hash() is salted per process and must not be used)."""
+    import zlib
+
+    h = zlib.crc32(("quarot-sign:" + key).encode()) % (2**31)
+    rng = np.random.RandomState(h)
+    return (rng.randint(0, 2, size=k).astype(np.float32) * 2.0 - 1.0)
+
+
+def rotate_weight(w, sign):
+    """W' = R^T W where R = diag(sign) Hb  =>  W' = Hb (diag(sign) W)."""
+    # hadamard_ref applies (x * sign) @ Hb on the last axis; we need it on
+    # axis 0 of W, so transpose around it.
+    return np.asarray(hadamard_ref(np.asarray(w, np.float32).T, sign).T)
+
+
+def quantize(params, mode: str):
+    """fp param pytree -> QuaRot (scheme) pytree for `mode`.
+
+    Both w4a16 and w4a4 store rotated int4 weights + the sign vector; the
+    runtime model applies the online Hadamard to activations before the
+    matmul (exact in fp for w4a16; quantized after rotation for w4a4).
+    """
+    if mode not in ("w4a16", "w4a4"):
+        raise ValueError(mode)
+    out = {}
+    for key, w in params.items():
+        if not is_linear_key(key):
+            out[key] = np.asarray(w, np.float32)
+            continue
+        w = np.asarray(w, np.float32)
+        sign = _sign_vector(key, w.shape[0])
+        wrot = rotate_weight(w, sign)
+        q, s = quantize_weight_int4(wrot)
+        out[key + ".q"] = q
+        out[key + ".s"] = s
+        out[key + ".sign"] = sign
+    return out

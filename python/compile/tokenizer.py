@@ -1,0 +1,53 @@
+"""Character-level tokenizer shared between python (build/train) and rust
+(runtime — see rust/src/model/tokenizer.rs, which loads artifacts/tokenizer.json).
+
+Vocab is fixed at 64: 3 specials + a 61-char alphabet covering the
+synthetic task corpus.
+"""
+
+PAD, BOS, EOS = 0, 1, 2
+
+ALPHABET = (
+    "abcdefghijklmnopqrstuvwxyz"
+    "0123456789"
+    " \n+-*=?:;,.()<>[]|&%$#@!_"
+)
+
+assert len(ALPHABET) == 61, len(ALPHABET)
+
+CHAR2ID = {c: i + 3 for i, c in enumerate(ALPHABET)}
+ID2CHAR = {i + 3: c for i, c in enumerate(ALPHABET)}
+
+VOCAB = 3 + len(ALPHABET)  # 64
+
+
+def encode(text: str, bos: bool = False, eos: bool = False) -> list:
+    """Encode a string; unknown chars map to space."""
+    ids = [CHAR2ID.get(c, CHAR2ID[" "]) for c in text]
+    if bos:
+        ids = [BOS] + ids
+    if eos:
+        ids = ids + [EOS]
+    return ids
+
+
+def decode(ids) -> str:
+    """Decode ids, dropping specials."""
+    return "".join(ID2CHAR.get(int(i), "") for i in ids)
+
+
+def dump(path: str) -> None:
+    """Write tokenizer.json for the rust runtime."""
+    import json
+
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "vocab": VOCAB,
+                "pad": PAD,
+                "bos": BOS,
+                "eos": EOS,
+                "alphabet": ALPHABET,
+            },
+            f,
+        )

@@ -1,0 +1,102 @@
+"""Build-time trainer: fits each ModelConfig on the synthetic corpus.
+
+Runs ONCE (cached under artifacts/ckpt/); never on the request path.
+Hand-rolled AdamW + cosine schedule (no optax on this image). The tasks
+are permutation-lookup structured (corpus.py), so a ~1M-param model
+reaches near-deterministic top-1 predictions within a few hundred steps —
+the regime the paper's acceptance-rate phenomenon lives in.
+"""
+
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model
+from .configs import MODELS, TRAIN_BATCH, TRAIN_LR, TRAIN_SEQ, TRAIN_STEPS
+
+
+def adamw_init(params):
+    z = lambda: {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z(), "v": z(), "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.01):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+    new = {}
+    for k in params:
+        mh = m[k] / bc1
+        vh = v[k] / bc2
+        upd = mh / (jnp.sqrt(vh) + eps)
+        decay = 0.0 if k.endswith("norm") else wd
+        new[k] = params[k] - lr * (upd + decay * params[k])
+    return new, {"m": m, "v": v, "t": t}
+
+
+def cosine_lr(step, total, base, warmup=20):
+    s = jnp.asarray(step, jnp.float32)
+    warm = base * s / warmup
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * base * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def train_size(size: str, out_dir: str, seed: int = 0, log_every: int = 25):
+    """Train one config; saves fp checkpoint + loss log. Returns params."""
+    cfg = MODELS[size]
+    steps = TRAIN_STEPS[size]
+    params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, seed).items()}
+    opt = adamw_init(params)
+    rows = corpus.training_stream(seed=seed + 1, n_rows=steps * TRAIN_BATCH,
+                                  seq_len=TRAIN_SEQ)
+    rows = np.asarray(rows, np.int32)
+
+    @jax.jit
+    def step_fn(params, opt, batch, lr):
+        loss, grads = jax.value_and_grad(
+            functools.partial(model.loss_fn, cfg))(params, batch)
+        params, opt = adamw_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    log = []
+    t0 = time.time()
+    for s in range(steps):
+        batch = jnp.asarray(rows[s * TRAIN_BATCH:(s + 1) * TRAIN_BATCH])
+        lr = cosine_lr(s, steps, TRAIN_LR)
+        params, opt, loss = step_fn(params, opt, batch, lr)
+        if s % log_every == 0 or s == steps - 1:
+            l = float(loss)
+            log.append({"step": s, "loss": l, "elapsed_s": time.time() - t0})
+            print(f"[train {size}] step {s:4d}/{steps} loss {l:.4f}", flush=True)
+
+    os.makedirs(out_dir, exist_ok=True)
+    np.savez(os.path.join(out_dir, f"{size}.npz"),
+             **{k: np.asarray(v) for k, v in params.items()})
+    with open(os.path.join(out_dir, f"{size}_loss.json"), "w") as f:
+        json.dump(log, f)
+    return {k: np.asarray(v) for k, v in params.items()}
+
+
+def load_or_train(size: str, ckpt_dir: str):
+    path = os.path.join(ckpt_dir, f"{size}.npz")
+    if os.path.exists(path):
+        z = np.load(path)
+        return {k: z[k] for k in z.files}
+    return train_size(size, ckpt_dir)
+
+
+if __name__ == "__main__":
+    import sys
+
+    sizes = sys.argv[1:] or list(MODELS)
+    for s in sizes:
+        train_size(s, os.path.join(os.path.dirname(__file__), "..", "..",
+                                   "artifacts", "ckpt"))

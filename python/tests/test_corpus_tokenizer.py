@@ -1,0 +1,99 @@
+"""Corpus determinism/structure and tokenizer roundtrip."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import corpus, tokenizer
+
+
+@given(st.text(alphabet=tokenizer.ALPHABET, max_size=200))
+def test_tokenizer_roundtrip(s):
+    assert tokenizer.decode(tokenizer.encode(s)) == s
+
+
+def test_tokenizer_specials():
+    ids = tokenizer.encode("ab", bos=True, eos=True)
+    assert ids[0] == tokenizer.BOS and ids[-1] == tokenizer.EOS
+    assert tokenizer.decode(ids) == "ab"
+
+
+def test_tokenizer_unknown_maps_to_space():
+    assert tokenizer.decode(tokenizer.encode("a\tb")) == "a b"
+
+
+def test_vocab_is_64():
+    assert tokenizer.VOCAB == 64
+
+
+def test_permutations_are_bijections():
+    assert sorted(corpus.X_MAP.values()) == sorted(corpus.SYMBOLS)
+    assert sorted(corpus.Y_MAP.values()) == sorted(corpus.SYMBOLS)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), task=st.sampled_from(corpus.TASKS))
+def test_examples_are_consistent(seed, task):
+    """The stated answer must equal the final step of the completion."""
+    rng = random.Random(seed)
+    prompt, completion, answer = corpus.make_example(task, rng)
+    assert completion.endswith(f"a: {answer}\n")
+    assert prompt.startswith("q: ") and prompt.endswith("?\n")
+    # every char must be tokenizable (lossless)
+    s = prompt + completion
+    assert tokenizer.decode(tokenizer.encode(s)) == s
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_chain_steps_follow_permutation(seed):
+    rng = random.Random(seed)
+    prompt, completion, answer = corpus.make_chain(rng)
+    ops = prompt.split()[2]
+    start = prompt.split()[1]
+    body = completion.splitlines()[0][3:]
+    toks = body.split()
+    cur = start
+    for i, op in enumerate(ops):
+        assert toks[2 * i] == op
+        cur = corpus.apply_op(op, cur)
+        assert toks[2 * i + 1] == cur
+    assert cur == answer
+
+
+def test_list_ops():
+    assert corpus.apply_list_op("rev", [1, 2, 3]) == [3, 2, 1]
+    assert corpus.apply_list_op("rot", [1, 2, 3]) == [3, 1, 2]
+    assert corpus.apply_list_op("inc", [9, 0]) == [0, 1]
+    assert corpus.apply_list_op("swp", [1, 2, 3]) == [2, 1, 3]
+
+
+def test_training_stream_shape_and_determinism():
+    a = corpus.training_stream(seed=7, n_rows=4, seq_len=32)
+    b = corpus.training_stream(seed=7, n_rows=4, seq_len=32)
+    assert a == b
+    assert len(a) == 4 and all(len(r) == 33 for r in a)
+
+
+def test_eval_set_heldout_and_deterministic():
+    a = corpus.eval_set("chain", 5, seed=3)
+    b = corpus.eval_set("chain", 5, seed=3)
+    assert a == b
+    assert len(a) == 5
+
+
+def test_workload_fields():
+    for ds in list(corpus.TASKS) + ["sharegpt", "lmsys"]:
+        wl = corpus.workload(ds, 10, seed=0)
+        assert len(wl) == 10
+        for r in wl:
+            assert 0 < r["max_tokens"] <= 200
+            assert r["prompt"]
+
+
+def test_sharegpt_longer_than_lmsys_on_average():
+    sg = corpus.workload("sharegpt", 200, seed=0)
+    lm = corpus.workload("lmsys", 200, seed=0)
+    avg = lambda w: sum(r["max_tokens"] for r in w) / len(w)
+    assert avg(sg) > avg(lm)

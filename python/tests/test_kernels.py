@@ -1,0 +1,144 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and value ranges; assert_allclose everywhere.
+These are the CORE correctness signal for the draft/verify numerics.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hadamard as khad
+from compile.kernels import ref
+from compile.kernels import w4a4 as kw4a4
+from compile.kernels import w4a16 as kw4a16
+
+GROUP = ref.GROUP
+
+
+def rnd(rng, *shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+def quantized_weight(rng, k, n, n_outlier=0):
+    w = rnd(rng, k, n)
+    if n_outlier:
+        q, s = __import__("compile.quant.common", fromlist=["x"]).quantize_weight_mixed(
+            w, n_outlier)
+    else:
+        q, s = __import__("compile.quant.common", fromlist=["x"]).quantize_weight_int4(w)
+    return w, q.astype(np.int8), s
+
+
+dims = st.sampled_from([(1, 64, 64), (2, 64, 128), (4, 128, 64),
+                        (8, 128, 128), (3, 192, 64), (16, 128, 256)])
+
+
+@settings(max_examples=10, deadline=None)
+@given(dims=dims, seed=st.integers(0, 2**16))
+def test_w4a16_kernel_matches_ref(dims, seed):
+    b, k, n = dims
+    rng = np.random.default_rng(seed)
+    _, q, s = quantized_weight(rng, k, n)
+    x = rnd(rng, b, k)
+    got = np.asarray(kw4a16.w4a16_matmul(x, q, s))
+    want = np.asarray(ref.w4a16_ref(x, q, s))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(dims=dims, seed=st.integers(0, 2**16))
+def test_w4a4_kernel_matches_ref_no_outliers(dims, seed):
+    b, k, n = dims
+    rng = np.random.default_rng(seed)
+    _, q, s = quantized_weight(rng, k, n)
+    x = rnd(rng, b, k)
+    got = np.asarray(kw4a4.w4a4_matmul(x, q, s, None, n_outlier=0))
+    want = np.asarray(ref.w4a4_ref(x, q, s, None, n_outlier=0))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(dims=st.sampled_from([(2, 128, 64), (4, 128, 128), (8, 192, 64),
+                             (1, 256, 128)]),
+       seed=st.integers(0, 2**16))
+def test_w4a4_kernel_matches_ref_with_outliers(dims, seed):
+    b, k, n = dims
+    rng = np.random.default_rng(seed)
+    _, q, s = quantized_weight(rng, k, n, n_outlier=GROUP)
+    x = rnd(rng, b, k)
+    perm = rng.permutation(k).astype(np.int32)
+    got = np.asarray(kw4a4.w4a4_matmul(x, q, s, perm, n_outlier=GROUP))
+    want = np.asarray(ref.w4a4_ref(x, q, s, perm, n_outlier=GROUP))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 8), nb=st.integers(1, 4), seed=st.integers(0, 2**16))
+def test_hadamard_kernel_matches_ref(b, nb, seed):
+    k = nb * GROUP
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, b, k)
+    sign = (rng.integers(0, 2, k).astype(np.float32) * 2 - 1)
+    got = np.asarray(khad.hadamard(x, sign))
+    want = np.asarray(ref.hadamard_ref(x, sign))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_hadamard_is_orthonormal():
+    """Rotation must preserve norms exactly (computational invariance)."""
+    rng = np.random.default_rng(0)
+    x = rnd(rng, 4, 128)
+    sign = np.ones(128, np.float32)
+    y = np.asarray(ref.hadamard_ref(x, sign))
+    np.testing.assert_allclose(
+        np.linalg.norm(y, axis=1), np.linalg.norm(x, axis=1), rtol=1e-5)
+
+
+def test_hadamard_involution_via_matrix():
+    h = np.asarray(ref._hadamard_matrix(64))
+    np.testing.assert_allclose(h @ h.T, np.eye(64), atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), qmax=st.sampled_from([7.0, 127.0]))
+def test_quant_group_sym_roundtrip_error_bounded(seed, qmax):
+    """|x - dequant(quant(x))| <= scale/2 per element (grid property)."""
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, 128, 8)
+    q, s = ref.quant_group_sym(x, qmax, axis=0)
+    deq = np.asarray(ref.dequant_weight(np.asarray(q), np.asarray(s)))
+    err = np.abs(deq - x)
+    bound = np.repeat(np.asarray(s), GROUP, axis=0) * 0.5 + 1e-6
+    assert (err <= bound).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_quant_act_groups_integer_valued(seed):
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, 4, 128)
+    q, s = ref.quant_act_groups(x, n_outlier=GROUP)
+    q = np.asarray(q)
+    np.testing.assert_allclose(q, np.round(q), atol=0)
+    assert np.abs(q[:, :64]).max() <= 7.0
+    assert np.abs(q[:, 64:]).max() <= 127.0
+
+
+def test_w4a4_outlier_channels_better_preserved():
+    """The int8 outlier group must carry less quantization error than the
+    int4 groups — the reason Atom reorders outliers."""
+    rng = np.random.default_rng(3)
+    x = rnd(rng, 8, 128)
+    q, s = ref.quant_act_groups(x, n_outlier=GROUP)
+    sx = np.asarray(s)
+    deq = np.asarray(q).reshape(8, 2, GROUP) * sx[:, :, None]
+    err = np.abs(deq - x.reshape(8, 2, GROUP)).mean(axis=(0, 2))
+    assert err[1] < err[0]
+
+
+def test_vmem_estimates_positive():
+    assert kw4a16.vmem_bytes(8, 128, 256) > 0
+    assert kw4a4.vmem_bytes(8, 128, 256) > 0
+    assert khad.vmem_bytes(8, 128) > 0
+    assert 0 < kw4a16.mxu_util_estimate(8, 128, 256) <= 1

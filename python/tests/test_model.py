@@ -1,0 +1,171 @@
+"""L2 model invariants: cached forward == dense forward, entry semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import MODELS, ModuleSpec
+from compile.quant import quantize
+
+CFG = MODELS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return {k: jnp.asarray(v) for k, v in model.init_params(CFG, 3).items()}
+
+
+def rand_tokens(b, t, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(3, CFG.vocab, size=(b, t)), jnp.int32)
+
+
+def empty_kv(b):
+    return jnp.zeros(model.kv_shape(CFG, b), jnp.float32)
+
+
+def test_cached_chunk_matches_dense(params):
+    """forward_chunk over the whole sequence == dense_forward."""
+    b, t = 2, 16
+    toks = rand_tokens(b, t)
+    dense = model.dense_forward(CFG, params, toks)
+    zeros = jnp.zeros((b,), jnp.int32)
+    logits, _ = model.forward_chunk(CFG, params, toks, zeros, zeros,
+                                    empty_kv(b), "w16a16", "atom")
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_incremental_decode_matches_dense(params):
+    """Token-by-token cached decoding == dense forward at every position."""
+    b, t = 2, 10
+    toks = rand_tokens(b, t, seed=1)
+    dense = model.dense_forward(CFG, params, toks)
+    kv = empty_kv(b)
+    zeros = jnp.zeros((b,), jnp.int32)
+    for i in range(t):
+        pos = jnp.full((b,), i, jnp.int32)
+        logits, kv = model.forward_chunk(CFG, params, toks[:, i:i + 1], pos,
+                                         zeros, kv, "w16a16", "atom")
+        np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                   np.asarray(dense[:, i]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_left_padded_prefill_matches_unpadded(params):
+    """start[b] left-padding must not change the logits of real tokens."""
+    t = 12
+    toks = rand_tokens(1, t, seed=2)
+    dense = model.dense_forward(CFG, params, toks)
+    pad = 5
+    padded = jnp.concatenate(
+        [jnp.zeros((1, pad), jnp.int32), toks], axis=1)
+    start = jnp.asarray([pad], jnp.int32)
+    logits, _ = model.forward_chunk(CFG, params, padded,
+                                    jnp.zeros((1,), jnp.int32), start,
+                                    empty_kv(1), "w16a16", "atom")
+    np.testing.assert_allclose(np.asarray(logits[:, pad:]),
+                               np.asarray(dense), rtol=1e-4, atol=1e-4)
+
+
+def test_update_mask_freezes_cache(params):
+    b = 2
+    kv = empty_kv(b)
+    toks = rand_tokens(b, 4, seed=3)
+    mask = jnp.asarray([1, 0], jnp.int32)
+    zeros = jnp.zeros((b,), jnp.int32)
+    _, kv2 = model.forward_chunk(CFG, params, toks, zeros, zeros, kv,
+                                 "w16a16", "atom", update_mask=mask)
+    assert float(jnp.abs(kv2[:, :, 0]).max()) > 0          # slot 0 written
+    np.testing.assert_array_equal(np.asarray(kv2[:, :, 1]),
+                                  np.asarray(kv[:, :, 1]))  # slot 1 frozen
+
+
+def test_draft_entry_greedy_consistency(params):
+    """draft_entry must equal gamma sequential greedy decode_entry steps."""
+    b, gamma = 2, 3
+    kv = empty_kv(b)
+    tok = rand_tokens(b, 1, seed=4)[:, 0]
+    pos = jnp.full((b,), 0, jnp.int32)
+    start = jnp.zeros((b,), jnp.int32)
+    toks, probs, kv_d = model.draft_entry(CFG, "w16a16", "atom", gamma,
+                                          params, tok, pos, start, kv)
+    # sequential reference
+    kv_s, cur = kv, tok
+    out = []
+    for i in range(gamma):
+        p = pos + i
+        t, pr, kv_s = model.decode_entry(CFG, "w16a16", "atom", params, cur,
+                                         p, start, kv_s)
+        out.append(np.asarray(t))
+        cur = t
+    np.testing.assert_array_equal(np.asarray(toks), np.stack(out, 1))
+    np.testing.assert_allclose(np.asarray(kv_d), np.asarray(kv_s),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_verify_entry_overwrites_kv_and_reports_fed_probs(params):
+    b, gamma = 2, 3
+    kv = empty_kv(b)
+    toks = rand_tokens(b, gamma + 1, seed=5)
+    pos = jnp.zeros((b,), jnp.int32)
+    start = jnp.zeros((b,), jnp.int32)
+    mask = jnp.ones((b,), jnp.int32)
+    vtok, vtop, pfed, kv2 = model.verify_entry(CFG, "w16a16", "atom", params,
+                                               toks, pos, start, mask, kv)
+    assert vtok.shape == (b, gamma + 1)
+    assert float(jnp.abs(kv2).max()) > 0
+    # vtop is the max prob, so pfed <= vtop (+eps)
+    assert (np.asarray(pfed) <= np.asarray(vtop) + 1e-6).all()
+
+
+def test_verify_equals_decode_sequence(params):
+    """Greedy verification logits == sequential decode logits on the same
+    fed tokens (parallel == serial; the losslessness lemma)."""
+    b, g1 = 1, 4
+    toks = rand_tokens(b, g1, seed=6)
+    pos = jnp.zeros((b,), jnp.int32)
+    start = jnp.zeros((b,), jnp.int32)
+    vtok, _, _, _ = model.verify_entry(CFG, "w16a16", "atom", params, toks,
+                                       pos, start, jnp.ones((b,), jnp.int32),
+                                       empty_kv(b))
+    kv, outs = empty_kv(b), []
+    for i in range(g1):
+        t, _, kv = model.decode_entry(CFG, "w16a16", "atom", params,
+                                      toks[:, i], jnp.full((b,), i, jnp.int32),
+                                      start, kv)
+        outs.append(np.asarray(t))
+    np.testing.assert_array_equal(np.asarray(vtok), np.stack(outs, 1))
+
+
+def test_score_entry_counts_and_positive_nll(params):
+    rows = rand_tokens(2, 33, seed=7)
+    nll, cnt = model.score_entry(CFG, "w16a16", "atom", params, rows)
+    assert (np.asarray(nll) > 0).all()
+    assert (np.asarray(cnt) == 32).all()
+
+
+def test_quantized_modes_run_through_entries(params):
+    fp = {k: np.asarray(v) for k, v in params.items()}
+    for scheme in ("atom", "quarot"):
+        for mode in ("w4a16", "w4a4"):
+            q = quantize(scheme, mode, fp)
+            qj = {k: jnp.asarray(v) for k, v in q.items()}
+            tok = rand_tokens(2, 1, seed=8)[:, 0]
+            z = jnp.zeros((2,), jnp.int32)
+            t, p, kv = model.decode_entry(CFG, mode, scheme, qj, tok, z, z,
+                                          empty_kv(2))
+            assert t.shape == (2,) and 0 <= float(p.min()) <= 1
+
+
+def test_calibration_covers_all_linears(params):
+    rows = rand_tokens(2, 16, seed=9)
+    calib = model.calibrate(CFG, params, rows)
+    from compile.quant.common import LINEAR_SUFFIXES
+    for i in range(CFG.n_layers):
+        for sfx in LINEAR_SUFFIXES:
+            key = f"l{i:02d}.{sfx}"
+            assert key in calib, key
+            assert calib[key].shape == (np.asarray(params[key]).shape[0],)

@@ -1,0 +1,111 @@
+"""Quantizer (offline) correctness and scheme properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.configs import MODELS, N_OUTLIER
+from compile.kernels import ref
+from compile.quant import atom, common, quarot, quantize
+
+
+def small_params():
+    return model.init_params(MODELS["tiny"], seed=1)
+
+
+def test_atom_w4a16_keys():
+    q = atom.quantize(small_params(), "w4a16")
+    assert "l00.wq.q" in q and "l00.wq.s" in q
+    assert "l00.wq" not in q
+    assert q["l00.wq.q"].dtype == np.int8
+    assert "tok_emb" in q  # non-linears pass through fp
+
+
+def test_atom_w4a4_perm_is_permutation():
+    q = atom.quantize(small_params(), "w4a4")
+    perm = q["l00.gate.perm"]
+    assert sorted(perm.tolist()) == list(range(len(perm)))
+
+
+def test_atom_outlier_perm_places_largest_last():
+    amax = np.array([0.1, 5.0, 0.2, 9.0] + [0.01] * 60, np.float32)
+    perm = atom.outlier_perm(amax, n_outlier=2)
+    assert set(perm[-2:].tolist()) == {1, 3}
+    assert sorted(perm.tolist()) == list(range(64))
+
+
+def test_atom_w4a4_permuted_weight_consistent():
+    """x[:, perm] @ Wq[perm-rows] must approximate x @ W."""
+    p = small_params()
+    q = atom.quantize(p, "w4a4")
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((4, p["l00.gate"].shape[0])).astype(np.float32)
+    got = np.asarray(ref.w4a4_ref(
+        x, q["l00.gate.q"], q["l00.gate.s"], q["l00.gate.perm"],
+        n_outlier=N_OUTLIER))
+    want = x @ p["l00.gate"]
+    # int4 activations: loose tolerance, but must correlate strongly
+    cc = np.corrcoef(got.ravel(), want.ravel())[0, 1]
+    assert cc > 0.98, cc
+
+
+def test_quarot_rotation_exact_in_fp():
+    """(x R)(R^T W) == x W up to fp rounding (computational invariance)."""
+    p = small_params()
+    w = p["l00.up"]
+    sign = quarot._sign_vector("l00.up", w.shape[0])
+    wrot = quarot.rotate_weight(w, sign)
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((4, w.shape[0])).astype(np.float32)
+    xrot = np.asarray(ref.hadamard_ref(x, sign))
+    np.testing.assert_allclose(xrot @ wrot, x @ w, rtol=1e-3, atol=1e-4)
+
+
+def test_quarot_reduces_kurtosis():
+    """The rotation should flatten activation outliers (lower kurtosis)."""
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((64, 128)).astype(np.float32)
+    x[:, 7] *= 30.0  # synthetic outlier channel
+    sign = quarot._sign_vector("k", 128)
+    y = np.asarray(ref.hadamard_ref(x, sign))
+    kurt = lambda a: float(np.mean((a - a.mean()) ** 4) / np.var(a) ** 2)
+    assert kurt(y) < kurt(x)
+
+
+def test_quarot_sign_deterministic():
+    a = quarot._sign_vector("l00.wq", 128)
+    b = quarot._sign_vector("l00.wq", 128)
+    np.testing.assert_array_equal(a, b)
+    c = quarot._sign_vector("l01.wq", 128)
+    assert not np.array_equal(a, c)
+
+
+def test_dispatch_w16a16_passthrough():
+    p = small_params()
+    q = quantize("atom", "w16a16", p)
+    assert q is p
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_weight_int4_quant_error_small_relative(seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((128, 64)).astype(np.float32) * 0.05
+    q, s = common.quantize_weight_int4(w)
+    deq = np.asarray(ref.dequant_weight(q.astype(np.float32), s))
+    rel = np.abs(deq - w).mean() / np.abs(w).mean()
+    assert rel < 0.12, rel
+
+
+def test_mixed_weight_outlier_rows_int8_grid():
+    rng = np.random.default_rng(4)
+    w = rng.standard_normal((128, 32)).astype(np.float32)
+    q, s = common.quantize_weight_mixed(w, n_outlier=64)
+    assert np.abs(q[:64]).max() <= 7
+    assert np.abs(q[64:]).max() <= 127
+    # outlier rows must be strictly better reconstructed
+    deq = np.asarray(ref.dequant_weight(q.astype(np.float32), s))
+    err4 = np.abs(deq[:64] - w[:64]).mean()
+    err8 = np.abs(deq[64:] - w[64:]).mean()
+    assert err8 < err4

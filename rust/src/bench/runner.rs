@@ -1,0 +1,128 @@
+//! Shared bench runner: drives a workload trace through an engine and
+//! returns its metrics. Every table/figure bench builds on these.
+
+use crate::coordinator::{
+    ArEngine, EagleConfig, EagleEngine, QSpecConfig, QSpecEngine, SimilaritySample,
+};
+use crate::error::Result;
+use crate::metrics::EngineMetrics;
+use crate::model::{Mode, Tokenizer};
+use crate::runtime::Session;
+use crate::workload;
+
+/// One benchmark run configuration.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub size: String,
+    pub scheme: String,
+    pub batch: usize,
+    pub gamma: usize,
+    pub dataset: String,
+    pub n_requests: usize,
+    /// cap on per-request generation length (0 = trace value)
+    pub max_tokens_cap: usize,
+}
+
+impl RunSpec {
+    pub fn new(size: &str, batch: usize, dataset: &str, n_requests: usize) -> Self {
+        RunSpec {
+            size: size.to_string(),
+            scheme: "atom".to_string(),
+            batch,
+            gamma: 3,
+            dataset: dataset.to_string(),
+            n_requests,
+            max_tokens_cap: 48,
+        }
+    }
+}
+
+/// Tokenized workload: (prompt ids, max_tokens).
+pub fn load_workload(
+    sess: &Session,
+    tok: &Tokenizer,
+    spec: &RunSpec,
+) -> Result<Vec<(Vec<i32>, usize)>> {
+    let trace = workload::load_trace(&sess.store.workload_path(&spec.dataset))?;
+    Ok(trace
+        .iter()
+        .cycle()
+        .take(spec.n_requests)
+        .map(|t| {
+            let mt = if spec.max_tokens_cap > 0 {
+                t.max_tokens.min(spec.max_tokens_cap)
+            } else {
+                t.max_tokens
+            };
+            (tok.encode_prompt(&t.prompt), mt)
+        })
+        .collect())
+}
+
+/// Run QSPEC over the workload; returns (metrics, similarity samples).
+pub fn run_qspec(
+    sess: &Session,
+    tok: &Tokenizer,
+    spec: &RunSpec,
+    overwrite: bool,
+    collect_similarity: bool,
+) -> Result<(EngineMetrics, Vec<SimilaritySample>)> {
+    let mut cfg = QSpecConfig::new(&spec.size, spec.batch);
+    cfg.scheme = spec.scheme.clone();
+    cfg.gamma = spec.gamma;
+    cfg.overwrite = overwrite;
+    cfg.collect_similarity = collect_similarity;
+    let mut e = QSpecEngine::new(sess, cfg)?;
+    for (p, mt) in load_workload(sess, tok, spec)? {
+        e.submit(p, mt);
+    }
+    e.run_to_completion()?;
+    Ok((e.metrics.clone(), std::mem::take(&mut e.samples)))
+}
+
+/// Run a single-mode AR baseline over the workload.
+pub fn run_ar(
+    sess: &Session,
+    tok: &Tokenizer,
+    mode: Mode,
+    spec: &RunSpec,
+) -> Result<EngineMetrics> {
+    let mut e = ArEngine::new(sess, &spec.size, &spec.scheme, mode, spec.batch)?;
+    for (p, mt) in load_workload(sess, tok, spec)? {
+        e.submit(p, mt);
+    }
+    e.run_to_completion()?;
+    Ok(e.metrics.clone())
+}
+
+/// Run the EAGLE baseline; Err(Oom) reproduces the paper's OOM cells.
+pub fn run_eagle(
+    sess: &Session,
+    tok: &Tokenizer,
+    spec: &RunSpec,
+    tree_k: usize,
+) -> Result<EngineMetrics> {
+    let mut cfg = EagleConfig::new(spec.batch, tree_k);
+    cfg.size = spec.size.clone();
+    cfg.scheme = spec.scheme.clone();
+    let mut e = EagleEngine::new(sess, cfg)?;
+    for (p, mt) in load_workload(sess, tok, spec)? {
+        e.submit(p, mt);
+    }
+    e.run_to_completion()?;
+    Ok(e.metrics.clone())
+}
+
+/// `cargo bench` quick/full switch: set QSPEC_BENCH_FULL=1 for the
+/// paper-size grids.
+pub fn full_mode() -> bool {
+    std::env::var("QSPEC_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Open the default session (artifacts/ under the crate root).
+pub fn open_session() -> Result<(Session, Tokenizer)> {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let sess = Session::new(crate::runtime::ArtifactStore::open(&root)?)?;
+    let tok = Tokenizer::load(&sess.store.tokenizer_path())?;
+    Ok((sess, tok))
+}

@@ -1,0 +1,101 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `qspec <subcommand> [--key value]... [--flag]...`
+
+use std::collections::BTreeMap;
+
+use crate::error::{QspecError, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut it = raw.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_default();
+        let mut options = BTreeMap::new();
+        let mut flags = Vec::new();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    flags.push(key.to_string());
+                }
+            } else {
+                return Err(QspecError::Config(format!("unexpected positional arg {a}")));
+            }
+        }
+        Ok(Args { subcommand, options, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| QspecError::Config(format!("--{key} must be an integer"))),
+        }
+    }
+
+    pub fn has_flag(&self, f: &str) -> bool {
+        self.flags.iter().any(|x| x == f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = parse("serve --size m --batch 16 --verbose");
+        assert_eq!(a.subcommand, "serve");
+        assert_eq!(a.get("size"), Some("m"));
+        assert_eq!(a.get_usize("batch", 8).unwrap(), 16);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("bench --gamma=5");
+        assert_eq!(a.get("gamma"), Some("5"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("eval --quick");
+        assert!(a.has_flag("quick"));
+    }
+
+    #[test]
+    fn bad_int_rejected() {
+        let a = parse("serve --batch x");
+        assert!(a.get_usize("batch", 8).is_err());
+    }
+
+    #[test]
+    fn positional_rejected() {
+        assert!(Args::parse(vec!["serve".into(), "oops".into()]).is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! Serving configuration (assembled by the CLI; defaults follow the
+//! paper's setup: Atom scheme, gamma = 3, FCFS continuous batching).
+
+use std::path::PathBuf;
+
+use crate::error::{QspecError, Result};
+use crate::model::Mode;
+
+/// Which engine drives generation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// the paper's system
+    QSpec,
+    /// single-mode autoregressive baseline
+    Ar(Mode),
+    /// EAGLE-style baseline (chain if tree_k == 1)
+    Eagle { tree_k: usize },
+}
+
+/// Full serving configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub artifacts: PathBuf,
+    pub size: String,
+    pub scheme: String,
+    pub batch: usize,
+    pub gamma: usize,
+    pub engine: EngineKind,
+    pub overwrite: bool,
+    pub max_tokens_default: usize,
+    pub port: u16,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts: PathBuf::from("artifacts"),
+            size: "s".to_string(),
+            scheme: "atom".to_string(),
+            batch: 8,
+            gamma: 3,
+            engine: EngineKind::QSpec,
+            overwrite: true,
+            max_tokens_default: 96,
+            port: 7199,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !matches!(self.scheme.as_str(), "atom" | "quarot") {
+            return Err(QspecError::Config(format!("unknown scheme {}", self.scheme)));
+        }
+        if self.gamma == 0 || self.gamma > 8 {
+            return Err(QspecError::Config(format!("gamma {} out of range", self.gamma)));
+        }
+        if self.batch == 0 {
+            return Err(QspecError::Config("batch must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        assert!(ServeConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let mut c = ServeConfig::default();
+        c.gamma = 0;
+        assert!(c.validate().is_err());
+        let mut c = ServeConfig::default();
+        c.scheme = "gptq".into();
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,147 @@
+//! Acceptance policies for draft-verify speculative decoding.
+//!
+//! The paper's policy (Sec. 3.1) is greedy top-1 matching: draft token j
+//! is accepted iff the verifier's argmax at position j equals it; the
+//! first mismatch rejects the tail, and the verifier's own token is
+//! emitted in its place (resample). When everything matches, the
+//! verifier's extra prediction is appended as a bonus token — so a cycle
+//! always commits between 1 and gamma+1 tokens.
+
+/// Result of applying an acceptance policy to one slot's cycle.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AcceptDecision {
+    /// number of draft tokens accepted (0..=gamma)
+    pub accepted: usize,
+    /// tokens to commit: accepted drafts + the correction/bonus token
+    pub committed: Vec<i32>,
+}
+
+/// Greedy top-1 acceptance (the paper's policy).
+///
+/// * `drafts` — gamma tokens proposed by the W4A4 pass
+/// * `verify_argmax` — gamma+1 verifier argmax tokens; position j is the
+///   verifier's prediction after seeing the prefix + drafts[..j]
+pub fn greedy_accept(drafts: &[i32], verify_argmax: &[i32]) -> AcceptDecision {
+    debug_assert_eq!(verify_argmax.len(), drafts.len() + 1);
+    let mut committed = Vec::with_capacity(drafts.len() + 1);
+    let mut accepted = 0;
+    for (j, &d) in drafts.iter().enumerate() {
+        if verify_argmax[j] == d {
+            committed.push(d);
+            accepted += 1;
+        } else {
+            // rejection: resample from the verify distribution (greedy ->
+            // the verifier's own argmax), drop the tail
+            committed.push(verify_argmax[j]);
+            return AcceptDecision { accepted, committed };
+        }
+    }
+    // all drafts accepted: bonus token from the verifier
+    committed.push(verify_argmax[drafts.len()]);
+    AcceptDecision { accepted, committed }
+}
+
+/// Lenient probability-threshold acceptance (an alternative policy the
+/// paper notes is compatible): accept a mismatching draft token if the
+/// verifier still assigns it at least `tau` probability. Trades exactness
+/// for acceptance rate; not used in headline results.
+pub fn threshold_accept(
+    drafts: &[i32],
+    verify_argmax: &[i32],
+    p_fed: &[f32],
+    tau: f32,
+) -> AcceptDecision {
+    debug_assert_eq!(verify_argmax.len(), drafts.len() + 1);
+    let mut committed = Vec::with_capacity(drafts.len() + 1);
+    let mut accepted = 0;
+    for (j, &d) in drafts.iter().enumerate() {
+        if verify_argmax[j] == d || p_fed[j] >= tau {
+            committed.push(d);
+            accepted += 1;
+        } else {
+            committed.push(verify_argmax[j]);
+            return AcceptDecision { accepted, committed };
+        }
+    }
+    committed.push(verify_argmax[drafts.len()]);
+    AcceptDecision { accepted, committed }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_accepted_appends_bonus() {
+        let d = greedy_accept(&[5, 6, 7], &[5, 6, 7, 8]);
+        assert_eq!(d.accepted, 3);
+        assert_eq!(d.committed, vec![5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn first_mismatch_resamples_and_truncates() {
+        let d = greedy_accept(&[5, 6, 7], &[5, 9, 7, 8]);
+        assert_eq!(d.accepted, 1);
+        assert_eq!(d.committed, vec![5, 9]);
+    }
+
+    #[test]
+    fn immediate_mismatch_commits_one() {
+        let d = greedy_accept(&[5, 6, 7], &[1, 2, 3, 4]);
+        assert_eq!(d.accepted, 0);
+        assert_eq!(d.committed, vec![1]);
+    }
+
+    #[test]
+    fn always_commits_at_least_one_at_most_gamma_plus_one() {
+        // property: 1 <= committed <= gamma+1; committed == accepted + 1
+        use crate::util::check::check;
+        use crate::util::prng::Pcg32;
+        check(
+            "accept-bounds",
+            500,
+            |r: &mut Pcg32| {
+                let g = r.range_inclusive(1, 6) as usize;
+                let drafts: Vec<u32> = (0..g).map(|_| r.below(8)).collect();
+                let verify: Vec<u32> = (0..g + 1).map(|_| r.below(8)).collect();
+                (drafts, verify)
+            },
+            |(drafts, verify)| {
+                let d: Vec<i32> = drafts.iter().map(|&x| x as i32).collect();
+                let v: Vec<i32> = verify.iter().map(|&x| x as i32).collect();
+                let dec = greedy_accept(&d, &v);
+                if dec.committed.len() != dec.accepted + 1 {
+                    return Err("committed != accepted+1".into());
+                }
+                if dec.committed.is_empty() || dec.committed.len() > d.len() + 1 {
+                    return Err("bounds".into());
+                }
+                // accepted prefix must equal both drafts and verify
+                for j in 0..dec.accepted {
+                    if dec.committed[j] != d[j] || dec.committed[j] != v[j] {
+                        return Err("prefix mismatch".into());
+                    }
+                }
+                // the final committed token is always the verifier's
+                if *dec.committed.last().unwrap() != v[dec.accepted] {
+                    return Err("last token not verifier's".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn threshold_accepts_probable_mismatch() {
+        let d = threshold_accept(&[5, 6], &[5, 9, 8], &[0.9, 0.6, 0.1], 0.5);
+        assert_eq!(d.accepted, 2);
+        assert_eq!(d.committed, vec![5, 6, 8]);
+    }
+
+    #[test]
+    fn threshold_rejects_improbable_mismatch() {
+        let d = threshold_accept(&[5, 6], &[5, 9, 8], &[0.9, 0.2, 0.1], 0.5);
+        assert_eq!(d.accepted, 1);
+        assert_eq!(d.committed, vec![5, 9]);
+    }
+}

@@ -1,0 +1,192 @@
+//! Autoregressive baselines: W16A16 / W4A16 / W4A4 single-mode serving
+//! with the same FCFS continuous batcher. These regenerate the baseline
+//! rows of Tables 4/6 and the W4A16 reference QSPEC is measured against.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::costmodel::{twins::Twin, CostModel, Phase};
+use crate::error::{QspecError, Result};
+use crate::kvcache::SlotManager;
+use crate::metrics::{EngineMetrics, PhaseKind, PhaseTimer};
+use crate::model::tokenizer::{EOS, PAD};
+use crate::model::Mode;
+use crate::runtime::{ModelMeta, Module, Session, WeightSet};
+
+use super::queue::FcfsQueue;
+use super::request::Finished;
+
+/// Single-mode autoregressive engine.
+pub struct ArEngine<'s> {
+    #[allow(dead_code)]
+    sess: &'s Session,
+    pub mode: Mode,
+    pub batch: usize,
+    pub meta: ModelMeta,
+    prefill_m: Rc<Module>,
+    decode_m: Rc<Module>,
+    weights: Rc<WeightSet>,
+    kv: Option<xla::PjRtBuffer>,
+    pub slots: SlotManager,
+    pub queue: FcfsQueue,
+    pub metrics: EngineMetrics,
+    pub cost: CostModel,
+    arrivals: HashMap<u64, Instant>,
+}
+
+impl<'s> ArEngine<'s> {
+    pub fn new(
+        sess: &'s Session,
+        size: &str,
+        scheme: &str,
+        mode: Mode,
+        batch: usize,
+    ) -> Result<Self> {
+        let meta = sess.store.model(size)?.clone();
+        let m = &sess.store.manifest;
+        let prefill_m = sess.module(size, scheme, mode.as_str(), "prefill", batch, 0)?;
+        let decode_m = sess.module(size, scheme, mode.as_str(), "decode", batch, 0)?;
+        let weights = sess.weights(&prefill_m.meta.weights_key)?;
+        let kv = Some(sess.fresh_kv(size, batch)?);
+        let slots = SlotManager::new(batch, meta.max_seq, m.prefill_t);
+        let cost = CostModel::new(Twin::lookup(&meta.paper_twin));
+        let resident =
+            cost.weight_bytes(mode) + cost.kv_bytes(mode, batch, 2048);
+        cost.check_memory(resident, "ar engine")?;
+        Ok(ArEngine {
+            sess,
+            mode,
+            batch,
+            meta,
+            prefill_m,
+            decode_m,
+            weights,
+            kv,
+            slots,
+            queue: FcfsQueue::new(),
+            metrics: EngineMetrics::new(),
+            cost,
+            arrivals: HashMap::new(),
+        })
+    }
+
+    pub fn submit(&mut self, prompt: Vec<i32>, max_tokens: usize) -> u64 {
+        let id = self.queue.push(prompt, max_tokens);
+        self.arrivals.insert(id, Instant::now());
+        id
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || self.slots.any_active()
+    }
+
+    fn finish(&mut self, idx: usize, out: &mut Vec<Finished>) {
+        if let Some((id, tokens)) = self.slots.release(idx) {
+            let latency_ns = self
+                .arrivals
+                .remove(&id)
+                .map(|t| t.elapsed().as_nanos())
+                .unwrap_or(0);
+            self.metrics.req_latency.record(latency_ns as u64);
+            self.metrics.requests_done += 1;
+            out.push(Finished { id, tokens, latency_ns });
+        }
+    }
+
+    fn admit_and_prefill(&mut self, out: &mut Vec<Finished>) -> Result<()> {
+        let p = self.slots.prefill_t();
+        let b = self.batch;
+        let mut admitted = Vec::new();
+        while !self.queue.is_empty() && !self.slots.free_slots().is_empty() {
+            let req = self.queue.pop().unwrap();
+            let plen = req.prompt.len().min(p);
+            let idx = self.slots.admit(req.id, plen, req.max_tokens)?;
+            admitted.push((idx, req));
+        }
+        if admitted.is_empty() {
+            return Ok(());
+        }
+        let mut tokens = vec![PAD; b * p];
+        let mut start = vec![0i32; b];
+        let mut mask = vec![0i32; b];
+        for (idx, req) in &admitted {
+            let s = self.slots.slot(*idx).start as usize;
+            start[*idx] = s as i32;
+            mask[*idx] = 1;
+            tokens[*idx * p + s..*idx * p + p].copy_from_slice(&req.prompt[..p - s]);
+        }
+        let timer = PhaseTimer::start();
+        let kv = self.kv.take().expect("kv");
+        let r = self.prefill_m.call_prefill(&tokens, &start, &mask, &kv, &self.weights)?;
+        self.kv = Some(r.kv);
+        let virt = self.cost.charge(self.mode, Phase::Chunk, admitted.len(), p, p);
+        self.metrics.add_phase(PhaseKind::Prefill, timer.elapsed_ns(), virt);
+        for (idx, _) in &admitted {
+            let done = self.slots.after_prefill(*idx, r.tok[*idx], EOS);
+            self.metrics.tokens_out += 1;
+            self.metrics.committed += 1;
+            if done {
+                self.finish(*idx, out);
+            }
+        }
+        Ok(())
+    }
+
+    fn decode_step(&mut self, out: &mut Vec<Finished>) -> Result<()> {
+        let active = self.slots.active_slots();
+        if active.is_empty() {
+            return Ok(());
+        }
+        let b = self.batch;
+        let ctx = active
+            .iter()
+            .map(|&i| self.slots.context_len(i))
+            .sum::<usize>()
+            / active.len();
+        let mut tok = vec![PAD; b];
+        let mut pos = vec![0i32; b];
+        let mut start = vec![0i32; b];
+        for &i in &active {
+            let s = self.slots.slot(i);
+            tok[i] = s.pending;
+            pos[i] = s.pos;
+            start[i] = s.start;
+        }
+        let timer = PhaseTimer::start();
+        let kv = self.kv.take().expect("kv");
+        let r = self.decode_m.call_decode(&tok, &pos, &start, &kv, &self.weights)?;
+        self.kv = Some(r.kv);
+        let virt = self.cost.charge(self.mode, Phase::Decode, active.len(), 1, ctx);
+        self.metrics.add_phase(PhaseKind::Decode, timer.elapsed_ns(), virt);
+        for &i in &active {
+            let committed = self.slots.commit(i, &[r.tok[i]], EOS, 1);
+            self.metrics.committed += committed.len() as u64;
+            self.metrics.tokens_out += committed.len() as u64;
+            if self.slots.slot(i).done {
+                self.finish(i, out);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn step(&mut self) -> Result<Vec<Finished>> {
+        let mut out = Vec::new();
+        self.admit_and_prefill(&mut out)?;
+        self.decode_step(&mut out)?;
+        Ok(out)
+    }
+
+    pub fn run_to_completion(&mut self) -> Result<Vec<Finished>> {
+        let mut out = Vec::new();
+        let mut guard = 0usize;
+        while self.has_work() {
+            out.extend(self.step()?);
+            guard += 1;
+            if guard > 5_000_000 {
+                return Err(QspecError::Scheduler("ar run stuck".into()));
+            }
+        }
+        Ok(out)
+    }
+}

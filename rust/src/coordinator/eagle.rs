@@ -1,0 +1,329 @@
+//! EAGLE-style speculative-decoding baseline (Li et al. 2024b) for
+//! Tables 5/7: a *separate* small draft model chain-drafts gamma=5
+//! tokens which the W4A16 target verifies in parallel.
+//!
+//! Differences from QSPEC that this baseline makes measurable:
+//!  * extra draft-model weights and a second KV cache (no sharing);
+//!  * draft/target distributions diverge (two models) -> lower acceptance;
+//!  * tree drafting (tree_k > 1) widens verification to ~k^(gamma-1)
+//!    paths, blowing up verification cost and memory in batched serving —
+//!    the simulated device-memory check reproduces the paper's OOM at
+//!    batch 16. Tree verification cost/memory are modeled through the
+//!    cost model (the executed path is the principal chain); DESIGN.md §3
+//!    documents this substitution.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::costmodel::{twins::Twin, CostModel, Phase};
+use crate::error::{QspecError, Result};
+use crate::kvcache::SlotManager;
+use crate::metrics::{EngineMetrics, PhaseKind, PhaseTimer};
+use crate::model::tokenizer::{EOS, PAD};
+use crate::model::Mode;
+use crate::runtime::{ModelMeta, Module, Session, WeightSet};
+
+use super::acceptance::greedy_accept;
+use super::queue::FcfsQueue;
+use super::request::Finished;
+
+/// EAGLE baseline configuration.
+#[derive(Clone, Debug)]
+pub struct EagleConfig {
+    /// target model size (paper: llama2-7b twin = "m").
+    pub size: String,
+    pub scheme: String,
+    pub batch: usize,
+    /// chain draft length (EAGLE default depth 5).
+    pub gamma: usize,
+    /// tree branching factor; 1 = chain. Tree cost/memory are modeled.
+    pub tree_k: usize,
+    /// mean context length used for the device-memory admission check.
+    pub mem_ctx: usize,
+}
+
+impl EagleConfig {
+    pub fn new(batch: usize, tree_k: usize) -> Self {
+        EagleConfig {
+            size: "m".to_string(),
+            scheme: "atom".to_string(),
+            batch,
+            gamma: 5,
+            tree_k,
+            mem_ctx: 2048,
+        }
+    }
+
+    /// Verification tokens per sequence the (modeled) tree would feed:
+    /// EAGLE's tree materializes ~k^(gamma-1) paths but dedups shared
+    /// prefixes; the official configuration verifies ~26 tree tokens.
+    pub fn tree_tokens(&self) -> usize {
+        if self.tree_k <= 1 {
+            self.gamma + 1
+        } else {
+            (self.tree_k.pow(self.gamma as u32 - 1) + self.gamma).min(32)
+        }
+    }
+}
+
+/// The EAGLE baseline engine.
+pub struct EagleEngine<'s> {
+    #[allow(dead_code)]
+    sess: &'s Session,
+    pub cfg: EagleConfig,
+    pub meta: ModelMeta,
+    draft_meta: ModelMeta,
+    // target model modules (W4A16)
+    t_prefill: Rc<Module>,
+    t_verify: Rc<Module>,
+    t_weights: Rc<WeightSet>,
+    // draft model modules (fp; paper uses an FP16 EAGLE head)
+    d_prefill: Rc<Module>,
+    d_draft: Rc<Module>,
+    d_weights: Rc<WeightSet>,
+    kv_target: Option<xla::PjRtBuffer>,
+    kv_draft: Option<xla::PjRtBuffer>,
+    pub slots: SlotManager,
+    pub queue: FcfsQueue,
+    pub metrics: EngineMetrics,
+    pub cost: CostModel,
+    arrivals: HashMap<u64, Instant>,
+}
+
+impl<'s> EagleEngine<'s> {
+    /// Builds the engine; returns `Err(QspecError::Oom)` when the modeled
+    /// device memory exceeds the L20 budget (Table 5/7 "OOM" rows).
+    pub fn new(sess: &'s Session, cfg: EagleConfig) -> Result<Self> {
+        let meta = sess.store.model(&cfg.size)?.clone();
+        let draft_meta = sess.store.model("eagle")?.clone();
+        let man = &sess.store.manifest;
+        let t_prefill = sess.module(&cfg.size, &cfg.scheme, "w4a16", "prefill", cfg.batch, 0)?;
+        let t_verify = sess.module(&cfg.size, &cfg.scheme, "w4a16", "verify", cfg.batch, cfg.gamma)?;
+        let t_weights = sess.weights(&t_prefill.meta.weights_key)?;
+        let d_prefill = sess.module("eagle", "atom", "w16a16", "prefill", cfg.batch, 0)?;
+        let d_draft = sess.module("eagle", "atom", "w16a16", "draft", cfg.batch, cfg.gamma)?;
+        let d_weights = sess.weights(&d_prefill.meta.weights_key)?;
+
+        let cost = CostModel::new(Twin::lookup(&meta.paper_twin));
+        let draft_twin = Twin::lookup("eagle-head");
+        // ---- simulated device-memory admission (the OOM reproduction) --
+        let target_resident = cost.weight_bytes(Mode::W4A16)
+            + cost.kv_bytes(Mode::W4A16, cfg.batch, cfg.mem_ctx);
+        let draft_resident = 2 * draft_twin.n_params // fp16 draft weights
+            + cfg.batch * cfg.mem_ctx * draft_twin.kv_bytes_per_token(Mode::W16A16);
+        // tree verification workspace: per-branch K/V + attention
+        // activations for k^(gamma-1) paths (calibrated; DESIGN.md §3)
+        let tree_ws = if cfg.tree_k > 1 {
+            cfg.batch
+                * cfg.tree_k.pow(cfg.gamma as u32 - 1)
+                * cfg.mem_ctx
+                * Twin::lookup(&meta.paper_twin).kv_bytes_per_token(Mode::W4A16)
+                / 8
+        } else {
+            0
+        };
+        cost.check_memory(
+            target_resident + draft_resident + tree_ws,
+            &format!("eagle b={} k={}", cfg.batch, cfg.tree_k),
+        )?;
+
+        let kv_target = Some(sess.fresh_kv(&cfg.size, cfg.batch)?);
+        let kv_draft = Some(sess.fresh_kv("eagle", cfg.batch)?);
+        let max_seq = meta.max_seq.min(draft_meta.max_seq);
+        let slots = SlotManager::new(cfg.batch, max_seq, man.prefill_t);
+
+        Ok(EagleEngine {
+            sess,
+            cfg,
+            meta,
+            draft_meta,
+            t_prefill,
+            t_verify,
+            t_weights,
+            d_prefill,
+            d_draft,
+            d_weights,
+            kv_target,
+            kv_draft,
+            slots,
+            queue: FcfsQueue::new(),
+            metrics: EngineMetrics::new(),
+            cost,
+            arrivals: HashMap::new(),
+        })
+    }
+
+    pub fn submit(&mut self, prompt: Vec<i32>, max_tokens: usize) -> u64 {
+        let id = self.queue.push(prompt, max_tokens);
+        self.arrivals.insert(id, Instant::now());
+        id
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || self.slots.any_active()
+    }
+
+    fn finish(&mut self, idx: usize, out: &mut Vec<Finished>) {
+        if let Some((id, tokens)) = self.slots.release(idx) {
+            let latency_ns = self
+                .arrivals
+                .remove(&id)
+                .map(|t| t.elapsed().as_nanos())
+                .unwrap_or(0);
+            self.metrics.req_latency.record(latency_ns as u64);
+            self.metrics.requests_done += 1;
+            out.push(Finished { id, tokens, latency_ns });
+        }
+    }
+
+    fn admit_and_prefill(&mut self, out: &mut Vec<Finished>) -> Result<()> {
+        let p = self.slots.prefill_t();
+        let b = self.cfg.batch;
+        let mut admitted = Vec::new();
+        while !self.queue.is_empty() && !self.slots.free_slots().is_empty() {
+            let req = self.queue.pop().unwrap();
+            let plen = req.prompt.len().min(p);
+            let idx = self.slots.admit(req.id, plen, req.max_tokens)?;
+            admitted.push((idx, req));
+        }
+        if admitted.is_empty() {
+            return Ok(());
+        }
+        let mut tokens = vec![PAD; b * p];
+        let mut start = vec![0i32; b];
+        let mut mask = vec![0i32; b];
+        for (idx, req) in &admitted {
+            let s = self.slots.slot(*idx).start as usize;
+            start[*idx] = s as i32;
+            mask[*idx] = 1;
+            tokens[*idx * p + s..*idx * p + p].copy_from_slice(&req.prompt[..p - s]);
+        }
+        // target prefill
+        let timer = PhaseTimer::start();
+        let kv = self.kv_target.take().expect("kv");
+        let r = self.t_prefill.call_prefill(&tokens, &start, &mask, &kv, &self.t_weights)?;
+        self.kv_target = Some(r.kv);
+        let virt = self.cost.charge(Mode::W4A16, Phase::Chunk, admitted.len(), p, p);
+        self.metrics.add_phase(PhaseKind::Prefill, timer.elapsed_ns(), virt);
+        // draft-model prefill (its own cache — the memory overhead QSPEC avoids)
+        let timer = PhaseTimer::start();
+        let dkv = self.kv_draft.take().expect("dkv");
+        let r2 = self.d_prefill.call_prefill(&tokens, &start, &mask, &dkv, &self.d_weights)?;
+        self.kv_draft = Some(r2.kv);
+        self.metrics.add_phase(PhaseKind::Prefill, timer.elapsed_ns(), 0);
+        for (idx, _) in &admitted {
+            let done = self.slots.after_prefill(*idx, r.tok[*idx], EOS);
+            self.metrics.tokens_out += 1;
+            self.metrics.committed += 1;
+            if done {
+                self.finish(*idx, out);
+            }
+        }
+        Ok(())
+    }
+
+    fn cycle(&mut self, out: &mut Vec<Finished>) -> Result<()> {
+        let active = self.slots.active_slots();
+        if active.is_empty() {
+            return Ok(());
+        }
+        let b = self.cfg.batch;
+        let g = self.cfg.gamma;
+        let ctx = active
+            .iter()
+            .map(|&i| self.slots.context_len(i))
+            .sum::<usize>()
+            / active.len();
+        let mut tok = vec![PAD; b];
+        let mut pos = vec![0i32; b];
+        let mut start = vec![0i32; b];
+        let mut mask = vec![0i32; b];
+        for &i in &active {
+            let s = self.slots.slot(i);
+            tok[i] = s.pending;
+            pos[i] = s.pos;
+            start[i] = s.start;
+            mask[i] = 1;
+        }
+
+        // draft: the separate FP16 draft model, chain of gamma steps
+        let timer = PhaseTimer::start();
+        let dkv = self.kv_draft.take().expect("dkv");
+        let d = self.d_draft.call_draft(&tok, &pos, &start, &dkv, &self.d_weights)?;
+        self.kv_draft = Some(d.kv);
+        let draft_twin = Twin::lookup("eagle-head");
+        let mut virt = 0u128;
+        for _ in 0..g {
+            // draft decode steps on the small fp model, same device clock
+            virt += CostModel::ns_for(&draft_twin, Mode::W16A16, Phase::Decode, active.len(), 1, ctx);
+        }
+        self.cost.virtual_ns += virt;
+        self.metrics.add_phase(PhaseKind::Draft, timer.elapsed_ns(), virt);
+
+        // verify on the target (tree cost modeled via tree_tokens)
+        let mut vtokens = vec![PAD; b * (g + 1)];
+        for slot in 0..b {
+            vtokens[slot * (g + 1)] = tok[slot];
+            for j in 0..g {
+                vtokens[slot * (g + 1) + 1 + j] = d.toks[slot * g + j];
+            }
+        }
+        let timer = PhaseTimer::start();
+        let kv = self.kv_target.take().expect("kv");
+        let v = self
+            .t_verify
+            .call_verify(&vtokens, &pos, &start, &mask, &kv, &self.t_weights)?;
+        self.kv_target = Some(v.kv);
+        let virt = self.cost.charge(
+            Mode::W4A16,
+            Phase::Chunk,
+            active.len(),
+            self.cfg.tree_tokens(),
+            ctx,
+        );
+        self.metrics.add_phase(PhaseKind::Verify, timer.elapsed_ns(), virt);
+
+        let timer = PhaseTimer::start();
+        for &i in &active {
+            let drafts = &d.toks[i * g..(i + 1) * g];
+            let vt = &v.vtok[i * (g + 1)..(i + 1) * (g + 1)];
+            let dec = greedy_accept(drafts, vt);
+            self.metrics.drafted += g as u64;
+            self.metrics.accepted += dec.accepted as u64;
+            self.metrics.accept_len.add(dec.accepted as f64);
+            let committed = self.slots.commit(i, &dec.committed, EOS, g);
+            self.metrics.committed += committed.len() as u64;
+            self.metrics.tokens_out += committed.len() as u64;
+            if self.slots.slot(i).done {
+                self.finish(i, out);
+            }
+        }
+        self.metrics.add_phase(PhaseKind::Host, timer.elapsed_ns(), 0);
+        Ok(())
+    }
+
+    pub fn step(&mut self) -> Result<Vec<Finished>> {
+        let mut out = Vec::new();
+        self.admit_and_prefill(&mut out)?;
+        self.cycle(&mut out)?;
+        Ok(out)
+    }
+
+    pub fn run_to_completion(&mut self) -> Result<Vec<Finished>> {
+        let mut out = Vec::new();
+        let mut guard = 0usize;
+        while self.has_work() {
+            out.extend(self.step()?);
+            guard += 1;
+            if guard > 2_000_000 {
+                return Err(QspecError::Scheduler("eagle run stuck".into()));
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn draft_model_meta(&self) -> &ModelMeta {
+        &self.draft_meta
+    }
+}

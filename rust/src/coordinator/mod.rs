@@ -1,0 +1,32 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! * `request`/`queue` — FCFS request admission (continuous batching).
+//! * `acceptance`    — the draft-verify acceptance policies.
+//! * `spec_decode`   — the QSPEC engine: W4A4 fused drafting, W4A16
+//!                     parallel verification, KV-cache overwriting.
+//! * `autoregressive`— W16A16 / W4A16 / W4A4 baselines.
+//! * `eagle`         — EAGLE-style baseline: separate draft model,
+//!                     chain/tree drafting, simulated memory accounting.
+
+pub mod acceptance;
+pub mod autoregressive;
+pub mod eagle;
+pub mod queue;
+pub mod request;
+pub mod spec_decode;
+
+pub use acceptance::{greedy_accept, AcceptDecision};
+pub use autoregressive::ArEngine;
+pub use eagle::{EagleConfig, EagleEngine};
+pub use queue::FcfsQueue;
+pub use request::{Finished, Request};
+pub use spec_decode::{QSpecConfig, QSpecEngine};
+
+/// A similarity sample for fig 2: draft top-1 prob, verify prob of the
+/// draft token, and whether the token was accepted.
+#[derive(Clone, Copy, Debug)]
+pub struct SimilaritySample {
+    pub p_draft: f32,
+    pub p_verify: f32,
+    pub accepted: bool,
+}

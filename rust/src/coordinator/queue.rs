@@ -1,0 +1,72 @@
+//! FCFS admission queue (the paper serves all requests first-come,
+//! first-served with ORCA-style continuous batch refill).
+
+use std::collections::VecDeque;
+
+use super::request::Request;
+
+/// First-come-first-served queue; admission order is arrival order.
+#[derive(Debug, Default)]
+pub struct FcfsQueue {
+    q: VecDeque<Request>,
+    next_id: u64,
+}
+
+impl FcfsQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue with an auto-assigned id; returns the id.
+    pub fn push(&mut self, prompt: Vec<i32>, max_tokens: usize) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.q.push_back(Request::new(id, prompt, max_tokens));
+        id
+    }
+
+    pub fn push_request(&mut self, r: Request) {
+        self.next_id = self.next_id.max(r.id + 1);
+        self.q.push_back(r);
+    }
+
+    pub fn pop(&mut self) -> Option<Request> {
+        self.q.pop_front()
+    }
+
+    pub fn peek(&self) -> Option<&Request> {
+        self.q.front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fcfs_order_preserved() {
+        let mut q = FcfsQueue::new();
+        let a = q.push(vec![1], 4);
+        let b = q.push(vec![2], 4);
+        assert!(a < b);
+        assert_eq!(q.pop().unwrap().id, a);
+        assert_eq!(q.pop().unwrap().id, b);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ids_unique_after_manual_push() {
+        let mut q = FcfsQueue::new();
+        q.push_request(Request::new(10, vec![1], 4));
+        let next = q.push(vec![2], 4);
+        assert!(next > 10);
+    }
+}

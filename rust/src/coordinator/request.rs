@@ -1,0 +1,26 @@
+//! Request / response types of the serving API.
+
+use std::time::Instant;
+
+/// One generation request (token-level; the server layer tokenizes).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_tokens: usize,
+    pub arrival: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, max_tokens: usize) -> Self {
+        Request { id, prompt, max_tokens, arrival: Instant::now() }
+    }
+}
+
+/// A finished request with its generated tokens and latency.
+#[derive(Clone, Debug)]
+pub struct Finished {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub latency_ns: u128,
+}

@@ -1,0 +1,22 @@
+//! NVIDIA L20 device constants (paper testbed: 4x L20, 48 GB each).
+//!
+//! Public spec numbers; MFU chosen so absolute magnitudes are plausible —
+//! the *ratios* between modes are what the reproduction relies on.
+
+/// HBM capacity per GPU: 48 GB (paper runs up to 13B on one).
+pub const HBM_BYTES: usize = 48 * (1 << 30);
+
+/// GDDR6 bandwidth: 864 GB/s = 864 bytes/ns.
+pub const HBM_BW_BYTES_PER_NS: f64 = 864.0;
+
+/// FP16 tensor peak: 119.5 TFLOPS = 119.5 FLOP/ns... scaled to /ns:
+pub const FP16_FLOPS_PER_NS: f64 = 119_500.0;
+
+/// INT4 tensor peak (2x INT8 = 4x FP16 dense on Ada): 478 TOPS.
+pub const INT4_OPS_PER_NS: f64 = 478_000.0;
+
+/// Achievable fraction of peak in a serving kernel.
+pub const MFU: f64 = 0.45;
+
+/// Per-layer kernel-launch/dispatch overhead (ns).
+pub const LAUNCH_OVERHEAD_NS: f64 = 4_000.0;

@@ -1,0 +1,193 @@
+//! L20 roofline cost model — the virtual clock (DESIGN.md §3).
+//!
+//! The paper's throughput numbers come from NVIDIA L20 GPUs running int4
+//! kernels; this substrate executes the same numerics on CPU PJRT. To
+//! report paper-comparable *ratios*, every executed call also advances a
+//! virtual clock by the time the equivalent kernel would take on an L20
+//! against the paper-twin model (Llama-3.2-3B / 2-7B / 3-8B / 2-13B).
+//!
+//! Decode is modeled memory-bound (weight + KV traffic / HBM bandwidth),
+//! prefill/verify compute-bound (FLOPs / effective peak), matching the
+//! paper's Sec. 3.2 cost analysis. W4A16 pays a dequantization penalty
+//! (expressed as extra effective weight traffic) which is why FP16 can
+//! outrun AWQ inside Atom's serving stack (paper Appendix A.6 / Fig. 7).
+
+pub mod l20;
+pub mod twins;
+
+use crate::model::Mode;
+use twins::Twin;
+
+/// Virtual device clock + memory accounting for one engine run.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    pub twin: Twin,
+    /// accumulated virtual nanoseconds
+    pub virtual_ns: u128,
+    /// device memory budget (bytes) for OOM simulation
+    pub mem_budget: usize,
+}
+
+/// Which kernel family a call belongss to (affects peak + traffic).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// T=1 steps (decode, each draft step): memory-bound.
+    Decode,
+    /// multi-token passes (prefill, verify): compute-leaning.
+    Chunk,
+}
+
+impl CostModel {
+    pub fn new(twin: Twin) -> Self {
+        CostModel { twin, virtual_ns: 0, mem_budget: l20::HBM_BYTES }
+    }
+
+    /// Virtual cost of one forward call.
+    ///
+    /// * `mode` — quantization configuration executed
+    /// * `batch` — sequences in the batch
+    /// * `tokens` — tokens processed per sequence (1 for decode, gamma+1
+    ///   for verify, P for prefill)
+    /// * `ctx` — mean context length attended
+    pub fn call_ns(&self, mode: Mode, phase: Phase, batch: usize, tokens: usize, ctx: usize) -> u128 {
+        Self::ns_for(&self.twin, mode, phase, batch, tokens, ctx)
+    }
+
+    /// Same, for an arbitrary twin (e.g. a draft model on the same device).
+    pub fn ns_for(twin: &Twin, mode: Mode, phase: Phase, batch: usize, tokens: usize, ctx: usize) -> u128 {
+        let p = twin.n_params as f64;
+        let weight_traffic = match mode {
+            // fp16 weights
+            Mode::W16A16 => 2.0 * p,
+            // int4 weights but a dequant pass per matmul: the effective
+            // traffic+compute cost is higher than fp16 in Atom's stack
+            // (calibrated to paper Table 6 ratios: W16A16/W4A16 ~ 1.2).
+            Mode::W4A16 => 2.4 * p,
+            // int4 weights consumed natively by int4 tensor cores, plus
+            // runtime activation-quant + group-scale epilogue overheads
+            // (calibrated to paper Table 6: W4A4/W4A16 ~ 1.8-2.3x)
+            Mode::W4A4 => 1.2 * p,
+        };
+        let kv_traffic = (batch * ctx * twin.kv_bytes_per_token(mode)) as f64
+            * tokens as f64;
+        let mem_ns = (weight_traffic + kv_traffic) / l20::HBM_BW_BYTES_PER_NS;
+
+        let flops = 2.0 * p * (batch * tokens) as f64;
+        let peak = match mode {
+            Mode::W16A16 => l20::FP16_FLOPS_PER_NS * l20::MFU,
+            Mode::W4A16 => l20::FP16_FLOPS_PER_NS * l20::MFU * 0.8, // dequant in-loop
+            Mode::W4A4 => l20::INT4_OPS_PER_NS * l20::MFU,
+        };
+        let comp_ns = flops / peak;
+
+        let roof = match phase {
+            Phase::Decode => mem_ns.max(comp_ns),
+            Phase::Chunk => comp_ns.max(mem_ns * 0.5), // chunked reuse of weights
+        };
+        (roof + l20::LAUNCH_OVERHEAD_NS * twin.n_layers as f64) as u128
+    }
+
+    /// Advance the clock for an executed call.
+    pub fn charge(&mut self, mode: Mode, phase: Phase, batch: usize, tokens: usize, ctx: usize) -> u128 {
+        let ns = self.call_ns(mode, phase, batch, tokens, ctx);
+        self.virtual_ns += ns;
+        ns
+    }
+
+    /// Weight bytes resident on the virtual device.
+    pub fn weight_bytes(&self, mode: Mode) -> usize {
+        match mode {
+            Mode::W16A16 => 2 * self.twin.n_params,
+            // int4 packed + group scales
+            _ => self.twin.n_params / 2 + self.twin.n_params / 64,
+        }
+    }
+
+    /// KV bytes for `batch` sequences of length `ctx`.
+    pub fn kv_bytes(&self, mode: Mode, batch: usize, ctx: usize) -> usize {
+        batch * ctx * self.twin.kv_bytes_per_token(mode)
+    }
+
+    /// Admission check: would this engine configuration fit in device
+    /// memory? Returns Err(QspecError::Oom) when it would not — this is
+    /// how Table 5/7's "OOM" rows reproduce.
+    pub fn check_memory(
+        &self,
+        resident: usize,
+        label: &str,
+    ) -> crate::error::Result<()> {
+        if resident > self.mem_budget {
+            return Err(crate::error::QspecError::Oom(format!(
+                "{label}: {} GiB > {} GiB budget",
+                resident >> 30,
+                self.mem_budget >> 30
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn virtual_seconds(&self) -> f64 {
+        self.virtual_ns as f64 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use twins::Twin;
+
+    fn cm() -> CostModel {
+        CostModel::new(Twin::lookup("llama2-7b"))
+    }
+
+    #[test]
+    fn decode_mode_ordering_matches_paper() {
+        // paper Table 6: throughput W4A4 > W16A16 > W4A16 at fixed batch
+        let c = cm();
+        let t = |m| c.call_ns(m, Phase::Decode, 16, 1, 512);
+        assert!(t(Mode::W4A4) < t(Mode::W16A16), "w4a4 must be fastest");
+        assert!(t(Mode::W16A16) < t(Mode::W4A16), "fp16 beats awq in Atom's stack");
+    }
+
+    #[test]
+    fn w4a4_vs_w4a16_decode_ratio_near_paper() {
+        // paper Table 6 (7B): W4A4/W4A16 throughput ratio ~ 1.9-2.3x
+        let c = cm();
+        let r = c.call_ns(Mode::W4A16, Phase::Decode, 16, 1, 512) as f64
+            / c.call_ns(Mode::W4A4, Phase::Decode, 16, 1, 512) as f64;
+        assert!(r > 1.5 && r < 3.5, "ratio {r}");
+    }
+
+    #[test]
+    fn verify_cheaper_than_gamma_decodes() {
+        // parallel verification of gamma+1 tokens must cost well under
+        // gamma+1 sequential decode steps (the speculative-decoding win)
+        let c = cm();
+        let verify = c.call_ns(Mode::W4A16, Phase::Chunk, 8, 4, 512);
+        let decodes = 4 * c.call_ns(Mode::W4A16, Phase::Decode, 8, 1, 512);
+        assert!(verify < decodes / 2, "{verify} vs {decodes}");
+    }
+
+    #[test]
+    fn charge_accumulates() {
+        let mut c = cm();
+        let a = c.charge(Mode::W4A4, Phase::Decode, 8, 1, 128);
+        let b = c.charge(Mode::W4A4, Phase::Decode, 8, 1, 128);
+        assert_eq!(c.virtual_ns, a + b);
+    }
+
+    #[test]
+    fn quantized_weights_quarter_size() {
+        let c = cm();
+        let fp = c.weight_bytes(Mode::W16A16);
+        let q = c.weight_bytes(Mode::W4A16);
+        assert!(q * 3 < fp, "{q} vs {fp}");
+    }
+
+    #[test]
+    fn memory_check_oom() {
+        let c = cm();
+        assert!(c.check_memory(c.mem_budget + 1, "x").is_err());
+        assert!(c.check_memory(c.mem_budget - 1, "x").is_ok());
+    }
+}

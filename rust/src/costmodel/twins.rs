@@ -1,0 +1,107 @@
+//! Paper-twin model descriptions: each local config (s/m/l/xl) is mapped
+//! to the Llama model the paper evaluated, so virtual-time throughput is
+//! reported at paper scale (DESIGN.md §3 substitution table).
+
+use crate::model::Mode;
+
+/// Architecture card of a paper-scale model.
+#[derive(Clone, Debug)]
+pub struct Twin {
+    pub name: &'static str,
+    pub n_params: usize,
+    pub n_layers: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+}
+
+impl Twin {
+    /// KV bytes per token per sequence. A16 caches are fp16; the W4A4
+    /// baseline (Atom) also quantizes KV to int4. QSPEC always keeps the
+    /// A16 cache (the KV-overwriting design), so engines pass the mode
+    /// they *store* with.
+    pub fn kv_bytes_per_token(&self, mode: Mode) -> usize {
+        let elems = self.n_layers * 2 * self.n_kv_heads * self.head_dim;
+        match mode {
+            Mode::W4A4 => elems / 2, // int4 KV
+            _ => elems * 2,          // fp16 KV
+        }
+    }
+
+    pub fn lookup(name: &str) -> Twin {
+        match name {
+            "llama3.2-3b" => Twin {
+                name: "llama3.2-3b",
+                n_params: 3_210_000_000,
+                n_layers: 28,
+                n_kv_heads: 8,
+                head_dim: 128,
+            },
+            "llama2-7b" => Twin {
+                name: "llama2-7b",
+                n_params: 6_740_000_000,
+                n_layers: 32,
+                n_kv_heads: 32,
+                head_dim: 128,
+            },
+            "llama3-8b" => Twin {
+                name: "llama3-8b",
+                n_params: 8_030_000_000,
+                n_layers: 32,
+                n_kv_heads: 8,
+                head_dim: 128,
+            },
+            "llama2-13b" => Twin {
+                name: "llama2-13b",
+                n_params: 13_000_000_000,
+                n_layers: 40,
+                n_kv_heads: 40,
+                head_dim: 128,
+            },
+            // EAGLE draft head: ~1 decoder layer + lm head over 7B dims
+            "eagle-head" => Twin {
+                name: "eagle-head",
+                n_params: 440_000_000,
+                n_layers: 1,
+                n_kv_heads: 32,
+                head_dim: 128,
+            },
+            // local tiny config for tests
+            _ => Twin {
+                name: "llama-1b",
+                n_params: 1_100_000_000,
+                n_layers: 16,
+                n_kv_heads: 8,
+                head_dim: 128,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twins_scale_monotonically() {
+        let sizes = ["llama3.2-3b", "llama2-7b", "llama3-8b", "llama2-13b"];
+        let params: Vec<usize> = sizes.iter().map(|s| Twin::lookup(s).n_params).collect();
+        assert!(params.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn gqa_models_have_smaller_kv() {
+        // llama3-8b (GQA, 8 kv heads) < llama2-7b (MHA, 32 kv heads)
+        let gqa = Twin::lookup("llama3-8b").kv_bytes_per_token(Mode::W4A16);
+        let mha = Twin::lookup("llama2-7b").kv_bytes_per_token(Mode::W4A16);
+        assert!(gqa < mha);
+    }
+
+    #[test]
+    fn int4_kv_half_of_fp16_quarter() {
+        let t = Twin::lookup("llama2-7b");
+        assert_eq!(
+            t.kv_bytes_per_token(Mode::W4A4) * 4,
+            t.kv_bytes_per_token(Mode::W4A16)
+        );
+    }
+}

@@ -1,0 +1,43 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// All errors surfaced by the qspec library.
+#[derive(Error, Debug)]
+pub enum QspecError {
+    /// PJRT / XLA runtime failures (compile, execute, transfer).
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// Artifact loading problems (missing files, bad manifest, QTNS).
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// JSON parse errors from the hand-rolled parser.
+    #[error("json: {0} at byte {1}")]
+    Json(String, usize),
+
+    /// Scheduler invariant violations (bugs, not user errors).
+    #[error("scheduler invariant: {0}")]
+    Scheduler(String),
+
+    /// Simulated out-of-memory under the cost-model device budget
+    /// (Table 5/7 reproduce EAGLE's OOM at batch 16 through this).
+    #[error("device OOM (simulated): {0}")]
+    Oom(String),
+
+    /// Configuration / CLI errors.
+    #[error("config: {0}")]
+    Config(String),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for QspecError {
+    fn from(e: xla::Error) -> Self {
+        QspecError::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, QspecError>;

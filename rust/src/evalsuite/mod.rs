@@ -1,0 +1,180 @@
+//! Fidelity evaluation: exact-match on the synthetic task suite and
+//! perplexity on held-out text — the machinery behind Tables 1/3 and
+//! Figure 6.
+//!
+//! Generation runs through the *serving engines themselves* (the same
+//! code path as the throughput benches), so fidelity numbers reflect the
+//! deployed system, not an offline scorer.
+
+use std::path::Path;
+
+use crate::coordinator::{ArEngine, QSpecEngine};
+use crate::error::{QspecError, Result};
+use crate::model::Tokenizer;
+use crate::runtime::Session;
+use crate::util::json::Json;
+
+/// One eval example.
+#[derive(Clone, Debug)]
+pub struct EvalItem {
+    pub prompt: String,
+    pub completion: String,
+    pub answer: String,
+}
+
+/// Load an eval set exported by the AOT step.
+pub fn load_eval(path: &Path) -> Result<Vec<EvalItem>> {
+    let text = std::fs::read_to_string(path)?;
+    let j = Json::parse(&text)?;
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| QspecError::Artifact("eval: not an array".into()))?;
+    arr.iter()
+        .map(|it| {
+            Ok(EvalItem {
+                prompt: it.req_str("prompt")?.to_string(),
+                completion: it.req_str("completion")?.to_string(),
+                answer: it.req_str("answer")?.to_string(),
+            })
+        })
+        .collect()
+}
+
+/// Extract the final answer from generated text ("... a: X\n").
+pub fn extract_answer(text: &str) -> Option<&str> {
+    let idx = text.rfind("a: ")?;
+    let rest = &text[idx + 3..];
+    Some(rest.split('\n').next().unwrap_or(rest).trim_end())
+}
+
+/// Exact-match over generations: fraction where the extracted answer
+/// equals the gold answer.
+pub fn exact_match(golds: &[&str], generations: &[String]) -> f64 {
+    if golds.is_empty() {
+        return 0.0;
+    }
+    let hits = golds
+        .iter()
+        .zip(generations)
+        .filter(|(g, t)| extract_answer(t).map(|a| a == **g).unwrap_or(false))
+        .count();
+    hits as f64 / golds.len() as f64
+}
+
+/// Run a task's eval set through a QSPEC engine; returns (EM, generations).
+pub fn eval_qspec(
+    engine: &mut QSpecEngine,
+    tok: &Tokenizer,
+    items: &[EvalItem],
+    max_tokens: usize,
+) -> Result<(f64, Vec<String>)> {
+    for it in items {
+        engine.submit(tok.encode_prompt(&it.prompt), max_tokens);
+    }
+    let mut fins = engine.run_to_completion()?;
+    fins.sort_by_key(|f| f.id);
+    let gens: Vec<String> = fins.iter().map(|f| tok.decode(&f.tokens)).collect();
+    let golds: Vec<&str> = items.iter().map(|i| i.answer.as_str()).collect();
+    Ok((exact_match(&golds, &gens), gens))
+}
+
+/// Run a task's eval set through an AR baseline engine.
+pub fn eval_ar(
+    engine: &mut ArEngine,
+    tok: &Tokenizer,
+    items: &[EvalItem],
+    max_tokens: usize,
+) -> Result<(f64, Vec<String>)> {
+    for it in items {
+        engine.submit(tok.encode_prompt(&it.prompt), max_tokens);
+    }
+    let mut fins = engine.run_to_completion()?;
+    fins.sort_by_key(|f| f.id);
+    let gens: Vec<String> = fins.iter().map(|f| tok.decode(&f.tokens)).collect();
+    let golds: Vec<&str> = items.iter().map(|i| i.answer.as_str()).collect();
+    Ok((exact_match(&golds, &gens), gens))
+}
+
+/// Perplexity over the held-out text rows via the `score` entry.
+pub fn perplexity(
+    sess: &Session,
+    size: &str,
+    scheme: &str,
+    mode: &str,
+    rows_path: &Path,
+) -> Result<f64> {
+    let text = std::fs::read_to_string(rows_path)?;
+    let j = Json::parse(&text)?;
+    let rows = j
+        .as_arr()
+        .ok_or_else(|| QspecError::Artifact("ppl rows".into()))?;
+    // find the score module's batch from the manifest
+    let meta = sess
+        .store
+        .manifest
+        .modules
+        .iter()
+        .find(|m| m.size == size && m.scheme == scheme && m.mode == mode && m.entry == "score")
+        .ok_or_else(|| QspecError::Artifact(format!("no score module for {size}/{scheme}/{mode}")))?
+        .clone();
+    let module = sess.module(size, scheme, mode, "score", meta.batch, 0)?;
+    let weights = sess.weights(&meta.weights_key)?;
+    let b = meta.batch;
+    let cols = sess.store.manifest.score_t + 1;
+
+    let mut nll_total = 0f64;
+    let mut cnt_total = 0f64;
+    let mut batch_rows: Vec<i32> = Vec::with_capacity(b * cols);
+    let mut in_batch = 0usize;
+    for row in rows {
+        let ids = row
+            .as_arr()
+            .ok_or_else(|| QspecError::Artifact("ppl row".into()))?;
+        if ids.len() != cols {
+            return Err(QspecError::Artifact(format!(
+                "ppl row len {} != {cols}",
+                ids.len()
+            )));
+        }
+        batch_rows.extend(ids.iter().map(|v| v.as_i64().unwrap_or(0) as i32));
+        in_batch += 1;
+        if in_batch == b {
+            let out = module.call_score(&batch_rows, b, &weights)?;
+            nll_total += out.nll.iter().map(|&x| x as f64).sum::<f64>();
+            cnt_total += out.cnt.iter().map(|&x| x as f64).sum::<f64>();
+            batch_rows.clear();
+            in_batch = 0;
+        }
+    }
+    // drop any ragged tail (mirrors the paper's fixed-batch scoring)
+    if cnt_total == 0.0 {
+        return Err(QspecError::Artifact("no complete ppl batches".into()));
+    }
+    Ok((nll_total / cnt_total).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extract_answer_finds_last() {
+        assert_eq!(extract_answer("s: x m\na: m\n"), Some("m"));
+        assert_eq!(extract_answer("a: [1,2]\n"), Some("[1,2]"));
+        assert_eq!(extract_answer("no answer here"), None);
+        // picks the LAST a: marker
+        assert_eq!(extract_answer("a: wrong\nq: ...\na: right\n"), Some("right"));
+    }
+
+    #[test]
+    fn exact_match_counts() {
+        let golds = vec!["m", "z"];
+        let gens = vec!["s: x m\na: m\n".to_string(), "a: q\n".to_string()];
+        assert!((exact_match(&golds, &gens) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exact_match_empty() {
+        assert_eq!(exact_match(&[], &[]), 0.0);
+    }
+}

@@ -1,0 +1,291 @@
+//! KV-cache slot manager.
+//!
+//! The physical cache is one device-resident tensor [L,2,B,Hkv,S,hd]
+//! owned by the engine; this module owns the *logical* state: which slot
+//! holds which request, per-slot write positions / left-pad starts, and
+//! the memory accounting used for admission control (and the simulated
+//! paper-scale OOM checks, costmodel/).
+//!
+//! Continuous batching (ORCA-style): a finished slot is released and the
+//! next queued request is admitted into it immediately; other slots are
+//! untouched (their positions are per-slot).
+
+use crate::error::{QspecError, Result};
+
+/// Logical state of one batch slot.
+#[derive(Clone, Debug, Default)]
+pub struct Slot {
+    /// request id occupying this slot (None = idle).
+    pub req_id: Option<u64>,
+    /// write index of the pending token (committed length incl. pads).
+    pub pos: i32,
+    /// left-pad offset of this request's prompt.
+    pub start: i32,
+    /// pending token (its K/V not yet in the cache).
+    pub pending: i32,
+    /// generated (committed) tokens so far.
+    pub generated: Vec<i32>,
+    /// generation budget.
+    pub max_tokens: usize,
+    /// set when EOS committed or budget exhausted.
+    pub done: bool,
+}
+
+/// Slot table + admission bookkeeping for one engine.
+#[derive(Debug)]
+pub struct SlotManager {
+    slots: Vec<Slot>,
+    /// max usable cache length (writes must stay < max_seq).
+    max_seq: usize,
+    /// prompt chunk length (all prompts are left-padded to this).
+    prefill_t: usize,
+}
+
+impl SlotManager {
+    pub fn new(batch: usize, max_seq: usize, prefill_t: usize) -> Self {
+        SlotManager {
+            slots: vec![Slot::default(); batch],
+            max_seq,
+            prefill_t,
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn slot(&self, i: usize) -> &Slot {
+        &self.slots[i]
+    }
+
+    pub fn slot_mut(&mut self, i: usize) -> &mut Slot {
+        &mut self.slots[i]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (usize, &Slot)> {
+        self.slots.iter().enumerate()
+    }
+
+    /// Indices of idle slots (free for admission).
+    pub fn free_slots(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.req_id.is_none())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Indices of active (occupied, not done) slots.
+    pub fn active_slots(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.req_id.is_some() && !s.done)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn any_active(&self) -> bool {
+        self.slots.iter().any(|s| s.req_id.is_some() && !s.done)
+    }
+
+    /// Admit a request into a free slot: returns the slot index.
+    /// `prompt_len` must fit the prefill chunk.
+    pub fn admit(&mut self, req_id: u64, prompt_len: usize, max_tokens: usize) -> Result<usize> {
+        if prompt_len == 0 || prompt_len > self.prefill_t {
+            return Err(QspecError::Scheduler(format!(
+                "prompt len {prompt_len} outside 1..={}",
+                self.prefill_t
+            )));
+        }
+        let idx = self
+            .free_slots()
+            .first()
+            .copied()
+            .ok_or_else(|| QspecError::Scheduler("no free slot".into()))?;
+        let s = &mut self.slots[idx];
+        *s = Slot {
+            req_id: Some(req_id),
+            pos: 0,
+            start: (self.prefill_t - prompt_len) as i32,
+            pending: 0,
+            generated: Vec::new(),
+            max_tokens,
+            done: false,
+        };
+        Ok(idx)
+    }
+
+    /// Record the prefill result: the returned token is the *first
+    /// generated token* — committed immediately (its K/V will be written
+    /// when it is fed as the pending token). Returns done.
+    pub fn after_prefill(&mut self, idx: usize, next_tok: i32, eos: i32) -> bool {
+        let prefill_t = self.prefill_t as i32;
+        let s = &mut self.slots[idx];
+        s.pos = prefill_t;
+        s.pending = next_tok;
+        s.generated.push(next_tok);
+        if next_tok == eos || s.generated.len() >= s.max_tokens {
+            s.done = true;
+        }
+        s.done
+    }
+
+    /// Commit `toks` (already verified/sampled) for slot `idx`; the last
+    /// committed token becomes the new pending token. Returns the tokens
+    /// actually committed (truncated at EOS / budget / seq limit).
+    pub fn commit(&mut self, idx: usize, toks: &[i32], eos: i32, gamma: usize) -> Vec<i32> {
+        // cache headroom: pending writes at pos, next cycle needs pos+gamma
+        let max_seq = self.max_seq;
+        let s = &mut self.slots[idx];
+        let mut committed = Vec::new();
+        for (j, &t) in toks.iter().enumerate() {
+            s.generated.push(t);
+            committed.push(t);
+            s.pos += 1; // K/V of the previously pending token is now canonical
+            if t == eos || s.generated.len() >= s.max_tokens {
+                s.done = true;
+                // drop unprocessed tail
+                let _ = j;
+                break;
+            }
+        }
+        if !s.done {
+            s.pending = *committed.last().expect("commit of empty token list");
+            if (s.pos as usize) + gamma + 2 >= max_seq {
+                s.done = true; // out of cache headroom
+            }
+        }
+        committed
+    }
+
+    /// Release a finished slot; returns (req_id, generated tokens).
+    pub fn release(&mut self, idx: usize) -> Option<(u64, Vec<i32>)> {
+        let s = &mut self.slots[idx];
+        let id = s.req_id.take()?;
+        let toks = std::mem::take(&mut s.generated);
+        s.done = false;
+        Some((id, toks))
+    }
+
+    /// Per-slot committed context length (tokens attended, incl. pads).
+    pub fn context_len(&self, idx: usize) -> usize {
+        self.slots[idx].pos as usize
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    pub fn prefill_t(&self) -> usize {
+        self.prefill_t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr() -> SlotManager {
+        SlotManager::new(4, 64, 16)
+    }
+
+    #[test]
+    fn admit_fills_free_slots_in_order() {
+        let mut m = mgr();
+        assert_eq!(m.admit(1, 5, 10).unwrap(), 0);
+        assert_eq!(m.admit(2, 5, 10).unwrap(), 1);
+        assert_eq!(m.free_slots(), vec![2, 3]);
+        assert_eq!(m.slot(0).start, 11);
+    }
+
+    #[test]
+    fn admit_rejects_oversized_prompt() {
+        let mut m = mgr();
+        assert!(m.admit(1, 17, 10).is_err());
+        assert!(m.admit(1, 0, 10).is_err());
+    }
+
+    #[test]
+    fn admit_when_full_errors() {
+        let mut m = mgr();
+        for i in 0..4 {
+            m.admit(i, 4, 4).unwrap();
+        }
+        assert!(m.admit(9, 4, 4).is_err());
+    }
+
+    #[test]
+    fn prefill_commits_first_token() {
+        let mut m = mgr();
+        let i = m.admit(1, 4, 10).unwrap();
+        assert!(!m.after_prefill(i, 42, 2));
+        assert_eq!(m.slot(i).pos, 16);
+        assert_eq!(m.slot(i).generated, vec![42]);
+        assert_eq!(m.slot(i).pending, 42);
+    }
+
+    #[test]
+    fn prefill_eos_finishes_immediately() {
+        let mut m = mgr();
+        let i = m.admit(1, 4, 10).unwrap();
+        assert!(m.after_prefill(i, 2, 2));
+    }
+
+    #[test]
+    fn commit_advances_pos_and_sets_pending() {
+        let mut m = mgr();
+        let i = m.admit(1, 4, 10).unwrap();
+        m.after_prefill(i, 42, 2);
+        let c = m.commit(i, &[43, 44], 2, 3);
+        assert_eq!(c, vec![43, 44]);
+        assert_eq!(m.slot(i).pos, 18);
+        assert_eq!(m.slot(i).pending, 44);
+        assert_eq!(m.slot(i).generated, vec![42, 43, 44]);
+        assert!(!m.slot(i).done);
+    }
+
+    #[test]
+    fn commit_stops_at_eos() {
+        let mut m = mgr();
+        let i = m.admit(1, 4, 10).unwrap();
+        m.after_prefill(i, 5, 2);
+        let c = m.commit(i, &[6, 2, 9], 2, 3);
+        assert_eq!(c, vec![6, 2]); // 9 discarded after EOS
+        assert!(m.slot(i).done);
+    }
+
+    #[test]
+    fn commit_stops_at_budget() {
+        let mut m = mgr();
+        let i = m.admit(1, 4, 3).unwrap();
+        m.after_prefill(i, 5, 2);
+        let c = m.commit(i, &[6, 7, 8], 2, 3);
+        assert_eq!(c, vec![6, 7]); // budget 3 incl. prefill token
+        assert!(m.slot(i).done);
+    }
+
+    #[test]
+    fn commit_stops_at_seq_limit() {
+        let mut m = SlotManager::new(1, 22, 16);
+        let i = m.admit(1, 4, 100).unwrap();
+        m.after_prefill(i, 5, 2);
+        let _ = m.commit(i, &[6], 2, 3);
+        // pos = 17, 17 + 3 + 2 >= 22 -> done
+        assert!(m.slot(i).done);
+    }
+
+    #[test]
+    fn release_returns_tokens_and_frees() {
+        let mut m = mgr();
+        let i = m.admit(7, 4, 10).unwrap();
+        m.after_prefill(i, 5, 2);
+        m.commit(i, &[6, 2], 2, 3);
+        let (id, toks) = m.release(i).unwrap();
+        assert_eq!(id, 7);
+        assert_eq!(toks, vec![5, 6, 2]);
+        assert!(m.free_slots().contains(&i));
+        assert!(m.release(i).is_none());
+    }
+}

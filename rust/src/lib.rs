@@ -1,0 +1,34 @@
+//! # QSPEC — Speculative Decoding with Complementary Quantization Schemes
+//!
+//! Rust reproduction of the EMNLP 2025 paper (Zhao et al.): a serving
+//! coordinator in which a single weight-quantized model drafts tokens
+//! under W4A4 activation quantization and verifies them in parallel under
+//! W4A16, sharing weights and KV cache with near-zero switching cost.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L3 (this crate)** — request router, FCFS queue, continuous batcher,
+//!   speculative scheduler with KV-overwriting, AR + EAGLE baselines,
+//!   L20 roofline cost model, metrics, workloads, TCP server.
+//! * **L2/L1 (python/, build-time only)** — JAX transformer + Pallas
+//!   quantization kernels, AOT-lowered to HLO text under `artifacts/`.
+//!
+//! The request path is pure rust: `runtime` loads the AOT artifacts onto
+//! the PJRT CPU client once; weights and KV caches stay device-resident.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod error;
+pub mod evalsuite;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sampler;
+pub mod server;
+pub mod util;
+pub mod workload;
+
+pub use error::{QspecError, Result};

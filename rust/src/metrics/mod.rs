@@ -1,0 +1,208 @@
+//! Serving metrics: per-phase wall/virtual timers, acceptance counters,
+//! request latency tracking, and report emission (paper figures 4/5 and
+//! the throughput tables are computed from these).
+
+use std::time::Instant;
+
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::stats::{LogHistogram, Summary};
+
+/// Phases of the speculative serving loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PhaseKind {
+    Prefill,
+    Draft,
+    Verify,
+    Decode,
+    Host,
+}
+
+impl PhaseKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PhaseKind::Prefill => "prefill",
+            PhaseKind::Draft => "draft",
+            PhaseKind::Verify => "verify",
+            PhaseKind::Decode => "decode",
+            PhaseKind::Host => "host",
+        }
+    }
+
+    const ALL: [PhaseKind; 5] = [
+        PhaseKind::Prefill,
+        PhaseKind::Draft,
+        PhaseKind::Verify,
+        PhaseKind::Decode,
+        PhaseKind::Host,
+    ];
+}
+
+/// Aggregated engine metrics for one run.
+#[derive(Clone, Debug, Default)]
+pub struct EngineMetrics {
+    /// wall ns per phase
+    pub wall_ns: [u128; 5],
+    /// virtual (cost-model) ns per phase
+    pub virt_ns: [u128; 5],
+    /// calls per phase
+    pub calls: [u64; 5],
+    /// tokens drafted / accepted / committed (incl. bonus)
+    pub drafted: u64,
+    pub accepted: u64,
+    pub committed: u64,
+    /// finished requests + generated token total
+    pub requests_done: u64,
+    pub tokens_out: u64,
+    /// per-request end-to-end latency (wall ns)
+    pub req_latency: LogHistogram,
+    /// per-cycle accepted-length summary
+    pub accept_len: Summary,
+}
+
+impl EngineMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn idx(p: PhaseKind) -> usize {
+        PhaseKind::ALL.iter().position(|&x| x == p).unwrap()
+    }
+
+    pub fn add_phase(&mut self, p: PhaseKind, wall_ns: u128, virt_ns: u128) {
+        let i = Self::idx(p);
+        self.wall_ns[i] += wall_ns;
+        self.virt_ns[i] += virt_ns;
+        self.calls[i] += 1;
+    }
+
+    pub fn wall_total_ns(&self) -> u128 {
+        self.wall_ns.iter().sum()
+    }
+
+    pub fn virt_total_ns(&self) -> u128 {
+        self.virt_ns.iter().sum()
+    }
+
+    /// Token acceptance rate (accepted drafts / drafted).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            return 0.0;
+        }
+        self.accepted as f64 / self.drafted as f64
+    }
+
+    /// Wall-clock generation throughput (token/s).
+    pub fn wall_tokens_per_s(&self) -> f64 {
+        let t = self.wall_total_ns();
+        if t == 0 {
+            return 0.0;
+        }
+        self.tokens_out as f64 * 1e9 / t as f64
+    }
+
+    /// Virtual (paper-scale) throughput (token/s).
+    pub fn virt_tokens_per_s(&self) -> f64 {
+        let t = self.virt_total_ns();
+        if t == 0 {
+            return 0.0;
+        }
+        self.tokens_out as f64 * 1e9 / t as f64
+    }
+
+    /// Per-valid-token latency decomposition (fig 4): (phase, wall ns/token,
+    /// virtual ns/token).
+    pub fn per_token_decomposition(&self) -> Vec<(&'static str, f64, f64)> {
+        let toks = self.tokens_out.max(1) as f64;
+        PhaseKind::ALL
+            .iter()
+            .map(|&p| {
+                let i = Self::idx(p);
+                (p.name(), self.wall_ns[i] as f64 / toks, self.virt_ns[i] as f64 / toks)
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let phases = PhaseKind::ALL
+            .iter()
+            .map(|&p| {
+                let i = Self::idx(p);
+                obj(vec![
+                    ("phase", s(p.name())),
+                    ("wall_ns", num(self.wall_ns[i] as f64)),
+                    ("virt_ns", num(self.virt_ns[i] as f64)),
+                    ("calls", num(self.calls[i] as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("phases", arr(phases)),
+            ("drafted", num(self.drafted as f64)),
+            ("accepted", num(self.accepted as f64)),
+            ("committed", num(self.committed as f64)),
+            ("requests_done", num(self.requests_done as f64)),
+            ("tokens_out", num(self.tokens_out as f64)),
+            ("acceptance_rate", num(self.acceptance_rate())),
+            ("wall_tok_s", num(self.wall_tokens_per_s())),
+            ("virt_tok_s", num(self.virt_tokens_per_s())),
+            ("latency_p50_ns", num(self.req_latency.percentile(50.0) as f64)),
+            ("latency_p99_ns", num(self.req_latency.percentile(99.0) as f64)),
+        ])
+    }
+}
+
+/// Scoped phase timer.
+pub struct PhaseTimer {
+    start: Instant,
+}
+
+impl PhaseTimer {
+    pub fn start() -> Self {
+        PhaseTimer { start: Instant::now() }
+    }
+
+    pub fn elapsed_ns(&self) -> u128 {
+        self.start.elapsed().as_nanos()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acceptance_rate() {
+        let mut m = EngineMetrics::new();
+        m.drafted = 10;
+        m.accepted = 8;
+        assert!((m.acceptance_rate() - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_from_phases() {
+        let mut m = EngineMetrics::new();
+        m.add_phase(PhaseKind::Draft, 500_000_000, 1_000_000);
+        m.add_phase(PhaseKind::Verify, 500_000_000, 1_000_000);
+        m.tokens_out = 100;
+        assert!((m.wall_tokens_per_s() - 100.0).abs() < 1e-6);
+        assert!((m.virt_tokens_per_s() - 50_000.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn decomposition_covers_phases() {
+        let mut m = EngineMetrics::new();
+        m.tokens_out = 10;
+        m.add_phase(PhaseKind::Draft, 100, 200);
+        let d = m.per_token_decomposition();
+        assert_eq!(d.len(), 5);
+        assert_eq!(d[1].0, "draft");
+        assert!((d[1].1 - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_has_expected_fields() {
+        let j = EngineMetrics::new().to_json();
+        assert!(j.get("acceptance_rate").is_some());
+        assert!(j.get("phases").unwrap().as_arr().unwrap().len() == 5);
+    }
+}

@@ -1,0 +1,55 @@
+//! Model-side runtime pieces: the shared tokenizer and quantization-mode
+//! vocabulary of the serving stack.
+
+pub mod tokenizer;
+
+pub use tokenizer::Tokenizer;
+
+/// Activation/weight precision modes (the paper's quantization schemes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Mode {
+    /// fp weights + fp activations (FP16 on the paper's hardware).
+    W16A16,
+    /// int4 weights, fp activations — the *verify* precision.
+    W4A16,
+    /// int4 weights + int4 activations — the *draft* precision.
+    W4A4,
+}
+
+impl Mode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Mode::W16A16 => "w16a16",
+            Mode::W4A16 => "w4a16",
+            Mode::W4A4 => "w4a4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Mode> {
+        match s {
+            "w16a16" => Some(Mode::W16A16),
+            "w4a16" => Some(Mode::W4A16),
+            "w4a4" => Some(Mode::W4A4),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Mode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_roundtrip() {
+        for m in [Mode::W16A16, Mode::W4A16, Mode::W4A4] {
+            assert_eq!(Mode::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(Mode::parse("w2a2"), None);
+    }
+}

@@ -1,0 +1,121 @@
+//! Char-level tokenizer, loaded from artifacts/tokenizer.json (the same
+//! vocabulary python/compile/tokenizer.py trains and exports with).
+
+use std::path::Path;
+
+use crate::error::{QspecError, Result};
+use crate::util::json::Json;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+
+/// Bidirectional char <-> id map.
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    pub vocab: usize,
+    id2char: Vec<char>,     // index = id - 3
+    char2id: Vec<i32>,      // indexed by u8
+    space_id: i32,
+}
+
+impl Tokenizer {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)?;
+        let alphabet = j.req_str("alphabet")?;
+        let vocab = j.req_usize("vocab")?;
+        Self::from_alphabet(alphabet, vocab)
+    }
+
+    pub fn from_alphabet(alphabet: &str, vocab: usize) -> Result<Self> {
+        let id2char: Vec<char> = alphabet.chars().collect();
+        if id2char.len() + 3 != vocab {
+            return Err(QspecError::Artifact(format!(
+                "tokenizer vocab mismatch: {} + 3 != {vocab}",
+                id2char.len()
+            )));
+        }
+        let mut char2id = vec![-1i32; 256];
+        for (i, c) in id2char.iter().enumerate() {
+            char2id[*c as usize] = i as i32 + 3;
+        }
+        let space_id = char2id[b' ' as usize];
+        Ok(Tokenizer { vocab, id2char, char2id, space_id })
+    }
+
+    /// Encode a *prompt* for generation: BOS + chars (the training
+    /// stream always opens examples with BOS, so serving must too).
+    pub fn encode_prompt(&self, text: &str) -> Vec<i32> {
+        let mut v = vec![BOS];
+        v.extend(self.encode(text));
+        v
+    }
+
+    /// Encode; unknown chars map to space (mirrors python).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.chars()
+            .map(|c| {
+                if (c as usize) < 256 && self.char2id[c as usize] >= 0 {
+                    self.char2id[c as usize]
+                } else {
+                    self.space_id
+                }
+            })
+            .collect()
+    }
+
+    /// Decode, dropping special ids.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter_map(|&i| {
+                let idx = i as isize - 3;
+                if idx >= 0 && (idx as usize) < self.id2char.len() {
+                    Some(self.id2char[idx as usize])
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+
+    pub fn is_special(&self, id: i32) -> bool {
+        id < 3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALPHA: &str =
+        "abcdefghijklmnopqrstuvwxyz0123456789 \n+-*=?:;,.()<>[]|&%$#@!_";
+
+    fn tk() -> Tokenizer {
+        Tokenizer::from_alphabet(ALPHA, 64).unwrap()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = tk();
+        let s = "q: g xyx ?\ns: x m\na: m\n";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn unknown_becomes_space() {
+        let t = tk();
+        assert_eq!(t.decode(&t.encode("a\tb")), "a b");
+    }
+
+    #[test]
+    fn specials_dropped_on_decode() {
+        let t = tk();
+        assert_eq!(t.decode(&[BOS, 3, EOS, PAD]), "a");
+    }
+
+    #[test]
+    fn vocab_mismatch_rejected() {
+        assert!(Tokenizer::from_alphabet("abc", 64).is_err());
+    }
+}

@@ -1,0 +1,222 @@
+//! Artifact manifest: the contract between python/compile/aot.py and this
+//! runtime (module names, entry kinds, weight files, parameter order).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::error::{QspecError, Result};
+use crate::util::json::Json;
+
+/// Architecture metadata of one exported model size.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+    pub n_params: usize,
+    pub paper_twin: String,
+}
+
+impl ModelMeta {
+    /// KV cache tensor shape for a batch (matches python model.kv_shape).
+    pub fn kv_dims(&self, batch: usize) -> [usize; 6] {
+        [self.n_layers, 2, batch, self.n_kv_heads, self.max_seq, self.head_dim]
+    }
+
+    /// KV bytes per token per sequence on this (local) substrate (f32).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.n_layers * 2 * self.n_kv_heads * self.head_dim * 4
+    }
+}
+
+/// One AOT-exported HLO module.
+#[derive(Clone, Debug)]
+pub struct ModuleMeta {
+    pub name: String,
+    pub entry: String, // prefill | decode | draft | verify | score
+    pub size: String,
+    pub scheme: String,
+    pub mode: String,
+    pub batch: usize,
+    pub gamma: usize,
+    pub hlo_path: PathBuf,
+    pub weights_key: String,
+    pub n_weights: usize,
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub group: usize,
+    pub n_outlier: usize,
+    pub gamma_default: usize,
+    pub prefill_t: usize,
+    pub score_t: usize,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub modules: Vec<ModuleMeta>,
+    pub weight_files: BTreeMap<String, PathBuf>,
+}
+
+/// Root handle over the artifacts directory.
+pub struct ArtifactStore {
+    pub root: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl ArtifactStore {
+    pub fn open(root: &Path) -> Result<Self> {
+        let mpath = root.join("manifest.json");
+        let text = fs::read_to_string(&mpath).map_err(|e| {
+            QspecError::Artifact(format!(
+                "{} missing ({e}); run `make artifacts` first",
+                mpath.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+        let manifest = parse_manifest(&j, root)?;
+        Ok(ArtifactStore { root: root.to_path_buf(), manifest })
+    }
+
+    pub fn model(&self, size: &str) -> Result<&ModelMeta> {
+        self.manifest
+            .models
+            .get(size)
+            .ok_or_else(|| QspecError::Artifact(format!("unknown model size {size}")))
+    }
+
+    /// Find a module by coordinates.
+    pub fn find_module(
+        &self,
+        size: &str,
+        scheme: &str,
+        mode: &str,
+        entry: &str,
+        batch: usize,
+        gamma: usize,
+    ) -> Result<&ModuleMeta> {
+        self.manifest
+            .modules
+            .iter()
+            .find(|m| {
+                m.size == size
+                    && m.scheme == scheme
+                    && m.mode == mode
+                    && m.entry == entry
+                    && m.batch == batch
+                    && (m.gamma == gamma || !matches!(m.entry.as_str(), "draft" | "verify"))
+            })
+            .ok_or_else(|| {
+                QspecError::Artifact(format!(
+                    "no module {size}/{scheme}/{mode}/{entry} b{batch} g{gamma} \
+                     in manifest (re-run `make artifacts`)"
+                ))
+            })
+    }
+
+    pub fn tokenizer_path(&self) -> PathBuf {
+        self.root.join("tokenizer.json")
+    }
+
+    pub fn eval_path(&self, task: &str) -> PathBuf {
+        self.root.join("eval").join(format!("{task}.json"))
+    }
+
+    pub fn workload_path(&self, ds: &str) -> PathBuf {
+        self.root.join("workloads").join(format!("{ds}.json"))
+    }
+}
+
+fn parse_manifest(j: &Json, root: &Path) -> Result<Manifest> {
+    let models_j = j
+        .get("models")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| QspecError::Artifact("manifest: models".into()))?;
+    let mut models = BTreeMap::new();
+    for (name, m) in models_j {
+        models.insert(
+            name.clone(),
+            ModelMeta {
+                name: name.clone(),
+                d_model: m.req_usize("d_model")?,
+                n_layers: m.req_usize("n_layers")?,
+                n_heads: m.req_usize("n_heads")?,
+                n_kv_heads: m.req_usize("n_kv_heads")?,
+                d_ff: m.req_usize("d_ff")?,
+                vocab: m.req_usize("vocab")?,
+                max_seq: m.req_usize("max_seq")?,
+                head_dim: m.req_usize("head_dim")?,
+                n_params: m.req_usize("n_params")?,
+                paper_twin: m.req_str("paper_twin")?.to_string(),
+            },
+        );
+    }
+
+    let mut weight_files = BTreeMap::new();
+    if let Some(w) = j.get("weights").and_then(Json::as_obj) {
+        for (k, v) in w {
+            weight_files.insert(k.clone(), root.join(v.req_str("file")?));
+        }
+    }
+
+    let mut modules = Vec::new();
+    for m in j
+        .get("modules")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| QspecError::Artifact("manifest: modules".into()))?
+    {
+        modules.push(ModuleMeta {
+            name: m.req_str("name")?.to_string(),
+            entry: m.req_str("entry")?.to_string(),
+            size: m.req_str("size")?.to_string(),
+            scheme: m.req_str("scheme")?.to_string(),
+            mode: m.req_str("mode")?.to_string(),
+            batch: m.req_usize("batch")?,
+            gamma: m.req_usize("gamma")?,
+            hlo_path: root.join(m.req_str("hlo")?),
+            weights_key: m.req_str("weights")?.to_string(),
+            n_weights: m.req_usize("n_weights")?,
+        });
+    }
+
+    Ok(Manifest {
+        group: j.req_usize("group")?,
+        n_outlier: j.req_usize("n_outlier")?,
+        gamma_default: j.req_usize("gamma_default")?,
+        prefill_t: j.req_usize("prefill_t")?,
+        score_t: j.req_usize("score_t")?,
+        models,
+        modules,
+        weight_files,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let txt = r#"{
+          "group":64,"n_outlier":64,"gamma_default":3,"prefill_t":96,"score_t":128,
+          "models":{"tiny":{"d_model":64,"n_layers":2,"n_heads":2,"n_kv_heads":1,
+            "d_ff":128,"vocab":64,"max_seq":128,"head_dim":32,"n_params":1000,
+            "paper_twin":"llama-1b"}},
+          "weights":{"tiny_fp":{"file":"weights/tiny_fp.qtns","names":["a"]}},
+          "modules":[{"name":"x","entry":"decode","size":"tiny","scheme":"atom",
+            "mode":"w16a16","batch":4,"gamma":3,"hlo":"hlo/x.hlo.txt",
+            "weights":"tiny_fp","n_weights":22}]
+        }"#;
+        let j = Json::parse(txt).unwrap();
+        let m = parse_manifest(&j, Path::new("/a")).unwrap();
+        assert_eq!(m.models["tiny"].kv_dims(4), [2, 2, 4, 1, 128, 32]);
+        assert_eq!(m.modules[0].hlo_path, PathBuf::from("/a/hlo/x.hlo.txt"));
+        assert_eq!(m.models["tiny"].kv_bytes_per_token(), 2 * 2 * 1 * 32 * 4);
+    }
+}

@@ -1,0 +1,209 @@
+//! One compiled HLO module + typed call wrappers for the five entry kinds.
+//!
+//! Call convention (matches python/compile/aot.py): data args first, then
+//! the KV cache buffer (except `score`), then the weight buffers in QTNS
+//! file order. Only token ids / positions / probabilities cross the host
+//! boundary on the hot path; the KV cache stays on device.
+
+use crate::error::{QspecError, Result};
+
+use super::artifacts::ModuleMeta;
+use super::weights::WeightSet;
+
+/// Compiled executable + metadata.
+pub struct Module {
+    pub meta: ModuleMeta,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+/// Output of prefill/decode: one token + its top-1 prob per slot.
+pub struct StepOut {
+    pub tok: Vec<i32>,
+    pub prob: Vec<f32>,
+    pub kv: xla::PjRtBuffer,
+}
+
+/// Output of the fused draft loop: [B, gamma] row-major.
+pub struct DraftOut {
+    pub toks: Vec<i32>,
+    pub probs: Vec<f32>,
+    pub kv: xla::PjRtBuffer,
+}
+
+/// Output of parallel verification: [B, gamma+1] row-major.
+pub struct VerifyOut {
+    /// verify-argmax token at each fed position
+    pub vtok: Vec<i32>,
+    /// probability of that argmax token
+    pub vtop: Vec<f32>,
+    /// probability the verifier assigns to the *fed* (draft) token
+    pub pfed: Vec<f32>,
+    pub kv: xla::PjRtBuffer,
+}
+
+/// Output of the scoring entry: per-row nll sum + token count.
+pub struct ScoreOut {
+    pub nll: Vec<f32>,
+    pub cnt: Vec<f32>,
+}
+
+impl Module {
+    pub fn compile(client: &xla::PjRtClient, meta: ModuleMeta) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(&meta.hlo_path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Module { meta, exe, client: client.clone() })
+    }
+
+    // ---- host staging helpers ------------------------------------------
+
+    fn dev(&self) -> xla::PjRtDevice<'_> {
+        self.client.devices().remove(0)
+    }
+
+    fn buf_i32(&self, v: &[i32]) -> Result<xla::PjRtBuffer> {
+        let lit = xla::Literal::vec1(v);
+        Ok(self.client.buffer_from_host_literal(Some(&self.dev()), &lit)?)
+    }
+
+    fn buf_i32_2d(&self, v: &[i32], rows: usize, cols: usize) -> Result<xla::PjRtBuffer> {
+        debug_assert_eq!(v.len(), rows * cols);
+        let lit = xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64])?;
+        Ok(self.client.buffer_from_host_literal(Some(&self.dev()), &lit)?)
+    }
+
+    fn read_i32(buf: &xla::PjRtBuffer) -> Result<Vec<i32>> {
+        Ok(buf.to_literal_sync()?.to_vec::<i32>()?)
+    }
+
+    fn read_f32(buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        Ok(buf.to_literal_sync()?.to_vec::<f32>()?)
+    }
+
+    /// Execute with [data..., kv?, weights...]; returns the output buffers.
+    fn run(
+        &self,
+        data: &[&xla::PjRtBuffer],
+        kv: Option<&xla::PjRtBuffer>,
+        weights: &WeightSet,
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(
+            data.len() + 1 + weights.len(),
+        );
+        args.extend_from_slice(data);
+        if let Some(kv) = kv {
+            args.push(kv);
+        }
+        args.extend(weights.buffers.iter());
+        let mut out = self.exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+        if out.is_empty() {
+            return Err(QspecError::Xla("no replica output".into()));
+        }
+        Ok(out.swap_remove(0))
+    }
+
+    // ---- typed entries ---------------------------------------------------
+
+    /// prefill: tokens [B,P] left-padded; mask selects slots to commit.
+    pub fn call_prefill(
+        &self,
+        tokens: &[i32],
+        start: &[i32],
+        mask: &[i32],
+        kv: &xla::PjRtBuffer,
+        w: &WeightSet,
+    ) -> Result<StepOut> {
+        let b = start.len();
+        let p = tokens.len() / b;
+        let t = self.buf_i32_2d(tokens, b, p)?;
+        let s = self.buf_i32(start)?;
+        let m = self.buf_i32(mask)?;
+        let mut out = self.run(&[&t, &s, &m], Some(kv), w)?;
+        let kv2 = out.pop().ok_or_else(|| QspecError::Xla("prefill out".into()))?;
+        Ok(StepOut {
+            tok: Self::read_i32(&out[0])?,
+            prob: Self::read_f32(&out[1])?,
+            kv: kv2,
+        })
+    }
+
+    /// decode: one AR step.
+    pub fn call_decode(
+        &self,
+        tok: &[i32],
+        pos: &[i32],
+        start: &[i32],
+        kv: &xla::PjRtBuffer,
+        w: &WeightSet,
+    ) -> Result<StepOut> {
+        let t = self.buf_i32(tok)?;
+        let p = self.buf_i32(pos)?;
+        let s = self.buf_i32(start)?;
+        let mut out = self.run(&[&t, &p, &s], Some(kv), w)?;
+        let kv2 = out.pop().ok_or_else(|| QspecError::Xla("decode out".into()))?;
+        Ok(StepOut {
+            tok: Self::read_i32(&out[0])?,
+            prob: Self::read_f32(&out[1])?,
+            kv: kv2,
+        })
+    }
+
+    /// draft: fused gamma-step W4A4 loop.
+    pub fn call_draft(
+        &self,
+        tok: &[i32],
+        pos: &[i32],
+        start: &[i32],
+        kv: &xla::PjRtBuffer,
+        w: &WeightSet,
+    ) -> Result<DraftOut> {
+        let t = self.buf_i32(tok)?;
+        let p = self.buf_i32(pos)?;
+        let s = self.buf_i32(start)?;
+        let mut out = self.run(&[&t, &p, &s], Some(kv), w)?;
+        let kv2 = out.pop().ok_or_else(|| QspecError::Xla("draft out".into()))?;
+        Ok(DraftOut {
+            toks: Self::read_i32(&out[0])?,
+            probs: Self::read_f32(&out[1])?,
+            kv: kv2,
+        })
+    }
+
+    /// verify: parallel gamma+1-token W4A16 pass (KV-overwriting).
+    pub fn call_verify(
+        &self,
+        tokens: &[i32],
+        pos: &[i32],
+        start: &[i32],
+        mask: &[i32],
+        kv: &xla::PjRtBuffer,
+        w: &WeightSet,
+    ) -> Result<VerifyOut> {
+        let b = pos.len();
+        let g1 = tokens.len() / b;
+        let t = self.buf_i32_2d(tokens, b, g1)?;
+        let p = self.buf_i32(pos)?;
+        let s = self.buf_i32(start)?;
+        let m = self.buf_i32(mask)?;
+        let mut out = self.run(&[&t, &p, &s, &m], Some(kv), w)?;
+        let kv2 = out.pop().ok_or_else(|| QspecError::Xla("verify out".into()))?;
+        Ok(VerifyOut {
+            vtok: Self::read_i32(&out[0])?,
+            vtop: Self::read_f32(&out[1])?,
+            pfed: Self::read_f32(&out[2])?,
+            kv: kv2,
+        })
+    }
+
+    /// score: perplexity rows [B, T+1].
+    pub fn call_score(&self, rows: &[i32], batch: usize, w: &WeightSet) -> Result<ScoreOut> {
+        let cols = rows.len() / batch;
+        let r = self.buf_i32_2d(rows, batch, cols)?;
+        let out = self.run(&[&r], None, w)?;
+        Ok(ScoreOut {
+            nll: Self::read_f32(&out[0])?,
+            cnt: Self::read_f32(&out[1])?,
+        })
+    }
+}

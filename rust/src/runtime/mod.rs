@@ -1,0 +1,18 @@
+//! PJRT runtime: loads AOT artifacts (HLO text + QTNS weights) onto the
+//! CPU PJRT client and executes them with device-resident buffers.
+//!
+//! Lifecycle: `ArtifactStore::open` parses `artifacts/manifest.json`;
+//! `Session::new` creates the PJRT client; modules are compiled lazily on
+//! first use and cached; weight sets are uploaded once per
+//! (size, scheme, mode) and shared by every module that uses them —
+//! the paper's shared-weights property, literally.
+
+mod artifacts;
+mod executable;
+mod session;
+mod weights;
+
+pub use artifacts::{ArtifactStore, Manifest, ModelMeta, ModuleMeta};
+pub use executable::Module;
+pub use session::Session;
+pub use weights::WeightSet;

@@ -1,0 +1,97 @@
+//! The PJRT session: client + module cache + weight-set cache.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::error::Result;
+
+use super::artifacts::ArtifactStore;
+use super::executable::Module;
+use super::weights::WeightSet;
+
+/// Owns the PJRT client and all compiled executables / uploaded weights.
+///
+/// Not Send: PJRT handles are raw pointers. The serving design keeps one
+/// engine thread owning the Session; server threads communicate through
+/// channels (see server/).
+pub struct Session {
+    pub client: xla::PjRtClient,
+    pub store: ArtifactStore,
+    modules: RefCell<BTreeMap<String, Rc<Module>>>,
+    weights: RefCell<BTreeMap<String, Rc<WeightSet>>>,
+}
+
+impl Session {
+    pub fn new(store: ArtifactStore) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Session {
+            client,
+            store,
+            modules: RefCell::new(BTreeMap::new()),
+            weights: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    /// Compile (or fetch cached) a module by manifest coordinates.
+    pub fn module(
+        &self,
+        size: &str,
+        scheme: &str,
+        mode: &str,
+        entry: &str,
+        batch: usize,
+        gamma: usize,
+    ) -> Result<Rc<Module>> {
+        let meta = self
+            .store
+            .find_module(size, scheme, mode, entry, batch, gamma)?
+            .clone();
+        if let Some(m) = self.modules.borrow().get(&meta.name) {
+            return Ok(m.clone());
+        }
+        let module = Rc::new(Module::compile(&self.client, meta.clone())?);
+        self.modules
+            .borrow_mut()
+            .insert(meta.name.clone(), module.clone());
+        Ok(module)
+    }
+
+    /// Upload (or fetch cached) the weight set for a weights_key.
+    /// Weight buffers are shared across every module/mode that uses the
+    /// same key — and across w4a16/w4a4 engines of the same checkpoint
+    /// the *checkpoint* is shared, mirroring the paper's design.
+    pub fn weights(&self, key: &str) -> Result<Rc<WeightSet>> {
+        if let Some(w) = self.weights.borrow().get(key) {
+            return Ok(w.clone());
+        }
+        let path = self
+            .store
+            .manifest
+            .weight_files
+            .get(key)
+            .ok_or_else(|| {
+                crate::error::QspecError::Artifact(format!("no weights {key}"))
+            })?
+            .clone();
+        let ws = Rc::new(WeightSet::load(&self.client, &path)?);
+        self.weights.borrow_mut().insert(key.to_string(), ws.clone());
+        Ok(ws)
+    }
+
+    /// Zero-initialized device-resident KV cache for (size, batch).
+    pub fn fresh_kv(&self, size: &str, batch: usize) -> Result<xla::PjRtBuffer> {
+        let meta = self.store.model(size)?;
+        let dims = meta.kv_dims(batch);
+        let lit = xla::Literal::create_from_shape(
+            xla::PrimitiveType::F32,
+            &dims.map(|d| d),
+        );
+        let dev = self.client.devices().remove(0);
+        Ok(self.client.buffer_from_host_literal(Some(&dev), &lit)?)
+    }
+
+    pub fn n_compiled_modules(&self) -> usize {
+        self.modules.borrow().len()
+    }
+}

@@ -1,0 +1,49 @@
+//! Weight upload: QTNS file -> device-resident PjRtBuffers, preserving
+//! file order (= sorted-key order = HLO trailing-parameter order).
+
+use std::path::Path;
+
+use crate::error::{QspecError, Result};
+use crate::util::binfmt::{read_qtns, DType};
+
+/// One uploaded weight set (shared via Rc across modules).
+pub struct WeightSet {
+    pub buffers: Vec<xla::PjRtBuffer>,
+    pub names: Vec<String>,
+    pub total_bytes: usize,
+}
+
+impl WeightSet {
+    pub fn load(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
+        let tensors = read_qtns(path)?;
+        let dev = client.devices().remove(0);
+        let mut buffers = Vec::with_capacity(tensors.len());
+        let mut names = Vec::with_capacity(tensors.len());
+        let mut total = 0usize;
+        for t in &tensors {
+            let prim = match t.dtype {
+                DType::F32 => xla::ElementType::F32,
+                DType::I8 => xla::ElementType::S8,
+                DType::I32 => xla::ElementType::S32,
+            };
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                prim, &t.dims, &t.data,
+            )
+            .map_err(|e| {
+                QspecError::Artifact(format!("{}: literal: {e}", t.name))
+            })?;
+            buffers.push(client.buffer_from_host_literal(Some(&dev), &lit)?);
+            names.push(t.name.clone());
+            total += t.data.len();
+        }
+        Ok(WeightSet { buffers, names, total_bytes: total })
+    }
+
+    pub fn len(&self) -> usize {
+        self.buffers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buffers.is_empty()
+    }
+}

@@ -1,0 +1,81 @@
+//! Host-side sampling utilities.
+//!
+//! The HLO entries return greedy argmax tokens directly (the paper uses
+//! greedy decoding for reproducibility), so the hot path needs no host
+//! sampling. These helpers exist for the general API (temperature / top-k
+//! over returned logits) and for workload synthesis.
+
+use crate::util::prng::Pcg32;
+
+/// Greedy argmax over a logits row.
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Softmax (numerically stable).
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&x| (x - m).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / z).collect()
+}
+
+/// Temperature + top-k sampling.
+pub fn sample_topk(logits: &[f32], temperature: f32, k: usize, rng: &mut Pcg32) -> usize {
+    if temperature <= 0.0 {
+        return argmax(logits);
+    }
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    let k = k.max(1).min(logits.len());
+    let top: Vec<f32> = idx[..k].iter().map(|&i| logits[i] / temperature).collect();
+    let probs = softmax(&top);
+    let mut u = rng.next_f64() as f32;
+    for (j, &p) in probs.iter().enumerate() {
+        if u < p {
+            return idx[j];
+        }
+        u -= p;
+    }
+    idx[k - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0, 2.9]), 1);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn zero_temperature_is_greedy() {
+        let mut rng = Pcg32::seeded(0);
+        assert_eq!(sample_topk(&[0.0, 5.0, 1.0], 0.0, 3, &mut rng), 1);
+    }
+
+    #[test]
+    fn topk_restricts_support() {
+        let mut rng = Pcg32::seeded(0);
+        for _ in 0..100 {
+            let s = sample_topk(&[10.0, 9.0, -50.0], 1.0, 2, &mut rng);
+            assert!(s == 0 || s == 1);
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! TCP line-protocol serving frontend.
+//!
+//! PJRT handles are not Send, so the engine owns the main thread and
+//! connection threads communicate through channels (a vLLM-style
+//! frontend/engine split):
+//!
+//!   client --tcp--> conn thread --mpsc--> engine loop (this thread)
+//!          <--tcp-- conn thread <--mpsc-- finished tokens
+//!
+//! Protocol: one JSON object per line.
+//!   request : {"prompt": "q: g xy ?\n", "max_tokens": 64}
+//!   response: {"id": 3, "text": "...", "latency_ms": 12.5,
+//!              "tokens": 17}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use crate::config::{EngineKind, ServeConfig};
+use crate::coordinator::{ArEngine, QSpecConfig, QSpecEngine};
+use crate::error::{QspecError, Result};
+use crate::model::Tokenizer;
+use crate::runtime::Session;
+use crate::util::json::{num, obj, s, Json};
+
+/// A request forwarded from a connection thread to the engine loop.
+pub struct InboundRequest {
+    pub prompt: String,
+    pub max_tokens: usize,
+    pub resp: mpsc::Sender<String>,
+}
+
+/// Parse one request line.
+pub fn parse_request_line(line: &str) -> Result<(String, usize)> {
+    let j = Json::parse(line)?;
+    let prompt = j.req_str("prompt")?.to_string();
+    let max_tokens = j.get("max_tokens").and_then(Json::as_usize).unwrap_or(64);
+    Ok((prompt, max_tokens))
+}
+
+/// Format one response line.
+pub fn format_response(id: u64, text: &str, latency_ns: u128, tokens: usize) -> String {
+    obj(vec![
+        ("id", num(id as f64)),
+        ("text", s(text)),
+        ("latency_ms", num(latency_ns as f64 / 1e6)),
+        ("tokens", num(tokens as f64)),
+    ])
+    .to_string()
+}
+
+fn conn_thread(stream: TcpStream, tx: mpsc::Sender<InboundRequest>) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (prompt, max_tokens) = match parse_request_line(&line) {
+            Ok(x) => x,
+            Err(e) => {
+                let _ = writeln!(writer, "{}", obj(vec![("error", s(&e.to_string()))]).to_string());
+                continue;
+            }
+        };
+        let (rtx, rrx) = mpsc::channel();
+        if tx.send(InboundRequest { prompt, max_tokens, resp: rtx }).is_err() {
+            break;
+        }
+        match rrx.recv() {
+            Ok(resp) => {
+                if writeln!(writer, "{resp}").is_err() {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    log::debug!("connection closed: {peer:?}");
+}
+
+/// Run the server until the process is killed. The engine loop services
+/// the queue with continuous batching; idle time is spent blocked on the
+/// channel.
+pub fn serve(sess: &Session, cfg: &ServeConfig) -> Result<()> {
+    cfg.validate()?;
+    let tok = Tokenizer::load(&sess.store.tokenizer_path())?;
+    let listener = TcpListener::bind(("127.0.0.1", cfg.port))?;
+    println!("qspec listening on 127.0.0.1:{}", cfg.port);
+    let (tx, rx) = mpsc::channel::<InboundRequest>();
+    std::thread::spawn(move || {
+        for stream in listener.incoming().flatten() {
+            let tx = tx.clone();
+            std::thread::spawn(move || conn_thread(stream, tx));
+        }
+    });
+
+    match &cfg.engine {
+        EngineKind::QSpec => {
+            let mut qcfg = QSpecConfig::new(&cfg.size, cfg.batch);
+            qcfg.scheme = cfg.scheme.clone();
+            qcfg.gamma = cfg.gamma;
+            qcfg.overwrite = cfg.overwrite;
+            let mut engine = QSpecEngine::new(sess, qcfg)?;
+            engine_loop(&rx, &tok, EngineRef::QSpec(&mut engine))
+        }
+        EngineKind::Ar(mode) => {
+            let mut engine = ArEngine::new(sess, &cfg.size, &cfg.scheme, *mode, cfg.batch)?;
+            engine_loop(&rx, &tok, EngineRef::Ar(&mut engine))
+        }
+        EngineKind::Eagle { .. } => Err(QspecError::Config(
+            "eagle engine is a benchmark baseline, not a server mode".into(),
+        )),
+    }
+}
+
+enum EngineRef<'a, 'b> {
+    QSpec(&'a mut QSpecEngine<'b>),
+    Ar(&'a mut ArEngine<'b>),
+}
+
+fn engine_loop(
+    rx: &mpsc::Receiver<InboundRequest>,
+    tok: &Tokenizer,
+    mut engine: EngineRef,
+) -> Result<()> {
+    use std::collections::HashMap;
+    let mut responders: HashMap<u64, mpsc::Sender<String>> = HashMap::new();
+    loop {
+        // block if fully idle, otherwise poll
+        let has_work = match &engine {
+            EngineRef::QSpec(e) => e.has_work(),
+            EngineRef::Ar(e) => e.has_work(),
+        };
+        if !has_work {
+            match rx.recv_timeout(Duration::from_millis(200)) {
+                Ok(req) => admit(&mut engine, tok, req, &mut responders),
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
+            }
+        }
+        // drain whatever else arrived
+        while let Ok(req) = rx.try_recv() {
+            admit(&mut engine, tok, req, &mut responders);
+        }
+        let finished = match &mut engine {
+            EngineRef::QSpec(e) => e.step()?,
+            EngineRef::Ar(e) => e.step()?,
+        };
+        for f in finished {
+            if let Some(resp) = responders.remove(&f.id) {
+                let text = tok.decode(&f.tokens);
+                let _ = resp.send(format_response(f.id, &text, f.latency_ns, f.tokens.len()));
+            }
+        }
+    }
+}
+
+fn admit(
+    engine: &mut EngineRef,
+    tok: &Tokenizer,
+    req: InboundRequest,
+    responders: &mut std::collections::HashMap<u64, mpsc::Sender<String>>,
+) {
+    let prompt = tok.encode_prompt(&req.prompt);
+    let id = match engine {
+        EngineRef::QSpec(e) => e.submit(prompt, req.max_tokens),
+        EngineRef::Ar(e) => e.submit(prompt, req.max_tokens),
+    };
+    responders.insert(id, req.resp);
+}
+
+/// Minimal blocking client for tests/examples.
+pub fn client_request(addr: &str, prompt: &str, max_tokens: usize) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = obj(vec![
+        ("prompt", s(prompt)),
+        ("max_tokens", num(max_tokens as f64)),
+    ]);
+    writeln!(stream, "{}", req.to_string())?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Json::parse(line.trim())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_line_roundtrip() {
+        let (p, m) = parse_request_line(r#"{"prompt":"q: a x ?\n","max_tokens":32}"#).unwrap();
+        assert_eq!(p, "q: a x ?\n");
+        assert_eq!(m, 32);
+    }
+
+    #[test]
+    fn default_max_tokens() {
+        let (_, m) = parse_request_line(r#"{"prompt":"hi"}"#).unwrap();
+        assert_eq!(m, 64);
+    }
+
+    #[test]
+    fn response_format_parses_back() {
+        let r = format_response(7, "a: m\n", 1_500_000, 5);
+        let j = Json::parse(&r).unwrap();
+        assert_eq!(j.get("id").unwrap().as_i64(), Some(7));
+        assert_eq!(j.get("tokens").unwrap().as_i64(), Some(5));
+    }
+}

@@ -1,0 +1,178 @@
+//! QTNS binary tensor container reader (written by python/compile/aot.py).
+//!
+//! Layout (little-endian):
+//!   magic  b"QTNS1\0\0\0"
+//!   u32    n_tensors
+//!   per tensor:
+//!     u16  name_len | name bytes
+//!     u8   dtype (0 = f32, 1 = i8, 2 = i32)
+//!     u8   ndim
+//!     u32  dims[ndim]
+//!     raw  data (row-major)
+
+use std::fs;
+use std::path::Path;
+
+use crate::error::{QspecError, Result};
+
+/// Element type of a stored tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I8,
+    I32,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+
+    fn from_u8(v: u8) -> Result<Self> {
+        match v {
+            0 => Ok(DType::F32),
+            1 => Ok(DType::I8),
+            2 => Ok(DType::I32),
+            _ => Err(QspecError::Artifact(format!("bad dtype tag {v}"))),
+        }
+    }
+}
+
+/// One host-side tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            return Err(QspecError::Artifact(format!("{}: not f32", self.name)));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            return Err(QspecError::Artifact(format!("{}: not i32", self.name)));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Read a full QTNS container; preserves file order (= sorted-key order,
+/// the HLO parameter order contract).
+pub fn read_qtns(path: &Path) -> Result<Vec<Tensor>> {
+    let buf = fs::read(path)?;
+    parse_qtns(&buf).map_err(|e| {
+        QspecError::Artifact(format!("{}: {e}", path.display()))
+    })
+}
+
+fn parse_qtns(buf: &[u8]) -> std::result::Result<Vec<Tensor>, String> {
+    let mut i = 0usize;
+    let take = |i: &mut usize, n: usize| -> std::result::Result<&[u8], String> {
+        let s = buf.get(*i..*i + n).ok_or("truncated")?;
+        *i += n;
+        Ok(s)
+    };
+    if take(&mut i, 8)? != b"QTNS1\0\0\0" {
+        return Err("bad magic".into());
+    }
+    let n = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let ln = u16::from_le_bytes(take(&mut i, 2)?.try_into().unwrap()) as usize;
+        let name = String::from_utf8(take(&mut i, ln)?.to_vec()).map_err(|_| "bad name")?;
+        let dt = DType::from_u8(take(&mut i, 1)?[0]).map_err(|e| e.to_string())?;
+        let nd = take(&mut i, 1)?[0] as usize;
+        let mut dims = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            dims.push(u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize);
+        }
+        let count: usize = dims.iter().product();
+        let data = take(&mut i, count * dt.size())?.to_vec();
+        out.push(Tensor { name, dtype: dt, dims, data });
+    }
+    if i != buf.len() {
+        return Err("trailing bytes".into());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend(b"QTNS1\0\0\0");
+        b.extend(2u32.to_le_bytes());
+        // tensor "ab": f32 [2]
+        b.extend(2u16.to_le_bytes());
+        b.extend(b"ab");
+        b.push(0);
+        b.push(1);
+        b.extend(2u32.to_le_bytes());
+        b.extend(1.5f32.to_le_bytes());
+        b.extend((-2.0f32).to_le_bytes());
+        // tensor "q": i8 [1,3]
+        b.extend(1u16.to_le_bytes());
+        b.extend(b"q");
+        b.push(1);
+        b.push(2);
+        b.extend(1u32.to_le_bytes());
+        b.extend(3u32.to_le_bytes());
+        b.extend([1u8, 0xff, 7]);
+        b
+    }
+
+    #[test]
+    fn parses_sample() {
+        let ts = parse_qtns(&sample()).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].name, "ab");
+        assert_eq!(ts[0].as_f32().unwrap(), vec![1.5, -2.0]);
+        assert_eq!(ts[1].dims, vec![1, 3]);
+        assert_eq!(ts[1].dtype, DType::I8);
+        assert_eq!(ts[1].data, vec![1, 0xff, 7]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut b = sample();
+        b[0] = b'X';
+        assert!(parse_qtns(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let b = sample();
+        assert!(parse_qtns(&b[..b.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing() {
+        let mut b = sample();
+        b.push(0);
+        assert!(parse_qtns(&b).is_err());
+    }
+}

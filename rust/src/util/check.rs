@@ -1,0 +1,134 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! `check(name, n_cases, gen, prop)` runs `prop` on `n_cases` generated
+//! inputs; on failure it performs greedy shrinking via the input's
+//! `Shrink` implementation and panics with the minimal counterexample.
+
+use super::prng::Pcg32;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for u32 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut v = Vec::new();
+        if *self > 0 {
+            v.push(self / 2);
+            v.push(self - 1);
+        }
+        v
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut v = Vec::new();
+        if *self > 0 {
+            v.push(self / 2);
+            v.push(self - 1);
+        }
+        v
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[1..].to_vec());
+            let mut minus_last = self.clone();
+            minus_last.pop();
+            out.push(minus_last);
+            // shrink one element
+            for (i, x) in self.iter().enumerate().take(4) {
+                for sx in x.shrink() {
+                    let mut v = self.clone();
+                    v[i] = sx;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run a property over generated cases with shrinking on failure.
+pub fn check<T, G, P>(name: &str, cases: u32, mut gen: G, prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Pcg32) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Pcg32::seeded(0x9e3779b97f4a7c15 ^ name.len() as u64);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // greedy shrink
+            let mut best = (input, msg);
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 200 {
+                improved = false;
+                rounds += 1;
+                for cand in best.0.shrink() {
+                    if let Err(m) = prop(&cand) {
+                        best = (cand, m);
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}): {}\nminimal counterexample: {:?}",
+                best.1, best.0
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        check("add-commutes", 100, |r| (r.below(100), r.below(100)), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn shrinks_failing_property() {
+        check("always-small", 100, |r| r.below(1000), |&x| {
+            if x < 50 {
+                Ok(())
+            } else {
+                Err(format!("{x} too big"))
+            }
+        });
+    }
+
+    #[test]
+    fn vec_shrink_reduces_len() {
+        let v = vec![5u32, 6, 7, 8];
+        assert!(v.shrink().iter().any(|s| s.len() < v.len()));
+    }
+}

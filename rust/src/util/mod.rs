@@ -1,0 +1,8 @@
+//! Hand-rolled substrates (the offline crate registry lacks the usual
+//! ecosystem crates — see DESIGN.md §3 substitution table).
+
+pub mod binfmt;
+pub mod check;
+pub mod json;
+pub mod prng;
+pub mod stats;

@@ -1,0 +1,129 @@
+//! PCG32 pseudo-random generator (O'Neill 2014) — deterministic, seedable,
+//! no external crates. Used by workload generation, property tests and
+//! scheduler jitter.
+
+/// PCG-XSH-RR 64/32.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut p = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        p.next_u32();
+        p.state = p.state.wrapping_add(seed);
+        p.next_u32();
+        p
+    }
+
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, bound) without modulo bias (Lemire rejection).
+    pub fn below(&mut self, bound: u32) -> u32 {
+        assert!(bound > 0);
+        let threshold = bound.wrapping_neg() % bound;
+        loop {
+            let r = self.next_u32();
+            if r >= threshold {
+                return r % bound;
+            }
+        }
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range_inclusive(&mut self, lo: u32, hi: u32) -> u32 {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u32() as f64) / (u32::MAX as f64 + 1.0)
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick one element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u32) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg32::seeded(42);
+        let mut b = Pcg32::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut p = Pcg32::seeded(7);
+        for _ in 0..10_000 {
+            assert!(p.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn range_inclusive_covers_ends() {
+        let mut p = Pcg32::seeded(9);
+        let (mut lo_seen, mut hi_seen) = (false, false);
+        for _ in 0..10_000 {
+            match p.range_inclusive(3, 5) {
+                3 => lo_seen = true,
+                5 => hi_seen = true,
+                4 => {}
+                _ => panic!("out of range"),
+            }
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut p = Pcg32::seeded(1);
+        for _ in 0..1000 {
+            let x = p.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut p = Pcg32::seeded(5);
+        let mut v: Vec<u32> = (0..50).collect();
+        p.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,175 @@
+//! Streaming statistics + fixed-bucket latency histogram (criterion/hdrhistogram
+//! substitutes for the bench harness and metrics).
+
+/// Online mean/min/max/variance (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+}
+
+/// Log-bucketed histogram for latencies (ns): ~4% relative resolution.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    buckets: Vec<u64>,
+    total: u64,
+}
+
+const BUCKETS_PER_OCTAVE: usize = 16;
+const N_BUCKETS: usize = 64 * BUCKETS_PER_OCTAVE; // covers 1ns .. ~5e18ns
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram { buckets: vec![0; N_BUCKETS], total: 0 }
+    }
+
+    fn index(v: u64) -> usize {
+        if v == 0 {
+            return 0;
+        }
+        let octave = 63 - v.leading_zeros() as usize;
+        let frac = if octave == 0 {
+            0
+        } else {
+            // position within the octave
+            ((v - (1 << octave)) * BUCKETS_PER_OCTAVE as u64 >> octave) as usize
+        };
+        (octave * BUCKETS_PER_OCTAVE + frac).min(N_BUCKETS - 1)
+    }
+
+    fn bucket_value(idx: usize) -> u64 {
+        let octave = idx / BUCKETS_PER_OCTAVE;
+        let frac = idx % BUCKETS_PER_OCTAVE;
+        (1u64 << octave) + ((frac as u64) << octave) / BUCKETS_PER_OCTAVE as u64
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::index(v)] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// p in [0,100]; returns a representative value for that percentile.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_value(i);
+            }
+        }
+        Self::bucket_value(N_BUCKETS - 1)
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_mean_std() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.add(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-9);
+        assert!((s.std() - 2.138089935299395).abs() < 1e-9);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn histogram_percentiles_monotone() {
+        let mut h = LogHistogram::new();
+        for i in 1..=10_000u64 {
+            h.record(i);
+        }
+        let p50 = h.percentile(50.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 < p99);
+        // ~4% relative resolution
+        assert!((p50 as f64 - 5000.0).abs() / 5000.0 < 0.1, "{p50}");
+        assert!((p99 as f64 - 9900.0).abs() / 9900.0 < 0.1, "{p99}");
+    }
+
+    #[test]
+    fn histogram_handles_zero_and_huge() {
+        let mut h = LogHistogram::new();
+        h.record(0);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile(100.0) > 0);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        a.record(10);
+        b.record(1000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+}

@@ -1,0 +1,103 @@
+//! Serving workloads: trace loading (artifacts/workloads/*.json, sampled
+//! from the paper's dataset analogs with seed 42) and a rust-side
+//! synthetic generator for tests and stress runs.
+
+use std::path::Path;
+
+use crate::error::{QspecError, Result};
+use crate::util::json::Json;
+use crate::util::prng::Pcg32;
+
+/// One serving request trace entry.
+#[derive(Clone, Debug)]
+pub struct TraceItem {
+    pub prompt: String,
+    pub max_tokens: usize,
+}
+
+/// The six acceleration datasets of the paper (analog names).
+pub const DATASETS: [&str; 6] =
+    ["chain", "chain_hard", "trace", "cloze", "sharegpt", "lmsys"];
+
+/// Map a paper dataset name to our analog (for table headers).
+pub fn paper_name(ds: &str) -> &'static str {
+    match ds {
+        "chain" => "GSM8K",
+        "chain_hard" => "MATH",
+        "trace" => "MBPP",
+        "cloze" => "HumanEval*", // trace+cloze stand in for code/QA tasks
+        "sharegpt" => "ShareGPT",
+        "lmsys" => "LMsys-1k",
+        _ => "custom",
+    }
+}
+
+/// Load a workload trace produced by the AOT step.
+pub fn load_trace(path: &Path) -> Result<Vec<TraceItem>> {
+    let text = std::fs::read_to_string(path)?;
+    let j = Json::parse(&text)?;
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| QspecError::Artifact("workload: not an array".into()))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for it in arr {
+        out.push(TraceItem {
+            prompt: it.req_str("prompt")?.to_string(),
+            max_tokens: it.req_usize("max_tokens")?,
+        });
+    }
+    Ok(out)
+}
+
+/// Synthetic chain-task prompts generated rust-side (tests / fuzzing).
+/// Mirrors python corpus.make_chain's prompt format; answers unknown.
+pub fn synth_chain_prompts(n: usize, seed: u64) -> Vec<TraceItem> {
+    let mut rng = Pcg32::seeded(seed);
+    let symbols: Vec<char> = ('a'..='z').collect();
+    (0..n)
+        .map(|_| {
+            let start = *rng.choose(&symbols);
+            let k = rng.range_inclusive(3, 5) as usize;
+            let ops: String = (0..k)
+                .map(|_| if rng.next_f64() < 0.5 { 'x' } else { 'y' })
+                .collect();
+            TraceItem {
+                prompt: format!("q: {start} {ops} ?\n"),
+                max_tokens: (6 + 3 * k + 10).min(96),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_prompts_formatted() {
+        let w = synth_chain_prompts(20, 1);
+        assert_eq!(w.len(), 20);
+        for t in &w {
+            assert!(t.prompt.starts_with("q: "));
+            assert!(t.prompt.ends_with("?\n"));
+            assert!(t.max_tokens > 0);
+        }
+    }
+
+    #[test]
+    fn synth_deterministic() {
+        let a = synth_chain_prompts(5, 9);
+        let b = synth_chain_prompts(5, 9);
+        assert_eq!(
+            a.iter().map(|t| &t.prompt).collect::<Vec<_>>(),
+            b.iter().map(|t| &t.prompt).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn dataset_names_mapped() {
+        for ds in DATASETS {
+            assert_ne!(paper_name(ds), "custom");
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Property tests on coordinator invariants (DESIGN.md §7) using the
+//! in-crate mini property-testing framework (util::check). These run
+//! without artifacts — pure logic over SlotManager / acceptance / queue.
+
+use qspec::coordinator::{greedy_accept, FcfsQueue};
+use qspec::kvcache::SlotManager;
+use qspec::util::check::check;
+use qspec::util::prng::Pcg32;
+
+const EOS: i32 = 2;
+
+/// Random sequence of scheduler operations must preserve slot invariants:
+/// pos advances exactly by committed tokens, never past max_seq, and
+/// released requests return exactly the tokens committed for them.
+#[test]
+fn slot_manager_invariants_under_random_ops() {
+    check(
+        "slot-invariants",
+        300,
+        |r: &mut Pcg32| {
+            // (batch, ops): ops encoded as random u32 stream
+            let batch = r.range_inclusive(1, 8) as usize;
+            let ops: Vec<u32> = (0..r.range_inclusive(5, 60)).map(|_| r.next_u32()).collect();
+            (batch, ops)
+        },
+        |(batch, ops)| {
+            let max_seq = 64usize;
+            let prefill_t = 16usize;
+            let gamma = 3usize;
+            let mut m = SlotManager::new(*batch, max_seq, prefill_t);
+            let mut next_id = 0u64;
+            let mut expected: std::collections::HashMap<u64, Vec<i32>> =
+                std::collections::HashMap::new();
+            for &op in ops {
+                match op % 3 {
+                    0 => {
+                        // admit if possible
+                        if !m.free_slots().is_empty() {
+                            let plen = 1 + (op as usize % prefill_t);
+                            let id = next_id;
+                            next_id += 1;
+                            let idx = m
+                                .admit(id, plen, 4 + op as usize % 20)
+                                .map_err(|e| format!("admit: {e}"))?;
+                            let t0 = 10 + (op % 40) as i32;
+                            m.after_prefill(idx, t0, EOS);
+                            expected.insert(id, vec![t0]);
+                            if m.slot(idx).pos as usize != prefill_t {
+                                return Err("pos != prefill_t after prefill".into());
+                            }
+                        }
+                    }
+                    1 => {
+                        // commit a random batch of tokens on an active slot
+                        let active = m.active_slots();
+                        if let Some(&idx) = active.first() {
+                            let id = m.slot(idx).req_id.unwrap();
+                            let pos_before = m.slot(idx).pos;
+                            let n = 1 + (op as usize % (gamma + 1));
+                            let toks: Vec<i32> =
+                                (0..n).map(|j| 10 + ((op as i32) + j as i32) % 40).collect();
+                            let committed = m.commit(idx, &toks, EOS, gamma);
+                            if committed.is_empty() {
+                                return Err("commit returned empty".into());
+                            }
+                            expected.get_mut(&id).unwrap().extend(&committed);
+                            let pos_after = m.slot(idx).pos;
+                            if pos_after - pos_before != committed.len() as i32 {
+                                return Err(format!(
+                                    "pos advanced {} for {} commits",
+                                    pos_after - pos_before,
+                                    committed.len()
+                                ));
+                            }
+                            if (pos_after as usize) > max_seq {
+                                return Err("pos past max_seq".into());
+                            }
+                        }
+                    }
+                    _ => {
+                        // release any done slot
+                        let done: Vec<usize> = m
+                            .iter()
+                            .filter(|(_, s)| s.req_id.is_some() && s.done)
+                            .map(|(i, _)| i)
+                            .collect();
+                        for idx in done {
+                            let (id, toks) = m.release(idx).ok_or("release failed")?;
+                            let exp = expected.remove(&id).ok_or("unknown id")?;
+                            if toks != exp {
+                                return Err(format!("released {toks:?} != committed {exp:?}"));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Acceptance policy: output of QSPEC == what W4A16 greedy would emit,
+/// step by step, for ANY draft sequence (losslessness at the policy level).
+#[test]
+fn acceptance_equals_sequential_greedy() {
+    check(
+        "acceptance-lossless",
+        500,
+        |r: &mut Pcg32| {
+            let g = r.range_inclusive(1, 6) as usize;
+            // the verifier's greedy choices (what AR would emit)
+            let verify: Vec<u32> = (0..g + 1).map(|_| r.below(16)).collect();
+            let drafts: Vec<u32> = (0..g).map(|_| r.below(16)).collect();
+            (drafts, verify)
+        },
+        |(drafts, verify)| {
+            let d: Vec<i32> = drafts.iter().map(|&x| x as i32).collect();
+            let v: Vec<i32> = verify.iter().map(|&x| x as i32).collect();
+            let dec = greedy_accept(&d, &v);
+            // sequential greedy under the same verifier function emits
+            // v[0..] until it diverges from drafts; committed must be a
+            // prefix of the verifier's own choices at every position
+            for (j, &t) in dec.committed.iter().enumerate() {
+                if t != v[j] && (j >= d.len() || d[j] != t) {
+                    return Err(format!("committed[{j}]={t} matches neither"));
+                }
+                // token j is either the draft (== verify) or the verify fix
+                if j < dec.accepted {
+                    if t != v[j] {
+                        return Err("accepted token differs from verifier".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// FCFS queue: pops are exactly pushes, in order, under random interleaving.
+#[test]
+fn fcfs_queue_order_property() {
+    check(
+        "fcfs-order",
+        300,
+        |r: &mut Pcg32| {
+            let ops: Vec<u32> = (0..r.range_inclusive(1, 50)).map(|_| r.next_u32()).collect();
+            ops
+        },
+        |ops| {
+            let mut q = FcfsQueue::new();
+            let mut pushed = std::collections::VecDeque::new();
+            for &op in ops {
+                if op % 2 == 0 {
+                    let id = q.push(vec![op as i32], 4);
+                    pushed.push_back(id);
+                } else if let Some(r) = q.pop() {
+                    let want = pushed.pop_front().ok_or("pop from empty model")?;
+                    if r.id != want {
+                        return Err(format!("popped {} want {want}", r.id));
+                    }
+                }
+            }
+            if q.len() != pushed.len() {
+                return Err("length mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
