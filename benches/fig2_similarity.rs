@@ -2,15 +2,17 @@
 //! Writes bench_out/fig2_similarity.csv (p_draft, p_verify, accepted)
 //! and prints the marginal/bucket statistics the figure visualizes.
 
-use qspec::bench::runner::{full_mode, open_session, run_qspec, RunSpec};
+use qspec::bench::runner::{full_mode, open_session, run_engine, RunSpec};
 use qspec::bench::Table;
 use qspec::util::json::{num, obj, Json};
 
 fn main() {
     let (sess, tok) = open_session().expect("artifacts missing");
     let n_req = if full_mode() { 64 } else { 16 };
-    let spec = RunSpec::new("s", 8, "chain", n_req);
-    let (m, samples) = run_qspec(&sess, &tok, &spec, true, true).expect("run");
+    let mut spec = RunSpec::new("s", 8, "chain", n_req);
+    spec.collect_similarity = true;
+    let out = run_engine(&sess, &tok, &spec).expect("run");
+    let (m, samples) = (out.metrics, out.samples);
 
     // CSV dump for the scatter
     std::fs::create_dir_all("bench_out").unwrap();

@@ -1,8 +1,9 @@
 //! Figure 4: per-valid-token latency decomposition (draft vs verify) for
 //! QSPEC against the W16A16/W4A16/W4A4 baselines.
 
-use qspec::bench::runner::{full_mode, open_session, run_ar, run_qspec, RunSpec};
+use qspec::bench::runner::{full_mode, open_session, run_engine, RunSpec};
 use qspec::bench::Table;
+use qspec::config::EngineKind;
 use qspec::model::Mode;
 use qspec::util::json::{num, obj, s, Json};
 
@@ -16,7 +17,9 @@ fn main() {
     ]);
     let mut out = Vec::new();
     for mode in [Mode::W16A16, Mode::W4A16, Mode::W4A4] {
-        let m = run_ar(&sess, &tok, mode, &spec).expect("ar");
+        let m = run_engine(&sess, &tok, &spec.with_engine(EngineKind::Ar(mode)))
+            .expect("ar")
+            .metrics;
         let d = m.per_token_decomposition();
         let us = |name: &str| {
             d.iter().find(|(n, _, _)| *n == name).map(|(_, _, v)| v / 1000.0).unwrap_or(0.0)
@@ -32,7 +35,7 @@ fn main() {
         ]);
         out.push(obj(vec![("method", s(mode.as_str())), ("virt_us_per_tok", num(total))]));
     }
-    let (m, _) = run_qspec(&sess, &tok, &spec, true, false).expect("qspec");
+    let m = run_engine(&sess, &tok, &spec).expect("qspec").metrics;
     let d = m.per_token_decomposition();
     let us = |name: &str| {
         d.iter().find(|(n, _, _)| *n == name).map(|(_, _, v)| v / 1000.0).unwrap_or(0.0)

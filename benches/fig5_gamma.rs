@@ -1,8 +1,9 @@
 //! Figure 5: draft-length (gamma) ablation — acceptance rate and
 //! throughput for gamma in 2..=6 (s@8; full mode adds m@16).
 
-use qspec::bench::runner::{full_mode, open_session, run_ar, run_qspec, RunSpec};
+use qspec::bench::runner::{full_mode, open_session, run_engine, RunSpec};
 use qspec::bench::{pct, speedup, Table};
+use qspec::config::EngineKind;
 use qspec::model::Mode;
 use qspec::util::json::{num, obj, s, Json};
 
@@ -22,13 +23,14 @@ fn main() {
     ]);
     for (size, b) in &configs {
         let base_spec = RunSpec::new(size, *b, "chain", n_req);
-        let w4a16 = run_ar(&sess, &tok, Mode::W4A16, &base_spec)
+        let w4a16 = run_engine(&sess, &tok, &base_spec.with_engine(EngineKind::Ar(Mode::W4A16)))
             .expect("baseline")
+            .metrics
             .virt_tokens_per_s();
         for gamma in 2..=6usize {
             let mut spec = base_spec.clone();
             spec.gamma = gamma;
-            let (m, _) = run_qspec(&sess, &tok, &spec, true, false).expect("qspec");
+            let m = run_engine(&sess, &tok, &spec).expect("qspec").metrics;
             let acc = m.acceptance_rate();
             let v = m.virt_tokens_per_s();
             table.row(&[

@@ -3,9 +3,10 @@
 //! The claim: QSPEC sits at W4A16 accuracy with much higher throughput;
 //! W4A4 is fastest but inaccurate.
 
-use qspec::bench::runner::{full_mode, open_session, run_ar, run_qspec, RunSpec};
+use qspec::bench::runner::{full_mode, open_session, run_engine, RunSpec};
 use qspec::bench::{pct, Table};
-use qspec::coordinator::{ArEngine, QSpecConfig, QSpecEngine};
+use qspec::config::EngineKind;
+use qspec::coordinator::build_engine;
 use qspec::evalsuite::{self, load_eval};
 use qspec::model::Mode;
 use qspec::util::json::{num, obj, s, Json};
@@ -20,34 +21,34 @@ fn main() {
     let items = load_eval(&sess.store.eval_path("chain")).expect("eval");
     let items = &items[..n_eval.min(items.len())];
 
+    let kinds = [
+        EngineKind::Ar(Mode::W16A16),
+        EngineKind::Ar(Mode::W4A16),
+        EngineKind::Ar(Mode::W4A4),
+        EngineKind::QSpec,
+    ];
+
     // accuracy is batch-independent (greedy): measure once at batch 8
-    let mut accs: Vec<(&str, f64)> = Vec::new();
-    for mode in [Mode::W16A16, Mode::W4A16, Mode::W4A4] {
-        let mut e = ArEngine::new(&sess, "s", "atom", mode, 8).expect("engine");
-        let (em, _) = evalsuite::eval_ar(&mut e, &tok, items, 96).expect("eval");
-        accs.push((mode.as_str(), em));
+    let mut accs: Vec<(EngineKind, f64)> = Vec::new();
+    for kind in &kinds {
+        let spec = RunSpec::new("s", 8, "chain", n_req).with_engine(kind.clone());
+        let mut e = build_engine(&sess, &spec.serve_config()).expect("engine");
+        let (em, _) = evalsuite::eval_engine(e.as_mut(), &tok, items, 96).expect("eval");
+        accs.push((kind.clone(), em));
     }
-    let mut q = QSpecEngine::new(&sess, QSpecConfig::new("s", 8)).expect("engine");
-    let (em, _) = evalsuite::eval_qspec(&mut q, &tok, items, 96).expect("eval");
-    accs.push(("qspec", em));
 
     let mut table = Table::new(&["method", "batch", "EM (chain)", "tok/s(virt)"]);
     let mut out = Vec::new();
     for &b in &batches {
         let spec = RunSpec::new("s", b, "chain", n_req);
-        for (name, acc) in &accs {
-            let v = match *name {
-                "qspec" => run_qspec(&sess, &tok, &spec, true, false)
-                    .expect("run")
-                    .0
-                    .virt_tokens_per_s(),
-                m => run_ar(&sess, &tok, Mode::parse(m).unwrap(), &spec)
-                    .expect("run")
-                    .virt_tokens_per_s(),
-            };
-            table.row(&[name.to_string(), b.to_string(), pct(*acc), format!("{v:.0}")]);
+        for (kind, acc) in &accs {
+            let v = run_engine(&sess, &tok, &spec.with_engine(kind.clone()))
+                .expect("run")
+                .metrics
+                .virt_tokens_per_s();
+            table.row(&[kind.label().to_string(), b.to_string(), pct(*acc), format!("{v:.0}")]);
             out.push(obj(vec![
-                ("method", s(name)),
+                ("method", s(kind.label())),
                 ("batch", num(b as f64)),
                 ("em", num(*acc)),
                 ("virt_tok_s", num(v)),

@@ -8,8 +8,9 @@
 //!                dummy benchmark in the paper)
 //! Normalized throughput of W16A16 vs W4A16 at batches 8/16/32.
 
-use qspec::bench::runner::{full_mode, open_session, run_ar, RunSpec};
+use qspec::bench::runner::{full_mode, open_session, run_engine, RunSpec};
 use qspec::bench::{f2, Table};
+use qspec::config::EngineKind;
 use qspec::costmodel::{twins::Twin, CostModel, Phase};
 use qspec::model::Mode;
 use qspec::util::json::{num, obj, s, Json};
@@ -24,8 +25,12 @@ fn main() {
     let mut out = Vec::new();
     for &b in &batches {
         let spec = RunSpec::new("s", b, "sharegpt", n_req.max(b + 2));
-        let fp = run_ar(&sess, &tok, Mode::W16A16, &spec).expect("fp");
-        let awq = run_ar(&sess, &tok, Mode::W4A16, &spec).expect("awq");
+        let fp = run_engine(&sess, &tok, &spec.with_engine(EngineKind::Ar(Mode::W16A16)))
+            .expect("fp")
+            .metrics;
+        let awq = run_engine(&sess, &tok, &spec.with_engine(EngineKind::Ar(Mode::W4A16)))
+            .expect("awq")
+            .metrics;
 
         // (a) atom-stack: virtual clock
         let (a_fp, a_awq) = (fp.virt_tokens_per_s(), awq.virt_tokens_per_s());

@@ -4,7 +4,7 @@
 
 use qspec::bench::runner::open_session;
 use qspec::bench::{measure, Table};
-use qspec::coordinator::{QSpecConfig, QSpecEngine};
+use qspec::coordinator::{Engine, QSpecConfig, QSpecEngine};
 use qspec::model::Tokenizer;
 
 fn main() {

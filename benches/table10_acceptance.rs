@@ -1,8 +1,9 @@
 //! Tables 10 & 11: acceptance rates across tasks and model scales, and
 //! the larger "reasoning model" (xl twin) throughput row.
 
-use qspec::bench::runner::{full_mode, open_session, run_ar, run_qspec, RunSpec};
+use qspec::bench::runner::{full_mode, open_session, run_engine, RunSpec};
 use qspec::bench::{pct, speedup, Table};
+use qspec::config::EngineKind;
 use qspec::model::Mode;
 use qspec::util::json::{num, obj, s, Json};
 use qspec::workload::paper_name;
@@ -30,7 +31,7 @@ fn main() {
         let mut sum = 0.0;
         for ds in &datasets {
             let spec = RunSpec::new(size, 8, ds, n_req);
-            let (m, _) = run_qspec(&sess, &tok, &spec, true, false).expect("run");
+            let m = run_engine(&sess, &tok, &spec).expect("run").metrics;
             sum += m.acceptance_rate();
             cells.push(pct(m.acceptance_rate()));
             out.push(obj(vec![
@@ -49,8 +50,10 @@ fn main() {
     let mut t11 = Table::new(&["dataset", "W4A16 tok/s", "QSPEC tok/s", "speedup"]);
     for ds in &datasets {
         let spec = RunSpec::new("xl", 16, ds, n_req.max(18));
-        let base = run_ar(&sess, &tok, Mode::W4A16, &spec).expect("base");
-        let (qm, _) = run_qspec(&sess, &tok, &spec, true, false).expect("qspec");
+        let base = run_engine(&sess, &tok, &spec.with_engine(EngineKind::Ar(Mode::W4A16)))
+            .expect("base")
+            .metrics;
+        let qm = run_engine(&sess, &tok, &spec).expect("qspec").metrics;
         let su = qm.virt_tokens_per_s() / base.virt_tokens_per_s();
         t11.row(&[
             paper_name(ds).into(),

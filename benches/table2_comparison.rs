@@ -3,7 +3,7 @@
 //! fidelity). Mixed analytical (cost-model bytes) + measured (acceptance
 //! with and without KV-overwriting; the "QSpec (no-overwrite)" row).
 
-use qspec::bench::runner::{full_mode, open_session, run_qspec, RunSpec};
+use qspec::bench::runner::{full_mode, open_session, run_engine, RunSpec};
 use qspec::bench::Table;
 use qspec::costmodel::{twins::Twin, CostModel};
 use qspec::model::Mode;
@@ -15,8 +15,10 @@ fn main() {
     let spec = RunSpec::new("s", 8, "chain", n_req);
 
     // measured acceptance with/without overwriting
-    let (m_over, _) = run_qspec(&sess, &tok, &spec, true, false).expect("run");
-    let (m_no, _) = run_qspec(&sess, &tok, &spec, false, false).expect("run");
+    let m_over = run_engine(&sess, &tok, &spec).expect("run").metrics;
+    let mut no_ovw = spec.clone();
+    no_ovw.overwrite = false;
+    let m_no = run_engine(&sess, &tok, &no_ovw).expect("run").metrics;
     let acc_ratio = if m_over.acceptance_rate() > 0.0 {
         m_no.acceptance_rate() / m_over.acceptance_rate()
     } else {

@@ -8,7 +8,8 @@
 
 use qspec::bench::runner::{full_mode, open_session};
 use qspec::bench::{pct, Table};
-use qspec::coordinator::{ArEngine, QSpecConfig, QSpecEngine};
+use qspec::config::{EngineKind, ServeConfig};
+use qspec::coordinator::build_engine;
 use qspec::evalsuite::{self, load_eval};
 use qspec::model::Mode;
 use qspec::util::json::{num, obj, s, Json};
@@ -27,47 +28,44 @@ fn main() {
             "method", "WikiText2* ppl", "PIQA* EM", "GSM8K* EM", "MATH* EM", "MBPP* EM",
         ]);
         let ppl_rows = sess.store.root.join("eval").join("text_ppl.json");
-        // ppl per mode (w16a16 only exists for atom exports)
-        let modes: Vec<(&str, Option<Mode>)> = vec![
-            ("w16a16", Some(Mode::W16A16)),
-            ("w4a16", Some(Mode::W4A16)),
-            ("qspec", None),
-            ("w4a4", Some(Mode::W4A4)),
+        // row order mirrors the paper: fp, verify precision, qspec, draft
+        let rows: Vec<(&str, EngineKind)> = vec![
+            ("w16a16", EngineKind::Ar(Mode::W16A16)),
+            ("w4a16", EngineKind::Ar(Mode::W4A16)),
+            ("qspec", EngineKind::QSpec),
+            ("w4a4", EngineKind::Ar(Mode::W4A4)),
         ];
-        for (name, mode) in &modes {
+        for (name, kind) in &rows {
             if *scheme == "quarot" && *name == "w16a16" {
                 continue; // fp is scheme-independent; atom table already has it
             }
-            let ppl = match (name, mode) {
-                (_, Some(m)) => {
-                    let mode_str = m.as_str();
-                    let sch = if *m == Mode::W16A16 { "atom" } else { scheme };
-                    evalsuite::perplexity(&sess, "s", sch, mode_str, &ppl_rows)
-                        .map(|p| format!("{p:.2}"))
-                        .unwrap_or_else(|_| "-".into())
-                }
+            // fp exports only exist under the atom scheme
+            let sch = if *name == "w16a16" { "atom" } else { *scheme };
+            let ppl = if *name == "qspec" {
                 // QSPEC's verified stream has W4A16's distribution
-                _ => evalsuite::perplexity(&sess, "s", scheme, "w4a16", &ppl_rows)
+                evalsuite::perplexity(&sess, "s", sch, "w4a16", &ppl_rows)
                     .map(|p| format!("{p:.2} (=w4a16)"))
-                    .unwrap_or_else(|_| "-".into()),
+                    .unwrap_or_else(|_| "-".into())
+            } else {
+                evalsuite::perplexity(&sess, "s", sch, name, &ppl_rows)
+                    .map(|p| format!("{p:.2}"))
+                    .unwrap_or_else(|_| "-".into())
             };
             let mut cells = vec![format!("{scheme}/{name}"), ppl];
             for (task, _pname) in tasks.iter().zip(paper.iter()) {
                 let items = load_eval(&sess.store.eval_path(task)).expect("eval");
                 let items = &items[..n.min(items.len())];
-                let em = match mode {
-                    Some(m) => {
-                        let sch = if *m == Mode::W16A16 { "atom" } else { *scheme };
-                        let mut e = ArEngine::new(&sess, "s", sch, *m, 8).expect("engine");
-                        evalsuite::eval_ar(&mut e, &tok, items, 96).expect("eval").0
-                    }
-                    None => {
-                        let mut cfg = QSpecConfig::new("s", 8);
-                        cfg.scheme = scheme.to_string();
-                        let mut e = QSpecEngine::new(&sess, cfg).expect("engine");
-                        evalsuite::eval_qspec(&mut e, &tok, items, 96).expect("eval").0
-                    }
+                let cfg = ServeConfig {
+                    size: "s".into(),
+                    scheme: sch.to_string(),
+                    batch: 8,
+                    engine: kind.clone(),
+                    ..ServeConfig::default()
                 };
+                let mut e = build_engine(&sess, &cfg).expect("engine");
+                let em = evalsuite::eval_engine(e.as_mut(), &tok, items, 96)
+                    .expect("eval")
+                    .0;
                 cells.push(pct(em));
                 out.push(obj(vec![
                     ("scheme", s(scheme)),

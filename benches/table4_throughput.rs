@@ -6,8 +6,9 @@
 //! headlines. Quick mode covers s/m x {8,16} x {chain, sharegpt};
 //! QSPEC_BENCH_FULL=1 runs the full grid.
 
-use qspec::bench::runner::{full_mode, load_workload, open_session, run_ar, run_qspec, RunSpec};
+use qspec::bench::runner::{full_mode, load_workload, open_session, run_engine, RunSpec};
 use qspec::bench::{speedup, Table};
+use qspec::config::EngineKind;
 use qspec::model::Mode;
 use qspec::util::json::{arr, num, obj, s, Json};
 use qspec::workload::paper_name;
@@ -40,10 +41,12 @@ fn main() {
                 let _ = load_workload(&sess, &tok, &spec).expect("workload");
                 let mut results: Vec<(String, f64, f64)> = Vec::new();
                 for mode in [Mode::W16A16, Mode::W4A4, Mode::W4A16] {
-                    let m = run_ar(&sess, &tok, mode, &spec).expect("ar run");
+                    let m = run_engine(&sess, &tok, &spec.with_engine(EngineKind::Ar(mode)))
+                        .expect("ar run")
+                        .metrics;
                     results.push((mode.to_string(), m.virt_tokens_per_s(), m.wall_tokens_per_s()));
                 }
-                let (qm, _) = run_qspec(&sess, &tok, &spec, true, false).expect("qspec run");
+                let qm = run_engine(&sess, &tok, &spec).expect("qspec run").metrics;
                 results.push(("qspec".into(), qm.virt_tokens_per_s(), qm.wall_tokens_per_s()));
                 let w4a16_virt = results[2].1;
                 let w4a16_wall = results[2].2;

@@ -3,8 +3,9 @@
 //! falling behind at batch 8, simulated OOM at batch 16; QSPEC scaling
 //! through batch 16 with no extra memory.
 
-use qspec::bench::runner::{full_mode, open_session, run_ar, run_eagle, run_qspec, RunSpec};
+use qspec::bench::runner::{full_mode, open_session, run_engine, RunSpec};
 use qspec::bench::{speedup, Table};
+use qspec::config::EngineKind;
 use qspec::error::QspecError;
 use qspec::model::Mode;
 use qspec::util::json::{num, obj, s, Json};
@@ -29,8 +30,9 @@ fn main() {
         for &b in &batches {
             let spec = RunSpec::new("m", b, ds, n_req.max(b + 2));
             // EAGLE with tree drafting (the paper's configuration)
-            match run_eagle(&sess, &tok, &spec, 2) {
-                Ok(m) => {
+            match run_engine(&sess, &tok, &spec.with_engine(EngineKind::Eagle { tree_k: 2 })) {
+                Ok(out_e) => {
+                    let m = out_e.metrics;
                     let v = m.virt_tokens_per_s();
                     if b == 8 {
                         eagle8 = v;
@@ -60,7 +62,7 @@ fn main() {
                 Err(e) => panic!("eagle failed: {e}"),
             }
             // QSPEC
-            let (m, _) = run_qspec(&sess, &tok, &spec, true, false).expect("qspec");
+            let m = run_engine(&sess, &tok, &spec).expect("qspec").metrics;
             let v = m.virt_tokens_per_s();
             if b == 8 {
                 qspec8 = v;
@@ -76,7 +78,9 @@ fn main() {
             ]));
             // AR baselines
             for mode in [Mode::W4A16, Mode::W4A4] {
-                let m = run_ar(&sess, &tok, mode, &spec).expect("ar");
+                let m = run_engine(&sess, &tok, &spec.with_engine(EngineKind::Ar(mode)))
+                    .expect("ar")
+                    .metrics;
                 table.row(&[
                     mode.to_string(), b.to_string(), paper_name(ds).into(),
                     format!("{:.0}", m.virt_tokens_per_s()), String::new(),

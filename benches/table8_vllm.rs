@@ -3,8 +3,9 @@
 //! which *is* that serving design). Speedup over W4A16 autoregressive
 //! decoding with shared weights, batch 1..32, plus acceptance rates.
 
-use qspec::bench::runner::{full_mode, open_session, run_ar, run_qspec, RunSpec};
+use qspec::bench::runner::{full_mode, open_session, run_engine, RunSpec};
 use qspec::bench::{pct, speedup, Table};
+use qspec::config::EngineKind;
 use qspec::model::Mode;
 use qspec::util::json::{num, obj, s, Json};
 use qspec::workload::paper_name;
@@ -27,8 +28,10 @@ fn main() {
         let mut acc_last = 0.0;
         for &b in &batches {
             let spec = RunSpec::new("m", b, ds, n_req.max(b + 2));
-            let base = run_ar(&sess, &tok, Mode::W4A16, &spec).expect("base");
-            let (qm, _) = run_qspec(&sess, &tok, &spec, true, false).expect("qspec");
+            let base = run_engine(&sess, &tok, &spec.with_engine(EngineKind::Ar(Mode::W4A16)))
+                .expect("base")
+                .metrics;
+            let qm = run_engine(&sess, &tok, &spec).expect("qspec").metrics;
             let su = qm.virt_tokens_per_s() / base.virt_tokens_per_s();
             acc_last = qm.acceptance_rate();
             cells.push(speedup(su));

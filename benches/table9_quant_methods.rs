@@ -1,7 +1,7 @@
 //! Table 9: acceptance rates across base quantization methods
 //! (Atom-like vs QuaRot-like) on ShareGPT / MATH / MBPP analogs.
 
-use qspec::bench::runner::{full_mode, open_session, run_qspec, RunSpec};
+use qspec::bench::runner::{full_mode, open_session, run_engine, RunSpec};
 use qspec::bench::{pct, Table};
 use qspec::util::json::{num, obj, s, Json};
 use qspec::workload::paper_name;
@@ -18,7 +18,7 @@ fn main() {
         for ds in &datasets {
             let mut spec = RunSpec::new("s", 8, ds, n_req);
             spec.scheme = scheme.to_string();
-            let (m, _) = run_qspec(&sess, &tok, &spec, true, false).expect("run");
+            let m = run_engine(&sess, &tok, &spec).expect("run").metrics;
             cells.push(pct(m.acceptance_rate()));
             out.push(obj(vec![
                 ("scheme", s(scheme)),

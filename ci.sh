@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Tier-1 verification in one command: build, tests, formatting, lints.
+#
+#   ./ci.sh          # everything
+#   ./ci.sh fast     # build + tests only (skip fmt/clippy)
+#
+# Integration tests skip themselves when artifacts/ is absent; run
+# `make artifacts` first for full end-to-end coverage.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+# the cargo manifest may live at the repo root or under rust/
+if [ -f Cargo.toml ]; then
+    :
+elif [ -f rust/Cargo.toml ]; then
+    cd rust
+else
+    echo "ci.sh: no Cargo.toml found (repo root or rust/)" >&2
+    exit 1
+fi
+
+cargo build --release
+cargo test -q
+
+if [ "${1:-}" != "fast" ]; then
+    cargo fmt --check
+    cargo clippy --all-targets -- -D warnings
+fi
+
+echo "ci.sh: all checks passed"

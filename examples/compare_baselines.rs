@@ -4,9 +4,10 @@
 //!
 //!     cargo run --release --example compare_baselines
 
-use qspec::bench::runner::{open_session, run_ar, run_qspec, RunSpec};
+use qspec::bench::runner::{open_session, run_engine, RunSpec};
 use qspec::bench::Table;
-use qspec::coordinator::{ArEngine, QSpecConfig, QSpecEngine};
+use qspec::config::EngineKind;
+use qspec::coordinator::build_engine;
 use qspec::evalsuite::{self, load_eval};
 use qspec::model::Mode;
 
@@ -16,25 +17,26 @@ fn main() -> qspec::Result<()> {
     let items = &items[..24.min(items.len())];
     let spec = RunSpec::new("s", 8, "chain", 16);
 
+    let configs: [(EngineKind, &str); 4] = [
+        (EngineKind::Ar(Mode::W16A16), "accurate, heavy memory"),
+        (EngineKind::Ar(Mode::W4A16), "accurate, slow"),
+        (EngineKind::Ar(Mode::W4A4), "fast, degraded on multi-step"),
+        (EngineKind::QSpec, "accurate AND fast (the paper's point)"),
+    ];
+
     let mut table = Table::new(&["method", "chain EM", "virt tok/s", "verdict"]);
-    for mode in [Mode::W16A16, Mode::W4A16, Mode::W4A4] {
-        let mut e = ArEngine::new(&sess, "s", "atom", mode, 8)?;
-        let (em, _) = evalsuite::eval_ar(&mut e, &tok, items, 96)?;
-        let thr = run_ar(&sess, &tok, mode, &spec)?.virt_tokens_per_s();
-        let verdict = match mode {
-            Mode::W16A16 => "accurate, heavy memory",
-            Mode::W4A16 => "accurate, slow",
-            Mode::W4A4 => "fast, degraded on multi-step",
-        };
-        table.row(&[mode.to_string(), format!("{:.1}%", 100.0 * em),
-                    format!("{thr:.0}"), verdict.into()]);
+    for (kind, verdict) in &configs {
+        let run = spec.with_engine(kind.clone());
+        let mut e = build_engine(&sess, &run.serve_config())?;
+        let (em, _) = evalsuite::eval_engine(e.as_mut(), &tok, items, 96)?;
+        let thr = run_engine(&sess, &tok, &run)?.metrics.virt_tokens_per_s();
+        table.row(&[
+            kind.label().to_string(),
+            format!("{:.1}%", 100.0 * em),
+            format!("{thr:.0}"),
+            verdict.to_string(),
+        ]);
     }
-    let mut q = QSpecEngine::new(&sess, QSpecConfig::new("s", 8))?;
-    let (em, _) = evalsuite::eval_qspec(&mut q, &tok, items, 96)?;
-    let (qm, _) = run_qspec(&sess, &tok, &spec, true, false)?;
-    table.row(&["qspec".into(), format!("{:.1}%", 100.0 * em),
-                format!("{:.0}", qm.virt_tokens_per_s()),
-                "accurate AND fast (the paper's point)".into()]);
     table.print("figure-1 story: quality/speed across configurations");
     Ok(())
 }

@@ -6,12 +6,14 @@
 //!
 //!     cargo run --release --example e2e_serve [-- --size m --batch 16 --n 48]
 //!
-//! The run recorded in EXPERIMENTS.md §E2E used the defaults.
+//! The run recorded in EXPERIMENTS.md §E2E used the defaults. Both
+//! engines run through the same `&mut dyn Engine` drive loop.
 
 use qspec::bench::runner::{load_workload, RunSpec};
 use qspec::bench::Table;
 use qspec::cli::Args;
-use qspec::coordinator::{ArEngine, QSpecConfig, QSpecEngine};
+use qspec::config::{EngineKind, ServeConfig};
+use qspec::coordinator::build_engine;
 use qspec::model::{Mode, Tokenizer};
 use qspec::runtime::{ArtifactStore, Session};
 
@@ -35,54 +37,49 @@ fn main() -> qspec::Result<()> {
     println!("serving {} requests on size={size} batch={batch} (mixed workload)", work.len());
 
     let mut table = Table::new(&[
-        "engine", "req", "tok", "wall tok/s", "virt tok/s", "p50 ms", "p99 ms", "accept",
+        "engine", "req", "tok", "wall tok/s", "virt tok/s", "p50 ms", "p99 ms",
+        "queue p50 ms", "accept",
     ]);
 
-    // --- QSPEC -------------------------------------------------------
-    let mut q = QSpecEngine::new(&sess, QSpecConfig::new(&size, batch))?;
-    for (p, mt) in &work {
-        q.submit(p.clone(), *mt);
+    let mut speeds: Vec<(f64, f64)> = Vec::new(); // (wall, virt) per engine
+    for kind in [EngineKind::QSpec, EngineKind::Ar(Mode::W4A16)] {
+        let cfg = ServeConfig {
+            size: size.clone(),
+            batch,
+            engine: kind.clone(),
+            ..ServeConfig::default()
+        };
+        let mut e = build_engine(&sess, &cfg)?;
+        for (p, mt) in &work {
+            e.submit(p.clone(), *mt);
+        }
+        let fins = e.run_to_completion()?;
+        assert_eq!(fins.len(), work.len(), "all requests must complete");
+        let m = e.metrics();
+        let accept = if m.drafted > 0 {
+            format!("{:.1}%", 100.0 * m.acceptance_rate())
+        } else {
+            "-".into()
+        };
+        table.row(&[
+            e.name().into(),
+            m.requests_done.to_string(),
+            m.tokens_out.to_string(),
+            format!("{:.1}", m.wall_tokens_per_s()),
+            format!("{:.0}", m.virt_tokens_per_s()),
+            format!("{:.1}", m.req_latency.percentile(50.0) as f64 / 1e6),
+            format!("{:.1}", m.req_latency.percentile(99.0) as f64 / 1e6),
+            format!("{:.1}", m.queue_wait.percentile(50.0) as f64 / 1e6),
+            accept,
+        ]);
+        speeds.push((m.wall_tokens_per_s(), m.virt_tokens_per_s()));
     }
-    let fins = q.run_to_completion()?;
-    assert_eq!(fins.len(), work.len(), "all requests must complete");
-    let m = &q.metrics;
-    table.row(&[
-        "qspec".into(),
-        m.requests_done.to_string(),
-        m.tokens_out.to_string(),
-        format!("{:.1}", m.wall_tokens_per_s()),
-        format!("{:.0}", m.virt_tokens_per_s()),
-        format!("{:.1}", m.req_latency.percentile(50.0) as f64 / 1e6),
-        format!("{:.1}", m.req_latency.percentile(99.0) as f64 / 1e6),
-        format!("{:.1}%", 100.0 * m.acceptance_rate()),
-    ]);
-    let q_wall = m.wall_tokens_per_s();
-    let q_virt = m.virt_tokens_per_s();
-
-    // --- W4A16 baseline ------------------------------------------------
-    let mut a = ArEngine::new(&sess, &size, "atom", Mode::W4A16, batch)?;
-    for (p, mt) in &work {
-        a.submit(p.clone(), *mt);
-    }
-    let fins = a.run_to_completion()?;
-    assert_eq!(fins.len(), work.len());
-    let m = &a.metrics;
-    table.row(&[
-        "w4a16".into(),
-        m.requests_done.to_string(),
-        m.tokens_out.to_string(),
-        format!("{:.1}", m.wall_tokens_per_s()),
-        format!("{:.0}", m.virt_tokens_per_s()),
-        format!("{:.1}", m.req_latency.percentile(50.0) as f64 / 1e6),
-        format!("{:.1}", m.req_latency.percentile(99.0) as f64 / 1e6),
-        "-".into(),
-    ]);
 
     table.print("end-to-end serving");
     println!(
         "\nQSPEC speedup over W4A16: {:.2}x wall, {:.2}x virtual (paper: 1.2-1.64x)",
-        q_wall / a.metrics.wall_tokens_per_s(),
-        q_virt / a.metrics.virt_tokens_per_s(),
+        speeds[0].0 / speeds[1].0,
+        speeds[0].1 / speeds[1].1,
     );
     Ok(())
 }

@@ -1,11 +1,14 @@
-//! Quickstart: load the artifacts, build a QSPEC engine, and generate.
+//! Quickstart: load the artifacts, build an engine, and generate.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 //!
 //! Demonstrates the core API surface: ArtifactStore -> Session ->
-//! QSpecEngine -> submit/run_to_completion.
+//! build_engine -> submit/run_to_completion. The engine is selected by
+//! `ServeConfig::engine` (QSPEC here); swapping to a baseline is a
+//! one-line config change — the driving code is engine-generic.
 
-use qspec::coordinator::{QSpecConfig, QSpecEngine};
+use qspec::config::ServeConfig;
+use qspec::coordinator::build_engine;
 use qspec::model::Tokenizer;
 use qspec::runtime::{ArtifactStore, Session};
 
@@ -16,7 +19,8 @@ fn main() -> qspec::Result<()> {
 
     // The QSPEC engine: W4A4 drafting + W4A16 verification over shared
     // int4 weights and a single KV cache.
-    let mut engine = QSpecEngine::new(&sess, QSpecConfig::new("s", 8))?;
+    let cfg = ServeConfig::default(); // engine = QSpec, size = "s", batch = 8
+    let mut engine = build_engine(&sess, &cfg)?;
 
     // The synthetic "chain" task (GSM8K analog): apply the secret
     // permutation x/y step by step. The model emits the steps + answer.
@@ -37,11 +41,12 @@ fn main() -> qspec::Result<()> {
                  f.tokens.len(), f.latency_ns as f64 / 1e6);
         print!("{p}{}", tok.decode(&f.tokens));
     }
-    println!("\nacceptance rate: {:.1}%", 100.0 * engine.metrics.acceptance_rate());
+    let m = engine.metrics();
+    println!("\nacceptance rate: {:.1}%", 100.0 * m.acceptance_rate());
     println!("mean accepted drafts/cycle: {:.2} of gamma={}",
-             engine.metrics.accept_len.mean(), engine.cfg.gamma);
+             m.accept_len.mean(), cfg.gamma);
     println!("throughput: {:.1} tok/s wall, {:.0} tok/s on the L20 virtual clock",
-             engine.metrics.wall_tokens_per_s(),
-             engine.metrics.virt_tokens_per_s());
+             m.wall_tokens_per_s(),
+             m.virt_tokens_per_s());
     Ok(())
 }

@@ -2,6 +2,11 @@
 //! requests over the line protocol, prints the responses, shuts down.
 //!
 //!     cargo build --release && cargo run --release --example tcp_server_demo
+//!
+//! Pass an engine name to serve a different scheme (all engine kinds
+//! are servable, including the EAGLE baseline):
+//!
+//!     cargo run --release --example tcp_server_demo -- --engine eagle
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -37,10 +42,17 @@ fn main() {
         eprintln!("build the binary first: cargo build --release");
         std::process::exit(1);
     }
+    let engine = std::env::args()
+        .skip_while(|a| a != "--engine")
+        .nth(1)
+        .unwrap_or_else(|| "qspec".to_string());
     let port = 7413u16;
     let mut child: Child = Command::new(&bin)
         .current_dir(&root)
-        .args(["serve", "--size", "s", "--batch", "8", "--port", &port.to_string()])
+        .args([
+            "serve", "--size", "s", "--batch", "8",
+            "--port", &port.to_string(), "--engine", &engine,
+        ])
         .spawn()
         .expect("spawn qspec serve");
 

@@ -1,12 +1,14 @@
-//! Shared bench runner: drives a workload trace through an engine and
-//! returns its metrics. Every table/figure bench builds on these.
+//! Shared bench runner: drives a workload trace through any engine and
+//! returns its metrics. Every table/figure bench builds on the single
+//! engine-generic [`run_engine`] driver — there is no per-engine drive
+//! loop anymore; `RunSpec.engine` selects the scheme and
+//! `coordinator::build_engine` does the construction.
 
-use crate::coordinator::{
-    ArEngine, EagleConfig, EagleEngine, QSpecConfig, QSpecEngine, SimilaritySample,
-};
+use crate::config::{EngineKind, ServeConfig};
+use crate::coordinator::{build_engine, SimilaritySample};
 use crate::error::Result;
 use crate::metrics::EngineMetrics;
-use crate::model::{Mode, Tokenizer};
+use crate::model::Tokenizer;
 use crate::runtime::Session;
 use crate::workload;
 
@@ -21,6 +23,12 @@ pub struct RunSpec {
     pub n_requests: usize,
     /// cap on per-request generation length (0 = trace value)
     pub max_tokens_cap: usize,
+    /// which engine to drive (default: QSPEC).
+    pub engine: EngineKind,
+    /// QSPEC KV-overwriting (false = Table 2 ablation).
+    pub overwrite: bool,
+    /// record fig-2 similarity samples (QSPEC only).
+    pub collect_similarity: bool,
 }
 
 impl RunSpec {
@@ -33,8 +41,42 @@ impl RunSpec {
             dataset: dataset.to_string(),
             n_requests,
             max_tokens_cap: 48,
+            engine: EngineKind::QSpec,
+            overwrite: true,
+            collect_similarity: false,
         }
     }
+
+    /// Same spec, different engine (benches sweep engines over one
+    /// workload this way).
+    pub fn with_engine(&self, engine: EngineKind) -> RunSpec {
+        let mut s = self.clone();
+        s.engine = engine;
+        s
+    }
+
+    /// The serving configuration this spec describes (feeds
+    /// `build_engine`; port/defaults are irrelevant for offline runs).
+    pub fn serve_config(&self) -> ServeConfig {
+        ServeConfig {
+            size: self.size.clone(),
+            scheme: self.scheme.clone(),
+            batch: self.batch,
+            gamma: self.gamma,
+            engine: self.engine.clone(),
+            overwrite: self.overwrite,
+            collect_similarity: self.collect_similarity,
+            ..ServeConfig::default()
+        }
+    }
+}
+
+/// Result of one engine run over a workload.
+pub struct RunOutput {
+    pub metrics: EngineMetrics,
+    /// fig-2 samples (empty unless `collect_similarity` on a drafting
+    /// engine).
+    pub samples: Vec<SimilaritySample>,
 }
 
 /// Tokenized workload: (prompt ids, max_tokens).
@@ -59,58 +101,19 @@ pub fn load_workload(
         .collect())
 }
 
-/// Run QSPEC over the workload; returns (metrics, similarity samples).
-pub fn run_qspec(
-    sess: &Session,
-    tok: &Tokenizer,
-    spec: &RunSpec,
-    overwrite: bool,
-    collect_similarity: bool,
-) -> Result<(EngineMetrics, Vec<SimilaritySample>)> {
-    let mut cfg = QSpecConfig::new(&spec.size, spec.batch);
-    cfg.scheme = spec.scheme.clone();
-    cfg.gamma = spec.gamma;
-    cfg.overwrite = overwrite;
-    cfg.collect_similarity = collect_similarity;
-    let mut e = QSpecEngine::new(sess, cfg)?;
+/// Drive the engine selected by `spec.engine` over the workload. The
+/// one drive loop behind every bench; `Err(Oom)` propagates so the
+/// EAGLE OOM cells reproduce.
+pub fn run_engine(sess: &Session, tok: &Tokenizer, spec: &RunSpec) -> Result<RunOutput> {
+    let mut e = build_engine(sess, &spec.serve_config())?;
     for (p, mt) in load_workload(sess, tok, spec)? {
         e.submit(p, mt);
     }
     e.run_to_completion()?;
-    Ok((e.metrics.clone(), std::mem::take(&mut e.samples)))
-}
-
-/// Run a single-mode AR baseline over the workload.
-pub fn run_ar(
-    sess: &Session,
-    tok: &Tokenizer,
-    mode: Mode,
-    spec: &RunSpec,
-) -> Result<EngineMetrics> {
-    let mut e = ArEngine::new(sess, &spec.size, &spec.scheme, mode, spec.batch)?;
-    for (p, mt) in load_workload(sess, tok, spec)? {
-        e.submit(p, mt);
-    }
-    e.run_to_completion()?;
-    Ok(e.metrics.clone())
-}
-
-/// Run the EAGLE baseline; Err(Oom) reproduces the paper's OOM cells.
-pub fn run_eagle(
-    sess: &Session,
-    tok: &Tokenizer,
-    spec: &RunSpec,
-    tree_k: usize,
-) -> Result<EngineMetrics> {
-    let mut cfg = EagleConfig::new(spec.batch, tree_k);
-    cfg.size = spec.size.clone();
-    cfg.scheme = spec.scheme.clone();
-    let mut e = EagleEngine::new(sess, cfg)?;
-    for (p, mt) in load_workload(sess, tok, spec)? {
-        e.submit(p, mt);
-    }
-    e.run_to_completion()?;
-    Ok(e.metrics.clone())
+    Ok(RunOutput {
+        metrics: e.metrics().clone(),
+        samples: e.take_samples(),
+    })
 }
 
 /// `cargo bench` quick/full switch: set QSPEC_BENCH_FULL=1 for the

@@ -17,6 +17,28 @@ pub enum EngineKind {
     Eagle { tree_k: usize },
 }
 
+impl EngineKind {
+    /// Parse a CLI engine name: `qspec`, an AR mode (`w16a16`/`w4a16`/
+    /// `w4a4`), `eagle` (chain) or `eagle-tree` (tree_k = 2).
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s {
+            "qspec" => Some(EngineKind::QSpec),
+            "eagle" => Some(EngineKind::Eagle { tree_k: 1 }),
+            "eagle-tree" => Some(EngineKind::Eagle { tree_k: 2 }),
+            m => Mode::parse(m).map(EngineKind::Ar),
+        }
+    }
+
+    /// Short stable label for tables and JSON output.
+    pub fn label(&self) -> &'static str {
+        match self {
+            EngineKind::QSpec => "qspec",
+            EngineKind::Ar(m) => m.as_str(),
+            EngineKind::Eagle { .. } => "eagle",
+        }
+    }
+}
+
 /// Full serving configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -27,6 +49,8 @@ pub struct ServeConfig {
     pub gamma: usize,
     pub engine: EngineKind,
     pub overwrite: bool,
+    /// record fig-2 similarity samples (QSPEC only; small overhead).
+    pub collect_similarity: bool,
     pub max_tokens_default: usize,
     pub port: u16,
 }
@@ -41,7 +65,10 @@ impl Default for ServeConfig {
             gamma: 3,
             engine: EngineKind::QSpec,
             overwrite: true,
-            max_tokens_default: 96,
+            collect_similarity: false,
+            // the line protocol's documented default for requests that
+            // omit max_tokens (kept at the server's historical 64)
+            max_tokens_default: 64,
             port: 7199,
         }
     }
@@ -69,6 +96,16 @@ mod tests {
     #[test]
     fn default_is_valid() {
         assert!(ServeConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn engine_kind_parse() {
+        assert_eq!(EngineKind::parse("qspec"), Some(EngineKind::QSpec));
+        assert_eq!(EngineKind::parse("w4a16"), Some(EngineKind::Ar(Mode::W4A16)));
+        assert_eq!(EngineKind::parse("eagle"), Some(EngineKind::Eagle { tree_k: 1 }));
+        assert_eq!(EngineKind::parse("eagle-tree"), Some(EngineKind::Eagle { tree_k: 2 }));
+        assert_eq!(EngineKind::parse("nope"), None);
+        assert_eq!(EngineKind::Eagle { tree_k: 2 }.label(), "eagle");
     }
 
     #[test]

@@ -1,20 +1,20 @@
 //! Autoregressive baselines: W16A16 / W4A16 / W4A4 single-mode serving
 //! with the same FCFS continuous batcher. These regenerate the baseline
 //! rows of Tables 4/6 and the W4A16 reference QSPEC is measured against.
+//!
+//! Request plumbing lives in the shared [`BatchCore`]; this file is the
+//! single-mode prefill/decode phase logic only.
 
-use std::collections::HashMap;
 use std::rc::Rc;
-use std::time::Instant;
 
 use crate::costmodel::{twins::Twin, CostModel, Phase};
-use crate::error::{QspecError, Result};
+use crate::error::Result;
 use crate::kvcache::SlotManager;
-use crate::metrics::{EngineMetrics, PhaseKind, PhaseTimer};
-use crate::model::tokenizer::{EOS, PAD};
+use crate::metrics::{PhaseKind, PhaseTimer};
 use crate::model::Mode;
 use crate::runtime::{ModelMeta, Module, Session, WeightSet};
 
-use super::queue::FcfsQueue;
+use super::engine::{BatchCore, Engine};
 use super::request::Finished;
 
 /// Single-mode autoregressive engine.
@@ -22,17 +22,12 @@ pub struct ArEngine<'s> {
     #[allow(dead_code)]
     sess: &'s Session,
     pub mode: Mode,
-    pub batch: usize,
     pub meta: ModelMeta,
     prefill_m: Rc<Module>,
     decode_m: Rc<Module>,
     weights: Rc<WeightSet>,
     kv: Option<xla::PjRtBuffer>,
-    pub slots: SlotManager,
-    pub queue: FcfsQueue,
-    pub metrics: EngineMetrics,
-    pub cost: CostModel,
-    arrivals: HashMap<u64, Instant>,
+    pub core: BatchCore,
 }
 
 impl<'s> ArEngine<'s> {
@@ -57,136 +52,76 @@ impl<'s> ArEngine<'s> {
         Ok(ArEngine {
             sess,
             mode,
-            batch,
             meta,
             prefill_m,
             decode_m,
             weights,
             kv,
-            slots,
-            queue: FcfsQueue::new(),
-            metrics: EngineMetrics::new(),
-            cost,
-            arrivals: HashMap::new(),
+            core: BatchCore::new(slots, cost),
         })
     }
 
-    pub fn submit(&mut self, prompt: Vec<i32>, max_tokens: usize) -> u64 {
-        let id = self.queue.push(prompt, max_tokens);
-        self.arrivals.insert(id, Instant::now());
-        id
-    }
-
-    pub fn has_work(&self) -> bool {
-        !self.queue.is_empty() || self.slots.any_active()
-    }
-
-    fn finish(&mut self, idx: usize, out: &mut Vec<Finished>) {
-        if let Some((id, tokens)) = self.slots.release(idx) {
-            let latency_ns = self
-                .arrivals
-                .remove(&id)
-                .map(|t| t.elapsed().as_nanos())
-                .unwrap_or(0);
-            self.metrics.req_latency.record(latency_ns as u64);
-            self.metrics.requests_done += 1;
-            out.push(Finished { id, tokens, latency_ns });
-        }
-    }
-
     fn admit_and_prefill(&mut self, out: &mut Vec<Finished>) -> Result<()> {
-        let p = self.slots.prefill_t();
-        let b = self.batch;
-        let mut admitted = Vec::new();
-        while !self.queue.is_empty() && !self.slots.free_slots().is_empty() {
-            let req = self.queue.pop().unwrap();
-            let plen = req.prompt.len().min(p);
-            let idx = self.slots.admit(req.id, plen, req.max_tokens)?;
-            admitted.push((idx, req));
-        }
-        if admitted.is_empty() {
-            return Ok(());
-        }
-        let mut tokens = vec![PAD; b * p];
-        let mut start = vec![0i32; b];
-        let mut mask = vec![0i32; b];
-        for (idx, req) in &admitted {
-            let s = self.slots.slot(*idx).start as usize;
-            start[*idx] = s as i32;
-            mask[*idx] = 1;
-            tokens[*idx * p + s..*idx * p + p].copy_from_slice(&req.prompt[..p - s]);
-        }
+        let pb = match self.core.admit_batch(out)? {
+            Some(pb) => pb,
+            None => return Ok(()),
+        };
+        let p = self.core.slots.prefill_t();
         let timer = PhaseTimer::start();
         let kv = self.kv.take().expect("kv");
-        let r = self.prefill_m.call_prefill(&tokens, &start, &mask, &kv, &self.weights)?;
+        let r = self
+            .prefill_m
+            .call_prefill(&pb.tokens, &pb.start, &pb.mask, &kv, &self.weights)?;
         self.kv = Some(r.kv);
-        let virt = self.cost.charge(self.mode, Phase::Chunk, admitted.len(), p, p);
-        self.metrics.add_phase(PhaseKind::Prefill, timer.elapsed_ns(), virt);
-        for (idx, _) in &admitted {
-            let done = self.slots.after_prefill(*idx, r.tok[*idx], EOS);
-            self.metrics.tokens_out += 1;
-            self.metrics.committed += 1;
-            if done {
-                self.finish(*idx, out);
-            }
-        }
+        let virt = self
+            .core
+            .cost
+            .charge(self.mode, Phase::Chunk, pb.admitted.len(), p, p);
+        self.core.metrics.add_phase(PhaseKind::Prefill, timer.elapsed_ns(), virt);
+        self.core.finish_prefill(&pb, &r.tok, out);
         Ok(())
     }
 
     fn decode_step(&mut self, out: &mut Vec<Finished>) -> Result<()> {
-        let active = self.slots.active_slots();
-        if active.is_empty() {
-            return Ok(());
-        }
-        let b = self.batch;
-        let ctx = active
-            .iter()
-            .map(|&i| self.slots.context_len(i))
-            .sum::<usize>()
-            / active.len();
-        let mut tok = vec![PAD; b];
-        let mut pos = vec![0i32; b];
-        let mut start = vec![0i32; b];
-        for &i in &active {
-            let s = self.slots.slot(i);
-            tok[i] = s.pending;
-            pos[i] = s.pos;
-            start[i] = s.start;
-        }
+        let sb = match self.core.step_inputs() {
+            Some(sb) => sb,
+            None => return Ok(()),
+        };
         let timer = PhaseTimer::start();
         let kv = self.kv.take().expect("kv");
-        let r = self.decode_m.call_decode(&tok, &pos, &start, &kv, &self.weights)?;
+        let r = self
+            .decode_m
+            .call_decode(&sb.tok, &sb.pos, &sb.start, &kv, &self.weights)?;
         self.kv = Some(r.kv);
-        let virt = self.cost.charge(self.mode, Phase::Decode, active.len(), 1, ctx);
-        self.metrics.add_phase(PhaseKind::Decode, timer.elapsed_ns(), virt);
-        for &i in &active {
-            let committed = self.slots.commit(i, &[r.tok[i]], EOS, 1);
-            self.metrics.committed += committed.len() as u64;
-            self.metrics.tokens_out += committed.len() as u64;
-            if self.slots.slot(i).done {
-                self.finish(i, out);
-            }
+        let virt = self
+            .core
+            .cost
+            .charge(self.mode, Phase::Decode, sb.active.len(), 1, sb.mean_ctx);
+        self.core.metrics.add_phase(PhaseKind::Decode, timer.elapsed_ns(), virt);
+        for &i in &sb.active {
+            self.core.commit(i, &[r.tok[i]], 1, out);
         }
         Ok(())
     }
+}
 
-    pub fn step(&mut self) -> Result<Vec<Finished>> {
+impl<'s> Engine for ArEngine<'s> {
+    fn name(&self) -> &'static str {
+        self.mode.as_str()
+    }
+
+    fn core(&self) -> &BatchCore {
+        &self.core
+    }
+
+    fn core_mut(&mut self) -> &mut BatchCore {
+        &mut self.core
+    }
+
+    fn step(&mut self) -> Result<Vec<Finished>> {
         let mut out = Vec::new();
         self.admit_and_prefill(&mut out)?;
         self.decode_step(&mut out)?;
-        Ok(out)
-    }
-
-    pub fn run_to_completion(&mut self) -> Result<Vec<Finished>> {
-        let mut out = Vec::new();
-        let mut guard = 0usize;
-        while self.has_work() {
-            out.extend(self.step()?);
-            guard += 1;
-            if guard > 5_000_000 {
-                return Err(QspecError::Scheduler("ar run stuck".into()));
-            }
-        }
         Ok(out)
     }
 }

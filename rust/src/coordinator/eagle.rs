@@ -11,21 +11,23 @@
 //!    batch 16. Tree verification cost/memory are modeled through the
 //!    cost model (the executed path is the principal chain); DESIGN.md §3
 //!    documents this substitution.
+//!
+//! Request plumbing lives in the shared [`BatchCore`]; this file is the
+//! two-model draft/verify phase logic only. Through the [`Engine`]
+//! trait this baseline is servable over TCP like any other engine.
 
-use std::collections::HashMap;
 use std::rc::Rc;
-use std::time::Instant;
 
 use crate::costmodel::{twins::Twin, CostModel, Phase};
-use crate::error::{QspecError, Result};
+use crate::error::Result;
 use crate::kvcache::SlotManager;
-use crate::metrics::{EngineMetrics, PhaseKind, PhaseTimer};
-use crate::model::tokenizer::{EOS, PAD};
+use crate::metrics::{PhaseKind, PhaseTimer};
+use crate::model::tokenizer::PAD;
 use crate::model::Mode;
 use crate::runtime::{ModelMeta, Module, Session, WeightSet};
 
 use super::acceptance::greedy_accept;
-use super::queue::FcfsQueue;
+use super::engine::{BatchCore, Engine};
 use super::request::Finished;
 
 /// EAGLE baseline configuration.
@@ -84,11 +86,7 @@ pub struct EagleEngine<'s> {
     d_weights: Rc<WeightSet>,
     kv_target: Option<xla::PjRtBuffer>,
     kv_draft: Option<xla::PjRtBuffer>,
-    pub slots: SlotManager,
-    pub queue: FcfsQueue,
-    pub metrics: EngineMetrics,
-    pub cost: CostModel,
-    arrivals: HashMap<u64, Instant>,
+    pub core: BatchCore,
 }
 
 impl<'s> EagleEngine<'s> {
@@ -146,125 +144,73 @@ impl<'s> EagleEngine<'s> {
             d_weights,
             kv_target,
             kv_draft,
-            slots,
-            queue: FcfsQueue::new(),
-            metrics: EngineMetrics::new(),
-            cost,
-            arrivals: HashMap::new(),
+            core: BatchCore::new(slots, cost),
         })
     }
 
-    pub fn submit(&mut self, prompt: Vec<i32>, max_tokens: usize) -> u64 {
-        let id = self.queue.push(prompt, max_tokens);
-        self.arrivals.insert(id, Instant::now());
-        id
-    }
-
-    pub fn has_work(&self) -> bool {
-        !self.queue.is_empty() || self.slots.any_active()
-    }
-
-    fn finish(&mut self, idx: usize, out: &mut Vec<Finished>) {
-        if let Some((id, tokens)) = self.slots.release(idx) {
-            let latency_ns = self
-                .arrivals
-                .remove(&id)
-                .map(|t| t.elapsed().as_nanos())
-                .unwrap_or(0);
-            self.metrics.req_latency.record(latency_ns as u64);
-            self.metrics.requests_done += 1;
-            out.push(Finished { id, tokens, latency_ns });
-        }
-    }
-
     fn admit_and_prefill(&mut self, out: &mut Vec<Finished>) -> Result<()> {
-        let p = self.slots.prefill_t();
-        let b = self.cfg.batch;
-        let mut admitted = Vec::new();
-        while !self.queue.is_empty() && !self.slots.free_slots().is_empty() {
-            let req = self.queue.pop().unwrap();
-            let plen = req.prompt.len().min(p);
-            let idx = self.slots.admit(req.id, plen, req.max_tokens)?;
-            admitted.push((idx, req));
-        }
-        if admitted.is_empty() {
-            return Ok(());
-        }
-        let mut tokens = vec![PAD; b * p];
-        let mut start = vec![0i32; b];
-        let mut mask = vec![0i32; b];
-        for (idx, req) in &admitted {
-            let s = self.slots.slot(*idx).start as usize;
-            start[*idx] = s as i32;
-            mask[*idx] = 1;
-            tokens[*idx * p + s..*idx * p + p].copy_from_slice(&req.prompt[..p - s]);
-        }
+        let pb = match self.core.admit_batch(out)? {
+            Some(pb) => pb,
+            None => return Ok(()),
+        };
+        let p = self.core.slots.prefill_t();
         // target prefill
         let timer = PhaseTimer::start();
         let kv = self.kv_target.take().expect("kv");
-        let r = self.t_prefill.call_prefill(&tokens, &start, &mask, &kv, &self.t_weights)?;
+        let r = self
+            .t_prefill
+            .call_prefill(&pb.tokens, &pb.start, &pb.mask, &kv, &self.t_weights)?;
         self.kv_target = Some(r.kv);
-        let virt = self.cost.charge(Mode::W4A16, Phase::Chunk, admitted.len(), p, p);
-        self.metrics.add_phase(PhaseKind::Prefill, timer.elapsed_ns(), virt);
+        let virt = self
+            .core
+            .cost
+            .charge(Mode::W4A16, Phase::Chunk, pb.admitted.len(), p, p);
+        self.core.metrics.add_phase(PhaseKind::Prefill, timer.elapsed_ns(), virt);
         // draft-model prefill (its own cache — the memory overhead QSPEC avoids)
         let timer = PhaseTimer::start();
         let dkv = self.kv_draft.take().expect("dkv");
-        let r2 = self.d_prefill.call_prefill(&tokens, &start, &mask, &dkv, &self.d_weights)?;
+        let r2 = self
+            .d_prefill
+            .call_prefill(&pb.tokens, &pb.start, &pb.mask, &dkv, &self.d_weights)?;
         self.kv_draft = Some(r2.kv);
-        self.metrics.add_phase(PhaseKind::Prefill, timer.elapsed_ns(), 0);
-        for (idx, _) in &admitted {
-            let done = self.slots.after_prefill(*idx, r.tok[*idx], EOS);
-            self.metrics.tokens_out += 1;
-            self.metrics.committed += 1;
-            if done {
-                self.finish(*idx, out);
-            }
-        }
+        self.core.metrics.add_phase(PhaseKind::Prefill, timer.elapsed_ns(), 0);
+        self.core.finish_prefill(&pb, &r.tok, out);
         Ok(())
     }
 
     fn cycle(&mut self, out: &mut Vec<Finished>) -> Result<()> {
-        let active = self.slots.active_slots();
-        if active.is_empty() {
-            return Ok(());
-        }
+        let sb = match self.core.step_inputs() {
+            Some(sb) => sb,
+            None => return Ok(()),
+        };
         let b = self.cfg.batch;
         let g = self.cfg.gamma;
-        let ctx = active
-            .iter()
-            .map(|&i| self.slots.context_len(i))
-            .sum::<usize>()
-            / active.len();
-        let mut tok = vec![PAD; b];
-        let mut pos = vec![0i32; b];
-        let mut start = vec![0i32; b];
-        let mut mask = vec![0i32; b];
-        for &i in &active {
-            let s = self.slots.slot(i);
-            tok[i] = s.pending;
-            pos[i] = s.pos;
-            start[i] = s.start;
-            mask[i] = 1;
-        }
 
         // draft: the separate FP16 draft model, chain of gamma steps
         let timer = PhaseTimer::start();
         let dkv = self.kv_draft.take().expect("dkv");
-        let d = self.d_draft.call_draft(&tok, &pos, &start, &dkv, &self.d_weights)?;
+        let d = self.d_draft.call_draft(&sb.tok, &sb.pos, &sb.start, &dkv, &self.d_weights)?;
         self.kv_draft = Some(d.kv);
         let draft_twin = Twin::lookup("eagle-head");
         let mut virt = 0u128;
         for _ in 0..g {
             // draft decode steps on the small fp model, same device clock
-            virt += CostModel::ns_for(&draft_twin, Mode::W16A16, Phase::Decode, active.len(), 1, ctx);
+            virt += CostModel::ns_for(
+                &draft_twin,
+                Mode::W16A16,
+                Phase::Decode,
+                sb.active.len(),
+                1,
+                sb.mean_ctx,
+            );
         }
-        self.cost.virtual_ns += virt;
-        self.metrics.add_phase(PhaseKind::Draft, timer.elapsed_ns(), virt);
+        self.core.cost.virtual_ns += virt;
+        self.core.metrics.add_phase(PhaseKind::Draft, timer.elapsed_ns(), virt);
 
         // verify on the target (tree cost modeled via tree_tokens)
         let mut vtokens = vec![PAD; b * (g + 1)];
         for slot in 0..b {
-            vtokens[slot * (g + 1)] = tok[slot];
+            vtokens[slot * (g + 1)] = sb.tok[slot];
             for j in 0..g {
                 vtokens[slot * (g + 1) + 1 + j] = d.toks[slot * g + j];
             }
@@ -273,57 +219,53 @@ impl<'s> EagleEngine<'s> {
         let kv = self.kv_target.take().expect("kv");
         let v = self
             .t_verify
-            .call_verify(&vtokens, &pos, &start, &mask, &kv, &self.t_weights)?;
+            .call_verify(&vtokens, &sb.pos, &sb.start, &sb.mask, &kv, &self.t_weights)?;
         self.kv_target = Some(v.kv);
-        let virt = self.cost.charge(
+        let virt = self.core.cost.charge(
             Mode::W4A16,
             Phase::Chunk,
-            active.len(),
+            sb.active.len(),
             self.cfg.tree_tokens(),
-            ctx,
+            sb.mean_ctx,
         );
-        self.metrics.add_phase(PhaseKind::Verify, timer.elapsed_ns(), virt);
+        self.core.metrics.add_phase(PhaseKind::Verify, timer.elapsed_ns(), virt);
 
         let timer = PhaseTimer::start();
-        for &i in &active {
+        for &i in &sb.active {
             let drafts = &d.toks[i * g..(i + 1) * g];
             let vt = &v.vtok[i * (g + 1)..(i + 1) * (g + 1)];
             let dec = greedy_accept(drafts, vt);
-            self.metrics.drafted += g as u64;
-            self.metrics.accepted += dec.accepted as u64;
-            self.metrics.accept_len.add(dec.accepted as f64);
-            let committed = self.slots.commit(i, &dec.committed, EOS, g);
-            self.metrics.committed += committed.len() as u64;
-            self.metrics.tokens_out += committed.len() as u64;
-            if self.slots.slot(i).done {
-                self.finish(i, out);
-            }
+            self.core.metrics.drafted += g as u64;
+            self.core.metrics.accepted += dec.accepted as u64;
+            self.core.metrics.accept_len.add(dec.accepted as f64);
+            self.core.commit(i, &dec.committed, g, out);
         }
-        self.metrics.add_phase(PhaseKind::Host, timer.elapsed_ns(), 0);
+        self.core.metrics.add_phase(PhaseKind::Host, timer.elapsed_ns(), 0);
         Ok(())
-    }
-
-    pub fn step(&mut self) -> Result<Vec<Finished>> {
-        let mut out = Vec::new();
-        self.admit_and_prefill(&mut out)?;
-        self.cycle(&mut out)?;
-        Ok(out)
-    }
-
-    pub fn run_to_completion(&mut self) -> Result<Vec<Finished>> {
-        let mut out = Vec::new();
-        let mut guard = 0usize;
-        while self.has_work() {
-            out.extend(self.step()?);
-            guard += 1;
-            if guard > 2_000_000 {
-                return Err(QspecError::Scheduler("eagle run stuck".into()));
-            }
-        }
-        Ok(out)
     }
 
     pub fn draft_model_meta(&self) -> &ModelMeta {
         &self.draft_meta
+    }
+}
+
+impl<'s> Engine for EagleEngine<'s> {
+    fn name(&self) -> &'static str {
+        "eagle"
+    }
+
+    fn core(&self) -> &BatchCore {
+        &self.core
+    }
+
+    fn core_mut(&mut self) -> &mut BatchCore {
+        &mut self.core
+    }
+
+    fn step(&mut self) -> Result<Vec<Finished>> {
+        let mut out = Vec::new();
+        self.admit_and_prefill(&mut out)?;
+        self.cycle(&mut out)?;
+        Ok(out)
     }
 }

@@ -1,0 +1,539 @@
+//! The engine abstraction layer: one trait + one shared batching core
+//! behind every decoding scheme in the repo.
+//!
+//! The paper's pitch is that a single serving system swaps decoding
+//! schemes (W4A4 draft + W4A16 verify, plain autoregressive, two-model
+//! EAGLE drafting) with near-zero switching cost. This module makes the
+//! *code* match that claim:
+//!
+//! * [`Engine`] — the object-safe contract every engine satisfies.
+//!   Consumers (server loop, bench runner, evalsuite, CLI) hold a
+//!   `&mut dyn Engine` and never know which scheme is running. The
+//!   submit / has-work / metrics / run-to-completion plumbing is
+//!   provided by the trait itself through the [`Engine::core`]
+//!   accessor; engines implement only `step` (their phase logic) and
+//!   construction.
+//! * [`BatchCore`] — the shared continuous-batching state machine:
+//!   FCFS queue, slot table, request-id assignment, queue-wait and
+//!   latency accounting, admission + left-padded prefill packing,
+//!   decode input gathering, and commit/finish bookkeeping. The
+//!   engines own their modules/weights/KV buffers; everything request-
+//!   shaped lives here, written once.
+//! * [`build_engine`] — the single factory from [`ServeConfig`] /
+//!   [`EngineKind`] to a boxed engine. Every driver goes through it,
+//!   so adding an engine kind is one new arm here, not a change to
+//!   server/bench/eval code.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::config::{EngineKind, ServeConfig};
+use crate::costmodel::CostModel;
+use crate::error::{QspecError, Result};
+use crate::kvcache::SlotManager;
+use crate::metrics::EngineMetrics;
+use crate::model::tokenizer::{EOS, PAD};
+use crate::runtime::Session;
+
+use super::autoregressive::ArEngine;
+use super::eagle::{EagleConfig, EagleEngine};
+use super::queue::FcfsQueue;
+use super::request::{Finished, Request};
+use super::spec_decode::{QSpecConfig, QSpecEngine};
+use super::SimilaritySample;
+
+/// Stuck-guard ceiling for [`Engine::run_to_completion`]: no legitimate
+/// run takes this many scheduling steps (AR emits >= 1 token per step).
+pub const MAX_SCHED_STEPS: usize = 5_000_000;
+
+/// Object-safe engine contract. `&mut dyn Engine` is all the server
+/// loop, bench runner and evalsuite ever see.
+///
+/// Implementors provide [`Engine::core`]/[`Engine::core_mut`] (the
+/// shared [`BatchCore`]), [`Engine::step`] (one scheduling round), and
+/// [`Engine::name`]; everything else has a default that delegates to
+/// the core.
+pub trait Engine {
+    /// Short stable name ("qspec", "w4a16", "eagle", ...) for logs and
+    /// error messages.
+    fn name(&self) -> &'static str;
+
+    /// The shared batching state (queue, slots, metrics, cost model).
+    fn core(&self) -> &BatchCore;
+
+    fn core_mut(&mut self) -> &mut BatchCore;
+
+    /// One scheduling round: admit + prefill if possible, then one
+    /// decode (or draft + verify) cycle over the active slots.
+    fn step(&mut self) -> Result<Vec<Finished>>;
+
+    /// Drain any collected fig-2 similarity samples (engines that don't
+    /// draft return none).
+    fn take_samples(&mut self) -> Vec<SimilaritySample> {
+        Vec::new()
+    }
+
+    /// Enqueue a request (token ids); returns its engine-assigned id.
+    fn submit(&mut self, prompt: Vec<i32>, max_tokens: usize) -> u64 {
+        self.core_mut().submit(prompt, max_tokens)
+    }
+
+    fn has_work(&self) -> bool {
+        self.core().has_work()
+    }
+
+    fn metrics(&self) -> &EngineMetrics {
+        &self.core().metrics
+    }
+
+    fn cost(&self) -> &CostModel {
+        &self.core().cost
+    }
+
+    /// Requests waiting in the FCFS queue (not yet admitted to a slot).
+    fn queue_depth(&self) -> usize {
+        self.core().queue_depth()
+    }
+
+    /// Age of the oldest still-queued request (0 when idle) — the
+    /// server loop's queue-pressure signal.
+    fn oldest_queued_ns(&self) -> u128 {
+        self.core().oldest_queued_ns()
+    }
+
+    /// Max usable KV-cache length — the server clamps `max_tokens`
+    /// against this.
+    fn max_seq(&self) -> usize {
+        self.core().slots.max_seq()
+    }
+
+    /// Drive everything to completion (benches, eval, one-shot CLI).
+    fn run_to_completion(&mut self) -> Result<Vec<Finished>> {
+        let mut out = Vec::new();
+        let mut guard = 0usize;
+        while self.has_work() {
+            out.extend(self.step()?);
+            guard += 1;
+            if guard > MAX_SCHED_STEPS {
+                return Err(QspecError::Scheduler(format!(
+                    "{}: run_to_completion stuck after {guard} steps",
+                    self.name()
+                )));
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Per-request lifecycle info tracked between submit and finish.
+#[derive(Clone, Copy, Debug)]
+struct Inflight {
+    submitted: Instant,
+    queue_ns: u128,
+}
+
+/// Admission + prefill tensor batch: the newly admitted requests and
+/// their left-padded `[batch, prefill_t]` prompt packing.
+#[derive(Debug)]
+pub struct PrefillBatch {
+    /// (slot index, request) for each admission this round.
+    pub admitted: Vec<(usize, Request)>,
+    pub tokens: Vec<i32>,
+    pub start: Vec<i32>,
+    pub mask: Vec<i32>,
+}
+
+/// Per-step decode/draft inputs gathered over the active slots.
+#[derive(Debug)]
+pub struct StepBatch {
+    pub active: Vec<usize>,
+    pub tok: Vec<i32>,
+    pub pos: Vec<i32>,
+    pub start: Vec<i32>,
+    pub mask: Vec<i32>,
+    /// mean committed context length over the active slots (cost model).
+    pub mean_ctx: usize,
+}
+
+/// Shared continuous-batching state + logic for every engine: the FCFS
+/// queue, the slot table, metrics and the virtual-clock cost model,
+/// plus the request lifecycle (id assignment -> queue wait -> admission
+/// -> commit -> finish) written exactly once.
+#[derive(Debug)]
+pub struct BatchCore {
+    pub slots: SlotManager,
+    /// private so `submit` stays the sole id authority (direct pushes
+    /// would skip id assignment and lifecycle tracking).
+    queue: FcfsQueue,
+    pub metrics: EngineMetrics,
+    pub cost: CostModel,
+    /// Sole id authority: every request gets a fresh id here, so ids
+    /// are unique across the engine's lifetime (the old per-queue
+    /// counter could collide with externally numbered requests).
+    next_id: u64,
+    inflight: HashMap<u64, Inflight>,
+}
+
+impl BatchCore {
+    pub fn new(slots: SlotManager, cost: CostModel) -> Self {
+        BatchCore {
+            slots,
+            queue: FcfsQueue::new(),
+            metrics: EngineMetrics::new(),
+            cost,
+            next_id: 0,
+            inflight: HashMap::new(),
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.slots.batch()
+    }
+
+    /// Enqueue a request; assigns the id and starts the latency clock.
+    pub fn submit(&mut self, prompt: Vec<i32>, max_tokens: usize) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = Request::new(id, prompt, max_tokens);
+        self.inflight.insert(
+            id,
+            Inflight { submitted: req.arrival, queue_ns: 0 },
+        );
+        self.queue.push_request(req);
+        id
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || self.slots.any_active()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Age of the oldest still-queued request (0 if the queue is empty)
+    /// — queue-pressure signal for logs and reports.
+    pub fn oldest_queued_ns(&self) -> u128 {
+        self.queue
+            .peek()
+            .map(|r| r.arrival.elapsed().as_nanos())
+            .unwrap_or(0)
+    }
+
+    /// Admit as many queued requests as there are free slots and pack
+    /// the left-padded prompt tensor for a batched prefill call.
+    /// Records queue-wait for each admission. `None` when nothing was
+    /// admitted this round. Empty-prompt requests complete immediately
+    /// with no tokens (pushed to `out`) rather than wedging the
+    /// scheduling loop — the tokenizer always emits BOS, so these only
+    /// arrive through direct `Engine::submit` misuse.
+    pub fn admit_batch(&mut self, out: &mut Vec<Finished>) -> Result<Option<PrefillBatch>> {
+        let p = self.slots.prefill_t();
+        let b = self.slots.batch();
+        let mut admitted = Vec::new();
+        while !self.queue.is_empty() && !self.slots.free_slots().is_empty() {
+            let req = self.queue.pop().unwrap();
+            let wait_ns = req.arrival.elapsed().as_nanos();
+            self.metrics.queue_wait.record(wait_ns as u64);
+            if let Some(inf) = self.inflight.get_mut(&req.id) {
+                inf.queue_ns = wait_ns;
+            }
+            if req.prompt.is_empty() {
+                let (latency_ns, queue_ns) = match self.inflight.remove(&req.id) {
+                    Some(inf) => (inf.submitted.elapsed().as_nanos(), inf.queue_ns),
+                    None => (0, wait_ns),
+                };
+                self.metrics.req_latency.record(latency_ns as u64);
+                self.metrics.requests_done += 1;
+                out.push(Finished { id: req.id, tokens: Vec::new(), latency_ns, queue_ns });
+                continue;
+            }
+            let plen = req.prompt.len().min(p);
+            let idx = self.slots.admit(req.id, plen, req.max_tokens)?;
+            admitted.push((idx, req));
+        }
+        if admitted.is_empty() {
+            return Ok(None);
+        }
+        let mut tokens = vec![PAD; b * p];
+        let mut start = vec![0i32; b];
+        let mut mask = vec![0i32; b];
+        for (idx, req) in &admitted {
+            let s = self.slots.slot(*idx).start as usize;
+            start[*idx] = s as i32;
+            mask[*idx] = 1;
+            tokens[*idx * p + s..*idx * p + p].copy_from_slice(&req.prompt[..p - s]);
+        }
+        Ok(Some(PrefillBatch { admitted, tokens, start, mask }))
+    }
+
+    /// Record the prefill results: `first_tok[idx]` is the first
+    /// generated token of the request in slot `idx` (committed
+    /// immediately; see `SlotManager::after_prefill`).
+    pub fn finish_prefill(
+        &mut self,
+        batch: &PrefillBatch,
+        first_tok: &[i32],
+        out: &mut Vec<Finished>,
+    ) {
+        for (idx, _) in &batch.admitted {
+            let done = self.slots.after_prefill(*idx, first_tok[*idx], EOS);
+            self.metrics.tokens_out += 1;
+            self.metrics.committed += 1;
+            if done {
+                self.finish(*idx, out);
+            }
+        }
+    }
+
+    /// Gather the per-slot decode/draft inputs (pending token, write
+    /// position, pad start, activity mask) over the active slots.
+    /// `None` when no slot is active.
+    pub fn step_inputs(&self) -> Option<StepBatch> {
+        let active = self.slots.active_slots();
+        if active.is_empty() {
+            return None;
+        }
+        let b = self.slots.batch();
+        let mut tok = vec![PAD; b];
+        let mut pos = vec![0i32; b];
+        let mut start = vec![0i32; b];
+        let mut mask = vec![0i32; b];
+        for &i in &active {
+            let s = self.slots.slot(i);
+            tok[i] = s.pending;
+            pos[i] = s.pos;
+            start[i] = s.start;
+            mask[i] = 1;
+        }
+        let mean_ctx =
+            active.iter().map(|&i| self.slots.context_len(i)).sum::<usize>() / active.len();
+        Some(StepBatch { active, tok, pos, start, mask, mean_ctx })
+    }
+
+    /// Commit verified/sampled tokens for slot `idx`, update the token
+    /// counters, and finish the request if it completed. Returns how
+    /// many tokens were actually committed.
+    pub fn commit(
+        &mut self,
+        idx: usize,
+        toks: &[i32],
+        gamma: usize,
+        out: &mut Vec<Finished>,
+    ) -> usize {
+        let committed = self.slots.commit(idx, toks, EOS, gamma);
+        self.metrics.committed += committed.len() as u64;
+        self.metrics.tokens_out += committed.len() as u64;
+        if self.slots.slot(idx).done {
+            self.finish(idx, out);
+        }
+        committed.len()
+    }
+
+    /// Release a finished slot and emit the `Finished` record with its
+    /// end-to-end latency and queue wait.
+    pub fn finish(&mut self, idx: usize, out: &mut Vec<Finished>) {
+        if let Some((id, tokens)) = self.slots.release(idx) {
+            let (latency_ns, queue_ns) = match self.inflight.remove(&id) {
+                Some(inf) => (inf.submitted.elapsed().as_nanos(), inf.queue_ns),
+                None => (0, 0),
+            };
+            self.metrics.req_latency.record(latency_ns as u64);
+            self.metrics.requests_done += 1;
+            out.push(Finished { id, tokens, latency_ns, queue_ns });
+        }
+    }
+}
+
+/// Build the engine selected by `cfg.engine`. The single place in the
+/// codebase that maps [`EngineKind`] to a concrete engine — server,
+/// CLI, benches, evalsuite and examples all go through here.
+pub fn build_engine<'s>(
+    sess: &'s Session,
+    cfg: &ServeConfig,
+) -> Result<Box<dyn Engine + 's>> {
+    cfg.validate()?;
+    match &cfg.engine {
+        EngineKind::QSpec => {
+            let mut q = QSpecConfig::new(&cfg.size, cfg.batch);
+            q.scheme = cfg.scheme.clone();
+            q.gamma = cfg.gamma;
+            q.overwrite = cfg.overwrite;
+            q.collect_similarity = cfg.collect_similarity;
+            Ok(Box::new(QSpecEngine::new(sess, q)?))
+        }
+        EngineKind::Ar(mode) => Ok(Box::new(ArEngine::new(
+            sess, &cfg.size, &cfg.scheme, *mode, cfg.batch,
+        )?)),
+        EngineKind::Eagle { tree_k } => {
+            // EAGLE keeps its canonical chain depth (gamma = 5); the
+            // artifact manifest only exports eagle draft modules at
+            // that depth. `cfg.gamma` steers QSPEC only.
+            let mut e = EagleConfig::new(cfg.batch, *tree_k);
+            e.size = cfg.size.clone();
+            e.scheme = cfg.scheme.clone();
+            Ok(Box::new(EagleEngine::new(sess, e)?))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::twins::Twin;
+
+    fn core(batch: usize) -> BatchCore {
+        BatchCore::new(
+            SlotManager::new(batch, 64, 16),
+            CostModel::new(Twin::lookup("llama2-7b")),
+        )
+    }
+
+    /// A session-free engine over BatchCore: prefill emits token 10,
+    /// every cycle commits the pending token + 1 (echo decoding). Lets
+    /// the trait defaults (submit / run_to_completion / metrics) be
+    /// exercised without artifacts.
+    struct MockEngine {
+        core: BatchCore,
+    }
+
+    impl Engine for MockEngine {
+        fn name(&self) -> &'static str {
+            "mock"
+        }
+
+        fn core(&self) -> &BatchCore {
+            &self.core
+        }
+
+        fn core_mut(&mut self) -> &mut BatchCore {
+            &mut self.core
+        }
+
+        fn step(&mut self) -> Result<Vec<Finished>> {
+            let mut out = Vec::new();
+            if let Some(pb) = self.core.admit_batch(&mut out)? {
+                let first = vec![10i32; self.core.batch()];
+                self.core.finish_prefill(&pb, &first, &mut out);
+            }
+            if let Some(sb) = self.core.step_inputs() {
+                for &i in &sb.active {
+                    let next = sb.tok[i] + 1;
+                    self.core.commit(i, &[next], 1, &mut out);
+                }
+            }
+            Ok(out)
+        }
+    }
+
+    #[test]
+    fn ids_are_unique_and_sequential() {
+        let mut c = core(2);
+        let a = c.submit(vec![1, 2], 4);
+        let b = c.submit(vec![3], 4);
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(c.queue_depth(), 2);
+    }
+
+    #[test]
+    fn admit_batch_packs_left_padded_prompts() {
+        let mut c = core(2);
+        c.submit(vec![7, 8, 9], 10);
+        let pb = c.admit_batch(&mut Vec::new()).unwrap().unwrap();
+        assert_eq!(pb.admitted.len(), 1);
+        let (idx, _) = pb.admitted[0];
+        assert_eq!(idx, 0);
+        // prompt right-aligned into the 16-wide chunk
+        assert_eq!(pb.start[0], 13);
+        assert_eq!(pb.mask, vec![1, 0]);
+        assert_eq!(&pb.tokens[13..16], &[7, 8, 9]);
+        assert_eq!(c.queue_depth(), 0);
+        assert_eq!(c.metrics.queue_wait.count(), 1);
+    }
+
+    #[test]
+    fn admit_batch_respects_free_slots() {
+        let mut c = core(2);
+        for _ in 0..5 {
+            c.submit(vec![1], 10);
+        }
+        let pb = c.admit_batch(&mut Vec::new()).unwrap().unwrap();
+        assert_eq!(pb.admitted.len(), 2);
+        assert_eq!(c.queue_depth(), 3);
+        // nothing else admissible until a slot frees
+        assert!(c.admit_batch(&mut Vec::new()).unwrap().is_none());
+    }
+
+    #[test]
+    fn empty_prompt_completes_instead_of_wedging() {
+        let mut e = MockEngine { core: core(2) };
+        let bad = e.submit(Vec::new(), 8);
+        e.submit(vec![1, 2], 2);
+        let mut fins = e.run_to_completion().unwrap();
+        assert_eq!(fins.len(), 2, "both requests must resolve");
+        fins.sort_by_key(|f| f.id);
+        assert_eq!(fins[0].id, bad);
+        assert!(fins[0].tokens.is_empty());
+        assert!(!fins[1].tokens.is_empty());
+        assert_eq!(e.metrics().requests_done, 2);
+        assert_eq!(e.metrics().req_latency.count(), 2);
+    }
+
+    #[test]
+    fn oldest_queued_uses_peek() {
+        let mut c = core(1);
+        assert_eq!(c.oldest_queued_ns(), 0);
+        c.submit(vec![1], 4);
+        // the clock has started; any nonnegative age is fine, the point
+        // is that peek() reports the head without popping it
+        let _ = c.oldest_queued_ns();
+        assert_eq!(c.queue_depth(), 1);
+    }
+
+    #[test]
+    fn mock_engine_runs_to_completion_with_invariants() {
+        let mut e = MockEngine { core: core(2) };
+        let n = 5u64;
+        for i in 0..n {
+            e.submit(vec![1, 2, 3], 3 + i as usize % 3);
+        }
+        let mut fins = e.run_to_completion().unwrap();
+        assert_eq!(fins.len(), n as usize);
+        fins.sort_by_key(|f| f.id);
+        let ids: Vec<u64> = fins.iter().map(|f| f.id).collect();
+        assert_eq!(ids, (0..n).collect::<Vec<_>>());
+        assert!(!e.has_work());
+        let m = e.metrics();
+        assert_eq!(m.requests_done, n);
+        assert_eq!(m.committed, m.tokens_out);
+        assert_eq!(m.queue_wait.count(), n);
+        assert_eq!(m.req_latency.count(), n);
+        let toks: usize = fins.iter().map(|f| f.tokens.len()).sum();
+        assert_eq!(toks as u64, m.tokens_out);
+    }
+
+    #[test]
+    fn finished_carries_queue_wait() {
+        let mut e = MockEngine { core: core(1) };
+        e.submit(vec![1], 2);
+        e.submit(vec![2], 2); // waits for the first to release its slot
+        let fins = e.run_to_completion().unwrap();
+        assert_eq!(fins.len(), 2);
+        for f in &fins {
+            assert!(f.latency_ns >= f.queue_ns);
+        }
+    }
+
+    #[test]
+    fn dyn_engine_is_usable() {
+        let mut e = MockEngine { core: core(1) };
+        let d: &mut dyn Engine = &mut e;
+        d.submit(vec![4], 2);
+        assert!(d.has_work());
+        assert!(d.run_to_completion().is_ok());
+        assert_eq!(d.metrics().requests_done, 1);
+        assert_eq!(d.name(), "mock");
+        assert!(d.max_seq() == 64);
+        assert!(d.take_samples().is_empty());
+    }
+}

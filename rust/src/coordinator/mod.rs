@@ -1,5 +1,10 @@
 //! L3 coordinator — the paper's system contribution.
 //!
+//! * `engine`        — the engine abstraction layer: the object-safe
+//!                     [`Engine`] trait, the shared [`BatchCore`]
+//!                     continuous-batching state machine, and the
+//!                     [`build_engine`] factory every driver (server,
+//!                     CLI, benches, evalsuite) goes through.
 //! * `request`/`queue` — FCFS request admission (continuous batching).
 //! * `acceptance`    — the draft-verify acceptance policies.
 //! * `spec_decode`   — the QSPEC engine: W4A4 fused drafting, W4A16
@@ -11,6 +16,7 @@
 pub mod acceptance;
 pub mod autoregressive;
 pub mod eagle;
+pub mod engine;
 pub mod queue;
 pub mod request;
 pub mod spec_decode;
@@ -18,6 +24,7 @@ pub mod spec_decode;
 pub use acceptance::{greedy_accept, AcceptDecision};
 pub use autoregressive::ArEngine;
 pub use eagle::{EagleConfig, EagleEngine};
+pub use engine::{build_engine, BatchCore, Engine, PrefillBatch, StepBatch};
 pub use queue::FcfsQueue;
 pub use request::{Finished, Request};
 pub use spec_decode::{QSpecConfig, QSpecEngine};

@@ -1,5 +1,10 @@
 //! FCFS admission queue (the paper serves all requests first-come,
 //! first-served with ORCA-style continuous batch refill).
+//!
+//! The queue is pure ordering: request ids are assigned by the engine's
+//! `BatchCore` (the sole id authority), which closes the old collision
+//! window where `push` and `push_request` could hand out overlapping
+//! ids.
 
 use std::collections::VecDeque;
 
@@ -9,7 +14,6 @@ use super::request::Request;
 #[derive(Debug, Default)]
 pub struct FcfsQueue {
     q: VecDeque<Request>,
-    next_id: u64,
 }
 
 impl FcfsQueue {
@@ -17,16 +21,8 @@ impl FcfsQueue {
         Self::default()
     }
 
-    /// Enqueue with an auto-assigned id; returns the id.
-    pub fn push(&mut self, prompt: Vec<i32>, max_tokens: usize) -> u64 {
-        let id = self.next_id;
-        self.next_id += 1;
-        self.q.push_back(Request::new(id, prompt, max_tokens));
-        id
-    }
-
+    /// Enqueue a request (id already assigned by the caller).
     pub fn push_request(&mut self, r: Request) {
-        self.next_id = self.next_id.max(r.id + 1);
         self.q.push_back(r);
     }
 
@@ -34,6 +30,8 @@ impl FcfsQueue {
         self.q.pop_front()
     }
 
+    /// The request at the head of the queue (next to be admitted) —
+    /// queue-age reporting reads its arrival time without popping.
     pub fn peek(&self) -> Option<&Request> {
         self.q.front()
     }
@@ -54,19 +52,22 @@ mod tests {
     #[test]
     fn fcfs_order_preserved() {
         let mut q = FcfsQueue::new();
-        let a = q.push(vec![1], 4);
-        let b = q.push(vec![2], 4);
-        assert!(a < b);
-        assert_eq!(q.pop().unwrap().id, a);
-        assert_eq!(q.pop().unwrap().id, b);
+        q.push_request(Request::new(0, vec![1], 4));
+        q.push_request(Request::new(1, vec![2], 4));
+        assert_eq!(q.pop().unwrap().id, 0);
+        assert_eq!(q.pop().unwrap().id, 1);
         assert!(q.pop().is_none());
     }
 
     #[test]
-    fn ids_unique_after_manual_push() {
+    fn peek_reports_head_without_popping() {
         let mut q = FcfsQueue::new();
-        q.push_request(Request::new(10, vec![1], 4));
-        let next = q.push(vec![2], 4);
-        assert!(next > 10);
+        assert!(q.peek().is_none());
+        q.push_request(Request::new(7, vec![1], 4));
+        q.push_request(Request::new(8, vec![2], 4));
+        assert_eq!(q.peek().unwrap().id, 7);
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert_eq!(q.peek().unwrap().id, 8);
     }
 }

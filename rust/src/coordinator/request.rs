@@ -22,5 +22,8 @@ impl Request {
 pub struct Finished {
     pub id: u64,
     pub tokens: Vec<i32>,
+    /// end-to-end latency (submit -> finish).
     pub latency_ns: u128,
+    /// time spent waiting in the FCFS queue (submit -> admission).
+    pub queue_ns: u128,
 }

@@ -8,21 +8,22 @@
 //! `overwrite=false` reproduces the paper's Table 2 "no-overwrite"
 //! ablation: the draft keeps a *second* cache that never receives the
 //! verifier's corrections (costing extra memory and acceptance rate).
+//!
+//! All request plumbing (queue, slots, admission, metrics) lives in the
+//! shared [`BatchCore`]; this file is only the draft/verify phase logic.
 
-use std::collections::HashMap;
 use std::rc::Rc;
-use std::time::Instant;
 
 use crate::costmodel::{twins::Twin, CostModel, Phase};
-use crate::error::{QspecError, Result};
+use crate::error::Result;
 use crate::kvcache::SlotManager;
-use crate::metrics::{EngineMetrics, PhaseKind, PhaseTimer};
-use crate::model::tokenizer::{EOS, PAD};
+use crate::metrics::{PhaseKind, PhaseTimer};
+use crate::model::tokenizer::PAD;
 use crate::model::Mode;
 use crate::runtime::{ModelMeta, Module, Session, WeightSet};
 
 use super::acceptance::greedy_accept;
-use super::queue::FcfsQueue;
+use super::engine::{BatchCore, Engine};
 use super::request::Finished;
 use super::SimilaritySample;
 
@@ -52,8 +53,9 @@ impl QSpecConfig {
     }
 }
 
-/// The engine. Owns the device caches, slot table and queue; one
-/// `step()` = one scheduling round (admission/prefill or draft+verify).
+/// The engine. Owns the device caches and modules; the shared
+/// [`BatchCore`] owns queue/slots/metrics. One `step()` = one
+/// scheduling round (admission/prefill then draft+verify).
 pub struct QSpecEngine<'s> {
     #[allow(dead_code)]
     sess: &'s Session,
@@ -67,12 +69,8 @@ pub struct QSpecEngine<'s> {
     w_draft: Rc<WeightSet>,
     kv: Option<xla::PjRtBuffer>,
     kv_draft: Option<xla::PjRtBuffer>,
-    pub slots: SlotManager,
-    pub queue: FcfsQueue,
-    pub metrics: EngineMetrics,
-    pub cost: CostModel,
+    pub core: BatchCore,
     pub samples: Vec<SimilaritySample>,
-    arrivals: HashMap<u64, Instant>,
 }
 
 impl<'s> QSpecEngine<'s> {
@@ -115,120 +113,54 @@ impl<'s> QSpecEngine<'s> {
             w_draft,
             kv,
             kv_draft,
-            slots,
-            queue: FcfsQueue::new(),
-            metrics: EngineMetrics::new(),
-            cost,
+            core: BatchCore::new(slots, cost),
             samples: Vec::new(),
-            arrivals: HashMap::new(),
         })
-    }
-
-    /// Enqueue a request (token ids); returns its id.
-    pub fn submit(&mut self, prompt: Vec<i32>, max_tokens: usize) -> u64 {
-        let id = self.queue.push(prompt, max_tokens);
-        self.arrivals.insert(id, Instant::now());
-        id
-    }
-
-    pub fn has_work(&self) -> bool {
-        !self.queue.is_empty() || self.slots.any_active()
-    }
-
-    fn mean_ctx(&self, idxs: &[usize]) -> usize {
-        if idxs.is_empty() {
-            return 1;
-        }
-        idxs.iter().map(|&i| self.slots.context_len(i)).sum::<usize>() / idxs.len()
-    }
-
-    fn finish(&mut self, idx: usize, out: &mut Vec<Finished>) {
-        if let Some((id, tokens)) = self.slots.release(idx) {
-            let latency_ns = self
-                .arrivals
-                .remove(&id)
-                .map(|t| t.elapsed().as_nanos())
-                .unwrap_or(0);
-            self.metrics.req_latency.record(latency_ns as u64);
-            self.metrics.requests_done += 1;
-            out.push(Finished { id, tokens, latency_ns });
-        }
     }
 
     /// Admission + batched prefill for all newly admitted slots.
     fn admit_and_prefill(&mut self, out: &mut Vec<Finished>) -> Result<()> {
-        let p = self.slots.prefill_t();
-        let b = self.cfg.batch;
-        let mut admitted = Vec::new();
-        while !self.queue.is_empty() && !self.slots.free_slots().is_empty() {
-            let req = self.queue.pop().unwrap();
-            let plen = req.prompt.len().min(p);
-            let idx = self.slots.admit(req.id, plen, req.max_tokens)?;
-            admitted.push((idx, req));
-        }
-        if admitted.is_empty() {
-            return Ok(());
-        }
-
-        let mut tokens = vec![PAD; b * p];
-        let mut start = vec![0i32; b];
-        let mut mask = vec![0i32; b];
-        for (idx, req) in &admitted {
-            let s = self.slots.slot(*idx).start as usize;
-            start[*idx] = s as i32;
-            mask[*idx] = 1;
-            let plen = p - s;
-            tokens[*idx * p + s..*idx * p + p]
-                .copy_from_slice(&req.prompt[..plen]);
-        }
+        let pb = match self.core.admit_batch(out)? {
+            Some(pb) => pb,
+            None => return Ok(()),
+        };
+        let p = self.core.slots.prefill_t();
 
         let timer = PhaseTimer::start();
         let kv = self.kv.take().expect("kv");
-        let r = self.prefill_m.call_prefill(&tokens, &start, &mask, &kv, &self.w_verify)?;
+        let r = self
+            .prefill_m
+            .call_prefill(&pb.tokens, &pb.start, &pb.mask, &kv, &self.w_verify)?;
         self.kv = Some(r.kv);
-        let virt = self.cost.charge(Mode::W4A16, Phase::Chunk, admitted.len(), p, p);
-        self.metrics.add_phase(PhaseKind::Prefill, timer.elapsed_ns(), virt);
+        let virt = self
+            .core
+            .cost
+            .charge(Mode::W4A16, Phase::Chunk, pb.admitted.len(), p, p);
+        self.core.metrics.add_phase(PhaseKind::Prefill, timer.elapsed_ns(), virt);
 
         // ablation: fill the separate draft cache too (W4A4 prefill)
         if let (Some(dm), Some(dkv)) = (&self.draft_prefill_m, self.kv_draft.take()) {
-            let r2 = dm.call_prefill(&tokens, &start, &mask, &dkv, &self.w_draft)?;
+            let r2 = dm.call_prefill(&pb.tokens, &pb.start, &pb.mask, &dkv, &self.w_draft)?;
             self.kv_draft = Some(r2.kv);
-            let virt = self.cost.charge(Mode::W4A4, Phase::Chunk, admitted.len(), p, p);
-            self.metrics.add_phase(PhaseKind::Prefill, 0, virt);
+            let virt = self
+                .core
+                .cost
+                .charge(Mode::W4A4, Phase::Chunk, pb.admitted.len(), p, p);
+            self.core.metrics.add_phase(PhaseKind::Prefill, 0, virt);
         }
 
-        for (idx, _) in &admitted {
-            let done = self.slots.after_prefill(*idx, r.tok[*idx], EOS);
-            self.metrics.tokens_out += 1;
-            self.metrics.committed += 1;
-            if done {
-                self.finish(*idx, out);
-            }
-        }
+        self.core.finish_prefill(&pb, &r.tok, out);
         Ok(())
     }
 
     /// One draft(gamma) + verify(gamma+1) + accept cycle over active slots.
     fn cycle(&mut self, out: &mut Vec<Finished>) -> Result<()> {
-        let active = self.slots.active_slots();
-        if active.is_empty() {
-            return Ok(());
-        }
+        let sb = match self.core.step_inputs() {
+            Some(sb) => sb,
+            None => return Ok(()),
+        };
         let b = self.cfg.batch;
         let g = self.cfg.gamma;
-        let ctx = self.mean_ctx(&active);
-
-        let mut tok = vec![PAD; b];
-        let mut pos = vec![0i32; b];
-        let mut start = vec![0i32; b];
-        let mut mask = vec![0i32; b];
-        for &i in &active {
-            let s = self.slots.slot(i);
-            tok[i] = s.pending;
-            pos[i] = s.pos;
-            start[i] = s.start;
-            mask[i] = 1;
-        }
 
         // ---- draft phase (W4A4 fused loop) -----------------------------
         let timer = PhaseTimer::start();
@@ -237,7 +169,7 @@ impl<'s> QSpecEngine<'s> {
         } else {
             self.kv_draft.take().expect("kv_draft")
         };
-        let d = self.draft_m.call_draft(&tok, &pos, &start, &dkv, &self.w_draft)?;
+        let d = self.draft_m.call_draft(&sb.tok, &sb.pos, &sb.start, &dkv, &self.w_draft)?;
         if self.cfg.overwrite {
             self.kv = Some(d.kv);
         } else {
@@ -246,14 +178,17 @@ impl<'s> QSpecEngine<'s> {
         // virtual cost: gamma sequential W4A4 decode steps
         let mut virt = 0u128;
         for _ in 0..g {
-            virt += self.cost.charge(Mode::W4A4, Phase::Decode, active.len(), 1, ctx);
+            virt += self
+                .core
+                .cost
+                .charge(Mode::W4A4, Phase::Decode, sb.active.len(), 1, sb.mean_ctx);
         }
-        self.metrics.add_phase(PhaseKind::Draft, timer.elapsed_ns(), virt);
+        self.core.metrics.add_phase(PhaseKind::Draft, timer.elapsed_ns(), virt);
 
         // ---- verify phase (W4A16 parallel chunk; KV-overwriting) -------
         let mut vtokens = vec![PAD; b * (g + 1)];
         for slot in 0..b {
-            vtokens[slot * (g + 1)] = tok[slot];
+            vtokens[slot * (g + 1)] = sb.tok[slot];
             for j in 0..g {
                 vtokens[slot * (g + 1) + 1 + j] = d.toks[slot * g + j];
             }
@@ -262,20 +197,23 @@ impl<'s> QSpecEngine<'s> {
         let kv = self.kv.take().expect("kv");
         let v = self
             .verify_m
-            .call_verify(&vtokens, &pos, &start, &mask, &kv, &self.w_verify)?;
+            .call_verify(&vtokens, &sb.pos, &sb.start, &sb.mask, &kv, &self.w_verify)?;
         self.kv = Some(v.kv);
-        let virt = self.cost.charge(Mode::W4A16, Phase::Chunk, active.len(), g + 1, ctx);
-        self.metrics.add_phase(PhaseKind::Verify, timer.elapsed_ns(), virt);
+        let virt = self
+            .core
+            .cost
+            .charge(Mode::W4A16, Phase::Chunk, sb.active.len(), g + 1, sb.mean_ctx);
+        self.core.metrics.add_phase(PhaseKind::Verify, timer.elapsed_ns(), virt);
 
         // ---- acceptance + commit ---------------------------------------
         let timer = PhaseTimer::start();
-        for &i in &active {
+        for &i in &sb.active {
             let drafts = &d.toks[i * g..(i + 1) * g];
             let vt = &v.vtok[i * (g + 1)..(i + 1) * (g + 1)];
             let dec = greedy_accept(drafts, vt);
-            self.metrics.drafted += g as u64;
-            self.metrics.accepted += dec.accepted as u64;
-            self.metrics.accept_len.add(dec.accepted as f64);
+            self.core.metrics.drafted += g as u64;
+            self.core.metrics.accepted += dec.accepted as u64;
+            self.core.metrics.accept_len.add(dec.accepted as f64);
             if self.cfg.collect_similarity {
                 for j in 0..g {
                     if self.samples.len() < 100_000 {
@@ -287,36 +225,34 @@ impl<'s> QSpecEngine<'s> {
                     }
                 }
             }
-            let committed = self.slots.commit(i, &dec.committed, EOS, g);
-            self.metrics.committed += committed.len() as u64;
-            self.metrics.tokens_out += committed.len() as u64;
-            if self.slots.slot(i).done {
-                self.finish(i, out);
-            }
+            self.core.commit(i, &dec.committed, g, out);
         }
-        self.metrics.add_phase(PhaseKind::Host, timer.elapsed_ns(), 0);
+        self.core.metrics.add_phase(PhaseKind::Host, timer.elapsed_ns(), 0);
         Ok(())
     }
+}
 
-    /// One scheduling step: admit/prefill if possible, then one cycle.
-    pub fn step(&mut self) -> Result<Vec<Finished>> {
+impl<'s> Engine for QSpecEngine<'s> {
+    fn name(&self) -> &'static str {
+        "qspec"
+    }
+
+    fn core(&self) -> &BatchCore {
+        &self.core
+    }
+
+    fn core_mut(&mut self) -> &mut BatchCore {
+        &mut self.core
+    }
+
+    fn step(&mut self) -> Result<Vec<Finished>> {
         let mut out = Vec::new();
         self.admit_and_prefill(&mut out)?;
         self.cycle(&mut out)?;
         Ok(out)
     }
 
-    /// Drive everything to completion (used by benches and eval).
-    pub fn run_to_completion(&mut self) -> Result<Vec<Finished>> {
-        let mut out = Vec::new();
-        let mut guard = 0usize;
-        while self.has_work() {
-            out.extend(self.step()?);
-            guard += 1;
-            if guard > 2_000_000 {
-                return Err(QspecError::Scheduler("run_to_completion stuck".into()));
-            }
-        }
-        Ok(out)
+    fn take_samples(&mut self) -> Vec<SimilaritySample> {
+        std::mem::take(&mut self.samples)
     }
 }

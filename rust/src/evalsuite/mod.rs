@@ -8,7 +8,7 @@
 
 use std::path::Path;
 
-use crate::coordinator::{ArEngine, QSpecEngine};
+use crate::coordinator::Engine;
 use crate::error::{QspecError, Result};
 use crate::model::Tokenizer;
 use crate::runtime::Session;
@@ -61,26 +61,12 @@ pub fn exact_match(golds: &[&str], generations: &[String]) -> f64 {
     hits as f64 / golds.len() as f64
 }
 
-/// Run a task's eval set through a QSPEC engine; returns (EM, generations).
-pub fn eval_qspec(
-    engine: &mut QSpecEngine,
-    tok: &Tokenizer,
-    items: &[EvalItem],
-    max_tokens: usize,
-) -> Result<(f64, Vec<String>)> {
-    for it in items {
-        engine.submit(tok.encode_prompt(&it.prompt), max_tokens);
-    }
-    let mut fins = engine.run_to_completion()?;
-    fins.sort_by_key(|f| f.id);
-    let gens: Vec<String> = fins.iter().map(|f| tok.decode(&f.tokens)).collect();
-    let golds: Vec<&str> = items.iter().map(|i| i.answer.as_str()).collect();
-    Ok((exact_match(&golds, &gens), gens))
-}
-
-/// Run a task's eval set through an AR baseline engine.
-pub fn eval_ar(
-    engine: &mut ArEngine,
+/// Run a task's eval set through any serving engine; returns
+/// (EM, generations). Engine-generic: the same code path scores QSPEC,
+/// the AR baselines and EAGLE (generation runs through `Engine::step`,
+/// exactly as in serving).
+pub fn eval_engine(
+    engine: &mut dyn Engine,
     tok: &Tokenizer,
     items: &[EvalItem],
     max_tokens: usize,

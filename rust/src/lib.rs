@@ -8,7 +8,10 @@
 //! Three-layer architecture (see DESIGN.md):
 //! * **L3 (this crate)** — request router, FCFS queue, continuous batcher,
 //!   speculative scheduler with KV-overwriting, AR + EAGLE baselines,
-//!   L20 roofline cost model, metrics, workloads, TCP server.
+//!   L20 roofline cost model, metrics, workloads, TCP server. All
+//!   engines implement `coordinator::Engine` over a shared
+//!   `coordinator::BatchCore`; drivers hold `&mut dyn Engine` built by
+//!   `coordinator::build_engine`.
 //! * **L2/L1 (python/, build-time only)** — JAX transformer + Pallas
 //!   quantization kernels, AOT-lowered to HLO text under `artifacts/`.
 //!

@@ -55,6 +55,8 @@ pub struct EngineMetrics {
     pub tokens_out: u64,
     /// per-request end-to-end latency (wall ns)
     pub req_latency: LogHistogram,
+    /// per-request queue wait (submit -> admission, wall ns)
+    pub queue_wait: LogHistogram,
     /// per-cycle accepted-length summary
     pub accept_len: Summary,
 }
@@ -147,6 +149,8 @@ impl EngineMetrics {
             ("virt_tok_s", num(self.virt_tokens_per_s())),
             ("latency_p50_ns", num(self.req_latency.percentile(50.0) as f64)),
             ("latency_p99_ns", num(self.req_latency.percentile(99.0) as f64)),
+            ("queue_p50_ns", num(self.queue_wait.percentile(50.0) as f64)),
+            ("queue_p99_ns", num(self.queue_wait.percentile(99.0) as f64)),
         ])
     }
 }
@@ -204,5 +208,17 @@ mod tests {
         let j = EngineMetrics::new().to_json();
         assert!(j.get("acceptance_rate").is_some());
         assert!(j.get("phases").unwrap().as_arr().unwrap().len() == 5);
+        assert!(j.get("queue_p50_ns").is_some());
+    }
+
+    #[test]
+    fn queue_wait_recorded_independently_of_latency() {
+        let mut m = EngineMetrics::new();
+        m.queue_wait.record(1_000);
+        m.queue_wait.record(2_000);
+        m.req_latency.record(50_000);
+        assert_eq!(m.queue_wait.count(), 2);
+        assert_eq!(m.req_latency.count(), 1);
+        assert!(m.queue_wait.percentile(50.0) < m.req_latency.percentile(50.0));
     }
 }

@@ -7,18 +7,23 @@
 //!   client --tcp--> conn thread --mpsc--> engine loop (this thread)
 //!          <--tcp-- conn thread <--mpsc-- finished tokens
 //!
+//! The engine loop is engine-generic: it drives any `&mut dyn Engine`
+//! built by `coordinator::build_engine`, so every engine kind —
+//! including the EAGLE baseline — serves over TCP.
+//!
 //! Protocol: one JSON object per line.
 //!   request : {"prompt": "q: g xy ?\n", "max_tokens": 64}
 //!   response: {"id": 3, "text": "...", "latency_ms": 12.5,
-//!              "tokens": 17}
+//!              "queue_ms": 0.2, "tokens": 17}
+//!   error   : {"error": {"code": "bad_request", "message": "..."}}
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
 use std::time::Duration;
 
-use crate::config::{EngineKind, ServeConfig};
-use crate::coordinator::{ArEngine, QSpecConfig, QSpecEngine};
+use crate::config::ServeConfig;
+use crate::coordinator::{build_engine, Engine, Finished};
 use crate::error::{QspecError, Result};
 use crate::model::Tokenizer;
 use crate::runtime::Session;
@@ -31,26 +36,58 @@ pub struct InboundRequest {
     pub resp: mpsc::Sender<String>,
 }
 
-/// Parse one request line.
-pub fn parse_request_line(line: &str) -> Result<(String, usize)> {
+/// Parse one request line. Non-object lines are rejected, and
+/// `max_tokens` is clamped to `[1, max_tokens_cap]` (the model's
+/// `max_seq`) so a client cannot monopolize a slot with an absurd
+/// generation budget; absent `max_tokens` falls back to
+/// `default_max_tokens`.
+pub fn parse_request_line(
+    line: &str,
+    default_max_tokens: usize,
+    max_tokens_cap: usize,
+) -> Result<(String, usize)> {
     let j = Json::parse(line)?;
+    if j.as_obj().is_none() {
+        return Err(QspecError::Config(
+            "request must be a JSON object".into(),
+        ));
+    }
     let prompt = j.req_str("prompt")?.to_string();
-    let max_tokens = j.get("max_tokens").and_then(Json::as_usize).unwrap_or(64);
+    let max_tokens = j
+        .get("max_tokens")
+        .and_then(Json::as_usize)
+        .unwrap_or(default_max_tokens)
+        .clamp(1, max_tokens_cap.max(1));
     Ok((prompt, max_tokens))
 }
 
 /// Format one response line.
-pub fn format_response(id: u64, text: &str, latency_ns: u128, tokens: usize) -> String {
+pub fn format_response(f: &Finished, text: &str) -> String {
     obj(vec![
-        ("id", num(id as f64)),
+        ("id", num(f.id as f64)),
         ("text", s(text)),
-        ("latency_ms", num(latency_ns as f64 / 1e6)),
-        ("tokens", num(tokens as f64)),
+        ("latency_ms", num(f.latency_ns as f64 / 1e6)),
+        ("queue_ms", num(f.queue_ns as f64 / 1e6)),
+        ("tokens", num(f.tokens.len() as f64)),
     ])
     .to_string()
 }
 
-fn conn_thread(stream: TcpStream, tx: mpsc::Sender<InboundRequest>) {
+/// Structured error line for protocol violations.
+pub fn format_error(code: &str, message: &str) -> String {
+    obj(vec![(
+        "error",
+        obj(vec![("code", s(code)), ("message", s(message))]),
+    )])
+    .to_string()
+}
+
+fn conn_thread(
+    stream: TcpStream,
+    tx: mpsc::Sender<InboundRequest>,
+    default_max_tokens: usize,
+    max_tokens_cap: usize,
+) {
     let peer = stream.peer_addr().ok();
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
@@ -65,13 +102,14 @@ fn conn_thread(stream: TcpStream, tx: mpsc::Sender<InboundRequest>) {
         if line.trim().is_empty() {
             continue;
         }
-        let (prompt, max_tokens) = match parse_request_line(&line) {
-            Ok(x) => x,
-            Err(e) => {
-                let _ = writeln!(writer, "{}", obj(vec![("error", s(&e.to_string()))]).to_string());
-                continue;
-            }
-        };
+        let (prompt, max_tokens) =
+            match parse_request_line(&line, default_max_tokens, max_tokens_cap) {
+                Ok(x) => x,
+                Err(e) => {
+                    let _ = writeln!(writer, "{}", format_error("bad_request", &e.to_string()));
+                    continue;
+                }
+            };
         let (rtx, rrx) = mpsc::channel();
         if tx.send(InboundRequest { prompt, max_tokens, resp: rtx }).is_err() {
             break;
@@ -92,90 +130,78 @@ fn conn_thread(stream: TcpStream, tx: mpsc::Sender<InboundRequest>) {
 /// the queue with continuous batching; idle time is spent blocked on the
 /// channel.
 pub fn serve(sess: &Session, cfg: &ServeConfig) -> Result<()> {
-    cfg.validate()?;
     let tok = Tokenizer::load(&sess.store.tokenizer_path())?;
+    let mut engine = build_engine(sess, cfg)?;
+    let default_max_tokens = cfg.max_tokens_default;
+    let max_tokens_cap = engine.max_seq();
+
     let listener = TcpListener::bind(("127.0.0.1", cfg.port))?;
-    println!("qspec listening on 127.0.0.1:{}", cfg.port);
+    println!(
+        "qspec listening on 127.0.0.1:{} (engine={})",
+        cfg.port,
+        engine.name()
+    );
     let (tx, rx) = mpsc::channel::<InboundRequest>();
     std::thread::spawn(move || {
         for stream in listener.incoming().flatten() {
             let tx = tx.clone();
-            std::thread::spawn(move || conn_thread(stream, tx));
+            std::thread::spawn(move || {
+                conn_thread(stream, tx, default_max_tokens, max_tokens_cap)
+            });
         }
     });
 
-    match &cfg.engine {
-        EngineKind::QSpec => {
-            let mut qcfg = QSpecConfig::new(&cfg.size, cfg.batch);
-            qcfg.scheme = cfg.scheme.clone();
-            qcfg.gamma = cfg.gamma;
-            qcfg.overwrite = cfg.overwrite;
-            let mut engine = QSpecEngine::new(sess, qcfg)?;
-            engine_loop(&rx, &tok, EngineRef::QSpec(&mut engine))
-        }
-        EngineKind::Ar(mode) => {
-            let mut engine = ArEngine::new(sess, &cfg.size, &cfg.scheme, *mode, cfg.batch)?;
-            engine_loop(&rx, &tok, EngineRef::Ar(&mut engine))
-        }
-        EngineKind::Eagle { .. } => Err(QspecError::Config(
-            "eagle engine is a benchmark baseline, not a server mode".into(),
-        )),
-    }
+    engine_loop(&rx, &tok, engine.as_mut())
 }
 
-enum EngineRef<'a, 'b> {
-    QSpec(&'a mut QSpecEngine<'b>),
-    Ar(&'a mut ArEngine<'b>),
-}
-
-fn engine_loop(
+/// Engine-generic serving loop: admit inbound requests, step the
+/// engine, route finished generations back to their connections.
+/// Returns when every sender is gone (tests drive it this way; in
+/// `serve` the listener thread keeps the channel open forever).
+pub fn engine_loop(
     rx: &mpsc::Receiver<InboundRequest>,
     tok: &Tokenizer,
-    mut engine: EngineRef,
+    engine: &mut dyn Engine,
 ) -> Result<()> {
     use std::collections::HashMap;
     let mut responders: HashMap<u64, mpsc::Sender<String>> = HashMap::new();
     loop {
         // block if fully idle, otherwise poll
-        let has_work = match &engine {
-            EngineRef::QSpec(e) => e.has_work(),
-            EngineRef::Ar(e) => e.has_work(),
-        };
-        if !has_work {
+        if !engine.has_work() {
             match rx.recv_timeout(Duration::from_millis(200)) {
-                Ok(req) => admit(&mut engine, tok, req, &mut responders),
+                Ok(req) => admit(engine, tok, req, &mut responders),
                 Err(mpsc::RecvTimeoutError::Timeout) => continue,
                 Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
             }
         }
         // drain whatever else arrived
         while let Ok(req) = rx.try_recv() {
-            admit(&mut engine, tok, req, &mut responders);
+            admit(engine, tok, req, &mut responders);
         }
-        let finished = match &mut engine {
-            EngineRef::QSpec(e) => e.step()?,
-            EngineRef::Ar(e) => e.step()?,
-        };
-        for f in finished {
+        let depth = engine.queue_depth();
+        if depth > 0 {
+            log::debug!(
+                "queue backlog: {depth} waiting, oldest {:.1} ms",
+                engine.oldest_queued_ns() as f64 / 1e6
+            );
+        }
+        for f in engine.step()? {
             if let Some(resp) = responders.remove(&f.id) {
                 let text = tok.decode(&f.tokens);
-                let _ = resp.send(format_response(f.id, &text, f.latency_ns, f.tokens.len()));
+                let _ = resp.send(format_response(&f, &text));
             }
         }
     }
 }
 
 fn admit(
-    engine: &mut EngineRef,
+    engine: &mut dyn Engine,
     tok: &Tokenizer,
     req: InboundRequest,
     responders: &mut std::collections::HashMap<u64, mpsc::Sender<String>>,
 ) {
     let prompt = tok.encode_prompt(&req.prompt);
-    let id = match engine {
-        EngineRef::QSpec(e) => e.submit(prompt, req.max_tokens),
-        EngineRef::Ar(e) => e.submit(prompt, req.max_tokens),
-    };
+    let id = engine.submit(prompt, req.max_tokens);
     responders.insert(id, req.resp);
 }
 
@@ -199,22 +225,55 @@ mod tests {
 
     #[test]
     fn request_line_roundtrip() {
-        let (p, m) = parse_request_line(r#"{"prompt":"q: a x ?\n","max_tokens":32}"#).unwrap();
+        let (p, m) =
+            parse_request_line(r#"{"prompt":"q: a x ?\n","max_tokens":32}"#, 64, 512).unwrap();
         assert_eq!(p, "q: a x ?\n");
         assert_eq!(m, 32);
     }
 
     #[test]
     fn default_max_tokens() {
-        let (_, m) = parse_request_line(r#"{"prompt":"hi"}"#).unwrap();
+        let (_, m) = parse_request_line(r#"{"prompt":"hi"}"#, 64, 512).unwrap();
         assert_eq!(m, 64);
     }
 
     #[test]
+    fn max_tokens_clamped_to_cap() {
+        let (_, m) =
+            parse_request_line(r#"{"prompt":"hi","max_tokens":999999}"#, 64, 512).unwrap();
+        assert_eq!(m, 512);
+        let (_, m) = parse_request_line(r#"{"prompt":"hi","max_tokens":0}"#, 64, 512).unwrap();
+        assert_eq!(m, 1);
+    }
+
+    #[test]
+    fn non_object_request_rejected() {
+        assert!(parse_request_line(r#"[1,2,3]"#, 64, 512).is_err());
+        assert!(parse_request_line(r#""just a string""#, 64, 512).is_err());
+        assert!(parse_request_line(r#"42"#, 64, 512).is_err());
+    }
+
+    #[test]
+    fn error_line_is_structured_json() {
+        let e = format_error("bad_request", "request must be a JSON object");
+        let j = Json::parse(&e).unwrap();
+        let err = j.get("error").unwrap();
+        assert_eq!(err.get("code").unwrap().as_str(), Some("bad_request"));
+        assert!(err.get("message").unwrap().as_str().is_some());
+    }
+
+    #[test]
     fn response_format_parses_back() {
-        let r = format_response(7, "a: m\n", 1_500_000, 5);
+        let f = Finished {
+            id: 7,
+            tokens: vec![1, 2, 3, 4, 5],
+            latency_ns: 1_500_000,
+            queue_ns: 200_000,
+        };
+        let r = format_response(&f, "a: m\n");
         let j = Json::parse(&r).unwrap();
         assert_eq!(j.get("id").unwrap().as_i64(), Some(7));
         assert_eq!(j.get("tokens").unwrap().as_i64(), Some(5));
+        assert!(j.get("queue_ms").unwrap().as_f64().unwrap() > 0.0);
     }
 }

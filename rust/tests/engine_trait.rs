@@ -1,0 +1,136 @@
+//! Trait-level engine tests: every engine kind is driven through the
+//! same generic harness (`&mut dyn Engine`), and the server loop is
+//! round-tripped with the EAGLE baseline — servable since the engine
+//! abstraction landed.
+//!
+//! Requires `make artifacts` (skips silently otherwise). One #[test]
+//! drives everything: PJRT client creation is expensive and the handles
+//! are not Send, so a single test owns the session.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+use qspec::config::{EngineKind, ServeConfig};
+use qspec::coordinator::{build_engine, Engine};
+use qspec::evalsuite;
+use qspec::model::{Mode, Tokenizer};
+use qspec::runtime::{ArtifactStore, Session};
+use qspec::server::{self, InboundRequest};
+use qspec::util::json::{num, obj, s, Json};
+
+fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn engine_trait_suite() {
+    if !artifacts_root().join("manifest.json").exists() {
+        eprintln!("skipping engine_trait: run `make artifacts` first");
+        return;
+    }
+    let store = ArtifactStore::open(&artifacts_root()).expect("manifest");
+    let sess = Session::new(store).expect("session");
+    let tok = Tokenizer::load(&sess.store.tokenizer_path()).expect("tokenizer");
+    let items = evalsuite::load_eval(&sess.store.eval_path("chain")).expect("eval set");
+    let prompts: Vec<String> = items.iter().take(12).map(|i| i.prompt.clone()).collect();
+
+    // the same harness drives every engine kind
+    let kinds: Vec<(EngineKind, &str)> = vec![
+        (EngineKind::QSpec, "s"),
+        (EngineKind::Ar(Mode::W4A16), "s"),
+        (EngineKind::Eagle { tree_k: 1 }, "m"),
+    ];
+    for (kind, size) in &kinds {
+        let cfg = ServeConfig {
+            size: size.to_string(),
+            batch: 8,
+            engine: kind.clone(),
+            ..ServeConfig::default()
+        };
+        let mut engine = build_engine(&sess, &cfg).expect("build_engine");
+        drive_generic(engine.as_mut(), &tok, &prompts);
+    }
+
+    eagle_server_round_trip(&sess, &tok, &prompts);
+}
+
+/// Submit N requests -> run_to_completion -> assert every request
+/// finishes, completion covers exactly the FCFS-assigned ids, and the
+/// metrics invariants hold for ANY engine.
+fn drive_generic(engine: &mut dyn Engine, tok: &Tokenizer, prompts: &[String]) {
+    let n = prompts.len();
+    let mut submitted = Vec::new();
+    for p in prompts {
+        submitted.push(engine.submit(tok.encode_prompt(p), 24));
+    }
+    // ids are engine-assigned, dense and in submission order
+    assert_eq!(submitted, (0..n as u64).collect::<Vec<_>>(), "{}", engine.name());
+    assert!(engine.has_work());
+
+    let mut fins = engine.run_to_completion().expect("run_to_completion");
+    assert!(!engine.has_work(), "{}: work left after completion", engine.name());
+    assert_eq!(fins.len(), n, "{}: all requests must finish", engine.name());
+    fins.sort_by_key(|f| f.id);
+    let ids: Vec<u64> = fins.iter().map(|f| f.id).collect();
+    assert_eq!(ids, submitted, "{}: finished ids != submitted ids", engine.name());
+
+    let m = engine.metrics();
+    assert_eq!(m.requests_done, n as u64, "{}", engine.name());
+    // every engine counts exactly the emitted tokens as committed
+    assert_eq!(m.committed, m.tokens_out, "{}", engine.name());
+    let toks: usize = fins.iter().map(|f| f.tokens.len()).sum();
+    assert_eq!(toks as u64, m.tokens_out, "{}", engine.name());
+    // the new queue-wait histogram sees one admission per request
+    assert_eq!(m.queue_wait.count(), n as u64, "{}", engine.name());
+    assert_eq!(m.req_latency.count(), n as u64, "{}", engine.name());
+    for f in &fins {
+        assert!(f.latency_ns >= f.queue_ns, "{}: wait > latency", engine.name());
+    }
+    // the virtual clock advanced (every phase charges it)
+    assert!(engine.cost().virtual_ns > 0, "{}", engine.name());
+}
+
+/// Server-layer round trip for the newly servable EAGLE engine: the
+/// engine loop is driven through the same mpsc protocol the TCP
+/// connection threads use (requests in, JSON response lines out).
+fn eagle_server_round_trip(sess: &Session, tok: &Tokenizer, prompts: &[String]) {
+    let cfg = ServeConfig {
+        size: "m".to_string(),
+        batch: 8,
+        engine: EngineKind::Eagle { tree_k: 1 },
+        ..ServeConfig::default()
+    };
+    let mut engine = build_engine(sess, &cfg).expect("eagle engine");
+    let cap = engine.max_seq();
+
+    let (tx, rx) = mpsc::channel::<InboundRequest>();
+    let mut resp_rx = Vec::new();
+    for p in prompts.iter().take(6) {
+        // go through the real request parser (clamps max_tokens),
+        // serializing with the crate's own JSON writer
+        let line = obj(vec![
+            ("prompt", s(p)),
+            ("max_tokens", num(9_999_999.0)),
+        ])
+        .to_string();
+        let (prompt, max_tokens) =
+            server::parse_request_line(&line, cfg.max_tokens_default, cap).expect("parse");
+        assert!(max_tokens <= cap, "clamp failed");
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(InboundRequest { prompt, max_tokens, resp: rtx }).unwrap();
+        resp_rx.push(rrx);
+    }
+    drop(tx); // loop exits once idle and the channel is closed
+    server::engine_loop(&rx, tok, engine.as_mut()).expect("engine_loop");
+
+    for rrx in resp_rx {
+        let line = rrx.try_recv().expect("response delivered");
+        let j = Json::parse(&line).expect("response is JSON");
+        assert!(j.get("id").is_some());
+        assert!(j.get("latency_ms").is_some());
+        assert!(j.get("queue_ms").is_some());
+        assert!(j.get("tokens").unwrap().as_i64().unwrap() > 0);
+        assert!(j.get("text").unwrap().as_str().is_some());
+    }
+    assert_eq!(engine.metrics().requests_done, 6);
+}

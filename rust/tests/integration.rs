@@ -7,7 +7,7 @@
 
 use std::path::PathBuf;
 
-use qspec::coordinator::{ArEngine, EagleConfig, EagleEngine, QSpecConfig, QSpecEngine};
+use qspec::coordinator::{ArEngine, EagleConfig, EagleEngine, Engine, QSpecConfig, QSpecEngine};
 use qspec::error::QspecError;
 use qspec::evalsuite;
 use qspec::model::{Mode, Tokenizer};
@@ -98,12 +98,12 @@ fn check_qspec_acceptance_dynamics(sess: &Session, tok: &Tokenizer) {
         q.submit(tok.encode_prompt(&it.prompt), 64);
     }
     q.run_to_completion().expect("run");
-    let acc = q.metrics.acceptance_rate();
+    let acc = q.metrics().acceptance_rate();
     assert!(acc > 0.5, "acceptance rate {acc} too low for shared-weight drafting");
-    assert!(q.metrics.drafted > 0);
+    assert!(q.metrics().drafted > 0);
     // verify-phase bookkeeping: every cycle commits accepted+1 tokens
     // (prefill adds 1 more per request)
-    assert!(q.metrics.committed >= q.metrics.accepted);
+    assert!(q.metrics().committed >= q.metrics().accepted);
     // fig2 samples: accepted tokens should carry high verify prob
     assert!(!q.samples.is_empty());
     let acc_mean: f32 = {
@@ -144,7 +144,7 @@ fn check_continuous_batching_refill(sess: &Session, tok: &Tokenizer) {
     let mut ids: Vec<u64> = fins.iter().map(|f| f.id).collect();
     ids.sort_unstable();
     assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
-    assert_eq!(q.metrics.requests_done, n as u64);
+    assert_eq!(q.metrics().requests_done, n as u64);
 }
 
 /// The no-overwrite ablation must not crash and should accept no more
@@ -159,7 +159,7 @@ fn check_no_overwrite_ablation(sess: &Session, tok: &Tokenizer) {
             q.submit(tok.encode_prompt(&it.prompt), 48);
         }
         q.run_to_completion().expect("run");
-        q.metrics.acceptance_rate()
+        q.metrics().acceptance_rate()
     };
     let with = run(true);
     let without = run(false);
@@ -179,7 +179,7 @@ fn check_eagle_baseline_and_oom(sess: &Session, tok: &Tokenizer) {
     let fins = e.run_to_completion().expect("eagle run");
     assert_eq!(fins.len(), 8);
     // two-model drafting accepts less than shared-weight QSPEC
-    assert!(e.metrics.drafted > 0);
+    assert!(e.metrics().drafted > 0);
 
     match EagleEngine::new(sess, EagleConfig::new(16, 2)) {
         Err(QspecError::Oom(msg)) => assert!(msg.contains("eagle")),

@@ -2,7 +2,7 @@
 //! in-crate mini property-testing framework (util::check). These run
 //! without artifacts — pure logic over SlotManager / acceptance / queue.
 
-use qspec::coordinator::{greedy_accept, FcfsQueue};
+use qspec::coordinator::{greedy_accept, FcfsQueue, Request};
 use qspec::kvcache::SlotManager;
 use qspec::util::check::check;
 use qspec::util::prng::Pcg32;
@@ -147,16 +147,27 @@ fn fcfs_queue_order_property() {
             ops
         },
         |ops| {
+            // ids are assigned by the engine core; the queue is pure
+            // ordering, so the model assigns them here
             let mut q = FcfsQueue::new();
             let mut pushed = std::collections::VecDeque::new();
+            let mut next_id = 0u64;
             for &op in ops {
                 if op % 2 == 0 {
-                    let id = q.push(vec![op as i32], 4);
+                    let id = next_id;
+                    next_id += 1;
+                    q.push_request(Request::new(id, vec![op as i32], 4));
                     pushed.push_back(id);
                 } else if let Some(r) = q.pop() {
                     let want = pushed.pop_front().ok_or("pop from empty model")?;
                     if r.id != want {
                         return Err(format!("popped {} want {want}", r.id));
+                    }
+                }
+                // peek always reports the same request the next pop returns
+                if let (Some(head), Some(&want)) = (q.peek(), pushed.front()) {
+                    if head.id != want {
+                        return Err(format!("peek {} want {want}", head.id));
                     }
                 }
             }
