@@ -1,5 +1,7 @@
-//! TCP serving demo: spawns the `qspec serve` binary, sends concurrent
-//! requests over the line protocol, prints the responses, shuts down.
+//! TCP serving demo (protocol v1): spawns the `qspec serve` binary,
+//! streams a generation token-by-token, fires concurrent legacy
+//! requests, cancels one mid-flight, fetches a `/stats` snapshot, and
+//! shuts down.
 //!
 //!     cargo build --release && cargo run --release --example tcp_server_demo
 //!
@@ -23,6 +25,7 @@ fn wait_for_port(addr: &str, tries: u32) -> bool {
     false
 }
 
+/// One-line request -> one-line response (the legacy form).
 fn query(addr: &str, prompt: &str, max_tokens: usize) -> std::io::Result<String> {
     let mut stream = TcpStream::connect(addr)?;
     writeln!(
@@ -30,6 +33,39 @@ fn query(addr: &str, prompt: &str, max_tokens: usize) -> std::io::Result<String>
         r#"{{"prompt":"{}","max_tokens":{max_tokens}}}"#,
         prompt.replace('\n', "\\n")
     )?;
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line)?;
+    Ok(line.trim().to_string())
+}
+
+/// Streamed generate: print each delta frame as it lands, return the
+/// terminal `done` frame.
+fn stream_query(addr: &str, prompt: &str, max_tokens: usize) -> std::io::Result<String> {
+    let stream = TcpStream::connect(addr)?;
+    let mut w = stream.try_clone()?;
+    writeln!(
+        w,
+        r#"{{"op":"generate","prompt":"{}","max_tokens":{max_tokens},"stream":true,"stop":["\n"]}}"#,
+        prompt.replace('\n', "\\n")
+    )?;
+    let mut r = BufReader::new(stream);
+    loop {
+        let mut line = String::new();
+        if r.read_line(&mut line)? == 0 {
+            return Ok(String::new());
+        }
+        let line = line.trim().to_string();
+        if line.contains("\"done\":true") || line.contains("\"error\"") {
+            return Ok(line);
+        }
+        println!("  delta: {line}");
+    }
+}
+
+/// Send one op line on a fresh connection and read one reply line.
+fn one_shot(addr: &str, op_line: &str) -> std::io::Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(stream, "{op_line}")?;
     let mut line = String::new();
     BufReader::new(stream).read_line(&mut line)?;
     Ok(line.trim().to_string())
@@ -61,8 +97,15 @@ fn main() {
         let _ = child.kill();
         panic!("server did not come up");
     }
-    println!("server up on {addr}; sending concurrent requests\n");
 
+    // 1. token-by-token streaming: one delta line per engine step, then
+    //    a terminal frame with the authoritative text + usage
+    println!("server up on {addr}; streaming a generation\n");
+    let done = stream_query(&addr, "q: g xyx ?\n", 48).expect("stream");
+    println!("  done:  {done}\n");
+
+    // 2. concurrent legacy one-line requests (continuous batching)
+    println!("sending concurrent legacy requests\n");
     let prompts = ["q: g xyx ?\n", "q: b yy ?\n", "q: [3,1,2] rev ?\n", "q: k x ?\n"];
     let handles: Vec<_> = prompts
         .iter()
@@ -76,6 +119,41 @@ fn main() {
         let (p, r) = h.join().unwrap();
         println!("prompt: {:?}\nresponse: {}\n", p, r.unwrap_or_else(|e| e.to_string()));
     }
+
+    // 3. cancellation: start a long streamed generation, then cancel it
+    //    from the same connection after the first delta
+    println!("cancelling a long generation mid-flight\n");
+    let cancel_demo = || -> std::io::Result<()> {
+        let stream = TcpStream::connect(&addr)?;
+        let mut w = stream.try_clone()?;
+        writeln!(w, r#"{{"op":"generate","prompt":"q: g xyx ?\n","max_tokens":400,"stream":true}}"#)?;
+        let mut r = BufReader::new(stream);
+        let mut first = String::new();
+        r.read_line(&mut first)?;
+        println!("  first delta: {}", first.trim());
+        // deltas carry the request id; cancel using it
+        let id: String = first
+            .split("\"id\":")
+            .nth(1)
+            .map(|s| s.chars().take_while(|c| c.is_ascii_digit()).collect())
+            .unwrap_or_default();
+        writeln!(w, r#"{{"op":"cancel","id":{id}}}"#)?;
+        for line in r.lines() {
+            let line = line?;
+            if line.contains("\"done\":true") || line.contains("\"cancelled\"") {
+                println!("  {line}");
+            }
+            if line.contains("\"cancelled\"") {
+                break;
+            }
+        }
+        Ok(())
+    };
+    cancel_demo().expect("cancel demo");
+
+    // 4. the /stats surface
+    let stats = one_shot(&addr, r#"{"op":"stats"}"#).expect("stats");
+    println!("\nstats: {stats}\n");
 
     let _ = child.kill();
     let _ = child.wait();

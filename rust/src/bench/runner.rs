@@ -5,7 +5,7 @@
 //! `coordinator::build_engine` does the construction.
 
 use crate::config::{EngineKind, ServeConfig};
-use crate::coordinator::{build_engine, SimilaritySample};
+use crate::coordinator::{build_engine, GenerationRequest, SamplingParams, SimilaritySample};
 use crate::error::Result;
 use crate::metrics::EngineMetrics;
 use crate::model::Tokenizer;
@@ -107,7 +107,9 @@ pub fn load_workload(
 pub fn run_engine(sess: &Session, tok: &Tokenizer, spec: &RunSpec) -> Result<RunOutput> {
     let mut e = build_engine(sess, &spec.serve_config())?;
     for (p, mt) in load_workload(sess, tok, spec)? {
-        e.submit(p, mt);
+        // benches measure the paper's greedy serving setup; the typed
+        // request API keeps the submission path identical to the server
+        e.submit_request(GenerationRequest::new(p, SamplingParams::greedy(mt)));
     }
     e.run_to_completion()?;
     Ok(RunOutput {

@@ -54,6 +54,15 @@ impl Args {
         }
     }
 
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| QspecError::Config(format!("--{key} must be a number"))),
+        }
+    }
+
     pub fn has_flag(&self, f: &str) -> bool {
         self.flags.iter().any(|x| x == f)
     }
@@ -92,6 +101,14 @@ mod tests {
     fn bad_int_rejected() {
         let a = parse("serve --batch x");
         assert!(a.get_usize("batch", 8).is_err());
+    }
+
+    #[test]
+    fn float_option() {
+        let a = parse("generate --temperature 0.7");
+        assert_eq!(a.get_f64("temperature", 0.0).unwrap(), 0.7);
+        assert_eq!(a.get_f64("seedless", 1.5).unwrap(), 1.5);
+        assert!(parse("generate --temperature warm").get_f64("temperature", 0.0).is_err());
     }
 
     #[test]

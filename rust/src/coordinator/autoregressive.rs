@@ -15,7 +15,7 @@ use crate::model::Mode;
 use crate::runtime::{ModelMeta, Module, Session, WeightSet};
 
 use super::engine::{BatchCore, Engine};
-use super::request::Finished;
+use super::request::StepEvent;
 
 /// Single-mode autoregressive engine.
 pub struct ArEngine<'s> {
@@ -61,7 +61,7 @@ impl<'s> ArEngine<'s> {
         })
     }
 
-    fn admit_and_prefill(&mut self, out: &mut Vec<Finished>) -> Result<()> {
+    fn admit_and_prefill(&mut self, out: &mut Vec<StepEvent>) -> Result<()> {
         let pb = match self.core.admit_batch(out)? {
             Some(pb) => pb,
             None => return Ok(()),
@@ -82,7 +82,7 @@ impl<'s> ArEngine<'s> {
         Ok(())
     }
 
-    fn decode_step(&mut self, out: &mut Vec<Finished>) -> Result<()> {
+    fn decode_step(&mut self, out: &mut Vec<StepEvent>) -> Result<()> {
         let sb = match self.core.step_inputs() {
             Some(sb) => sb,
             None => return Ok(()),
@@ -118,7 +118,7 @@ impl<'s> Engine for ArEngine<'s> {
         &mut self.core
     }
 
-    fn step(&mut self) -> Result<Vec<Finished>> {
+    fn step(&mut self) -> Result<Vec<StepEvent>> {
         let mut out = Vec::new();
         self.admit_and_prefill(&mut out)?;
         self.decode_step(&mut out)?;

@@ -28,7 +28,7 @@ use crate::runtime::{ModelMeta, Module, Session, WeightSet};
 
 use super::acceptance::greedy_accept;
 use super::engine::{BatchCore, Engine};
-use super::request::Finished;
+use super::request::StepEvent;
 
 /// EAGLE baseline configuration.
 #[derive(Clone, Debug)]
@@ -148,7 +148,7 @@ impl<'s> EagleEngine<'s> {
         })
     }
 
-    fn admit_and_prefill(&mut self, out: &mut Vec<Finished>) -> Result<()> {
+    fn admit_and_prefill(&mut self, out: &mut Vec<StepEvent>) -> Result<()> {
         let pb = match self.core.admit_batch(out)? {
             Some(pb) => pb,
             None => return Ok(()),
@@ -178,7 +178,7 @@ impl<'s> EagleEngine<'s> {
         Ok(())
     }
 
-    fn cycle(&mut self, out: &mut Vec<Finished>) -> Result<()> {
+    fn cycle(&mut self, out: &mut Vec<StepEvent>) -> Result<()> {
         let sb = match self.core.step_inputs() {
             Some(sb) => sb,
             None => return Ok(()),
@@ -262,7 +262,7 @@ impl<'s> Engine for EagleEngine<'s> {
         &mut self.core
     }
 
-    fn step(&mut self) -> Result<Vec<Finished>> {
+    fn step(&mut self) -> Result<Vec<StepEvent>> {
         let mut out = Vec::new();
         self.admit_and_prefill(&mut out)?;
         self.cycle(&mut out)?;

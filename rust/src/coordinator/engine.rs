@@ -8,7 +8,11 @@
 //!
 //! * [`Engine`] — the object-safe contract every engine satisfies.
 //!   Consumers (server loop, bench runner, evalsuite, CLI) hold a
-//!   `&mut dyn Engine` and never know which scheme is running. The
+//!   `&mut dyn Engine` and never know which scheme is running. One
+//!   `step()` emits incremental [`StepEvent`]s — a `Delta` for every
+//!   commit and a terminal `Done` per finished request — so streaming,
+//!   cancellation ([`Engine::cancel`]) and per-request
+//!   [`SamplingParams`] come for free with every engine kind. The
 //!   submit / has-work / metrics / run-to-completion plumbing is
 //!   provided by the trait itself through the [`Engine::core`]
 //!   accessor; engines implement only `step` (their phase logic) and
@@ -16,9 +20,9 @@
 //! * [`BatchCore`] — the shared continuous-batching state machine:
 //!   FCFS queue, slot table, request-id assignment, queue-wait and
 //!   latency accounting, admission + left-padded prefill packing,
-//!   decode input gathering, and commit/finish bookkeeping. The
-//!   engines own their modules/weights/KV buffers; everything request-
-//!   shaped lives here, written once.
+//!   decode input gathering, commit/finish bookkeeping and mid-flight
+//!   cancellation. The engines own their modules/weights/KV buffers;
+//!   everything request-shaped lives here, written once.
 //! * [`build_engine`] — the single factory from [`ServeConfig`] /
 //!   [`EngineKind`] to a boxed engine. Every driver goes through it,
 //!   so adding an engine kind is one new arm here, not a change to
@@ -38,7 +42,9 @@ use crate::runtime::Session;
 use super::autoregressive::ArEngine;
 use super::eagle::{EagleConfig, EagleEngine};
 use super::queue::FcfsQueue;
-use super::request::{Finished, Request};
+use super::request::{
+    FinishReason, Finished, GenerationRequest, Request, StepEvent,
+};
 use super::spec_decode::{QSpecConfig, QSpecEngine};
 use super::SimilaritySample;
 
@@ -64,8 +70,10 @@ pub trait Engine {
     fn core_mut(&mut self) -> &mut BatchCore;
 
     /// One scheduling round: admit + prefill if possible, then one
-    /// decode (or draft + verify) cycle over the active slots.
-    fn step(&mut self) -> Result<Vec<Finished>>;
+    /// decode (or draft + verify) cycle over the active slots. Emits a
+    /// [`StepEvent::Delta`] for every commit and a [`StepEvent::Done`]
+    /// for every request that finished this round.
+    fn step(&mut self) -> Result<Vec<StepEvent>>;
 
     /// Drain any collected fig-2 similarity samples (engines that don't
     /// draft return none).
@@ -73,9 +81,24 @@ pub trait Engine {
         Vec::new()
     }
 
-    /// Enqueue a request (token ids); returns its engine-assigned id.
+    /// Enqueue a full request (prompt token ids + per-request sampling
+    /// params); returns its engine-assigned id.
+    fn submit_request(&mut self, req: GenerationRequest) -> u64 {
+        self.core_mut().submit_request(req)
+    }
+
+    /// Legacy convenience: greedy request with a generation budget.
     fn submit(&mut self, prompt: Vec<i32>, max_tokens: usize) -> u64 {
-        self.core_mut().submit(prompt, max_tokens)
+        self.submit_request(GenerationRequest::greedy(prompt, max_tokens))
+    }
+
+    /// Cancel a request mid-flight: removes it from the queue or
+    /// releases its slot (freeing the KV positions for the next
+    /// admission) and returns its terminal record (`finish_reason`
+    /// [`FinishReason::Cancelled`], tokens generated so far). `None`
+    /// when no such request is in flight.
+    fn cancel(&mut self, id: u64) -> Option<Finished> {
+        self.core_mut().cancel(id)
     }
 
     fn has_work(&self) -> bool {
@@ -95,6 +118,11 @@ pub trait Engine {
         self.core().queue_depth()
     }
 
+    /// Requests currently generating in a slot.
+    fn active_requests(&self) -> usize {
+        self.core().slots.active_count()
+    }
+
     /// Age of the oldest still-queued request (0 when idle) — the
     /// server loop's queue-pressure signal.
     fn oldest_queued_ns(&self) -> u128 {
@@ -107,12 +135,13 @@ pub trait Engine {
         self.core().slots.max_seq()
     }
 
-    /// Drive everything to completion (benches, eval, one-shot CLI).
+    /// Drive everything to completion and collect the terminal records
+    /// (benches, eval, one-shot CLI); deltas are folded away.
     fn run_to_completion(&mut self) -> Result<Vec<Finished>> {
         let mut out = Vec::new();
         let mut guard = 0usize;
         while self.has_work() {
-            out.extend(self.step()?);
+            out.extend(self.step()?.into_iter().filter_map(StepEvent::into_done));
             guard += 1;
             if guard > MAX_SCHED_STEPS {
                 return Err(QspecError::Scheduler(format!(
@@ -130,6 +159,7 @@ pub trait Engine {
 struct Inflight {
     submitted: Instant,
     queue_ns: u128,
+    prompt_tokens: usize,
 }
 
 /// Admission + prefill tensor batch: the newly admitted requests and
@@ -158,7 +188,7 @@ pub struct StepBatch {
 /// Shared continuous-batching state + logic for every engine: the FCFS
 /// queue, the slot table, metrics and the virtual-clock cost model,
 /// plus the request lifecycle (id assignment -> queue wait -> admission
-/// -> commit -> finish) written exactly once.
+/// -> commit -> finish/cancel) written exactly once.
 #[derive(Debug)]
 pub struct BatchCore {
     pub slots: SlotManager,
@@ -190,16 +220,25 @@ impl BatchCore {
         self.slots.batch()
     }
 
-    /// Enqueue a request; assigns the id and starts the latency clock.
+    /// Enqueue a greedy request (legacy form); assigns the id and
+    /// starts the latency clock.
     pub fn submit(&mut self, prompt: Vec<i32>, max_tokens: usize) -> u64 {
+        self.submit_request(GenerationRequest::greedy(prompt, max_tokens))
+    }
+
+    /// Enqueue a full request; assigns the id and starts the latency
+    /// clock. Params are taken as-is — wire-level validation happens at
+    /// the server parse layer.
+    pub fn submit_request(&mut self, req: GenerationRequest) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        let req = Request::new(id, prompt, max_tokens);
+        let prompt_tokens = req.prompt.len();
+        let r = Request::with_params(id, req.prompt, req.params);
         self.inflight.insert(
             id,
-            Inflight { submitted: req.arrival, queue_ns: 0 },
+            Inflight { submitted: r.arrival, queue_ns: 0, prompt_tokens },
         );
-        self.queue.push_request(req);
+        self.queue.push_request(r);
         id
     }
 
@@ -224,10 +263,10 @@ impl BatchCore {
     /// the left-padded prompt tensor for a batched prefill call.
     /// Records queue-wait for each admission. `None` when nothing was
     /// admitted this round. Empty-prompt requests complete immediately
-    /// with no tokens (pushed to `out`) rather than wedging the
-    /// scheduling loop — the tokenizer always emits BOS, so these only
-    /// arrive through direct `Engine::submit` misuse.
-    pub fn admit_batch(&mut self, out: &mut Vec<Finished>) -> Result<Option<PrefillBatch>> {
+    /// with no tokens (a `Done` event is pushed) rather than wedging
+    /// the scheduling loop — the tokenizer always emits BOS, so these
+    /// only arrive through direct `Engine::submit` misuse.
+    pub fn admit_batch(&mut self, out: &mut Vec<StepEvent>) -> Result<Option<PrefillBatch>> {
         let p = self.slots.prefill_t();
         let b = self.slots.batch();
         let mut admitted = Vec::new();
@@ -245,11 +284,23 @@ impl BatchCore {
                 };
                 self.metrics.req_latency.record(latency_ns as u64);
                 self.metrics.requests_done += 1;
-                out.push(Finished { id: req.id, tokens: Vec::new(), latency_ns, queue_ns });
+                out.push(StepEvent::Done(Finished {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    finish_reason: FinishReason::Length,
+                    prompt_tokens: 0,
+                    latency_ns,
+                    queue_ns,
+                }));
                 continue;
             }
             let plen = req.prompt.len().min(p);
-            let idx = self.slots.admit(req.id, plen, req.max_tokens)?;
+            let idx = self.slots.admit(
+                req.id,
+                plen,
+                req.params.max_tokens,
+                req.params.stop.clone(),
+            )?;
             admitted.push((idx, req));
         }
         if admitted.is_empty() {
@@ -269,17 +320,26 @@ impl BatchCore {
 
     /// Record the prefill results: `first_tok[idx]` is the first
     /// generated token of the request in slot `idx` (committed
-    /// immediately; see `SlotManager::after_prefill`).
+    /// immediately; see `SlotManager::after_prefill`). Emits the first
+    /// `Delta` per request (and `Done` if it already finished).
     pub fn finish_prefill(
         &mut self,
         batch: &PrefillBatch,
         first_tok: &[i32],
-        out: &mut Vec<Finished>,
+        out: &mut Vec<StepEvent>,
     ) {
-        for (idx, _) in &batch.admitted {
+        for (idx, req) in &batch.admitted {
             let done = self.slots.after_prefill(*idx, first_tok[*idx], EOS);
-            self.metrics.tokens_out += 1;
-            self.metrics.committed += 1;
+            // a stop sequence matching the first token trims it away
+            let emitted = self.slots.slot(*idx).generated.len() as u64;
+            self.metrics.tokens_out += emitted;
+            self.metrics.committed += emitted;
+            if emitted > 0 {
+                out.push(StepEvent::Delta {
+                    id: req.id,
+                    tokens: self.slots.slot(*idx).generated.clone(),
+                });
+            }
             if done {
                 self.finish(*idx, out);
             }
@@ -312,36 +372,100 @@ impl BatchCore {
     }
 
     /// Commit verified/sampled tokens for slot `idx`, update the token
-    /// counters, and finish the request if it completed. Returns how
-    /// many tokens were actually committed.
+    /// counters, emit the `Delta` (and `Done` if the request completed).
+    /// Returns how many tokens were actually committed.
     pub fn commit(
         &mut self,
         idx: usize,
         toks: &[i32],
         gamma: usize,
-        out: &mut Vec<Finished>,
+        out: &mut Vec<StepEvent>,
     ) -> usize {
+        let gen_before = self.slots.slot(idx).generated.len();
         let committed = self.slots.commit(idx, toks, EOS, gamma);
+        // a stop match spanning commits trims tokens counted in earlier
+        // rounds out of `generated`; reconcile the counters so
+        // tokens_out always equals the sum of final outputs
+        let overtrim = ((gen_before + committed.len())
+            .saturating_sub(self.slots.slot(idx).generated.len()))
+            as u64;
         self.metrics.committed += committed.len() as u64;
         self.metrics.tokens_out += committed.len() as u64;
+        self.metrics.committed = self.metrics.committed.saturating_sub(overtrim);
+        self.metrics.tokens_out = self.metrics.tokens_out.saturating_sub(overtrim);
+        let n = committed.len();
+        if n > 0 {
+            if let Some(id) = self.slots.slot(idx).req_id {
+                out.push(StepEvent::Delta { id, tokens: committed });
+            }
+        }
         if self.slots.slot(idx).done {
             self.finish(idx, out);
         }
-        committed.len()
+        n
     }
 
-    /// Release a finished slot and emit the `Finished` record with its
-    /// end-to-end latency and queue wait.
-    pub fn finish(&mut self, idx: usize, out: &mut Vec<Finished>) {
+    /// Release a finished slot and emit the `Done` event with its
+    /// finish reason, end-to-end latency and queue wait.
+    pub fn finish(&mut self, idx: usize, out: &mut Vec<StepEvent>) {
+        let finish_reason = self.slots.slot(idx).finish;
         if let Some((id, tokens)) = self.slots.release(idx) {
-            let (latency_ns, queue_ns) = match self.inflight.remove(&id) {
-                Some(inf) => (inf.submitted.elapsed().as_nanos(), inf.queue_ns),
-                None => (0, 0),
+            let (latency_ns, queue_ns, prompt_tokens) = match self.inflight.remove(&id) {
+                Some(inf) => (inf.submitted.elapsed().as_nanos(), inf.queue_ns, inf.prompt_tokens),
+                None => (0, 0, 0),
             };
             self.metrics.req_latency.record(latency_ns as u64);
             self.metrics.requests_done += 1;
-            out.push(Finished { id, tokens, latency_ns, queue_ns });
+            out.push(StepEvent::Done(Finished {
+                id,
+                tokens,
+                finish_reason,
+                prompt_tokens,
+                latency_ns,
+                queue_ns,
+            }));
         }
+    }
+
+    /// Cancel a request wherever it is in the lifecycle: still queued
+    /// (removed before admission) or active in a slot (the slot — and
+    /// with it the request's KV-cache positions — is released
+    /// immediately). Returns the terminal record with the tokens
+    /// generated so far; `None` if the id is unknown or already done.
+    /// Cancelled requests count in `metrics.cancelled`, not in
+    /// `requests_done` / the latency histogram.
+    pub fn cancel(&mut self, id: u64) -> Option<Finished> {
+        if let Some(req) = self.queue.remove(id) {
+            let queue_ns = req.arrival.elapsed().as_nanos();
+            let (latency_ns, prompt_tokens) = match self.inflight.remove(&id) {
+                Some(inf) => (inf.submitted.elapsed().as_nanos(), inf.prompt_tokens),
+                None => (queue_ns, req.prompt.len()),
+            };
+            self.metrics.cancelled += 1;
+            return Some(Finished {
+                id,
+                tokens: Vec::new(),
+                finish_reason: FinishReason::Cancelled,
+                prompt_tokens,
+                latency_ns,
+                queue_ns,
+            });
+        }
+        let idx = self.slots.slot_of(id)?;
+        let (id, tokens) = self.slots.release(idx)?;
+        let (latency_ns, queue_ns, prompt_tokens) = match self.inflight.remove(&id) {
+            Some(inf) => (inf.submitted.elapsed().as_nanos(), inf.queue_ns, inf.prompt_tokens),
+            None => (0, 0, 0),
+        };
+        self.metrics.cancelled += 1;
+        Some(Finished {
+            id,
+            tokens,
+            finish_reason: FinishReason::Cancelled,
+            prompt_tokens,
+            latency_ns,
+            queue_ns,
+        })
     }
 }
 
@@ -380,6 +504,7 @@ pub fn build_engine<'s>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::SamplingParams;
     use crate::costmodel::twins::Twin;
 
     fn core(batch: usize) -> BatchCore {
@@ -391,8 +516,8 @@ mod tests {
 
     /// A session-free engine over BatchCore: prefill emits token 10,
     /// every cycle commits the pending token + 1 (echo decoding). Lets
-    /// the trait defaults (submit / run_to_completion / metrics) be
-    /// exercised without artifacts.
+    /// the trait defaults (submit / run_to_completion / cancel /
+    /// metrics) be exercised without artifacts.
     struct MockEngine {
         core: BatchCore,
     }
@@ -410,7 +535,7 @@ mod tests {
             &mut self.core
         }
 
-        fn step(&mut self) -> Result<Vec<Finished>> {
+        fn step(&mut self) -> Result<Vec<StepEvent>> {
             let mut out = Vec::new();
             if let Some(pb) = self.core.admit_batch(&mut out)? {
                 let first = vec![10i32; self.core.batch()];
@@ -510,6 +635,91 @@ mod tests {
         assert_eq!(m.req_latency.count(), n);
         let toks: usize = fins.iter().map(|f| f.tokens.len()).sum();
         assert_eq!(toks as u64, m.tokens_out);
+        // budget exhaustion reports length; prompt usage is tracked
+        for f in &fins {
+            assert_eq!(f.finish_reason, FinishReason::Length);
+            assert_eq!(f.prompt_tokens, 3);
+        }
+    }
+
+    #[test]
+    fn deltas_stream_every_committed_token() {
+        let mut e = MockEngine { core: core(1) };
+        let id = e.submit(vec![1, 2], 4);
+        let mut streamed = Vec::new();
+        let mut done = None;
+        while e.has_work() {
+            for ev in e.step().unwrap() {
+                match ev {
+                    StepEvent::Delta { id: did, tokens } => {
+                        assert_eq!(did, id);
+                        streamed.extend(tokens);
+                    }
+                    StepEvent::Done(f) => done = Some(f),
+                }
+            }
+        }
+        let done = done.expect("terminal event");
+        // the deltas concatenate to exactly the final token list
+        assert_eq!(streamed, done.tokens);
+        assert_eq!(streamed, vec![10, 11, 12, 13]);
+    }
+
+    #[test]
+    fn stop_sequence_finishes_with_stop_reason() {
+        let mut e = MockEngine { core: core(1) };
+        // mock emits 10, 11, 12, ... -> stop on [12, 13]
+        let mut params = SamplingParams::greedy(20);
+        params.stop = vec![vec![12, 13]];
+        let id = e.submit_request(GenerationRequest::new(vec![1, 2], params));
+        let fins = e.run_to_completion().unwrap();
+        assert_eq!(fins.len(), 1);
+        assert_eq!(fins[0].id, id);
+        assert_eq!(fins[0].finish_reason, FinishReason::Stop);
+        // the matched stop tokens are trimmed from the output
+        assert_eq!(fins[0].tokens, vec![10, 11]);
+        // the mock commits one token per cycle, so the [12, 13] match
+        // spans two commits: token 12 was counted a round before being
+        // trimmed — the counters must be reconciled back to the output
+        assert_eq!(e.metrics().tokens_out, 2);
+        assert_eq!(e.metrics().committed, 2);
+    }
+
+    #[test]
+    fn cancel_queued_request_before_admission() {
+        let mut c = core(1);
+        c.submit(vec![1], 4);
+        let second = c.submit(vec![2], 4);
+        let f = c.cancel(second).expect("queued request cancellable");
+        assert_eq!(f.finish_reason, FinishReason::Cancelled);
+        assert!(f.tokens.is_empty());
+        assert_eq!(c.queue_depth(), 1);
+        assert_eq!(c.metrics.cancelled, 1);
+        assert_eq!(c.metrics.requests_done, 0);
+        assert!(c.cancel(second).is_none(), "double cancel is a no-op");
+    }
+
+    #[test]
+    fn cancel_active_request_frees_slot_mid_flight() {
+        let mut e = MockEngine { core: core(1) };
+        let victim = e.submit(vec![1, 2], 50);
+        let waiter = e.submit(vec![3], 2);
+        // two steps: victim admitted + generating, waiter queued
+        e.step().unwrap();
+        e.step().unwrap();
+        assert_eq!(e.queue_depth(), 1);
+        assert_eq!(e.active_requests(), 1);
+        let f = e.cancel(victim).expect("active request cancellable");
+        assert_eq!(f.finish_reason, FinishReason::Cancelled);
+        assert!(!f.tokens.is_empty(), "partial output is returned");
+        assert_eq!(e.active_requests(), 0, "slot freed immediately");
+        // the freed slot admits the waiter, which runs to completion
+        let fins = e.run_to_completion().unwrap();
+        assert_eq!(fins.len(), 1);
+        assert_eq!(fins[0].id, waiter);
+        assert_eq!(e.metrics().cancelled, 1);
+        assert_eq!(e.metrics().requests_done, 1);
+        assert!(e.cancel(victim).is_none(), "finished ids are not cancellable");
     }
 
     #[test]
@@ -535,5 +745,6 @@ mod tests {
         assert_eq!(d.name(), "mock");
         assert!(d.max_seq() == 64);
         assert!(d.take_samples().is_empty());
+        assert!(d.cancel(99).is_none());
     }
 }

@@ -5,7 +5,10 @@
 //!                     continuous-batching state machine, and the
 //!                     [`build_engine`] factory every driver (server,
 //!                     CLI, benches, evalsuite) goes through.
-//! * `request`/`queue` — FCFS request admission (continuous batching).
+//! * `request`/`queue` — the serving API types ([`GenerationRequest`]
+//!                     with per-request [`SamplingParams`], incremental
+//!                     [`StepEvent`]s, [`FinishReason`]) and the FCFS
+//!                     admission queue (continuous batching).
 //! * `acceptance`    — the draft-verify acceptance policies.
 //! * `spec_decode`   — the QSPEC engine: W4A4 fused drafting, W4A16
 //!                     parallel verification, KV-cache overwriting.
@@ -26,7 +29,9 @@ pub use autoregressive::ArEngine;
 pub use eagle::{EagleConfig, EagleEngine};
 pub use engine::{build_engine, BatchCore, Engine, PrefillBatch, StepBatch};
 pub use queue::FcfsQueue;
-pub use request::{Finished, Request};
+pub use request::{
+    FinishReason, Finished, GenerationRequest, Request, SamplingParams, StepEvent,
+};
 pub use spec_decode::{QSpecConfig, QSpecEngine};
 
 /// A similarity sample for fig 2: draft top-1 prob, verify prob of the

@@ -36,6 +36,13 @@ impl FcfsQueue {
         self.q.front()
     }
 
+    /// Remove a queued request by id (cancellation before admission);
+    /// order of the remaining requests is preserved.
+    pub fn remove(&mut self, id: u64) -> Option<Request> {
+        let pos = self.q.iter().position(|r| r.id == id)?;
+        self.q.remove(pos)
+    }
+
     pub fn len(&self) -> usize {
         self.q.len()
     }
@@ -57,6 +64,18 @@ mod tests {
         assert_eq!(q.pop().unwrap().id, 0);
         assert_eq!(q.pop().unwrap().id, 1);
         assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn remove_preserves_order_of_rest() {
+        let mut q = FcfsQueue::new();
+        for id in 0..4 {
+            q.push_request(Request::new(id, vec![1], 4));
+        }
+        assert_eq!(q.remove(2).unwrap().id, 2);
+        assert!(q.remove(2).is_none());
+        let ids: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 3]);
     }
 
     #[test]

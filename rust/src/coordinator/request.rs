@@ -1,29 +1,242 @@
-//! Request / response types of the serving API.
+//! Request / response types of the serving API (protocol v1).
+//!
+//! The serving surface is request/event shaped: callers build a
+//! [`GenerationRequest`] (prompt + per-request [`SamplingParams`]),
+//! engines emit [`StepEvent`]s — a [`StepEvent::Delta`] for every batch
+//! of committed tokens and a terminal [`StepEvent::Done`] carrying the
+//! [`Finished`] usage record with its [`FinishReason`]. The server maps
+//! these 1:1 onto wire frames; offline drivers (benches, evalsuite,
+//! CLI) collect the `Done` events through `Engine::run_to_completion`.
 
 use std::time::Instant;
 
-/// One generation request (token-level; the server layer tokenizes).
+use crate::error::{QspecError, Result};
+
+/// Ceilings on per-request stop sequences (a client knob — bounded so a
+/// request cannot make every commit scan arbitrarily long suffixes).
+pub const MAX_STOP_SEQUENCES: usize = 4;
+pub const MAX_STOP_TOKENS: usize = 32;
+
+/// Per-request sampling / termination parameters.
+///
+/// `temperature` and `seed` are threaded through every layer and
+/// validated, but the AOT-compiled entries return greedy argmax tokens
+/// (the paper's reproducibility setup) and logits never cross the host
+/// boundary, so generation currently behaves as temperature 0 for any
+/// accepted value; the fields exist so host-side samplers and future
+/// sampling entries consume them without another API change.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SamplingParams {
+    /// generation budget (counting the prefill's first token).
+    pub max_tokens: usize,
+    /// token-level stop sequences: generation ends (finish_reason
+    /// `Stop`) when the generated tail matches any of them; the matched
+    /// tokens are trimmed from the output.
+    pub stop: Vec<Vec<i32>>,
+    /// 0.0 = greedy (default, the paper setting). Validated to [0, 2].
+    pub temperature: f32,
+    /// PRNG seed for temperature sampling (unused when greedy).
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { max_tokens: 64, stop: Vec::new(), temperature: 0.0, seed: 0 }
+    }
+}
+
+impl SamplingParams {
+    /// Greedy decode with a generation budget — the historical
+    /// `(prompt, max_tokens)` API expressed as params.
+    pub fn greedy(max_tokens: usize) -> Self {
+        SamplingParams { max_tokens, ..SamplingParams::default() }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.max_tokens == 0 {
+            return Err(QspecError::Config("max_tokens must be >= 1".into()));
+        }
+        if !self.temperature.is_finite() || !(0.0..=2.0).contains(&self.temperature) {
+            return Err(QspecError::Config(format!(
+                "temperature {} outside [0, 2]",
+                self.temperature
+            )));
+        }
+        if self.stop.len() > MAX_STOP_SEQUENCES {
+            return Err(QspecError::Config(format!(
+                "at most {MAX_STOP_SEQUENCES} stop sequences (got {})",
+                self.stop.len()
+            )));
+        }
+        for s in &self.stop {
+            if s.is_empty() || s.len() > MAX_STOP_TOKENS {
+                return Err(QspecError::Config(format!(
+                    "stop sequences must be 1..={MAX_STOP_TOKENS} tokens (got {})",
+                    s.len()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One generation request as submitted by a client (token-level; the
+/// server layer tokenizes prompt and stop strings).
+#[derive(Clone, Debug)]
+pub struct GenerationRequest {
+    pub prompt: Vec<i32>,
+    pub params: SamplingParams,
+}
+
+impl GenerationRequest {
+    pub fn new(prompt: Vec<i32>, params: SamplingParams) -> Self {
+        GenerationRequest { prompt, params }
+    }
+
+    /// The legacy `(prompt, max_tokens)` form: greedy, no stops.
+    pub fn greedy(prompt: Vec<i32>, max_tokens: usize) -> Self {
+        GenerationRequest { prompt, params: SamplingParams::greedy(max_tokens) }
+    }
+}
+
+/// Why a request stopped generating.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// budget exhausted (max_tokens) or out of KV-cache headroom.
+    Length,
+    /// natural stop: EOS emitted or a stop sequence matched.
+    Stop,
+    /// cancelled by the client (explicit op or disconnect).
+    Cancelled,
+}
+
+impl FinishReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// Internal queued request: id assigned by the engine's `BatchCore`,
+/// arrival stamped at submission.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
     pub prompt: Vec<i32>,
-    pub max_tokens: usize,
+    pub params: SamplingParams,
     pub arrival: Instant,
 }
 
 impl Request {
+    /// Greedy request (tests and legacy call sites).
     pub fn new(id: u64, prompt: Vec<i32>, max_tokens: usize) -> Self {
-        Request { id, prompt, max_tokens, arrival: Instant::now() }
+        Self::with_params(id, prompt, SamplingParams::greedy(max_tokens))
+    }
+
+    pub fn with_params(id: u64, prompt: Vec<i32>, params: SamplingParams) -> Self {
+        Request { id, prompt, params, arrival: Instant::now() }
+    }
+
+    pub fn max_tokens(&self) -> usize {
+        self.params.max_tokens
     }
 }
 
-/// A finished request with its generated tokens and latency.
+/// A finished request: the generated tokens plus its usage record.
 #[derive(Clone, Debug)]
 pub struct Finished {
     pub id: u64,
     pub tokens: Vec<i32>,
+    pub finish_reason: FinishReason,
+    /// prompt length in tokens (usage accounting).
+    pub prompt_tokens: usize,
     /// end-to-end latency (submit -> finish).
     pub latency_ns: u128,
     /// time spent waiting in the FCFS queue (submit -> admission).
     pub queue_ns: u128,
+}
+
+/// Incremental output of one `Engine::step`.
+#[derive(Clone, Debug)]
+pub enum StepEvent {
+    /// Tokens committed for request `id` this step (streamed to the
+    /// client as they land).
+    Delta { id: u64, tokens: Vec<i32> },
+    /// Terminal event: the request finished (or was cancelled) and its
+    /// slot is already released.
+    Done(Finished),
+}
+
+impl StepEvent {
+    pub fn into_done(self) -> Option<Finished> {
+        match self {
+            StepEvent::Done(f) => Some(f),
+            StepEvent::Delta { .. } => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_params_are_valid_and_greedy() {
+        let p = SamplingParams::default();
+        assert!(p.validate().is_ok());
+        assert_eq!(p.temperature, 0.0);
+        assert!(p.stop.is_empty());
+    }
+
+    #[test]
+    fn validate_rejects_bad_params() {
+        let mut p = SamplingParams::greedy(0);
+        assert!(p.validate().is_err());
+        p = SamplingParams::greedy(8);
+        p.temperature = 3.0;
+        assert!(p.validate().is_err());
+        p.temperature = f32::NAN;
+        assert!(p.validate().is_err());
+        p.temperature = 0.7;
+        assert!(p.validate().is_ok());
+        p.stop = vec![Vec::new()];
+        assert!(p.validate().is_err());
+        p.stop = vec![vec![1; MAX_STOP_TOKENS + 1]];
+        assert!(p.validate().is_err());
+        p.stop = vec![vec![5, 6]; MAX_STOP_SEQUENCES + 1];
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn finish_reason_labels() {
+        assert_eq!(FinishReason::Length.as_str(), "length");
+        assert_eq!(FinishReason::Stop.as_str(), "stop");
+        assert_eq!(FinishReason::Cancelled.as_str(), "cancelled");
+    }
+
+    #[test]
+    fn legacy_request_constructor_maps_to_greedy_params() {
+        let r = Request::new(3, vec![1, 2], 17);
+        assert_eq!(r.max_tokens(), 17);
+        assert_eq!(r.params.temperature, 0.0);
+        let g = GenerationRequest::greedy(vec![1], 9);
+        assert_eq!(g.params.max_tokens, 9);
+    }
+
+    #[test]
+    fn step_event_into_done() {
+        assert!(StepEvent::Delta { id: 0, tokens: vec![1] }.into_done().is_none());
+        let f = Finished {
+            id: 1,
+            tokens: vec![],
+            finish_reason: FinishReason::Stop,
+            prompt_tokens: 2,
+            latency_ns: 0,
+            queue_ns: 0,
+        };
+        assert_eq!(StepEvent::Done(f).into_done().unwrap().id, 1);
+    }
 }

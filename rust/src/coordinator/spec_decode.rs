@@ -24,7 +24,7 @@ use crate::runtime::{ModelMeta, Module, Session, WeightSet};
 
 use super::acceptance::greedy_accept;
 use super::engine::{BatchCore, Engine};
-use super::request::Finished;
+use super::request::StepEvent;
 use super::SimilaritySample;
 
 /// QSPEC engine configuration.
@@ -119,7 +119,7 @@ impl<'s> QSpecEngine<'s> {
     }
 
     /// Admission + batched prefill for all newly admitted slots.
-    fn admit_and_prefill(&mut self, out: &mut Vec<Finished>) -> Result<()> {
+    fn admit_and_prefill(&mut self, out: &mut Vec<StepEvent>) -> Result<()> {
         let pb = match self.core.admit_batch(out)? {
             Some(pb) => pb,
             None => return Ok(()),
@@ -154,7 +154,7 @@ impl<'s> QSpecEngine<'s> {
     }
 
     /// One draft(gamma) + verify(gamma+1) + accept cycle over active slots.
-    fn cycle(&mut self, out: &mut Vec<Finished>) -> Result<()> {
+    fn cycle(&mut self, out: &mut Vec<StepEvent>) -> Result<()> {
         let sb = match self.core.step_inputs() {
             Some(sb) => sb,
             None => return Ok(()),
@@ -245,7 +245,7 @@ impl<'s> Engine for QSpecEngine<'s> {
         &mut self.core
     }
 
-    fn step(&mut self) -> Result<Vec<Finished>> {
+    fn step(&mut self) -> Result<Vec<StepEvent>> {
         let mut out = Vec::new();
         self.admit_and_prefill(&mut out)?;
         self.cycle(&mut out)?;

@@ -8,7 +8,7 @@
 
 use std::path::Path;
 
-use crate::coordinator::Engine;
+use crate::coordinator::{Engine, GenerationRequest};
 use crate::error::{QspecError, Result};
 use crate::model::Tokenizer;
 use crate::runtime::Session;
@@ -72,7 +72,10 @@ pub fn eval_engine(
     max_tokens: usize,
 ) -> Result<(f64, Vec<String>)> {
     for it in items {
-        engine.submit(tok.encode_prompt(&it.prompt), max_tokens);
+        engine.submit_request(GenerationRequest::greedy(
+            tok.encode_prompt(&it.prompt),
+            max_tokens,
+        ));
     }
     let mut fins = engine.run_to_completion()?;
     fins.sort_by_key(|f| f.id);

@@ -10,10 +10,11 @@
 //! next queued request is admitted into it immediately; other slots are
 //! untouched (their positions are per-slot).
 
+use crate::coordinator::request::FinishReason;
 use crate::error::{QspecError, Result};
 
 /// Logical state of one batch slot.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Slot {
     /// request id occupying this slot (None = idle).
     pub req_id: Option<u64>,
@@ -27,8 +28,37 @@ pub struct Slot {
     pub generated: Vec<i32>,
     /// generation budget.
     pub max_tokens: usize,
-    /// set when EOS committed or budget exhausted.
+    /// token-level stop sequences (trimmed from the output on match).
+    pub stop: Vec<Vec<i32>>,
+    /// set when EOS/stop committed, budget exhausted, or out of headroom.
     pub done: bool,
+    /// why the slot finished (meaningful once `done`).
+    pub finish: FinishReason,
+}
+
+impl Default for Slot {
+    fn default() -> Self {
+        Slot {
+            req_id: None,
+            pos: 0,
+            start: 0,
+            pending: 0,
+            generated: Vec::new(),
+            max_tokens: 0,
+            stop: Vec::new(),
+            done: false,
+            finish: FinishReason::Length,
+        }
+    }
+}
+
+/// Length of the stop sequence the generated tail matches, if any.
+fn stop_suffix_len(generated: &[i32], stops: &[Vec<i32>]) -> Option<usize> {
+    stops
+        .iter()
+        .filter(|s| !s.is_empty() && s.len() <= generated.len())
+        .find(|s| generated[generated.len() - s.len()..] == s[..])
+        .map(Vec::len)
 }
 
 /// Slot table + admission bookkeeping for one engine.
@@ -92,7 +122,13 @@ impl SlotManager {
 
     /// Admit a request into a free slot: returns the slot index.
     /// `prompt_len` must fit the prefill chunk.
-    pub fn admit(&mut self, req_id: u64, prompt_len: usize, max_tokens: usize) -> Result<usize> {
+    pub fn admit(
+        &mut self,
+        req_id: u64,
+        prompt_len: usize,
+        max_tokens: usize,
+        stop: Vec<Vec<i32>>,
+    ) -> Result<usize> {
         if prompt_len == 0 || prompt_len > self.prefill_t {
             return Err(QspecError::Scheduler(format!(
                 "prompt len {prompt_len} outside 1..={}",
@@ -107,12 +143,10 @@ impl SlotManager {
         let s = &mut self.slots[idx];
         *s = Slot {
             req_id: Some(req_id),
-            pos: 0,
             start: (self.prefill_t - prompt_len) as i32,
-            pending: 0,
-            generated: Vec::new(),
             max_tokens,
-            done: false,
+            stop,
+            ..Slot::default()
         };
         Ok(idx)
     }
@@ -126,28 +160,53 @@ impl SlotManager {
         s.pos = prefill_t;
         s.pending = next_tok;
         s.generated.push(next_tok);
-        if next_tok == eos || s.generated.len() >= s.max_tokens {
+        if next_tok == eos {
             s.done = true;
+            s.finish = FinishReason::Stop;
+        } else if let Some(sl) = stop_suffix_len(&s.generated, &s.stop) {
+            s.generated.truncate(s.generated.len() - sl);
+            s.done = true;
+            s.finish = FinishReason::Stop;
+        } else if s.generated.len() >= s.max_tokens {
+            s.done = true;
+            s.finish = FinishReason::Length;
         }
         s.done
     }
 
     /// Commit `toks` (already verified/sampled) for slot `idx`; the last
     /// committed token becomes the new pending token. Returns the tokens
-    /// actually committed (truncated at EOS / budget / seq limit).
+    /// actually committed (truncated at EOS / stop sequence / budget /
+    /// seq limit). A stop-sequence match trims the matched tokens from
+    /// both the slot's output and the returned commit batch; a match
+    /// spanning earlier commits also trims `generated` below what those
+    /// commits reported (already-streamed deltas cannot be recalled, so
+    /// the final token list is the authority).
     pub fn commit(&mut self, idx: usize, toks: &[i32], eos: i32, gamma: usize) -> Vec<i32> {
         // cache headroom: pending writes at pos, next cycle needs pos+gamma
         let max_seq = self.max_seq;
         let s = &mut self.slots[idx];
         let mut committed = Vec::new();
-        for (j, &t) in toks.iter().enumerate() {
+        for &t in toks {
             s.generated.push(t);
             committed.push(t);
             s.pos += 1; // K/V of the previously pending token is now canonical
-            if t == eos || s.generated.len() >= s.max_tokens {
+            if t == eos {
                 s.done = true;
-                // drop unprocessed tail
-                let _ = j;
+                s.finish = FinishReason::Stop;
+                break; // drop unprocessed tail
+            }
+            if let Some(sl) = stop_suffix_len(&s.generated, &s.stop) {
+                s.generated.truncate(s.generated.len() - sl);
+                let trim = committed.len().min(sl);
+                committed.truncate(committed.len() - trim);
+                s.done = true;
+                s.finish = FinishReason::Stop;
+                break;
+            }
+            if s.generated.len() >= s.max_tokens {
+                s.done = true;
+                s.finish = FinishReason::Length;
                 break;
             }
         }
@@ -155,9 +214,20 @@ impl SlotManager {
             s.pending = *committed.last().expect("commit of empty token list");
             if (s.pos as usize) + gamma + 2 >= max_seq {
                 s.done = true; // out of cache headroom
+                s.finish = FinishReason::Length;
             }
         }
         committed
+    }
+
+    /// The slot currently holding request `req_id` (cancellation path).
+    pub fn slot_of(&self, req_id: u64) -> Option<usize> {
+        self.slots.iter().position(|s| s.req_id == Some(req_id))
+    }
+
+    /// Count of active (occupied, not done) slots.
+    pub fn active_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.req_id.is_some() && !s.done).count()
     }
 
     /// Release a finished slot; returns (req_id, generated tokens).
@@ -194,32 +264,35 @@ mod tests {
     #[test]
     fn admit_fills_free_slots_in_order() {
         let mut m = mgr();
-        assert_eq!(m.admit(1, 5, 10).unwrap(), 0);
-        assert_eq!(m.admit(2, 5, 10).unwrap(), 1);
+        assert_eq!(m.admit(1, 5, 10, vec![]).unwrap(), 0);
+        assert_eq!(m.admit(2, 5, 10, vec![]).unwrap(), 1);
         assert_eq!(m.free_slots(), vec![2, 3]);
         assert_eq!(m.slot(0).start, 11);
+        assert_eq!(m.active_count(), 2);
+        assert_eq!(m.slot_of(2), Some(1));
+        assert_eq!(m.slot_of(9), None);
     }
 
     #[test]
     fn admit_rejects_oversized_prompt() {
         let mut m = mgr();
-        assert!(m.admit(1, 17, 10).is_err());
-        assert!(m.admit(1, 0, 10).is_err());
+        assert!(m.admit(1, 17, 10, vec![]).is_err());
+        assert!(m.admit(1, 0, 10, vec![]).is_err());
     }
 
     #[test]
     fn admit_when_full_errors() {
         let mut m = mgr();
         for i in 0..4 {
-            m.admit(i, 4, 4).unwrap();
+            m.admit(i, 4, 4, vec![]).unwrap();
         }
-        assert!(m.admit(9, 4, 4).is_err());
+        assert!(m.admit(9, 4, 4, vec![]).is_err());
     }
 
     #[test]
     fn prefill_commits_first_token() {
         let mut m = mgr();
-        let i = m.admit(1, 4, 10).unwrap();
+        let i = m.admit(1, 4, 10, vec![]).unwrap();
         assert!(!m.after_prefill(i, 42, 2));
         assert_eq!(m.slot(i).pos, 16);
         assert_eq!(m.slot(i).generated, vec![42]);
@@ -229,14 +302,15 @@ mod tests {
     #[test]
     fn prefill_eos_finishes_immediately() {
         let mut m = mgr();
-        let i = m.admit(1, 4, 10).unwrap();
+        let i = m.admit(1, 4, 10, vec![]).unwrap();
         assert!(m.after_prefill(i, 2, 2));
+        assert_eq!(m.slot(i).finish, FinishReason::Stop);
     }
 
     #[test]
     fn commit_advances_pos_and_sets_pending() {
         let mut m = mgr();
-        let i = m.admit(1, 4, 10).unwrap();
+        let i = m.admit(1, 4, 10, vec![]).unwrap();
         m.after_prefill(i, 42, 2);
         let c = m.commit(i, &[43, 44], 2, 3);
         assert_eq!(c, vec![43, 44]);
@@ -249,37 +323,77 @@ mod tests {
     #[test]
     fn commit_stops_at_eos() {
         let mut m = mgr();
-        let i = m.admit(1, 4, 10).unwrap();
+        let i = m.admit(1, 4, 10, vec![]).unwrap();
         m.after_prefill(i, 5, 2);
         let c = m.commit(i, &[6, 2, 9], 2, 3);
         assert_eq!(c, vec![6, 2]); // 9 discarded after EOS
         assert!(m.slot(i).done);
+        assert_eq!(m.slot(i).finish, FinishReason::Stop);
     }
 
     #[test]
     fn commit_stops_at_budget() {
         let mut m = mgr();
-        let i = m.admit(1, 4, 3).unwrap();
+        let i = m.admit(1, 4, 3, vec![]).unwrap();
         m.after_prefill(i, 5, 2);
         let c = m.commit(i, &[6, 7, 8], 2, 3);
         assert_eq!(c, vec![6, 7]); // budget 3 incl. prefill token
         assert!(m.slot(i).done);
+        assert_eq!(m.slot(i).finish, FinishReason::Length);
     }
 
     #[test]
     fn commit_stops_at_seq_limit() {
         let mut m = SlotManager::new(1, 22, 16);
-        let i = m.admit(1, 4, 100).unwrap();
+        let i = m.admit(1, 4, 100, vec![]).unwrap();
         m.after_prefill(i, 5, 2);
         let _ = m.commit(i, &[6], 2, 3);
         // pos = 17, 17 + 3 + 2 >= 22 -> done
         assert!(m.slot(i).done);
+        assert_eq!(m.slot(i).finish, FinishReason::Length);
+    }
+
+    #[test]
+    fn commit_trims_matched_stop_sequence() {
+        let mut m = mgr();
+        let i = m.admit(1, 4, 20, vec![vec![7, 8]]).unwrap();
+        m.after_prefill(i, 5, 2);
+        let c = m.commit(i, &[6, 7, 8, 9], 2, 3);
+        // the matched [7, 8] is trimmed; 9 never committed
+        assert_eq!(c, vec![6]);
+        assert_eq!(m.slot(i).generated, vec![5, 6]);
+        assert!(m.slot(i).done);
+        assert_eq!(m.slot(i).finish, FinishReason::Stop);
+    }
+
+    #[test]
+    fn stop_match_spanning_commits_trims_earlier_tokens() {
+        let mut m = mgr();
+        let i = m.admit(1, 4, 20, vec![vec![6, 7]]).unwrap();
+        m.after_prefill(i, 5, 2);
+        assert_eq!(m.commit(i, &[6], 2, 3), vec![6]);
+        // match completes on the next commit; only this commit's share
+        // of the stop sequence can be trimmed from the returned batch,
+        // but the slot's output is trimmed across the boundary
+        let c = m.commit(i, &[7], 2, 3);
+        assert!(c.is_empty());
+        assert_eq!(m.slot(i).generated, vec![5]);
+        assert_eq!(m.slot(i).finish, FinishReason::Stop);
+    }
+
+    #[test]
+    fn prefill_first_token_can_match_stop() {
+        let mut m = mgr();
+        let i = m.admit(1, 4, 20, vec![vec![42]]).unwrap();
+        assert!(m.after_prefill(i, 42, 2));
+        assert!(m.slot(i).generated.is_empty());
+        assert_eq!(m.slot(i).finish, FinishReason::Stop);
     }
 
     #[test]
     fn release_returns_tokens_and_frees() {
         let mut m = mgr();
-        let i = m.admit(7, 4, 10).unwrap();
+        let i = m.admit(7, 4, 10, vec![]).unwrap();
         m.after_prefill(i, 5, 2);
         m.commit(i, &[6, 2], 2, 3);
         let (id, toks) = m.release(i).unwrap();

@@ -53,6 +53,9 @@ pub struct EngineMetrics {
     /// finished requests + generated token total
     pub requests_done: u64,
     pub tokens_out: u64,
+    /// requests cancelled mid-flight (explicit op or client disconnect);
+    /// excluded from `requests_done` and the latency histogram.
+    pub cancelled: u64,
     /// per-request end-to-end latency (wall ns)
     pub req_latency: LogHistogram,
     /// per-request queue wait (submit -> admission, wall ns)
@@ -144,6 +147,7 @@ impl EngineMetrics {
             ("committed", num(self.committed as f64)),
             ("requests_done", num(self.requests_done as f64)),
             ("tokens_out", num(self.tokens_out as f64)),
+            ("cancelled", num(self.cancelled as f64)),
             ("acceptance_rate", num(self.acceptance_rate())),
             ("wall_tok_s", num(self.wall_tokens_per_s())),
             ("virt_tok_s", num(self.virt_tokens_per_s())),
@@ -209,6 +213,7 @@ mod tests {
         assert!(j.get("acceptance_rate").is_some());
         assert!(j.get("phases").unwrap().as_arr().unwrap().len() == 5);
         assert!(j.get("queue_p50_ns").is_some());
+        assert!(j.get("cancelled").is_some());
     }
 
     #[test]

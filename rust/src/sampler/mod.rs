@@ -3,8 +3,13 @@
 //! The HLO entries return greedy argmax tokens directly (the paper uses
 //! greedy decoding for reproducibility), so the hot path needs no host
 //! sampling. These helpers exist for the general API (temperature / top-k
-//! over returned logits) and for workload synthesis.
+//! over returned logits) and for workload synthesis. [`Sampler`] is the
+//! per-request form: built from the request's
+//! [`SamplingParams`](crate::coordinator::SamplingParams), it applies
+//! the request's temperature and seed so a future logits-returning entry
+//! plugs into the serving API without another signature change.
 
+use crate::coordinator::request::SamplingParams;
 use crate::util::prng::Pcg32;
 
 /// Greedy argmax over a logits row.
@@ -48,6 +53,28 @@ pub fn sample_topk(logits: &[f32], temperature: f32, k: usize, rng: &mut Pcg32) 
     idx[k - 1]
 }
 
+/// Per-request sampler state: the request's temperature plus a PRNG
+/// seeded from its `seed`, so identical requests replay identically.
+#[derive(Debug)]
+pub struct Sampler {
+    temperature: f32,
+    rng: Pcg32,
+}
+
+impl Sampler {
+    pub fn new(params: &SamplingParams) -> Self {
+        Sampler {
+            temperature: params.temperature,
+            rng: Pcg32::seeded(params.seed),
+        }
+    }
+
+    /// Sample one token id from a logits row (greedy at temperature 0).
+    pub fn sample(&mut self, logits: &[f32], top_k: usize) -> usize {
+        sample_topk(logits, self.temperature, top_k, &mut self.rng)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -68,6 +95,28 @@ mod tests {
     fn zero_temperature_is_greedy() {
         let mut rng = Pcg32::seeded(0);
         assert_eq!(sample_topk(&[0.0, 5.0, 1.0], 0.0, 3, &mut rng), 1);
+    }
+
+    #[test]
+    fn sampler_respects_params_seed_and_temperature() {
+        let logits = vec![1.0f32, 0.9, 0.8, -10.0];
+        let greedy = SamplingParams { seed: 123, ..SamplingParams::default() };
+        let mut s = Sampler::new(&greedy);
+        // temperature 0: greedy regardless of seed
+        assert_eq!(s.sample(&logits, 4), 0);
+
+        let warm = SamplingParams {
+            temperature: 1.0,
+            seed: 7,
+            ..SamplingParams::default()
+        };
+        // same seed -> identical draw sequence; support stays in top-k
+        let (mut a, mut b) = (Sampler::new(&warm), Sampler::new(&warm));
+        for _ in 0..100 {
+            let d = a.sample(&logits, 3);
+            assert_eq!(d, b.sample(&logits, 3));
+            assert!(d < 3);
+        }
     }
 
     #[test]

@@ -1,21 +1,71 @@
-//! TCP line-protocol serving frontend.
+//! TCP line-protocol serving frontend (protocol v1).
 //!
 //! PJRT handles are not Send, so the engine owns the main thread and
 //! connection threads communicate through channels (a vLLM-style
 //! frontend/engine split):
 //!
-//!   client --tcp--> conn thread --mpsc--> engine loop (this thread)
-//!          <--tcp-- conn thread <--mpsc-- finished tokens
+//!   client --tcp--> conn thread (reader) --mpsc--> engine loop (this thread)
+//!          <--tcp-- writer thread        <--mpsc-- frames (deltas/results)
 //!
 //! The engine loop is engine-generic: it drives any `&mut dyn Engine`
 //! built by `coordinator::build_engine`, so every engine kind —
-//! including the EAGLE baseline — serves over TCP.
+//! including the EAGLE baseline — serves over TCP with streaming,
+//! cancellation and per-request sampling params.
 //!
-//! Protocol: one JSON object per line.
-//!   request : {"prompt": "q: g xy ?\n", "max_tokens": 64}
-//!   response: {"id": 3, "text": "...", "latency_ms": 12.5,
-//!              "queue_ms": 0.2, "tokens": 17}
-//!   error   : {"error": {"code": "bad_request", "message": "..."}}
+//! # Protocol v1 — one JSON object per line, both directions
+//!
+//! Three ops, selected by the `"op"` field (absent = `generate`, the
+//! legacy bare-prompt form):
+//!
+//! ```text
+//! generate: {"op":"generate","prompt":"q: g xy ?\n","max_tokens":64,
+//!            "stream":true,"stop":["\n"],"temperature":0,"seed":1}
+//!   legacy: {"prompt":"q: g xy ?\n","max_tokens":64}
+//! cancel  : {"op":"cancel","id":3}
+//! stats   : {"op":"stats"}
+//! ```
+//!
+//! Generate fields: `prompt` (required string); `max_tokens` (integer,
+//! clamped to `[1, max_seq]`, default from the server config);
+//! `stream` (bool, default false); `stop` (array of strings, each
+//! trimmed from the output on match); `temperature` (number in [0,2])
+//! and `seed` (integer) — accepted and threaded per-request, but the
+//! AOT entries are greedy argmax, so generation currently behaves as
+//! temperature 0.
+//!
+//! Response frames:
+//!
+//! ```text
+//! result (non-stream) : {"id":3,"text":"...","finish_reason":"stop",
+//!                        "latency_ms":12.5,"queue_ms":0.2,"tokens":17}
+//! delta  (stream)     : {"id":3,"delta":"...","tokens":2}
+//! done   (stream)     : {"id":3,"done":true,"finish_reason":"length",
+//!                        "text":"...","tokens":17,"latency_ms":12.5,
+//!                        "queue_ms":0.2}
+//! cancel ack          : {"cancelled":3}
+//! stats               : {"engine":"qspec","queue_depth":0,...}
+//! error               : {"error":{"code":"bad_request","message":"..."}}
+//! ```
+//!
+//! A streaming generate writes one delta line per engine step and a
+//! terminal `done` line carrying the authoritative full text + usage
+//! (with stop sequences, deltas may briefly overrun the final text by
+//! up to stop-length-1 tokens that the terminal frame trims).
+//! Cancelling a request delivers its terminal frame (`finish_reason`
+//! `"cancelled"`) before the `{"cancelled":id}` ack. Cancellation is
+//! connection-scoped: request ids are sequential (guessable), so only
+//! the connection that submitted a request may cancel it — an unknown,
+//! finished, or foreign id answers `not_found`. A client disconnect
+//! cancels all of that connection's in-flight requests instead of
+//! letting them burn their slots to completion. `stop` entries are
+//! re-validated after tokenization (at most
+//! [`MAX_STOP_SEQUENCES`](crate::coordinator::request::MAX_STOP_SEQUENCES)
+//! sequences of
+//! [`MAX_STOP_TOKENS`](crate::coordinator::request::MAX_STOP_TOKENS)
+//! tokens each). Error codes: `bad_request` (malformed line — names
+//! the offending field and the type it got — or params that fail
+//! token-level validation) and `not_found` (cancel of an unknown,
+//! finished, or foreign id).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -23,54 +73,216 @@ use std::sync::mpsc;
 use std::time::Duration;
 
 use crate::config::ServeConfig;
-use crate::coordinator::{build_engine, Engine, Finished};
+use crate::coordinator::{
+    build_engine, Engine, Finished, GenerationRequest, SamplingParams, StepEvent,
+};
 use crate::error::{QspecError, Result};
 use crate::model::Tokenizer;
 use crate::runtime::Session;
 use crate::util::json::{num, obj, s, Json};
 
-/// A request forwarded from a connection thread to the engine loop.
-pub struct InboundRequest {
-    pub prompt: String,
-    pub max_tokens: usize,
-    pub resp: mpsc::Sender<String>,
+/// A parsed protocol-v1 operation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    Generate(GenerateOp),
+    Cancel { id: u64 },
+    Stats,
 }
 
-/// Parse one request line. Non-object lines are rejected, and
+/// The `generate` op: prompt + wire-level sampling params.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenerateOp {
+    pub prompt: String,
+    pub max_tokens: usize,
+    pub stream: bool,
+    pub temperature: f32,
+    pub seed: u64,
+    pub stop: Vec<String>,
+}
+
+/// A message forwarded from a connection thread to the engine loop.
+pub enum Inbound {
+    /// A parsed op plus the connection's frame channel for replies.
+    Op { conn: u64, op: Op, resp: mpsc::Sender<String> },
+    /// The client hung up: cancel everything it still has in flight.
+    Disconnect { conn: u64 },
+}
+
+fn json_type(j: &Json) -> &'static str {
+    match j {
+        Json::Null => "null",
+        Json::Bool(_) => "bool",
+        Json::Num(_) => "number",
+        Json::Str(_) => "string",
+        Json::Arr(_) => "array",
+        Json::Obj(_) => "object",
+    }
+}
+
+fn bad_field(field: &str, expected: &str, got: &Json) -> QspecError {
+    QspecError::Config(format!(
+        "field \"{field}\": expected {expected}, got {}",
+        json_type(got)
+    ))
+}
+
+/// Non-negative integer field (rejects strings, fractions, negatives).
+fn opt_uint(j: &Json, field: &str) -> Result<Option<u64>> {
+    match j.get(field) {
+        None => Ok(None),
+        Some(v) => match v.as_f64() {
+            Some(f) if f >= 0.0 && f.fract() == 0.0 => Ok(Some(f as u64)),
+            _ => Err(bad_field(field, "non-negative integer", v)),
+        },
+    }
+}
+
+/// Parse one protocol-v1 request line. Non-object lines are rejected;
 /// `max_tokens` is clamped to `[1, max_tokens_cap]` (the model's
 /// `max_seq`) so a client cannot monopolize a slot with an absurd
 /// generation budget; absent `max_tokens` falls back to
-/// `default_max_tokens`.
-pub fn parse_request_line(
+/// `default_max_tokens`. Errors name the offending field and the JSON
+/// type it actually got.
+pub fn parse_op(
     line: &str,
     default_max_tokens: usize,
     max_tokens_cap: usize,
-) -> Result<(String, usize)> {
+) -> Result<Op> {
     let j = Json::parse(line)?;
     if j.as_obj().is_none() {
-        return Err(QspecError::Config(
-            "request must be a JSON object".into(),
-        ));
+        return Err(QspecError::Config(format!(
+            "request must be a JSON object, got {}",
+            json_type(&j)
+        )));
     }
-    let prompt = j.req_str("prompt")?.to_string();
-    let max_tokens = j
-        .get("max_tokens")
-        .and_then(Json::as_usize)
-        .unwrap_or(default_max_tokens)
-        .clamp(1, max_tokens_cap.max(1));
-    Ok((prompt, max_tokens))
+    let op_name = match j.get("op") {
+        None => "generate", // legacy bare-prompt form
+        Some(v) => v
+            .as_str()
+            .ok_or_else(|| bad_field("op", "string", v))?,
+    };
+    match op_name {
+        "generate" => {
+            let prompt = match j.get("prompt") {
+                None => {
+                    return Err(QspecError::Config("missing field \"prompt\"".into()))
+                }
+                Some(v) => v
+                    .as_str()
+                    .ok_or_else(|| bad_field("prompt", "string", v))?
+                    .to_string(),
+            };
+            let max_tokens = opt_uint(&j, "max_tokens")?
+                .map(|v| v as usize)
+                .unwrap_or(default_max_tokens)
+                .clamp(1, max_tokens_cap.max(1));
+            let stream = match j.get("stream") {
+                None => false,
+                Some(Json::Bool(b)) => *b,
+                Some(v) => return Err(bad_field("stream", "bool", v)),
+            };
+            let temperature = match j.get("temperature") {
+                None => 0.0f32,
+                Some(v) => {
+                    let t = v.as_f64().ok_or_else(|| bad_field("temperature", "number", v))?;
+                    if !(0.0..=2.0).contains(&t) {
+                        return Err(QspecError::Config(format!(
+                            "field \"temperature\": {t} outside [0, 2]"
+                        )));
+                    }
+                    t as f32
+                }
+            };
+            let seed = opt_uint(&j, "seed")?.unwrap_or(0);
+            let stop = match j.get("stop") {
+                None => Vec::new(),
+                Some(v) => {
+                    let arr = v
+                        .as_arr()
+                        .ok_or_else(|| bad_field("stop", "array of strings", v))?;
+                    let mut out = Vec::with_capacity(arr.len());
+                    for e in arr {
+                        let st = e
+                            .as_str()
+                            .ok_or_else(|| bad_field("stop", "array of strings", e))?;
+                        if st.is_empty() || st.len() > 64 {
+                            return Err(QspecError::Config(
+                                "field \"stop\": entries must be 1..=64 chars".into(),
+                            ));
+                        }
+                        out.push(st.to_string());
+                    }
+                    if out.len() > crate::coordinator::request::MAX_STOP_SEQUENCES {
+                        return Err(QspecError::Config(format!(
+                            "field \"stop\": at most {} sequences",
+                            crate::coordinator::request::MAX_STOP_SEQUENCES
+                        )));
+                    }
+                    out
+                }
+            };
+            Ok(Op::Generate(GenerateOp {
+                prompt,
+                max_tokens,
+                stream,
+                temperature,
+                seed,
+                stop,
+            }))
+        }
+        "cancel" => match opt_uint(&j, "id")? {
+            Some(id) => Ok(Op::Cancel { id }),
+            None => Err(QspecError::Config(
+                "op \"cancel\" requires an integer \"id\"".into(),
+            )),
+        },
+        "stats" => Ok(Op::Stats),
+        other => Err(QspecError::Config(format!(
+            "unknown op \"{other}\" (expected generate|cancel|stats)"
+        ))),
+    }
 }
 
-/// Format one response line.
+/// Format the non-streaming result line.
 pub fn format_response(f: &Finished, text: &str) -> String {
     obj(vec![
         ("id", num(f.id as f64)),
         ("text", s(text)),
+        ("finish_reason", s(f.finish_reason.as_str())),
         ("latency_ms", num(f.latency_ns as f64 / 1e6)),
         ("queue_ms", num(f.queue_ns as f64 / 1e6)),
         ("tokens", num(f.tokens.len() as f64)),
     ])
     .to_string()
+}
+
+/// Format one streaming delta line.
+pub fn format_delta(id: u64, text: &str, n_tokens: usize) -> String {
+    obj(vec![
+        ("id", num(id as f64)),
+        ("delta", s(text)),
+        ("tokens", num(n_tokens as f64)),
+    ])
+    .to_string()
+}
+
+/// Format the terminal line of a streaming generate: full text + usage.
+pub fn format_stream_done(f: &Finished, text: &str) -> String {
+    obj(vec![
+        ("id", num(f.id as f64)),
+        ("done", Json::Bool(true)),
+        ("finish_reason", s(f.finish_reason.as_str())),
+        ("text", s(text)),
+        ("tokens", num(f.tokens.len() as f64)),
+        ("latency_ms", num(f.latency_ns as f64 / 1e6)),
+        ("queue_ms", num(f.queue_ns as f64 / 1e6)),
+    ])
+    .to_string()
+}
+
+/// Ack line for a successful cancel op.
+pub fn format_cancelled(id: u64) -> String {
+    obj(vec![("cancelled", num(id as f64))]).to_string()
 }
 
 /// Structured error line for protocol violations.
@@ -82,9 +294,40 @@ pub fn format_error(code: &str, message: &str) -> String {
     .to_string()
 }
 
-fn conn_thread(
+/// The `/stats` surface: a live snapshot straight from
+/// [`EngineMetrics`] plus the queue-pressure signals the engine loop
+/// used to only debug-log.
+pub fn format_stats(engine: &dyn Engine) -> String {
+    let m = engine.metrics();
+    obj(vec![
+        ("engine", s(engine.name())),
+        ("queue_depth", num(engine.queue_depth() as f64)),
+        ("oldest_queued_ms", num(engine.oldest_queued_ns() as f64 / 1e6)),
+        ("active", num(engine.active_requests() as f64)),
+        ("requests_done", num(m.requests_done as f64)),
+        ("cancelled", num(m.cancelled as f64)),
+        ("tokens_out", num(m.tokens_out as f64)),
+        ("acceptance_rate", num(m.acceptance_rate())),
+        ("wall_tok_s", num(m.wall_tokens_per_s())),
+        ("virt_tok_s", num(m.virt_tokens_per_s())),
+        ("queue_p50_ms", num(m.queue_wait.percentile(50.0) as f64 / 1e6)),
+        ("queue_p99_ms", num(m.queue_wait.percentile(99.0) as f64 / 1e6)),
+        ("latency_p50_ms", num(m.req_latency.percentile(50.0) as f64 / 1e6)),
+        ("latency_p99_ms", num(m.req_latency.percentile(99.0) as f64 / 1e6)),
+    ])
+    .to_string()
+}
+
+/// One connection: this (reader) thread parses ops and forwards them to
+/// the engine loop; a writer thread drains the connection's frame
+/// channel back to the socket, so streamed deltas flow while the
+/// reader blocks on the next line (e.g. a `cancel`). On EOF or socket
+/// error the engine loop is told to cancel whatever the connection
+/// still has in flight.
+pub fn conn_thread(
     stream: TcpStream,
-    tx: mpsc::Sender<InboundRequest>,
+    conn: u64,
+    tx: mpsc::Sender<Inbound>,
     default_max_tokens: usize,
     max_tokens_cap: usize,
 ) {
@@ -93,6 +336,17 @@ fn conn_thread(
         Ok(w) => w,
         Err(_) => return,
     };
+    let (ftx, frx) = mpsc::channel::<String>();
+    let wh = std::thread::spawn(move || {
+        // exits when every frame sender is dropped (reader + engine loop)
+        // or the client stops reading; a write error stops the drain and
+        // the engine loop notices on its next send to this connection.
+        for line in frx {
+            if writeln!(writer, "{line}").is_err() {
+                break;
+            }
+        }
+    });
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         let line = match line {
@@ -102,27 +356,24 @@ fn conn_thread(
         if line.trim().is_empty() {
             continue;
         }
-        let (prompt, max_tokens) =
-            match parse_request_line(&line, default_max_tokens, max_tokens_cap) {
-                Ok(x) => x,
-                Err(e) => {
-                    let _ = writeln!(writer, "{}", format_error("bad_request", &e.to_string()));
-                    continue;
-                }
-            };
-        let (rtx, rrx) = mpsc::channel();
-        if tx.send(InboundRequest { prompt, max_tokens, resp: rtx }).is_err() {
-            break;
-        }
-        match rrx.recv() {
-            Ok(resp) => {
-                if writeln!(writer, "{resp}").is_err() {
+        match parse_op(&line, default_max_tokens, max_tokens_cap) {
+            Ok(op) => {
+                if tx.send(Inbound::Op { conn, op, resp: ftx.clone() }).is_err() {
                     break;
                 }
             }
-            Err(_) => break,
+            Err(e) => {
+                // errors go through the frame channel too, so replies
+                // stay ordered with any in-flight frames
+                if ftx.send(format_error("bad_request", &e.to_string())).is_err() {
+                    break;
+                }
+            }
         }
     }
+    let _ = tx.send(Inbound::Disconnect { conn });
+    drop(ftx);
+    let _ = wh.join();
     log::debug!("connection closed: {peer:?}");
 }
 
@@ -137,16 +388,19 @@ pub fn serve(sess: &Session, cfg: &ServeConfig) -> Result<()> {
 
     let listener = TcpListener::bind(("127.0.0.1", cfg.port))?;
     println!(
-        "qspec listening on 127.0.0.1:{} (engine={})",
+        "qspec listening on 127.0.0.1:{} (engine={}, protocol v1)",
         cfg.port,
         engine.name()
     );
-    let (tx, rx) = mpsc::channel::<InboundRequest>();
+    let (tx, rx) = mpsc::channel::<Inbound>();
     std::thread::spawn(move || {
+        let mut next_conn = 0u64;
         for stream in listener.incoming().flatten() {
+            next_conn += 1;
+            let conn = next_conn;
             let tx = tx.clone();
             std::thread::spawn(move || {
-                conn_thread(stream, tx, default_max_tokens, max_tokens_cap)
+                conn_thread(stream, conn, tx, default_max_tokens, max_tokens_cap)
             });
         }
     });
@@ -154,29 +408,37 @@ pub fn serve(sess: &Session, cfg: &ServeConfig) -> Result<()> {
     engine_loop(&rx, &tok, engine.as_mut())
 }
 
-/// Engine-generic serving loop: admit inbound requests, step the
-/// engine, route finished generations back to their connections.
-/// Returns when every sender is gone (tests drive it this way; in
-/// `serve` the listener thread keeps the channel open forever).
+/// Per-request routing state held by the engine loop.
+struct Responder {
+    conn: u64,
+    stream: bool,
+    tx: mpsc::Sender<String>,
+}
+
+/// Engine-generic serving loop: admit inbound ops, step the engine,
+/// route step events (deltas + terminal frames) back to their
+/// connections, cancel on client disconnect. Returns when every sender
+/// is gone (tests drive it this way; in `serve` the listener thread
+/// keeps the channel open forever).
 pub fn engine_loop(
-    rx: &mpsc::Receiver<InboundRequest>,
+    rx: &mpsc::Receiver<Inbound>,
     tok: &Tokenizer,
     engine: &mut dyn Engine,
 ) -> Result<()> {
     use std::collections::HashMap;
-    let mut responders: HashMap<u64, mpsc::Sender<String>> = HashMap::new();
+    let mut responders: HashMap<u64, Responder> = HashMap::new();
     loop {
         // block if fully idle, otherwise poll
         if !engine.has_work() {
             match rx.recv_timeout(Duration::from_millis(200)) {
-                Ok(req) => admit(engine, tok, req, &mut responders),
+                Ok(msg) => handle_inbound(msg, tok, engine, &mut responders),
                 Err(mpsc::RecvTimeoutError::Timeout) => continue,
                 Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
             }
         }
         // drain whatever else arrived
-        while let Ok(req) = rx.try_recv() {
-            admit(engine, tok, req, &mut responders);
+        while let Ok(msg) = rx.try_recv() {
+            handle_inbound(msg, tok, engine, &mut responders);
         }
         let depth = engine.queue_depth();
         if depth > 0 {
@@ -185,27 +447,117 @@ pub fn engine_loop(
                 engine.oldest_queued_ns() as f64 / 1e6
             );
         }
-        for f in engine.step()? {
-            if let Some(resp) = responders.remove(&f.id) {
-                let text = tok.decode(&f.tokens);
-                let _ = resp.send(format_response(&f, &text));
+        for ev in engine.step()? {
+            match ev {
+                StepEvent::Delta { id, tokens } => {
+                    let dead = match responders.get(&id) {
+                        Some(r) if r.stream => r
+                            .tx
+                            .send(format_delta(id, &tok.decode(&tokens), tokens.len()))
+                            .is_err(),
+                        _ => false, // non-stream: tokens arrive with Done
+                    };
+                    if dead {
+                        // writer thread is gone (client stopped reading):
+                        // free the slot instead of burning it out
+                        responders.remove(&id);
+                        let _ = engine.cancel(id);
+                    }
+                }
+                StepEvent::Done(f) => {
+                    if let Some(r) = responders.remove(&f.id) {
+                        let text = tok.decode(&f.tokens);
+                        let line = if r.stream {
+                            format_stream_done(&f, &text)
+                        } else {
+                            format_response(&f, &text)
+                        };
+                        let _ = r.tx.send(line);
+                    }
+                }
             }
         }
     }
 }
 
-fn admit(
-    engine: &mut dyn Engine,
+/// Handle one inbound message (op or disconnect) against the engine.
+fn handle_inbound(
+    msg: Inbound,
     tok: &Tokenizer,
-    req: InboundRequest,
-    responders: &mut std::collections::HashMap<u64, mpsc::Sender<String>>,
+    engine: &mut dyn Engine,
+    responders: &mut std::collections::HashMap<u64, Responder>,
 ) {
-    let prompt = tok.encode_prompt(&req.prompt);
-    let id = engine.submit(prompt, req.max_tokens);
-    responders.insert(id, req.resp);
+    match msg {
+        Inbound::Op { conn, op: Op::Generate(g), resp } => {
+            let prompt = tok.encode_prompt(&g.prompt);
+            let stop: Vec<Vec<i32>> = g
+                .stop
+                .iter()
+                .map(|st| tok.encode(st))
+                .filter(|v| !v.is_empty())
+                .collect();
+            let params = SamplingParams {
+                max_tokens: g.max_tokens,
+                stop,
+                temperature: g.temperature,
+                seed: g.seed,
+            };
+            // wire-level validation: the parse layer bounds characters,
+            // this bounds the encoded token form (e.g. MAX_STOP_TOKENS)
+            if let Err(e) = params.validate() {
+                let _ = resp.send(format_error("bad_request", &e.to_string()));
+                return;
+            }
+            let id = engine.submit_request(GenerationRequest::new(prompt, params));
+            responders.insert(id, Responder { conn, stream: g.stream, tx: resp });
+        }
+        Inbound::Op { conn, op: Op::Cancel { id }, resp } => {
+            // ids are sequential, so they are guessable: only the
+            // connection that submitted a request may cancel it
+            let owned = responders.get(&id).is_some_and(|r| r.conn == conn);
+            match if owned { engine.cancel(id) } else { None } {
+                Some(f) => {
+                    // the cancelled request's own channel gets its
+                    // terminal frame first, then the canceller the ack
+                    if let Some(r) = responders.remove(&id) {
+                        let text = tok.decode(&f.tokens);
+                        let line = if r.stream {
+                            format_stream_done(&f, &text)
+                        } else {
+                            format_response(&f, &text)
+                        };
+                        let _ = r.tx.send(line);
+                    }
+                    let _ = resp.send(format_cancelled(id));
+                }
+                None => {
+                    let _ = resp.send(format_error(
+                        "not_found",
+                        &format!("no in-flight request with id {id}"),
+                    ));
+                }
+            }
+        }
+        Inbound::Op { op: Op::Stats, resp, .. } => {
+            let _ = resp.send(format_stats(engine));
+        }
+        Inbound::Disconnect { conn } => {
+            let dead: Vec<u64> = responders
+                .iter()
+                .filter(|(_, r)| r.conn == conn)
+                .map(|(id, _)| *id)
+                .collect();
+            for id in dead {
+                responders.remove(&id);
+                if engine.cancel(id).is_some() {
+                    log::debug!("conn {conn} gone: cancelled request {id}");
+                }
+            }
+        }
+    }
 }
 
-/// Minimal blocking client for tests/examples.
+/// Minimal blocking client for tests/examples (legacy one-line form).
 pub fn client_request(addr: &str, prompt: &str, max_tokens: usize) -> Result<Json> {
     let mut stream = TcpStream::connect(addr)?;
     let req = obj(vec![
@@ -219,38 +571,103 @@ pub fn client_request(addr: &str, prompt: &str, max_tokens: usize) -> Result<Jso
     Json::parse(line.trim())
 }
 
+/// Fetch the `/stats` snapshot over the wire.
+pub fn client_stats(addr: &str) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(stream, "{}", obj(vec![("op", s("stats"))]).to_string())?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Json::parse(line.trim())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::FinishReason;
+
+    fn gen(line: &str) -> GenerateOp {
+        match parse_op(line, 64, 512).unwrap() {
+            Op::Generate(g) => g,
+            other => panic!("expected generate, got {other:?}"),
+        }
+    }
 
     #[test]
     fn request_line_roundtrip() {
-        let (p, m) =
-            parse_request_line(r#"{"prompt":"q: a x ?\n","max_tokens":32}"#, 64, 512).unwrap();
-        assert_eq!(p, "q: a x ?\n");
-        assert_eq!(m, 32);
+        let g = gen(r#"{"prompt":"q: a x ?\n","max_tokens":32}"#);
+        assert_eq!(g.prompt, "q: a x ?\n");
+        assert_eq!(g.max_tokens, 32);
+        assert!(!g.stream);
+        assert_eq!(g.temperature, 0.0);
+        assert!(g.stop.is_empty());
+    }
+
+    #[test]
+    fn v1_generate_parses_all_fields() {
+        let g = gen(
+            r#"{"op":"generate","prompt":"hi","max_tokens":8,"stream":true,
+                "temperature":0.5,"seed":7,"stop":["\n","a: "]}"#,
+        );
+        assert!(g.stream);
+        assert_eq!(g.temperature, 0.5);
+        assert_eq!(g.seed, 7);
+        assert_eq!(g.stop, vec!["\n".to_string(), "a: ".to_string()]);
     }
 
     #[test]
     fn default_max_tokens() {
-        let (_, m) = parse_request_line(r#"{"prompt":"hi"}"#, 64, 512).unwrap();
-        assert_eq!(m, 64);
+        assert_eq!(gen(r#"{"prompt":"hi"}"#).max_tokens, 64);
     }
 
     #[test]
     fn max_tokens_clamped_to_cap() {
-        let (_, m) =
-            parse_request_line(r#"{"prompt":"hi","max_tokens":999999}"#, 64, 512).unwrap();
-        assert_eq!(m, 512);
-        let (_, m) = parse_request_line(r#"{"prompt":"hi","max_tokens":0}"#, 64, 512).unwrap();
-        assert_eq!(m, 1);
+        assert_eq!(gen(r#"{"prompt":"hi","max_tokens":999999}"#).max_tokens, 512);
+        assert_eq!(gen(r#"{"prompt":"hi","max_tokens":0}"#).max_tokens, 1);
     }
 
     #[test]
     fn non_object_request_rejected() {
-        assert!(parse_request_line(r#"[1,2,3]"#, 64, 512).is_err());
-        assert!(parse_request_line(r#""just a string""#, 64, 512).is_err());
-        assert!(parse_request_line(r#"42"#, 64, 512).is_err());
+        for line in [r#"[1,2,3]"#, r#""just a string""#, r#"42"#] {
+            let e = parse_op(line, 64, 512).unwrap_err().to_string();
+            assert!(e.contains("JSON object"), "{e}");
+        }
+    }
+
+    #[test]
+    fn bad_fields_get_precise_errors() {
+        let e = parse_op(r#"{"max_tokens":8}"#, 64, 512).unwrap_err().to_string();
+        assert!(e.contains("missing field \"prompt\""), "{e}");
+        let e = parse_op(r#"{"prompt":42}"#, 64, 512).unwrap_err().to_string();
+        assert!(e.contains("\"prompt\"") && e.contains("expected string") && e.contains("number"), "{e}");
+        let e = parse_op(r#"{"prompt":"x","max_tokens":"lots"}"#, 64, 512)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("\"max_tokens\"") && e.contains("integer") && e.contains("string"), "{e}");
+        let e = parse_op(r#"{"prompt":"x","max_tokens":1.5}"#, 64, 512)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("\"max_tokens\""), "{e}");
+        let e = parse_op(r#"{"prompt":"x","stream":1}"#, 64, 512).unwrap_err().to_string();
+        assert!(e.contains("\"stream\"") && e.contains("bool"), "{e}");
+        let e = parse_op(r#"{"prompt":"x","temperature":9}"#, 64, 512)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("\"temperature\""), "{e}");
+        let e = parse_op(r#"{"prompt":"x","stop":"\n"}"#, 64, 512).unwrap_err().to_string();
+        assert!(e.contains("\"stop\"") && e.contains("array"), "{e}");
+        let e = parse_op(r#"{"op":"zap"}"#, 64, 512).unwrap_err().to_string();
+        assert!(e.contains("unknown op \"zap\""), "{e}");
+        let e = parse_op(r#"{"op":7}"#, 64, 512).unwrap_err().to_string();
+        assert!(e.contains("\"op\"") && e.contains("string"), "{e}");
+    }
+
+    #[test]
+    fn cancel_and_stats_parse() {
+        assert_eq!(parse_op(r#"{"op":"cancel","id":9}"#, 64, 512).unwrap(), Op::Cancel { id: 9 });
+        assert_eq!(parse_op(r#"{"op":"stats"}"#, 64, 512).unwrap(), Op::Stats);
+        let e = parse_op(r#"{"op":"cancel"}"#, 64, 512).unwrap_err().to_string();
+        assert!(e.contains("\"id\""), "{e}");
     }
 
     #[test]
@@ -262,18 +679,38 @@ mod tests {
         assert!(err.get("message").unwrap().as_str().is_some());
     }
 
-    #[test]
-    fn response_format_parses_back() {
-        let f = Finished {
+    fn fin() -> Finished {
+        Finished {
             id: 7,
             tokens: vec![1, 2, 3, 4, 5],
+            finish_reason: FinishReason::Stop,
+            prompt_tokens: 3,
             latency_ns: 1_500_000,
             queue_ns: 200_000,
-        };
-        let r = format_response(&f, "a: m\n");
+        }
+    }
+
+    #[test]
+    fn response_format_parses_back() {
+        let r = format_response(&fin(), "a: m\n");
         let j = Json::parse(&r).unwrap();
         assert_eq!(j.get("id").unwrap().as_i64(), Some(7));
         assert_eq!(j.get("tokens").unwrap().as_i64(), Some(5));
+        assert_eq!(j.get("finish_reason").unwrap().as_str(), Some("stop"));
         assert!(j.get("queue_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn stream_frames_parse_back() {
+        let d = Json::parse(&format_delta(3, "ab", 2)).unwrap();
+        assert_eq!(d.get("id").unwrap().as_i64(), Some(3));
+        assert_eq!(d.get("delta").unwrap().as_str(), Some("ab"));
+        assert_eq!(d.get("tokens").unwrap().as_i64(), Some(2));
+        let t = Json::parse(&format_stream_done(&fin(), "abcde")).unwrap();
+        assert_eq!(t.get("done"), Some(&Json::Bool(true)));
+        assert_eq!(t.get("finish_reason").unwrap().as_str(), Some("stop"));
+        assert_eq!(t.get("text").unwrap().as_str(), Some("abcde"));
+        let c = Json::parse(&format_cancelled(12)).unwrap();
+        assert_eq!(c.get("cancelled").unwrap().as_i64(), Some(12));
     }
 }

@@ -1,22 +1,365 @@
-//! Trait-level engine tests: every engine kind is driven through the
-//! same generic harness (`&mut dyn Engine`), and the server loop is
-//! round-tripped with the EAGLE baseline — servable since the engine
-//! abstraction landed.
+//! Trait-level engine + serving-protocol tests.
 //!
-//! Requires `make artifacts` (skips silently otherwise). One #[test]
-//! drives everything: PJRT client creation is expensive and the handles
-//! are not Send, so a single test owns the session.
+//! Two layers:
+//!
+//! * **Session-free server tests** (always run): a mock engine over the
+//!   real `BatchCore` is served through the real TCP frontend
+//!   (`conn_thread` + `engine_loop`), covering the protocol-v1 surface
+//!   — streaming round trip, explicit + disconnect-driven cancellation
+//!   (slot verifiably freed), stop sequences, stats snapshots, legacy
+//!   one-line requests and precise error frames.
+//! * **Artifact-gated suite** (`make artifacts` first; skips silently
+//!   otherwise): every engine kind (QSPEC, AR, EAGLE) is driven through
+//!   the same generic harness (`&mut dyn Engine`) and then through the
+//!   same TCP scenarios, so streaming/cancel/stats are verified against
+//!   each concrete engine. One #[test] drives the artifact layer: PJRT
+//!   client creation is expensive and the handles are not Send, so a
+//!   single test owns the session.
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
 
 use qspec::config::{EngineKind, ServeConfig};
-use qspec::coordinator::{build_engine, Engine};
+use qspec::coordinator::{build_engine, BatchCore, Engine, StepEvent};
+use qspec::costmodel::{twins::Twin, CostModel};
+use qspec::error::Result as QResult;
 use qspec::evalsuite;
+use qspec::kvcache::SlotManager;
 use qspec::model::{Mode, Tokenizer};
 use qspec::runtime::{ArtifactStore, Session};
-use qspec::server::{self, InboundRequest};
-use qspec::util::json::{num, obj, s, Json};
+use qspec::server::{self, Inbound};
+use qspec::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// shared harness: TCP frontend around any engine + a tiny line client
+// ---------------------------------------------------------------------------
+
+/// Bind an ephemeral port and serve exactly `n_conns` connections
+/// through the real `conn_thread`, then drop the inbound sender so
+/// `engine_loop` returns once the last connection closes.
+fn start_frontend(
+    n_conns: usize,
+    default_max_tokens: usize,
+    cap: usize,
+) -> (String, mpsc::Receiver<Inbound>, thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = format!("127.0.0.1:{}", listener.local_addr().unwrap().port());
+    let (tx, rx) = mpsc::channel::<Inbound>();
+    let h = thread::spawn(move || {
+        for conn in 0..n_conns as u64 {
+            let (stream, _) = match listener.accept() {
+                Ok(x) => x,
+                Err(_) => return,
+            };
+            let tx = tx.clone();
+            thread::spawn(move || {
+                server::conn_thread(stream, conn + 1, tx, default_max_tokens, cap)
+            });
+        }
+    });
+    (addr, rx, h)
+}
+
+/// Blocking line-protocol client.
+struct Client {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: &str) -> Client {
+        let w = TcpStream::connect(addr).expect("connect");
+        let r = BufReader::new(w.try_clone().expect("clone"));
+        Client { w, r }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.w, "{line}").expect("send");
+    }
+
+    fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        let n = self.r.read_line(&mut line).expect("recv");
+        assert!(n > 0, "server closed the connection unexpectedly");
+        Json::parse(line.trim()).expect("frame is JSON")
+    }
+
+    /// Drive one streaming generate: returns (concatenated delta text,
+    /// summed delta token count, terminal frame).
+    fn stream_generate(&mut self, req_line: &str) -> (String, i64, Json) {
+        self.send(req_line);
+        let mut text = String::new();
+        let mut ntok = 0i64;
+        loop {
+            let j = self.recv();
+            if let Some(err) = j.get("error") {
+                panic!("stream errored: {err:?}");
+            }
+            if j.get("done").is_some() {
+                return (text, ntok, j);
+            }
+            text.push_str(j.get("delta").expect("delta").as_str().unwrap());
+            ntok += j.get("tokens").unwrap().as_i64().unwrap();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// session-free layer: mock engine over the real BatchCore
+// ---------------------------------------------------------------------------
+
+const ALPHA: &str = "abcdefghijklmnopqrstuvwxyz0123456789 \n+-*=?:;,.()<>[]|&%$#@!_";
+
+fn mock_tokenizer() -> Tokenizer {
+    Tokenizer::from_alphabet(ALPHA, 64).expect("tokenizer")
+}
+
+/// Echo engine: prefill emits token 10, each cycle commits pending + 1,
+/// so output text is deterministic ("hijk..."). `step_delay` widens the
+/// race window for cancellation tests.
+struct MockEngine {
+    core: BatchCore,
+    step_delay: Duration,
+}
+
+impl MockEngine {
+    fn new(batch: usize, max_seq: usize, delay_ms: u64) -> Self {
+        MockEngine {
+            core: BatchCore::new(
+                SlotManager::new(batch, max_seq, 16),
+                CostModel::new(Twin::lookup("llama2-7b")),
+            ),
+            step_delay: Duration::from_millis(delay_ms),
+        }
+    }
+}
+
+impl Engine for MockEngine {
+    fn name(&self) -> &'static str {
+        "mock"
+    }
+
+    fn core(&self) -> &BatchCore {
+        &self.core
+    }
+
+    fn core_mut(&mut self) -> &mut BatchCore {
+        &mut self.core
+    }
+
+    fn step(&mut self) -> QResult<Vec<StepEvent>> {
+        if !self.step_delay.is_zero() {
+            thread::sleep(self.step_delay);
+        }
+        let mut out = Vec::new();
+        if let Some(pb) = self.core.admit_batch(&mut out)? {
+            let first = vec![10i32; self.core.batch()];
+            self.core.finish_prefill(&pb, &first, &mut out);
+        }
+        if let Some(sb) = self.core.step_inputs() {
+            for &i in &sb.active {
+                let next = sb.tok[i] + 1;
+                self.core.commit(i, &[next], 1, &mut out);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[test]
+fn mock_server_streaming_round_trip() {
+    let tok = mock_tokenizer();
+    let mut engine = MockEngine::new(2, 64, 0);
+    let (addr, rx, lh) = start_frontend(1, 16, 64);
+    let client = thread::spawn(move || {
+        let mut c = Client::connect(&addr);
+        c.stream_generate(r#"{"op":"generate","prompt":"hi","max_tokens":8,"stream":true}"#)
+    });
+    server::engine_loop(&rx, &tok, &mut engine).expect("engine_loop");
+    lh.join().unwrap();
+    let (text, ntok, done) = client.join().unwrap();
+    // deltas sum to the terminal frame's authoritative text
+    assert_eq!(done.get("text").unwrap().as_str(), Some(text.as_str()));
+    assert_eq!(done.get("tokens").unwrap().as_i64(), Some(ntok));
+    assert_eq!(done.get("finish_reason").unwrap().as_str(), Some("length"));
+    assert!(done.get("latency_ms").unwrap().as_f64().unwrap() >= 0.0);
+    // echo decode from token 10: 8 tokens -> "hijklmno"
+    assert_eq!(text, "hijklmno");
+    assert!(!engine.has_work());
+    assert_eq!(engine.metrics().requests_done, 1);
+}
+
+#[test]
+fn mock_server_cancel_frees_slot_and_stats_report() {
+    let tok = mock_tokenizer();
+    // batch 1: the cancelled request must actually free its slot for
+    // the follow-up request to complete
+    let mut engine = MockEngine::new(1, 512, 3);
+    let (addr, rx, lh) = start_frontend(1, 16, 512);
+    let client = thread::spawn(move || {
+        let mut c = Client::connect(&addr);
+        c.send(r#"{"op":"generate","prompt":"hi","max_tokens":400,"stream":true}"#);
+        let first = c.recv();
+        let id = first.get("id").expect("delta carries id").as_i64().unwrap();
+        c.send(&format!(r#"{{"op":"cancel","id":{id}}}"#));
+        // in-flight deltas may precede the terminal frame; the ack
+        // follows it on the same channel
+        let term = loop {
+            let j = c.recv();
+            if j.get("done").is_some() {
+                break j;
+            }
+            assert!(j.get("delta").is_some(), "unexpected frame: {j:?}");
+        };
+        let ack = c.recv();
+        // the freed slot admits a fresh request immediately
+        c.send(r#"{"prompt":"yo","max_tokens":4}"#);
+        let second = c.recv();
+        c.send(r#"{"op":"stats"}"#);
+        let stats = c.recv();
+        (term, ack, second, stats)
+    });
+    server::engine_loop(&rx, &tok, &mut engine).expect("engine_loop");
+    lh.join().unwrap();
+    let (term, ack, second, stats) = client.join().unwrap();
+    assert_eq!(term.get("finish_reason").unwrap().as_str(), Some("cancelled"));
+    assert!(ack.get("cancelled").is_some(), "cancel ack: {ack:?}");
+    assert_eq!(second.get("finish_reason").unwrap().as_str(), Some("length"));
+    assert_eq!(second.get("tokens").unwrap().as_i64(), Some(4));
+    // the /stats surface reports the cancel and the drained queue
+    assert_eq!(stats.get("engine").unwrap().as_str(), Some("mock"));
+    assert_eq!(stats.get("queue_depth").unwrap().as_i64(), Some(0));
+    assert_eq!(stats.get("active").unwrap().as_i64(), Some(0));
+    assert_eq!(stats.get("cancelled").unwrap().as_i64(), Some(1));
+    assert_eq!(stats.get("requests_done").unwrap().as_i64(), Some(1));
+    for key in ["queue_p50_ms", "queue_p99_ms", "acceptance_rate", "wall_tok_s", "virt_tok_s"] {
+        assert!(stats.get(key).is_some(), "stats missing {key}");
+    }
+    assert_eq!(engine.metrics().cancelled, 1);
+    assert!(!engine.has_work(), "cancelled request still occupies the engine");
+}
+
+#[test]
+fn mock_server_disconnect_cancels_in_flight_request() {
+    let tok = mock_tokenizer();
+    let mut engine = MockEngine::new(1, 512, 3);
+    let (addr, rx, lh) = start_frontend(2, 16, 512);
+    let client = thread::spawn(move || {
+        {
+            let mut c1 = Client::connect(&addr);
+            c1.send(r#"{"op":"generate","prompt":"hi","max_tokens":400,"stream":true}"#);
+            let _ = c1.recv(); // generation under way
+        } // c1 dropped: client hangs up mid-stream
+        // the disconnect must free the (only) slot for this request
+        let mut c2 = Client::connect(&addr);
+        c2.send(r#"{"prompt":"yo","max_tokens":4}"#);
+        c2.recv()
+    });
+    server::engine_loop(&rx, &tok, &mut engine).expect("engine_loop");
+    lh.join().unwrap();
+    let second = client.join().unwrap();
+    assert_eq!(second.get("finish_reason").unwrap().as_str(), Some("length"));
+    assert_eq!(engine.metrics().cancelled, 1, "disconnect did not cancel");
+    assert_eq!(engine.metrics().requests_done, 1);
+    assert!(!engine.has_work());
+}
+
+#[test]
+fn mock_server_stop_sequence_legacy_form_and_errors() {
+    let tok = mock_tokenizer();
+    let mut engine = MockEngine::new(2, 64, 0);
+    let (addr, rx, lh) = start_frontend(1, 16, 64);
+    let client = thread::spawn(move || {
+        let mut c = Client::connect(&addr);
+        // mock emits "hijk..." -> stop "jk" trims the output to "hi"
+        c.send(r#"{"op":"generate","prompt":"x","max_tokens":20,"stop":["jk"]}"#);
+        let stopped = c.recv();
+        // the legacy bare-prompt line is still answered correctly
+        c.send(r#"{"prompt":"x","max_tokens":3}"#);
+        let legacy = c.recv();
+        c.send(r#"{"prompt":5}"#);
+        let bad_prompt = c.recv();
+        c.send(r#"{"op":"zap"}"#);
+        let bad_op = c.recv();
+        c.send(r#"{"op":"cancel","id":999}"#);
+        let not_found = c.recv();
+        // stop entries are re-validated after tokenization: 40 chars
+        // pass the parse layer but encode to 40 tokens > the ceiling
+        c.send(&format!(
+            r#"{{"op":"generate","prompt":"x","stop":["{}"]}}"#,
+            "a".repeat(40)
+        ));
+        let bad_stop = c.recv();
+        (stopped, legacy, bad_prompt, bad_op, not_found, bad_stop)
+    });
+    server::engine_loop(&rx, &tok, &mut engine).expect("engine_loop");
+    lh.join().unwrap();
+    let (stopped, legacy, bad_prompt, bad_op, not_found, bad_stop) = client.join().unwrap();
+    assert_eq!(stopped.get("finish_reason").unwrap().as_str(), Some("stop"));
+    assert_eq!(stopped.get("text").unwrap().as_str(), Some("hi"));
+    // the [j, k] match spans two single-token commits; the counters are
+    // reconciled to the delivered outputs ("hi" + "hij")
+    assert_eq!(engine.metrics().tokens_out, 5);
+    assert_eq!(legacy.get("finish_reason").unwrap().as_str(), Some("length"));
+    assert_eq!(legacy.get("text").unwrap().as_str(), Some("hij"));
+    let err = bad_prompt.get("error").expect("error frame");
+    assert_eq!(err.get("code").unwrap().as_str(), Some("bad_request"));
+    assert!(err.get("message").unwrap().as_str().unwrap().contains("prompt"));
+    let err = bad_op.get("error").expect("error frame");
+    assert!(err.get("message").unwrap().as_str().unwrap().contains("zap"));
+    let err = not_found.get("error").expect("error frame");
+    assert_eq!(err.get("code").unwrap().as_str(), Some("not_found"));
+    let err = bad_stop.get("error").expect("error frame");
+    assert_eq!(err.get("code").unwrap().as_str(), Some("bad_request"));
+    assert!(err.get("message").unwrap().as_str().unwrap().contains("stop"));
+    assert_eq!(engine.metrics().requests_done, 2);
+}
+
+#[test]
+fn mock_server_cancel_is_connection_scoped() {
+    let tok = mock_tokenizer();
+    let mut engine = MockEngine::new(1, 512, 3);
+    let (addr, rx, lh) = start_frontend(2, 16, 512);
+    let client = thread::spawn(move || {
+        let mut c1 = Client::connect(&addr);
+        c1.send(r#"{"op":"generate","prompt":"hi","max_tokens":400,"stream":true}"#);
+        let first = c1.recv();
+        let id = first.get("id").expect("delta id").as_i64().unwrap();
+        // ids are guessable (sequential); a different connection must
+        // not be able to cancel someone else's request
+        let mut c2 = Client::connect(&addr);
+        c2.send(&format!(r#"{{"op":"cancel","id":{id}}}"#));
+        let foreign = c2.recv();
+        drop(c2);
+        // the owning connection still can
+        c1.send(&format!(r#"{{"op":"cancel","id":{id}}}"#));
+        let term = loop {
+            let j = c1.recv();
+            if j.get("done").is_some() {
+                break j;
+            }
+        };
+        let ack = c1.recv();
+        (foreign, term, ack)
+    });
+    server::engine_loop(&rx, &tok, &mut engine).expect("engine_loop");
+    lh.join().unwrap();
+    let (foreign, term, ack) = client.join().unwrap();
+    let err = foreign.get("error").expect("foreign cancel must fail");
+    assert_eq!(err.get("code").unwrap().as_str(), Some("not_found"));
+    assert_eq!(term.get("finish_reason").unwrap().as_str(), Some("cancelled"));
+    assert!(ack.get("cancelled").is_some(), "owner cancel acked: {ack:?}");
+    assert_eq!(engine.metrics().cancelled, 1);
+    assert!(!engine.has_work());
+}
+
+// ---------------------------------------------------------------------------
+// artifact-gated layer: real engines through the same harnesses
+// ---------------------------------------------------------------------------
 
 fn artifacts_root() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -34,7 +377,7 @@ fn engine_trait_suite() {
     let items = evalsuite::load_eval(&sess.store.eval_path("chain")).expect("eval set");
     let prompts: Vec<String> = items.iter().take(12).map(|i| i.prompt.clone()).collect();
 
-    // the same harness drives every engine kind
+    // the same harnesses drive every engine kind
     let kinds: Vec<(EngineKind, &str)> = vec![
         (EngineKind::QSpec, "s"),
         (EngineKind::Ar(Mode::W4A16), "s"),
@@ -50,8 +393,9 @@ fn engine_trait_suite() {
         let mut engine = build_engine(&sess, &cfg).expect("build_engine");
         drive_generic(engine.as_mut(), &tok, &prompts);
     }
-
-    eagle_server_round_trip(&sess, &tok, &prompts);
+    for (kind, size) in &kinds {
+        server_scenarios(&sess, &tok, kind.clone(), size, &prompts);
+    }
 }
 
 /// Submit N requests -> run_to_completion -> assert every request
@@ -80,57 +424,104 @@ fn drive_generic(engine: &mut dyn Engine, tok: &Tokenizer, prompts: &[String]) {
     assert_eq!(m.committed, m.tokens_out, "{}", engine.name());
     let toks: usize = fins.iter().map(|f| f.tokens.len()).sum();
     assert_eq!(toks as u64, m.tokens_out, "{}", engine.name());
-    // the new queue-wait histogram sees one admission per request
+    // the queue-wait histogram sees one admission per request
     assert_eq!(m.queue_wait.count(), n as u64, "{}", engine.name());
     assert_eq!(m.req_latency.count(), n as u64, "{}", engine.name());
     for f in &fins {
         assert!(f.latency_ns >= f.queue_ns, "{}: wait > latency", engine.name());
+        assert!(f.prompt_tokens > 0, "{}: prompt usage missing", engine.name());
     }
     // the virtual clock advanced (every phase charges it)
     assert!(engine.cost().virtual_ns > 0, "{}", engine.name());
 }
 
-/// Server-layer round trip for the newly servable EAGLE engine: the
-/// engine loop is driven through the same mpsc protocol the TCP
-/// connection threads use (requests in, JSON response lines out).
-fn eagle_server_round_trip(sess: &Session, tok: &Tokenizer, prompts: &[String]) {
+/// The protocol-v1 acceptance scenario, against a real engine over real
+/// TCP: streaming round trip, stop-sequence termination, explicit
+/// cancellation (slot verifiably freed), a stats snapshot, and a
+/// disconnect-driven cancellation.
+fn server_scenarios(
+    sess: &Session,
+    tok: &Tokenizer,
+    kind: EngineKind,
+    size: &str,
+    prompts: &[String],
+) {
     let cfg = ServeConfig {
-        size: "m".to_string(),
+        size: size.to_string(),
         batch: 8,
-        engine: EngineKind::Eagle { tree_k: 1 },
+        engine: kind,
         ..ServeConfig::default()
     };
-    let mut engine = build_engine(sess, &cfg).expect("eagle engine");
+    let mut engine = build_engine(sess, &cfg).expect("engine");
+    let name = engine.name();
     let cap = engine.max_seq();
-
-    let (tx, rx) = mpsc::channel::<InboundRequest>();
-    let mut resp_rx = Vec::new();
-    for p in prompts.iter().take(6) {
-        // go through the real request parser (clamps max_tokens),
-        // serializing with the crate's own JSON writer
-        let line = obj(vec![
-            ("prompt", s(p)),
-            ("max_tokens", num(9_999_999.0)),
-        ])
-        .to_string();
-        let (prompt, max_tokens) =
-            server::parse_request_line(&line, cfg.max_tokens_default, cap).expect("parse");
-        assert!(max_tokens <= cap, "clamp failed");
-        let (rtx, rrx) = mpsc::channel();
-        tx.send(InboundRequest { prompt, max_tokens, resp: rtx }).unwrap();
-        resp_rx.push(rrx);
-    }
-    drop(tx); // loop exits once idle and the channel is closed
-    server::engine_loop(&rx, tok, engine.as_mut()).expect("engine_loop");
-
-    for rrx in resp_rx {
-        let line = rrx.try_recv().expect("response delivered");
-        let j = Json::parse(&line).expect("response is JSON");
-        assert!(j.get("id").is_some());
-        assert!(j.get("latency_ms").is_some());
-        assert!(j.get("queue_ms").is_some());
-        assert!(j.get("tokens").unwrap().as_i64().unwrap() > 0);
-        assert!(j.get("text").unwrap().as_str().is_some());
-    }
-    assert_eq!(engine.metrics().requests_done, 6);
+    let (addr, rx, lh) = start_frontend(2, cfg.max_tokens_default, cap);
+    let p0 = prompts[0].replace('\n', "\\n");
+    let p1 = prompts[1].replace('\n', "\\n");
+    let client = thread::spawn(move || {
+        let mut c = Client::connect(&addr);
+        // 1. streaming round trip
+        let (text, ntok, done) = c.stream_generate(&format!(
+            r#"{{"op":"generate","prompt":"{p0}","max_tokens":24,"stream":true}}"#
+        ));
+        assert_eq!(done.get("text").unwrap().as_str(), Some(text.as_str()), "delta sum != final");
+        assert_eq!(done.get("tokens").unwrap().as_i64(), Some(ntok));
+        assert!(ntok > 0);
+        // 2. stop sequence derived from the (deterministic greedy) text
+        let stop: String = text.chars().skip(1).take(2).collect();
+        if stop.chars().count() == 2 {
+            c.send(&format!(
+                r#"{{"op":"generate","prompt":"{p0}","max_tokens":24,"stop":["{}"]}}"#,
+                stop.replace('\n', "\\n")
+            ));
+            let stopped = c.recv();
+            assert_eq!(
+                stopped.get("finish_reason").unwrap().as_str(),
+                Some("stop"),
+                "stop sequence ignored"
+            );
+            let t2 = stopped.get("text").unwrap().as_str().unwrap().to_string();
+            assert!(!t2.contains(&stop), "matched stop not trimmed: {t2:?}");
+            assert!(text.starts_with(&t2), "stop run diverged: {t2:?} vs {text:?}");
+        }
+        // 3. explicit cancel mid-flight
+        c.send(&format!(
+            r#"{{"op":"generate","prompt":"{p1}","max_tokens":{cap},"stream":true}}"#
+        ));
+        let first = c.recv();
+        let id = first.get("id").expect("delta id").as_i64().unwrap();
+        c.send(&format!(r#"{{"op":"cancel","id":{id}}}"#));
+        let term = loop {
+            let j = c.recv();
+            if j.get("done").is_some() {
+                break j;
+            }
+        };
+        assert_eq!(term.get("finish_reason").unwrap().as_str(), Some("cancelled"));
+        let ack = c.recv();
+        assert!(ack.get("cancelled").is_some(), "no cancel ack: {ack:?}");
+        // 4. stats snapshot (slot freed by the cancel)
+        c.send(r#"{"op":"stats"}"#);
+        let stats = c.recv();
+        assert_eq!(stats.get("active").unwrap().as_i64(), Some(0), "slot not freed");
+        assert_eq!(stats.get("queue_depth").unwrap().as_i64(), Some(0));
+        assert_eq!(stats.get("cancelled").unwrap().as_i64(), Some(1));
+        for key in [
+            "queue_p50_ms", "queue_p99_ms", "acceptance_rate", "wall_tok_s", "virt_tok_s",
+        ] {
+            assert!(stats.get(key).is_some(), "stats missing {key}");
+        }
+        drop(c);
+        // 5. disconnect-driven cancellation on a fresh connection
+        let mut c2 = Client::connect(&addr);
+        c2.send(&format!(
+            r#"{{"op":"generate","prompt":"{p1}","max_tokens":{cap},"stream":true}}"#
+        ));
+        let _ = c2.recv(); // at least one delta: the request is running
+    });
+    server::engine_loop(&rx, &tok, engine.as_mut()).expect("engine_loop");
+    lh.join().unwrap();
+    client.join().unwrap();
+    assert_eq!(engine.metrics().cancelled, 2, "{name}: expected 2 cancellations");
+    assert!(!engine.has_work(), "{name}: work left after disconnect");
 }

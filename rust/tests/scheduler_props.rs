@@ -40,7 +40,7 @@ fn slot_manager_invariants_under_random_ops() {
                             let id = next_id;
                             next_id += 1;
                             let idx = m
-                                .admit(id, plen, 4 + op as usize % 20)
+                                .admit(id, plen, 4 + op as usize % 20, vec![])
                                 .map_err(|e| format!("admit: {e}"))?;
                             let t0 = 10 + (op % 40) as i32;
                             m.after_prefill(idx, t0, EOS);
