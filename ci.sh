@@ -3,6 +3,7 @@
 #
 #   ./ci.sh          # everything
 #   ./ci.sh fast     # build + tests only (skip fmt/clippy)
+#   ./ci.sh lint     # fmt + clippy only (skip build/tests)
 #
 # Integration tests skip themselves when artifacts/ is absent; run
 # `make artifacts` first for full end-to-end coverage.
@@ -19,8 +20,10 @@ else
     exit 1
 fi
 
-cargo build --release
-cargo test -q
+if [ "${1:-}" != "lint" ]; then
+    cargo build --release
+    cargo test -q
+fi
 
 if [ "${1:-}" != "fast" ]; then
     cargo fmt --check

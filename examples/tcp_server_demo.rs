@@ -1,7 +1,8 @@
-//! TCP serving demo (protocol v1): spawns the `qspec serve` binary,
-//! streams a generation token-by-token, fires concurrent legacy
-//! requests, cancels one mid-flight, fetches a `/stats` snapshot, and
-//! shuts down.
+//! TCP serving demo (protocol v1.1): spawns the `qspec serve` binary
+//! under the priority scheduler, streams a generation token-by-token,
+//! fires concurrent legacy requests, cancels one mid-flight, submits
+//! priority/deadline QoS requests, and fetches a `/stats` snapshot
+//! (active policy, per-priority queue depths) before shutting down.
 //!
 //!     cargo build --release && cargo run --release --example tcp_server_demo
 //!
@@ -88,6 +89,8 @@ fn main() {
         .args([
             "serve", "--size", "s", "--batch", "8",
             "--port", &port.to_string(), "--engine", &engine,
+            // protocol v1.1: priority-with-aging admission ordering
+            "--sched", "priority",
         ])
         .spawn()
         .expect("spawn qspec serve");
@@ -151,9 +154,28 @@ fn main() {
     };
     cancel_demo().expect("cancel demo");
 
-    // 4. the /stats surface
+    // 4. QoS intent (v1.1): a critical-class request with a generous
+    //    deadline, and a background-class request — under the priority
+    //    scheduler the critical one is admitted first whenever they
+    //    ever queue together
+    println!("submitting critical (priority 3, 10s deadline) and background requests\n");
+    let critical = one_shot(
+        &addr,
+        r#"{"op":"generate","prompt":"q: g xy ?\n","max_tokens":32,"priority":3,"deadline_ms":10000}"#,
+    )
+    .expect("critical qos request");
+    println!("  critical:   {critical}");
+    let background = one_shot(
+        &addr,
+        r#"{"op":"generate","prompt":"q: b yy ?\n","max_tokens":32,"priority":0}"#,
+    )
+    .expect("background qos request");
+    println!("  background: {background}\n");
+
+    // 5. the /stats surface: engine + active policy, slot capacity,
+    //    per-priority queue depths, shed/deadline counters
     let stats = one_shot(&addr, r#"{"op":"stats"}"#).expect("stats");
-    println!("\nstats: {stats}\n");
+    println!("stats: {stats}\n");
 
     let _ = child.kill();
     let _ = child.wait();

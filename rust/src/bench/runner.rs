@@ -3,9 +3,18 @@
 //! engine-generic [`run_engine`] driver — there is no per-engine drive
 //! loop anymore; `RunSpec.engine` selects the scheme and
 //! `coordinator::build_engine` does the construction.
+//! [`run_sched_bench`] layers the QoS surface on top: the same
+//! workload shaped into a bursty mixed-priority burst, driven under
+//! any [`SchedKind`] (optionally with an admission SLO) and reported
+//! per priority class.
 
-use crate::config::{EngineKind, ServeConfig};
-use crate::coordinator::{build_engine, GenerationRequest, SamplingParams, SimilaritySample};
+use std::collections::HashMap;
+
+use crate::config::{EngineKind, SchedKind, ServeConfig, SloConfig};
+use crate::coordinator::{
+    build_engine, FinishReason, GenerationRequest, SamplingParams, SimilaritySample,
+    MAX_PRIORITY,
+};
 use crate::error::Result;
 use crate::metrics::EngineMetrics;
 use crate::model::Tokenizer;
@@ -115,6 +124,121 @@ pub fn run_engine(sess: &Session, tok: &Tokenizer, spec: &RunSpec) -> Result<Run
     Ok(RunOutput {
         metrics: e.metrics().clone(),
         samples: e.take_samples(),
+    })
+}
+
+/// Per-priority-class latency outcome of one [`run_sched_bench`] run.
+#[derive(Clone, Debug)]
+pub struct QosClassReport {
+    pub priority: u8,
+    /// requests of this class that finished normally (shed and
+    /// deadline-expired requests are excluded from the percentiles).
+    pub n_done: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Result of driving the bursty mixed-priority workload under one
+/// scheduling policy.
+pub struct SchedRunOutput {
+    pub sched: SchedKind,
+    /// admissions rejected by the SLO (0 when no SLO configured).
+    pub shed: u64,
+    /// requests that missed their deadline while queued.
+    pub deadline_expired: u64,
+    /// latency percentiles per priority class, ascending priority.
+    pub per_class: Vec<QosClassReport>,
+    pub metrics: EngineMetrics,
+}
+
+/// The bursty mixed-priority workload behind the scheduling bench:
+/// groups of three long background jobs (class 0, 48-token budget)
+/// followed by one short critical job (class [`MAX_PRIORITY`],
+/// 8-token budget, generous deadline). Submitted as one burst, FCFS
+/// makes every critical job wait behind the background group ahead of
+/// it; priority/EDF admit the critical work first.
+pub fn bursty_qos_workload(
+    sess: &Session,
+    tok: &Tokenizer,
+    spec: &RunSpec,
+) -> Result<Vec<GenerationRequest>> {
+    let base = load_workload(sess, tok, spec)?;
+    Ok(base
+        .iter()
+        .enumerate()
+        .map(|(i, (prompt, _))| {
+            if i % 4 == 3 {
+                GenerationRequest::greedy(prompt.clone(), 8)
+                    .with_priority(MAX_PRIORITY)
+                    .with_deadline_ms(120_000)
+            } else {
+                GenerationRequest::greedy(prompt.clone(), 48).with_priority(0)
+            }
+        })
+        .collect())
+}
+
+/// exact percentile over sorted latencies (ns -> ms).
+fn pctl_ms(sorted_ns: &[u64], p: f64) -> f64 {
+    crate::util::stats::percentile_sorted(sorted_ns, p) as f64 / 1e6
+}
+
+/// Drive the bursty mixed-priority workload through `spec.engine`
+/// under the given scheduling policy (and optional admission SLO;
+/// submission goes through `try_submit_request`, so sheds are counted
+/// exactly as the server would reject them). Returns per-class
+/// latency percentiles — the head-to-head number the QoS bench
+/// tabulates.
+pub fn run_sched_bench(
+    sess: &Session,
+    tok: &Tokenizer,
+    spec: &RunSpec,
+    sched: SchedKind,
+    slo: Option<SloConfig>,
+) -> Result<SchedRunOutput> {
+    let mut cfg = spec.serve_config();
+    cfg.sched = sched;
+    if let Some(slo) = slo {
+        cfg.slo = slo;
+    }
+    let mut e = build_engine(sess, &cfg)?;
+    let mut class_of: HashMap<u64, u8> = HashMap::new();
+    for req in bursty_qos_workload(sess, tok, spec)? {
+        let priority = req.priority;
+        if let Ok(id) = e.try_submit_request(req) {
+            class_of.insert(id, priority);
+        }
+    }
+    let fins = e.run_to_completion()?;
+    let mut lat_by_class: HashMap<u8, Vec<u64>> = HashMap::new();
+    for f in &fins {
+        if f.finish_reason == FinishReason::DeadlineExceeded {
+            continue; // never serviced; counted via metrics
+        }
+        if let Some(&p) = class_of.get(&f.id) {
+            lat_by_class.entry(p).or_default().push(f.latency_ns as u64);
+        }
+    }
+    let mut per_class: Vec<QosClassReport> = lat_by_class
+        .into_iter()
+        .map(|(priority, mut ns)| {
+            ns.sort_unstable();
+            QosClassReport {
+                priority,
+                n_done: ns.len(),
+                p50_ms: pctl_ms(&ns, 50.0),
+                p99_ms: pctl_ms(&ns, 99.0),
+            }
+        })
+        .collect();
+    per_class.sort_by_key(|c| c.priority);
+    let metrics = e.metrics().clone();
+    Ok(SchedRunOutput {
+        sched,
+        shed: metrics.shed,
+        deadline_expired: metrics.deadline_expired,
+        per_class,
+        metrics,
     })
 }
 

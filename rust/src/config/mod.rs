@@ -1,8 +1,10 @@
 //! Serving configuration (assembled by the CLI; defaults follow the
-//! paper's setup: Atom scheme, gamma = 3, FCFS continuous batching).
+//! paper's setup: Atom scheme, gamma = 3, FCFS continuous batching,
+//! no admission SLO).
 
 use std::path::PathBuf;
 
+use crate::coordinator::request::MAX_PRIORITY;
 use crate::error::{QspecError, Result};
 use crate::model::Mode;
 
@@ -39,6 +41,112 @@ impl EngineKind {
     }
 }
 
+/// Which admission scheduling policy orders the queue (see
+/// `coordinator::queue` for the implementations behind the
+/// `SchedPolicy` trait).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedKind {
+    /// first-come-first-served (the paper's setup; the default).
+    #[default]
+    Fcfs,
+    /// strict priority classes with aging (starved requests gain one
+    /// effective level per aging window so low priority still drains).
+    Priority,
+    /// shortest-job-first, with `max_tokens` as the service-time proxy.
+    Sjf,
+    /// earliest-deadline-first; deadline-less requests run after any
+    /// deadlined ones, FCFS among themselves.
+    Edf,
+}
+
+impl SchedKind {
+    /// Parse a CLI/scheduler name: `fcfs`, `priority`, `sjf`, `edf`.
+    pub fn parse(s: &str) -> Option<SchedKind> {
+        match s {
+            "fcfs" => Some(SchedKind::Fcfs),
+            "priority" => Some(SchedKind::Priority),
+            "sjf" => Some(SchedKind::Sjf),
+            "edf" => Some(SchedKind::Edf),
+            _ => None,
+        }
+    }
+
+    /// Short stable label for tables, stats frames and JSON output.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedKind::Fcfs => "fcfs",
+            SchedKind::Priority => "priority",
+            SchedKind::Sjf => "sjf",
+            SchedKind::Edf => "edf",
+        }
+    }
+
+    pub const ALL: [SchedKind; 4] =
+        [SchedKind::Fcfs, SchedKind::Priority, SchedKind::Sjf, SchedKind::Edf];
+}
+
+/// Admission SLO: when either signal crosses its threshold the engine
+/// is considered overloaded and new admissions below
+/// `shed_below_priority` are rejected with a structured `overloaded`
+/// frame instead of queueing into a wait they cannot meet. Both
+/// thresholds `None` (the default) disables shedding entirely.
+#[derive(Clone, Debug)]
+pub struct SloConfig {
+    /// shed when the live p99 queue wait (recent admissions, combined
+    /// with the age of the oldest still-queued request) exceeds this.
+    pub p99_queue_wait_ms: Option<f64>,
+    /// shed when this many requests are already queued.
+    pub max_queue_depth: Option<usize>,
+    /// priorities below this class are shed under overload; >= are
+    /// always admitted (default 2: `high`/`critical` ride through).
+    pub shed_below_priority: u8,
+    /// `retry_after_ms` hint carried by the `overloaded` error frame.
+    pub retry_after_ms: u64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            p99_queue_wait_ms: None,
+            max_queue_depth: None,
+            shed_below_priority: 2,
+            retry_after_ms: 500,
+        }
+    }
+}
+
+impl SloConfig {
+    /// Whether any shedding signal is configured.
+    pub fn enabled(&self) -> bool {
+        self.p99_queue_wait_ms.is_some() || self.max_queue_depth.is_some()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if let Some(p) = self.p99_queue_wait_ms {
+            if !p.is_finite() || p <= 0.0 {
+                return Err(QspecError::Config(format!(
+                    "slo p99_queue_wait_ms {p} must be a positive number"
+                )));
+            }
+        }
+        if self.max_queue_depth == Some(0) {
+            // depth 0 would trip even on an idle engine
+            return Err(QspecError::Config("slo max_queue_depth must be >= 1".into()));
+        }
+        if self.shed_below_priority > MAX_PRIORITY + 1 {
+            return Err(QspecError::Config(format!(
+                "shed_below_priority {} outside 0..={}",
+                self.shed_below_priority,
+                MAX_PRIORITY + 1
+            )));
+        }
+        if self.retry_after_ms == 0 {
+            return Err(QspecError::Config("retry_after_ms must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
 /// Full serving configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -48,6 +156,11 @@ pub struct ServeConfig {
     pub batch: usize,
     pub gamma: usize,
     pub engine: EngineKind,
+    /// admission scheduling policy (every engine kind honors it; the
+    /// queue lives in the shared `BatchCore`).
+    pub sched: SchedKind,
+    /// admission SLO / shedding thresholds (off by default).
+    pub slo: SloConfig,
     pub overwrite: bool,
     /// record fig-2 similarity samples (QSPEC only; small overhead).
     pub collect_similarity: bool,
@@ -64,6 +177,8 @@ impl Default for ServeConfig {
             batch: 8,
             gamma: 3,
             engine: EngineKind::QSpec,
+            sched: SchedKind::Fcfs,
+            slo: SloConfig::default(),
             overwrite: true,
             collect_similarity: false,
             // the line protocol's documented default for requests that
@@ -85,6 +200,7 @@ impl ServeConfig {
         if self.batch == 0 {
             return Err(QspecError::Config("batch must be > 0".into()));
         }
+        self.slo.validate()?;
         Ok(())
     }
 }
@@ -115,6 +231,38 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = ServeConfig::default();
         c.scheme = "gptq".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn sched_kind_parse_and_labels() {
+        for kind in SchedKind::ALL {
+            assert_eq!(SchedKind::parse(kind.label()), Some(kind));
+        }
+        assert_eq!(SchedKind::parse("lifo"), None);
+        assert_eq!(SchedKind::default(), SchedKind::Fcfs);
+    }
+
+    #[test]
+    fn slo_validation() {
+        assert!(SloConfig::default().validate().is_ok());
+        assert!(!SloConfig::default().enabled());
+        let slo = SloConfig { max_queue_depth: Some(4), ..SloConfig::default() };
+        assert!(slo.enabled());
+        assert!(slo.validate().is_ok());
+        let slo = SloConfig { max_queue_depth: Some(0), ..SloConfig::default() };
+        assert!(slo.validate().is_err());
+        let slo = SloConfig { p99_queue_wait_ms: Some(-1.0), ..SloConfig::default() };
+        assert!(slo.validate().is_err());
+        let slo = SloConfig { p99_queue_wait_ms: Some(f64::NAN), ..SloConfig::default() };
+        assert!(slo.validate().is_err());
+        let slo = SloConfig { shed_below_priority: MAX_PRIORITY + 2, ..SloConfig::default() };
+        assert!(slo.validate().is_err());
+        let slo = SloConfig { retry_after_ms: 0, ..SloConfig::default() };
+        assert!(slo.validate().is_err());
+        // a bad SLO fails the whole serve config
+        let mut c = ServeConfig::default();
+        c.slo.max_queue_depth = Some(0);
         assert!(c.validate().is_err());
     }
 }

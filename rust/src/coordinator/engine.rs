@@ -18,20 +18,25 @@
 //!   accessor; engines implement only `step` (their phase logic) and
 //!   construction.
 //! * [`BatchCore`] — the shared continuous-batching state machine:
-//!   FCFS queue, slot table, request-id assignment, queue-wait and
-//!   latency accounting, admission + left-padded prefill packing,
-//!   decode input gathering, commit/finish bookkeeping and mid-flight
-//!   cancellation. The engines own their modules/weights/KV buffers;
-//!   everything request-shaped lives here, written once.
+//!   the admission queue (any [`SchedPolicy`]: FCFS, priority with
+//!   aging, SJF, EDF), slot table, request-id assignment, queue-wait
+//!   and latency accounting, admission + left-padded prefill packing
+//!   (with deadline expiry at admission), SLO-based admission shedding
+//!   ([`BatchCore::try_submit_request`]), decode input gathering,
+//!   commit/finish bookkeeping and mid-flight cancellation. The
+//!   engines own their modules/weights/KV buffers; everything
+//!   request-shaped lives here, written once.
 //! * [`build_engine`] — the single factory from [`ServeConfig`] /
 //!   [`EngineKind`] to a boxed engine. Every driver goes through it,
 //!   so adding an engine kind is one new arm here, not a change to
-//!   server/bench/eval code.
+//!   server/bench/eval code. The configured scheduling policy and
+//!   admission SLO are applied here too, so every engine kind honors
+//!   `--sched` and the shedding thresholds identically.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
-use crate::config::{EngineKind, ServeConfig};
+use crate::config::{EngineKind, SchedKind, ServeConfig, SloConfig};
 use crate::costmodel::CostModel;
 use crate::error::{QspecError, Result};
 use crate::kvcache::SlotManager;
@@ -41,9 +46,10 @@ use crate::runtime::Session;
 
 use super::autoregressive::ArEngine;
 use super::eagle::{EagleConfig, EagleEngine};
-use super::queue::FcfsQueue;
+use super::queue::{build_policy, SchedPolicy};
 use super::request::{
-    FinishReason, Finished, GenerationRequest, Request, StepEvent,
+    FinishReason, Finished, GenerationRequest, Overload, Request, StepEvent,
+    NUM_PRIORITY_CLASSES,
 };
 use super::spec_decode::{QSpecConfig, QSpecEngine};
 use super::SimilaritySample;
@@ -51,6 +57,16 @@ use super::SimilaritySample;
 /// Stuck-guard ceiling for [`Engine::run_to_completion`]: no legitimate
 /// run takes this many scheduling steps (AR emits >= 1 token per step).
 pub const MAX_SCHED_STEPS: usize = 5_000_000;
+
+/// Sliding window of recent per-admission queue waits backing the live
+/// p99 signal the admission SLO reads. Unlike the cumulative
+/// `metrics.queue_wait` histogram it describes only the *current
+/// backlog episode*: the window is cleared whenever the queue fully
+/// drains, so a past burst cannot keep the engine shedding after the
+/// overload is gone (samples are only recorded at admission — without
+/// the reset, an all-sheddable workload could never record the fresh
+/// low waits that would clear the signal).
+const RECENT_WAIT_WINDOW: usize = 256;
 
 /// Object-safe engine contract. `&mut dyn Engine` is all the server
 /// loop, bench runner and evalsuite ever see.
@@ -82,9 +98,21 @@ pub trait Engine {
     }
 
     /// Enqueue a full request (prompt token ids + per-request sampling
-    /// params); returns its engine-assigned id.
+    /// params + QoS); returns its engine-assigned id. Never sheds —
+    /// offline drivers (benches, evalsuite, CLI) keep unconditional
+    /// admission; the server goes through [`Engine::try_submit_request`].
     fn submit_request(&mut self, req: GenerationRequest) -> u64 {
         self.core_mut().submit_request(req)
+    }
+
+    /// Admission-controlled submit: rejects with a structured
+    /// [`Overload`] when the engine is past its SLO and the request's
+    /// priority class is below the shed threshold.
+    fn try_submit_request(
+        &mut self,
+        req: GenerationRequest,
+    ) -> std::result::Result<u64, Overload> {
+        self.core_mut().try_submit_request(req)
     }
 
     /// Legacy convenience: greedy request with a generation budget.
@@ -113,14 +141,29 @@ pub trait Engine {
         &self.core().cost
     }
 
-    /// Requests waiting in the FCFS queue (not yet admitted to a slot).
+    /// Requests waiting in the admission queue (not yet in a slot).
     fn queue_depth(&self) -> usize {
         self.core().queue_depth()
+    }
+
+    /// Queued requests per priority class (stats surface).
+    fn queue_depth_by_priority(&self) -> [usize; NUM_PRIORITY_CLASSES] {
+        self.core().queue_depth_by_priority()
+    }
+
+    /// Name of the active scheduling policy ("fcfs", "priority", ...).
+    fn sched_name(&self) -> &'static str {
+        self.core().sched_name()
     }
 
     /// Requests currently generating in a slot.
     fn active_requests(&self) -> usize {
         self.core().slots.active_count()
+    }
+
+    /// Total generation slots (the continuous-batching capacity).
+    fn slot_capacity(&self) -> usize {
+        self.core().batch()
     }
 
     /// Age of the oldest still-queued request (0 when idle) — the
@@ -185,16 +228,23 @@ pub struct StepBatch {
     pub mean_ctx: usize,
 }
 
-/// Shared continuous-batching state + logic for every engine: the FCFS
-/// queue, the slot table, metrics and the virtual-clock cost model,
-/// plus the request lifecycle (id assignment -> queue wait -> admission
-/// -> commit -> finish/cancel) written exactly once.
+/// Shared continuous-batching state + logic for every engine: the
+/// admission queue (any [`SchedPolicy`]), the slot table, metrics and
+/// the virtual-clock cost model, plus the request lifecycle
+/// (id assignment -> SLO admission check -> queue wait -> admission
+/// [with deadline expiry] -> commit -> finish/cancel) written exactly
+/// once.
 #[derive(Debug)]
 pub struct BatchCore {
     pub slots: SlotManager,
     /// private so `submit` stays the sole id authority (direct pushes
     /// would skip id assignment and lifecycle tracking).
-    queue: FcfsQueue,
+    queue: Box<dyn SchedPolicy>,
+    /// admission SLO thresholds (shedding disabled by default).
+    slo: SloConfig,
+    /// sliding window of recent queue waits (ns) — the live p99 signal
+    /// the SLO check reads.
+    recent_waits: VecDeque<u64>,
     pub metrics: EngineMetrics,
     pub cost: CostModel,
     /// Sole id authority: every request gets a fresh id here, so ids
@@ -208,7 +258,9 @@ impl BatchCore {
     pub fn new(slots: SlotManager, cost: CostModel) -> Self {
         BatchCore {
             slots,
-            queue: FcfsQueue::new(),
+            queue: build_policy(SchedKind::Fcfs),
+            slo: SloConfig::default(),
+            recent_waits: VecDeque::new(),
             metrics: EngineMetrics::new(),
             cost,
             next_id: 0,
@@ -220,6 +272,32 @@ impl BatchCore {
         self.slots.batch()
     }
 
+    /// Swap the admission policy. Anything already queued is drained
+    /// into the new policy (in the old policy's pop order), so a
+    /// mid-flight swap never loses requests; `build_engine` calls this
+    /// at construction, when the queue is empty.
+    pub fn set_policy(&mut self, mut policy: Box<dyn SchedPolicy>) {
+        while let Some(r) = self.queue.pop_next() {
+            policy.push(r);
+        }
+        self.queue = policy;
+    }
+
+    /// Install the admission SLO ([`BatchCore::try_submit_request`]
+    /// enforces it).
+    pub fn set_slo(&mut self, slo: SloConfig) {
+        self.slo = slo;
+    }
+
+    pub fn slo(&self) -> &SloConfig {
+        &self.slo
+    }
+
+    /// Name of the active scheduling policy.
+    pub fn sched_name(&self) -> &'static str {
+        self.queue.name()
+    }
+
     /// Enqueue a greedy request (legacy form); assigns the id and
     /// starts the latency clock.
     pub fn submit(&mut self, prompt: Vec<i32>, max_tokens: usize) -> u64 {
@@ -228,18 +306,90 @@ impl BatchCore {
 
     /// Enqueue a full request; assigns the id and starts the latency
     /// clock. Params are taken as-is — wire-level validation happens at
-    /// the server parse layer.
+    /// the server parse layer. Never sheds.
     pub fn submit_request(&mut self, req: GenerationRequest) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
         let prompt_tokens = req.prompt.len();
-        let r = Request::with_params(id, req.prompt, req.params);
+        let r = Request::from_generation(id, req);
         self.inflight.insert(
             id,
             Inflight { submitted: r.arrival, queue_ns: 0, prompt_tokens },
         );
-        self.queue.push_request(r);
+        self.queue.push(r);
         id
+    }
+
+    /// Admission-controlled submit: when the engine is past its SLO
+    /// (queue depth or live p99 queue wait) and the request's priority
+    /// class is below the shed threshold, reject instead of queueing
+    /// into a wait the request cannot meet. Priorities at/above the
+    /// threshold are always admitted.
+    pub fn try_submit_request(
+        &mut self,
+        req: GenerationRequest,
+    ) -> std::result::Result<u64, Overload> {
+        if req.priority >= self.slo.shed_below_priority {
+            // at/above the shed threshold: always admitted
+            return Ok(self.submit_request(req));
+        }
+        if let Some(ov) = self.overload() {
+            self.metrics.shed += 1;
+            return Err(ov);
+        }
+        Ok(self.submit_request(req))
+    }
+
+    /// The overload signal behind admission shedding: `Some` when a
+    /// configured SLO threshold is crossed. Depth is instantaneous;
+    /// the wait signal is the p99 over this backlog episode's recent
+    /// admissions combined with the age of the oldest request still
+    /// queued (which a wait histogram alone cannot see — a wedged
+    /// queue admits nothing, so it records nothing). Checks are
+    /// ordered cheapest first (depth, then the bounded window, then
+    /// the O(queue) age scan) so a saturated engine answers sheds
+    /// without walking the whole backlog in the common case.
+    pub fn overload(&self) -> Option<Overload> {
+        if let Some(cap) = self.slo.max_queue_depth {
+            let depth = self.queue.len();
+            if depth >= cap {
+                return Some(Overload {
+                    retry_after_ms: self.slo.retry_after_ms,
+                    message: format!("queue depth {depth} >= SLO limit {cap}"),
+                });
+            }
+        }
+        if self.queue.is_empty() {
+            // no backlog: a new request is next in line regardless of
+            // what this episode's wait samples say
+            return None;
+        }
+        let slo_ms = self.slo.p99_queue_wait_ms?;
+        let p99_ms = self.recent_queue_p99_ns() as f64 / 1e6;
+        if p99_ms > slo_ms {
+            return Some(Overload {
+                retry_after_ms: self.slo.retry_after_ms,
+                message: format!("p99 queue wait {p99_ms:.1} ms > SLO {slo_ms:.1} ms"),
+            });
+        }
+        let oldest_ms = self.oldest_queued_ns() as f64 / 1e6;
+        if oldest_ms > slo_ms {
+            return Some(Overload {
+                retry_after_ms: self.slo.retry_after_ms,
+                message: format!(
+                    "oldest queued request waiting {oldest_ms:.1} ms > SLO {slo_ms:.1} ms"
+                ),
+            });
+        }
+        None
+    }
+
+    /// p99 of the current backlog episode's wait window (0 when empty,
+    /// i.e. after a full drain).
+    pub fn recent_queue_p99_ns(&self) -> u64 {
+        let mut w: Vec<u64> = self.recent_waits.iter().copied().collect();
+        w.sort_unstable();
+        crate::util::stats::percentile_sorted(&w, 99.0)
     }
 
     pub fn has_work(&self) -> bool {
@@ -250,32 +400,72 @@ impl BatchCore {
         self.queue.len()
     }
 
+    /// Queued requests per priority class (the `stats` op reports
+    /// these so operators can see *who* is waiting, not just how many).
+    pub fn queue_depth_by_priority(&self) -> [usize; NUM_PRIORITY_CLASSES] {
+        let mut depths = [0usize; NUM_PRIORITY_CLASSES];
+        self.queue.for_each(&mut |r| {
+            depths[(r.priority as usize).min(NUM_PRIORITY_CLASSES - 1)] += 1;
+        });
+        depths
+    }
+
     /// Age of the oldest still-queued request (0 if the queue is empty)
-    /// — queue-pressure signal for logs and reports.
+    /// — queue-pressure signal for logs, reports and the SLO check.
+    /// Computed over the whole queue: under non-FCFS policies the next
+    /// request to admit is not necessarily the oldest.
     pub fn oldest_queued_ns(&self) -> u128 {
-        self.queue
-            .peek()
-            .map(|r| r.arrival.elapsed().as_nanos())
-            .unwrap_or(0)
+        let mut oldest = 0u128;
+        self.queue.for_each(&mut |r| {
+            oldest = oldest.max(r.arrival.elapsed().as_nanos());
+        });
+        oldest
     }
 
     /// Admit as many queued requests as there are free slots and pack
     /// the left-padded prompt tensor for a batched prefill call.
-    /// Records queue-wait for each admission. `None` when nothing was
-    /// admitted this round. Empty-prompt requests complete immediately
-    /// with no tokens (a `Done` event is pushed) rather than wedging
-    /// the scheduling loop — the tokenizer always emits BOS, so these
-    /// only arrive through direct `Engine::submit` misuse.
+    /// Records queue-wait for each admission; ticks the scheduling
+    /// policy once (its aging clock). A request whose deadline already
+    /// lapsed while queued is expired here — terminal
+    /// [`FinishReason::DeadlineExceeded`] event, no slot consumed — so
+    /// a missed deadline never burns capacity that a live request
+    /// could use. `None` when nothing was admitted this round.
+    /// Empty-prompt requests complete immediately with no tokens (a
+    /// `Done` event is pushed) rather than wedging the scheduling loop
+    /// — the tokenizer always emits BOS, so these only arrive through
+    /// direct `Engine::submit` misuse.
     pub fn admit_batch(&mut self, out: &mut Vec<StepEvent>) -> Result<Option<PrefillBatch>> {
+        self.queue.on_tick();
         let p = self.slots.prefill_t();
         let b = self.slots.batch();
         let mut admitted = Vec::new();
         while !self.queue.is_empty() && !self.slots.free_slots().is_empty() {
-            let req = self.queue.pop().unwrap();
+            let req = self.queue.pop_next().unwrap();
             let wait_ns = req.arrival.elapsed().as_nanos();
             self.metrics.queue_wait.record(wait_ns as u64);
+            self.recent_waits.push_back(wait_ns as u64);
+            if self.recent_waits.len() > RECENT_WAIT_WINDOW {
+                self.recent_waits.pop_front();
+            }
             if let Some(inf) = self.inflight.get_mut(&req.id) {
                 inf.queue_ns = wait_ns;
+            }
+            if req.expired() {
+                // missed deadline: expire instead of admitting
+                let (latency_ns, prompt_tokens) = match self.inflight.remove(&req.id) {
+                    Some(inf) => (inf.submitted.elapsed().as_nanos(), inf.prompt_tokens),
+                    None => (wait_ns, req.prompt.len()),
+                };
+                self.metrics.deadline_expired += 1;
+                out.push(StepEvent::Done(Finished {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    finish_reason: FinishReason::DeadlineExceeded,
+                    prompt_tokens,
+                    latency_ns,
+                    queue_ns: wait_ns,
+                }));
+                continue;
             }
             if req.prompt.is_empty() {
                 let (latency_ns, queue_ns) = match self.inflight.remove(&req.id) {
@@ -302,6 +492,11 @@ impl BatchCore {
                 req.params.stop.clone(),
             )?;
             admitted.push((idx, req));
+        }
+        if self.queue.is_empty() {
+            // backlog fully drained: this episode's wait samples must
+            // not keep the overload signal tripped (see RECENT_WAIT_WINDOW)
+            self.recent_waits.clear();
         }
         if admitted.is_empty() {
             return Ok(None);
@@ -436,6 +631,11 @@ impl BatchCore {
     /// `requests_done` / the latency histogram.
     pub fn cancel(&mut self, id: u64) -> Option<Finished> {
         if let Some(req) = self.queue.remove(id) {
+            if self.queue.is_empty() {
+                // a cancel can end the backlog episode too — stale wait
+                // samples must not outlive it (see RECENT_WAIT_WINDOW)
+                self.recent_waits.clear();
+            }
             let queue_ns = req.arrival.elapsed().as_nanos();
             let (latency_ns, prompt_tokens) = match self.inflight.remove(&id) {
                 Some(inf) => (inf.submitted.elapsed().as_nanos(), inf.prompt_tokens),
@@ -471,24 +671,27 @@ impl BatchCore {
 
 /// Build the engine selected by `cfg.engine`. The single place in the
 /// codebase that maps [`EngineKind`] to a concrete engine — server,
-/// CLI, benches, evalsuite and examples all go through here.
+/// CLI, benches, evalsuite and examples all go through here. The
+/// configured scheduling policy (`cfg.sched`) and admission SLO
+/// (`cfg.slo`) are installed on the engine's `BatchCore` here, so
+/// every engine kind honors them without per-engine wiring.
 pub fn build_engine<'s>(
     sess: &'s Session,
     cfg: &ServeConfig,
 ) -> Result<Box<dyn Engine + 's>> {
     cfg.validate()?;
-    match &cfg.engine {
+    let mut engine: Box<dyn Engine + 's> = match &cfg.engine {
         EngineKind::QSpec => {
             let mut q = QSpecConfig::new(&cfg.size, cfg.batch);
             q.scheme = cfg.scheme.clone();
             q.gamma = cfg.gamma;
             q.overwrite = cfg.overwrite;
             q.collect_similarity = cfg.collect_similarity;
-            Ok(Box::new(QSpecEngine::new(sess, q)?))
+            Box::new(QSpecEngine::new(sess, q)?)
         }
-        EngineKind::Ar(mode) => Ok(Box::new(ArEngine::new(
-            sess, &cfg.size, &cfg.scheme, *mode, cfg.batch,
-        )?)),
+        EngineKind::Ar(mode) => {
+            Box::new(ArEngine::new(sess, &cfg.size, &cfg.scheme, *mode, cfg.batch)?)
+        }
         EngineKind::Eagle { tree_k } => {
             // EAGLE keeps its canonical chain depth (gamma = 5); the
             // artifact manifest only exports eagle draft modules at
@@ -496,9 +699,12 @@ pub fn build_engine<'s>(
             let mut e = EagleConfig::new(cfg.batch, *tree_k);
             e.size = cfg.size.clone();
             e.scheme = cfg.scheme.clone();
-            Ok(Box::new(EagleEngine::new(sess, e)?))
+            Box::new(EagleEngine::new(sess, e)?)
         }
-    }
+    };
+    engine.core_mut().set_policy(build_policy(cfg.sched));
+    engine.core_mut().set_slo(cfg.slo.clone());
+    Ok(engine)
 }
 
 #[cfg(test)]
@@ -605,12 +811,12 @@ mod tests {
     }
 
     #[test]
-    fn oldest_queued_uses_peek() {
+    fn oldest_queued_reported_without_popping() {
         let mut c = core(1);
         assert_eq!(c.oldest_queued_ns(), 0);
         c.submit(vec![1], 4);
         // the clock has started; any nonnegative age is fine, the point
-        // is that peek() reports the head without popping it
+        // is that the age is read without disturbing the queue
         let _ = c.oldest_queued_ns();
         assert_eq!(c.queue_depth(), 1);
     }
@@ -744,7 +950,154 @@ mod tests {
         assert_eq!(d.metrics().requests_done, 1);
         assert_eq!(d.name(), "mock");
         assert!(d.max_seq() == 64);
+        assert_eq!(d.sched_name(), "fcfs");
+        assert_eq!(d.slot_capacity(), 1);
         assert!(d.take_samples().is_empty());
         assert!(d.cancel(99).is_none());
+    }
+
+    fn qos(prompt: Vec<i32>, max_tokens: usize, priority: u8) -> GenerationRequest {
+        GenerationRequest::greedy(prompt, max_tokens).with_priority(priority)
+    }
+
+    #[test]
+    fn priority_policy_reorders_admission() {
+        let mut c = core(1);
+        c.set_policy(build_policy(SchedKind::Priority));
+        assert_eq!(c.sched_name(), "priority");
+        c.submit_request(qos(vec![1], 4, 1));
+        c.submit_request(qos(vec![2], 4, 0));
+        let critical = c.submit_request(qos(vec![3], 4, 3));
+        let pb = c.admit_batch(&mut Vec::new()).unwrap().unwrap();
+        assert_eq!(pb.admitted.len(), 1, "one slot -> one admission");
+        assert_eq!(pb.admitted[0].1.id, critical, "highest class admitted first");
+        assert_eq!(c.queue_depth(), 2);
+    }
+
+    #[test]
+    fn sjf_engine_finishes_short_job_first() {
+        let mut e = MockEngine { core: core(1) };
+        e.core.set_policy(build_policy(SchedKind::Sjf));
+        let long = e.submit(vec![1, 2], 10);
+        let short = e.submit(vec![3, 4], 2);
+        let fins = e.run_to_completion().unwrap();
+        assert_eq!(fins.len(), 2);
+        assert_eq!(fins[0].id, short, "SJF runs the short budget first");
+        assert_eq!(fins[1].id, long);
+    }
+
+    #[test]
+    fn deadline_expires_at_admission_without_burning_a_slot() {
+        let mut c = core(2);
+        let id = c.submit_request(
+            GenerationRequest::greedy(vec![1, 2], 8).with_deadline_ms(1),
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let mut out = Vec::new();
+        let pb = c.admit_batch(&mut out).unwrap();
+        assert!(pb.is_none(), "expired request must not reach a slot");
+        assert_eq!(c.slots.active_count(), 0);
+        let f = out
+            .into_iter()
+            .filter_map(StepEvent::into_done)
+            .next()
+            .expect("terminal event for the expired request");
+        assert_eq!(f.id, id);
+        assert_eq!(f.finish_reason, FinishReason::DeadlineExceeded);
+        assert!(f.tokens.is_empty());
+        assert_eq!(f.prompt_tokens, 2);
+        assert!(f.queue_ns > 0);
+        assert_eq!(c.metrics.deadline_expired, 1);
+        assert_eq!(c.metrics.requests_done, 0, "expired != done");
+        assert_eq!(c.metrics.req_latency.count(), 0, "never serviced");
+        assert_eq!(c.metrics.queue_wait.count(), 1, "but it did wait");
+        assert!(!c.has_work());
+    }
+
+    #[test]
+    fn live_deadline_is_admitted_normally() {
+        let mut e = MockEngine { core: core(1) };
+        e.core.set_policy(build_policy(SchedKind::Edf));
+        let id = e.submit_request(
+            GenerationRequest::greedy(vec![1], 2).with_deadline_ms(60_000),
+        );
+        let fins = e.run_to_completion().unwrap();
+        assert_eq!(fins.len(), 1);
+        assert_eq!(fins[0].id, id);
+        assert_eq!(fins[0].finish_reason, FinishReason::Length);
+        assert_eq!(e.metrics().deadline_expired, 0);
+    }
+
+    #[test]
+    fn try_submit_sheds_low_priority_over_depth_slo() {
+        let mut c = core(1);
+        c.set_slo(SloConfig { max_queue_depth: Some(1), ..SloConfig::default() });
+        // below the threshold and the queue is empty: admitted
+        assert!(c.try_submit_request(qos(vec![1], 4, 0)).is_ok());
+        assert_eq!(c.queue_depth(), 1);
+        // depth SLO hit: class 0/1 shed with the configured retry hint
+        let ov = c.try_submit_request(qos(vec![2], 4, 0)).unwrap_err();
+        assert_eq!(ov.retry_after_ms, SloConfig::default().retry_after_ms);
+        assert!(ov.message.contains("queue depth"), "{}", ov.message);
+        assert!(c.try_submit_request(qos(vec![3], 4, 1)).is_err());
+        // at/above shed_below_priority (default 2): always admitted
+        assert!(c.try_submit_request(qos(vec![4], 4, 2)).is_ok());
+        assert!(c.try_submit_request(qos(vec![5], 4, 3)).is_ok());
+        assert_eq!(c.metrics.shed, 2);
+        assert_eq!(c.queue_depth(), 3);
+    }
+
+    #[test]
+    fn overload_p99_signal_sees_wedged_queue() {
+        let mut c = core(1);
+        c.set_slo(SloConfig { p99_queue_wait_ms: Some(1.0), ..SloConfig::default() });
+        assert!(c.overload().is_none(), "idle engine is not overloaded");
+        c.submit(vec![1], 4);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        // nothing was admitted (no wait samples), but the oldest queued
+        // request is 5ms old > the 1ms SLO — and the message names the
+        // signal that actually tripped
+        let ov = c.overload().expect("wedged queue must trip the SLO");
+        assert!(ov.message.contains("oldest queued request"), "{}", ov.message);
+    }
+
+    #[test]
+    fn overload_p99_signal_recovers_once_the_burst_drains() {
+        let mut c = core(2);
+        c.set_slo(SloConfig { p99_queue_wait_ms: Some(1.0), ..SloConfig::default() });
+        c.submit(vec![1], 4);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(c.overload().is_some(), "5ms-old backlog trips the 1ms SLO");
+        // the burst drains: the recorded ~5ms wait sample must not keep
+        // the engine shedding (a shed request never enqueues, so no
+        // fresh admission would ever flush a sticky window)
+        let pb = c.admit_batch(&mut Vec::new()).unwrap();
+        assert!(pb.is_some());
+        assert_eq!(c.queue_depth(), 0);
+        assert!(c.overload().is_none(), "drained engine must stop shedding");
+        assert!(c.try_submit_request(qos(vec![2], 4, 0)).is_ok());
+    }
+
+    #[test]
+    fn queue_depth_by_priority_reports_classes() {
+        let mut c = core(1);
+        c.submit_request(qos(vec![1], 4, 0));
+        c.submit_request(qos(vec![2], 4, 1));
+        c.submit_request(qos(vec![3], 4, 3));
+        c.submit_request(qos(vec![4], 4, 3));
+        assert_eq!(c.queue_depth_by_priority(), [1, 1, 0, 2]);
+    }
+
+    #[test]
+    fn set_policy_preserves_queued_requests() {
+        let mut c = core(2);
+        let a = c.submit(vec![1], 4);
+        let b = c.submit(vec![2], 4);
+        c.set_policy(build_policy(SchedKind::Priority));
+        assert_eq!(c.queue_depth(), 2, "swap must not lose requests");
+        let pb = c.admit_batch(&mut Vec::new()).unwrap().unwrap();
+        let mut ids: Vec<u64> = pb.admitted.iter().map(|(_, r)| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![a, b]);
     }
 }

@@ -6,9 +6,13 @@
 //!                     [`build_engine`] factory every driver (server,
 //!                     CLI, benches, evalsuite) goes through.
 //! * `request`/`queue` — the serving API types ([`GenerationRequest`]
-//!                     with per-request [`SamplingParams`], incremental
-//!                     [`StepEvent`]s, [`FinishReason`]) and the FCFS
-//!                     admission queue (continuous batching).
+//!                     with per-request [`SamplingParams`] + QoS
+//!                     (priority, deadline), incremental
+//!                     [`StepEvent`]s, [`FinishReason`]) and the
+//!                     admission scheduling policies behind the
+//!                     object-safe [`SchedPolicy`] trait (FCFS /
+//!                     priority-with-aging / SJF / EDF continuous
+//!                     batching).
 //! * `acceptance`    — the draft-verify acceptance policies.
 //! * `spec_decode`   — the QSPEC engine: W4A4 fused drafting, W4A16
 //!                     parallel verification, KV-cache overwriting.
@@ -28,9 +32,13 @@ pub use acceptance::{greedy_accept, AcceptDecision};
 pub use autoregressive::ArEngine;
 pub use eagle::{EagleConfig, EagleEngine};
 pub use engine::{build_engine, BatchCore, Engine, PrefillBatch, StepBatch};
-pub use queue::FcfsQueue;
+pub use queue::{
+    build_policy, EdfPolicy, FcfsPolicy, PriorityPolicy, SchedPolicy, SjfPolicy,
+    AGING_TICKS_PER_LEVEL,
+};
 pub use request::{
-    FinishReason, Finished, GenerationRequest, Request, SamplingParams, StepEvent,
+    FinishReason, Finished, GenerationRequest, Overload, Request, SamplingParams, StepEvent,
+    DEFAULT_PRIORITY, MAX_PRIORITY, NUM_PRIORITY_CLASSES,
 };
 pub use spec_decode::{QSpecConfig, QSpecEngine};
 

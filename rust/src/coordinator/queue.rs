@@ -1,92 +1,471 @@
-//! FCFS admission queue (the paper serves all requests first-come,
-//! first-served with ORCA-style continuous batch refill).
+//! Admission scheduling policies behind the object-safe [`SchedPolicy`]
+//! trait (the queue half of the QoS surface; protocol v1.1).
 //!
-//! The queue is pure ordering: request ids are assigned by the engine's
-//! `BatchCore` (the sole id authority), which closes the old collision
-//! window where `push` and `push_request` could hand out overlapping
-//! ids.
+//! The paper serves all requests first-come-first-served with
+//! ORCA-style continuous batch refill; [`FcfsPolicy`] keeps that exact
+//! behavior and stays the default. Three more policies reorder
+//! admission using the QoS fields requests now carry:
+//!
+//! * [`PriorityPolicy`] — strict priority classes with aging: a queued
+//!   request gains one effective priority level per
+//!   [`AGING_TICKS_PER_LEVEL`] scheduler rounds, so a sustained stream
+//!   of high-priority traffic cannot starve the background class
+//!   forever. Ties (same effective priority) break FCFS.
+//! * [`SjfPolicy`] — shortest-job-first with `max_tokens` as the
+//!   service-time proxy (decode cost is linear in generated tokens);
+//!   ties break FCFS.
+//! * [`EdfPolicy`] — earliest-deadline-first over the absolute
+//!   deadlines resolved at submission; deadline-less requests run after
+//!   any deadlined ones, FCFS among themselves.
+//!
+//! The queue stays pure ordering: request ids are assigned by the
+//! engine's `BatchCore` (the sole id authority), which also owns the
+//! *semantics* around the queue — deadline expiry at admission,
+//! SLO-based shedding before push — so every policy composes with them
+//! identically. `on_tick` is the only time signal a policy sees: the
+//! core calls it once per scheduling round, which keeps aging
+//! deterministic and wall-clock-free (testable without sleeping).
 
 use std::collections::VecDeque;
 
-use super::request::Request;
+use crate::config::SchedKind;
 
-/// First-come-first-served queue; admission order is arrival order.
+use super::request::{Request, MAX_PRIORITY};
+
+/// Scheduler rounds a queued request must survive to gain one effective
+/// priority level under [`PriorityPolicy`] aging. At a typical ~ms
+/// scheduling cadence this promotes a starved background request every
+/// few hundred ms; a class-0 request reaches the top class (and then
+/// wins its FCFS tie against younger peers) within
+/// `MAX_PRIORITY * AGING_TICKS_PER_LEVEL` rounds.
+pub const AGING_TICKS_PER_LEVEL: u64 = 64;
+
+/// Object-safe admission-ordering contract. `BatchCore` holds a
+/// `Box<dyn SchedPolicy>` and never knows which ordering is active;
+/// policies never see slots, metrics or the wall clock.
+pub trait SchedPolicy: std::fmt::Debug {
+    /// Short stable name ("fcfs", "priority", ...) for stats frames.
+    fn name(&self) -> &'static str;
+
+    /// Enqueue a request (id already assigned by the caller).
+    fn push(&mut self, r: Request);
+
+    /// Remove and return the next request to admit.
+    fn pop_next(&mut self) -> Option<Request>;
+
+    /// The request `pop_next` would return, without removing it.
+    fn peek_next(&self) -> Option<&Request>;
+
+    /// Remove a queued request by id (cancellation before admission);
+    /// relative order of the remaining requests is preserved.
+    fn remove(&mut self, id: u64) -> Option<Request>;
+
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// One scheduling round elapsed (aging hook; default no-op).
+    fn on_tick(&mut self) {}
+
+    /// Visit every queued request (stats: per-priority depths, oldest
+    /// queued age). Visit order is unspecified.
+    fn for_each(&self, f: &mut dyn FnMut(&Request));
+}
+
+/// Build the policy selected by config (`--sched` on the CLI).
+pub fn build_policy(kind: SchedKind) -> Box<dyn SchedPolicy> {
+    match kind {
+        SchedKind::Fcfs => Box::new(FcfsPolicy::new()),
+        SchedKind::Priority => Box::new(PriorityPolicy::new()),
+        SchedKind::Sjf => Box::new(SjfPolicy::new()),
+        SchedKind::Edf => Box::new(EdfPolicy::new()),
+    }
+}
+
+/// First-come-first-served; admission order is arrival order (the
+/// paper's setup and the legacy-compatible default).
 #[derive(Debug, Default)]
-pub struct FcfsQueue {
+pub struct FcfsPolicy {
     q: VecDeque<Request>,
 }
 
-impl FcfsQueue {
+impl FcfsPolicy {
     pub fn new() -> Self {
         Self::default()
     }
+}
 
-    /// Enqueue a request (id already assigned by the caller).
-    pub fn push_request(&mut self, r: Request) {
+impl SchedPolicy for FcfsPolicy {
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn push(&mut self, r: Request) {
         self.q.push_back(r);
     }
 
-    pub fn pop(&mut self) -> Option<Request> {
+    fn pop_next(&mut self) -> Option<Request> {
         self.q.pop_front()
     }
 
-    /// The request at the head of the queue (next to be admitted) —
-    /// queue-age reporting reads its arrival time without popping.
-    pub fn peek(&self) -> Option<&Request> {
+    fn peek_next(&self) -> Option<&Request> {
         self.q.front()
     }
 
-    /// Remove a queued request by id (cancellation before admission);
-    /// order of the remaining requests is preserved.
-    pub fn remove(&mut self, id: u64) -> Option<Request> {
+    fn remove(&mut self, id: u64) -> Option<Request> {
         let pos = self.q.iter().position(|r| r.id == id)?;
         self.q.remove(pos)
     }
 
-    pub fn len(&self) -> usize {
+    fn len(&self) -> usize {
         self.q.len()
     }
 
-    pub fn is_empty(&self) -> bool {
-        self.q.is_empty()
+    fn for_each(&self, f: &mut dyn FnMut(&Request)) {
+        for r in &self.q {
+            f(r);
+        }
+    }
+}
+
+/// A queued entry under a comparison-based policy: `seq` is the
+/// FCFS tie-breaker (push order), `ticks` the scheduler rounds spent
+/// queued (read only by priority aging).
+#[derive(Debug)]
+struct Entry {
+    seq: u64,
+    ticks: u64,
+    req: Request,
+}
+
+/// The shared store behind every comparison-based policy
+/// (priority / SJF / EDF): push, remove, length, iteration and aging
+/// written once — a policy contributes only its ordering key.
+#[derive(Debug, Default)]
+struct OrderedQueue {
+    entries: Vec<Entry>,
+    next_seq: u64,
+}
+
+impl OrderedQueue {
+    fn push(&mut self, r: Request) {
+        self.entries.push(Entry { seq: self.next_seq, ticks: 0, req: r });
+        self.next_seq += 1;
+    }
+
+    /// Index of the entry to admit next: minimal by `key`, ties broken
+    /// by lowest `seq` (FCFS).
+    fn best<K: Ord>(&self, key: impl Fn(&Entry) -> K) -> Option<usize> {
+        self.entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| (key(e), e.seq))
+            .map(|(i, _)| i)
+    }
+
+    fn pop_best<K: Ord>(&mut self, key: impl Fn(&Entry) -> K) -> Option<Request> {
+        let i = self.best(key)?;
+        Some(self.entries.remove(i).req)
+    }
+
+    fn peek_best<K: Ord>(&self, key: impl Fn(&Entry) -> K) -> Option<&Request> {
+        self.best(key).map(|i| &self.entries[i].req)
+    }
+
+    fn remove(&mut self, id: u64) -> Option<Request> {
+        let i = self.entries.iter().position(|e| e.req.id == id)?;
+        Some(self.entries.remove(i).req)
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    fn tick(&mut self) {
+        for e in &mut self.entries {
+            e.ticks += 1;
+        }
+    }
+
+    fn for_each(&self, f: &mut dyn FnMut(&Request)) {
+        for e in &self.entries {
+            f(&e.req);
+        }
+    }
+}
+
+/// Strict priority with aging (see [`AGING_TICKS_PER_LEVEL`]).
+#[derive(Debug, Default)]
+pub struct PriorityPolicy {
+    q: OrderedQueue,
+}
+
+impl PriorityPolicy {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ordering key: the negated *effective* priority — the request's
+    /// class plus one level per aging window queued, capped at the top
+    /// class — so the `best` minimum is the most urgent entry.
+    fn key(e: &Entry) -> u64 {
+        let effective =
+            (e.req.priority as u64 + e.ticks / AGING_TICKS_PER_LEVEL).min(MAX_PRIORITY as u64);
+        MAX_PRIORITY as u64 - effective
+    }
+}
+
+impl SchedPolicy for PriorityPolicy {
+    fn name(&self) -> &'static str {
+        "priority"
+    }
+
+    fn push(&mut self, r: Request) {
+        self.q.push(r);
+    }
+
+    fn pop_next(&mut self) -> Option<Request> {
+        self.q.pop_best(Self::key)
+    }
+
+    fn peek_next(&self) -> Option<&Request> {
+        self.q.peek_best(Self::key)
+    }
+
+    fn remove(&mut self, id: u64) -> Option<Request> {
+        self.q.remove(id)
+    }
+
+    fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    fn on_tick(&mut self) {
+        self.q.tick();
+    }
+
+    fn for_each(&self, f: &mut dyn FnMut(&Request)) {
+        self.q.for_each(f);
+    }
+}
+
+/// Shortest-job-first by `max_tokens` (the generation budget bounds
+/// decode service time). No aging: a steady stream of short jobs can
+/// starve long ones — pair with a deadline or priority traffic class if
+/// that matters for the workload.
+#[derive(Debug, Default)]
+pub struct SjfPolicy {
+    q: OrderedQueue,
+}
+
+impl SjfPolicy {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn key(e: &Entry) -> usize {
+        e.req.params.max_tokens
+    }
+}
+
+impl SchedPolicy for SjfPolicy {
+    fn name(&self) -> &'static str {
+        "sjf"
+    }
+
+    fn push(&mut self, r: Request) {
+        self.q.push(r);
+    }
+
+    fn pop_next(&mut self) -> Option<Request> {
+        self.q.pop_best(Self::key)
+    }
+
+    fn peek_next(&self) -> Option<&Request> {
+        self.q.peek_best(Self::key)
+    }
+
+    fn remove(&mut self, id: u64) -> Option<Request> {
+        self.q.remove(id)
+    }
+
+    fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    fn for_each(&self, f: &mut dyn FnMut(&Request)) {
+        self.q.for_each(f);
+    }
+}
+
+/// Earliest-deadline-first. Deadlines are absolute instants resolved at
+/// submission; `None` sorts after every deadline (then FCFS). The
+/// policy only *orders* — an already-missed deadline is expired by the
+/// core at admission time (`FinishReason::DeadlineExceeded`), never
+/// handed a slot.
+#[derive(Debug, Default)]
+pub struct EdfPolicy {
+    q: OrderedQueue,
+}
+
+impl EdfPolicy {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `Option<Instant>` with None-last ordering.
+    fn key(e: &Entry) -> (bool, Option<std::time::Instant>) {
+        (e.req.deadline.is_none(), e.req.deadline)
+    }
+}
+
+impl SchedPolicy for EdfPolicy {
+    fn name(&self) -> &'static str {
+        "edf"
+    }
+
+    fn push(&mut self, r: Request) {
+        self.q.push(r);
+    }
+
+    fn pop_next(&mut self) -> Option<Request> {
+        self.q.pop_best(Self::key)
+    }
+
+    fn peek_next(&self) -> Option<&Request> {
+        self.q.peek_best(Self::key)
+    }
+
+    fn remove(&mut self, id: u64) -> Option<Request> {
+        self.q.remove(id)
+    }
+
+    fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    fn for_each(&self, f: &mut dyn FnMut(&Request)) {
+        self.q.for_each(f);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::SamplingParams;
+
+    fn req(id: u64, priority: u8, max_tokens: usize, deadline_ms: Option<u64>) -> Request {
+        Request::with_qos(id, vec![1], SamplingParams::greedy(max_tokens), priority, deadline_ms)
+    }
+
+    fn drain(p: &mut dyn SchedPolicy) -> Vec<u64> {
+        std::iter::from_fn(|| p.pop_next()).map(|r| r.id).collect()
+    }
 
     #[test]
     fn fcfs_order_preserved() {
-        let mut q = FcfsQueue::new();
-        q.push_request(Request::new(0, vec![1], 4));
-        q.push_request(Request::new(1, vec![2], 4));
-        assert_eq!(q.pop().unwrap().id, 0);
-        assert_eq!(q.pop().unwrap().id, 1);
-        assert!(q.pop().is_none());
+        let mut q = FcfsPolicy::new();
+        q.push(Request::new(0, vec![1], 4));
+        q.push(Request::new(1, vec![2], 4));
+        assert_eq!(q.pop_next().unwrap().id, 0);
+        assert_eq!(q.pop_next().unwrap().id, 1);
+        assert!(q.pop_next().is_none());
     }
 
     #[test]
     fn remove_preserves_order_of_rest() {
-        let mut q = FcfsQueue::new();
+        let mut q = FcfsPolicy::new();
         for id in 0..4 {
-            q.push_request(Request::new(id, vec![1], 4));
+            q.push(Request::new(id, vec![1], 4));
         }
         assert_eq!(q.remove(2).unwrap().id, 2);
         assert!(q.remove(2).is_none());
-        let ids: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
-        assert_eq!(ids, vec![0, 1, 3]);
+        assert_eq!(drain(&mut q), vec![0, 1, 3]);
     }
 
     #[test]
-    fn peek_reports_head_without_popping() {
-        let mut q = FcfsQueue::new();
-        assert!(q.peek().is_none());
-        q.push_request(Request::new(7, vec![1], 4));
-        q.push_request(Request::new(8, vec![2], 4));
-        assert_eq!(q.peek().unwrap().id, 7);
-        assert_eq!(q.len(), 2);
-        q.pop();
-        assert_eq!(q.peek().unwrap().id, 8);
+    fn peek_reports_next_without_popping() {
+        for kind in SchedKind::ALL {
+            let mut q = build_policy(kind);
+            assert!(q.peek_next().is_none());
+            q.push(req(7, 1, 4, None));
+            q.push(req(8, 1, 4, None));
+            let want = q.peek_next().unwrap().id;
+            assert_eq!(q.len(), 2, "{}", q.name());
+            assert_eq!(q.pop_next().unwrap().id, want, "{}", q.name());
+        }
+    }
+
+    #[test]
+    fn priority_pops_highest_class_first_fifo_within() {
+        let mut q = PriorityPolicy::new();
+        q.push(req(0, 1, 4, None));
+        q.push(req(1, 3, 4, None));
+        q.push(req(2, 0, 4, None));
+        q.push(req(3, 3, 4, None));
+        q.push(req(4, 2, 4, None));
+        assert_eq!(drain(&mut q), vec![1, 3, 4, 0, 2]);
+    }
+
+    #[test]
+    fn priority_aging_promotes_starved_request() {
+        let mut q = PriorityPolicy::new();
+        q.push(req(0, 0, 4, None)); // background, first in
+        for _ in 0..AGING_TICKS_PER_LEVEL * MAX_PRIORITY as u64 {
+            q.on_tick();
+        }
+        // fully aged: reaches the top class and wins the FCFS tie
+        q.push(req(1, MAX_PRIORITY, 4, None));
+        assert_eq!(q.pop_next().unwrap().id, 0);
+        assert_eq!(q.pop_next().unwrap().id, 1);
+    }
+
+    #[test]
+    fn sjf_pops_shortest_budget_first() {
+        let mut q = SjfPolicy::new();
+        q.push(req(0, 1, 32, None));
+        q.push(req(1, 1, 4, None));
+        q.push(req(2, 1, 16, None));
+        q.push(req(3, 1, 4, None)); // tie with 1 -> FCFS
+        assert_eq!(drain(&mut q), vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn edf_pops_earliest_deadline_first_none_last() {
+        let mut q = EdfPolicy::new();
+        q.push(req(0, 1, 4, None));
+        q.push(req(1, 1, 4, Some(50_000)));
+        q.push(req(2, 1, 4, Some(10_000)));
+        q.push(req(3, 1, 4, None)); // deadline-less: FCFS after deadlined
+        assert_eq!(drain(&mut q), vec![2, 1, 0, 3]);
+    }
+
+    #[test]
+    fn for_each_visits_all_and_remove_works_everywhere() {
+        for kind in SchedKind::ALL {
+            let mut q = build_policy(kind);
+            for id in 0..5u64 {
+                q.push(req(id, (id % 4) as u8, 4 + id as usize, Some(1_000 + id * 1_000)));
+            }
+            let mut seen = Vec::new();
+            q.for_each(&mut |r| seen.push(r.id));
+            seen.sort_unstable();
+            assert_eq!(seen, vec![0, 1, 2, 3, 4], "{}", q.name());
+            assert_eq!(q.remove(3).unwrap().id, 3, "{}", q.name());
+            assert!(q.remove(3).is_none(), "{}", q.name());
+            assert_eq!(q.len(), 4, "{}", q.name());
+            let rest = drain(q.as_mut());
+            assert!(!rest.contains(&3), "{}", q.name());
+            assert!(q.is_empty(), "{}", q.name());
+        }
+    }
+
+    #[test]
+    fn build_policy_names_match_labels() {
+        for kind in SchedKind::ALL {
+            assert_eq!(build_policy(kind).name(), kind.label());
+        }
     }
 }

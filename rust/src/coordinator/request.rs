@@ -1,14 +1,26 @@
-//! Request / response types of the serving API (protocol v1).
+//! Request / response types of the serving API (protocol v1.1).
 //!
 //! The serving surface is request/event shaped: callers build a
-//! [`GenerationRequest`] (prompt + per-request [`SamplingParams`]),
-//! engines emit [`StepEvent`]s — a [`StepEvent::Delta`] for every batch
-//! of committed tokens and a terminal [`StepEvent::Done`] carrying the
-//! [`Finished`] usage record with its [`FinishReason`]. The server maps
-//! these 1:1 onto wire frames; offline drivers (benches, evalsuite,
-//! CLI) collect the `Done` events through `Engine::run_to_completion`.
+//! [`GenerationRequest`] (prompt + per-request [`SamplingParams`] +
+//! QoS intent: a validated [`priority`](GenerationRequest::priority)
+//! class and an optional relative deadline), engines emit
+//! [`StepEvent`]s — a [`StepEvent::Delta`] for every batch of committed
+//! tokens and a terminal [`StepEvent::Done`] carrying the [`Finished`]
+//! usage record with its [`FinishReason`]. The server maps these 1:1
+//! onto wire frames; offline drivers (benches, evalsuite, CLI) collect
+//! the `Done` events through `Engine::run_to_completion`.
+//!
+//! QoS semantics: `priority` selects one of [`NUM_PRIORITY_CLASSES`]
+//! classes (higher = more urgent; [`DEFAULT_PRIORITY`] for requests
+//! that don't say). `deadline_ms` is a latency budget relative to
+//! submission; a request whose budget has already lapsed when a slot
+//! would admit it terminates with
+//! [`FinishReason::DeadlineExceeded`] instead of burning the slot.
+//! Both fields only change *ordering/shedding* under a non-FCFS
+//! [`SchedPolicy`](super::queue::SchedPolicy) or an admission SLO —
+//! legacy v1 traffic (all defaults) behaves exactly as before.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::error::{QspecError, Result};
 
@@ -16,6 +28,14 @@ use crate::error::{QspecError, Result};
 /// request cannot make every commit scan arbitrarily long suffixes).
 pub const MAX_STOP_SEQUENCES: usize = 4;
 pub const MAX_STOP_TOKENS: usize = 32;
+
+/// Priority classes of the QoS surface: 0 = batch/background,
+/// 1 = normal (the default), 2 = high, 3 = critical. Higher wins under
+/// the priority scheduler; classes >= the configured shed threshold are
+/// exempt from admission shedding.
+pub const NUM_PRIORITY_CLASSES: usize = 4;
+pub const MAX_PRIORITY: u8 = (NUM_PRIORITY_CLASSES - 1) as u8;
+pub const DEFAULT_PRIORITY: u8 = 1;
 
 /// Per-request sampling / termination parameters.
 ///
@@ -86,17 +106,63 @@ impl SamplingParams {
 pub struct GenerationRequest {
     pub prompt: Vec<i32>,
     pub params: SamplingParams,
+    /// QoS class in `0..NUM_PRIORITY_CLASSES` (higher = more urgent);
+    /// [`DEFAULT_PRIORITY`] when the wire frame omits it, which makes
+    /// every scheduler behave FCFS-equivalently for legacy traffic.
+    pub priority: u8,
+    /// Latency budget relative to submission: the request must reach a
+    /// slot (and finish) within this many ms or it terminates with
+    /// [`FinishReason::DeadlineExceeded`] at admission. `None` = no
+    /// deadline.
+    pub deadline_ms: Option<u64>,
 }
 
 impl GenerationRequest {
     pub fn new(prompt: Vec<i32>, params: SamplingParams) -> Self {
-        GenerationRequest { prompt, params }
+        GenerationRequest { prompt, params, priority: DEFAULT_PRIORITY, deadline_ms: None }
     }
 
     /// The legacy `(prompt, max_tokens)` form: greedy, no stops.
     pub fn greedy(prompt: Vec<i32>, max_tokens: usize) -> Self {
-        GenerationRequest { prompt, params: SamplingParams::greedy(max_tokens) }
+        Self::new(prompt, SamplingParams::greedy(max_tokens))
     }
+
+    /// Builder-style QoS setters (the server parse layer and the CLI
+    /// thread wire fields through these).
+    pub fn with_priority(mut self, priority: u8) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_deadline_ms(mut self, deadline_ms: u64) -> Self {
+        self.deadline_ms = Some(deadline_ms);
+        self
+    }
+
+    /// Full-request validation: sampling params plus the QoS fields.
+    pub fn validate(&self) -> Result<()> {
+        self.params.validate()?;
+        if self.priority > MAX_PRIORITY {
+            return Err(QspecError::Config(format!(
+                "priority {} outside 0..={MAX_PRIORITY}",
+                self.priority
+            )));
+        }
+        if self.deadline_ms == Some(0) {
+            return Err(QspecError::Config("deadline_ms must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Structured admission rejection: the server answers with an
+/// `overloaded` error frame carrying `retry_after_ms` so well-behaved
+/// clients back off instead of hammering a saturated queue.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Overload {
+    pub retry_after_ms: u64,
+    /// which SLO signal tripped, with its observed value.
+    pub message: String,
 }
 
 /// Why a request stopped generating.
@@ -108,6 +174,9 @@ pub enum FinishReason {
     Stop,
     /// cancelled by the client (explicit op or disconnect).
     Cancelled,
+    /// the request's latency budget lapsed while it was still queued;
+    /// expired at admission time without occupying a slot.
+    DeadlineExceeded,
 }
 
 impl FinishReason {
@@ -116,18 +185,23 @@ impl FinishReason {
             FinishReason::Length => "length",
             FinishReason::Stop => "stop",
             FinishReason::Cancelled => "cancelled",
+            FinishReason::DeadlineExceeded => "deadline_exceeded",
         }
     }
 }
 
 /// Internal queued request: id assigned by the engine's `BatchCore`,
-/// arrival stamped at submission.
+/// arrival stamped at submission, deadline resolved to an absolute
+/// instant (EDF orders on it; admission expires on it).
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
     pub prompt: Vec<i32>,
     pub params: SamplingParams,
     pub arrival: Instant,
+    pub priority: u8,
+    /// absolute deadline (`arrival + deadline_ms`); `None` = unbounded.
+    pub deadline: Option<Instant>,
 }
 
 impl Request {
@@ -137,11 +211,34 @@ impl Request {
     }
 
     pub fn with_params(id: u64, prompt: Vec<i32>, params: SamplingParams) -> Self {
-        Request { id, prompt, params, arrival: Instant::now() }
+        Self::with_qos(id, prompt, params, DEFAULT_PRIORITY, None)
+    }
+
+    /// Full constructor: QoS fields resolved at submission time.
+    pub fn with_qos(
+        id: u64,
+        prompt: Vec<i32>,
+        params: SamplingParams,
+        priority: u8,
+        deadline_ms: Option<u64>,
+    ) -> Self {
+        let arrival = Instant::now();
+        let deadline = deadline_ms.map(|ms| arrival + Duration::from_millis(ms));
+        Request { id, prompt, params, arrival, priority, deadline }
+    }
+
+    /// Build the queued form of a submitted [`GenerationRequest`].
+    pub fn from_generation(id: u64, g: GenerationRequest) -> Self {
+        Self::with_qos(id, g.prompt, g.params, g.priority, g.deadline_ms)
     }
 
     pub fn max_tokens(&self) -> usize {
         self.params.max_tokens
+    }
+
+    /// Whether the request's latency budget has already lapsed.
+    pub fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
     }
 }
 
@@ -215,6 +312,7 @@ mod tests {
         assert_eq!(FinishReason::Length.as_str(), "length");
         assert_eq!(FinishReason::Stop.as_str(), "stop");
         assert_eq!(FinishReason::Cancelled.as_str(), "cancelled");
+        assert_eq!(FinishReason::DeadlineExceeded.as_str(), "deadline_exceeded");
     }
 
     #[test]
@@ -222,8 +320,44 @@ mod tests {
         let r = Request::new(3, vec![1, 2], 17);
         assert_eq!(r.max_tokens(), 17);
         assert_eq!(r.params.temperature, 0.0);
+        // legacy requests carry FCFS-equivalent QoS defaults
+        assert_eq!(r.priority, DEFAULT_PRIORITY);
+        assert!(r.deadline.is_none());
+        assert!(!r.expired());
         let g = GenerationRequest::greedy(vec![1], 9);
         assert_eq!(g.params.max_tokens, 9);
+        assert_eq!(g.priority, DEFAULT_PRIORITY);
+        assert!(g.deadline_ms.is_none());
+    }
+
+    #[test]
+    fn qos_validation() {
+        let g = GenerationRequest::greedy(vec![1], 4);
+        assert!(g.validate().is_ok());
+        let g = GenerationRequest::greedy(vec![1], 4).with_priority(MAX_PRIORITY);
+        assert!(g.validate().is_ok());
+        let g = GenerationRequest::greedy(vec![1], 4).with_priority(MAX_PRIORITY + 1);
+        assert!(g.validate().is_err());
+        let g = GenerationRequest::greedy(vec![1], 4).with_deadline_ms(0);
+        assert!(g.validate().is_err());
+        let g = GenerationRequest::greedy(vec![1], 4).with_deadline_ms(250);
+        assert!(g.validate().is_ok());
+        // bad sampling params fail through the same entry point
+        let g = GenerationRequest::new(vec![1], SamplingParams::greedy(0));
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn deadline_resolves_to_absolute_instant_and_expires() {
+        let g = GenerationRequest::greedy(vec![1], 4).with_deadline_ms(60_000);
+        let r = Request::from_generation(5, g);
+        assert_eq!(r.id, 5);
+        assert!(r.deadline.is_some());
+        assert!(!r.expired(), "a 60s budget cannot have lapsed yet");
+        let r = Request::with_qos(6, vec![1], SamplingParams::greedy(4), 2, Some(1));
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(r.expired(), "a 1ms budget lapses");
+        assert_eq!(r.priority, 2);
     }
 
     #[test]

@@ -64,7 +64,11 @@ pub fn exact_match(golds: &[&str], generations: &[String]) -> f64 {
 /// Run a task's eval set through any serving engine; returns
 /// (EM, generations). Engine-generic: the same code path scores QSPEC,
 /// the AR baselines and EAGLE (generation runs through `Engine::step`,
-/// exactly as in serving).
+/// exactly as in serving). Scheduling-policy-generic too: requests are
+/// submitted with default QoS and results re-sorted by their
+/// submission-time ids, so EM is identical under FCFS, priority, SJF
+/// or EDF admission (greedy decoding is order-independent; only
+/// latency shifts).
 pub fn eval_engine(
     engine: &mut dyn Engine,
     tok: &Tokenizer,

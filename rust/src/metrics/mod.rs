@@ -56,6 +56,14 @@ pub struct EngineMetrics {
     /// requests cancelled mid-flight (explicit op or client disconnect);
     /// excluded from `requests_done` and the latency histogram.
     pub cancelled: u64,
+    /// requests rejected at submission by the admission SLO (the
+    /// `overloaded` frame); they never enter the queue.
+    pub shed: u64,
+    /// requests whose deadline had already lapsed when a slot would
+    /// have admitted them (`FinishReason::DeadlineExceeded`); they
+    /// waited in the queue but never ran, so they count in `queue_wait`
+    /// only.
+    pub deadline_expired: u64,
     /// per-request end-to-end latency (wall ns)
     pub req_latency: LogHistogram,
     /// per-request queue wait (submit -> admission, wall ns)
@@ -88,12 +96,21 @@ impl EngineMetrics {
         self.virt_ns.iter().sum()
     }
 
-    /// Token acceptance rate (accepted drafts / drafted).
+    /// Token acceptance rate (accepted drafts / drafted). 0.0 when the
+    /// engine never drafted — prefer [`Self::acceptance_rate_opt`] for
+    /// reporting, which distinguishes "no drafting" from "0% accepted".
     pub fn acceptance_rate(&self) -> f64 {
+        self.acceptance_rate_opt().unwrap_or(0.0)
+    }
+
+    /// Acceptance rate, or `None` for engines that never drafted
+    /// (plain AR): JSON surfaces emit `null` instead of a misleading
+    /// 0.0 that reads as "every draft rejected".
+    pub fn acceptance_rate_opt(&self) -> Option<f64> {
         if self.drafted == 0 {
-            return 0.0;
+            return None;
         }
-        self.accepted as f64 / self.drafted as f64
+        Some(self.accepted as f64 / self.drafted as f64)
     }
 
     /// Wall-clock generation throughput (token/s).
@@ -148,7 +165,10 @@ impl EngineMetrics {
             ("requests_done", num(self.requests_done as f64)),
             ("tokens_out", num(self.tokens_out as f64)),
             ("cancelled", num(self.cancelled as f64)),
-            ("acceptance_rate", num(self.acceptance_rate())),
+            ("shed", num(self.shed as f64)),
+            ("deadline_expired", num(self.deadline_expired as f64)),
+            // null (not 0.0) when the engine never drafted
+            ("acceptance_rate", self.acceptance_rate_opt().map_or(Json::Null, num)),
             ("wall_tok_s", num(self.wall_tokens_per_s())),
             ("virt_tok_s", num(self.virt_tokens_per_s())),
             ("latency_p50_ns", num(self.req_latency.percentile(50.0) as f64)),
@@ -184,6 +204,21 @@ mod tests {
         m.drafted = 10;
         m.accepted = 8;
         assert!((m.acceptance_rate() - 0.8).abs() < 1e-9);
+        assert!((m.acceptance_rate_opt().unwrap() - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn acceptance_rate_is_null_not_zero_when_never_drafted() {
+        let m = EngineMetrics::new();
+        assert!(m.acceptance_rate_opt().is_none());
+        assert_eq!(m.acceptance_rate(), 0.0);
+        // JSON reports null, never a misleading 0.0
+        assert_eq!(m.to_json().get("acceptance_rate"), Some(&Json::Null));
+        let mut m = EngineMetrics::new();
+        m.drafted = 4;
+        m.accepted = 0;
+        // a drafting engine with 0% acceptance still reports the number
+        assert_eq!(m.to_json().get("acceptance_rate"), Some(&num(0.0)));
     }
 
     #[test]
@@ -214,6 +249,8 @@ mod tests {
         assert!(j.get("phases").unwrap().as_arr().unwrap().len() == 5);
         assert!(j.get("queue_p50_ns").is_some());
         assert!(j.get("cancelled").is_some());
+        assert!(j.get("shed").is_some());
+        assert!(j.get("deadline_expired").is_some());
     }
 
     #[test]

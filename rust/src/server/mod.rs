@@ -1,4 +1,4 @@
-//! TCP line-protocol serving frontend (protocol v1).
+//! TCP line-protocol serving frontend (protocol v1.1).
 //!
 //! PJRT handles are not Send, so the engine owns the main thread and
 //! connection threads communicate through channels (a vLLM-style
@@ -10,16 +10,20 @@
 //! The engine loop is engine-generic: it drives any `&mut dyn Engine`
 //! built by `coordinator::build_engine`, so every engine kind —
 //! including the EAGLE baseline — serves over TCP with streaming,
-//! cancellation and per-request sampling params.
+//! cancellation, per-request sampling params and the QoS surface
+//! (priority classes, deadlines, SLO-based admission shedding) under
+//! whichever scheduling policy (`--sched fcfs|priority|sjf|edf`) the
+//! server was started with.
 //!
-//! # Protocol v1 — one JSON object per line, both directions
+//! # Protocol v1.1 — one JSON object per line, both directions
 //!
 //! Three ops, selected by the `"op"` field (absent = `generate`, the
 //! legacy bare-prompt form):
 //!
 //! ```text
 //! generate: {"op":"generate","prompt":"q: g xy ?\n","max_tokens":64,
-//!            "stream":true,"stop":["\n"],"temperature":0,"seed":1}
+//!            "stream":true,"stop":["\n"],"temperature":0,"seed":1,
+//!            "priority":2,"deadline_ms":1500}
 //!   legacy: {"prompt":"q: g xy ?\n","max_tokens":64}
 //! cancel  : {"op":"cancel","id":3}
 //! stats   : {"op":"stats"}
@@ -31,7 +35,13 @@
 //! trimmed from the output on match); `temperature` (number in [0,2])
 //! and `seed` (integer) — accepted and threaded per-request, but the
 //! AOT entries are greedy argmax, so generation currently behaves as
-//! temperature 0.
+//! temperature 0. New in v1.1: `priority` (integer in [0, 3]; 0 =
+//! batch, 1 = normal [the default], 2 = high, 3 = critical) and
+//! `deadline_ms` (integer >= 1): a latency budget relative to
+//! submission — a request still queued when its budget lapses answers
+//! its terminal frame with `finish_reason` `"deadline_exceeded"`
+//! without ever occupying a slot. Legacy v1 frames (neither field)
+//! behave exactly as before under every policy.
 //!
 //! Response frames:
 //!
@@ -43,8 +53,13 @@
 //!                        "text":"...","tokens":17,"latency_ms":12.5,
 //!                        "queue_ms":0.2}
 //! cancel ack          : {"cancelled":3}
-//! stats               : {"engine":"qspec","queue_depth":0,...}
+//! stats               : {"engine":"qspec","sched":"priority",
+//!                        "queue_depth":0,
+//!                        "queue_depth_by_priority":[0,0,0,0],
+//!                        "active":1,"slots":8,...}
 //! error               : {"error":{"code":"bad_request","message":"..."}}
+//! overloaded          : {"error":{"code":"overloaded","message":"...",
+//!                        "retry_after_ms":500}}
 //! ```
 //!
 //! A streaming generate writes one delta line per engine step and a
@@ -64,8 +79,15 @@
 //! [`MAX_STOP_TOKENS`](crate::coordinator::request::MAX_STOP_TOKENS)
 //! tokens each). Error codes: `bad_request` (malformed line — names
 //! the offending field and the type it got — or params that fail
-//! token-level validation) and `not_found` (cancel of an unknown,
-//! finished, or foreign id).
+//! token-level validation), `not_found` (cancel of an unknown,
+//! finished, or foreign id) and `overloaded` (admission shed: the
+//! server is past its configured SLO — queue depth or live p99 queue
+//! wait — and the request's priority class is below the shed
+//! threshold; the frame carries `retry_after_ms` as a backoff hint;
+//! see `SloConfig`). The `stats` snapshot reports the engine name and
+//! active scheduling policy, slot occupancy/capacity, per-priority
+//! queue depths, shed/deadline counters, and `acceptance_rate` as
+//! `null` (not 0) for engines that never draft.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -74,7 +96,8 @@ use std::time::Duration;
 
 use crate::config::ServeConfig;
 use crate::coordinator::{
-    build_engine, Engine, Finished, GenerationRequest, SamplingParams, StepEvent,
+    build_engine, Engine, Finished, GenerationRequest, Overload, SamplingParams, StepEvent,
+    DEFAULT_PRIORITY, MAX_PRIORITY,
 };
 use crate::error::{QspecError, Result};
 use crate::model::Tokenizer;
@@ -89,7 +112,7 @@ pub enum Op {
     Stats,
 }
 
-/// The `generate` op: prompt + wire-level sampling params.
+/// The `generate` op: prompt + wire-level sampling params + QoS.
 #[derive(Clone, Debug, PartialEq)]
 pub struct GenerateOp {
     pub prompt: String,
@@ -98,6 +121,12 @@ pub struct GenerateOp {
     pub temperature: f32,
     pub seed: u64,
     pub stop: Vec<String>,
+    /// v1.1: priority class in [0, MAX_PRIORITY]; DEFAULT_PRIORITY
+    /// when absent (legacy frames).
+    pub priority: u8,
+    /// v1.1: latency budget in ms relative to submission; `None` =
+    /// no deadline (legacy frames).
+    pub deadline_ms: Option<u64>,
 }
 
 /// A message forwarded from a connection thread to the engine loop.
@@ -194,6 +223,23 @@ pub fn parse_op(
                 }
             };
             let seed = opt_uint(&j, "seed")?.unwrap_or(0);
+            let priority = match opt_uint(&j, "priority")? {
+                None => DEFAULT_PRIORITY,
+                Some(v) if v <= MAX_PRIORITY as u64 => v as u8,
+                Some(v) => {
+                    return Err(QspecError::Config(format!(
+                        "field \"priority\": {v} outside 0..={MAX_PRIORITY}"
+                    )))
+                }
+            };
+            let deadline_ms = match opt_uint(&j, "deadline_ms")? {
+                Some(0) => {
+                    return Err(QspecError::Config(
+                        "field \"deadline_ms\": must be >= 1".into(),
+                    ))
+                }
+                other => other,
+            };
             let stop = match j.get("stop") {
                 None => Vec::new(),
                 Some(v) => {
@@ -228,6 +274,8 @@ pub fn parse_op(
                 temperature,
                 seed,
                 stop,
+                priority,
+                deadline_ms,
             }))
         }
         "cancel" => match opt_uint(&j, "id")? {
@@ -294,20 +342,47 @@ pub fn format_error(code: &str, message: &str) -> String {
     .to_string()
 }
 
+/// Structured `overloaded` error line for admission sheds: carries the
+/// SLO signal that tripped and a `retry_after_ms` backoff hint.
+pub fn format_overloaded(ov: &Overload) -> String {
+    obj(vec![(
+        "error",
+        obj(vec![
+            ("code", s("overloaded")),
+            ("message", s(&ov.message)),
+            ("retry_after_ms", num(ov.retry_after_ms as f64)),
+        ]),
+    )])
+    .to_string()
+}
+
 /// The `/stats` surface: a live snapshot straight from
 /// [`EngineMetrics`] plus the queue-pressure signals the engine loop
-/// used to only debug-log.
+/// used to only debug-log. v1.1 adds the engine identity + active
+/// scheduling policy, slot occupancy vs capacity, per-priority queue
+/// depths and the shed/deadline counters; `acceptance_rate` is `null`
+/// (not a misleading 0) for engines that never draft.
 pub fn format_stats(engine: &dyn Engine) -> String {
     let m = engine.metrics();
+    let depths = engine
+        .queue_depth_by_priority()
+        .iter()
+        .map(|&d| num(d as f64))
+        .collect();
     obj(vec![
         ("engine", s(engine.name())),
+        ("sched", s(engine.sched_name())),
         ("queue_depth", num(engine.queue_depth() as f64)),
+        ("queue_depth_by_priority", Json::Arr(depths)),
         ("oldest_queued_ms", num(engine.oldest_queued_ns() as f64 / 1e6)),
         ("active", num(engine.active_requests() as f64)),
+        ("slots", num(engine.slot_capacity() as f64)),
         ("requests_done", num(m.requests_done as f64)),
         ("cancelled", num(m.cancelled as f64)),
+        ("shed", num(m.shed as f64)),
+        ("deadline_expired", num(m.deadline_expired as f64)),
         ("tokens_out", num(m.tokens_out as f64)),
-        ("acceptance_rate", num(m.acceptance_rate())),
+        ("acceptance_rate", m.acceptance_rate_opt().map_or(Json::Null, num)),
         ("wall_tok_s", num(m.wall_tokens_per_s())),
         ("virt_tok_s", num(m.virt_tokens_per_s())),
         ("queue_p50_ms", num(m.queue_wait.percentile(50.0) as f64 / 1e6)),
@@ -388,9 +463,11 @@ pub fn serve(sess: &Session, cfg: &ServeConfig) -> Result<()> {
 
     let listener = TcpListener::bind(("127.0.0.1", cfg.port))?;
     println!(
-        "qspec listening on 127.0.0.1:{} (engine={}, protocol v1)",
+        "qspec listening on 127.0.0.1:{} (engine={}, sched={}, slo={}, protocol v1.1)",
         cfg.port,
-        engine.name()
+        engine.name(),
+        engine.sched_name(),
+        if cfg.slo.enabled() { "on" } else { "off" },
     );
     let (tx, rx) = mpsc::channel::<Inbound>();
     std::thread::spawn(move || {
@@ -502,14 +579,27 @@ fn handle_inbound(
                 temperature: g.temperature,
                 seed: g.seed,
             };
+            let mut req = GenerationRequest::new(prompt, params).with_priority(g.priority);
+            if let Some(ms) = g.deadline_ms {
+                req = req.with_deadline_ms(ms);
+            }
             // wire-level validation: the parse layer bounds characters,
             // this bounds the encoded token form (e.g. MAX_STOP_TOKENS)
-            if let Err(e) = params.validate() {
+            // and the QoS fields
+            if let Err(e) = req.validate() {
                 let _ = resp.send(format_error("bad_request", &e.to_string()));
                 return;
             }
-            let id = engine.submit_request(GenerationRequest::new(prompt, params));
-            responders.insert(id, Responder { conn, stream: g.stream, tx: resp });
+            // admission control: past the SLO, sheddable classes get a
+            // structured overloaded frame instead of a queue slot
+            match engine.try_submit_request(req) {
+                Ok(id) => {
+                    responders.insert(id, Responder { conn, stream: g.stream, tx: resp });
+                }
+                Err(ov) => {
+                    let _ = resp.send(format_overloaded(&ov));
+                }
+            }
         }
         Inbound::Op { conn, op: Op::Cancel { id }, resp } => {
             // ids are sequential, so they are guessable: only the
@@ -601,6 +691,9 @@ mod tests {
         assert!(!g.stream);
         assert_eq!(g.temperature, 0.0);
         assert!(g.stop.is_empty());
+        // legacy frames carry FCFS-equivalent QoS defaults
+        assert_eq!(g.priority, DEFAULT_PRIORITY);
+        assert!(g.deadline_ms.is_none());
     }
 
     #[test]
@@ -613,6 +706,34 @@ mod tests {
         assert_eq!(g.temperature, 0.5);
         assert_eq!(g.seed, 7);
         assert_eq!(g.stop, vec!["\n".to_string(), "a: ".to_string()]);
+    }
+
+    #[test]
+    fn v1_1_qos_fields_parse() {
+        let g = gen(r#"{"op":"generate","prompt":"hi","priority":3,"deadline_ms":1500}"#);
+        assert_eq!(g.priority, 3);
+        assert_eq!(g.deadline_ms, Some(1500));
+        let g = gen(r#"{"op":"generate","prompt":"hi","priority":0}"#);
+        assert_eq!(g.priority, 0);
+        assert!(g.deadline_ms.is_none());
+    }
+
+    #[test]
+    fn v1_1_qos_fields_rejected_with_precise_errors() {
+        let e = parse_op(r#"{"prompt":"x","priority":9}"#, 64, 512).unwrap_err().to_string();
+        assert!(e.contains("\"priority\"") && e.contains("outside"), "{e}");
+        let e = parse_op(r#"{"prompt":"x","priority":-1}"#, 64, 512).unwrap_err().to_string();
+        assert!(e.contains("\"priority\""), "{e}");
+        let e = parse_op(r#"{"prompt":"x","priority":"high"}"#, 64, 512)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("\"priority\"") && e.contains("integer"), "{e}");
+        let e = parse_op(r#"{"prompt":"x","deadline_ms":0}"#, 64, 512).unwrap_err().to_string();
+        assert!(e.contains("\"deadline_ms\""), "{e}");
+        let e = parse_op(r#"{"prompt":"x","deadline_ms":1.5}"#, 64, 512)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("\"deadline_ms\""), "{e}");
     }
 
     #[test]
@@ -677,6 +798,16 @@ mod tests {
         let err = j.get("error").unwrap();
         assert_eq!(err.get("code").unwrap().as_str(), Some("bad_request"));
         assert!(err.get("message").unwrap().as_str().is_some());
+    }
+
+    #[test]
+    fn overloaded_frame_carries_retry_hint() {
+        let ov = Overload { retry_after_ms: 250, message: "queue depth 9 >= SLO limit 8".into() };
+        let j = Json::parse(&format_overloaded(&ov)).unwrap();
+        let err = j.get("error").unwrap();
+        assert_eq!(err.get("code").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(err.get("retry_after_ms").unwrap().as_i64(), Some(250));
+        assert!(err.get("message").unwrap().as_str().unwrap().contains("queue depth"));
     }
 
     fn fin() -> Finished {

@@ -50,6 +50,18 @@ impl Summary {
     }
 }
 
+/// Exact ceil-rank percentile over an already-sorted slice (0 when
+/// empty). `p` in [0, 100]. The exact counterpart to
+/// [`LogHistogram::percentile`] for small sample sets (SLO wait
+/// windows, per-class bench latencies).
+pub fn percentile_sorted(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = (sorted.len() as f64 * p / 100.0).ceil().max(1.0) as usize;
+    sorted[rank.min(sorted.len()) - 1]
+}
+
 /// Log-bucketed histogram for latencies (ns): ~4% relative resolution.
 #[derive(Clone, Debug)]
 pub struct LogHistogram {
@@ -161,6 +173,17 @@ mod tests {
         h.record(u64::MAX);
         assert_eq!(h.count(), 2);
         assert!(h.percentile(100.0) > 0);
+    }
+
+    #[test]
+    fn percentile_sorted_exact() {
+        assert_eq!(percentile_sorted(&[], 99.0), 0);
+        assert_eq!(percentile_sorted(&[7], 50.0), 7);
+        assert_eq!(percentile_sorted(&[7], 0.0), 7);
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_sorted(&v, 50.0), 50);
+        assert_eq!(percentile_sorted(&v, 99.0), 99);
+        assert_eq!(percentile_sorted(&v, 100.0), 100);
     }
 
     #[test]

@@ -23,8 +23,8 @@ use std::sync::mpsc;
 use std::thread;
 use std::time::Duration;
 
-use qspec::config::{EngineKind, ServeConfig};
-use qspec::coordinator::{build_engine, BatchCore, Engine, StepEvent};
+use qspec::config::{EngineKind, SchedKind, ServeConfig, SloConfig};
+use qspec::coordinator::{build_engine, build_policy, BatchCore, Engine, StepEvent};
 use qspec::costmodel::{twins::Twin, CostModel};
 use qspec::error::Result as QResult;
 use qspec::evalsuite;
@@ -354,6 +354,116 @@ fn mock_server_cancel_is_connection_scoped() {
     assert_eq!(term.get("finish_reason").unwrap().as_str(), Some("cancelled"));
     assert!(ack.get("cancelled").is_some(), "owner cancel acked: {ack:?}");
     assert_eq!(engine.metrics().cancelled, 1);
+    assert!(!engine.has_work());
+}
+
+/// Protocol v1.1 QoS end-to-end over real TCP against the mock engine:
+/// priority scheduling, SLO-based shedding (`overloaded` frame with
+/// `retry_after_ms`), deadline expiry (`deadline_exceeded` terminal),
+/// and the extended stats snapshot.
+#[test]
+fn mock_server_qos_priority_shedding_and_deadlines() {
+    let tok = mock_tokenizer();
+    // batch 1 + priority policy + a depth-1 SLO: one long request pins
+    // the slot, everything else exercises the queue
+    let mut engine = MockEngine::new(1, 512, 3);
+    engine.core.set_policy(build_policy(SchedKind::Priority));
+    engine.core.set_slo(SloConfig {
+        max_queue_depth: Some(1),
+        retry_after_ms: 250,
+        ..SloConfig::default()
+    });
+    let (addr, rx, lh) = start_frontend(1, 16, 512);
+    let client = thread::spawn(move || {
+        let mut c = Client::connect(&addr);
+        // A: long streamed generation — pins the single slot
+        c.send(r#"{"op":"generate","prompt":"hi","max_tokens":400,"stream":true}"#);
+        let first = c.recv();
+        let id_a = first.get("id").expect("delta id").as_i64().unwrap();
+        // B: legacy frame -> queued behind A (depth 1, default class)
+        c.send(r#"{"prompt":"yo","max_tokens":4}"#);
+        // C: background class while depth >= 1 -> shed with retry hint
+        c.send(r#"{"op":"generate","prompt":"no","max_tokens":4,"priority":0}"#);
+        // D: critical class -> exempt from shedding, jumps the queue
+        c.send(r#"{"op":"generate","prompt":"go","max_tokens":4,"priority":3}"#);
+        // E: high class with a 1ms budget -> admitted, but its deadline
+        // lapses while A still holds the slot
+        c.send(r#"{"op":"generate","prompt":"dl","max_tokens":4,"priority":2,"deadline_ms":1}"#);
+        c.send(&format!(r#"{{"op":"cancel","id":{id_a}}}"#));
+        // collect frames until A's terminal + ack + C's error + the
+        // three queued terminals have all arrived
+        let mut overload = None;
+        let mut ack = None;
+        let mut terminals: Vec<Json> = Vec::new();
+        while overload.is_none() || ack.is_none() || terminals.len() < 4 {
+            let j = c.recv();
+            if j.get("error").is_some() {
+                overload = Some(j);
+            } else if j.get("cancelled").is_some() {
+                ack = Some(j);
+            } else if j.get("finish_reason").is_some() {
+                terminals.push(j);
+            } else {
+                assert!(j.get("delta").is_some(), "unexpected frame: {j:?}");
+            }
+        }
+        c.send(r#"{"op":"stats"}"#);
+        let stats = c.recv();
+        (id_a, overload.unwrap(), ack.unwrap(), terminals, stats)
+    });
+    server::engine_loop(&rx, &tok, &mut engine).expect("engine_loop");
+    lh.join().unwrap();
+    let (id_a, overload, ack, terminals, stats) = client.join().unwrap();
+
+    // C was shed with the structured overloaded frame
+    let err = overload.get("error").unwrap();
+    assert_eq!(err.get("code").unwrap().as_str(), Some("overloaded"));
+    assert_eq!(err.get("retry_after_ms").unwrap().as_i64(), Some(250));
+    assert!(ack.get("cancelled").is_some());
+
+    // terminal frames: A cancelled, D + B finished, E expired. Ids are
+    // engine-assigned in submission order and the shed C never got
+    // one, so B/D/E are id_a+1/+2/+3.
+    let (id_b, id_d, id_e) = (id_a + 1, id_a + 2, id_a + 3);
+    let reason = |j: &Json| j.get("finish_reason").unwrap().as_str().unwrap().to_string();
+    let terminal = |id: i64| {
+        terminals
+            .iter()
+            .position(|j| j.get("id").unwrap().as_i64() == Some(id))
+            .unwrap_or_else(|| panic!("no terminal frame for id {id}"))
+    };
+    assert_eq!(terminals.len(), 4);
+    assert_eq!(reason(&terminals[terminal(id_a)]), "cancelled");
+    let d = terminal(id_d);
+    assert_eq!(reason(&terminals[d]), "length");
+    assert_eq!(terminals[d].get("tokens").unwrap().as_i64(), Some(4));
+    let e = terminal(id_e);
+    assert_eq!(reason(&terminals[e]), "deadline_exceeded");
+    assert_eq!(terminals[e].get("tokens").unwrap().as_i64(), Some(0), "E never ran");
+    let b = terminal(id_b);
+    assert_eq!(reason(&terminals[b]), "length");
+    // the priority scheduler visibly at work: D (critical, submitted
+    // last) completes before B (normal, submitted first)
+    assert!(d < b, "critical request must finish before the earlier normal one");
+
+    // the v1.1 stats surface
+    assert_eq!(stats.get("engine").unwrap().as_str(), Some("mock"));
+    assert_eq!(stats.get("sched").unwrap().as_str(), Some("priority"));
+    assert_eq!(stats.get("slots").unwrap().as_i64(), Some(1));
+    assert_eq!(stats.get("active").unwrap().as_i64(), Some(0));
+    assert_eq!(stats.get("queue_depth").unwrap().as_i64(), Some(0));
+    let depths = stats.get("queue_depth_by_priority").unwrap().as_arr().unwrap();
+    assert_eq!(depths.len(), 4);
+    assert!(depths.iter().all(|d| d.as_i64() == Some(0)));
+    assert_eq!(stats.get("shed").unwrap().as_i64(), Some(1));
+    assert_eq!(stats.get("deadline_expired").unwrap().as_i64(), Some(1));
+    assert_eq!(stats.get("requests_done").unwrap().as_i64(), Some(2));
+    assert_eq!(stats.get("cancelled").unwrap().as_i64(), Some(1));
+    // the mock never drafts: acceptance is null, not a misleading 0.0
+    assert_eq!(stats.get("acceptance_rate"), Some(&Json::Null));
+
+    assert_eq!(engine.metrics().shed, 1);
+    assert_eq!(engine.metrics().deadline_expired, 1);
     assert!(!engine.has_work());
 }
 

@@ -1,8 +1,19 @@
-//! Property tests on coordinator invariants (DESIGN.md §7) using the
-//! in-crate mini property-testing framework (util::check). These run
-//! without artifacts — pure logic over SlotManager / acceptance / queue.
+//! Property tests on coordinator invariants using the in-crate mini
+//! property-testing framework (util::check). These run without
+//! artifacts — pure logic over SlotManager / acceptance / the
+//! `SchedPolicy` implementations (FCFS, priority-with-aging, SJF, EDF)
+//! and the `BatchCore` admission semantics layered on them (deadline
+//! expiry at admission).
 
-use qspec::coordinator::{greedy_accept, FcfsQueue, Request};
+use std::time::Duration;
+
+use qspec::config::SchedKind;
+use qspec::coordinator::{
+    build_policy, greedy_accept, BatchCore, FcfsPolicy, FinishReason, GenerationRequest,
+    PriorityPolicy, Request, SamplingParams, SchedPolicy, StepEvent, AGING_TICKS_PER_LEVEL,
+    MAX_PRIORITY,
+};
+use qspec::costmodel::{twins::Twin, CostModel};
 use qspec::kvcache::SlotManager;
 use qspec::util::check::check;
 use qspec::util::prng::Pcg32;
@@ -136,7 +147,262 @@ fn acceptance_equals_sequential_greedy() {
     );
 }
 
-/// FCFS queue: pops are exactly pushes, in order, under random interleaving.
+// ---------------------------------------------------------------------------
+// SchedPolicy properties
+// ---------------------------------------------------------------------------
+
+/// The deadline an op word encodes: `None` a quarter of the time, else
+/// a multiple of 10 seconds. Coarse spacing matters: the policy orders
+/// on absolute instants (`arrival + ms`) while the model orders on the
+/// ms values, and the two agree as long as the spacing dwarfs the
+/// construction jitter between pushes.
+fn op_deadline_ms(op: u32) -> Option<u64> {
+    match op / 128 % 4 {
+        0 => None,
+        k => Some(((op / 512 % 64) as u64 + 1) * 10_000 * k as u64),
+    }
+}
+
+/// Decode one op word into a queued request's QoS shape: priority in
+/// 0..=3, max_tokens in 4..=35, deadline per [`op_deadline_ms`].
+fn req_from_op(id: u64, op: u32) -> Request {
+    let priority = (op % 4) as u8;
+    let max_tokens = 4 + (op / 4 % 32) as usize;
+    Request::with_qos(
+        id,
+        vec![1],
+        SamplingParams::greedy(max_tokens),
+        priority,
+        op_deadline_ms(op),
+    )
+}
+
+/// Model entry mirroring what a policy knows about a queued request.
+#[derive(Clone, Debug)]
+struct Model {
+    id: u64,
+    seq: u64,
+    priority: u8,
+    max_tokens: usize,
+    deadline_ms: Option<u64>,
+}
+
+/// The id the model expects `pop_next` to return for each policy.
+fn model_next(kind: SchedKind, q: &[Model]) -> Option<u64> {
+    let pick = match kind {
+        SchedKind::Fcfs => q.iter().min_by_key(|m| m.seq),
+        SchedKind::Priority => {
+            // no on_tick in the random-ops property -> no aging applies
+            q.iter().min_by_key(|m| (MAX_PRIORITY - m.priority, m.seq))
+        }
+        SchedKind::Sjf => q.iter().min_by_key(|m| (m.max_tokens, m.seq)),
+        SchedKind::Edf => q
+            .iter()
+            .min_by_key(|m| (m.deadline_ms.is_none(), m.deadline_ms.unwrap_or(0), m.seq)),
+    };
+    pick.map(|m| m.id)
+}
+
+/// Every policy pops exactly the request its ordering rule names, under
+/// random interleavings of push / pop / remove — and `remove` never
+/// disturbs the relative order of what stays queued.
+#[test]
+fn policy_ordering_properties_under_random_ops() {
+    for kind in SchedKind::ALL {
+        check(
+            kind.label(),
+            200,
+            |r: &mut Pcg32| {
+                let ops: Vec<u32> =
+                    (0..r.range_inclusive(1, 60)).map(|_| r.next_u32()).collect();
+                ops
+            },
+            |ops| {
+                let mut q = build_policy(kind);
+                let mut model: Vec<Model> = Vec::new();
+                let mut next_id = 0u64;
+                let mut next_seq = 0u64;
+                for &op in ops {
+                    match op % 4 {
+                        // push twice as often as each other op so the
+                        // queue actually grows
+                        0 | 1 => {
+                            let r = req_from_op(next_id, op);
+                            model.push(Model {
+                                id: r.id,
+                                seq: next_seq,
+                                priority: r.priority,
+                                max_tokens: r.params.max_tokens,
+                                deadline_ms: op_deadline_ms(op),
+                            });
+                            q.push(r);
+                            next_id += 1;
+                            next_seq += 1;
+                        }
+                        2 => {
+                            let want = model_next(kind, &model);
+                            let got = q.pop_next().map(|r| r.id);
+                            if got != want {
+                                return Err(format!("pop {got:?} want {want:?}"));
+                            }
+                            if let Some(id) = got {
+                                model.retain(|m| m.id != id);
+                            }
+                        }
+                        _ => {
+                            // remove a random queued id (or a bogus one)
+                            if model.is_empty() {
+                                if q.remove(9999).is_some() {
+                                    return Err("removed nonexistent id".into());
+                                }
+                            } else {
+                                let victim = model[op as usize % model.len()].id;
+                                let got = q.remove(victim).map(|r| r.id);
+                                if got != Some(victim) {
+                                    return Err(format!("remove {victim} got {got:?}"));
+                                }
+                                model.retain(|m| m.id != victim);
+                            }
+                        }
+                    }
+                    // peek always agrees with what the next pop would be
+                    let want = model_next(kind, &model);
+                    if q.peek_next().map(|r| r.id) != want {
+                        return Err(format!("peek disagrees with model ({})", kind.label()));
+                    }
+                    if q.len() != model.len() {
+                        return Err("length mismatch".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// Aging: a background request stuck behind a continuous stream of
+/// critical arrivals is still admitted within a bounded number of
+/// scheduling rounds (it gains one effective level per aging window,
+/// then wins the FCFS tie inside the top class).
+#[test]
+fn aging_eventually_admits_starved_low_priority() {
+    let mut q = PriorityPolicy::new();
+    q.push(req_with_priority(0, 0));
+    let bound = MAX_PRIORITY as u64 * AGING_TICKS_PER_LEVEL + 2;
+    let mut admitted_at = None;
+    for round in 0..bound {
+        // adversarial arrival pattern: a fresh critical request every round
+        q.push(req_with_priority(1 + round, MAX_PRIORITY));
+        q.on_tick();
+        let popped = q.pop_next().expect("queue nonempty");
+        if popped.id == 0 {
+            admitted_at = Some(round);
+            break;
+        }
+    }
+    let round = admitted_at.expect("aging failed to admit the starved request");
+    assert!(
+        round >= AGING_TICKS_PER_LEVEL,
+        "admitted suspiciously early (round {round}): aging should take effect gradually"
+    );
+}
+
+fn req_with_priority(id: u64, priority: u8) -> Request {
+    Request::with_qos(id, vec![1], SamplingParams::greedy(4), priority, None)
+}
+
+/// Cancellation (`remove`) under every policy: the drain order with a
+/// victim removed equals the full drain order minus the victim.
+#[test]
+fn remove_preserves_order_under_every_policy() {
+    for kind in SchedKind::ALL {
+        check(
+            "remove-order",
+            100,
+            |r: &mut Pcg32| {
+                let ops: Vec<u32> =
+                    (0..r.range_inclusive(2, 24)).map(|_| r.next_u32()).collect();
+                let victim = r.below(24) as usize;
+                (ops, victim)
+            },
+            |(ops, victim)| {
+                // the same Request values (same arrival instants) into
+                // two instances of the same policy
+                let reqs: Vec<Request> = ops
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &op)| req_from_op(i as u64, op))
+                    .collect();
+                let mut full = build_policy(kind);
+                let mut pruned = build_policy(kind);
+                for r in &reqs {
+                    full.push(r.clone());
+                    pruned.push(r.clone());
+                }
+                let victim_id = (*victim % reqs.len()) as u64;
+                let removed = pruned.remove(victim_id).ok_or("victim not removable")?;
+                if removed.id != victim_id {
+                    return Err("remove returned the wrong request".into());
+                }
+                let full_order: Vec<u64> =
+                    std::iter::from_fn(|| full.pop_next()).map(|r| r.id).collect();
+                let pruned_order: Vec<u64> =
+                    std::iter::from_fn(|| pruned.pop_next()).map(|r| r.id).collect();
+                let expect: Vec<u64> =
+                    full_order.iter().copied().filter(|&id| id != victim_id).collect();
+                if pruned_order != expect {
+                    return Err(format!(
+                        "{}: order after remove {pruned_order:?} != {expect:?}",
+                        kind.label()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// EDF + BatchCore: an already-expired deadline is never admitted to a
+/// slot — it terminates with `deadline_exceeded` at admission time and
+/// the slot goes to live work instead.
+#[test]
+fn edf_never_admits_an_already_expired_deadline() {
+    let mut core = BatchCore::new(
+        SlotManager::new(1, 64, 16),
+        CostModel::new(Twin::lookup("llama2-7b")),
+    );
+    core.set_policy(build_policy(SchedKind::Edf));
+    let doomed = core.submit_request(
+        GenerationRequest::greedy(vec![1, 2], 8).with_deadline_ms(1),
+    );
+    let live = core.submit_request(
+        GenerationRequest::greedy(vec![3, 4], 8).with_deadline_ms(60_000),
+    );
+    std::thread::sleep(Duration::from_millis(5));
+    let mut out = Vec::new();
+    let pb = core.admit_batch(&mut out).unwrap();
+    // EDF pops the doomed request first (earliest deadline), expires it
+    // without a slot, then admits the live one into the freed capacity
+    let admitted = pb.expect("live request admitted");
+    assert_eq!(admitted.admitted.len(), 1);
+    assert_eq!(admitted.admitted[0].1.id, live);
+    let f = out
+        .into_iter()
+        .filter_map(StepEvent::into_done)
+        .next()
+        .expect("expired terminal event");
+    assert_eq!(f.id, doomed);
+    assert_eq!(f.finish_reason, FinishReason::DeadlineExceeded);
+    assert!(f.tokens.is_empty());
+    assert_eq!(core.metrics.deadline_expired, 1);
+    // the single slot went to the live request, not the expired one
+    assert_eq!(core.slots.active_count(), 1);
+    assert_eq!(core.slots.slot(admitted.admitted[0].0).req_id, Some(live));
+}
+
+/// FCFS-specific regression: pops are exactly pushes, in order, under
+/// random interleaving (the original queue property, kept verbatim
+/// against the trait API).
 #[test]
 fn fcfs_queue_order_property() {
     check(
@@ -149,23 +415,23 @@ fn fcfs_queue_order_property() {
         |ops| {
             // ids are assigned by the engine core; the queue is pure
             // ordering, so the model assigns them here
-            let mut q = FcfsQueue::new();
+            let mut q = FcfsPolicy::new();
             let mut pushed = std::collections::VecDeque::new();
             let mut next_id = 0u64;
             for &op in ops {
                 if op % 2 == 0 {
                     let id = next_id;
                     next_id += 1;
-                    q.push_request(Request::new(id, vec![op as i32], 4));
+                    q.push(Request::new(id, vec![op as i32], 4));
                     pushed.push_back(id);
-                } else if let Some(r) = q.pop() {
+                } else if let Some(r) = q.pop_next() {
                     let want = pushed.pop_front().ok_or("pop from empty model")?;
                     if r.id != want {
                         return Err(format!("popped {} want {want}", r.id));
                     }
                 }
                 // peek always reports the same request the next pop returns
-                if let (Some(head), Some(&want)) = (q.peek(), pushed.front()) {
+                if let (Some(head), Some(&want)) = (q.peek_next(), pushed.front()) {
                     if head.id != want {
                         return Err(format!("peek {} want {want}", head.id));
                     }
