@@ -1,0 +1,114 @@
+//! HierSpec bench: quantized-KV self-speculation vs the AR W4A16
+//! baseline and QSPEC, swept over the shadow width (`kv_bits`).
+//!
+//! The two numbers this bench exists to show (the PR's acceptance
+//! criteria):
+//!   * draft-phase cost per drafted token at kv_bits=4 sits *below*
+//!     the AR baseline's per-token decode cost — the draft reads the
+//!     quantized shadow tier, so its KV traffic shrinks by 16/kv_bits;
+//!   * acceptance < 1.0 — the shadow is lossy, some drafts get
+//!     rejected — while committed output still matches the verifier
+//!     exactly (greedy_accept; the conformance suite asserts the
+//!     output equality against the w4a16 baseline).
+//!
+//! Narrower shadows draft cheaper but accept less: the kv_bits sweep
+//! prints the trade-off curve (QuantSpec's fig-1 shape).
+
+use qspec::bench::runner::{full_mode, open_session, run_engine, smoke_mode, RunSpec};
+use qspec::bench::Table;
+use qspec::config::EngineKind;
+use qspec::metrics::EngineMetrics;
+use qspec::model::Mode;
+use qspec::util::json::{arr, num, obj, s};
+
+/// Virtual draft cost per drafted token (ns); phase order is
+/// [prefill, draft, verify, decode, host].
+fn draft_ns_per_tok(m: &EngineMetrics) -> f64 {
+    m.virt_ns[1] as f64 / m.drafted.max(1) as f64
+}
+
+/// Virtual decode cost per emitted token (ns) — the AR baseline's
+/// per-token price.
+fn decode_ns_per_tok(m: &EngineMetrics) -> f64 {
+    m.virt_ns[3] as f64 / m.tokens_out.max(1) as f64
+}
+
+fn main() {
+    let (sess, tok) = open_session().expect("artifacts missing: run `make artifacts`");
+    let n_req = if full_mode() {
+        64
+    } else if smoke_mode() {
+        8
+    } else {
+        24
+    };
+    let spec = RunSpec::new("s", 8, "sharegpt", n_req);
+
+    let ar = run_engine(&sess, &tok, &spec.with_engine(EngineKind::Ar(Mode::W4A16)))
+        .expect("w4a16 baseline");
+    let qspec = run_engine(&sess, &tok, &spec.with_engine(EngineKind::QSpec)).expect("qspec");
+    let ar_tok_s = ar.metrics.virt_tokens_per_s();
+    let ar_decode_tok = decode_ns_per_tok(&ar.metrics);
+
+    let mut table = Table::new(&[
+        "engine", "kv_bits", "acceptance", "draft ns/tok", "virt tok/s", "vs w4a16",
+    ]);
+    let mut out_rows = Vec::new();
+    let mut row = |label: &str, kv_bits: &str, m: &EngineMetrics| {
+        let acc = m.acceptance_rate_opt();
+        table.row(&[
+            label.to_string(),
+            kv_bits.to_string(),
+            acc.map(|a| format!("{:.1}%", 100.0 * a)).unwrap_or_else(|| "-".into()),
+            if m.drafted > 0 { format!("{:.0}", draft_ns_per_tok(m)) } else { "-".into() },
+            format!("{:.1}", m.virt_tokens_per_s()),
+            format!("{:.2}x", m.virt_tokens_per_s() / ar_tok_s.max(1e-9)),
+        ]);
+        out_rows.push(obj(vec![
+            ("engine", s(label)),
+            ("kv_bits", s(kv_bits)),
+            ("acceptance", acc.map_or(qspec::util::json::Json::Null, num)),
+            ("draft_ns_per_tok", num(draft_ns_per_tok(m))),
+            ("virt_tok_s", num(m.virt_tokens_per_s())),
+        ]));
+    };
+    row("w4a16", "-", &ar.metrics);
+    row("qspec", "-", &qspec.metrics);
+
+    let mut hier4: Option<EngineMetrics> = None;
+    for kv_bits in [2u8, 4, 8] {
+        let out = run_engine(
+            &sess,
+            &tok,
+            &spec.with_engine(EngineKind::HierSpec { gamma: 3, kv_bits }),
+        )
+        .expect("hierspec run");
+        row("hierspec", &kv_bits.to_string(), &out.metrics);
+        if kv_bits == 4 {
+            hier4 = Some(out.metrics.clone());
+        }
+    }
+    table.print("HierSpec — quantized-KV self-speculation (virtual L20 clock)");
+
+    // the acceptance criteria, asserted so a regression fails the bench
+    let h = hier4.expect("kv_bits=4 run");
+    let draft_tok = draft_ns_per_tok(&h);
+    assert!(
+        draft_tok < ar_decode_tok,
+        "hierspec draft/tok {draft_tok:.0} ns must undercut the AR W4A16 decode/tok \
+         {ar_decode_tok:.0} ns at kv_bits=4"
+    );
+    let acc = h.acceptance_rate_opt().expect("hierspec drafts");
+    assert!(
+        acc < 1.0 && acc > 0.0,
+        "acceptance {acc} must be lossy (<1.0) but nonzero at kv_bits=4"
+    );
+    println!(
+        "\nkv_bits=4: draft {draft_tok:.0} ns/tok vs AR decode {ar_decode_tok:.0} ns/tok \
+         ({:.1}% cheaper), acceptance {:.1}%",
+        100.0 * (1.0 - draft_tok / ar_decode_tok),
+        100.0 * acc
+    );
+
+    qspec::bench::write_json("hierspec_selfspec", &arr(out_rows)).unwrap();
+}

@@ -9,7 +9,7 @@
 //! admit critical work first, SJF gets most of the benefit from the
 //! short budgets alone.
 
-use qspec::bench::runner::{full_mode, open_session, run_sched_bench, RunSpec};
+use qspec::bench::runner::{full_mode, open_session, run_sched_bench, smoke_mode, RunSpec};
 use qspec::bench::Table;
 use qspec::config::{SchedKind, SloConfig};
 use qspec::coordinator::MAX_PRIORITY;
@@ -17,7 +17,13 @@ use qspec::util::json::{arr, num, obj, s};
 
 fn main() {
     let (sess, tok) = open_session().expect("artifacts missing: run `make artifacts`");
-    let n_req = if full_mode() { 64 } else { 24 };
+    let n_req = if full_mode() {
+        64
+    } else if smoke_mode() {
+        8 // ci.sh test: enough for one burst per policy
+    } else {
+        24
+    };
     // batch 4 over a burst of n_req keeps a deep queue: admission order
     // is the whole game
     let spec = RunSpec::new("s", 4, "sharegpt", n_req);

@@ -4,6 +4,10 @@
 #   ./ci.sh          # everything
 #   ./ci.sh fast     # build + tests only (skip fmt/clippy)
 #   ./ci.sh lint     # fmt + clippy only (skip build/tests)
+#   ./ci.sh test     # the cross-engine conformance + property suites
+#                    # with --nocapture summaries, then a smoke run of
+#                    # the sched_qos and hierspec_selfspec benches
+#                    # (bench smoke needs artifacts/; skipped otherwise)
 #
 # Integration tests skip themselves when artifacts/ is absent; run
 # `make artifacts` first for full end-to-end coverage.
@@ -18,6 +22,24 @@ elif [ -f rust/Cargo.toml ]; then
 else
     echo "ci.sh: no Cargo.toml found (repo root or rust/)" >&2
     exit 1
+fi
+
+if [ "${1:-}" = "test" ]; then
+    # conformance battery (every EngineKind) + acceptance losslessness
+    # + quantized-KV shadow properties, with per-engine summaries
+    cargo test --release \
+        --test engine_trait --test acceptance_props --test kv_quant_props \
+        -- --nocapture
+    if [ -f artifacts/manifest.json ]; then
+        # smoke the QoS and hierspec benches (tiny grids): the hierspec
+        # bench asserts draft-cost < AR baseline and acceptance < 1.0
+        QSPEC_BENCH_SMOKE=1 cargo bench --bench sched_qos
+        QSPEC_BENCH_SMOKE=1 cargo bench --bench hierspec_selfspec
+    else
+        echo "ci.sh test: no artifacts/ — bench smoke skipped"
+    fi
+    echo "ci.sh: test suite passed"
+    exit 0
 fi
 
 if [ "${1:-}" != "lint" ]; then

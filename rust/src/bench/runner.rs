@@ -248,6 +248,13 @@ pub fn full_mode() -> bool {
     std::env::var("QSPEC_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
 }
 
+/// CI smoke switch: QSPEC_BENCH_SMOKE=1 shrinks the grids further so a
+/// bench binary doubles as an integration smoke test (`ci.sh test`
+/// drives `sched_qos` and `hierspec_selfspec` this way).
+pub fn smoke_mode() -> bool {
+    std::env::var("QSPEC_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
 /// Open the default session (artifacts/ under the crate root).
 pub fn open_session() -> Result<(Session, Tokenizer)> {
     let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");

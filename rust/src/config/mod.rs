@@ -8,6 +8,11 @@ use crate::coordinator::request::MAX_PRIORITY;
 use crate::error::{QspecError, Result};
 use crate::model::Mode;
 
+/// Default draft depth / shadow width of the HierSpec engine (CLI
+/// `--gamma` / `--kv-bits` override them).
+pub const HIERSPEC_DEFAULT_GAMMA: usize = 3;
+pub const HIERSPEC_DEFAULT_KV_BITS: u8 = 4;
+
 /// Which engine drives generation.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum EngineKind {
@@ -17,16 +22,26 @@ pub enum EngineKind {
     Ar(Mode),
     /// EAGLE-style baseline (chain if tree_k == 1)
     Eagle { tree_k: usize },
+    /// QuantSpec-style hierarchical self-speculation: one W4A16 module
+    /// drafts over a `kv_bits` quantized shadow KV cache and verifies
+    /// over full precision (requantizing the shadow).
+    HierSpec { gamma: usize, kv_bits: u8 },
 }
 
 impl EngineKind {
     /// Parse a CLI engine name: `qspec`, an AR mode (`w16a16`/`w4a16`/
-    /// `w4a4`), `eagle` (chain) or `eagle-tree` (tree_k = 2).
+    /// `w4a4`), `eagle` (chain), `eagle-tree` (tree_k = 2) or
+    /// `hierspec` (defaults gamma = 3, kv_bits = 4; `--gamma` /
+    /// `--kv-bits` adjust them).
     pub fn parse(s: &str) -> Option<EngineKind> {
         match s {
             "qspec" => Some(EngineKind::QSpec),
             "eagle" => Some(EngineKind::Eagle { tree_k: 1 }),
             "eagle-tree" => Some(EngineKind::Eagle { tree_k: 2 }),
+            "hierspec" => Some(EngineKind::HierSpec {
+                gamma: HIERSPEC_DEFAULT_GAMMA,
+                kv_bits: HIERSPEC_DEFAULT_KV_BITS,
+            }),
             m => Mode::parse(m).map(EngineKind::Ar),
         }
     }
@@ -37,6 +52,7 @@ impl EngineKind {
             EngineKind::QSpec => "qspec",
             EngineKind::Ar(m) => m.as_str(),
             EngineKind::Eagle { .. } => "eagle",
+            EngineKind::HierSpec { .. } => "hierspec",
         }
     }
 }
@@ -200,6 +216,19 @@ impl ServeConfig {
         if self.batch == 0 {
             return Err(QspecError::Config("batch must be > 0".into()));
         }
+        if let EngineKind::HierSpec { gamma, kv_bits } = &self.engine {
+            if *gamma == 0 || *gamma > 8 {
+                return Err(QspecError::Config(format!(
+                    "hierspec gamma {gamma} out of range 1..=8"
+                )));
+            }
+            if !(2..=8).contains(kv_bits) {
+                return Err(QspecError::Config(format!(
+                    "kv_bits {kv_bits} outside 2..=8 (the shadow tier must be \
+                     narrower than the fp16 cache but still carry signal)"
+                )));
+            }
+        }
         self.slo.validate()?;
         Ok(())
     }
@@ -220,8 +249,28 @@ mod tests {
         assert_eq!(EngineKind::parse("w4a16"), Some(EngineKind::Ar(Mode::W4A16)));
         assert_eq!(EngineKind::parse("eagle"), Some(EngineKind::Eagle { tree_k: 1 }));
         assert_eq!(EngineKind::parse("eagle-tree"), Some(EngineKind::Eagle { tree_k: 2 }));
+        assert_eq!(
+            EngineKind::parse("hierspec"),
+            Some(EngineKind::HierSpec { gamma: 3, kv_bits: 4 })
+        );
         assert_eq!(EngineKind::parse("nope"), None);
         assert_eq!(EngineKind::Eagle { tree_k: 2 }.label(), "eagle");
+        assert_eq!(EngineKind::HierSpec { gamma: 3, kv_bits: 4 }.label(), "hierspec");
+    }
+
+    #[test]
+    fn hierspec_kv_bits_validated() {
+        let mut c = ServeConfig::default();
+        c.engine = EngineKind::HierSpec { gamma: 3, kv_bits: 4 };
+        assert!(c.validate().is_ok());
+        for bad_bits in [0u8, 1, 9, 16] {
+            c.engine = EngineKind::HierSpec { gamma: 3, kv_bits: bad_bits };
+            assert!(c.validate().is_err(), "kv_bits {bad_bits} must be rejected");
+        }
+        c.engine = EngineKind::HierSpec { gamma: 0, kv_bits: 4 };
+        assert!(c.validate().is_err());
+        c.engine = EngineKind::HierSpec { gamma: 9, kv_bits: 4 };
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -46,6 +46,7 @@ use crate::runtime::Session;
 
 use super::autoregressive::ArEngine;
 use super::eagle::{EagleConfig, EagleEngine};
+use super::hierspec::{HierSpecConfig, HierSpecEngine};
 use super::queue::{build_policy, SchedPolicy};
 use super::request::{
     FinishReason, Finished, GenerationRequest, Overload, Request, StepEvent,
@@ -95,6 +96,17 @@ pub trait Engine {
     /// draft return none).
     fn take_samples(&mut self) -> Vec<SimilaritySample> {
         Vec::new()
+    }
+
+    /// Whether this engine can only decode greedily. Every current
+    /// engine runs AOT entries that return argmax tokens and never
+    /// expose logits to the host, so the default is `true`; an engine
+    /// gaining a logits-returning entry (ROADMAP: host-side sampling)
+    /// overrides this. The server rejects `temperature > 0` against an
+    /// argmax-only engine with a precise `bad_request` instead of
+    /// silently decoding greedily.
+    fn argmax_only(&self) -> bool {
+        true
     }
 
     /// Enqueue a full request (prompt token ids + per-request sampling
@@ -700,6 +712,14 @@ pub fn build_engine<'s>(
             e.size = cfg.size.clone();
             e.scheme = cfg.scheme.clone();
             Box::new(EagleEngine::new(sess, e)?)
+        }
+        EngineKind::HierSpec { gamma, kv_bits } => {
+            let mut h = HierSpecConfig::new(&cfg.size, cfg.batch);
+            h.scheme = cfg.scheme.clone();
+            h.gamma = *gamma;
+            h.kv_bits = *kv_bits;
+            h.collect_similarity = cfg.collect_similarity;
+            Box::new(HierSpecEngine::new(sess, h)?)
         }
     };
     engine.core_mut().set_policy(build_policy(cfg.sched));

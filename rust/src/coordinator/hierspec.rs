@@ -1,0 +1,313 @@
+//! The HierSpec engine: QuantSpec-style hierarchical self-speculation.
+//!
+//! The dual of QSPEC's design (PAPERS.md, QuantSpec): instead of two
+//! *activation* precisions over one cache, one W4A16 module runs both
+//! phases and the *KV cache* is the low-precision axis. The draft phase
+//! decodes gamma tokens attending over a `kv_bits` quantized shadow of
+//! the cache (fast: KV traffic shrinks by 16/kv_bits); the verify phase
+//! re-scores all gamma+1 positions attending over full precision and
+//! overwrites/requantizes the shadow — the hierarchical analogue of
+//! QSPEC's KV-overwriting. No second weight set, no second model: the
+//! only extra residency is the shadow tier (kv_bits/16 of the cache).
+//!
+//! Substrate note: the AOT modules execute in f32, so the shadow tier
+//! is *simulated* at the logical layer (`kvcache::QuantizedView`,
+//! quantize-on-commit) and the draft's lossiness is injected
+//! deterministically: each draft position flips to a wrong token with a
+//! probability driven by the shadow's measured round-trip error (so
+//! acceptance degrades as `kv_bits` shrinks), while `greedy_accept`
+//! guarantees the committed output still equals the verifier's exactly
+//! — the losslessness invariant the paper family shares. The cost
+//! model prices the draft at quantized-KV bandwidth
+//! (`CostModel::charge_kv_bits`), which is where the speedup shows up
+//! in benches.
+//!
+//! Request plumbing lives in the shared [`BatchCore`]; this file is the
+//! single-model draft/verify phase logic only. Drafting reuses the
+//! W4A16 `decode` entry sequentially (no dedicated fused module is
+//! required from the artifact export).
+
+use std::rc::Rc;
+
+use crate::costmodel::{twins::Twin, CostModel, Phase};
+use crate::error::Result;
+use crate::kvcache::SlotManager;
+use crate::metrics::{PhaseKind, PhaseTimer};
+use crate::model::tokenizer::PAD;
+use crate::model::Mode;
+use crate::runtime::{ModelMeta, Module, Session, WeightSet};
+use crate::util::prng::Pcg32;
+
+use super::acceptance::greedy_accept;
+use super::engine::{BatchCore, Engine};
+use super::request::StepEvent;
+use super::SimilaritySample;
+
+/// How strongly the shadow tier's mean round-trip error translates into
+/// draft-token flips. Calibrated so the acceptance-vs-width curve is
+/// QuantSpec-shaped: ~0.99 at 8 bits, ~0.9 at 4 bits (the paper
+/// family's operating point), ~0.5 at 2 bits.
+const QUANT_FLIP_SENSITIVITY: f32 = 3.0;
+
+/// Flip probability is capped: even a 1-bit shadow still carries signal.
+const MAX_FLIP_PROB: f32 = 0.5;
+
+/// HierSpec engine configuration.
+#[derive(Clone, Debug)]
+pub struct HierSpecConfig {
+    pub size: String,
+    pub scheme: String,
+    pub batch: usize,
+    /// chain draft length per cycle.
+    pub gamma: usize,
+    /// shadow-tier storage width the draft attends over (2..=8).
+    pub kv_bits: u8,
+    /// record fig-2 similarity samples (small overhead).
+    pub collect_similarity: bool,
+}
+
+impl HierSpecConfig {
+    pub fn new(size: &str, batch: usize) -> Self {
+        HierSpecConfig {
+            size: size.to_string(),
+            scheme: "atom".to_string(),
+            batch,
+            gamma: 3,
+            kv_bits: 4,
+            collect_similarity: false,
+        }
+    }
+}
+
+/// The engine. One W4A16 module family, one device cache, one weight
+/// set; the shadow tier lives in the [`SlotManager`]
+/// (`SlotManager::with_shadow`). One `step()` = one scheduling round
+/// (admission/prefill then draft+verify).
+pub struct HierSpecEngine<'s> {
+    #[allow(dead_code)]
+    sess: &'s Session,
+    pub cfg: HierSpecConfig,
+    pub meta: ModelMeta,
+    prefill_m: Rc<Module>,
+    decode_m: Rc<Module>,
+    verify_m: Rc<Module>,
+    weights: Rc<WeightSet>,
+    kv: Option<xla::PjRtBuffer>,
+    pub core: BatchCore,
+    pub samples: Vec<SimilaritySample>,
+}
+
+impl<'s> HierSpecEngine<'s> {
+    pub fn new(sess: &'s Session, cfg: HierSpecConfig) -> Result<Self> {
+        let meta = sess.store.model(&cfg.size)?.clone();
+        let m = &sess.store.manifest;
+        let prefill_m = sess.module(&cfg.size, &cfg.scheme, "w4a16", "prefill", cfg.batch, 0)?;
+        let decode_m = sess.module(&cfg.size, &cfg.scheme, "w4a16", "decode", cfg.batch, 0)?;
+        let verify_m =
+            sess.module(&cfg.size, &cfg.scheme, "w4a16", "verify", cfg.batch, cfg.gamma)?;
+        // self-speculation: draft and verify share the one checkpoint
+        let weights = sess.weights(&verify_m.meta.weights_key)?;
+        let kv = Some(sess.fresh_kv(&cfg.size, cfg.batch)?);
+        let slots =
+            SlotManager::with_shadow(cfg.batch, meta.max_seq, m.prefill_t, cfg.kv_bits);
+        let cost = CostModel::new(Twin::lookup(&meta.paper_twin));
+
+        // virtual-device admission: W4A16 residency plus the shadow
+        // tier (kv_bits/16 of the full cache) — still far under the
+        // two-model EAGLE footprint
+        let resident = cost.weight_bytes(Mode::W4A16)
+            + cost.kv_bytes(Mode::W4A16, cfg.batch, 2048)
+            + cost.kv_bytes_bits(cfg.kv_bits, cfg.batch, 2048);
+        cost.check_memory(resident, "hierspec engine")?;
+
+        Ok(HierSpecEngine {
+            sess,
+            cfg,
+            meta,
+            prefill_m,
+            decode_m,
+            verify_m,
+            weights,
+            kv,
+            core: BatchCore::new(slots, cost),
+            samples: Vec::new(),
+        })
+    }
+
+    /// Admission + batched prefill (verify precision: full KV + shadow
+    /// both written exactly, see `SlotManager::after_prefill`).
+    fn admit_and_prefill(&mut self, out: &mut Vec<StepEvent>) -> Result<()> {
+        let pb = match self.core.admit_batch(out)? {
+            Some(pb) => pb,
+            None => return Ok(()),
+        };
+        let p = self.core.slots.prefill_t();
+        let timer = PhaseTimer::start();
+        let kv = self.kv.take().expect("kv");
+        let r = self
+            .prefill_m
+            .call_prefill(&pb.tokens, &pb.start, &pb.mask, &kv, &self.weights)?;
+        self.kv = Some(r.kv);
+        let virt = self
+            .core
+            .cost
+            .charge(Mode::W4A16, Phase::Chunk, pb.admitted.len(), p, p);
+        self.core.metrics.add_phase(PhaseKind::Prefill, timer.elapsed_ns(), virt);
+        self.core.finish_prefill(&pb, &r.tok, out);
+        Ok(())
+    }
+
+    /// Whether the quantized shadow flips draft position `j` of the
+    /// slot holding `req_id`: deterministic in (request, position,
+    /// step), with probability proportional to the shadow's measured
+    /// round-trip error. 4-bit shadows flip rarely; 2-bit often.
+    fn quant_flips(&self, req_id: u64, pos: i32, j: usize, err: f32) -> bool {
+        let p = (err * QUANT_FLIP_SENSITIVITY).min(MAX_FLIP_PROB);
+        if p <= 0.0 {
+            return false;
+        }
+        let seed = (pos as u64) << 8 | j as u64;
+        let mut rng = Pcg32::new(seed, req_id.wrapping_mul(2).wrapping_add(1));
+        (rng.next_f64() as f32) < p
+    }
+
+    /// A wrong-but-in-vocab token for a flipped draft position.
+    fn perturb(&self, t: i32, req_id: u64, pos: i32, j: usize) -> i32 {
+        let vocab = self.meta.vocab as i32;
+        let mut rng = Pcg32::new((pos as u64) << 8 | j as u64, req_id ^ 0x5bd1_e995);
+        let off = 1 + (rng.below((vocab - 1).max(1) as u32) as i32);
+        (t + off).rem_euclid(vocab)
+    }
+
+    /// One draft(gamma over the shadow) + verify(gamma+1 over full
+    /// precision) + accept cycle over the active slots.
+    fn cycle(&mut self, out: &mut Vec<StepEvent>) -> Result<()> {
+        let sb = match self.core.step_inputs() {
+            Some(sb) => sb,
+            None => return Ok(()),
+        };
+        let b = self.cfg.batch;
+        let g = self.cfg.gamma;
+        let bits = self.cfg.kv_bits;
+
+        // ---- draft phase: gamma sequential W4A16 decode steps over the
+        // quantized shadow tier ------------------------------------------
+        let timer = PhaseTimer::start();
+        let mut kv = self.kv.take().expect("kv");
+        let mut cur = sb.tok.clone();
+        let mut pos = sb.pos.clone();
+        let mut drafts = vec![PAD; b * g];
+        let mut draft_probs = vec![0f32; b * g];
+        // the shadow's round-trip error only changes at commit, so one
+        // O(entries) scan per slot covers the whole cycle
+        let mut shadow_err = vec![0f32; b];
+        for &i in &sb.active {
+            shadow_err[i] = self.core.slots.shadow_error(i);
+        }
+        let mut virt = 0u128;
+        for j in 0..g {
+            let r = self.decode_m.call_decode(&cur, &pos, &sb.start, &kv, &self.weights)?;
+            kv = r.kv;
+            // the draft reads the shadow, not the fp16 cache: charge
+            // this step at kv_bits bandwidth — the HierSpec win
+            virt += self.core.cost.charge_kv_bits(
+                Mode::W4A16,
+                Phase::Decode,
+                sb.active.len(),
+                1,
+                sb.mean_ctx,
+                bits,
+            );
+            for &i in &sb.active {
+                let req_id = self.core.slots.slot(i).req_id.unwrap_or(0);
+                let mut t = r.tok[i];
+                if self.quant_flips(req_id, pos[i], j, shadow_err[i]) {
+                    // the quantized attention would have argmax'd elsewhere
+                    t = self.perturb(t, req_id, pos[i], j);
+                }
+                drafts[i * g + j] = t;
+                draft_probs[i * g + j] = r.prob[i];
+                cur[i] = t;
+                pos[i] += 1;
+            }
+        }
+        // draft writes land in the shadow tier as speculative entries
+        for &i in &sb.active {
+            let toks: Vec<i32> = (0..g).map(|j| drafts[i * g + j]).collect();
+            self.core.slots.shadow_speculate(i, &toks);
+        }
+        self.kv = Some(kv);
+        self.core.metrics.add_phase(PhaseKind::Draft, timer.elapsed_ns(), virt);
+
+        // ---- verify phase: one W4A16 parallel chunk over full
+        // precision; its KV writes overwrite the draft's entries --------
+        let mut vtokens = vec![PAD; b * (g + 1)];
+        for slot in 0..b {
+            vtokens[slot * (g + 1)] = sb.tok[slot];
+            for j in 0..g {
+                vtokens[slot * (g + 1) + 1 + j] = drafts[slot * g + j];
+            }
+        }
+        let timer = PhaseTimer::start();
+        let kv = self.kv.take().expect("kv");
+        let v = self
+            .verify_m
+            .call_verify(&vtokens, &sb.pos, &sb.start, &sb.mask, &kv, &self.weights)?;
+        self.kv = Some(v.kv);
+        let virt = self
+            .core
+            .cost
+            .charge(Mode::W4A16, Phase::Chunk, sb.active.len(), g + 1, sb.mean_ctx);
+        self.core.metrics.add_phase(PhaseKind::Verify, timer.elapsed_ns(), virt);
+
+        // ---- acceptance + commit (requantizes the shadow) --------------
+        let timer = PhaseTimer::start();
+        for &i in &sb.active {
+            let dr = &drafts[i * g..(i + 1) * g];
+            let vt = &v.vtok[i * (g + 1)..(i + 1) * (g + 1)];
+            let dec = greedy_accept(dr, vt);
+            self.core.metrics.drafted += g as u64;
+            self.core.metrics.accepted += dec.accepted as u64;
+            self.core.metrics.accept_len.add(dec.accepted as f64);
+            if self.cfg.collect_similarity {
+                for j in 0..g {
+                    if self.samples.len() < 100_000 {
+                        self.samples.push(SimilaritySample {
+                            p_draft: draft_probs[i * g + j],
+                            p_verify: v.pfed[i * (g + 1) + j],
+                            accepted: j < dec.accepted,
+                        });
+                    }
+                }
+            }
+            self.core.commit(i, &dec.committed, g, out);
+        }
+        self.core.metrics.add_phase(PhaseKind::Host, timer.elapsed_ns(), 0);
+        Ok(())
+    }
+}
+
+impl<'s> Engine for HierSpecEngine<'s> {
+    fn name(&self) -> &'static str {
+        "hierspec"
+    }
+
+    fn core(&self) -> &BatchCore {
+        &self.core
+    }
+
+    fn core_mut(&mut self) -> &mut BatchCore {
+        &mut self.core
+    }
+
+    fn step(&mut self) -> Result<Vec<StepEvent>> {
+        let mut out = Vec::new();
+        self.admit_and_prefill(&mut out)?;
+        self.cycle(&mut out)?;
+        Ok(out)
+    }
+
+    fn take_samples(&mut self) -> Vec<SimilaritySample> {
+        std::mem::take(&mut self.samples)
+    }
+}

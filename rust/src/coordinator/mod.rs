@@ -19,11 +19,16 @@
 //! * `autoregressive`— W16A16 / W4A16 / W4A4 baselines.
 //! * `eagle`         — EAGLE-style baseline: separate draft model,
 //!                     chain/tree drafting, simulated memory accounting.
+//! * `hierspec`      — QuantSpec-style hierarchical self-speculation:
+//!                     one W4A16 module, quantized shadow KV for the
+//!                     draft phase, full-precision verify that
+//!                     requantizes the shadow.
 
 pub mod acceptance;
 pub mod autoregressive;
 pub mod eagle;
 pub mod engine;
+pub mod hierspec;
 pub mod queue;
 pub mod request;
 pub mod spec_decode;
@@ -31,6 +36,7 @@ pub mod spec_decode;
 pub use acceptance::{greedy_accept, AcceptDecision};
 pub use autoregressive::ArEngine;
 pub use eagle::{EagleConfig, EagleEngine};
+pub use hierspec::{HierSpecConfig, HierSpecEngine};
 pub use engine::{build_engine, BatchCore, Engine, PrefillBatch, StepBatch};
 pub use queue::{
     build_policy, EdfPolicy, FcfsPolicy, PriorityPolicy, SchedPolicy, SjfPolicy,

@@ -42,9 +42,11 @@ pub const DEFAULT_PRIORITY: u8 = 1;
 /// `temperature` and `seed` are threaded through every layer and
 /// validated, but the AOT-compiled entries return greedy argmax tokens
 /// (the paper's reproducibility setup) and logits never cross the host
-/// boundary, so generation currently behaves as temperature 0 for any
-/// accepted value; the fields exist so host-side samplers and future
-/// sampling entries consume them without another API change.
+/// boundary. Engines advertise this via `Engine::argmax_only`: the
+/// server rejects `temperature > 0` against such an engine with a
+/// precise `bad_request` (and the CLI warns) instead of silently
+/// decoding greedily; the fields exist so host-side samplers and
+/// future sampling entries consume them without another API change.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SamplingParams {
     /// generation budget (counting the prefill's first token).

@@ -53,8 +53,45 @@ impl CostModel {
         Self::ns_for(&self.twin, mode, phase, batch, tokens, ctx)
     }
 
+    /// Like [`CostModel::call_ns`], but with the KV cache read at an
+    /// explicit bit width instead of the mode-implied one — the
+    /// HierSpec draft phase attends over the `kv_bits` shadow tier
+    /// while computing at verify (W4A16) weight precision, which is
+    /// exactly the bandwidth saving this prices.
+    pub fn call_ns_kv_bits(
+        &self,
+        mode: Mode,
+        phase: Phase,
+        batch: usize,
+        tokens: usize,
+        ctx: usize,
+        kv_bits: u8,
+    ) -> u128 {
+        Self::ns_inner(
+            &self.twin,
+            mode,
+            phase,
+            batch,
+            tokens,
+            ctx,
+            self.twin.kv_bytes_per_token_bits(kv_bits),
+        )
+    }
+
     /// Same, for an arbitrary twin (e.g. a draft model on the same device).
     pub fn ns_for(twin: &Twin, mode: Mode, phase: Phase, batch: usize, tokens: usize, ctx: usize) -> u128 {
+        Self::ns_inner(twin, mode, phase, batch, tokens, ctx, twin.kv_bytes_per_token(mode))
+    }
+
+    fn ns_inner(
+        twin: &Twin,
+        mode: Mode,
+        phase: Phase,
+        batch: usize,
+        tokens: usize,
+        ctx: usize,
+        kv_bytes_per_token: usize,
+    ) -> u128 {
         let p = twin.n_params as f64;
         let weight_traffic = match mode {
             // fp16 weights
@@ -68,8 +105,7 @@ impl CostModel {
             // (calibrated to paper Table 6: W4A4/W4A16 ~ 1.8-2.3x)
             Mode::W4A4 => 1.2 * p,
         };
-        let kv_traffic = (batch * ctx * twin.kv_bytes_per_token(mode)) as f64
-            * tokens as f64;
+        let kv_traffic = (batch * ctx * kv_bytes_per_token) as f64 * tokens as f64;
         let mem_ns = (weight_traffic + kv_traffic) / l20::HBM_BW_BYTES_PER_NS;
 
         let flops = 2.0 * p * (batch * tokens) as f64;
@@ -94,6 +130,22 @@ impl CostModel {
         ns
     }
 
+    /// Advance the clock for a call whose KV traffic runs at an
+    /// explicit bit width (the HierSpec quantized-shadow draft).
+    pub fn charge_kv_bits(
+        &mut self,
+        mode: Mode,
+        phase: Phase,
+        batch: usize,
+        tokens: usize,
+        ctx: usize,
+        kv_bits: u8,
+    ) -> u128 {
+        let ns = self.call_ns_kv_bits(mode, phase, batch, tokens, ctx, kv_bits);
+        self.virtual_ns += ns;
+        ns
+    }
+
     /// Weight bytes resident on the virtual device.
     pub fn weight_bytes(&self, mode: Mode) -> usize {
         match mode {
@@ -106,6 +158,12 @@ impl CostModel {
     /// KV bytes for `batch` sequences of length `ctx`.
     pub fn kv_bytes(&self, mode: Mode, batch: usize, ctx: usize) -> usize {
         batch * ctx * self.twin.kv_bytes_per_token(mode)
+    }
+
+    /// KV bytes at an explicit storage width (the quantized shadow
+    /// tier's residency for the OOM simulation).
+    pub fn kv_bytes_bits(&self, bits: u8, batch: usize, ctx: usize) -> usize {
+        batch * ctx * self.twin.kv_bytes_per_token_bits(bits)
     }
 
     /// Admission check: would this engine configuration fit in device
@@ -166,6 +224,36 @@ mod tests {
         let verify = c.call_ns(Mode::W4A16, Phase::Chunk, 8, 4, 512);
         let decodes = 4 * c.call_ns(Mode::W4A16, Phase::Decode, 8, 1, 512);
         assert!(verify < decodes / 2, "{verify} vs {decodes}");
+    }
+
+    #[test]
+    fn quantized_kv_draft_cheaper_than_full_precision_decode() {
+        // the HierSpec claim priced by the cost model: a W4A16 decode
+        // step over a 4-bit shadow KV beats the same step over the
+        // fp16 cache, and the saving grows with context (KV traffic
+        // dominates weight traffic at long ctx)
+        let c = cm();
+        for ctx in [512usize, 2048] {
+            let full = c.call_ns(Mode::W4A16, Phase::Decode, 16, 1, ctx);
+            let shadow = c.call_ns_kv_bits(Mode::W4A16, Phase::Decode, 16, 1, ctx, 4);
+            assert!(shadow < full, "ctx={ctx}: {shadow} !< {full}");
+        }
+        // width-16 shadow degenerates to the fp16 cache cost
+        assert_eq!(
+            c.call_ns_kv_bits(Mode::W4A16, Phase::Decode, 16, 1, 512, 16),
+            c.call_ns(Mode::W4A16, Phase::Decode, 16, 1, 512)
+        );
+        // monotone in width
+        let t = |bits| c.call_ns_kv_bits(Mode::W4A16, Phase::Decode, 16, 1, 2048, bits);
+        assert!(t(2) < t(4) && t(4) < t(8));
+    }
+
+    #[test]
+    fn charge_kv_bits_accumulates_like_charge() {
+        let mut c = cm();
+        let a = c.charge_kv_bits(Mode::W4A16, Phase::Decode, 8, 1, 512, 4);
+        assert_eq!(c.virtual_ns, a);
+        assert_eq!(a, c.call_ns_kv_bits(Mode::W4A16, Phase::Decode, 8, 1, 512, 4));
     }
 
     #[test]

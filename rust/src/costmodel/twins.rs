@@ -27,6 +27,14 @@ impl Twin {
         }
     }
 
+    /// KV bytes per token at an explicit storage width — the
+    /// hierarchical shadow tier HierSpec drafts over (`--kv-bits`).
+    /// `kv_bytes_per_token` keeps the mode-implied widths.
+    pub fn kv_bytes_per_token_bits(&self, bits: u8) -> usize {
+        let elems = self.n_layers * 2 * self.n_kv_heads * self.head_dim;
+        (elems * bits as usize).div_ceil(8)
+    }
+
     pub fn lookup(name: &str) -> Twin {
         match name {
             "llama3.2-3b" => Twin {
@@ -103,5 +111,16 @@ mod tests {
             t.kv_bytes_per_token(Mode::W4A4) * 4,
             t.kv_bytes_per_token(Mode::W4A16)
         );
+    }
+
+    #[test]
+    fn explicit_bit_widths_match_mode_widths() {
+        let t = Twin::lookup("llama2-7b");
+        // 4-bit shadow == the W4A4 int4 cache; 16-bit == the fp16 cache
+        assert_eq!(t.kv_bytes_per_token_bits(4), t.kv_bytes_per_token(Mode::W4A4));
+        assert_eq!(t.kv_bytes_per_token_bits(16), t.kv_bytes_per_token(Mode::W4A16));
+        // monotone in width
+        assert!(t.kv_bytes_per_token_bits(2) < t.kv_bytes_per_token_bits(4));
+        assert!(t.kv_bytes_per_token_bits(4) < t.kv_bytes_per_token_bits(8));
     }
 }

@@ -9,9 +9,171 @@
 //! Continuous batching (ORCA-style): a finished slot is released and the
 //! next queued request is admitted into it immediately; other slots are
 //! untouched (their positions are per-slot).
+//!
+//! # Hierarchical (quantized-shadow) cache simulation
+//!
+//! The HierSpec engine (QuantSpec-style self-speculation) drafts over a
+//! low-precision *shadow* of the KV cache and verifies over full
+//! precision. The physical substrate executes everything in f32, so the
+//! shadow tier is simulated here at the logical level: a
+//! [`QuantizedView`] per slot keeps, alongside each committed entry's
+//! full-precision proxy value, its `kv_bits` quantized code
+//! (quantize-on-commit). The draft phase appends *speculative* entries;
+//! the verify phase's commit rolls them back and overwrites/requantizes
+//! from full precision — the hierarchical analogue of QSPEC's
+//! KV-overwriting. Engines without a shadow (`SlotManager::new`) pay
+//! nothing: every shadow hook is a no-op.
 
 use crate::coordinator::request::FinishReason;
 use crate::error::{QspecError, Result};
+
+/// Deterministic full-precision proxy value in [-1, 1) for the KV entry
+/// a (token, position) pair would write — the quantity the shadow tier
+/// quantizes. A splitmix-style hash keeps it reproducible across runs
+/// and uncorrelated across neighboring tokens/positions, so round-trip
+/// error statistics behave like real cache content would.
+pub fn kv_proxy(token: i32, pos: usize) -> f32 {
+    let mut x = (token as u32 as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((pos as u64).wrapping_mul(0xD1B5_4A32_D192_ED03));
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    x ^= x >> 33;
+    ((x >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32
+}
+
+/// One entry of the hierarchical cache simulation: the full-precision
+/// tier's value plus its quantized code in the shadow tier.
+#[derive(Clone, Copy, Debug)]
+struct KvEntry {
+    full: f32,
+    code: u16,
+}
+
+/// The simulated low-precision shadow of one slot's KV entries
+/// (QuantSpec-style hierarchical cache). Committed entries are
+/// quantized from full precision (`commit_overwrite`); the draft phase
+/// appends speculative entries (`speculate`) which the next commit
+/// rolls back — mirroring "draft writes the low-bit tier, verify
+/// overwrites it" without a second device buffer.
+///
+/// Quantization is symmetric uniform over [-1, 1] at `bits` bits:
+/// `levels = 2^bits`, step `2/(levels-1)`, so the round-trip error of
+/// any in-range value is bounded by [`QuantizedView::max_roundtrip_error`]
+/// = `1/(levels-1)` (half a step).
+#[derive(Clone, Debug)]
+pub struct QuantizedView {
+    bits: u8,
+    entries: Vec<KvEntry>,
+    /// entries[..committed] are verify-overwritten; the tail is
+    /// speculative (draft-phase writes awaiting verification).
+    committed: usize,
+}
+
+impl QuantizedView {
+    /// Supported widths: 1..=16 (codes are u16). Engine configs narrow
+    /// this further (see `ServeConfig::validate`).
+    pub fn new(bits: u8) -> Self {
+        assert!((1..=16).contains(&bits), "kv_bits {bits} outside 1..=16");
+        QuantizedView { bits, entries: Vec::new(), committed: 0 }
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    fn levels(bits: u8) -> u32 {
+        1u32 << bits
+    }
+
+    /// Quantize a value (clamped to [-1, 1]) to its `bits`-wide code.
+    pub fn quantize(bits: u8, v: f32) -> u16 {
+        let max_code = (Self::levels(bits) - 1) as f32;
+        let t = (v.clamp(-1.0, 1.0) + 1.0) / 2.0;
+        (t * max_code).round() as u16
+    }
+
+    /// Reconstruct the value a code stands for.
+    pub fn dequantize(bits: u8, code: u16) -> f32 {
+        let max_code = (Self::levels(bits) - 1) as f32;
+        (code as f32 / max_code) * 2.0 - 1.0
+    }
+
+    /// Worst-case |v - dequantize(quantize(v))| for v in [-1, 1]:
+    /// half the quantization step.
+    pub fn max_roundtrip_error(bits: u8) -> f32 {
+        1.0 / (Self::levels(bits) - 1) as f32
+    }
+
+    /// Append a draft-phase (speculative) entry: written at draft
+    /// precision only, so the full tier records the *dequantized* value
+    /// — until verification overwrites it, this entry is lossy in both
+    /// tiers, exactly like a real low-bit cache write.
+    pub fn speculate(&mut self, v: f32) {
+        let code = Self::quantize(self.bits, v);
+        self.entries.push(KvEntry { full: Self::dequantize(self.bits, code), code });
+    }
+
+    /// Drop all speculative entries (the verify phase re-derives them).
+    pub fn rollback_speculative(&mut self) {
+        self.entries.truncate(self.committed);
+    }
+
+    /// Verify-phase overwrite: the full tier takes the exact value and
+    /// the shadow is requantized from it. Callers roll back speculative
+    /// entries first ([`QuantizedView::rollback_speculative`]).
+    pub fn commit_overwrite(&mut self, v: f32) {
+        debug_assert_eq!(self.entries.len(), self.committed, "speculative tail not rolled back");
+        self.entries.push(KvEntry { full: v, code: Self::quantize(self.bits, v) });
+        self.committed += 1;
+    }
+
+    pub fn committed_len(&self) -> usize {
+        self.committed
+    }
+
+    pub fn speculative_len(&self) -> usize {
+        self.entries.len() - self.committed
+    }
+
+    /// Full-precision tier value at entry `i`.
+    pub fn full(&self, i: usize) -> f32 {
+        self.entries[i].full
+    }
+
+    /// Shadow-tier (dequantized) value at entry `i`.
+    pub fn dequantized(&self, i: usize) -> f32 {
+        Self::dequantize(self.bits, self.entries[i].code)
+    }
+
+    /// Mean |full - dequantized| over committed entries — the signal
+    /// the HierSpec draft uses to decide how lossy its attention over
+    /// the shadow tier is (0.0 when empty).
+    pub fn mean_roundtrip_error(&self) -> f32 {
+        if self.committed == 0 {
+            return 0.0;
+        }
+        let sum: f32 = self.entries[..self.committed]
+            .iter()
+            .map(|e| (e.full - Self::dequantize(self.bits, e.code)).abs())
+            .sum();
+        sum / self.committed as f32
+    }
+
+    /// Invariant after any verify-phase overwrite: every committed
+    /// shadow code equals the quantization of its full-precision value
+    /// (the two tiers describe the same cache).
+    pub fn is_consistent(&self) -> bool {
+        self.entries[..self.committed]
+            .iter()
+            .all(|e| e.code == Self::quantize(self.bits, e.full))
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.committed = 0;
+    }
+}
 
 /// Logical state of one batch slot.
 #[derive(Clone, Debug)]
@@ -69,6 +231,9 @@ pub struct SlotManager {
     max_seq: usize,
     /// prompt chunk length (all prompts are left-padded to this).
     prefill_t: usize,
+    /// per-slot quantized shadow tier (HierSpec engines only; `None`
+    /// keeps every shadow hook a no-op for the other engine kinds).
+    shadow: Option<Vec<QuantizedView>>,
 }
 
 impl SlotManager {
@@ -77,6 +242,54 @@ impl SlotManager {
             slots: vec![Slot::default(); batch],
             max_seq,
             prefill_t,
+            shadow: None,
+        }
+    }
+
+    /// A slot manager with a `kv_bits` quantized shadow tier alongside
+    /// every slot (the hierarchical-cache simulation HierSpec drafts
+    /// over). Shadow entries track *generated* tokens: they are
+    /// quantized on commit, overwritten/requantized by the verify
+    /// phase, and cleared with the slot on release.
+    pub fn with_shadow(batch: usize, max_seq: usize, prefill_t: usize, kv_bits: u8) -> Self {
+        SlotManager {
+            slots: vec![Slot::default(); batch],
+            max_seq,
+            prefill_t,
+            shadow: Some((0..batch).map(|_| QuantizedView::new(kv_bits)).collect()),
+        }
+    }
+
+    /// Shadow-tier width, when one is configured.
+    pub fn shadow_bits(&self) -> Option<u8> {
+        self.shadow.as_ref().and_then(|v| v.first()).map(QuantizedView::bits)
+    }
+
+    /// Slot `idx`'s shadow view (None when the manager has no shadow).
+    pub fn shadow_view(&self, idx: usize) -> Option<&QuantizedView> {
+        self.shadow.as_ref().map(|v| &v[idx])
+    }
+
+    /// Mean shadow round-trip error for slot `idx` (0.0 without a
+    /// shadow or before anything committed) — the draft-lossiness
+    /// signal.
+    pub fn shadow_error(&self, idx: usize) -> f32 {
+        self.shadow
+            .as_ref()
+            .map(|v| v[idx].mean_roundtrip_error())
+            .unwrap_or(0.0)
+    }
+
+    /// Draft phase: append speculative shadow entries for the drafted
+    /// tokens of slot `idx` (positions continue the committed run).
+    /// No-op without a shadow.
+    pub fn shadow_speculate(&mut self, idx: usize, toks: &[i32]) {
+        if let Some(views) = self.shadow.as_mut() {
+            let view = &mut views[idx];
+            let base = view.committed_len();
+            for (j, &t) in toks.iter().enumerate() {
+                view.speculate(kv_proxy(t, base + j));
+            }
         }
     }
 
@@ -148,6 +361,9 @@ impl SlotManager {
             stop,
             ..Slot::default()
         };
+        if let Some(views) = self.shadow.as_mut() {
+            views[idx].clear();
+        }
         Ok(idx)
     }
 
@@ -156,6 +372,11 @@ impl SlotManager {
     /// when it is fed as the pending token). Returns done.
     pub fn after_prefill(&mut self, idx: usize, next_tok: i32, eos: i32) -> bool {
         let prefill_t = self.prefill_t as i32;
+        if let Some(views) = self.shadow.as_mut() {
+            // prefill runs at verify precision: the first generated
+            // token enters both tiers, requantized from full precision
+            views[idx].commit_overwrite(kv_proxy(next_tok, 0));
+        }
         let s = &mut self.slots[idx];
         s.pos = prefill_t;
         s.pending = next_tok;
@@ -217,6 +438,17 @@ impl SlotManager {
                 s.finish = FinishReason::Length;
             }
         }
+        if let Some(views) = self.shadow.as_mut() {
+            // verify-phase overwrite: speculative draft entries are
+            // dropped and the verified tokens are requantized into the
+            // shadow from full precision
+            let view = &mut views[idx];
+            view.rollback_speculative();
+            let base = view.committed_len();
+            for (j, &t) in committed.iter().enumerate() {
+                view.commit_overwrite(kv_proxy(t, base + j));
+            }
+        }
         committed
     }
 
@@ -231,11 +463,16 @@ impl SlotManager {
     }
 
     /// Release a finished slot; returns (req_id, generated tokens).
+    /// Clears both cache tiers: the logical slot state and, when a
+    /// shadow is configured, its quantized view.
     pub fn release(&mut self, idx: usize) -> Option<(u64, Vec<i32>)> {
         let s = &mut self.slots[idx];
         let id = s.req_id.take()?;
         let toks = std::mem::take(&mut s.generated);
         s.done = false;
+        if let Some(views) = self.shadow.as_mut() {
+            views[idx].clear();
+        }
         Some((id, toks))
     }
 
@@ -401,5 +638,78 @@ mod tests {
         assert_eq!(toks, vec![5, 6, 2]);
         assert!(m.free_slots().contains(&i));
         assert!(m.release(i).is_none());
+    }
+
+    #[test]
+    fn shadow_is_absent_by_default() {
+        let m = mgr();
+        assert!(m.shadow_bits().is_none());
+        assert!(m.shadow_view(0).is_none());
+        assert_eq!(m.shadow_error(0), 0.0);
+    }
+
+    #[test]
+    fn shadow_tracks_commits_and_rolls_back_speculation() {
+        let mut m = SlotManager::with_shadow(2, 64, 16, 4);
+        assert_eq!(m.shadow_bits(), Some(4));
+        let i = m.admit(1, 4, 10, vec![]).unwrap();
+        m.after_prefill(i, 5, 2);
+        assert_eq!(m.shadow_view(i).unwrap().committed_len(), 1);
+        // draft writes three speculative entries...
+        m.shadow_speculate(i, &[6, 7, 8]);
+        assert_eq!(m.shadow_view(i).unwrap().speculative_len(), 3);
+        // ...verify accepts only two tokens: speculation rolled back,
+        // the verified tokens requantized from full precision
+        m.commit(i, &[6, 9], 2, 3);
+        let v = m.shadow_view(i).unwrap();
+        assert_eq!(v.committed_len(), 3);
+        assert_eq!(v.speculative_len(), 0);
+        assert!(v.is_consistent());
+        assert!(m.shadow_error(i) <= QuantizedView::max_roundtrip_error(4));
+    }
+
+    #[test]
+    fn release_clears_both_tiers() {
+        let mut m = SlotManager::with_shadow(1, 64, 16, 4);
+        let i = m.admit(1, 4, 10, vec![]).unwrap();
+        m.after_prefill(i, 5, 2);
+        m.shadow_speculate(i, &[6]);
+        m.release(i).unwrap();
+        assert_eq!(m.shadow_view(i).unwrap().committed_len(), 0);
+        assert_eq!(m.shadow_view(i).unwrap().speculative_len(), 0);
+        // the next admission starts from an empty shadow
+        let i = m.admit(2, 4, 10, vec![]).unwrap();
+        assert_eq!(m.shadow_error(i), 0.0);
+    }
+
+    #[test]
+    fn quantize_roundtrip_error_bounded_and_monotone() {
+        for bits in [2u8, 4, 8] {
+            let bound = QuantizedView::max_roundtrip_error(bits);
+            for k in 0..64 {
+                let v = k as f32 / 32.0 - 1.0;
+                let dq = QuantizedView::dequantize(bits, QuantizedView::quantize(bits, v));
+                assert!((dq - v).abs() <= bound + 1e-6, "bits={bits} v={v} dq={dq}");
+            }
+        }
+        assert!(
+            QuantizedView::max_roundtrip_error(8) < QuantizedView::max_roundtrip_error(4)
+        );
+        assert!(
+            QuantizedView::max_roundtrip_error(4) < QuantizedView::max_roundtrip_error(2)
+        );
+    }
+
+    #[test]
+    fn kv_proxy_is_deterministic_and_in_range() {
+        for t in [-1, 0, 1, 5, 1000] {
+            for p in [0usize, 1, 17, 511] {
+                let v = kv_proxy(t, p);
+                assert_eq!(v, kv_proxy(t, p));
+                assert!((-1.0..1.0).contains(&v), "{v}");
+            }
+        }
+        assert_ne!(kv_proxy(5, 0), kv_proxy(5, 1));
+        assert_ne!(kv_proxy(5, 0), kv_proxy(6, 0));
     }
 }

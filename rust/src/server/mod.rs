@@ -33,9 +33,11 @@
 //! clamped to `[1, max_seq]`, default from the server config);
 //! `stream` (bool, default false); `stop` (array of strings, each
 //! trimmed from the output on match); `temperature` (number in [0,2])
-//! and `seed` (integer) — accepted and threaded per-request, but the
-//! AOT entries are greedy argmax, so generation currently behaves as
-//! temperature 0. New in v1.1: `priority` (integer in [0, 3]; 0 =
+//! and `seed` (integer) — parsed and threaded per-request, but every
+//! current engine serves argmax-only AOT entries
+//! ([`Engine::argmax_only`]), so `temperature > 0` is answered with a
+//! precise `bad_request` naming the engine instead of silently
+//! decoding greedily. New in v1.1: `priority` (integer in [0, 3]; 0 =
 //! batch, 1 = normal [the default], 2 = high, 3 = critical) and
 //! `deadline_ms` (integer >= 1): a latency budget relative to
 //! submission — a request still queued when its budget lapses answers
@@ -588,6 +590,21 @@ fn handle_inbound(
             // and the QoS fields
             if let Err(e) = req.validate() {
                 let _ = resp.send(format_error("bad_request", &e.to_string()));
+                return;
+            }
+            // engine-level validation: temperature sampling needs a
+            // logits-returning entry; against an argmax-only engine the
+            // request is rejected precisely instead of silently
+            // decoding greedily (ROADMAP: temperature end-to-end)
+            if req.params.temperature > 0.0 && engine.argmax_only() {
+                let _ = resp.send(format_error(
+                    "bad_request",
+                    &format!(
+                        "field \"temperature\": engine \"{}\" serves argmax-only AOT \
+                         entries and cannot sample; omit temperature or pass 0",
+                        engine.name()
+                    ),
+                ));
                 return;
             }
             // admission control: past the SLO, sheddable classes get a

@@ -1,0 +1,164 @@
+//! Property tests for `coordinator::acceptance` — the paper's
+//! losslessness invariant, checked under random draft/verify streams
+//! with the in-tree shrinking property harness (`util::check`).
+//!
+//! What must hold for `greedy_accept(drafts, verify_argmax)`:
+//!   1. it returns the longest matching prefix plus exactly one
+//!      correction/bonus token from the verifier;
+//!   2. it never reads the verifier stream past the first mismatch —
+//!      the tail beyond position `accepted` cannot influence the
+//!      decision (speculative decoding may not leak unverified state);
+//!   3. driven in a loop against a deterministic verifier, the
+//!      committed token stream equals the verifier's own greedy
+//!      rollout exactly, whatever the drafts were (losslessness: the
+//!      draft phase can only change *speed*, never *output*).
+
+use qspec::coordinator::greedy_accept;
+use qspec::util::check::check;
+use qspec::util::prng::Pcg32;
+
+/// Small vocab so random drafts agree with the verifier often enough
+/// to exercise multi-token acceptance, not just instant rejection.
+const VOCAB: u32 = 8;
+
+fn gen_streams(r: &mut Pcg32) -> (Vec<u32>, Vec<u32>) {
+    let g = r.range_inclusive(1, 6) as usize;
+    let drafts: Vec<u32> = (0..g).map(|_| r.below(VOCAB)).collect();
+    let verify: Vec<u32> = (0..g + 1).map(|_| r.below(VOCAB)).collect();
+    (drafts, verify)
+}
+
+fn to_i32(v: &[u32]) -> Vec<i32> {
+    v.iter().map(|&x| x as i32).collect()
+}
+
+/// The longest prefix where draft and verifier agree.
+fn matching_prefix(drafts: &[i32], verify: &[i32]) -> usize {
+    drafts.iter().zip(verify).take_while(|(d, v)| d == v).count()
+}
+
+#[test]
+fn accepts_longest_matching_prefix_plus_one_correction() {
+    check("accept-prefix", 2000, gen_streams, |(drafts, verify)| {
+        let d = to_i32(drafts);
+        let v = to_i32(verify);
+        let dec = greedy_accept(&d, &v);
+        let k = matching_prefix(&d, &v);
+        if dec.accepted != k {
+            return Err(format!("accepted {} != longest matching prefix {k}", dec.accepted));
+        }
+        // exactly the prefix plus one token, and that token is the
+        // verifier's at the rejection/bonus position
+        if dec.committed.len() != k + 1 {
+            return Err(format!("committed {} tokens != {k} + 1", dec.committed.len()));
+        }
+        if dec.committed[..k] != d[..k] {
+            return Err("committed prefix != accepted drafts".into());
+        }
+        if dec.committed[k] != v[k] {
+            return Err("correction token is not the verifier's".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn never_reads_past_the_first_mismatch() {
+    check("accept-no-lookahead", 2000, gen_streams, |(drafts, verify)| {
+        let d = to_i32(drafts);
+        let v = to_i32(verify);
+        let dec = greedy_accept(&d, &v);
+        // poison everything after the decision point: the verifier
+        // positions beyond `accepted` correspond to unverified state
+        // and must not be able to change the outcome
+        let mut poisoned = v.clone();
+        for t in poisoned.iter_mut().skip(dec.accepted + 1) {
+            *t = -999;
+        }
+        let dec2 = greedy_accept(&d, &poisoned);
+        if dec2 != dec {
+            return Err(format!("decision depends on the unread tail: {dec:?} vs {dec2:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// A deterministic toy verifier: its argmax after any context is a
+/// hash of that context. Stands in for "the W4A16 model" so the
+/// rollout-equality invariant is checkable without artifacts.
+fn verifier_next(context: &[i32]) -> i32 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in context {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    (h % VOCAB as u64) as i32
+}
+
+#[test]
+fn committed_stream_equals_verifier_rollout_regardless_of_drafts() {
+    // the losslessness invariant (paper Sec. 3.1): run cycles of
+    // arbitrary drafting + greedy_accept against the toy verifier and
+    // the committed stream must equal the verifier's own pure-AR
+    // rollout of the same length
+    check(
+        "accept-lossless-rollout",
+        300,
+        |r: &mut Pcg32| {
+            let gamma = r.range_inclusive(1, 5);
+            let cycles = r.range_inclusive(1, 8);
+            // one u32 per potential draft position: the drafting policy
+            // (sometimes the true next token, sometimes garbage)
+            let raw: Vec<u32> = (0..(cycles * gamma) as usize).map(|_| r.next_u32()).collect();
+            (gamma, raw)
+        },
+        |(gamma, raw)| {
+            let gamma = (*gamma).max(1) as usize;
+            let mut committed: Vec<i32> = vec![verifier_next(&[])]; // "prefill" token
+            let mut draws = raw.iter().copied().peekable();
+            while draws.peek().is_some() && committed.len() <= raw.len() {
+                // draft gamma tokens: ~half the time the draft guesses
+                // the verifier's true continuation, otherwise garbage
+                let mut drafts = Vec::with_capacity(gamma);
+                let mut ctx = committed.clone();
+                for _ in 0..gamma {
+                    let u = match draws.next() {
+                        Some(u) => u,
+                        None => break,
+                    };
+                    let truth = verifier_next(&ctx);
+                    let t = if u % 2 == 0 { truth } else { (u % VOCAB) as i32 };
+                    drafts.push(t);
+                    ctx.push(t);
+                }
+                if drafts.is_empty() {
+                    break;
+                }
+                // the verifier scores prefix + drafts[..j] at position j
+                let mut verify = Vec::with_capacity(drafts.len() + 1);
+                let mut vctx = committed.clone();
+                for &t in &drafts {
+                    verify.push(verifier_next(&vctx));
+                    vctx.push(t);
+                }
+                verify.push(verifier_next(&vctx));
+                let dec = greedy_accept(&drafts, &verify);
+                if dec.committed.is_empty() || dec.committed.len() > drafts.len() + 1 {
+                    return Err("commit bounds violated".into());
+                }
+                committed.extend(dec.committed);
+            }
+            // pure-AR rollout of the same length must match exactly
+            let mut ar = vec![verifier_next(&[])];
+            while ar.len() < committed.len() {
+                ar.push(verifier_next(&ar));
+            }
+            if ar != committed {
+                return Err(format!(
+                    "speculative stream diverged from the verifier's rollout:\n  spec {committed:?}\n  ar   {ar:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}

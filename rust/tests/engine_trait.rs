@@ -1,20 +1,31 @@
-//! Trait-level engine + serving-protocol tests.
+//! Cross-engine conformance suite + serving-protocol tests.
 //!
-//! Two layers:
+//! Three layers:
 //!
+//! * **The conformance battery** ([`conformance`]): one generic
+//!   `fn conformance(&mut dyn Engine, ...)` exercising the full engine
+//!   contract — admission/completion invariants, streaming deltas,
+//!   cancel-queued, cancel-mid-flight (slot verifiably freed), stop
+//!   sequences, deadline expiry, and the stats-snapshot shape. Every
+//!   present and future `EngineKind` must pass the *identical* battery;
+//!   [`conformance_kinds`] matches exhaustively on `EngineKind`, so
+//!   adding a variant fails this suite at compile time until the new
+//!   engine is wired in.
 //! * **Session-free server tests** (always run): a mock engine over the
-//!   real `BatchCore` is served through the real TCP frontend
-//!   (`conn_thread` + `engine_loop`), covering the protocol-v1 surface
-//!   — streaming round trip, explicit + disconnect-driven cancellation
-//!   (slot verifiably freed), stop sequences, stats snapshots, legacy
-//!   one-line requests and precise error frames.
+//!   real `BatchCore` runs the battery and is served through the real
+//!   TCP frontend (`conn_thread` + `engine_loop`), covering the
+//!   protocol surface — streaming round trip, explicit +
+//!   disconnect-driven cancellation, stop sequences, QoS
+//!   (priority/shedding/deadlines), argmax-only temperature rejection,
+//!   stats snapshots, legacy one-line requests and precise error
+//!   frames.
 //! * **Artifact-gated suite** (`make artifacts` first; skips silently
-//!   otherwise): every engine kind (QSPEC, AR, EAGLE) is driven through
-//!   the same generic harness (`&mut dyn Engine`) and then through the
-//!   same TCP scenarios, so streaming/cancel/stats are verified against
-//!   each concrete engine. One #[test] drives the artifact layer: PJRT
-//!   client creation is expensive and the handles are not Send, so a
-//!   single test owns the session.
+//!   otherwise): every engine kind (QSPEC, AR, EAGLE, HierSpec) runs
+//!   the battery and the same TCP scenarios, plus the HierSpec
+//!   losslessness check (its committed output must equal the W4A16
+//!   verifier baseline token-for-token). One #[test] drives the
+//!   artifact layer: PJRT client creation is expensive and the handles
+//!   are not Send, so a single test owns the session.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -24,7 +35,10 @@ use std::thread;
 use std::time::Duration;
 
 use qspec::config::{EngineKind, SchedKind, ServeConfig, SloConfig};
-use qspec::coordinator::{build_engine, build_policy, BatchCore, Engine, StepEvent};
+use qspec::coordinator::{
+    build_engine, build_policy, BatchCore, Engine, FinishReason, GenerationRequest,
+    SamplingParams, StepEvent,
+};
 use qspec::costmodel::{twins::Twin, CostModel};
 use qspec::error::Result as QResult;
 use qspec::evalsuite;
@@ -33,6 +47,265 @@ use qspec::model::{Mode, Tokenizer};
 use qspec::runtime::{ArtifactStore, Session};
 use qspec::server::{self, Inbound};
 use qspec::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// the engine conformance battery
+// ---------------------------------------------------------------------------
+
+/// Upper bound on scheduling steps any battery scenario may take.
+const STEP_GUARD: usize = 100_000;
+
+/// The full engine contract, exercised against any `&mut dyn Engine`.
+/// The engine must be idle at entry and is left idle at exit, so the
+/// battery composes with further scenarios (e.g. the TCP layer) on the
+/// same instance. Each scenario asserts against metric *deltas*, so
+/// the battery is insensitive to what ran before it.
+fn conformance(engine: &mut dyn Engine, tok: &Tokenizer, prompts: &[String]) {
+    assert!(prompts.len() >= 2, "battery needs at least two prompts");
+    assert!(!engine.has_work(), "{}: battery expects an idle engine", engine.name());
+    admission_and_completion(engine, tok, prompts);
+    streaming_deltas(engine, tok, &prompts[0]);
+    cancel_queued(engine, tok, prompts);
+    cancel_mid_flight(engine, tok, prompts);
+    stop_sequences(engine, tok, &prompts[0]);
+    deadline_expiry(engine, tok, &prompts[1]);
+    stats_shape(engine);
+    assert!(!engine.has_work(), "{}: battery must leave the engine idle", engine.name());
+}
+
+fn greedy(tok: &Tokenizer, prompt: &str, max_tokens: usize) -> GenerationRequest {
+    GenerationRequest::greedy(tok.encode_prompt(prompt), max_tokens)
+}
+
+/// Step until `done(engine)` holds, collecting every event.
+fn step_until(
+    engine: &mut dyn Engine,
+    out: &mut Vec<StepEvent>,
+    mut done: impl FnMut(&dyn Engine, &[StepEvent]) -> bool,
+) {
+    for _ in 0..STEP_GUARD {
+        if done(&*engine, out) {
+            return;
+        }
+        out.extend(engine.step().expect("step"));
+    }
+    panic!("{}: scenario exceeded {STEP_GUARD} steps", engine.name());
+}
+
+/// Admission: ids are engine-assigned, dense and in submission order;
+/// every request finishes; the token/latency/queue metrics hold for
+/// ANY engine.
+fn admission_and_completion(engine: &mut dyn Engine, tok: &Tokenizer, prompts: &[String]) {
+    let name = engine.name();
+    let before = engine.metrics().clone();
+    let virt_before = engine.cost().virtual_ns;
+    let n = prompts.len();
+    let mut submitted = Vec::new();
+    for p in prompts {
+        submitted.push(engine.submit_request(greedy(tok, p, 24)));
+    }
+    for w in submitted.windows(2) {
+        assert_eq!(w[1], w[0] + 1, "{name}: ids must be dense and ordered");
+    }
+    assert!(engine.has_work(), "{name}: submitted work must be visible");
+
+    let mut fins = engine.run_to_completion().expect("run_to_completion");
+    assert!(!engine.has_work(), "{name}: work left after completion");
+    assert_eq!(fins.len(), n, "{name}: all requests must finish");
+    fins.sort_by_key(|f| f.id);
+    let ids: Vec<u64> = fins.iter().map(|f| f.id).collect();
+    assert_eq!(ids, submitted, "{name}: finished ids != submitted ids");
+
+    let m = engine.metrics();
+    assert_eq!(m.requests_done - before.requests_done, n as u64, "{name}");
+    // every engine counts exactly the emitted tokens as committed
+    assert_eq!(m.committed, m.tokens_out, "{name}");
+    let toks: usize = fins.iter().map(|f| f.tokens.len()).sum();
+    assert_eq!(toks as u64, m.tokens_out - before.tokens_out, "{name}");
+    // the queue-wait histogram sees one admission per request
+    assert_eq!(m.queue_wait.count() - before.queue_wait.count(), n as u64, "{name}");
+    assert_eq!(m.req_latency.count() - before.req_latency.count(), n as u64, "{name}");
+    for f in &fins {
+        assert!(f.latency_ns >= f.queue_ns, "{name}: wait > latency");
+        assert!(f.prompt_tokens > 0, "{name}: prompt usage missing");
+    }
+    // the virtual clock advanced (every phase charges it)
+    assert!(engine.cost().virtual_ns > virt_before, "{name}");
+}
+
+/// Streaming: the per-step deltas concatenate to exactly the terminal
+/// token list.
+fn streaming_deltas(engine: &mut dyn Engine, tok: &Tokenizer, prompt: &str) {
+    let name = engine.name();
+    let id = engine.submit_request(greedy(tok, prompt, 8));
+    let mut streamed = Vec::new();
+    let mut done = None;
+    while engine.has_work() {
+        for ev in engine.step().expect("step") {
+            match ev {
+                StepEvent::Delta { id: did, tokens } => {
+                    assert_eq!(did, id, "{name}: delta for a foreign id");
+                    streamed.extend(tokens);
+                }
+                StepEvent::Done(f) => done = Some(f),
+            }
+        }
+    }
+    let done = done.unwrap_or_else(|| panic!("{name}: no terminal event"));
+    assert_eq!(done.id, id, "{name}");
+    assert_eq!(streamed, done.tokens, "{name}: delta sum != final tokens");
+    assert!(!streamed.is_empty(), "{name}: nothing streamed");
+}
+
+/// Cancel-queued: a request still waiting for admission is removed
+/// without ever touching a slot; double cancel is a no-op.
+fn cancel_queued(engine: &mut dyn Engine, tok: &Tokenizer, prompts: &[String]) {
+    let name = engine.name();
+    let before = engine.metrics().clone();
+    // no step runs between these submits, so everything is queued
+    let mut fillers = Vec::new();
+    for i in 0..engine.slot_capacity() {
+        fillers.push(engine.submit_request(greedy(tok, &prompts[i % prompts.len()], 64)));
+    }
+    let victim = engine.submit_request(greedy(tok, &prompts[0], 64));
+    assert!(engine.queue_depth() > 0, "{name}");
+
+    let f = engine.cancel(victim).unwrap_or_else(|| panic!("{name}: queued not cancellable"));
+    assert_eq!(f.finish_reason, FinishReason::Cancelled, "{name}");
+    assert!(f.tokens.is_empty(), "{name}: a queued request has no output");
+    assert_eq!(engine.active_requests(), 0, "{name}: nothing was admitted");
+    assert!(engine.cancel(victim).is_none(), "{name}: double cancel must be a no-op");
+
+    for id in fillers {
+        engine.cancel(id).unwrap_or_else(|| panic!("{name}: filler {id} not cancellable"));
+    }
+    let m = engine.metrics();
+    assert_eq!(
+        m.cancelled - before.cancelled,
+        engine.slot_capacity() as u64 + 1,
+        "{name}"
+    );
+    assert_eq!(m.requests_done, before.requests_done, "{name}: cancelled != done");
+    assert!(!engine.has_work(), "{name}: cancels must drain the queue");
+}
+
+/// Cancel-mid-flight: a generating request is cancelled, its partial
+/// output returned, and its slot (with the KV positions) is verifiably
+/// freed — a follow-up request runs to completion in it.
+fn cancel_mid_flight(engine: &mut dyn Engine, tok: &Tokenizer, prompts: &[String]) {
+    let name = engine.name();
+    let before = engine.metrics().clone();
+    let victim = engine.submit_request(greedy(tok, &prompts[0], 10_000));
+    // step until the victim is generating and has visible output
+    let mut events = Vec::new();
+    step_until(engine, &mut events, |e, evs| {
+        e.active_requests() >= 1
+            && evs.iter().any(|ev| matches!(ev, StepEvent::Delta { id, .. } if *id == victim))
+    });
+    let active_before = engine.active_requests();
+
+    let f = engine.cancel(victim).unwrap_or_else(|| panic!("{name}: active not cancellable"));
+    assert_eq!(f.finish_reason, FinishReason::Cancelled, "{name}");
+    assert!(!f.tokens.is_empty(), "{name}: partial output must be returned");
+    assert_eq!(engine.active_requests(), active_before - 1, "{name}: slot not freed");
+
+    // the freed slot admits and completes a waiter
+    let waiter = engine.submit_request(greedy(tok, &prompts[1], 4));
+    let fins = engine.run_to_completion().expect("run_to_completion");
+    assert_eq!(fins.len(), 1, "{name}");
+    assert_eq!(fins[0].id, waiter, "{name}: waiter must run in the freed slot");
+    assert_eq!(engine.metrics().cancelled - before.cancelled, 1, "{name}");
+    assert!(engine.cancel(victim).is_none(), "{name}: finished ids are not cancellable");
+}
+
+/// Stop sequences: a stop derived from the engine's own deterministic
+/// greedy output terminates generation with `Stop`, and the matched
+/// tokens are trimmed from the output.
+fn stop_sequences(engine: &mut dyn Engine, tok: &Tokenizer, prompt: &str) {
+    let name = engine.name();
+    // reference run: what this engine greedily generates
+    engine.submit_request(greedy(tok, prompt, 12));
+    let reference = engine.run_to_completion().expect("reference run").remove(0).tokens;
+    if reference.len() < 3 {
+        // EOS before a 2-token stop could match; nothing to derive
+        eprintln!("{name}: output too short for the stop scenario, skipping");
+        return;
+    }
+    let stop: Vec<i32> = reference[1..3].to_vec();
+    let mut params = SamplingParams::greedy(12);
+    params.stop = vec![stop.clone()];
+    let id = engine
+        .submit_request(GenerationRequest::new(tok.encode_prompt(prompt), params));
+    let fins = engine.run_to_completion().expect("stop run");
+    assert_eq!(fins.len(), 1, "{name}");
+    assert_eq!(fins[0].id, id, "{name}");
+    assert_eq!(fins[0].finish_reason, FinishReason::Stop, "{name}: stop ignored");
+    let out = &fins[0].tokens;
+    assert!(
+        !out.windows(stop.len()).any(|w| w == stop),
+        "{name}: matched stop not trimmed: {out:?}"
+    );
+    assert!(
+        reference.starts_with(out),
+        "{name}: stop run diverged from the greedy reference: {out:?} vs {reference:?}"
+    );
+    assert!(out.len() < reference.len(), "{name}: stop did not shorten the output");
+}
+
+/// Deadline expiry: a request whose latency budget lapsed while queued
+/// terminates with `DeadlineExceeded` at admission, without consuming
+/// a slot.
+fn deadline_expiry(engine: &mut dyn Engine, tok: &Tokenizer, prompt: &str) {
+    let name = engine.name();
+    let before = engine.metrics().clone();
+    let id = engine.submit_request(greedy(tok, prompt, 8).with_deadline_ms(1));
+    thread::sleep(Duration::from_millis(5));
+    let events = engine.step().expect("step");
+    let f = events
+        .into_iter()
+        .filter_map(StepEvent::into_done)
+        .find(|f| f.id == id)
+        .unwrap_or_else(|| panic!("{name}: no terminal event for the expired request"));
+    assert_eq!(f.finish_reason, FinishReason::DeadlineExceeded, "{name}");
+    assert!(f.tokens.is_empty(), "{name}: expired requests never generate");
+    assert_eq!(engine.active_requests(), 0, "{name}: expiry must not burn a slot");
+    let m = engine.metrics();
+    assert_eq!(m.deadline_expired - before.deadline_expired, 1, "{name}");
+    assert_eq!(m.requests_done, before.requests_done, "{name}: expired != done");
+    assert!(!engine.has_work(), "{name}");
+}
+
+/// Stats shape: the `/stats` surface serializes for this engine with
+/// every required key, and `acceptance_rate` is `null` exactly when
+/// the engine never drafted.
+fn stats_shape(engine: &mut dyn Engine) {
+    let name = engine.name();
+    let stats = Json::parse(&server::format_stats(&*engine)).expect("stats frame is JSON");
+    assert_eq!(stats.get("engine").unwrap().as_str(), Some(name));
+    assert!(stats.get("sched").unwrap().as_str().is_some(), "{name}");
+    assert_eq!(stats.get("queue_depth").unwrap().as_i64(), Some(0), "{name}");
+    let depths = stats.get("queue_depth_by_priority").unwrap().as_arr().unwrap();
+    assert_eq!(depths.len(), 4, "{name}");
+    assert_eq!(stats.get("active").unwrap().as_i64(), Some(0), "{name}");
+    assert_eq!(
+        stats.get("slots").unwrap().as_i64(),
+        Some(engine.slot_capacity() as i64),
+        "{name}"
+    );
+    for key in [
+        "requests_done", "cancelled", "shed", "deadline_expired", "tokens_out",
+        "wall_tok_s", "virt_tok_s", "queue_p50_ms", "queue_p99_ms",
+        "latency_p50_ms", "latency_p99_ms", "oldest_queued_ms",
+    ] {
+        assert!(stats.get(key).and_then(Json::as_f64).is_some(), "{name}: stats {key}");
+    }
+    let acc = stats.get("acceptance_rate").unwrap();
+    if engine.metrics().drafted == 0 {
+        assert_eq!(acc, &Json::Null, "{name}: non-drafting engines report null");
+    } else {
+        assert!(acc.as_f64().is_some(), "{name}: drafting engines report a number");
+    }
+}
 
 // ---------------------------------------------------------------------------
 // shared harness: TCP frontend around any engine + a tiny line client
@@ -163,11 +436,31 @@ impl Engine for MockEngine {
         if let Some(sb) = self.core.step_inputs() {
             for &i in &sb.active {
                 let next = sb.tok[i] + 1;
+                // the virtual clock must advance for the conformance
+                // battery's cost invariant
+                self.core.cost.charge(
+                    qspec::model::Mode::W4A16,
+                    qspec::costmodel::Phase::Decode,
+                    sb.active.len(),
+                    1,
+                    sb.mean_ctx,
+                );
                 self.core.commit(i, &[next], 1, &mut out);
             }
         }
         Ok(out)
     }
+}
+
+/// The session-free instantiation of the cross-engine battery: the
+/// mock engine must satisfy the exact contract the real engines do.
+#[test]
+fn mock_engine_passes_conformance() {
+    let tok = mock_tokenizer();
+    let prompts: Vec<String> =
+        ["hi there", "yo", "abc def", "012 345"].iter().map(|s| s.to_string()).collect();
+    let mut engine = MockEngine::new(2, 512, 0);
+    conformance(&mut engine, &tok, &prompts);
 }
 
 #[test]
@@ -294,16 +587,23 @@ fn mock_server_stop_sequence_legacy_form_and_errors() {
             "a".repeat(40)
         ));
         let bad_stop = c.recv();
-        (stopped, legacy, bad_prompt, bad_op, not_found, bad_stop)
+        // temperature parses (within [0,2]) but the mock engine is
+        // argmax-only: rejected precisely instead of silently greedy
+        c.send(r#"{"op":"generate","prompt":"x","max_tokens":4,"temperature":0.7}"#);
+        let bad_temp = c.recv();
+        // temperature 0 on the same engine is fine
+        c.send(r#"{"op":"generate","prompt":"x","max_tokens":3,"temperature":0}"#);
+        let temp_zero = c.recv();
+        (stopped, legacy, bad_prompt, bad_op, not_found, bad_stop, bad_temp, temp_zero)
     });
     server::engine_loop(&rx, &tok, &mut engine).expect("engine_loop");
     lh.join().unwrap();
-    let (stopped, legacy, bad_prompt, bad_op, not_found, bad_stop) = client.join().unwrap();
+    let (stopped, legacy, bad_prompt, bad_op, not_found, bad_stop, bad_temp, temp_zero) =
+        client.join().unwrap();
     assert_eq!(stopped.get("finish_reason").unwrap().as_str(), Some("stop"));
     assert_eq!(stopped.get("text").unwrap().as_str(), Some("hi"));
     // the [j, k] match spans two single-token commits; the counters are
-    // reconciled to the delivered outputs ("hi" + "hij")
-    assert_eq!(engine.metrics().tokens_out, 5);
+    // reconciled to the delivered outputs ("hi" + "hij" + "hij")
     assert_eq!(legacy.get("finish_reason").unwrap().as_str(), Some("length"));
     assert_eq!(legacy.get("text").unwrap().as_str(), Some("hij"));
     let err = bad_prompt.get("error").expect("error frame");
@@ -316,7 +616,12 @@ fn mock_server_stop_sequence_legacy_form_and_errors() {
     let err = bad_stop.get("error").expect("error frame");
     assert_eq!(err.get("code").unwrap().as_str(), Some("bad_request"));
     assert!(err.get("message").unwrap().as_str().unwrap().contains("stop"));
-    assert_eq!(engine.metrics().requests_done, 2);
+    let err = bad_temp.get("error").expect("argmax-only engines reject temperature > 0");
+    assert_eq!(err.get("code").unwrap().as_str(), Some("bad_request"));
+    let msg = err.get("message").unwrap().as_str().unwrap();
+    assert!(msg.contains("temperature") && msg.contains("mock"), "{msg}");
+    assert_eq!(temp_zero.get("finish_reason").unwrap().as_str(), Some("length"));
+    assert_eq!(engine.metrics().requests_done, 3);
 }
 
 #[test]
@@ -468,11 +773,36 @@ fn mock_server_qos_priority_shedding_and_deadlines() {
 }
 
 // ---------------------------------------------------------------------------
-// artifact-gated layer: real engines through the same harnesses
+// artifact-gated layer: real engines through the same battery + TCP
 // ---------------------------------------------------------------------------
 
 fn artifacts_root() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// The sweep every conformance run covers. The inner match is
+/// exhaustive over `EngineKind` on purpose: adding a variant fails to
+/// compile here until the new engine kind is added to the sweep (and
+/// therefore to the battery).
+fn conformance_kinds() -> Vec<(EngineKind, &'static str)> {
+    fn covered(k: &EngineKind) {
+        match k {
+            EngineKind::QSpec
+            | EngineKind::Ar(_)
+            | EngineKind::Eagle { .. }
+            | EngineKind::HierSpec { .. } => {}
+        }
+    }
+    let kinds = vec![
+        (EngineKind::QSpec, "s"),
+        (EngineKind::Ar(Mode::W4A16), "s"),
+        (EngineKind::Eagle { tree_k: 1 }, "m"),
+        (EngineKind::HierSpec { gamma: 3, kv_bits: 4 }, "s"),
+    ];
+    for (k, _) in &kinds {
+        covered(k);
+    }
+    kinds
 }
 
 #[test]
@@ -487,13 +817,8 @@ fn engine_trait_suite() {
     let items = evalsuite::load_eval(&sess.store.eval_path("chain")).expect("eval set");
     let prompts: Vec<String> = items.iter().take(12).map(|i| i.prompt.clone()).collect();
 
-    // the same harnesses drive every engine kind
-    let kinds: Vec<(EngineKind, &str)> = vec![
-        (EngineKind::QSpec, "s"),
-        (EngineKind::Ar(Mode::W4A16), "s"),
-        (EngineKind::Eagle { tree_k: 1 }, "m"),
-    ];
-    for (kind, size) in &kinds {
+    // the identical battery drives every engine kind
+    for (kind, size) in conformance_kinds() {
         let cfg = ServeConfig {
             size: size.to_string(),
             batch: 8,
@@ -501,48 +826,48 @@ fn engine_trait_suite() {
             ..ServeConfig::default()
         };
         let mut engine = build_engine(&sess, &cfg).expect("build_engine");
-        drive_generic(engine.as_mut(), &tok, &prompts);
+        eprintln!("conformance: engine={} size={size}", engine.name());
+        conformance(engine.as_mut(), &tok, &prompts);
     }
-    for (kind, size) in &kinds {
-        server_scenarios(&sess, &tok, kind.clone(), size, &prompts);
+    for (kind, size) in conformance_kinds() {
+        server_scenarios(&sess, &tok, kind, size, &prompts);
     }
+    hierspec_losslessness(&sess, &tok, &prompts);
 }
 
-/// Submit N requests -> run_to_completion -> assert every request
-/// finishes, completion covers exactly the FCFS-assigned ids, and the
-/// metrics invariants hold for ANY engine.
-fn drive_generic(engine: &mut dyn Engine, tok: &Tokenizer, prompts: &[String]) {
-    let n = prompts.len();
-    let mut submitted = Vec::new();
-    for p in prompts {
-        submitted.push(engine.submit(tok.encode_prompt(p), 24));
-    }
-    // ids are engine-assigned, dense and in submission order
-    assert_eq!(submitted, (0..n as u64).collect::<Vec<_>>(), "{}", engine.name());
-    assert!(engine.has_work());
-
-    let mut fins = engine.run_to_completion().expect("run_to_completion");
-    assert!(!engine.has_work(), "{}: work left after completion", engine.name());
-    assert_eq!(fins.len(), n, "{}: all requests must finish", engine.name());
-    fins.sort_by_key(|f| f.id);
-    let ids: Vec<u64> = fins.iter().map(|f| f.id).collect();
-    assert_eq!(ids, submitted, "{}: finished ids != submitted ids", engine.name());
-
-    let m = engine.metrics();
-    assert_eq!(m.requests_done, n as u64, "{}", engine.name());
-    // every engine counts exactly the emitted tokens as committed
-    assert_eq!(m.committed, m.tokens_out, "{}", engine.name());
-    let toks: usize = fins.iter().map(|f| f.tokens.len()).sum();
-    assert_eq!(toks as u64, m.tokens_out, "{}", engine.name());
-    // the queue-wait histogram sees one admission per request
-    assert_eq!(m.queue_wait.count(), n as u64, "{}", engine.name());
-    assert_eq!(m.req_latency.count(), n as u64, "{}", engine.name());
-    for f in &fins {
-        assert!(f.latency_ns >= f.queue_ns, "{}: wait > latency", engine.name());
-        assert!(f.prompt_tokens > 0, "{}: prompt usage missing", engine.name());
-    }
-    // the virtual clock advanced (every phase charges it)
-    assert!(engine.cost().virtual_ns > 0, "{}", engine.name());
+/// The HierSpec losslessness invariant, end-to-end: its draft phase is
+/// lossy (acceptance < 1.0 through the quantized shadow) but the
+/// committed output must equal the verifier's — and the verifier IS
+/// the W4A16 model, so HierSpec output must match the W4A16 AR
+/// baseline token-for-token on the same prompts.
+fn hierspec_losslessness(sess: &Session, tok: &Tokenizer, prompts: &[String]) {
+    let run = |kind: EngineKind| {
+        let cfg = ServeConfig {
+            size: "s".to_string(),
+            batch: 8,
+            engine: kind,
+            ..ServeConfig::default()
+        };
+        let mut engine = build_engine(sess, &cfg).expect("engine");
+        for p in prompts {
+            engine.submit_request(greedy(tok, p, 24));
+        }
+        let mut fins = engine.run_to_completion().expect("run");
+        fins.sort_by_key(|f| f.id);
+        let outs: Vec<Vec<i32>> = fins.into_iter().map(|f| f.tokens).collect();
+        let acc = engine.metrics().acceptance_rate_opt();
+        (outs, acc)
+    };
+    let (baseline, _) = run(EngineKind::Ar(Mode::W4A16));
+    let (hier, acc) = run(EngineKind::HierSpec { gamma: 3, kv_bits: 4 });
+    assert_eq!(
+        hier, baseline,
+        "hierspec committed output must equal the W4A16 verifier exactly"
+    );
+    let acc = acc.expect("hierspec drafts");
+    assert!(acc > 0.0, "a 4-bit shadow must still accept some drafts ({acc})");
+    assert!(acc < 1.0, "a 4-bit shadow must be measurably lossy ({acc})");
+    eprintln!("hierspec losslessness: outputs match w4a16, acceptance {:.1}%", 100.0 * acc);
 }
 
 /// The protocol-v1 acceptance scenario, against a real engine over real

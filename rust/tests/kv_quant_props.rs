@@ -1,0 +1,193 @@
+//! Property tests for the hierarchical (quantized-shadow) KV path —
+//! `kvcache::QuantizedView` + the `SlotManager` shadow hooks HierSpec
+//! drafts over.
+//!
+//! What must hold:
+//!   1. quantize→dequantize round-trip error is bounded by the
+//!      `kv_bits`-implied half step (`max_roundtrip_error`), for any
+//!      in-range value at any supported width — and tighter widths
+//!      never beat wider ones on the bound;
+//!   2. after any interleaving of draft-phase speculation and
+//!      verify-phase commits, the shadow is *consistent* with full
+//!      precision (every committed code requantizes from the full
+//!      value, no speculative residue) and tracks exactly the
+//!      committed-entry count;
+//!   3. `SlotManager::release` clears both tiers: the logical slot
+//!      and its quantized view.
+
+use qspec::kvcache::{kv_proxy, QuantizedView, SlotManager};
+use qspec::util::check::check;
+use qspec::util::prng::Pcg32;
+
+#[test]
+fn roundtrip_error_bounded_by_kv_bits() {
+    check(
+        "quant-roundtrip-bound",
+        4000,
+        |r: &mut Pcg32| {
+            let bits = r.range_inclusive(2, 8);
+            // values in [-1, 1] with some mass exactly on the ends
+            let raw = r.below(1 << 20);
+            (bits, raw)
+        },
+        |&(bits, raw)| {
+            let bits = (bits.clamp(2, 8)) as u8;
+            let v = (raw as f32 / (1 << 19) as f32) - 1.0;
+            let code = QuantizedView::quantize(bits, v);
+            let dq = QuantizedView::dequantize(bits, code);
+            let bound = QuantizedView::max_roundtrip_error(bits);
+            if (dq - v).abs() > bound + 1e-6 {
+                return Err(format!(
+                    "bits={bits} v={v}: |{dq} - {v}| = {} > bound {bound}",
+                    (dq - v).abs()
+                ));
+            }
+            // a wider shadow can only tighten the bound
+            if bits < 8 {
+                let wider = QuantizedView::max_roundtrip_error(bits + 1);
+                if wider >= bound {
+                    return Err(format!("bound not monotone: {wider} >= {bound}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn mean_error_shrinks_with_width() {
+    // aggregate, not per-sample: the *mean* round-trip error over a
+    // fixed value population must strictly shrink as the shadow widens
+    // (the signal HierSpec's draft lossiness is driven by)
+    let values: Vec<f32> = (0..512).map(|i| kv_proxy(i, i as usize)).collect();
+    let mean_err = |bits: u8| -> f32 {
+        values
+            .iter()
+            .map(|&v| {
+                (v - QuantizedView::dequantize(bits, QuantizedView::quantize(bits, v))).abs()
+            })
+            .sum::<f32>()
+            / values.len() as f32
+    };
+    let errs: Vec<f32> = [2u8, 4, 6, 8].iter().map(|&b| mean_err(b)).collect();
+    for w in errs.windows(2) {
+        assert!(w[1] < w[0], "mean error must shrink with width: {errs:?}");
+    }
+    // and the 4-bit mean sits well under the worst-case bound
+    assert!(errs[1] < QuantizedView::max_roundtrip_error(4));
+}
+
+/// One random slot lifecycle: admit → prefill → interleaved
+/// speculate/commit rounds → the shadow invariants, then release.
+#[test]
+fn shadow_consistent_under_random_speculate_commit_interleavings() {
+    check(
+        "shadow-consistency",
+        500,
+        |r: &mut Pcg32| {
+            let bits = r.range_inclusive(2, 8);
+            let rounds = r.range_inclusive(1, 10);
+            let raw: Vec<u32> = (0..(rounds * 8) as usize).map(|_| r.next_u32()).collect();
+            (bits, raw)
+        },
+        |(bits, raw)| {
+            let bits = (*bits).clamp(2, 8) as u8;
+            let mut m = SlotManager::with_shadow(2, 4096, 16, bits);
+            let idx = m.admit(7, 4, 100_000, vec![]).map_err(|e| e.to_string())?;
+            m.after_prefill(idx, 11, -1); // EOS -1: never matched
+            let mut expected_committed = 1usize;
+            let mut draws = raw.iter().copied().peekable();
+            while draws.peek().is_some() {
+                // draft phase: speculate 0..=3 entries
+                let n_spec = (draws.next().unwrap() % 4) as usize;
+                let spec: Vec<i32> =
+                    (0..n_spec).map(|_| (draws.next().unwrap_or(1) % 64) as i32).collect();
+                m.shadow_speculate(idx, &spec);
+                let v = m.shadow_view(idx).unwrap();
+                if v.speculative_len() != spec.len() {
+                    return Err(format!(
+                        "speculative {} != drafted {}",
+                        v.speculative_len(),
+                        spec.len()
+                    ));
+                }
+                // verify phase: commit 1..=4 tokens (rolls speculation back)
+                let n_commit = (draws.next().unwrap_or(1) % 4 + 1) as usize;
+                let toks: Vec<i32> =
+                    (0..n_commit).map(|_| (draws.next().unwrap_or(1) % 64) as i32).collect();
+                let committed = m.commit(idx, &toks, -1, 4);
+                expected_committed += committed.len();
+
+                let v = m.shadow_view(idx).unwrap();
+                if v.speculative_len() != 0 {
+                    return Err("verify left speculative residue".into());
+                }
+                if v.committed_len() != expected_committed {
+                    return Err(format!(
+                        "shadow tracks {} entries, committed {expected_committed}",
+                        v.committed_len()
+                    ));
+                }
+                if !v.is_consistent() {
+                    return Err("shadow codes diverge from full precision".into());
+                }
+                // every committed entry requantizes from the exact
+                // full-precision proxy: the dequantized tier is within
+                // the bits-implied bound of the full tier
+                let bound = QuantizedView::max_roundtrip_error(bits);
+                for i in 0..v.committed_len() {
+                    if (v.full(i) - v.dequantized(i)).abs() > bound + 1e-6 {
+                        return Err(format!("entry {i} outside the {bits}-bit bound"));
+                    }
+                }
+                if m.shadow_error(idx) > bound {
+                    return Err("mean error exceeds the worst-case bound".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn release_clears_both_tiers_and_next_request_starts_clean() {
+    let mut m = SlotManager::with_shadow(1, 256, 16, 4);
+    let idx = m.admit(1, 4, 100, vec![]).unwrap();
+    m.after_prefill(idx, 5, -1);
+    m.shadow_speculate(idx, &[6, 7, 8]);
+    m.commit(idx, &[6, 9], -1, 3);
+    assert!(m.shadow_view(idx).unwrap().committed_len() > 0);
+
+    let (id, toks) = m.release(idx).expect("release");
+    assert_eq!(id, 1);
+    assert_eq!(toks, vec![5, 6, 9]);
+    // both tiers cleared: logical slot free, shadow empty
+    assert!(m.free_slots().contains(&idx));
+    let v = m.shadow_view(idx).unwrap();
+    assert_eq!(v.committed_len(), 0);
+    assert_eq!(v.speculative_len(), 0);
+    assert_eq!(m.shadow_error(idx), 0.0);
+
+    // the slot is immediately reusable with a pristine shadow
+    let idx2 = m.admit(2, 4, 100, vec![]).unwrap();
+    assert_eq!(idx2, idx);
+    assert_eq!(m.shadow_view(idx2).unwrap().committed_len(), 0);
+    assert!(m.shadow_view(idx2).unwrap().is_consistent());
+}
+
+#[test]
+fn speculative_entries_are_lossy_until_verified() {
+    // a speculative (draft-written) entry lives at draft precision in
+    // both tiers; the verify overwrite restores the exact full value
+    let mut v = QuantizedView::new(2); // coarse: loss is visible
+    let exact = 0.3337f32;
+    v.speculate(exact);
+    // the full tier holds the *dequantized* value while speculative
+    assert_ne!(v.full(0), exact, "draft writes are lossy");
+    assert_eq!(v.full(0), v.dequantized(0));
+    v.rollback_speculative();
+    v.commit_overwrite(exact);
+    assert_eq!(v.full(0), exact, "verify restores full precision");
+    assert!(v.is_consistent());
+    assert_eq!(v.committed_len(), 1);
+}
