@@ -1,0 +1,203 @@
+//! Pool-router bench: the three `RoutePolicy` implementations head to
+//! head on the bursty mixed-priority workload across a heterogeneous
+//! pool of mock replicas (different speeds and draft-acceptance
+//! rates — the traffic/pool shape where placement is the whole game),
+//! plus a saturation run with a per-class SLO table demonstrating
+//! router-level shedding.
+//!
+//! Entirely session-free: replicas are `EchoEngine`s (deterministic
+//! echo decode, simulated acceptance), so this bench runs without
+//! artifacts and doubles as the CI smoke for the pool serving stack
+//! (`QSPEC_BENCH_SMOKE=1`, wired into `ci.sh test`).
+//!
+//! The numbers that matter: the critical class's p99 under each
+//! policy, and pool tokens/s. `round_robin` feeds the slow low-accept
+//! replica its full share and pays for it in the tail;
+//! `least_loaded` balances raw queue depth; `acceptance_aware`
+//! discounts a replica's backlog by its measured acceptance and
+//! shifts load toward the replicas that actually drain faster.
+
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Instant;
+
+use qspec::bench::runner::{full_mode, smoke_mode};
+use qspec::bench::{write_json, Table};
+use qspec::config::{parse_per_class_slo, RouteKind, SloConfig};
+use qspec::coordinator::mock::mock_tokenizer;
+use qspec::coordinator::{EchoEngine, Engine, MAX_PRIORITY};
+use qspec::server::{self, GenerateOp, Inbound, Op, ReplicaHandle, ReplicaStatus, RouterCore};
+use qspec::util::json::{arr, num, obj, s, Json};
+use qspec::util::stats::percentile_sorted;
+
+/// One mock replica: per-cycle delay + simulated draft acceptance.
+#[derive(Clone, Copy)]
+struct MockReplica {
+    batch: usize,
+    delay_ms: u64,
+    acceptance: f64,
+}
+
+/// The heterogeneous pool the policies race on: same slot count, very
+/// different effective speeds (tokens per cycle scale with
+/// acceptance).
+const POOL: [MockReplica; 3] = [
+    MockReplica { batch: 2, delay_ms: 1, acceptance: 0.9 },
+    MockReplica { batch: 2, delay_ms: 1, acceptance: 0.5 },
+    MockReplica { batch: 2, delay_ms: 1, acceptance: 0.1 },
+];
+
+struct RunOut {
+    crit_p99_ms: f64,
+    bg_p99_ms: f64,
+    tokens_per_s: f64,
+    shed: u64,
+}
+
+/// Drive the bursty workload (groups of three long background jobs +
+/// one short critical job) through a fresh mock pool under one route
+/// policy; channel-level, no TCP — the bench measures placement, not
+/// sockets.
+fn run_policy(route: RouteKind, slo: SloConfig, n_req: usize) -> RunOut {
+    let n = POOL.len();
+    let mut replicas = Vec::new();
+    let mut joins = Vec::new();
+    for (k, spec) in POOL.iter().copied().enumerate() {
+        let status = Arc::new(ReplicaStatus::new());
+        let (tx, rx) = mpsc::channel::<Inbound>();
+        let st = status.clone();
+        joins.push(thread::spawn(move || {
+            let tok = mock_tokenizer();
+            let mut engine =
+                EchoEngine::new(spec.batch, 512, spec.delay_ms).with_acceptance(spec.acceptance);
+            engine.core_mut().set_id_space(k as u64, n as u64);
+            server::pool::replica_loop(&rx, &tok, &mut engine, &st).expect("replica loop");
+        }));
+        replicas.push(ReplicaHandle { tx, status, label: "mock".into() });
+    }
+    let statuses: Vec<Arc<ReplicaStatus>> = replicas.iter().map(|r| r.status.clone()).collect();
+    let mut core = RouterCore::new(statuses, route, slo);
+    let (rtx, rrx) = mpsc::channel::<Inbound>();
+    let router = thread::spawn(move || {
+        server::pool::router_loop(&rrx, &mut core, &replicas).expect("router loop");
+        core.shed
+    });
+
+    // one burst: every request submitted before any completes matters
+    let (resp_tx, resp_rx) = mpsc::channel::<String>();
+    let t0 = Instant::now();
+    for i in 0..n_req {
+        let critical = i % 4 == 3;
+        let g = GenerateOp {
+            prompt: format!("q: g {} ?\n", if critical { "xy" } else { "xyxyx" }),
+            max_tokens: if critical { 8 } else { 48 },
+            stream: false,
+            temperature: 0.0,
+            seed: 0,
+            stop: Vec::new(),
+            priority: if critical { MAX_PRIORITY } else { 0 },
+            deadline_ms: None,
+        };
+        rtx.send(Inbound::Op { conn: 1, op: Op::Generate(g), resp: resp_tx.clone() })
+            .expect("router alive");
+    }
+    drop(resp_tx);
+
+    // collect one frame per request: a result (class identified by its
+    // token count) or an overloaded shed
+    let mut crit_ns: Vec<u64> = Vec::new();
+    let mut bg_ns: Vec<u64> = Vec::new();
+    let mut tokens = 0u64;
+    for _ in 0..n_req {
+        let line = resp_rx.recv().expect("one frame per request");
+        let j = Json::parse(&line).expect("frame");
+        if j.get("error").is_some() {
+            continue; // shed at the router; counted by the router core
+        }
+        let lat_ns = (j.get("latency_ms").and_then(Json::as_f64).unwrap_or(0.0) * 1e6) as u64;
+        let ntok = j.get("tokens").and_then(Json::as_i64).unwrap_or(0);
+        tokens += ntok as u64;
+        if ntok == 8 {
+            crit_ns.push(lat_ns);
+        } else {
+            bg_ns.push(lat_ns);
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    drop(rtx);
+    let shed = router.join().expect("router thread");
+    for jh in joins {
+        jh.join().expect("replica thread");
+    }
+    crit_ns.sort_unstable();
+    bg_ns.sort_unstable();
+    RunOut {
+        crit_p99_ms: percentile_sorted(&crit_ns, 99.0) as f64 / 1e6,
+        bg_p99_ms: percentile_sorted(&bg_ns, 99.0) as f64 / 1e6,
+        tokens_per_s: tokens as f64 / wall_s.max(1e-9),
+        shed,
+    }
+}
+
+fn main() {
+    let n_req = if full_mode() {
+        64
+    } else if smoke_mode() {
+        8 // ci.sh test: one burst per policy, still exercising every layer
+    } else {
+        24
+    };
+    println!(
+        "pool: {} mock replicas (acceptance {:?}), bursty workload, {n_req} requests/policy",
+        POOL.len(),
+        POOL.iter().map(|r| r.acceptance).collect::<Vec<_>>()
+    );
+
+    let mut table =
+        Table::new(&["route", "crit p99 ms", "bg p99 ms", "pool tok/s", "shed"]);
+    let mut out_rows = Vec::new();
+    for route in RouteKind::ALL {
+        let out = run_policy(route, SloConfig::default(), n_req);
+        assert_eq!(out.shed, 0, "no SLO configured: nothing may shed");
+        table.row(&[
+            route.label().to_string(),
+            format!("{:.1}", out.crit_p99_ms),
+            format!("{:.1}", out.bg_p99_ms),
+            format!("{:.0}", out.tokens_per_s),
+            out.shed.to_string(),
+        ]);
+        out_rows.push(obj(vec![
+            ("route", s(route.label())),
+            ("crit_p99_ms", num(out.crit_p99_ms)),
+            ("bg_p99_ms", num(out.bg_p99_ms)),
+            ("pool_tok_s", num(out.tokens_per_s)),
+            ("shed", num(out.shed as f64)),
+        ]));
+    }
+    table.print("Route policies — bursty QoS workload over a heterogeneous mock pool");
+
+    // saturation: a tight per-class depth table (class 0 sheds at pool
+    // depth 1 x live, class 1+ exempt) on the same burst — background
+    // admissions past the threshold answer `overloaded` at the router,
+    // critical traffic rides through
+    let slo = SloConfig {
+        per_class: Some(parse_per_class_slo("1:-,-,-,-").expect("table")),
+        ..SloConfig::default()
+    };
+    // a deep enough burst that the class-0 backlog provably outruns
+    // the pool's 6 slots before anything can complete
+    let out = run_policy(RouteKind::LeastLoaded, slo, n_req.max(24));
+    println!(
+        "\nunder a per-class depth table (class 0 sheds at depth 1/replica): \
+         shed {} background request(s) at the router; critical p99 {:.1} ms",
+        out.shed, out.crit_p99_ms
+    );
+    assert!(out.shed > 0, "a one-burst backlog must trip the class-0 table");
+    out_rows.push(obj(vec![
+        ("route", s("least_loaded+class_slo")),
+        ("shed", num(out.shed as f64)),
+        ("crit_p99_ms", num(out.crit_p99_ms)),
+    ]));
+
+    write_json("pool_router", &arr(out_rows)).unwrap();
+}

@@ -2,12 +2,14 @@
 # Tier-1 verification in one command: build, tests, formatting, lints.
 #
 #   ./ci.sh          # everything
-#   ./ci.sh fast     # build + tests only (skip fmt/clippy)
-#   ./ci.sh lint     # fmt + clippy only (skip build/tests)
+#   ./ci.sh fast     # build + tests only (skip fmt/clippy/doc)
+#   ./ci.sh lint     # fmt + clippy + doc only (skip build/tests)
 #   ./ci.sh test     # the cross-engine conformance + property suites
-#                    # with --nocapture summaries, then a smoke run of
-#                    # the sched_qos and hierspec_selfspec benches
-#                    # (bench smoke needs artifacts/; skipped otherwise)
+#                    # (incl. the session-free pool/router v1.2 suite)
+#                    # with --nocapture summaries, then bench smokes:
+#                    # pool_router always (mock replicas, no artifacts
+#                    # needed); sched_qos + hierspec_selfspec when
+#                    # artifacts/ is present
 #
 # Integration tests skip themselves when artifacts/ is absent; run
 # `make artifacts` first for full end-to-end coverage.
@@ -25,18 +27,23 @@ else
 fi
 
 if [ "${1:-}" = "test" ]; then
-    # conformance battery (every EngineKind) + acceptance losslessness
-    # + quantized-KV shadow properties, with per-engine summaries
+    # conformance battery (every EngineKind) + pool/router protocol
+    # v1.2 scenarios + acceptance losslessness + quantized-KV shadow
+    # properties, with per-engine summaries
     cargo test --release \
-        --test engine_trait --test acceptance_props --test kv_quant_props \
+        --test engine_trait --test pool_router \
+        --test acceptance_props --test kv_quant_props \
         -- --nocapture
+    # the pool-router bench races the three route policies over mock
+    # replicas: session-free, so it smokes unconditionally
+    QSPEC_BENCH_SMOKE=1 cargo bench --bench pool_router
     if [ -f artifacts/manifest.json ]; then
         # smoke the QoS and hierspec benches (tiny grids): the hierspec
         # bench asserts draft-cost < AR baseline and acceptance < 1.0
         QSPEC_BENCH_SMOKE=1 cargo bench --bench sched_qos
         QSPEC_BENCH_SMOKE=1 cargo bench --bench hierspec_selfspec
     else
-        echo "ci.sh test: no artifacts/ — bench smoke skipped"
+        echo "ci.sh test: no artifacts/ — artifact-gated bench smoke skipped"
     fi
     echo "ci.sh: test suite passed"
     exit 0
@@ -50,6 +57,9 @@ fi
 if [ "${1:-}" != "fast" ]; then
     cargo fmt --check
     cargo clippy --all-targets -- -D warnings
+    # the protocol doc headers are the serving API's spec: keep them
+    # (and every intra-doc link) compiling
+    cargo doc --no-deps -q
 fi
 
 echo "ci.sh: all checks passed"

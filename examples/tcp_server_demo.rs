@@ -1,8 +1,10 @@
-//! TCP serving demo (protocol v1.1): spawns the `qspec serve` binary
-//! under the priority scheduler, streams a generation token-by-token,
-//! fires concurrent legacy requests, cancels one mid-flight, submits
-//! priority/deadline QoS requests, and fetches a `/stats` snapshot
-//! (active policy, per-priority queue depths) before shutting down.
+//! TCP serving demo (protocol v1.2): spawns the `qspec serve` binary
+//! as a 2-replica engine pool under the least-loaded router and the
+//! priority scheduler, streams a generation token-by-token, fires
+//! concurrent legacy requests, cancels one mid-flight, submits
+//! priority/deadline QoS requests, drains/undrains a replica, and
+//! fetches a pooled `/stats` snapshot (per-replica identity + pooled
+//! aggregates) before shutting down.
 //!
 //!     cargo build --release && cargo run --release --example tcp_server_demo
 //!
@@ -91,6 +93,9 @@ fn main() {
             "--port", &port.to_string(), "--engine", &engine,
             // protocol v1.1: priority-with-aging admission ordering
             "--sched", "priority",
+            // protocol v1.2: a 2-replica pool behind the least-loaded
+            // frontend router
+            "--replicas", "2", "--route", "least_loaded",
         ])
         .spawn()
         .expect("spawn qspec serve");
@@ -172,10 +177,22 @@ fn main() {
     .expect("background qos request");
     println!("  background: {background}\n");
 
-    // 5. the /stats surface: engine + active policy, slot capacity,
-    //    per-priority queue depths, shed/deadline counters
+    // 5. the drain lifecycle (v1.2): stop routing new work to replica
+    //    1 (in-flight work finishes), then bring it back
+    println!("draining replica 1, serving through replica 0, undraining\n");
+    let ack = one_shot(&addr, r#"{"op":"drain","replica":1}"#).expect("drain");
+    println!("  drain ack:   {ack}");
+    let during = one_shot(&addr, r#"{"prompt":"q: k x ?\n","max_tokens":24}"#)
+        .expect("request during drain");
+    println!("  drained run: {during}");
+    let ack = one_shot(&addr, r#"{"op":"undrain","replica":1}"#).expect("undrain");
+    println!("  undrain ack: {ack}\n");
+
+    // 6. the pooled /stats surface (v1.2): pooled aggregates at the
+    //    top level + one entry per replica (engine/sched identity,
+    //    depth, acceptance, tok/s, drain state)
     let stats = one_shot(&addr, r#"{"op":"stats"}"#).expect("stats");
-    println!("stats: {stats}\n");
+    println!("pooled stats: {stats}\n");
 
     let _ = child.kill();
     let _ = child.wait();

@@ -10,7 +10,12 @@ use crate::error::{QspecError, Result};
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub subcommand: String,
+    /// last-wins view of the options (the common single-value case).
     pub options: BTreeMap<String, String>,
+    /// every `--key value` occurrence in order — repeatable options
+    /// (e.g. one `--engine` per pool replica) read this via
+    /// [`Args::get_all`].
+    pub occurrences: Vec<(String, String)>,
     pub flags: Vec<String>,
 }
 
@@ -20,13 +25,17 @@ impl Args {
         let mut it = raw.into_iter().peekable();
         let subcommand = it.next().unwrap_or_default();
         let mut options = BTreeMap::new();
+        let mut occurrences = Vec::new();
         let mut flags = Vec::new();
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
                 if let Some((k, v)) = key.split_once('=') {
                     options.insert(k.to_string(), v.to_string());
+                    occurrences.push((k.to_string(), v.to_string()));
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    options.insert(key.to_string(), it.next().unwrap());
+                    let v = it.next().unwrap();
+                    options.insert(key.to_string(), v.clone());
+                    occurrences.push((key.to_string(), v));
                 } else {
                     flags.push(key.to_string());
                 }
@@ -34,11 +43,21 @@ impl Args {
                 return Err(QspecError::Config(format!("unexpected positional arg {a}")));
             }
         }
-        Ok(Args { subcommand, options, flags })
+        Ok(Args { subcommand, options, occurrences, flags })
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Every value passed for a repeatable option, in command-line
+    /// order (empty when the option never appeared).
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.occurrences
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 
     pub fn get_or(&self, key: &str, default: &str) -> String {
@@ -89,6 +108,14 @@ mod tests {
     fn equals_syntax() {
         let a = parse("bench --gamma=5");
         assert_eq!(a.get("gamma"), Some("5"));
+    }
+
+    #[test]
+    fn repeated_options_keep_every_occurrence() {
+        let a = parse("serve --engine qspec --engine hierspec --engine=w4a16");
+        assert_eq!(a.get("engine"), Some("w4a16"), "map view stays last-wins");
+        assert_eq!(a.get_all("engine"), vec!["qspec", "hierspec", "w4a16"]);
+        assert!(a.get_all("sched").is_empty());
     }
 
     #[test]

@@ -4,9 +4,14 @@
 
 use std::path::PathBuf;
 
-use crate::coordinator::request::MAX_PRIORITY;
+use crate::coordinator::request::{MAX_PRIORITY, NUM_PRIORITY_CLASSES};
 use crate::error::{QspecError, Result};
 use crate::model::Mode;
+
+/// Hard ceiling on engine-pool size (`--replicas` / repeated
+/// `--engine`): each replica owns a full engine (weights + KV), so a
+/// runaway flag value would exhaust device memory long before this.
+pub const MAX_REPLICAS: usize = 16;
 
 /// Default draft depth / shadow width of the HierSpec engine (CLI
 /// `--gamma` / `--kv-bits` override them).
@@ -101,6 +106,119 @@ impl SchedKind {
         [SchedKind::Fcfs, SchedKind::Priority, SchedKind::Sjf, SchedKind::Edf];
 }
 
+/// Which routing policy the pool frontend uses to place a new request
+/// on a replica (see `server::pool` for the `RoutePolicy` trait and
+/// the implementations).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RouteKind {
+    /// cycle through the live replicas (the default; fair under
+    /// homogeneous pools and uniform request cost).
+    #[default]
+    RoundRobin,
+    /// pick the replica with the lowest live load (queued + admitted +
+    /// in the channel) — best under skewed request lengths.
+    LeastLoaded,
+    /// prefer replicas with a higher measured draft-acceptance rate
+    /// (heterogeneous pools: a replica whose scheme accepts more
+    /// drafts emits more tokens per step); ties break least-loaded.
+    AcceptanceAware,
+}
+
+impl RouteKind {
+    /// Parse a CLI route name: `round_robin`, `least_loaded`,
+    /// `acceptance_aware`.
+    pub fn parse(s: &str) -> Option<RouteKind> {
+        match s {
+            "round_robin" => Some(RouteKind::RoundRobin),
+            "least_loaded" => Some(RouteKind::LeastLoaded),
+            "acceptance_aware" => Some(RouteKind::AcceptanceAware),
+            _ => None,
+        }
+    }
+
+    /// Short stable label for stats frames and JSON output.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RouteKind::RoundRobin => "round_robin",
+            RouteKind::LeastLoaded => "least_loaded",
+            RouteKind::AcceptanceAware => "acceptance_aware",
+        }
+    }
+
+    pub const ALL: [RouteKind; 3] =
+        [RouteKind::RoundRobin, RouteKind::LeastLoaded, RouteKind::AcceptanceAware];
+}
+
+/// Shedding thresholds for one priority class (the per-class SLO
+/// table): a request of the class is rejected when the queue depth or
+/// the live p99 queue-wait signal crosses its threshold. A `None`
+/// threshold disables that signal for the class.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassSlo {
+    pub max_queue_depth: Option<usize>,
+    pub p99_queue_wait_ms: Option<f64>,
+}
+
+impl ClassSlo {
+    pub fn validate(&self) -> Result<()> {
+        if let Some(p) = self.p99_queue_wait_ms {
+            if !p.is_finite() || p <= 0.0 {
+                return Err(QspecError::Config(format!(
+                    "class slo p99 {p} must be a positive number"
+                )));
+            }
+        }
+        if self.max_queue_depth == Some(0) {
+            return Err(QspecError::Config("class slo depth must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Parse the per-class `--shed-below` table: one comma-separated entry
+/// per priority class (ascending), each `depth:p99ms` with `-` for an
+/// unset half or a bare `-` for an exempt class. Example —
+/// `4:50,8:100,16:-,-` sheds class 0 at depth 4 or p99 50 ms, class 1
+/// at depth 8 or 100 ms, class 2 at depth 16 only, and never sheds
+/// class 3.
+pub fn parse_per_class_slo(s: &str) -> Result<[Option<ClassSlo>; NUM_PRIORITY_CLASSES]> {
+    let parts: Vec<&str> = s.split(',').map(str::trim).collect();
+    if parts.len() != NUM_PRIORITY_CLASSES {
+        return Err(QspecError::Config(format!(
+            "--shed-below table needs {NUM_PRIORITY_CLASSES} comma-separated entries \
+             (one per priority class), got {}",
+            parts.len()
+        )));
+    }
+    let mut table: [Option<ClassSlo>; NUM_PRIORITY_CLASSES] = Default::default();
+    for (c, part) in parts.iter().enumerate() {
+        if *part == "-" {
+            continue; // exempt class
+        }
+        let (d, p) = part.split_once(':').ok_or_else(|| {
+            QspecError::Config(format!(
+                "--shed-below entry for class {c} must be \"depth:p99ms\" or \"-\", got {part:?}"
+            ))
+        })?;
+        let max_queue_depth = match d.trim() {
+            "-" => None,
+            v => Some(v.parse::<usize>().map_err(|_| {
+                QspecError::Config(format!("--shed-below class {c}: bad depth {v:?}"))
+            })?),
+        };
+        let p99_queue_wait_ms = match p.trim() {
+            "-" => None,
+            v => Some(v.parse::<f64>().map_err(|_| {
+                QspecError::Config(format!("--shed-below class {c}: bad p99 {v:?}"))
+            })?),
+        };
+        let cls = ClassSlo { max_queue_depth, p99_queue_wait_ms };
+        cls.validate()?;
+        table[c] = Some(cls);
+    }
+    Ok(table)
+}
+
 /// Admission SLO: when either signal crosses its threshold the engine
 /// is considered overloaded and new admissions below
 /// `shed_below_priority` are rejected with a structured `overloaded`
@@ -116,6 +234,12 @@ pub struct SloConfig {
     /// priorities below this class are shed under overload; >= are
     /// always admitted (default 2: `high`/`critical` ride through).
     pub shed_below_priority: u8,
+    /// per-priority-class thresholds (v1.2, `--shed-below` table form):
+    /// when set, it replaces the single `shed_below_priority` rule —
+    /// class `c` sheds against `per_class[c]`, and a `None` entry
+    /// makes the class exempt. Lets class 0 shed earlier than class 1
+    /// instead of the all-or-nothing legacy split.
+    pub per_class: Option<[Option<ClassSlo>; NUM_PRIORITY_CLASSES]>,
     /// `retry_after_ms` hint carried by the `overloaded` error frame.
     pub retry_after_ms: u64,
 }
@@ -126,6 +250,7 @@ impl Default for SloConfig {
             p99_queue_wait_ms: None,
             max_queue_depth: None,
             shed_below_priority: 2,
+            per_class: None,
             retry_after_ms: 500,
         }
     }
@@ -134,7 +259,36 @@ impl Default for SloConfig {
 impl SloConfig {
     /// Whether any shedding signal is configured.
     pub fn enabled(&self) -> bool {
-        self.p99_queue_wait_ms.is_some() || self.max_queue_depth.is_some()
+        self.p99_queue_wait_ms.is_some()
+            || self.max_queue_depth.is_some()
+            || self
+                .per_class
+                .as_ref()
+                .is_some_and(|t| t.iter().flatten().any(|c| {
+                    c.max_queue_depth.is_some() || c.p99_queue_wait_ms.is_some()
+                }))
+    }
+
+    /// Resolve the shedding thresholds for one priority class: `None`
+    /// means the class is exempt (always admitted). The per-class
+    /// table wins when present; otherwise the legacy rule applies —
+    /// classes at/above `shed_below_priority` are exempt, the rest
+    /// shed against the base thresholds. This is THE shed-policy
+    /// resolution: `BatchCore::try_submit_request` (single engine) and
+    /// the pool router both go through it, so engine-level and
+    /// pool-level shedding agree on who is sheddable and when.
+    pub fn class_thresholds(&self, class: u8) -> Option<ClassSlo> {
+        let c = (class as usize).min(NUM_PRIORITY_CLASSES - 1);
+        if let Some(table) = &self.per_class {
+            return table[c].clone();
+        }
+        if class >= self.shed_below_priority {
+            return None;
+        }
+        Some(ClassSlo {
+            max_queue_depth: self.max_queue_depth,
+            p99_queue_wait_ms: self.p99_queue_wait_ms,
+        })
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -156,6 +310,11 @@ impl SloConfig {
                 MAX_PRIORITY + 1
             )));
         }
+        if let Some(table) = &self.per_class {
+            for cls in table.iter().flatten() {
+                cls.validate()?;
+            }
+        }
         if self.retry_after_ms == 0 {
             return Err(QspecError::Config("retry_after_ms must be >= 1".into()));
         }
@@ -172,10 +331,20 @@ pub struct ServeConfig {
     pub batch: usize,
     pub gamma: usize,
     pub engine: EngineKind,
+    /// pool size (`--replicas N`): the server spawns one engine worker
+    /// per replica, all of `engine`'s kind unless `engines` is set.
+    pub replicas: usize,
+    /// heterogeneous pool (repeated `--engine`): one engine kind per
+    /// replica; empty = homogeneous `engine` x `replicas`.
+    pub engines: Vec<EngineKind>,
+    /// frontend routing policy placing requests on replicas.
+    pub route: RouteKind,
     /// admission scheduling policy (every engine kind honors it; the
     /// queue lives in the shared `BatchCore`).
     pub sched: SchedKind,
-    /// admission SLO / shedding thresholds (off by default).
+    /// admission SLO / shedding thresholds (off by default). In pool
+    /// serving these are enforced by the frontend router, not the
+    /// per-replica engines.
     pub slo: SloConfig,
     pub overwrite: bool,
     /// record fig-2 similarity samples (QSPEC only; small overhead).
@@ -193,6 +362,9 @@ impl Default for ServeConfig {
             batch: 8,
             gamma: 3,
             engine: EngineKind::QSpec,
+            replicas: 1,
+            engines: Vec::new(),
+            route: RouteKind::RoundRobin,
             sched: SchedKind::Fcfs,
             slo: SloConfig::default(),
             overwrite: true,
@@ -206,17 +378,19 @@ impl Default for ServeConfig {
 }
 
 impl ServeConfig {
-    pub fn validate(&self) -> Result<()> {
-        if !matches!(self.scheme.as_str(), "atom" | "quarot") {
-            return Err(QspecError::Config(format!("unknown scheme {}", self.scheme)));
+    /// The engine kind of every pool replica, in replica order:
+    /// the explicit heterogeneous list when given, otherwise
+    /// `engine` repeated `replicas` times. Always non-empty.
+    pub fn pool_engines(&self) -> Vec<EngineKind> {
+        if self.engines.is_empty() {
+            vec![self.engine.clone(); self.replicas.max(1)]
+        } else {
+            self.engines.clone()
         }
-        if self.gamma == 0 || self.gamma > 8 {
-            return Err(QspecError::Config(format!("gamma {} out of range", self.gamma)));
-        }
-        if self.batch == 0 {
-            return Err(QspecError::Config("batch must be > 0".into()));
-        }
-        if let EngineKind::HierSpec { gamma, kv_bits } = &self.engine {
+    }
+
+    fn validate_engine(kind: &EngineKind) -> Result<()> {
+        if let EngineKind::HierSpec { gamma, kv_bits } = kind {
             if *gamma == 0 || *gamma > 8 {
                 return Err(QspecError::Config(format!(
                     "hierspec gamma {gamma} out of range 1..=8"
@@ -228,6 +402,45 @@ impl ServeConfig {
                      narrower than the fp16 cache but still carry signal)"
                 )));
             }
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !matches!(self.scheme.as_str(), "atom" | "quarot") {
+            return Err(QspecError::Config(format!("unknown scheme {}", self.scheme)));
+        }
+        if self.gamma == 0 || self.gamma > 8 {
+            return Err(QspecError::Config(format!("gamma {} out of range", self.gamma)));
+        }
+        if self.batch == 0 {
+            return Err(QspecError::Config("batch must be > 0".into()));
+        }
+        if self.replicas == 0 || self.replicas > MAX_REPLICAS {
+            return Err(QspecError::Config(format!(
+                "replicas {} outside 1..={MAX_REPLICAS}",
+                self.replicas
+            )));
+        }
+        if !self.engines.is_empty() && self.replicas != self.engines.len() {
+            // no "replicas == 1 means unset" exemption: an explicit
+            // heterogeneous list must agree with the replica count or
+            // the contradiction is an error, never silently resolved
+            return Err(QspecError::Config(format!(
+                "--replicas {} contradicts the {} explicit --engine entries",
+                self.replicas,
+                self.engines.len()
+            )));
+        }
+        if self.engines.len() > MAX_REPLICAS {
+            return Err(QspecError::Config(format!(
+                "at most {MAX_REPLICAS} --engine entries (got {})",
+                self.engines.len()
+            )));
+        }
+        Self::validate_engine(&self.engine)?;
+        for kind in &self.engines {
+            Self::validate_engine(kind)?;
         }
         self.slo.validate()?;
         Ok(())
@@ -290,6 +503,111 @@ mod tests {
         }
         assert_eq!(SchedKind::parse("lifo"), None);
         assert_eq!(SchedKind::default(), SchedKind::Fcfs);
+    }
+
+    #[test]
+    fn route_kind_parse_and_labels() {
+        for kind in RouteKind::ALL {
+            assert_eq!(RouteKind::parse(kind.label()), Some(kind));
+        }
+        assert_eq!(RouteKind::parse("random"), None);
+        assert_eq!(RouteKind::default(), RouteKind::RoundRobin);
+    }
+
+    #[test]
+    fn pool_engines_homogeneous_and_heterogeneous() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.pool_engines(), vec![EngineKind::QSpec]);
+        c.replicas = 3;
+        assert!(c.validate().is_ok());
+        assert_eq!(c.pool_engines().len(), 3);
+        c.engines = vec![EngineKind::QSpec, EngineKind::Ar(Mode::W4A16)];
+        c.replicas = 2;
+        assert!(c.validate().is_ok());
+        assert_eq!(c.pool_engines().len(), 2);
+        // any replica count contradicting the explicit list is
+        // rejected — including an explicit --replicas 1
+        c.replicas = 3;
+        assert!(c.validate().is_err());
+        c.replicas = 1;
+        assert!(c.validate().is_err());
+        c.replicas = 2;
+        assert!(c.validate().is_ok());
+        // pool size bounds
+        let mut c = ServeConfig::default();
+        c.replicas = 0;
+        assert!(c.validate().is_err());
+        c.replicas = MAX_REPLICAS + 1;
+        assert!(c.validate().is_err());
+        // a bad engine anywhere in the pool fails validation
+        let mut c = ServeConfig::default();
+        c.engines = vec![
+            EngineKind::QSpec,
+            EngineKind::HierSpec { gamma: 3, kv_bits: 1 },
+        ];
+        c.replicas = 2;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn per_class_slo_table_parses() {
+        let t = parse_per_class_slo("4:50,8:100,16:-,-").unwrap();
+        assert_eq!(
+            t[0],
+            Some(ClassSlo { max_queue_depth: Some(4), p99_queue_wait_ms: Some(50.0) })
+        );
+        assert_eq!(
+            t[1],
+            Some(ClassSlo { max_queue_depth: Some(8), p99_queue_wait_ms: Some(100.0) })
+        );
+        assert_eq!(
+            t[2],
+            Some(ClassSlo { max_queue_depth: Some(16), p99_queue_wait_ms: None })
+        );
+        assert_eq!(t[3], None, "bare dash = exempt class");
+        // wrong arity / malformed entries / zero depth rejected
+        assert!(parse_per_class_slo("4:50,8:100").is_err());
+        assert!(parse_per_class_slo("4:50,8:100,16:-,-,-").is_err());
+        assert!(parse_per_class_slo("nope,8:100,16:-,-").is_err());
+        assert!(parse_per_class_slo("x:50,8:100,16:-,-").is_err());
+        assert!(parse_per_class_slo("0:50,8:100,16:-,-").is_err());
+        assert!(parse_per_class_slo("4:-1,8:100,16:-,-").is_err());
+    }
+
+    #[test]
+    fn class_thresholds_resolution() {
+        // legacy rule: classes below shed_below share the base numbers
+        let slo = SloConfig { max_queue_depth: Some(8), ..SloConfig::default() };
+        let t = slo.class_thresholds(0).expect("class 0 sheddable");
+        assert_eq!(t.max_queue_depth, Some(8));
+        assert!(slo.class_thresholds(1).is_some());
+        assert!(slo.class_thresholds(2).is_none(), "default shed_below is 2");
+        assert!(slo.class_thresholds(3).is_none());
+        // the per-class table overrides the legacy rule entirely
+        let slo = SloConfig {
+            max_queue_depth: Some(8),
+            per_class: Some(parse_per_class_slo("2:-,4:-,-,-").unwrap()),
+            ..SloConfig::default()
+        };
+        assert!(slo.enabled());
+        assert_eq!(slo.class_thresholds(0).unwrap().max_queue_depth, Some(2));
+        assert_eq!(slo.class_thresholds(1).unwrap().max_queue_depth, Some(4));
+        assert!(slo.class_thresholds(2).is_none());
+        assert!(slo.class_thresholds(3).is_none());
+        // out-of-range classes clamp to the top class
+        assert!(slo.class_thresholds(200).is_none());
+        // a table alone arms shedding
+        let slo = SloConfig {
+            per_class: Some(parse_per_class_slo("2:-,-,-,-").unwrap()),
+            ..SloConfig::default()
+        };
+        assert!(slo.enabled());
+        // an all-exempt table does not
+        let slo = SloConfig {
+            per_class: Some(parse_per_class_slo("-,-,-,-").unwrap()),
+            ..SloConfig::default()
+        };
+        assert!(!slo.enabled());
     }
 
     #[test]

@@ -36,7 +36,7 @@
 use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
-use crate::config::{EngineKind, SchedKind, ServeConfig, SloConfig};
+use crate::config::{ClassSlo, EngineKind, SchedKind, ServeConfig, SloConfig};
 use crate::costmodel::CostModel;
 use crate::error::{QspecError, Result};
 use crate::kvcache::SlotManager;
@@ -184,6 +184,13 @@ pub trait Engine {
         self.core().oldest_queued_ns()
     }
 
+    /// Percentile of the live queue-wait window — the exact sample set
+    /// the SLO shedder reads (`stats` reports p50/p99 from here so
+    /// operator numbers match shed decisions).
+    fn recent_queue_wait_ns(&self, pct: f64) -> u64 {
+        self.core().recent_queue_percentile_ns(pct)
+    }
+
     /// Max usable KV-cache length — the server clamps `max_tokens`
     /// against this.
     fn max_seq(&self) -> usize {
@@ -263,6 +270,9 @@ pub struct BatchCore {
     /// are unique across the engine's lifetime (the old per-queue
     /// counter could collide with externally numbered requests).
     next_id: u64,
+    /// id increment (see [`BatchCore::set_id_space`]): a pool replica
+    /// strides by the pool size so ids stay unique pool-wide.
+    id_stride: u64,
     inflight: HashMap<u64, Inflight>,
 }
 
@@ -276,12 +286,26 @@ impl BatchCore {
             metrics: EngineMetrics::new(),
             cost,
             next_id: 0,
+            id_stride: 1,
             inflight: HashMap::new(),
         }
     }
 
     pub fn batch(&self) -> usize {
         self.slots.batch()
+    }
+
+    /// Partition the id space for pool serving: replica `first` of a
+    /// `stride`-wide pool assigns ids `first, first + stride, ...`, so
+    /// every id is unique pool-wide and `id % stride` names the owning
+    /// replica — the router's O(1) request->replica ownership map,
+    /// with no shared mutable state to go stale. Must be called before
+    /// the first submit (standalone engines keep the default `0, 1`).
+    pub fn set_id_space(&mut self, first: u64, stride: u64) {
+        assert!(stride >= 1 && first < stride, "id space: first < stride required");
+        assert_eq!(self.next_id, 0, "id space must be set before the first submit");
+        self.next_id = first;
+        self.id_stride = stride;
     }
 
     /// Swap the admission policy. Anything already queued is drained
@@ -321,7 +345,7 @@ impl BatchCore {
     /// the server parse layer. Never sheds.
     pub fn submit_request(&mut self, req: GenerationRequest) -> u64 {
         let id = self.next_id;
-        self.next_id += 1;
+        self.next_id += self.id_stride;
         let prompt_tokens = req.prompt.len();
         let r = Request::from_generation(id, req);
         self.inflight.insert(
@@ -332,42 +356,55 @@ impl BatchCore {
         id
     }
 
-    /// Admission-controlled submit: when the engine is past its SLO
-    /// (queue depth or live p99 queue wait) and the request's priority
-    /// class is below the shed threshold, reject instead of queueing
-    /// into a wait the request cannot meet. Priorities at/above the
-    /// threshold are always admitted.
+    /// Admission-controlled submit: when the engine is past the SLO
+    /// thresholds resolved for the request's priority class (the
+    /// per-class table when configured, else the legacy
+    /// `shed_below_priority` rule — see `SloConfig::class_thresholds`),
+    /// reject instead of queueing into a wait the request cannot meet.
+    /// Exempt classes are always admitted.
     pub fn try_submit_request(
         &mut self,
         req: GenerationRequest,
     ) -> std::result::Result<u64, Overload> {
-        if req.priority >= self.slo.shed_below_priority {
-            // at/above the shed threshold: always admitted
+        let Some(thresholds) = self.slo.class_thresholds(req.priority) else {
+            // exempt class: always admitted
             return Ok(self.submit_request(req));
-        }
-        if let Some(ov) = self.overload() {
+        };
+        if let Some(ov) = self.overload_against(&thresholds, Some(req.priority)) {
             self.metrics.shed += 1;
             return Err(ov);
         }
         Ok(self.submit_request(req))
     }
 
-    /// The overload signal behind admission shedding: `Some` when a
-    /// configured SLO threshold is crossed. Depth is instantaneous;
-    /// the wait signal is the p99 over this backlog episode's recent
-    /// admissions combined with the age of the oldest request still
-    /// queued (which a wait histogram alone cannot see — a wedged
-    /// queue admits nothing, so it records nothing). Checks are
-    /// ordered cheapest first (depth, then the bounded window, then
-    /// the O(queue) age scan) so a saturated engine answers sheds
-    /// without walking the whole backlog in the common case.
+    /// The overload signal behind admission shedding, against the base
+    /// (class-blind) thresholds. Per-class admission resolves its own
+    /// thresholds and goes through [`BatchCore::overload_against`].
     pub fn overload(&self) -> Option<Overload> {
-        if let Some(cap) = self.slo.max_queue_depth {
+        let base = ClassSlo {
+            max_queue_depth: self.slo.max_queue_depth,
+            p99_queue_wait_ms: self.slo.p99_queue_wait_ms,
+        };
+        self.overload_against(&base, None)
+    }
+
+    /// `Some` when a threshold in `t` is crossed (the returned frame
+    /// names the tripped class). Depth is instantaneous; the wait
+    /// signal is the p99 over this backlog episode's recent admissions
+    /// combined with the age of the oldest request still queued (which
+    /// a wait histogram alone cannot see — a wedged queue admits
+    /// nothing, so it records nothing). Checks are ordered cheapest
+    /// first (depth, then the bounded window, then the O(queue) age
+    /// scan) so a saturated engine answers sheds without walking the
+    /// whole backlog in the common case.
+    pub fn overload_against(&self, t: &ClassSlo, class: Option<u8>) -> Option<Overload> {
+        if let Some(cap) = t.max_queue_depth {
             let depth = self.queue.len();
             if depth >= cap {
                 return Some(Overload {
                     retry_after_ms: self.slo.retry_after_ms,
                     message: format!("queue depth {depth} >= SLO limit {cap}"),
+                    class,
                 });
             }
         }
@@ -376,12 +413,13 @@ impl BatchCore {
             // what this episode's wait samples say
             return None;
         }
-        let slo_ms = self.slo.p99_queue_wait_ms?;
+        let slo_ms = t.p99_queue_wait_ms?;
         let p99_ms = self.recent_queue_p99_ns() as f64 / 1e6;
         if p99_ms > slo_ms {
             return Some(Overload {
                 retry_after_ms: self.slo.retry_after_ms,
                 message: format!("p99 queue wait {p99_ms:.1} ms > SLO {slo_ms:.1} ms"),
+                class,
             });
         }
         let oldest_ms = self.oldest_queued_ns() as f64 / 1e6;
@@ -391,17 +429,28 @@ impl BatchCore {
                 message: format!(
                     "oldest queued request waiting {oldest_ms:.1} ms > SLO {slo_ms:.1} ms"
                 ),
+                class,
             });
         }
         None
     }
 
-    /// p99 of the current backlog episode's wait window (0 when empty,
-    /// i.e. after a full drain).
-    pub fn recent_queue_p99_ns(&self) -> u64 {
+    /// Percentile of the current backlog episode's wait window (0 when
+    /// empty, i.e. after a full drain). This is the sample set the SLO
+    /// shedder reads, and — since v1.2 — the one the `stats` op
+    /// reports, so the queue-wait numbers an operator sees are the
+    /// numbers that trigger shedding (the cumulative
+    /// `metrics.queue_wait` histogram remembers every burst since
+    /// boot and can disagree wildly with the live signal).
+    pub fn recent_queue_percentile_ns(&self, pct: f64) -> u64 {
         let mut w: Vec<u64> = self.recent_waits.iter().copied().collect();
         w.sort_unstable();
-        crate::util::stats::percentile_sorted(&w, 99.0)
+        crate::util::stats::percentile_sorted(&w, pct)
+    }
+
+    /// p99 of the current backlog episode's wait window.
+    pub fn recent_queue_p99_ns(&self) -> u64 {
+        self.recent_queue_percentile_ns(99.0)
     }
 
     pub fn has_work(&self) -> bool {
@@ -1096,6 +1145,77 @@ mod tests {
         assert_eq!(c.queue_depth(), 0);
         assert!(c.overload().is_none(), "drained engine must stop shedding");
         assert!(c.try_submit_request(qos(vec![2], 4, 0)).is_ok());
+    }
+
+    #[test]
+    fn id_space_partitions_pool_wide() {
+        // replica 1 of a 3-wide pool: ids are 1, 4, 7, ... — unique
+        // against any other replica's sequence and owner-recoverable
+        // as id % stride
+        let mut c = core(2);
+        c.set_id_space(1, 3);
+        let ids: Vec<u64> = (0..4).map(|_| c.submit(vec![1], 2)).collect();
+        assert_eq!(ids, vec![1, 4, 7, 10]);
+        for id in ids {
+            assert_eq!(id % 3, 1, "owner must be recoverable from the id");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "before the first submit")]
+    fn id_space_rejected_after_first_submit() {
+        let mut c = core(1);
+        c.submit(vec![1], 2);
+        c.set_id_space(0, 2);
+    }
+
+    #[test]
+    fn per_class_slo_table_sheds_classes_at_different_depths() {
+        use crate::config::parse_per_class_slo;
+        let mut c = core(1);
+        c.set_slo(SloConfig {
+            per_class: Some(parse_per_class_slo("1:-,2:-,-,-").unwrap()),
+            ..SloConfig::default()
+        });
+        // queue one request: depth 1
+        assert!(c.try_submit_request(qos(vec![1], 4, 3)).is_ok());
+        // class 0 sheds at depth 1, class 1 not yet (its cap is 2)
+        let ov = c.try_submit_request(qos(vec![2], 4, 0)).unwrap_err();
+        assert_eq!(ov.class, Some(0), "frame reports which class threshold tripped");
+        assert!(ov.message.contains("queue depth"), "{}", ov.message);
+        assert!(c.try_submit_request(qos(vec![3], 4, 1)).is_ok());
+        // depth now 2: class 1 sheds too, the table-exempt classes ride
+        let ov = c.try_submit_request(qos(vec![4], 4, 1)).unwrap_err();
+        assert_eq!(ov.class, Some(1));
+        assert!(c.try_submit_request(qos(vec![5], 4, 2)).is_ok());
+        assert!(c.try_submit_request(qos(vec![6], 4, 3)).is_ok());
+        assert_eq!(c.metrics.shed, 2);
+    }
+
+    #[test]
+    fn windowed_queue_percentiles_match_shed_signal() {
+        let mut c = core(2);
+        c.submit(vec![1], 2);
+        c.submit(vec![2], 2);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let mut out = Vec::new();
+        c.admit_batch(&mut out).unwrap();
+        // backlog fully drained: the windowed numbers reset to 0 even
+        // though the cumulative histogram remembers the waits — stats
+        // must follow the window, matching what the shedder sees
+        assert_eq!(c.recent_queue_percentile_ns(50.0), 0);
+        assert_eq!(c.recent_queue_p99_ns(), 0);
+        assert!(c.metrics.queue_wait.count() > 0);
+        // with a live backlog the window carries this episode's waits
+        c.submit(vec![3], 2);
+        c.submit(vec![4], 2);
+        c.submit(vec![5], 2);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let mut out = Vec::new();
+        c.admit_batch(&mut out).unwrap(); // admits 2 (slots), 1 stays queued
+        assert!(c.queue_depth() > 0);
+        assert!(c.recent_queue_p99_ns() > 0);
+        assert!(c.recent_queue_percentile_ns(50.0) <= c.recent_queue_p99_ns());
     }
 
     #[test]

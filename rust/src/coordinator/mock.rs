@@ -1,0 +1,160 @@
+//! Session-free mock engine: deterministic echo decoding over the real
+//! [`BatchCore`], no artifacts or PJRT session required.
+//!
+//! Prefill emits token 10; each scheduling cycle commits `pending + 1,
+//! pending + 2, ...` so the output text is deterministic ("hijk..."
+//! under the test alphabet) and streaming/stop/cancel semantics are
+//! fully exercised. Two knobs shape it into a pool replica stand-in:
+//!
+//! * `step_delay` — per-cycle sleep, widening cancellation race
+//!   windows and letting benches model slow replicas;
+//! * `with_acceptance(a)` — simulate a drafting engine: every cycle
+//!   drafts `gamma` tokens, accepts `round(gamma * a)` of them, and
+//!   commits `1 + accepted` tokens. Acceptance shows up in
+//!   `metrics.drafted/accepted` (so `acceptance_rate ~= a`) *and* in
+//!   throughput (more tokens per fixed-delay cycle), which is exactly
+//!   the signal the pool's `acceptance_aware` route policy bets on.
+//!
+//! The protocol test suites and `benches/pool_router.rs` build mock
+//! replica pools from this engine; `tests/engine_trait.rs` runs it
+//! through the same conformance battery as the real engines.
+
+use std::time::Duration;
+
+use crate::costmodel::{twins::Twin, CostModel, Phase};
+use crate::error::Result;
+use crate::kvcache::SlotManager;
+use crate::model::{Mode, Tokenizer};
+
+use super::engine::{BatchCore, Engine};
+use super::request::StepEvent;
+
+/// Draft depth of the simulated speculative mode.
+const MOCK_GAMMA: usize = 4;
+
+/// The alphabet behind [`mock_tokenizer`]: token 10 decodes to `'h'`,
+/// so echo output reads "hijk..." in every session-free test/bench.
+pub const MOCK_ALPHABET: &str =
+    "abcdefghijklmnopqrstuvwxyz0123456789 \n+-*=?:;,.()<>[]|&%$#@!_";
+
+/// The session-free tokenizer paired with [`EchoEngine`] by the
+/// protocol test suites and the pool benches.
+pub fn mock_tokenizer() -> Tokenizer {
+    Tokenizer::from_alphabet(MOCK_ALPHABET, 64).expect("mock tokenizer")
+}
+
+/// Deterministic echo engine over the real `BatchCore` (see module
+/// docs). Construct with [`EchoEngine::new`]; tune the scheduling
+/// policy / SLO through `core_mut()` like any other engine.
+pub struct EchoEngine {
+    core: BatchCore,
+    step_delay: Duration,
+    /// simulated draft-acceptance rate in [0, 1]; `None` = plain AR
+    /// echo (never drafts, acceptance reported as null).
+    acceptance: Option<f64>,
+}
+
+impl EchoEngine {
+    /// `batch` generation slots over a `max_seq`-deep KV layout, with a
+    /// `delay_ms` sleep per scheduling cycle (0 = as fast as possible).
+    pub fn new(batch: usize, max_seq: usize, delay_ms: u64) -> Self {
+        EchoEngine {
+            core: BatchCore::new(
+                SlotManager::new(batch, max_seq, 16),
+                CostModel::new(Twin::lookup("llama2-7b")),
+            ),
+            step_delay: Duration::from_millis(delay_ms),
+            acceptance: None,
+        }
+    }
+
+    /// Simulate speculative decoding with the given acceptance rate
+    /// (clamped to [0, 1]): commits `1 + round(gamma * a)` tokens per
+    /// cycle and counts drafted/accepted accordingly.
+    pub fn with_acceptance(mut self, a: f64) -> Self {
+        self.acceptance = Some(a.clamp(0.0, 1.0));
+        self
+    }
+}
+
+impl Engine for EchoEngine {
+    fn name(&self) -> &'static str {
+        "mock"
+    }
+
+    fn core(&self) -> &BatchCore {
+        &self.core
+    }
+
+    fn core_mut(&mut self) -> &mut BatchCore {
+        &mut self.core
+    }
+
+    fn step(&mut self) -> Result<Vec<StepEvent>> {
+        if !self.step_delay.is_zero() {
+            std::thread::sleep(self.step_delay);
+        }
+        let mut out = Vec::new();
+        if let Some(pb) = self.core.admit_batch(&mut out)? {
+            let first = vec![10i32; self.core.batch()];
+            self.core.finish_prefill(&pb, &first, &mut out);
+        }
+        if let Some(sb) = self.core.step_inputs() {
+            // tokens per cycle: 1 greedy + the simulated accepted drafts
+            let accepted = self
+                .acceptance
+                .map(|a| (MOCK_GAMMA as f64 * a).round() as usize)
+                .unwrap_or(0)
+                .min(MOCK_GAMMA);
+            let k = 1 + accepted;
+            // the virtual clock must advance every cycle (conformance
+            // battery invariant); one batched decode charge per cycle
+            self.core.cost.charge(Mode::W4A16, Phase::Decode, sb.active.len(), k, sb.mean_ctx);
+            for &i in &sb.active {
+                let toks: Vec<i32> = (1..=k as i32).map(|d| sb.tok[i] + d).collect();
+                if self.acceptance.is_some() {
+                    self.core.metrics.drafted += MOCK_GAMMA as u64;
+                    self.core.metrics.accepted += accepted as u64;
+                }
+                self.core.commit(i, &toks, k, &mut out);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::FinishReason;
+
+    #[test]
+    fn echo_engine_is_deterministic() {
+        let run = || {
+            let mut e = EchoEngine::new(2, 64, 0);
+            e.submit(vec![1, 2], 6);
+            e.run_to_completion().unwrap().remove(0).tokens
+        };
+        assert_eq!(run(), run());
+        assert_eq!(run(), vec![10, 11, 12, 13, 14, 15]);
+    }
+
+    #[test]
+    fn acceptance_simulation_commits_more_per_cycle() {
+        let mut ar = EchoEngine::new(1, 256, 0);
+        ar.submit(vec![1], 20);
+        ar.run_to_completion().unwrap();
+        assert!(ar.metrics().acceptance_rate_opt().is_none(), "plain echo never drafts");
+
+        let mut spec = EchoEngine::new(1, 256, 0).with_acceptance(0.75);
+        spec.submit(vec![1], 20);
+        let fins = spec.run_to_completion().unwrap();
+        assert_eq!(fins[0].finish_reason, FinishReason::Length);
+        // 0.75 * gamma 4 = 3 accepted -> 4 tokens per cycle; same output
+        assert_eq!(fins[0].tokens, (10..30).collect::<Vec<i32>>());
+        let acc = spec.metrics().acceptance_rate_opt().expect("drafting engine");
+        assert!((acc - 0.75).abs() < 1e-9, "measured acceptance {acc}");
+        // fewer cycles than the AR echo for the same budget
+        assert!(spec.cost().virtual_ns > 0);
+    }
+}

@@ -23,12 +23,16 @@
 //!                     one W4A16 module, quantized shadow KV for the
 //!                     draft phase, full-precision verify that
 //!                     requantizes the shadow.
+//! * `mock`          — session-free deterministic [`EchoEngine`] over
+//!                     the real `BatchCore` (protocol tests, pool
+//!                     benches; runs everywhere artifacts don't).
 
 pub mod acceptance;
 pub mod autoregressive;
 pub mod eagle;
 pub mod engine;
 pub mod hierspec;
+pub mod mock;
 pub mod queue;
 pub mod request;
 pub mod spec_decode;
@@ -38,6 +42,7 @@ pub use autoregressive::ArEngine;
 pub use eagle::{EagleConfig, EagleEngine};
 pub use hierspec::{HierSpecConfig, HierSpecEngine};
 pub use engine::{build_engine, BatchCore, Engine, PrefillBatch, StepBatch};
+pub use mock::EchoEngine;
 pub use queue::{
     build_policy, EdfPolicy, FcfsPolicy, PriorityPolicy, SchedPolicy, SjfPolicy,
     AGING_TICKS_PER_LEVEL,

@@ -165,6 +165,10 @@ pub struct Overload {
     pub retry_after_ms: u64,
     /// which SLO signal tripped, with its observed value.
     pub message: String,
+    /// which priority class's threshold tripped (v1.2: per-class shed
+    /// tables make this ambiguous without it); `None` for sheds that
+    /// are not class-driven (e.g. every pool replica draining).
+    pub class: Option<u8>,
 }
 
 /// Why a request stopped generating.

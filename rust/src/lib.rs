@@ -6,12 +6,14 @@
 //! W4A16, sharing weights and KV cache with near-zero switching cost.
 //!
 //! Three-layer architecture (see DESIGN.md):
-//! * **L3 (this crate)** — request router, QoS-aware admission queue
-//!   (`SchedPolicy`: FCFS / priority-with-aging / SJF / EDF, plus
-//!   SLO-based shedding), continuous batcher, speculative scheduler
-//!   with KV-overwriting, AR + EAGLE baselines, L20 roofline cost
-//!   model, metrics, workloads, TCP server (protocol v1.1). All
-//!   engines implement `coordinator::Engine` over a shared
+//! * **L3 (this crate)** — engine-pool frontend router (`RoutePolicy`:
+//!   round-robin / least-loaded / acceptance-aware placement over
+//!   replica worker threads), QoS-aware admission queue (`SchedPolicy`:
+//!   FCFS / priority-with-aging / SJF / EDF, plus per-class SLO-based
+//!   shedding), continuous batcher, speculative scheduler with
+//!   KV-overwriting, AR + EAGLE baselines, L20 roofline cost model,
+//!   metrics, workloads, TCP server (protocol v1.2). All engines
+//!   implement `coordinator::Engine` over a shared
 //!   `coordinator::BatchCore`; drivers hold `&mut dyn Engine` built by
 //!   `coordinator::build_engine`.
 //! * **L2/L1 (python/, build-time only)** — JAX transformer + Pallas

@@ -1,23 +1,33 @@
-//! TCP line-protocol serving frontend (protocol v1.1).
+//! TCP line-protocol serving frontend (protocol v1.2).
 //!
-//! PJRT handles are not Send, so the engine owns the main thread and
-//! connection threads communicate through channels (a vLLM-style
-//! frontend/engine split):
+//! Since v1.2 the server is an **engine pool**: `--replicas N` (or a
+//! repeated `--engine` for a heterogeneous pool) spawns one engine
+//! worker thread per replica, and a frontend router owns admission:
 //!
-//!   client --tcp--> conn thread (reader) --mpsc--> engine loop (this thread)
-//!          <--tcp-- writer thread        <--mpsc-- frames (deltas/results)
+//!   client --tcp--> conn thread --mpsc--> router --mpsc--> replica k
+//!          <--tcp-- writer thread <------ frames (deltas/results)
 //!
-//! The engine loop is engine-generic: it drives any `&mut dyn Engine`
-//! built by `coordinator::build_engine`, so every engine kind —
-//! including the EAGLE baseline — serves over TCP with streaming,
-//! cancellation, per-request sampling params and the QoS surface
-//! (priority classes, deadlines, SLO-based admission shedding) under
-//! whichever scheduling policy (`--sched fcfs|priority|sjf|edf`) the
-//! server was started with.
+//! PJRT handles are not Send, so each replica's session/engine live on
+//! its worker thread (replica 0 reuses the caller's session on the
+//! main thread); the router and the connection threads only ever hold
+//! channels. Every replica runs the same engine-generic loop
+//! ([`pool::replica_loop`]) over its own `&mut dyn Engine` built by
+//! `coordinator::build_engine`, so every engine kind — including the
+//! EAGLE baseline — serves over TCP with streaming, cancellation,
+//! per-request sampling params and the QoS surface under whichever
+//! `--sched` policy the server was started with. The router places new
+//! requests by the `--route` policy (`round_robin` | `least_loaded` |
+//! `acceptance_aware`; see [`pool::RoutePolicy`]), owns the drain
+//! lifecycle, and enforces the admission SLO pool-wide (per-class
+//! thresholds via `--shed-below`; per-replica p99 backpressure).
+//! Request ids are partitioned across replicas (`id % pool` names the
+//! owner), so `cancel` and disconnect-driven cancellation always reach
+//! the owning replica. A single-replica pool behaves byte-for-byte
+//! like the v1.1 server on the v1/v1.1 surface.
 //!
-//! # Protocol v1.1 — one JSON object per line, both directions
+//! # Protocol v1.2 — one JSON object per line, both directions
 //!
-//! Three ops, selected by the `"op"` field (absent = `generate`, the
+//! Five ops, selected by the `"op"` field (absent = `generate`, the
 //! legacy bare-prompt form):
 //!
 //! ```text
@@ -27,6 +37,8 @@
 //!   legacy: {"prompt":"q: g xy ?\n","max_tokens":64}
 //! cancel  : {"op":"cancel","id":3}
 //! stats   : {"op":"stats"}
+//! drain   : {"op":"drain","replica":1}      (v1.2)
+//! undrain : {"op":"undrain","replica":1}    (v1.2)
 //! ```
 //!
 //! Generate fields: `prompt` (required string); `max_tokens` (integer,
@@ -37,13 +49,24 @@
 //! current engine serves argmax-only AOT entries
 //! ([`Engine::argmax_only`]), so `temperature > 0` is answered with a
 //! precise `bad_request` naming the engine instead of silently
-//! decoding greedily. New in v1.1: `priority` (integer in [0, 3]; 0 =
-//! batch, 1 = normal [the default], 2 = high, 3 = critical) and
+//! decoding greedily. v1.1 QoS fields: `priority` (integer in [0, 3];
+//! 0 = batch, 1 = normal [the default], 2 = high, 3 = critical) and
 //! `deadline_ms` (integer >= 1): a latency budget relative to
 //! submission — a request still queued when its budget lapses answers
 //! its terminal frame with `finish_reason` `"deadline_exceeded"`
 //! without ever occupying a slot. Legacy v1 frames (neither field)
 //! behave exactly as before under every policy.
+//!
+//! `drain` stops routing new work to the named replica while its
+//! queued and in-flight requests finish undisturbed (rolling restarts,
+//! live A/B comparison of engine kinds); `undrain` re-admits it. Both
+//! ack with `{"replica":k,"draining":true|false}`; an out-of-range
+//! index answers `bad_request`. Draining every replica makes new
+//! generates answer `overloaded`. Unlike `cancel`, the drain ops are
+//! deliberately *not* connection-scoped: they are an operator surface
+//! (any connection may issue them), acceptable only because the
+//! server binds loopback — a deployment exposing the port must front
+//! it with its own authentication.
 //!
 //! Response frames:
 //!
@@ -55,13 +78,16 @@
 //!                        "text":"...","tokens":17,"latency_ms":12.5,
 //!                        "queue_ms":0.2}
 //! cancel ack          : {"cancelled":3}
+//! drain ack           : {"replica":1,"draining":true}
 //! stats               : {"engine":"qspec","sched":"priority",
-//!                        "queue_depth":0,
+//!                        "route":"least_loaded","queue_depth":0,
 //!                        "queue_depth_by_priority":[0,0,0,0],
-//!                        "active":1,"slots":8,...}
+//!                        "active":1,"slots":16,...,
+//!                        "replicas":[{"replica":0,"draining":false,
+//!                                     "engine":"qspec",...},...]}
 //! error               : {"error":{"code":"bad_request","message":"..."}}
 //! overloaded          : {"error":{"code":"overloaded","message":"...",
-//!                        "retry_after_ms":500}}
+//!                        "retry_after_ms":500,"class":0}}
 //! ```
 //!
 //! A streaming generate writes one delta line per engine step and a
@@ -70,8 +96,8 @@
 //! up to stop-length-1 tokens that the terminal frame trims).
 //! Cancelling a request delivers its terminal frame (`finish_reason`
 //! `"cancelled"`) before the `{"cancelled":id}` ack. Cancellation is
-//! connection-scoped: request ids are sequential (guessable), so only
-//! the connection that submitted a request may cancel it — an unknown,
+//! connection-scoped: request ids are guessable, so only the
+//! connection that submitted a request may cancel it — an unknown,
 //! finished, or foreign id answers `not_found`. A client disconnect
 //! cancels all of that connection's in-flight requests instead of
 //! letting them burn their slots to completion. `stop` entries are
@@ -83,35 +109,53 @@
 //! the offending field and the type it got — or params that fail
 //! token-level validation), `not_found` (cancel of an unknown,
 //! finished, or foreign id) and `overloaded` (admission shed: the
-//! server is past its configured SLO — queue depth or live p99 queue
-//! wait — and the request's priority class is below the shed
-//! threshold; the frame carries `retry_after_ms` as a backoff hint;
-//! see `SloConfig`). The `stats` snapshot reports the engine name and
-//! active scheduling policy, slot occupancy/capacity, per-priority
-//! queue depths, shed/deadline counters, and `acceptance_rate` as
-//! `null` (not 0) for engines that never draft.
+//! pool is past the SLO thresholds of the request's priority class —
+//! per-class `--shed-below` table or the legacy below-class rule —
+//! or every replica is draining; the frame carries `retry_after_ms`
+//! as a backoff hint and `class` naming the tripped class threshold;
+//! see `SloConfig`).
+//!
+//! The `stats` snapshot keeps every v1.1 top-level field as a pool
+//! aggregate — sums for depths/counters/throughputs, maxima for the
+//! wait/latency percentiles, pooled `acceptance_rate` recomputed from
+//! the summed draft counters (`null` if nothing drafted) — and adds
+//! `route` plus a `replicas: [...]` array with each replica's own
+//! engine/sched identity, depth, acceptance and tok/s, tagged with its
+//! index and drain state. Since v1.2 the top-level `queue_p50_ms` /
+//! `queue_p99_ms` are computed from the same live wait window the SLO
+//! shedder reads (not the boot-to-now histogram), so the numbers an
+//! operator sees are the numbers that trigger shedding.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc;
-use std::time::Duration;
+use std::sync::{mpsc, Arc};
 
-use crate::config::ServeConfig;
+use crate::config::{ServeConfig, SloConfig};
 use crate::coordinator::{
-    build_engine, Engine, Finished, GenerationRequest, Overload, SamplingParams, StepEvent,
-    DEFAULT_PRIORITY, MAX_PRIORITY,
+    build_engine, Engine, Finished, Overload, DEFAULT_PRIORITY, MAX_PRIORITY,
 };
 use crate::error::{QspecError, Result};
 use crate::model::Tokenizer;
 use crate::runtime::Session;
 use crate::util::json::{num, obj, s, Json};
 
-/// A parsed protocol-v1 operation.
+pub mod pool;
+
+pub use pool::{
+    Candidate, ReplicaHandle, ReplicaStatus, RoutePolicy, RouterCore,
+};
+
+/// A parsed protocol-v1.2 operation.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Op {
     Generate(GenerateOp),
     Cancel { id: u64 },
     Stats,
+    /// v1.2 admin: stop routing new work to a replica (in-flight work
+    /// finishes undisturbed).
+    Drain { replica: usize },
+    /// v1.2 admin: re-admit a drained replica.
+    Undrain { replica: usize },
 }
 
 /// The `generate` op: prompt + wire-level sampling params + QoS.
@@ -131,7 +175,10 @@ pub struct GenerateOp {
     pub deadline_ms: Option<u64>,
 }
 
-/// A message forwarded from a connection thread to the engine loop.
+/// A message on the serving channels: conn thread -> router, and
+/// router -> replica (the router forwards ops verbatim, so one type
+/// serves both hops — and a standalone `engine_loop` can be driven by
+/// conn threads directly).
 pub enum Inbound {
     /// A parsed op plus the connection's frame channel for replies.
     Op { conn: u64, op: Op, resp: mpsc::Sender<String> },
@@ -287,8 +334,15 @@ pub fn parse_op(
             )),
         },
         "stats" => Ok(Op::Stats),
+        "drain" | "undrain" => match opt_uint(&j, "replica")? {
+            Some(k) if op_name == "drain" => Ok(Op::Drain { replica: k as usize }),
+            Some(k) => Ok(Op::Undrain { replica: k as usize }),
+            None => Err(QspecError::Config(format!(
+                "op \"{op_name}\" requires an integer \"replica\""
+            ))),
+        },
         other => Err(QspecError::Config(format!(
-            "unknown op \"{other}\" (expected generate|cancel|stats)"
+            "unknown op \"{other}\" (expected generate|cancel|stats|drain|undrain)"
         ))),
     }
 }
@@ -335,6 +389,15 @@ pub fn format_cancelled(id: u64) -> String {
     obj(vec![("cancelled", num(id as f64))]).to_string()
 }
 
+/// Ack line for a drain/undrain op: the replica's new drain state.
+pub fn format_drain(replica: usize, draining: bool) -> String {
+    obj(vec![
+        ("replica", num(replica as f64)),
+        ("draining", Json::Bool(draining)),
+    ])
+    .to_string()
+}
+
 /// Structured error line for protocol violations.
 pub fn format_error(code: &str, message: &str) -> String {
     obj(vec![(
@@ -345,25 +408,37 @@ pub fn format_error(code: &str, message: &str) -> String {
 }
 
 /// Structured `overloaded` error line for admission sheds: carries the
-/// SLO signal that tripped and a `retry_after_ms` backoff hint.
+/// SLO signal that tripped, a `retry_after_ms` backoff hint, and —
+/// when the shed was class-driven — which priority class's threshold
+/// tripped (v1.2 per-class tables make that ambiguous otherwise).
 pub fn format_overloaded(ov: &Overload) -> String {
-    obj(vec![(
-        "error",
-        obj(vec![
-            ("code", s("overloaded")),
-            ("message", s(&ov.message)),
-            ("retry_after_ms", num(ov.retry_after_ms as f64)),
-        ]),
-    )])
-    .to_string()
+    let mut fields = vec![
+        ("code", s("overloaded")),
+        ("message", s(&ov.message)),
+        ("retry_after_ms", num(ov.retry_after_ms as f64)),
+    ];
+    if let Some(c) = ov.class {
+        fields.push(("class", num(c as f64)));
+    }
+    obj(vec![("error", obj(fields))]).to_string()
 }
 
-/// The `/stats` surface: a live snapshot straight from
-/// [`EngineMetrics`] plus the queue-pressure signals the engine loop
-/// used to only debug-log. v1.1 adds the engine identity + active
-/// scheduling policy, slot occupancy vs capacity, per-priority queue
-/// depths and the shed/deadline counters; `acceptance_rate` is `null`
-/// (not a misleading 0) for engines that never draft.
+/// The per-engine `/stats` surface: a live snapshot straight from
+/// [`EngineMetrics`](crate::metrics::EngineMetrics) plus the
+/// queue-pressure signals the engine loop used to only debug-log.
+/// v1.1 added the engine identity + active scheduling policy, slot
+/// occupancy vs capacity, per-priority queue depths and the
+/// shed/deadline counters; `acceptance_rate` is `null` (not a
+/// misleading 0) for engines that never draft. v1.2 fixes the
+/// queue-wait percentiles to read from the live window the SLO
+/// shedder uses (the cumulative histogram remembers every burst since
+/// boot, so its p99 could keep reading "overloaded" hours after the
+/// signal that actually sheds had recovered — or vice versa), and
+/// adds the raw `drafted`/`accepted` counters so the pool router can
+/// merge acceptance across replicas without averaging averages. In
+/// pool serving this frame becomes one entry of `replicas: [...]`;
+/// the router aggregates the pooled top level (see
+/// [`pool::merge_stats`]).
 pub fn format_stats(engine: &dyn Engine) -> String {
     let m = engine.metrics();
     let depths = engine
@@ -384,11 +459,13 @@ pub fn format_stats(engine: &dyn Engine) -> String {
         ("shed", num(m.shed as f64)),
         ("deadline_expired", num(m.deadline_expired as f64)),
         ("tokens_out", num(m.tokens_out as f64)),
+        ("drafted", num(m.drafted as f64)),
+        ("accepted", num(m.accepted as f64)),
         ("acceptance_rate", m.acceptance_rate_opt().map_or(Json::Null, num)),
         ("wall_tok_s", num(m.wall_tokens_per_s())),
         ("virt_tok_s", num(m.virt_tokens_per_s())),
-        ("queue_p50_ms", num(m.queue_wait.percentile(50.0) as f64 / 1e6)),
-        ("queue_p99_ms", num(m.queue_wait.percentile(99.0) as f64 / 1e6)),
+        ("queue_p50_ms", num(engine.recent_queue_wait_ns(50.0) as f64 / 1e6)),
+        ("queue_p99_ms", num(engine.recent_queue_wait_ns(99.0) as f64 / 1e6)),
         ("latency_p50_ms", num(m.req_latency.percentile(50.0) as f64 / 1e6)),
         ("latency_p99_ms", num(m.req_latency.percentile(99.0) as f64 / 1e6)),
     ])
@@ -454,214 +531,84 @@ pub fn conn_thread(
     log::debug!("connection closed: {peer:?}");
 }
 
-/// Run the server until the process is killed. The engine loop services
-/// the queue with continuous batching; idle time is spent blocked on the
-/// channel.
+/// Run the server until the process is killed. Replica 0 runs on this
+/// thread over the caller's session (PJRT handles are not Send);
+/// replicas 1.. each open their own session on a worker thread; the
+/// router thread owns admission and the conn threads feed it.
 pub fn serve(sess: &Session, cfg: &ServeConfig) -> Result<()> {
+    cfg.validate()?;
     let tok = Tokenizer::load(&sess.store.tokenizer_path())?;
-    let mut engine = build_engine(sess, cfg)?;
+    let kinds = cfg.pool_engines();
+    let n = kinds.len();
+
+    // replica 0: built here so the single-replica server keeps its
+    // zero-extra-session footprint. Engine-level shedding is disabled
+    // pool-wide — admission SLO enforcement lives in the router.
+    let mut cfg0 = cfg.clone();
+    cfg0.engine = kinds[0].clone();
+    cfg0.slo = SloConfig::default();
+    let mut engine = build_engine(sess, &cfg0)?;
+    engine.core_mut().set_id_space(0, n as u64);
     let default_max_tokens = cfg.max_tokens_default;
+    // every replica shares --size, so the KV depth (and with it the
+    // max_tokens clamp) is pool-uniform
     let max_tokens_cap = engine.max_seq();
+    let status0 = Arc::new(ReplicaStatus::new());
+    let (tx0, rx0) = mpsc::channel::<Inbound>();
+    let mut replicas = vec![ReplicaHandle {
+        tx: tx0,
+        status: status0.clone(),
+        label: kinds[0].label().to_string(),
+    }];
+    for (k, kind) in kinds.iter().enumerate().skip(1) {
+        replicas.push(pool::spawn_replica(k, n, cfg, kind.clone())?);
+    }
 
     let listener = TcpListener::bind(("127.0.0.1", cfg.port))?;
     println!(
-        "qspec listening on 127.0.0.1:{} (engine={}, sched={}, slo={}, protocol v1.1)",
+        "qspec listening on 127.0.0.1:{} (replicas={}, engines={}, route={}, sched={}, \
+         slo={}, protocol v1.2)",
         cfg.port,
-        engine.name(),
-        engine.sched_name(),
+        n,
+        kinds.iter().map(|k| k.label()).collect::<Vec<_>>().join("+"),
+        cfg.route.label(),
+        cfg.sched.label(),
         if cfg.slo.enabled() { "on" } else { "off" },
     );
-    let (tx, rx) = mpsc::channel::<Inbound>();
+
+    // router thread: conn threads -> router -> replicas
+    let statuses: Vec<Arc<ReplicaStatus>> = replicas.iter().map(|r| r.status.clone()).collect();
+    let mut core = RouterCore::new(statuses, cfg.route, cfg.slo.clone());
+    let (rtx, rrx) = mpsc::channel::<Inbound>();
+    std::thread::spawn(move || {
+        let _ = pool::router_loop(&rrx, &mut core, &replicas);
+    });
+
     std::thread::spawn(move || {
         let mut next_conn = 0u64;
         for stream in listener.incoming().flatten() {
+            // conn ids start at 1; 0 is the router's own (stats fan-out)
             next_conn += 1;
             let conn = next_conn;
-            let tx = tx.clone();
+            let rtx = rtx.clone();
             std::thread::spawn(move || {
-                conn_thread(stream, conn, tx, default_max_tokens, max_tokens_cap)
+                conn_thread(stream, conn, rtx, default_max_tokens, max_tokens_cap)
             });
         }
     });
 
-    engine_loop(&rx, &tok, engine.as_mut())
+    pool::replica_loop(&rx0, &tok, engine.as_mut(), &status0)
 }
 
-/// Per-request routing state held by the engine loop.
-struct Responder {
-    conn: u64,
-    stream: bool,
-    tx: mpsc::Sender<String>,
-}
-
-/// Engine-generic serving loop: admit inbound ops, step the engine,
-/// route step events (deltas + terminal frames) back to their
-/// connections, cancel on client disconnect. Returns when every sender
-/// is gone (tests drive it this way; in `serve` the listener thread
-/// keeps the channel open forever).
+/// Engine-generic serving loop over a single engine — the standalone
+/// (non-pool) form the protocol tests and embedders drive directly.
+/// Identical to one pool replica with nobody reading its status.
 pub fn engine_loop(
     rx: &mpsc::Receiver<Inbound>,
     tok: &Tokenizer,
     engine: &mut dyn Engine,
 ) -> Result<()> {
-    use std::collections::HashMap;
-    let mut responders: HashMap<u64, Responder> = HashMap::new();
-    loop {
-        // block if fully idle, otherwise poll
-        if !engine.has_work() {
-            match rx.recv_timeout(Duration::from_millis(200)) {
-                Ok(msg) => handle_inbound(msg, tok, engine, &mut responders),
-                Err(mpsc::RecvTimeoutError::Timeout) => continue,
-                Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
-            }
-        }
-        // drain whatever else arrived
-        while let Ok(msg) = rx.try_recv() {
-            handle_inbound(msg, tok, engine, &mut responders);
-        }
-        let depth = engine.queue_depth();
-        if depth > 0 {
-            log::debug!(
-                "queue backlog: {depth} waiting, oldest {:.1} ms",
-                engine.oldest_queued_ns() as f64 / 1e6
-            );
-        }
-        for ev in engine.step()? {
-            match ev {
-                StepEvent::Delta { id, tokens } => {
-                    let dead = match responders.get(&id) {
-                        Some(r) if r.stream => r
-                            .tx
-                            .send(format_delta(id, &tok.decode(&tokens), tokens.len()))
-                            .is_err(),
-                        _ => false, // non-stream: tokens arrive with Done
-                    };
-                    if dead {
-                        // writer thread is gone (client stopped reading):
-                        // free the slot instead of burning it out
-                        responders.remove(&id);
-                        let _ = engine.cancel(id);
-                    }
-                }
-                StepEvent::Done(f) => {
-                    if let Some(r) = responders.remove(&f.id) {
-                        let text = tok.decode(&f.tokens);
-                        let line = if r.stream {
-                            format_stream_done(&f, &text)
-                        } else {
-                            format_response(&f, &text)
-                        };
-                        let _ = r.tx.send(line);
-                    }
-                }
-            }
-        }
-    }
-}
-
-/// Handle one inbound message (op or disconnect) against the engine.
-fn handle_inbound(
-    msg: Inbound,
-    tok: &Tokenizer,
-    engine: &mut dyn Engine,
-    responders: &mut std::collections::HashMap<u64, Responder>,
-) {
-    match msg {
-        Inbound::Op { conn, op: Op::Generate(g), resp } => {
-            let prompt = tok.encode_prompt(&g.prompt);
-            let stop: Vec<Vec<i32>> = g
-                .stop
-                .iter()
-                .map(|st| tok.encode(st))
-                .filter(|v| !v.is_empty())
-                .collect();
-            let params = SamplingParams {
-                max_tokens: g.max_tokens,
-                stop,
-                temperature: g.temperature,
-                seed: g.seed,
-            };
-            let mut req = GenerationRequest::new(prompt, params).with_priority(g.priority);
-            if let Some(ms) = g.deadline_ms {
-                req = req.with_deadline_ms(ms);
-            }
-            // wire-level validation: the parse layer bounds characters,
-            // this bounds the encoded token form (e.g. MAX_STOP_TOKENS)
-            // and the QoS fields
-            if let Err(e) = req.validate() {
-                let _ = resp.send(format_error("bad_request", &e.to_string()));
-                return;
-            }
-            // engine-level validation: temperature sampling needs a
-            // logits-returning entry; against an argmax-only engine the
-            // request is rejected precisely instead of silently
-            // decoding greedily (ROADMAP: temperature end-to-end)
-            if req.params.temperature > 0.0 && engine.argmax_only() {
-                let _ = resp.send(format_error(
-                    "bad_request",
-                    &format!(
-                        "field \"temperature\": engine \"{}\" serves argmax-only AOT \
-                         entries and cannot sample; omit temperature or pass 0",
-                        engine.name()
-                    ),
-                ));
-                return;
-            }
-            // admission control: past the SLO, sheddable classes get a
-            // structured overloaded frame instead of a queue slot
-            match engine.try_submit_request(req) {
-                Ok(id) => {
-                    responders.insert(id, Responder { conn, stream: g.stream, tx: resp });
-                }
-                Err(ov) => {
-                    let _ = resp.send(format_overloaded(&ov));
-                }
-            }
-        }
-        Inbound::Op { conn, op: Op::Cancel { id }, resp } => {
-            // ids are sequential, so they are guessable: only the
-            // connection that submitted a request may cancel it
-            let owned = responders.get(&id).is_some_and(|r| r.conn == conn);
-            match if owned { engine.cancel(id) } else { None } {
-                Some(f) => {
-                    // the cancelled request's own channel gets its
-                    // terminal frame first, then the canceller the ack
-                    if let Some(r) = responders.remove(&id) {
-                        let text = tok.decode(&f.tokens);
-                        let line = if r.stream {
-                            format_stream_done(&f, &text)
-                        } else {
-                            format_response(&f, &text)
-                        };
-                        let _ = r.tx.send(line);
-                    }
-                    let _ = resp.send(format_cancelled(id));
-                }
-                None => {
-                    let _ = resp.send(format_error(
-                        "not_found",
-                        &format!("no in-flight request with id {id}"),
-                    ));
-                }
-            }
-        }
-        Inbound::Op { op: Op::Stats, resp, .. } => {
-            let _ = resp.send(format_stats(engine));
-        }
-        Inbound::Disconnect { conn } => {
-            let dead: Vec<u64> = responders
-                .iter()
-                .filter(|(_, r)| r.conn == conn)
-                .map(|(id, _)| *id)
-                .collect();
-            for id in dead {
-                responders.remove(&id);
-                if engine.cancel(id).is_some() {
-                    log::debug!("conn {conn} gone: cancelled request {id}");
-                }
-            }
-        }
-    }
+    pool::replica_loop(rx, tok, engine, &ReplicaStatus::new())
 }
 
 /// Minimal blocking client for tests/examples (legacy one-line form).
@@ -809,6 +756,35 @@ mod tests {
     }
 
     #[test]
+    fn drain_ops_parse() {
+        assert_eq!(
+            parse_op(r#"{"op":"drain","replica":1}"#, 64, 512).unwrap(),
+            Op::Drain { replica: 1 }
+        );
+        assert_eq!(
+            parse_op(r#"{"op":"undrain","replica":0}"#, 64, 512).unwrap(),
+            Op::Undrain { replica: 0 }
+        );
+        for line in [
+            r#"{"op":"drain"}"#,
+            r#"{"op":"drain","replica":-1}"#,
+            r#"{"op":"undrain","replica":"one"}"#,
+        ] {
+            let e = parse_op(line, 64, 512).unwrap_err().to_string();
+            assert!(e.contains("\"replica\""), "{e}");
+        }
+    }
+
+    #[test]
+    fn drain_ack_is_structured() {
+        let j = Json::parse(&format_drain(2, true)).unwrap();
+        assert_eq!(j.get("replica").unwrap().as_i64(), Some(2));
+        assert_eq!(j.get("draining"), Some(&Json::Bool(true)));
+        let j = Json::parse(&format_drain(2, false)).unwrap();
+        assert_eq!(j.get("draining"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
     fn error_line_is_structured_json() {
         let e = format_error("bad_request", "request must be a JSON object");
         let j = Json::parse(&e).unwrap();
@@ -818,13 +794,22 @@ mod tests {
     }
 
     #[test]
-    fn overloaded_frame_carries_retry_hint() {
-        let ov = Overload { retry_after_ms: 250, message: "queue depth 9 >= SLO limit 8".into() };
+    fn overloaded_frame_carries_retry_hint_and_class() {
+        let ov = Overload {
+            retry_after_ms: 250,
+            message: "queue depth 9 >= SLO limit 8".into(),
+            class: Some(0),
+        };
         let j = Json::parse(&format_overloaded(&ov)).unwrap();
         let err = j.get("error").unwrap();
         assert_eq!(err.get("code").unwrap().as_str(), Some("overloaded"));
         assert_eq!(err.get("retry_after_ms").unwrap().as_i64(), Some(250));
         assert!(err.get("message").unwrap().as_str().unwrap().contains("queue depth"));
+        assert_eq!(err.get("class").unwrap().as_i64(), Some(0), "tripped class reported");
+        // classless sheds (e.g. every replica draining) omit the field
+        let ov = Overload { retry_after_ms: 250, message: "draining".into(), class: None };
+        let j = Json::parse(&format_overloaded(&ov)).unwrap();
+        assert!(j.get("error").unwrap().get("class").is_none());
     }
 
     fn fin() -> Finished {

@@ -1,0 +1,1214 @@
+//! Engine-pool serving: replica lifecycle + frontend router
+//! (protocol v1.2).
+//!
+//! The v1.1 server drove exactly one engine on the main thread. This
+//! module turns that single loop into a pool:
+//!
+//! ```text
+//!   client --tcp--> conn thread --mpsc--> router thread --mpsc--> replica k
+//!          <--tcp-- writer thread <------ frames (deltas/results) --+
+//! ```
+//!
+//! * **Replicas** — one worker thread per replica, each running the
+//!   same [`replica_loop`] over its own `Box<dyn Engine>`. PJRT
+//!   handles are not `Send`, so a replica's session/engine are built
+//!   *on* the worker thread and never leave it ([`spawn_replica`]);
+//!   the rest of the system talks to the replica only through its
+//!   [`ReplicaHandle`] (an mpsc sender + shared [`ReplicaStatus`]
+//!   atomics the loop publishes every scheduling cycle).
+//! * **Id-space partitioning** — replica `k` of an `n`-wide pool
+//!   assigns request ids `k, k + n, k + 2n, ...`
+//!   (`BatchCore::set_id_space`), so ids stay unique pool-wide and
+//!   `id % n` *is* the request→replica ownership map
+//!   ([`RouterCore::owner_of`]): cancels and disconnect-driven
+//!   cancellation always reach the owning replica, with no shared
+//!   mutable table to go stale.
+//! * **Router** — [`RouterCore`] owns admission: an object-safe
+//!   [`RoutePolicy`] (`round_robin` | `least_loaded` |
+//!   `acceptance_aware`, `--route`) picks a replica among the live
+//!   (non-draining) ones, and the SLO check moved up here from the
+//!   per-engine `BatchCore`: the depth signal is pool-wide (per-class
+//!   cap x live replicas, counting queued + in-channel requests), the
+//!   p99 queue-wait signal acts as per-replica backpressure (a
+//!   replica past it is unroutable; the request is shed only when
+//!   *every* live replica is past it). Per-class thresholds come from
+//!   the same `SloConfig::class_thresholds` resolution the engines
+//!   use, so single-engine and pool shedding agree on who sheds when.
+//! * **Drain lifecycle** — `{"op":"drain","replica":k}` stops routing
+//!   new work to replica `k` while its queued/in-flight requests run
+//!   to completion; `undrain` re-admits it. Draining every replica
+//!   makes new generates answer `overloaded`.
+//! * **Pooled stats** — the router answers `stats` by round-tripping
+//!   each replica's own v1.1-shaped snapshot (fanned out before any
+//!   reply is awaited, so a wedged replica costs one timeout, not one
+//!   per replica; a replica missing the window is reported from its
+//!   cached last snapshot, marked `stale`) and merging: sums for
+//!   depths/counters/throughputs, maxima for latency/wait
+//!   percentiles, pooled acceptance recomputed from the summed draft
+//!   counters, plus a `replicas: [...]` array carrying each replica's
+//!   identity, depth, acceptance and tok/s. A single-replica pool
+//!   reproduces the v1.1 top-level numbers exactly, keeping legacy
+//!   clients byte-compatible.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::config::{EngineKind, RouteKind, ServeConfig, SloConfig};
+use crate::coordinator::{build_engine, Engine, Overload, StepEvent};
+use crate::error::{QspecError, Result};
+use crate::model::Tokenizer;
+use crate::runtime::{ArtifactStore, Session};
+use crate::util::json::{num, obj, s, Json};
+
+use super::{
+    format_cancelled, format_delta, format_drain, format_error, format_overloaded,
+    format_response, format_stats, format_stream_done, GenerateOp, Inbound, Op,
+};
+use crate::coordinator::request::NUM_PRIORITY_CLASSES;
+use crate::coordinator::{GenerationRequest, SamplingParams};
+
+/// How long the router waits for one replica's stats snapshot before
+/// reporting the pool without it (a replica only answers between
+/// scheduling cycles, so this is generous).
+const STATS_TIMEOUT: Duration = Duration::from_secs(5);
+
+// ---------------------------------------------------------------------------
+// replica status + handle
+// ---------------------------------------------------------------------------
+
+/// Live per-replica signals, published by the replica loop after every
+/// scheduling cycle and read lock-free by the router for routing and
+/// SLO decisions. `pending` is the router's own in-channel counter:
+/// incremented when a generate is forwarded, decremented by the
+/// replica once the submit is reflected in `queue_depth`/`active` —
+/// so a burst routed faster than the replica drains its channel still
+/// counts against its load.
+#[derive(Debug, Default)]
+pub struct ReplicaStatus {
+    pub queue_depth: AtomicUsize,
+    pub active: AtomicUsize,
+    pub pending: AtomicUsize,
+    pub slots: AtomicUsize,
+    /// max(live p99 queue wait, oldest queued age) in ns — the
+    /// backpressure signal behind the per-class p99 SLO.
+    pub wait_signal_ns: AtomicU64,
+    pub drafted: AtomicU64,
+    pub accepted: AtomicU64,
+}
+
+impl ReplicaStatus {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Saturating `pending` decrement (standalone `engine_loop` use
+    /// never incremented it).
+    fn dec_pending(&self) {
+        let _ = self
+            .pending
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |p| p.checked_sub(1));
+    }
+
+    /// Point-in-time routing view of this replica.
+    pub fn snapshot(&self, replica: usize) -> Candidate {
+        let drafted = self.drafted.load(Ordering::Relaxed);
+        let accepted = self.accepted.load(Ordering::Relaxed);
+        Candidate {
+            replica,
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            active: self.active.load(Ordering::Relaxed),
+            pending: self.pending.load(Ordering::Relaxed),
+            wait_signal_ns: self.wait_signal_ns.load(Ordering::Relaxed),
+            acceptance: if drafted == 0 {
+                None
+            } else {
+                Some(accepted as f64 / drafted as f64)
+            },
+        }
+    }
+}
+
+/// The frontend's handle on one replica worker: the channel into its
+/// loop plus the shared status block. Frames flow back to clients
+/// directly (each op carries its connection's frame sender), so the
+/// router is never on the streaming path.
+pub struct ReplicaHandle {
+    pub tx: mpsc::Sender<Inbound>,
+    pub status: Arc<ReplicaStatus>,
+    /// engine label ("qspec", "hierspec", ...) for logs.
+    pub label: String,
+}
+
+/// Spawn replica `idx` of an `n`-wide pool on its own worker thread:
+/// the thread opens its own artifact store / PJRT session (the handles
+/// are not `Send`, so they must be born and die on the worker), builds
+/// the engine, partitions the id space, and runs [`replica_loop`]
+/// until the pool's senders drop. Blocks until the worker reports
+/// startup success or failure.
+pub fn spawn_replica(
+    idx: usize,
+    pool: usize,
+    cfg: &ServeConfig,
+    kind: EngineKind,
+) -> Result<ReplicaHandle> {
+    let status = Arc::new(ReplicaStatus::new());
+    let (tx, rx) = mpsc::channel::<Inbound>();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    let label = kind.label().to_string();
+    let mut rcfg = cfg.clone();
+    rcfg.engine = kind;
+    // shedding lives in the router: a pool replica admits whatever is
+    // routed to it
+    rcfg.slo = SloConfig::default();
+    let st = status.clone();
+    std::thread::Builder::new()
+        .name(format!("qspec-replica-{idx}"))
+        .spawn(move || {
+            let built = (|| {
+                let store = ArtifactStore::open(&rcfg.artifacts)?;
+                let sess = Session::new(store)?;
+                let tok = Tokenizer::load(&sess.store.tokenizer_path())?;
+                Ok::<_, QspecError>((sess, tok))
+            })();
+            let (sess, tok) = match built {
+                Ok(x) => x,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let mut engine = match build_engine(&sess, &rcfg) {
+                Ok(e) => e,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            engine.core_mut().set_id_space(idx as u64, pool as u64);
+            let _ = ready_tx.send(Ok(()));
+            let _ = replica_loop(&rx, &tok, engine.as_mut(), &st);
+        })?;
+    ready_rx
+        .recv()
+        .map_err(|_| QspecError::Config(format!("replica {idx} worker died during startup")))??;
+    Ok(ReplicaHandle { tx, status, label })
+}
+
+// ---------------------------------------------------------------------------
+// route policies
+// ---------------------------------------------------------------------------
+
+/// Routing view of one live replica.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub replica: usize,
+    pub queue_depth: usize,
+    pub active: usize,
+    /// generates forwarded by the router but not yet admitted into
+    /// `queue_depth` (covers the channel gap during bursts).
+    pub pending: usize,
+    pub wait_signal_ns: u64,
+    /// measured draft-acceptance rate; `None` when the replica's
+    /// engine never drafted.
+    pub acceptance: Option<f64>,
+}
+
+impl Candidate {
+    /// Live load: everything placed on the replica that has not
+    /// finished — queued + generating + still in the channel.
+    pub fn load(&self) -> usize {
+        self.queue_depth + self.active + self.pending
+    }
+}
+
+/// Object-safe placement contract: given the live candidates (never
+/// empty), name the replica a new request goes to. Policies only see
+/// the snapshots — draining/dead filtering and SLO shedding happen in
+/// [`RouterCore`] before the pick, so every policy composes with them
+/// identically.
+pub trait RoutePolicy: Send {
+    /// Short stable name ("round_robin", ...) for the stats frame.
+    fn name(&self) -> &'static str;
+
+    /// Pick one of the candidates; returns its `replica` index.
+    fn pick(&mut self, candidates: &[Candidate]) -> usize;
+}
+
+/// Build the policy selected by config (`--route` on the CLI).
+pub fn build_route_policy(kind: RouteKind) -> Box<dyn RoutePolicy> {
+    match kind {
+        RouteKind::RoundRobin => Box::new(RoundRobinPolicy { next: 0 }),
+        RouteKind::LeastLoaded => Box::new(LeastLoadedPolicy),
+        RouteKind::AcceptanceAware => Box::new(AcceptanceAwarePolicy),
+    }
+}
+
+/// Cycle through the live candidates in order.
+#[derive(Debug, Default)]
+struct RoundRobinPolicy {
+    next: usize,
+}
+
+impl RoutePolicy for RoundRobinPolicy {
+    fn name(&self) -> &'static str {
+        "round_robin"
+    }
+
+    fn pick(&mut self, candidates: &[Candidate]) -> usize {
+        let i = self.next % candidates.len();
+        self.next = self.next.wrapping_add(1);
+        candidates[i].replica
+    }
+}
+
+/// Lowest live load wins; ties break on the lower replica index, so
+/// the pick is deterministic. Never picks a candidate with a strictly
+/// higher load than another (the router property suite pins this).
+#[derive(Debug)]
+struct LeastLoadedPolicy;
+
+impl RoutePolicy for LeastLoadedPolicy {
+    fn name(&self) -> &'static str {
+        "least_loaded"
+    }
+
+    fn pick(&mut self, candidates: &[Candidate]) -> usize {
+        candidates
+            .iter()
+            .min_by_key(|c| (c.load(), c.replica))
+            .expect("pick over empty candidates")
+            .replica
+    }
+}
+
+/// Prefer replicas whose measured acceptance predicts faster service:
+/// the pick minimizes the *effective backlog* `load x (1 - acceptance)`
+/// — a speculative replica accepting `a` of its drafts emits roughly
+/// `1/(1-a)` tokens per verify cycle, so its queue drains that much
+/// faster than its raw depth suggests. A replica that never drafted
+/// counts at full depth (acceptance 0: drafting buys it nothing), and
+/// the deflation is clamped so even a perfect drafter cannot hoard
+/// unbounded load. Ties break least-loaded, then on index, so a
+/// homogeneous pool degrades to `least_loaded` instead of hammering
+/// replica 0.
+#[derive(Debug)]
+struct AcceptanceAwarePolicy;
+
+/// Ceiling on the acceptance deflation: a >= 95% acceptor still pays
+/// 5% of its depth, keeping the effective backlog monotone in load.
+const MAX_ACCEPTANCE_DEFLATION: f64 = 0.95;
+
+impl RoutePolicy for AcceptanceAwarePolicy {
+    fn name(&self) -> &'static str {
+        "acceptance_aware"
+    }
+
+    fn pick(&mut self, candidates: &[Candidate]) -> usize {
+        let effective = |c: &Candidate| {
+            let a = c.acceptance.unwrap_or(0.0).clamp(0.0, MAX_ACCEPTANCE_DEFLATION);
+            c.load() as f64 * (1.0 - a)
+        };
+        let mut best = &candidates[0];
+        for c in &candidates[1..] {
+            let (ec, eb) = (effective(c), effective(best));
+            if ec < eb || (ec == eb && (c.load(), c.replica) < (best.load(), best.replica)) {
+                best = c;
+            }
+        }
+        best.replica
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the router
+// ---------------------------------------------------------------------------
+
+/// Frontend admission state: replica statuses, drain flags, the route
+/// policy and the pool-level SLO. Thread-free and deterministic —
+/// [`router_loop`] drives it against real channels, the property suite
+/// drives it directly.
+pub struct RouterCore {
+    statuses: Vec<Arc<ReplicaStatus>>,
+    draining: Vec<bool>,
+    dead: Vec<bool>,
+    policy: Box<dyn RoutePolicy>,
+    slo: SloConfig,
+    /// last successful stats snapshot per replica: a replica that
+    /// misses the collection window is reported from here (marked
+    /// `stale`) instead of silently vanishing — otherwise the pooled
+    /// cumulative counters would dip and recover across snapshots and
+    /// any rate() computed over them would spike.
+    stats_cache: Vec<Option<Json>>,
+    /// admissions shed at the router (pool SLO or no live replica);
+    /// merged into the pooled `stats.shed`.
+    pub shed: u64,
+}
+
+impl RouterCore {
+    pub fn new(statuses: Vec<Arc<ReplicaStatus>>, route: RouteKind, slo: SloConfig) -> Self {
+        let n = statuses.len();
+        assert!(n >= 1, "a pool needs at least one replica");
+        RouterCore {
+            statuses,
+            draining: vec![false; n],
+            dead: vec![false; n],
+            policy: build_route_policy(route),
+            slo,
+            stats_cache: vec![None; n],
+            shed: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.statuses.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.statuses.is_empty()
+    }
+
+    pub fn route_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// The owning replica of a request id — exact by construction:
+    /// replica `k` only ever assigns ids congruent to `k` mod the pool
+    /// size (see `BatchCore::set_id_space`).
+    pub fn owner_of(&self, id: u64) -> usize {
+        (id % self.statuses.len() as u64) as usize
+    }
+
+    /// Mark/unmark replica `k` as draining: no new admissions are
+    /// routed to it, queued and in-flight work finishes undisturbed.
+    pub fn set_draining(&mut self, k: usize, draining: bool) -> Result<()> {
+        if k >= self.draining.len() {
+            return Err(QspecError::Config(format!(
+                "replica {k} out of range (pool size {})",
+                self.draining.len()
+            )));
+        }
+        self.draining[k] = draining;
+        Ok(())
+    }
+
+    pub fn is_draining(&self, k: usize) -> bool {
+        self.draining.get(k).copied().unwrap_or(false)
+    }
+
+    /// A replica whose channel closed (worker died) is never routed to
+    /// again.
+    pub fn mark_dead(&mut self, k: usize) {
+        if let Some(d) = self.dead.get_mut(k) {
+            *d = true;
+        }
+    }
+
+    pub fn is_dead(&self, k: usize) -> bool {
+        self.dead.get(k).copied().unwrap_or(false)
+    }
+
+    /// Snapshots of the routable (live, non-draining) replicas.
+    pub fn candidates(&self) -> Vec<Candidate> {
+        self.statuses
+            .iter()
+            .enumerate()
+            .filter(|(k, _)| !self.draining[*k] && !self.dead[*k])
+            .map(|(k, st)| st.snapshot(k))
+            .collect()
+    }
+
+    /// Admission: resolve the request class's SLO thresholds, shed if
+    /// the pool is past them, otherwise let the route policy place the
+    /// request. The depth signal is pool-wide (class cap x live
+    /// replicas over queued + in-channel requests); the p99 wait
+    /// signal is per-replica backpressure — replicas past it are
+    /// unroutable, and only when that empties the candidate set is the
+    /// request shed.
+    pub fn route(&mut self, class: u8) -> std::result::Result<usize, Overload> {
+        let live = self.candidates();
+        if live.is_empty() {
+            self.shed += 1;
+            return Err(Overload {
+                retry_after_ms: self.slo.retry_after_ms,
+                message: "every pool replica is draining or dead".into(),
+                class: None,
+            });
+        }
+        let eligible = match self.slo.class_thresholds(class) {
+            None => live, // exempt class
+            Some(t) => {
+                if let Some(cap) = t.max_queue_depth {
+                    let pool_cap = cap.saturating_mul(live.len());
+                    let pool_depth: usize =
+                        live.iter().map(|c| c.queue_depth + c.pending).sum();
+                    if pool_depth >= pool_cap {
+                        self.shed += 1;
+                        return Err(Overload {
+                            retry_after_ms: self.slo.retry_after_ms,
+                            message: format!(
+                                "pool queue depth {pool_depth} >= SLO limit {pool_cap} \
+                                 ({cap} x {} live replicas)",
+                                live.len()
+                            ),
+                            class: Some(class),
+                        });
+                    }
+                }
+                match t.p99_queue_wait_ms {
+                    None => live,
+                    Some(ms) => {
+                        let n_live = live.len();
+                        let floor_ns = live.iter().map(|c| c.wait_signal_ns).min().unwrap_or(0);
+                        let ok: Vec<Candidate> = live
+                            .into_iter()
+                            .filter(|c| c.wait_signal_ns as f64 / 1e6 <= ms)
+                            .collect();
+                        if ok.is_empty() {
+                            self.shed += 1;
+                            return Err(Overload {
+                                retry_after_ms: self.slo.retry_after_ms,
+                                message: format!(
+                                    "p99 queue wait {:.1} ms > SLO {ms:.1} ms on all \
+                                     {n_live} live replicas",
+                                    floor_ns as f64 / 1e6
+                                ),
+                                class: Some(class),
+                            });
+                        }
+                        ok
+                    }
+                }
+            }
+        };
+        Ok(self.policy.pick(&eligible))
+    }
+}
+
+/// The router thread: take parsed ops from the connection threads,
+/// place generates on replicas, forward cancels to the owner, answer
+/// drain/undrain/stats itself, broadcast disconnects. Returns when
+/// every inbound sender is gone (tests drive it this way; under
+/// `serve` the listener keeps the channel open forever).
+pub fn router_loop(
+    rx: &mpsc::Receiver<Inbound>,
+    core: &mut RouterCore,
+    replicas: &[ReplicaHandle],
+) -> Result<()> {
+    for msg in rx.iter() {
+        match msg {
+            Inbound::Op { conn, op: Op::Generate(g), resp } => {
+                route_generate(core, replicas, conn, g, resp);
+            }
+            Inbound::Op { conn, op: Op::Cancel { id }, resp } => {
+                // ownership is arithmetic (id % pool), so the cancel
+                // always lands on the replica that assigned the id;
+                // that replica still enforces conn scoping
+                let k = core.owner_of(id);
+                let forwarded = !core.is_dead(k)
+                    && replicas[k]
+                        .tx
+                        .send(Inbound::Op { conn, op: Op::Cancel { id }, resp: resp.clone() })
+                        .is_ok();
+                if !forwarded {
+                    let _ = resp.send(format_error(
+                        "not_found",
+                        &format!("no in-flight request with id {id}"),
+                    ));
+                }
+            }
+            Inbound::Op { op: Op::Stats, resp, .. } => {
+                let _ = resp.send(pool_stats(core, replicas).to_string());
+            }
+            Inbound::Op { op: Op::Drain { replica }, resp, .. } => {
+                let line = match core.set_draining(replica, true) {
+                    Ok(()) => format_drain(replica, true),
+                    Err(e) => format_error("bad_request", &e.to_string()),
+                };
+                let _ = resp.send(line);
+            }
+            Inbound::Op { op: Op::Undrain { replica }, resp, .. } => {
+                let line = match core.set_draining(replica, false) {
+                    Ok(()) => format_drain(replica, false),
+                    Err(e) => format_error("bad_request", &e.to_string()),
+                };
+                let _ = resp.send(line);
+            }
+            Inbound::Disconnect { conn } => {
+                // each replica cancels whatever this connection still
+                // has in flight on it
+                for r in replicas {
+                    let _ = r.tx.send(Inbound::Disconnect { conn });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Place one generate: shed against the pool SLO or forward to the
+/// picked replica, re-routing (and marking the replica dead) if its
+/// worker is gone.
+fn route_generate(
+    core: &mut RouterCore,
+    replicas: &[ReplicaHandle],
+    conn: u64,
+    g: GenerateOp,
+    resp: mpsc::Sender<String>,
+) {
+    loop {
+        match core.route(g.priority) {
+            Err(ov) => {
+                let _ = resp.send(format_overloaded(&ov));
+                return;
+            }
+            Ok(k) => {
+                replicas[k].status.pending.fetch_add(1, Ordering::Relaxed);
+                let msg =
+                    Inbound::Op { conn, op: Op::Generate(g.clone()), resp: resp.clone() };
+                if replicas[k].tx.send(msg).is_ok() {
+                    return;
+                }
+                // worker gone: roll back the load marker, never route
+                // here again, try the next-best replica
+                replicas[k].status.dec_pending();
+                core.mark_dead(k);
+                log::warn!("replica {k} ({}) channel closed; rerouting", replicas[k].label);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pooled stats
+// ---------------------------------------------------------------------------
+
+/// Round-trip every live replica's stats snapshot and merge (see the
+/// module docs for the aggregation rules). The requests fan out
+/// *before* any reply is awaited, so the router is parked for at most
+/// one [`STATS_TIMEOUT`] total (the slowest replica), not the sum — a
+/// stats poll must not stall admission behind a wedged replica times
+/// the pool size. A replica that still misses the window is reported
+/// from its last successful snapshot, marked `stale`.
+pub fn pool_stats(core: &mut RouterCore, replicas: &[ReplicaHandle]) -> Json {
+    let mut waiting: Vec<(usize, mpsc::Receiver<String>)> = Vec::new();
+    for (k, r) in replicas.iter().enumerate() {
+        if core.is_dead(k) {
+            continue;
+        }
+        let (stx, srx) = mpsc::channel::<String>();
+        // conn 0 is reserved for the router (real connections number
+        // from 1), so the snapshot op can never collide with a client
+        if r.tx.send(Inbound::Op { conn: 0, op: Op::Stats, resp: stx }).is_ok() {
+            waiting.push((k, srx));
+        }
+    }
+    let deadline = Instant::now() + STATS_TIMEOUT;
+    let mut entries: Vec<(usize, Json, bool)> = Vec::new();
+    for (k, srx) in waiting {
+        let left = deadline.saturating_duration_since(Instant::now());
+        match srx.recv_timeout(left).ok().and_then(|line| Json::parse(&line).ok()) {
+            Some(j) => {
+                core.stats_cache[k] = Some(j.clone());
+                entries.push((k, j, false));
+            }
+            None => {
+                if let Some(j) = core.stats_cache[k].clone() {
+                    entries.push((k, j, true));
+                }
+            }
+        }
+    }
+    merge_stats(core, &entries)
+}
+
+/// Merge per-replica v1.1-shaped snapshots into the v1.2 pooled frame:
+/// v1.1 top-level fields are preserved as pool aggregates (sums for
+/// depths/counters/throughputs, maxima for wait/latency percentiles,
+/// acceptance recomputed from the summed draft counters), and the
+/// per-replica snapshots ride along under `replicas: [...]` with
+/// their index and drain state attached. An entry whose `bool` is set
+/// is a cached snapshot from a replica that missed the collection
+/// window: it still counts in the aggregates (keeping the cumulative
+/// counters monotone across polls) and its array entry carries
+/// `"stale": true`.
+pub fn merge_stats(core: &RouterCore, entries: &[(usize, Json, bool)]) -> Json {
+    let f = |j: &Json, key: &str| j.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+    let sum = |key: &str| entries.iter().map(|(_, j, _)| f(j, key)).sum::<f64>();
+    let max = |key: &str| entries.iter().map(|(_, j, _)| f(j, key)).fold(0.0f64, f64::max);
+    let ident = |key: &str| -> Json {
+        let mut names: Vec<&str> =
+            entries.iter().filter_map(|(_, j, _)| j.get(key).and_then(Json::as_str)).collect();
+        names.dedup();
+        match names.as_slice() {
+            [one] => s(one),
+            [] => Json::Null,
+            _ => s("mixed"),
+        }
+    };
+    let mut depths = [0f64; NUM_PRIORITY_CLASSES];
+    for (_, j, _) in entries {
+        if let Some(a) = j.get("queue_depth_by_priority").and_then(Json::as_arr) {
+            for (i, d) in a.iter().take(NUM_PRIORITY_CLASSES).enumerate() {
+                depths[i] += d.as_f64().unwrap_or(0.0);
+            }
+        }
+    }
+    let replica_entries: Vec<Json> = entries
+        .iter()
+        .map(|(k, j, stale)| {
+            let mut m = j.as_obj().cloned().unwrap_or_default();
+            m.insert("replica".into(), num(*k as f64));
+            m.insert("draining".into(), Json::Bool(core.is_draining(*k)));
+            if *stale {
+                m.insert("stale".into(), Json::Bool(true));
+            }
+            Json::Obj(m)
+        })
+        .collect();
+    let (drafted, accepted) = (sum("drafted"), sum("accepted"));
+    let acceptance = if drafted > 0.0 { num(accepted / drafted) } else { Json::Null };
+    obj(vec![
+        ("engine", ident("engine")),
+        ("sched", ident("sched")),
+        ("route", s(core.route_name())),
+        ("queue_depth", num(sum("queue_depth"))),
+        (
+            "queue_depth_by_priority",
+            Json::Arr(depths.iter().map(|&d| num(d)).collect()),
+        ),
+        ("oldest_queued_ms", num(max("oldest_queued_ms"))),
+        ("active", num(sum("active"))),
+        ("slots", num(sum("slots"))),
+        ("requests_done", num(sum("requests_done"))),
+        ("cancelled", num(sum("cancelled"))),
+        ("shed", num(sum("shed") + core.shed as f64)),
+        ("deadline_expired", num(sum("deadline_expired"))),
+        ("tokens_out", num(sum("tokens_out"))),
+        ("drafted", num(drafted)),
+        ("accepted", num(accepted)),
+        ("acceptance_rate", acceptance),
+        ("wall_tok_s", num(sum("wall_tok_s"))),
+        ("virt_tok_s", num(sum("virt_tok_s"))),
+        ("queue_p50_ms", num(max("queue_p50_ms"))),
+        ("queue_p99_ms", num(max("queue_p99_ms"))),
+        ("latency_p50_ms", num(max("latency_p50_ms"))),
+        ("latency_p99_ms", num(max("latency_p99_ms"))),
+        ("replicas", Json::Arr(replica_entries)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// the per-replica engine loop
+// ---------------------------------------------------------------------------
+
+/// Per-request routing state held by the replica loop.
+struct Responder {
+    conn: u64,
+    stream: bool,
+    tx: mpsc::Sender<String>,
+}
+
+/// Publish the replica's live signals for the router.
+fn publish(engine: &dyn Engine, status: &ReplicaStatus) {
+    status.queue_depth.store(engine.queue_depth(), Ordering::Relaxed);
+    status.active.store(engine.active_requests(), Ordering::Relaxed);
+    status.slots.store(engine.slot_capacity(), Ordering::Relaxed);
+    let m = engine.metrics();
+    status.drafted.store(m.drafted, Ordering::Relaxed);
+    status.accepted.store(m.accepted, Ordering::Relaxed);
+    let oldest = engine.oldest_queued_ns().min(u64::MAX as u128) as u64;
+    let wait = engine.recent_queue_wait_ns(99.0).max(oldest);
+    status.wait_signal_ns.store(wait, Ordering::Relaxed);
+}
+
+/// Engine-generic replica loop: admit inbound ops, step the engine,
+/// route step events (deltas + terminal frames) back to their
+/// connections, cancel on client disconnect, and publish the live
+/// status the router reads. Returns when every sender is gone. This is
+/// the v1.1 `engine_loop` verbatim plus status publication —
+/// `server::engine_loop` delegates here for standalone (non-pool) use.
+pub fn replica_loop(
+    rx: &mpsc::Receiver<Inbound>,
+    tok: &Tokenizer,
+    engine: &mut dyn Engine,
+    status: &ReplicaStatus,
+) -> Result<()> {
+    let mut responders: HashMap<u64, Responder> = HashMap::new();
+    publish(engine, status);
+    loop {
+        // block if fully idle, otherwise poll
+        if !engine.has_work() {
+            match rx.recv_timeout(Duration::from_millis(200)) {
+                Ok(msg) => handle_inbound(msg, tok, engine, &mut responders, status),
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
+            }
+        }
+        // drain whatever else arrived
+        while let Ok(msg) = rx.try_recv() {
+            handle_inbound(msg, tok, engine, &mut responders, status);
+        }
+        let depth = engine.queue_depth();
+        if depth > 0 {
+            log::debug!(
+                "queue backlog: {depth} waiting, oldest {:.1} ms",
+                engine.oldest_queued_ns() as f64 / 1e6
+            );
+        }
+        for ev in engine.step()? {
+            match ev {
+                StepEvent::Delta { id, tokens } => {
+                    let dead = match responders.get(&id) {
+                        Some(r) if r.stream => r
+                            .tx
+                            .send(format_delta(id, &tok.decode(&tokens), tokens.len()))
+                            .is_err(),
+                        _ => false, // non-stream: tokens arrive with Done
+                    };
+                    if dead {
+                        // writer thread is gone (client stopped reading):
+                        // free the slot instead of burning it out
+                        responders.remove(&id);
+                        let _ = engine.cancel(id);
+                    }
+                }
+                StepEvent::Done(f) => {
+                    if let Some(r) = responders.remove(&f.id) {
+                        let text = tok.decode(&f.tokens);
+                        let line = if r.stream {
+                            format_stream_done(&f, &text)
+                        } else {
+                            format_response(&f, &text)
+                        };
+                        let _ = r.tx.send(line);
+                    }
+                }
+            }
+        }
+        publish(engine, status);
+    }
+}
+
+/// Handle one inbound message (op or disconnect) against the engine.
+fn handle_inbound(
+    msg: Inbound,
+    tok: &Tokenizer,
+    engine: &mut dyn Engine,
+    responders: &mut HashMap<u64, Responder>,
+    status: &ReplicaStatus,
+) {
+    match msg {
+        Inbound::Op { conn, op: Op::Generate(g), resp } => {
+            handle_generate(conn, g, resp, tok, engine, responders);
+            // the request has left the channel and its submit (or
+            // rejection) is reflected in the queue signals: publish
+            // them before dropping the in-channel marker so the
+            // router's load view never undercounts
+            publish(engine, status);
+            status.dec_pending();
+        }
+        Inbound::Op { conn, op: Op::Cancel { id }, resp } => {
+            // ids are sequential, so they are guessable: only the
+            // connection that submitted a request may cancel it
+            let owned = responders.get(&id).is_some_and(|r| r.conn == conn);
+            match if owned { engine.cancel(id) } else { None } {
+                Some(f) => {
+                    // the cancelled request's own channel gets its
+                    // terminal frame first, then the canceller the ack
+                    if let Some(r) = responders.remove(&id) {
+                        let text = tok.decode(&f.tokens);
+                        let line = if r.stream {
+                            format_stream_done(&f, &text)
+                        } else {
+                            format_response(&f, &text)
+                        };
+                        let _ = r.tx.send(line);
+                    }
+                    let _ = resp.send(format_cancelled(id));
+                    publish(engine, status);
+                }
+                None => {
+                    let _ = resp.send(format_error(
+                        "not_found",
+                        &format!("no in-flight request with id {id}"),
+                    ));
+                }
+            }
+        }
+        Inbound::Op { op: Op::Stats, resp, .. } => {
+            let _ = resp.send(format_stats(engine));
+        }
+        Inbound::Op { op: Op::Drain { .. } | Op::Undrain { .. }, resp, .. } => {
+            // only the pool router owns the drain lifecycle; a replica
+            // (or a standalone single-engine loop) rejects it precisely
+            let _ = resp.send(format_error(
+                "bad_request",
+                "drain/undrain are pool-router ops; this endpoint is a bare engine loop",
+            ));
+        }
+        Inbound::Disconnect { conn } => {
+            let dead: Vec<u64> = responders
+                .iter()
+                .filter(|(_, r)| r.conn == conn)
+                .map(|(id, _)| *id)
+                .collect();
+            for id in dead {
+                responders.remove(&id);
+                if engine.cancel(id).is_some() {
+                    log::debug!("conn {conn} gone: cancelled request {id}");
+                }
+            }
+            publish(engine, status);
+        }
+    }
+}
+
+/// Validate and submit one generate op (the replica side of admission).
+fn handle_generate(
+    conn: u64,
+    g: GenerateOp,
+    resp: mpsc::Sender<String>,
+    tok: &Tokenizer,
+    engine: &mut dyn Engine,
+    responders: &mut HashMap<u64, Responder>,
+) {
+    let prompt = tok.encode_prompt(&g.prompt);
+    let stop: Vec<Vec<i32>> = g
+        .stop
+        .iter()
+        .map(|st| tok.encode(st))
+        .filter(|v| !v.is_empty())
+        .collect();
+    let params = SamplingParams {
+        max_tokens: g.max_tokens,
+        stop,
+        temperature: g.temperature,
+        seed: g.seed,
+    };
+    let mut req = GenerationRequest::new(prompt, params).with_priority(g.priority);
+    if let Some(ms) = g.deadline_ms {
+        req = req.with_deadline_ms(ms);
+    }
+    // wire-level validation: the parse layer bounds characters, this
+    // bounds the encoded token form (e.g. MAX_STOP_TOKENS) and the QoS
+    // fields
+    if let Err(e) = req.validate() {
+        let _ = resp.send(format_error("bad_request", &e.to_string()));
+        return;
+    }
+    // engine-level validation: temperature sampling needs a
+    // logits-returning entry; against an argmax-only engine the
+    // request is rejected precisely instead of silently decoding
+    // greedily (ROADMAP: temperature end-to-end)
+    if req.params.temperature > 0.0 && engine.argmax_only() {
+        let _ = resp.send(format_error(
+            "bad_request",
+            &format!(
+                "field \"temperature\": engine \"{}\" serves argmax-only AOT \
+                 entries and cannot sample; omit temperature or pass 0",
+                engine.name()
+            ),
+        ));
+        return;
+    }
+    // admission control: past the SLO, sheddable classes get a
+    // structured overloaded frame instead of a queue slot (a pool
+    // replica's SLO is disabled — the router already admitted the
+    // request — so this only sheds in standalone single-engine use)
+    match engine.try_submit_request(req) {
+        Ok(id) => {
+            responders.insert(id, Responder { conn, stream: g.stream, tx: resp });
+        }
+        Err(ov) => {
+            let _ = resp.send(format_overloaded(&ov));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{parse_per_class_slo, ClassSlo};
+
+    fn statuses(n: usize) -> Vec<Arc<ReplicaStatus>> {
+        (0..n).map(|_| Arc::new(ReplicaStatus::new())).collect()
+    }
+
+    fn set(st: &ReplicaStatus, depth: usize, active: usize, pending: usize) {
+        st.queue_depth.store(depth, Ordering::Relaxed);
+        st.active.store(active, Ordering::Relaxed);
+        st.pending.store(pending, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn round_robin_cycles_over_live_replicas() {
+        let sts = statuses(3);
+        let mut core = RouterCore::new(sts, RouteKind::RoundRobin, SloConfig::default());
+        let picks: Vec<usize> = (0..6).map(|_| core.route(1).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_the_shallower_replica() {
+        let sts = statuses(3);
+        set(&sts[0], 4, 1, 0);
+        set(&sts[1], 1, 1, 0);
+        set(&sts[2], 1, 1, 1); // deeper than 1 via the in-channel count
+        let mut core = RouterCore::new(sts, RouteKind::LeastLoaded, SloConfig::default());
+        assert_eq!(core.route(1).unwrap(), 1);
+        // ties break on the lower index
+        let sts = statuses(2);
+        let mut core = RouterCore::new(sts, RouteKind::LeastLoaded, SloConfig::default());
+        assert_eq!(core.route(1).unwrap(), 0);
+    }
+
+    #[test]
+    fn acceptance_aware_minimizes_effective_backlog() {
+        // equal depths: the stronger acceptor wins (its queue drains
+        // faster per cycle)
+        let sts = statuses(3);
+        for st in &sts {
+            st.drafted.store(100, Ordering::Relaxed);
+            set(st, 4, 0, 0);
+        }
+        sts[0].accepted.store(60, Ordering::Relaxed);
+        sts[1].accepted.store(90, Ordering::Relaxed);
+        sts[2].accepted.store(90, Ordering::Relaxed);
+        set(&sts[1], 5, 0, 0); // 1 and 2 tie on acceptance; 2 is shallower
+        let mut core = RouterCore::new(sts, RouteKind::AcceptanceAware, SloConfig::default());
+        assert_eq!(core.route(1).unwrap(), 2);
+        // a high acceptor drains a deeper queue faster than a plain
+        // replica drains a shallower one: 3 x (1 - 0.9) < 1 x 1.0
+        let sts = statuses(2);
+        sts[0].drafted.store(100, Ordering::Relaxed);
+        sts[0].accepted.store(90, Ordering::Relaxed);
+        set(&sts[0], 3, 0, 0);
+        set(&sts[1], 1, 0, 0);
+        let mut core = RouterCore::new(sts, RouteKind::AcceptanceAware, SloConfig::default());
+        assert_eq!(core.route(1).unwrap(), 0);
+        // ...but the deflation is clamped: acceptance cannot hide an
+        // arbitrarily deep backlog behind a perfect-acceptance score
+        let sts = statuses(2);
+        sts[0].drafted.store(100, Ordering::Relaxed);
+        sts[0].accepted.store(100, Ordering::Relaxed);
+        set(&sts[0], 100, 0, 0);
+        set(&sts[1], 1, 0, 0);
+        let mut core = RouterCore::new(sts, RouteKind::AcceptanceAware, SloConfig::default());
+        assert_eq!(core.route(1).unwrap(), 1);
+    }
+
+    #[test]
+    fn drain_excludes_and_undrain_restores() {
+        let sts = statuses(2);
+        let mut core = RouterCore::new(sts, RouteKind::RoundRobin, SloConfig::default());
+        core.set_draining(0, true).unwrap();
+        for _ in 0..4 {
+            assert_eq!(core.route(1).unwrap(), 1, "draining replica must not admit");
+        }
+        core.set_draining(0, false).unwrap();
+        let picks: std::collections::BTreeSet<usize> =
+            (0..4).map(|_| core.route(1).unwrap()).collect();
+        assert_eq!(picks.into_iter().collect::<Vec<_>>(), vec![0, 1]);
+        assert!(core.set_draining(2, true).is_err(), "out-of-range replica");
+    }
+
+    #[test]
+    fn all_draining_sheds_with_classless_overload() {
+        let sts = statuses(2);
+        let mut core = RouterCore::new(sts, RouteKind::RoundRobin, SloConfig::default());
+        core.set_draining(0, true).unwrap();
+        core.set_draining(1, true).unwrap();
+        let ov = core.route(3).unwrap_err();
+        assert!(ov.message.contains("draining"), "{}", ov.message);
+        assert_eq!(ov.class, None);
+        assert_eq!(core.shed, 1);
+    }
+
+    #[test]
+    fn pool_depth_slo_scales_with_live_replicas() {
+        let sts = statuses(2);
+        set(&sts[0], 2, 0, 0);
+        set(&sts[1], 1, 0, 1); // pending counts against the pool depth
+        let slo = SloConfig { max_queue_depth: Some(2), ..SloConfig::default() };
+        let mut core = RouterCore::new(sts, RouteKind::LeastLoaded, slo);
+        // pool depth 4 >= 2 x 2 live replicas: sheddable classes shed
+        let ov = core.route(0).unwrap_err();
+        assert!(ov.message.contains("pool queue depth 4"), "{}", ov.message);
+        assert_eq!(ov.class, Some(0));
+        // exempt classes ride through (default shed_below 2)
+        assert!(core.route(2).is_ok());
+        assert_eq!(core.shed, 1);
+    }
+
+    #[test]
+    fn p99_backpressure_routes_around_then_sheds() {
+        let sts = statuses(2);
+        sts[0].wait_signal_ns.store(50_000_000, Ordering::Relaxed); // 50 ms
+        let slo = SloConfig { p99_queue_wait_ms: Some(10.0), ..SloConfig::default() };
+        let mut core = RouterCore::new(sts, RouteKind::LeastLoaded, slo);
+        // replica 0 is past the SLO: backpressured, not shed — traffic
+        // routes around it
+        for _ in 0..3 {
+            assert_eq!(core.route(0).unwrap(), 1);
+        }
+        assert_eq!(core.shed, 0);
+        // both past the SLO: now the pool sheds (and says so)
+        core.statuses[1].wait_signal_ns.store(60_000_000, Ordering::Relaxed);
+        let ov = core.route(0).unwrap_err();
+        assert!(ov.message.contains("on all 2 live replicas"), "{}", ov.message);
+        assert_eq!(ov.class, Some(0));
+        // exempt classes still route
+        assert!(core.route(3).is_ok());
+    }
+
+    #[test]
+    fn per_class_table_sheds_low_class_first_at_the_router() {
+        let sts = statuses(2);
+        set(&sts[0], 1, 0, 0);
+        set(&sts[1], 1, 0, 0);
+        let slo = SloConfig {
+            per_class: Some(parse_per_class_slo("1:-,4:-,-,-").unwrap()),
+            ..SloConfig::default()
+        };
+        let mut core = RouterCore::new(sts, RouteKind::LeastLoaded, slo);
+        // pool depth 2 >= 1 x 2: class 0 sheds, class 1 (cap 4 x 2) not
+        let ov = core.route(0).unwrap_err();
+        assert_eq!(ov.class, Some(0));
+        assert!(core.route(1).is_ok());
+        assert!(core.route(3).is_ok());
+    }
+
+    #[test]
+    fn owner_is_recoverable_from_any_id() {
+        let core = RouterCore::new(statuses(3), RouteKind::RoundRobin, SloConfig::default());
+        for k in 0..3u64 {
+            for step in 0..50u64 {
+                assert_eq!(core.owner_of(k + 3 * step), k as usize);
+            }
+        }
+    }
+
+    #[test]
+    fn dead_replicas_are_never_picked() {
+        let sts = statuses(2);
+        let mut core = RouterCore::new(sts, RouteKind::RoundRobin, SloConfig::default());
+        core.mark_dead(0);
+        for _ in 0..4 {
+            assert_eq!(core.route(1).unwrap(), 1);
+        }
+    }
+
+    #[test]
+    fn candidate_load_sums_queue_active_pending() {
+        let st = ReplicaStatus::new();
+        set(&st, 2, 3, 4);
+        assert_eq!(st.snapshot(0).load(), 9);
+        st.dec_pending();
+        assert_eq!(st.snapshot(0).load(), 8);
+        // saturating: standalone loops never increment pending
+        let st = ReplicaStatus::new();
+        st.dec_pending();
+        assert_eq!(st.snapshot(0).pending, 0);
+    }
+
+    #[test]
+    fn merge_stats_single_replica_preserves_v11_numbers() {
+        let core = RouterCore::new(statuses(1), RouteKind::RoundRobin, SloConfig::default());
+        let frame = Json::parse(
+            r#"{"engine":"mock","sched":"fcfs","queue_depth":2,
+                "queue_depth_by_priority":[1,1,0,0],"oldest_queued_ms":3.5,
+                "active":1,"slots":8,"requests_done":7,"cancelled":1,
+                "shed":0,"deadline_expired":0,"tokens_out":40,
+                "drafted":10,"accepted":8,"acceptance_rate":0.8,
+                "wall_tok_s":100.5,"virt_tok_s":900.0,"queue_p50_ms":1.0,
+                "queue_p99_ms":2.0,"latency_p50_ms":5.0,"latency_p99_ms":9.0}"#,
+        )
+        .unwrap();
+        let merged = merge_stats(&core, &[(0, frame.clone(), false)]);
+        for key in [
+            "queue_depth", "active", "slots", "requests_done", "cancelled", "shed",
+            "deadline_expired", "tokens_out", "wall_tok_s", "virt_tok_s", "queue_p50_ms",
+            "queue_p99_ms", "latency_p50_ms", "latency_p99_ms", "oldest_queued_ms",
+        ] {
+            assert_eq!(merged.get(key), frame.get(key), "pooled {key} must pass through");
+        }
+        assert_eq!(merged.get("engine").unwrap().as_str(), Some("mock"));
+        assert_eq!(merged.get("sched").unwrap().as_str(), Some("fcfs"));
+        assert_eq!(merged.get("route").unwrap().as_str(), Some("round_robin"));
+        assert_eq!(merged.get("acceptance_rate").unwrap().as_f64(), Some(0.8));
+        let reps = merged.get("replicas").unwrap().as_arr().unwrap();
+        assert_eq!(reps.len(), 1);
+        assert_eq!(reps[0].get("replica").unwrap().as_i64(), Some(0));
+        assert_eq!(reps[0].get("draining"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn merge_stats_pools_two_replicas() {
+        let mut core =
+            RouterCore::new(statuses(2), RouteKind::LeastLoaded, SloConfig::default());
+        core.shed = 2;
+        core.set_draining(1, true).unwrap();
+        let a = Json::parse(
+            r#"{"engine":"qspec","sched":"fcfs","queue_depth":2,
+                "queue_depth_by_priority":[2,0,0,0],"active":1,"slots":8,
+                "requests_done":5,"cancelled":0,"shed":0,"deadline_expired":0,
+                "tokens_out":30,"drafted":100,"accepted":80,
+                "acceptance_rate":0.8,"wall_tok_s":10.0,"virt_tok_s":20.0,
+                "queue_p50_ms":1.0,"queue_p99_ms":4.0,"latency_p50_ms":2.0,
+                "latency_p99_ms":8.0,"oldest_queued_ms":1.5}"#,
+        )
+        .unwrap();
+        let b = Json::parse(
+            r#"{"engine":"hierspec","sched":"fcfs","queue_depth":1,
+                "queue_depth_by_priority":[0,1,0,0],"active":2,"slots":8,
+                "requests_done":3,"cancelled":1,"shed":0,"deadline_expired":1,
+                "tokens_out":10,"drafted":100,"accepted":40,
+                "acceptance_rate":0.4,"wall_tok_s":5.0,"virt_tok_s":10.0,
+                "queue_p50_ms":2.0,"queue_p99_ms":3.0,"latency_p50_ms":4.0,
+                "latency_p99_ms":6.0,"oldest_queued_ms":0.5}"#,
+        )
+        .unwrap();
+        let merged = merge_stats(&core, &[(0, a, false), (1, b, true)]);
+        assert_eq!(merged.get("engine").unwrap().as_str(), Some("mixed"));
+        assert_eq!(merged.get("sched").unwrap().as_str(), Some("fcfs"));
+        assert_eq!(merged.get("queue_depth").unwrap().as_i64(), Some(3));
+        assert_eq!(merged.get("active").unwrap().as_i64(), Some(3));
+        assert_eq!(merged.get("slots").unwrap().as_i64(), Some(16));
+        assert_eq!(merged.get("requests_done").unwrap().as_i64(), Some(8));
+        assert_eq!(merged.get("shed").unwrap().as_i64(), Some(2), "router sheds count");
+        assert_eq!(merged.get("deadline_expired").unwrap().as_i64(), Some(1));
+        assert_eq!(merged.get("tokens_out").unwrap().as_i64(), Some(40));
+        // pooled acceptance from the summed counters, not a mean of means
+        assert_eq!(merged.get("acceptance_rate").unwrap().as_f64(), Some(0.6));
+        assert_eq!(merged.get("wall_tok_s").unwrap().as_f64(), Some(15.0));
+        // percentiles merge conservatively (max)
+        assert_eq!(merged.get("queue_p99_ms").unwrap().as_f64(), Some(4.0));
+        assert_eq!(merged.get("latency_p99_ms").unwrap().as_f64(), Some(8.0));
+        assert_eq!(merged.get("oldest_queued_ms").unwrap().as_f64(), Some(1.5));
+        let depths = merged.get("queue_depth_by_priority").unwrap().as_arr().unwrap();
+        let depths: Vec<i64> = depths.iter().filter_map(Json::as_i64).collect();
+        assert_eq!(depths, vec![2, 1, 0, 0]);
+        let reps = merged.get("replicas").unwrap().as_arr().unwrap();
+        assert_eq!(reps.len(), 2);
+        assert_eq!(reps[1].get("draining"), Some(&Json::Bool(true)));
+        assert_eq!(reps[1].get("engine").unwrap().as_str(), Some("hierspec"));
+        // the cached entry is flagged, the fresh one is not — but both
+        // count in the aggregates (monotone counters across polls)
+        assert_eq!(reps[1].get("stale"), Some(&Json::Bool(true)));
+        assert!(reps[0].get("stale").is_none());
+    }
+
+    #[test]
+    fn class_thresholds_agree_between_router_and_engine() {
+        // the router resolves thresholds through the same SloConfig
+        // entry point the engines use — pin the shared behavior
+        let slo = SloConfig { max_queue_depth: Some(4), ..SloConfig::default() };
+        assert_eq!(
+            slo.class_thresholds(0),
+            Some(ClassSlo { max_queue_depth: Some(4), p99_queue_wait_ms: None })
+        );
+        assert!(slo.class_thresholds(3).is_none());
+    }
+}

@@ -1,0 +1,84 @@
+//! Shared integration-test scaffolding: the mock-alphabet tokenizer
+//! and a blocking line-protocol client, used by both the cross-engine
+//! conformance suite (`engine_trait.rs`) and the pool/router suite
+//! (`pool_router.rs`) so the wire-level helpers cannot drift apart.
+//!
+//! Each integration-test binary compiles this module independently and
+//! uses a different subset of it, hence the blanket `dead_code` allow.
+#![allow(dead_code)]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use qspec::util::json::Json;
+
+/// The mock tokenizer (and its `MOCK_ALPHABET`) live next to
+/// `EchoEngine` in the library so the benches share them too.
+pub use qspec::coordinator::mock::mock_tokenizer;
+
+/// Blocking line-protocol client.
+pub struct Client {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Client {
+        let w = TcpStream::connect(addr).expect("connect");
+        let r = BufReader::new(w.try_clone().expect("clone"));
+        Client { w, r }
+    }
+
+    pub fn send(&mut self, line: &str) {
+        writeln!(self.w, "{line}").expect("send");
+    }
+
+    pub fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        let n = self.r.read_line(&mut line).expect("recv");
+        assert!(n > 0, "server closed the connection unexpectedly");
+        Json::parse(line.trim()).expect("frame is JSON")
+    }
+
+    /// Read frames until `pred` matches one; interleaved frames from
+    /// concurrent streams are collected and returned alongside it.
+    pub fn recv_until(&mut self, mut pred: impl FnMut(&Json) -> bool) -> (Json, Vec<Json>) {
+        let mut skipped = Vec::new();
+        loop {
+            let j = self.recv();
+            if pred(&j) {
+                return (j, skipped);
+            }
+            skipped.push(j);
+        }
+    }
+
+    /// First delta frame of a freshly sent streaming generate whose id
+    /// is not in `known` — the engine-assigned id of that request.
+    pub fn first_new_delta_id(&mut self, known: &[i64]) -> i64 {
+        let (j, _) = self.recv_until(|j| {
+            j.get("delta").is_some()
+                && j.get("id").and_then(Json::as_i64).is_some_and(|id| !known.contains(&id))
+        });
+        j.get("id").unwrap().as_i64().unwrap()
+    }
+
+    /// Drive one streaming generate: returns (concatenated delta text,
+    /// summed delta token count, terminal frame).
+    pub fn stream_generate(&mut self, req_line: &str) -> (String, i64, Json) {
+        self.send(req_line);
+        let mut text = String::new();
+        let mut ntok = 0i64;
+        loop {
+            let j = self.recv();
+            if let Some(err) = j.get("error") {
+                panic!("stream errored: {err:?}");
+            }
+            if j.get("done").is_some() {
+                return (text, ntok, j);
+            }
+            text.push_str(j.get("delta").expect("delta").as_str().unwrap());
+            ntok += j.get("tokens").unwrap().as_i64().unwrap();
+        }
+    }
+}

@@ -27,8 +27,7 @@
 //!   artifact layer: PJRT client creation is expensive and the handles
 //!   are not Send, so a single test owns the session.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::TcpListener;
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::thread;
@@ -36,17 +35,17 @@ use std::time::Duration;
 
 use qspec::config::{EngineKind, SchedKind, ServeConfig, SloConfig};
 use qspec::coordinator::{
-    build_engine, build_policy, BatchCore, Engine, FinishReason, GenerationRequest,
+    build_engine, build_policy, EchoEngine, Engine, FinishReason, GenerationRequest,
     SamplingParams, StepEvent,
 };
-use qspec::costmodel::{twins::Twin, CostModel};
-use qspec::error::Result as QResult;
 use qspec::evalsuite;
-use qspec::kvcache::SlotManager;
 use qspec::model::{Mode, Tokenizer};
 use qspec::runtime::{ArtifactStore, Session};
 use qspec::server::{self, Inbound};
 use qspec::util::json::Json;
+
+mod common;
+use common::{mock_tokenizer, Client};
 
 // ---------------------------------------------------------------------------
 // the engine conformance battery
@@ -337,136 +336,46 @@ fn start_frontend(
     (addr, rx, h)
 }
 
-/// Blocking line-protocol client.
-struct Client {
-    w: TcpStream,
-    r: BufReader<TcpStream>,
-}
-
-impl Client {
-    fn connect(addr: &str) -> Client {
-        let w = TcpStream::connect(addr).expect("connect");
-        let r = BufReader::new(w.try_clone().expect("clone"));
-        Client { w, r }
-    }
-
-    fn send(&mut self, line: &str) {
-        writeln!(self.w, "{line}").expect("send");
-    }
-
-    fn recv(&mut self) -> Json {
-        let mut line = String::new();
-        let n = self.r.read_line(&mut line).expect("recv");
-        assert!(n > 0, "server closed the connection unexpectedly");
-        Json::parse(line.trim()).expect("frame is JSON")
-    }
-
-    /// Drive one streaming generate: returns (concatenated delta text,
-    /// summed delta token count, terminal frame).
-    fn stream_generate(&mut self, req_line: &str) -> (String, i64, Json) {
-        self.send(req_line);
-        let mut text = String::new();
-        let mut ntok = 0i64;
-        loop {
-            let j = self.recv();
-            if let Some(err) = j.get("error") {
-                panic!("stream errored: {err:?}");
-            }
-            if j.get("done").is_some() {
-                return (text, ntok, j);
-            }
-            text.push_str(j.get("delta").expect("delta").as_str().unwrap());
-            ntok += j.get("tokens").unwrap().as_i64().unwrap();
-        }
-    }
-}
-
 // ---------------------------------------------------------------------------
 // session-free layer: mock engine over the real BatchCore
 // ---------------------------------------------------------------------------
-
-const ALPHA: &str = "abcdefghijklmnopqrstuvwxyz0123456789 \n+-*=?:;,.()<>[]|&%$#@!_";
-
-fn mock_tokenizer() -> Tokenizer {
-    Tokenizer::from_alphabet(ALPHA, 64).expect("tokenizer")
-}
-
-/// Echo engine: prefill emits token 10, each cycle commits pending + 1,
-/// so output text is deterministic ("hijk..."). `step_delay` widens the
-/// race window for cancellation tests.
-struct MockEngine {
-    core: BatchCore,
-    step_delay: Duration,
-}
-
-impl MockEngine {
-    fn new(batch: usize, max_seq: usize, delay_ms: u64) -> Self {
-        MockEngine {
-            core: BatchCore::new(
-                SlotManager::new(batch, max_seq, 16),
-                CostModel::new(Twin::lookup("llama2-7b")),
-            ),
-            step_delay: Duration::from_millis(delay_ms),
-        }
-    }
-}
-
-impl Engine for MockEngine {
-    fn name(&self) -> &'static str {
-        "mock"
-    }
-
-    fn core(&self) -> &BatchCore {
-        &self.core
-    }
-
-    fn core_mut(&mut self) -> &mut BatchCore {
-        &mut self.core
-    }
-
-    fn step(&mut self) -> QResult<Vec<StepEvent>> {
-        if !self.step_delay.is_zero() {
-            thread::sleep(self.step_delay);
-        }
-        let mut out = Vec::new();
-        if let Some(pb) = self.core.admit_batch(&mut out)? {
-            let first = vec![10i32; self.core.batch()];
-            self.core.finish_prefill(&pb, &first, &mut out);
-        }
-        if let Some(sb) = self.core.step_inputs() {
-            for &i in &sb.active {
-                let next = sb.tok[i] + 1;
-                // the virtual clock must advance for the conformance
-                // battery's cost invariant
-                self.core.cost.charge(
-                    qspec::model::Mode::W4A16,
-                    qspec::costmodel::Phase::Decode,
-                    sb.active.len(),
-                    1,
-                    sb.mean_ctx,
-                );
-                self.core.commit(i, &[next], 1, &mut out);
-            }
-        }
-        Ok(out)
-    }
-}
+// (the line-protocol Client and the mock-alphabet tokenizer live in
+// tests/common/mod.rs, shared with the pool/router suite)
 
 /// The session-free instantiation of the cross-engine battery: the
-/// mock engine must satisfy the exact contract the real engines do.
+/// library's mock echo engine (`coordinator::mock::EchoEngine` —
+/// prefill emits token 10, each cycle commits pending + 1, so output
+/// text is deterministic "hijk...") must satisfy the exact contract
+/// the real engines do. Its `delay_ms` knob widens the race window
+/// for the cancellation scenarios below.
 #[test]
 fn mock_engine_passes_conformance() {
     let tok = mock_tokenizer();
     let prompts: Vec<String> =
         ["hi there", "yo", "abc def", "012 345"].iter().map(|s| s.to_string()).collect();
-    let mut engine = MockEngine::new(2, 512, 0);
+    let mut engine = EchoEngine::new(2, 512, 0);
     conformance(&mut engine, &tok, &prompts);
+}
+
+/// The drafting variant of the mock must pass the identical battery
+/// (it commits several tokens per cycle, exercising multi-token
+/// deltas and stop matches spanning commits) and report its simulated
+/// acceptance through the stats surface.
+#[test]
+fn mock_engine_with_acceptance_passes_conformance() {
+    let tok = mock_tokenizer();
+    let prompts: Vec<String> =
+        ["hi there", "yo", "abc def", "012 345"].iter().map(|s| s.to_string()).collect();
+    let mut engine = EchoEngine::new(2, 512, 0).with_acceptance(0.75);
+    conformance(&mut engine, &tok, &prompts);
+    let acc = engine.metrics().acceptance_rate_opt().expect("drafting mock");
+    assert!((acc - 0.75).abs() < 1e-9);
 }
 
 #[test]
 fn mock_server_streaming_round_trip() {
     let tok = mock_tokenizer();
-    let mut engine = MockEngine::new(2, 64, 0);
+    let mut engine = EchoEngine::new(2, 64, 0);
     let (addr, rx, lh) = start_frontend(1, 16, 64);
     let client = thread::spawn(move || {
         let mut c = Client::connect(&addr);
@@ -491,7 +400,7 @@ fn mock_server_cancel_frees_slot_and_stats_report() {
     let tok = mock_tokenizer();
     // batch 1: the cancelled request must actually free its slot for
     // the follow-up request to complete
-    let mut engine = MockEngine::new(1, 512, 3);
+    let mut engine = EchoEngine::new(1, 512, 3);
     let (addr, rx, lh) = start_frontend(1, 16, 512);
     let client = thread::spawn(move || {
         let mut c = Client::connect(&addr);
@@ -539,7 +448,7 @@ fn mock_server_cancel_frees_slot_and_stats_report() {
 #[test]
 fn mock_server_disconnect_cancels_in_flight_request() {
     let tok = mock_tokenizer();
-    let mut engine = MockEngine::new(1, 512, 3);
+    let mut engine = EchoEngine::new(1, 512, 3);
     let (addr, rx, lh) = start_frontend(2, 16, 512);
     let client = thread::spawn(move || {
         {
@@ -564,7 +473,7 @@ fn mock_server_disconnect_cancels_in_flight_request() {
 #[test]
 fn mock_server_stop_sequence_legacy_form_and_errors() {
     let tok = mock_tokenizer();
-    let mut engine = MockEngine::new(2, 64, 0);
+    let mut engine = EchoEngine::new(2, 64, 0);
     let (addr, rx, lh) = start_frontend(1, 16, 64);
     let client = thread::spawn(move || {
         let mut c = Client::connect(&addr);
@@ -627,7 +536,7 @@ fn mock_server_stop_sequence_legacy_form_and_errors() {
 #[test]
 fn mock_server_cancel_is_connection_scoped() {
     let tok = mock_tokenizer();
-    let mut engine = MockEngine::new(1, 512, 3);
+    let mut engine = EchoEngine::new(1, 512, 3);
     let (addr, rx, lh) = start_frontend(2, 16, 512);
     let client = thread::spawn(move || {
         let mut c1 = Client::connect(&addr);
@@ -671,9 +580,9 @@ fn mock_server_qos_priority_shedding_and_deadlines() {
     let tok = mock_tokenizer();
     // batch 1 + priority policy + a depth-1 SLO: one long request pins
     // the slot, everything else exercises the queue
-    let mut engine = MockEngine::new(1, 512, 3);
-    engine.core.set_policy(build_policy(SchedKind::Priority));
-    engine.core.set_slo(SloConfig {
+    let mut engine = EchoEngine::new(1, 512, 3);
+    engine.core_mut().set_policy(build_policy(SchedKind::Priority));
+    engine.core_mut().set_slo(SloConfig {
         max_queue_depth: Some(1),
         retry_after_ms: 250,
         ..SloConfig::default()

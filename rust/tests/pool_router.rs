@@ -1,0 +1,524 @@
+//! Engine-pool conformance suite (protocol v1.2): mock replica pools
+//! served through the real frontend — conn threads -> router thread ->
+//! replica threads — plus property tests on the routing layer.
+//!
+//! Everything here is session-free: replicas are
+//! `coordinator::mock::EchoEngine` instances living on their own
+//! threads exactly like real engine workers (built in-thread, id space
+//! partitioned, status published), so the full v1.2 surface — routed
+//! admission, owner-scoped cancel, drain/undrain, per-class shedding,
+//! pooled stats — runs in CI without artifacts.
+
+use std::net::TcpListener;
+use std::sync::{mpsc, Arc};
+use std::thread;
+
+use qspec::config::{parse_per_class_slo, RouteKind, SloConfig};
+use qspec::coordinator::{BatchCore, EchoEngine, Engine};
+use qspec::costmodel::{twins::Twin, CostModel};
+use qspec::kvcache::SlotManager;
+use qspec::server::{self, Inbound, ReplicaHandle, ReplicaStatus, RouterCore};
+use qspec::util::json::Json;
+use qspec::util::prng::Pcg32;
+
+mod common;
+use common::{mock_tokenizer, Client};
+
+// ---------------------------------------------------------------------------
+// pool harness: real conn threads + router thread + mock replica threads
+// ---------------------------------------------------------------------------
+
+/// One mock replica's shape.
+#[derive(Clone, Copy)]
+struct ReplicaSpec {
+    batch: usize,
+    delay_ms: u64,
+    acceptance: Option<f64>,
+}
+
+impl ReplicaSpec {
+    fn new(batch: usize, delay_ms: u64) -> Self {
+        ReplicaSpec { batch, delay_ms, acceptance: None }
+    }
+}
+
+/// What a replica saw, reported when its loop exits.
+struct ReplicaReport {
+    replica: usize,
+    requests_done: u64,
+    cancelled: u64,
+}
+
+/// Bind an ephemeral port and stand up the full v1.2 serving stack
+/// over mock replicas: exactly `n_conns` connections are served, then
+/// the stack winds down and each replica posts its [`ReplicaReport`].
+fn start_pool(
+    specs: &[ReplicaSpec],
+    route: RouteKind,
+    slo: SloConfig,
+    n_conns: usize,
+) -> (String, mpsc::Receiver<ReplicaReport>, Vec<thread::JoinHandle<()>>) {
+    let n = specs.len();
+    let (report_tx, report_rx) = mpsc::channel::<ReplicaReport>();
+    let mut replicas = Vec::new();
+    let mut joins = Vec::new();
+    for (k, spec) in specs.iter().copied().enumerate() {
+        let status = Arc::new(ReplicaStatus::new());
+        let (tx, rx) = mpsc::channel::<Inbound>();
+        let st = status.clone();
+        let rep = report_tx.clone();
+        joins.push(thread::spawn(move || {
+            // engines are built on their worker thread, like real
+            // (non-Send) replicas
+            let tok = mock_tokenizer();
+            let mut engine = EchoEngine::new(spec.batch, 512, spec.delay_ms);
+            if let Some(a) = spec.acceptance {
+                engine = engine.with_acceptance(a);
+            }
+            engine.core_mut().set_id_space(k as u64, n as u64);
+            server::pool::replica_loop(&rx, &tok, &mut engine, &st).expect("replica loop");
+            let m = engine.metrics();
+            let _ = rep.send(ReplicaReport {
+                replica: k,
+                requests_done: m.requests_done,
+                cancelled: m.cancelled,
+            });
+        }));
+        replicas.push(ReplicaHandle { tx, status, label: "mock".into() });
+    }
+    drop(report_tx);
+
+    let statuses: Vec<Arc<ReplicaStatus>> = replicas.iter().map(|r| r.status.clone()).collect();
+    let mut core = RouterCore::new(statuses, route, slo);
+    let (rtx, rrx) = mpsc::channel::<Inbound>();
+    joins.push(thread::spawn(move || {
+        server::pool::router_loop(&rrx, &mut core, &replicas).expect("router loop");
+    }));
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = format!("127.0.0.1:{}", listener.local_addr().unwrap().port());
+    joins.push(thread::spawn(move || {
+        for conn in 0..n_conns as u64 {
+            let (stream, _) = match listener.accept() {
+                Ok(x) => x,
+                Err(_) => return,
+            };
+            let rtx = rtx.clone();
+            thread::spawn(move || server::conn_thread(stream, conn + 1, rtx, 16, 512));
+        }
+    }));
+    (addr, report_rx, joins)
+}
+
+fn finish(report_rx: mpsc::Receiver<ReplicaReport>, joins: Vec<thread::JoinHandle<()>>) -> Vec<ReplicaReport> {
+    let mut reports: Vec<ReplicaReport> = report_rx.iter().collect();
+    for j in joins {
+        j.join().expect("pool thread");
+    }
+    reports.sort_by_key(|r| r.replica);
+    reports
+}
+
+fn reason(j: &Json) -> &str {
+    j.get("finish_reason").unwrap().as_str().unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// acceptance scenario: least_loaded spread + owner-scoped cancel
+// ---------------------------------------------------------------------------
+
+/// The ISSUE's acceptance scenario: a pool of 2 mock replicas serves
+/// concurrent streaming requests over TCP under `least_loaded` — the
+/// two requests land on distinct replicas (provable from the
+/// partitioned id space), cancel reaches the owning replica and frees
+/// its slot, and the pooled stats reflect both replicas.
+#[test]
+fn pool_spreads_concurrent_streams_and_cancels_on_the_owner() {
+    let specs = [ReplicaSpec::new(2, 3), ReplicaSpec::new(2, 3)];
+    let (addr, report_rx, joins) =
+        start_pool(&specs, RouteKind::LeastLoaded, SloConfig::default(), 1);
+    let client = thread::spawn(move || {
+        let mut c = Client::connect(&addr);
+        c.send(r#"{"op":"generate","prompt":"hi","max_tokens":400,"stream":true}"#);
+        let id_a = c.first_new_delta_id(&[]);
+        c.send(r#"{"op":"generate","prompt":"yo","max_tokens":400,"stream":true}"#);
+        let id_b = c.first_new_delta_id(&[id_a]);
+        // distinct replicas: the id space is partitioned, so id mod
+        // pool names the owner
+        assert_ne!(id_a % 2, id_b % 2, "least_loaded must spread the two streams");
+        // cancel both; each cancel must reach its owning replica
+        for id in [id_a, id_b] {
+            c.send(&format!(r#"{{"op":"cancel","id":{id}}}"#));
+            let (term, _) = c.recv_until(|j| {
+                j.get("done").is_some() && j.get("id").unwrap().as_i64() == Some(id)
+            });
+            assert_eq!(reason(&term), "cancelled");
+            let (ack, _) = c.recv_until(|j| j.get("cancelled").is_some());
+            assert_eq!(ack.get("cancelled").unwrap().as_i64(), Some(id));
+        }
+        // both slots freed: pooled stats report an idle pool
+        c.send(r#"{"op":"stats"}"#);
+        let stats = c.recv();
+        assert_eq!(stats.get("active").unwrap().as_i64(), Some(0), "slots not freed");
+        assert_eq!(stats.get("queue_depth").unwrap().as_i64(), Some(0));
+        assert_eq!(stats.get("cancelled").unwrap().as_i64(), Some(2));
+        assert_eq!(stats.get("route").unwrap().as_str(), Some("least_loaded"));
+        assert_eq!(stats.get("replicas").unwrap().as_arr().unwrap().len(), 2);
+    });
+    client.join().unwrap();
+    let reports = finish(report_rx, joins);
+    // ... and the engine-side truth agrees: one cancel on each replica
+    assert_eq!(reports.len(), 2);
+    for r in &reports {
+        assert_eq!(r.cancelled, 1, "replica {} must cancel exactly its own", r.replica);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// drain lifecycle
+// ---------------------------------------------------------------------------
+
+#[test]
+fn drain_stops_admission_while_queued_and_inflight_work_completes() {
+    // batch 1 so a request can be queued behind the in-flight one
+    let specs = [ReplicaSpec::new(1, 3), ReplicaSpec::new(1, 3)];
+    let (addr, report_rx, joins) =
+        start_pool(&specs, RouteKind::RoundRobin, SloConfig::default(), 1);
+    let client = thread::spawn(move || {
+        let mut c = Client::connect(&addr);
+        // A -> replica 0 (round robin from 0), long enough to stay
+        // in flight across the drain
+        c.send(r#"{"op":"generate","prompt":"hi","max_tokens":40,"stream":true}"#);
+        let id_a = c.first_new_delta_id(&[]);
+        assert_eq!(id_a % 2, 0);
+        // B -> replica 1; C -> replica 0, queued behind A (batch 1)
+        c.send(r#"{"prompt":"yo","max_tokens":2}"#);
+        c.send(r#"{"prompt":"ab","max_tokens":2}"#);
+        // drain replica 0 while A runs and C queues on it (keep every
+        // interleaved frame: B may finish at any point)
+        c.send(r#"{"op":"drain","replica":0}"#);
+        let (ack, mut frames) = c.recv_until(|j| j.get("draining").is_some());
+        assert_eq!(ack.get("replica").unwrap().as_i64(), Some(0));
+        assert_eq!(ack.get("draining"), Some(&Json::Bool(true)));
+        // drained replicas are visible in stats
+        c.send(r#"{"op":"stats"}"#);
+        let (stats, skipped) = c.recv_until(|j| j.get("replicas").is_some());
+        frames.extend(skipped);
+        let reps = stats.get("replicas").unwrap().as_arr().unwrap();
+        assert_eq!(reps[0].get("draining"), Some(&Json::Bool(true)));
+        assert_eq!(reps[1].get("draining"), Some(&Json::Bool(false)));
+        // new work now avoids replica 0: D and E both land on 1
+        c.send(r#"{"prompt":"cd","max_tokens":2}"#);
+        c.send(r#"{"prompt":"ef","max_tokens":2}"#);
+        // collect every outstanding terminal: A (in-flight through the
+        // drain), B, C (queued on the drained replica), D, E
+        while frames.iter().filter(|j| j.get("finish_reason").is_some()).count() < 5 {
+            let (j, skipped) = c.recv_until(|j| j.get("finish_reason").is_some());
+            frames.extend(skipped);
+            frames.push(j);
+        }
+        let terminals: Vec<&Json> =
+            frames.iter().filter(|j| j.get("finish_reason").is_some()).collect();
+        let id_of = |j: &Json| j.get("id").unwrap().as_i64().unwrap();
+        // A survived the drain and ran to completion on replica 0
+        let a = terminals.iter().find(|j| id_of(j) == id_a).expect("A terminal");
+        assert_eq!(reason(a), "length");
+        assert_eq!(a.get("tokens").unwrap().as_i64(), Some(40));
+        // C was already queued on replica 0: the drain let it finish
+        assert!(
+            terminals.iter().any(|j| id_of(j) != id_a && id_of(j) % 2 == 0),
+            "the request queued on the drained replica must complete"
+        );
+        // D and E (sent after the drain) avoided replica 0
+        let post_drain_on_r1 =
+            terminals.iter().filter(|j| id_of(j) % 2 == 1).count();
+        assert_eq!(post_drain_on_r1, 3, "B, D and E all belong to replica 1");
+        // undrain restores admission to replica 0
+        c.send(r#"{"op":"undrain","replica":0}"#);
+        let (ack, _) = c.recv_until(|j| j.get("draining").is_some());
+        assert_eq!(ack.get("draining"), Some(&Json::Bool(false)));
+        // out-of-range drains answer bad_request
+        c.send(r#"{"op":"drain","replica":9}"#);
+        let (err, _) = c.recv_until(|j| j.get("error").is_some());
+        let err = err.get("error").unwrap();
+        assert_eq!(err.get("code").unwrap().as_str(), Some("bad_request"));
+        assert!(err.get("message").unwrap().as_str().unwrap().contains("out of range"));
+    });
+    client.join().unwrap();
+    let reports = finish(report_rx, joins);
+    assert_eq!(reports[0].requests_done, 2, "replica 0 finished A and C");
+    assert_eq!(reports[1].requests_done, 3, "replica 1 finished B, D, E");
+}
+
+// ---------------------------------------------------------------------------
+// pooled stats: per-replica entries + aggregates
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pooled_stats_merge_per_replica_identity_and_acceptance() {
+    // heterogeneous pool: replica 0 "drafts" (simulated acceptance
+    // 0.75), replica 1 is a plain AR echo
+    let mut spec0 = ReplicaSpec::new(2, 0);
+    spec0.acceptance = Some(0.75);
+    let specs = [spec0, ReplicaSpec::new(2, 0)];
+    let (addr, report_rx, joins) =
+        start_pool(&specs, RouteKind::RoundRobin, SloConfig::default(), 1);
+    let client = thread::spawn(move || {
+        let mut c = Client::connect(&addr);
+        // two requests, one per replica (round robin)
+        c.send(r#"{"prompt":"hi","max_tokens":4}"#);
+        c.send(r#"{"prompt":"yo","max_tokens":4}"#);
+        let mut done = 0;
+        while done < 2 {
+            let (_, skipped) = c.recv_until(|j| j.get("finish_reason").is_some());
+            assert!(skipped.is_empty());
+            done += 1;
+        }
+        c.send(r#"{"op":"stats"}"#);
+        let stats = c.recv();
+        // pooled top level keeps the v1.1 fields as aggregates
+        assert_eq!(stats.get("requests_done").unwrap().as_i64(), Some(2));
+        assert_eq!(stats.get("tokens_out").unwrap().as_i64(), Some(8));
+        assert_eq!(stats.get("slots").unwrap().as_i64(), Some(4));
+        assert_eq!(stats.get("engine").unwrap().as_str(), Some("mock"));
+        assert_eq!(stats.get("sched").unwrap().as_str(), Some("fcfs"));
+        assert_eq!(stats.get("route").unwrap().as_str(), Some("round_robin"));
+        // pooled acceptance comes from the summed counters — only
+        // replica 0 drafts, so the pool measures its 75%
+        let acc = stats.get("acceptance_rate").unwrap().as_f64().expect("pool drafted");
+        assert!((acc - 0.75).abs() < 1e-9, "pooled acceptance {acc}");
+        // per-replica entries carry their own identity and signals
+        let reps = stats.get("replicas").unwrap().as_arr().unwrap();
+        assert_eq!(reps.len(), 2);
+        for (k, r) in reps.iter().enumerate() {
+            assert_eq!(r.get("replica").unwrap().as_i64(), Some(k as i64));
+            assert_eq!(r.get("draining"), Some(&Json::Bool(false)));
+            assert_eq!(r.get("engine").unwrap().as_str(), Some("mock"));
+            assert_eq!(r.get("requests_done").unwrap().as_i64(), Some(1));
+        }
+        let acc0 = reps[0].get("acceptance_rate").unwrap().as_f64().expect("drafter");
+        assert!((acc0 - 0.75).abs() < 1e-9);
+        assert_eq!(reps[1].get("acceptance_rate"), Some(&Json::Null), "AR echo: null");
+    });
+    client.join().unwrap();
+    finish(report_rx, joins);
+}
+
+// ---------------------------------------------------------------------------
+// per-class shedding at the router, over TCP
+// ---------------------------------------------------------------------------
+
+#[test]
+fn router_sheds_by_class_table_and_reports_the_class() {
+    // depth cap 1 per class-0 request; classes 1+ exempt
+    let slo = SloConfig {
+        per_class: Some(parse_per_class_slo("1:-,-,-,-").unwrap()),
+        retry_after_ms: 333,
+        ..SloConfig::default()
+    };
+    let specs = [ReplicaSpec::new(1, 3), ReplicaSpec::new(1, 3)];
+    let (addr, report_rx, joins) = start_pool(&specs, RouteKind::LeastLoaded, slo, 1);
+    let client = thread::spawn(move || {
+        let mut c = Client::connect(&addr);
+        // pin both single-slot replicas with long streams
+        c.send(r#"{"op":"generate","prompt":"hi","max_tokens":300,"stream":true}"#);
+        let id_a = c.first_new_delta_id(&[]);
+        c.send(r#"{"op":"generate","prompt":"yo","max_tokens":300,"stream":true}"#);
+        let id_b = c.first_new_delta_id(&[id_a]);
+        // queue one request per replica: pool depth reaches 2 >= 1 x 2
+        c.send(r#"{"prompt":"ab","max_tokens":2}"#);
+        c.send(r#"{"prompt":"cd","max_tokens":2}"#);
+        // class 0 is now past its table threshold: shed, frame names it
+        c.send(r#"{"op":"generate","prompt":"no","max_tokens":2,"priority":0}"#);
+        let (ov, _) = c.recv_until(|j| j.get("error").is_some());
+        let err = ov.get("error").unwrap();
+        assert_eq!(err.get("code").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(err.get("class").unwrap().as_i64(), Some(0), "tripped class reported");
+        assert_eq!(err.get("retry_after_ms").unwrap().as_i64(), Some(333));
+        assert!(err.get("message").unwrap().as_str().unwrap().contains("pool queue depth"));
+        // the default class (1) is exempt in this table: still admitted
+        c.send(r#"{"prompt":"ef","max_tokens":2}"#);
+        // unpin the slots; every admitted request completes
+        c.send(&format!(r#"{{"op":"cancel","id":{id_a}}}"#));
+        c.send(&format!(r#"{{"op":"cancel","id":{id_b}}}"#));
+        let mut terminals = 0;
+        let mut frames = Vec::new();
+        while terminals < 5 {
+            let (j, skipped) = c.recv_until(|j| j.get("finish_reason").is_some());
+            frames.extend(skipped);
+            frames.push(j);
+            terminals = frames.iter().filter(|j| j.get("finish_reason").is_some()).count();
+        }
+        let cancelled =
+            frames.iter().filter(|j| j.get("finish_reason").is_some() && reason(j) == "cancelled").count();
+        assert_eq!(cancelled, 2, "only the two pinned streams were cancelled");
+    });
+    client.join().unwrap();
+    let reports = finish(report_rx, joins);
+    let done: u64 = reports.iter().map(|r| r.requests_done).sum();
+    assert_eq!(done, 3, "the shed request never reached a replica");
+}
+
+// ---------------------------------------------------------------------------
+// legacy compatibility: a single-replica pool is the v1.1 server
+// ---------------------------------------------------------------------------
+
+#[test]
+fn single_replica_pool_keeps_v11_surface() {
+    let specs = [ReplicaSpec::new(2, 0)];
+    let (addr, report_rx, joins) =
+        start_pool(&specs, RouteKind::RoundRobin, SloConfig::default(), 1);
+    let client = thread::spawn(move || {
+        let mut c = Client::connect(&addr);
+        // legacy bare-prompt line: same single result frame, same
+        // fields, ids dense from 0 (stride 1)
+        c.send(r#"{"prompt":"x","max_tokens":3}"#);
+        let r = c.recv();
+        assert_eq!(r.get("id").unwrap().as_i64(), Some(0));
+        assert_eq!(r.get("text").unwrap().as_str(), Some("hij"));
+        assert_eq!(reason(&r), "length");
+        for key in ["latency_ms", "queue_ms", "tokens"] {
+            assert!(r.get(key).is_some(), "v1 result field {key}");
+        }
+        c.send(r#"{"prompt":"x","max_tokens":3}"#);
+        let r = c.recv();
+        assert_eq!(r.get("id").unwrap().as_i64(), Some(1), "ids stay dense");
+        // v1.1 error surface: foreign/unknown cancel answers not_found
+        c.send(r#"{"op":"cancel","id":99}"#);
+        let err = c.recv();
+        assert_eq!(err.get("error").unwrap().get("code").unwrap().as_str(), Some("not_found"));
+        // v1.1 stats fields all present at the top level
+        c.send(r#"{"op":"stats"}"#);
+        let stats = c.recv();
+        for key in [
+            "engine", "sched", "queue_depth", "queue_depth_by_priority", "oldest_queued_ms",
+            "active", "slots", "requests_done", "cancelled", "shed", "deadline_expired",
+            "tokens_out", "acceptance_rate", "wall_tok_s", "virt_tok_s", "queue_p50_ms",
+            "queue_p99_ms", "latency_p50_ms", "latency_p99_ms",
+        ] {
+            assert!(stats.get(key).is_some(), "v1.1 stats field {key}");
+        }
+        assert_eq!(stats.get("engine").unwrap().as_str(), Some("mock"));
+        assert_eq!(stats.get("requests_done").unwrap().as_i64(), Some(2));
+        // draining the only replica sheds every new generate
+        c.send(r#"{"op":"drain","replica":0}"#);
+        let ack = c.recv();
+        assert_eq!(ack.get("draining"), Some(&Json::Bool(true)));
+        c.send(r#"{"prompt":"x","max_tokens":3}"#);
+        let err = c.recv();
+        let err = err.get("error").unwrap();
+        assert_eq!(err.get("code").unwrap().as_str(), Some("overloaded"));
+        assert!(err.get("message").unwrap().as_str().unwrap().contains("draining"));
+        c.send(r#"{"op":"undrain","replica":0}"#);
+        let ack = c.recv();
+        assert_eq!(ack.get("draining"), Some(&Json::Bool(false)));
+        c.send(r#"{"prompt":"x","max_tokens":3}"#);
+        assert_eq!(reason(&c.recv()), "length");
+    });
+    client.join().unwrap();
+    let reports = finish(report_rx, joins);
+    assert_eq!(reports[0].requests_done, 3);
+}
+
+// ---------------------------------------------------------------------------
+// routing property tests
+// ---------------------------------------------------------------------------
+
+fn statuses_with_loads(loads: &[(usize, usize, usize)]) -> Vec<Arc<ReplicaStatus>> {
+    use std::sync::atomic::Ordering;
+    loads
+        .iter()
+        .map(|&(q, a, p)| {
+            let st = ReplicaStatus::new();
+            st.queue_depth.store(q, Ordering::Relaxed);
+            st.active.store(a, Ordering::Relaxed);
+            st.pending.store(p, Ordering::Relaxed);
+            Arc::new(st)
+        })
+        .collect()
+}
+
+/// least_loaded never picks a replica with a strictly higher live load
+/// than some other candidate — under arbitrary load vectors.
+#[test]
+fn least_loaded_never_picks_a_strictly_deeper_replica() {
+    let mut rng = Pcg32::seeded(0xF00D);
+    for _ in 0..300 {
+        let n = rng.range_inclusive(2, 6) as usize;
+        let loads: Vec<(usize, usize, usize)> = (0..n)
+            .map(|_| {
+                (
+                    rng.range_inclusive(0, 12) as usize,
+                    rng.range_inclusive(0, 4) as usize,
+                    rng.range_inclusive(0, 3) as usize,
+                )
+            })
+            .collect();
+        let mut core = RouterCore::new(
+            statuses_with_loads(&loads),
+            RouteKind::LeastLoaded,
+            SloConfig::default(),
+        );
+        let picked = core.route(1).expect("no SLO: always routable");
+        let load = |k: usize| {
+            let (q, a, p) = loads[k];
+            q + a + p
+        };
+        for k in 0..n {
+            assert!(
+                load(picked) <= load(k),
+                "picked replica {picked} (load {}) over {k} (load {}) — loads {loads:?}",
+                load(picked),
+                load(k)
+            );
+        }
+    }
+}
+
+/// Ids assigned by stride-partitioned BatchCores always map back to
+/// their replica through the router's owner arithmetic — under random
+/// interleavings of submissions, so a cancel routed by owner_of can
+/// never land on a foreign replica.
+#[test]
+fn cancel_owner_arithmetic_matches_assignment() {
+    let mut rng = Pcg32::seeded(42);
+    for n in 1..=5usize {
+        let mut cores: Vec<BatchCore> = (0..n)
+            .map(|k| {
+                let mut c = BatchCore::new(
+                    SlotManager::new(2, 64, 16),
+                    CostModel::new(Twin::lookup("llama2-7b")),
+                );
+                c.set_id_space(k as u64, n as u64);
+                c
+            })
+            .collect();
+        let statuses = (0..n).map(|_| Arc::new(ReplicaStatus::new())).collect();
+        let router = RouterCore::new(statuses, RouteKind::RoundRobin, SloConfig::default());
+        for _ in 0..200 {
+            let k = rng.range_inclusive(0, (n - 1) as u32) as usize;
+            let id = cores[k].submit(vec![1, 2], 4);
+            assert_eq!(router.owner_of(id), k, "id {id} must route back to replica {k}");
+        }
+    }
+}
+
+/// Draining a replica in a live RouterCore: nothing routes to it until
+/// undrained, whatever the policy.
+#[test]
+fn drain_property_holds_for_every_policy() {
+    for route in RouteKind::ALL {
+        let statuses = statuses_with_loads(&[(0, 0, 0), (9, 9, 9), (1, 1, 0)]);
+        let mut core = RouterCore::new(statuses, route, SloConfig::default());
+        core.set_draining(0, true).unwrap();
+        for _ in 0..10 {
+            let k = core.route(1).unwrap();
+            assert_ne!(k, 0, "{}: routed to a draining replica", core.route_name());
+        }
+        core.set_draining(0, false).unwrap();
+        // replica 0 is routable again (least_loaded picks it at once;
+        // the others reach it within a cycle)
+        let picks: Vec<usize> = (0..6).map(|_| core.route(1).unwrap()).collect();
+        assert!(picks.contains(&0), "{}: undrained replica never picked", core.route_name());
+    }
+}
