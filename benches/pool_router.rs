@@ -1,4 +1,4 @@
-//! Pool-router bench: the three `RoutePolicy` implementations head to
+//! Pool-router bench: the `RoutePolicy` implementations head to
 //! head on the bursty mixed-priority workload across a heterogeneous
 //! pool of mock replicas (different speeds and draft-acceptance
 //! rates — the traffic/pool shape where placement is the whole game),
@@ -16,6 +16,10 @@
 //! `least_loaded` balances raw queue depth; `acceptance_aware`
 //! discounts a replica's backlog by its measured acceptance and
 //! shifts load toward the replicas that actually drain faster.
+//! `prefix_affinity` rides along for completeness: every prompt here
+//! shares the workload template's prefix, so it degenerates to
+//! pinning one replica — cache locality at the cost of balance; its
+//! real showcase is `benches/prefix_reuse.rs`.
 
 use std::sync::{mpsc, Arc};
 use std::thread;

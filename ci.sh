@@ -5,11 +5,13 @@
 #   ./ci.sh fast     # build + tests only (skip fmt/clippy/doc)
 #   ./ci.sh lint     # fmt + clippy + doc only (skip build/tests)
 #   ./ci.sh test     # the cross-engine conformance + property suites
-#                    # (incl. the session-free pool/router v1.2 suite)
+#                    # (incl. the session-free pool/router v1.3 suite
+#                    # and the paged-KV/prefix-cache properties)
 #                    # with --nocapture summaries, then bench smokes:
-#                    # pool_router always (mock replicas, no artifacts
-#                    # needed); sched_qos + hierspec_selfspec when
-#                    # artifacts/ is present
+#                    # pool_router + prefix_reuse always (mock
+#                    # replicas/engines, no artifacts needed);
+#                    # sched_qos + hierspec_selfspec when artifacts/
+#                    # is present
 #
 # Integration tests skip themselves when artifacts/ is absent; run
 # `make artifacts` first for full end-to-end coverage.
@@ -28,15 +30,19 @@ fi
 
 if [ "${1:-}" = "test" ]; then
     # conformance battery (every EngineKind) + pool/router protocol
-    # v1.2 scenarios + acceptance losslessness + quantized-KV shadow
-    # properties, with per-engine summaries
+    # v1.3 scenarios + acceptance losslessness + quantized-KV shadow
+    # and paged-KV/prefix-cache properties, with per-engine summaries
     cargo test --release \
         --test engine_trait --test pool_router \
         --test acceptance_props --test kv_quant_props \
+        --test paged_kv_props \
         -- --nocapture
-    # the pool-router bench races the three route policies over mock
-    # replicas: session-free, so it smokes unconditionally
+    # the pool-router bench races the route policies over mock
+    # replicas; the prefix-reuse bench races the paged KV + radix
+    # cache against cold prefill: both session-free, so they smoke
+    # unconditionally
     QSPEC_BENCH_SMOKE=1 cargo bench --bench pool_router
+    QSPEC_BENCH_SMOKE=1 cargo bench --bench prefix_reuse
     if [ -f artifacts/manifest.json ]; then
         # smoke the QoS and hierspec benches (tiny grids): the hierspec
         # bench asserts draft-cost < AR baseline and acceptance < 1.0
@@ -57,6 +63,10 @@ fi
 if [ "${1:-}" != "fast" ]; then
     cargo fmt --check
     cargo clippy --all-targets -- -D warnings
+    # the paged-KV hot path (kvcache) and the pool router must stay
+    # allocation-clean: promote redundant_clone (off by default) to an
+    # error across the library, which is where both modules live
+    cargo clippy --lib -- -D warnings -D clippy::redundant_clone
     # the protocol doc headers are the serving API's spec: keep them
     # (and every intra-doc link) compiling
     cargo doc --no-deps -q

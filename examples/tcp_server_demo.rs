@@ -1,4 +1,4 @@
-//! TCP serving demo (protocol v1.2): spawns the `qspec serve` binary
+//! TCP serving demo (protocol v1.3): spawns the `qspec serve` binary
 //! as a 2-replica engine pool under the least-loaded router and the
 //! priority scheduler, streams a generation token-by-token, fires
 //! concurrent legacy requests, cancels one mid-flight, submits

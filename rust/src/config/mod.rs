@@ -122,16 +122,21 @@ pub enum RouteKind {
     /// (heterogeneous pools: a replica whose scheme accepts more
     /// drafts emits more tokens per step); ties break least-loaded.
     AcceptanceAware,
+    /// route to the replica holding the longest cached prefix of the
+    /// prompt (multi-turn sessions land where their KV blocks live);
+    /// falls back to least-loaded on ties or no hit.
+    PrefixAffinity,
 }
 
 impl RouteKind {
     /// Parse a CLI route name: `round_robin`, `least_loaded`,
-    /// `acceptance_aware`.
+    /// `acceptance_aware`, `prefix_affinity`.
     pub fn parse(s: &str) -> Option<RouteKind> {
         match s {
             "round_robin" => Some(RouteKind::RoundRobin),
             "least_loaded" => Some(RouteKind::LeastLoaded),
             "acceptance_aware" => Some(RouteKind::AcceptanceAware),
+            "prefix_affinity" => Some(RouteKind::PrefixAffinity),
             _ => None,
         }
     }
@@ -142,11 +147,16 @@ impl RouteKind {
             RouteKind::RoundRobin => "round_robin",
             RouteKind::LeastLoaded => "least_loaded",
             RouteKind::AcceptanceAware => "acceptance_aware",
+            RouteKind::PrefixAffinity => "prefix_affinity",
         }
     }
 
-    pub const ALL: [RouteKind; 3] =
-        [RouteKind::RoundRobin, RouteKind::LeastLoaded, RouteKind::AcceptanceAware];
+    pub const ALL: [RouteKind; 4] = [
+        RouteKind::RoundRobin,
+        RouteKind::LeastLoaded,
+        RouteKind::AcceptanceAware,
+        RouteKind::PrefixAffinity,
+    ];
 }
 
 /// Shedding thresholds for one priority class (the per-class SLO
@@ -351,6 +361,12 @@ pub struct ServeConfig {
     pub collect_similarity: bool,
     pub max_tokens_default: usize,
     pub port: u16,
+    /// KV page size in tokens (`--kv-block`): the granularity of the
+    /// block allocator and of prefix-cache sharing.
+    pub kv_block: usize,
+    /// radix prefix-cache reuse of committed KV blocks
+    /// (`--no-prefix-cache` disables it).
+    pub prefix_cache: bool,
 }
 
 impl Default for ServeConfig {
@@ -373,6 +389,8 @@ impl Default for ServeConfig {
             // omit max_tokens (kept at the server's historical 64)
             max_tokens_default: 64,
             port: 7199,
+            kv_block: crate::kvcache::DEFAULT_KV_BLOCK,
+            prefix_cache: true,
         }
     }
 }
@@ -415,6 +433,9 @@ impl ServeConfig {
         }
         if self.batch == 0 {
             return Err(QspecError::Config("batch must be > 0".into()));
+        }
+        if self.kv_block == 0 {
+            return Err(QspecError::Config("kv_block must be >= 1".into()));
         }
         if self.replicas == 0 || self.replicas > MAX_REPLICAS {
             return Err(QspecError::Config(format!(
@@ -493,6 +514,9 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = ServeConfig::default();
         c.scheme = "gptq".into();
+        assert!(c.validate().is_err());
+        let mut c = ServeConfig::default();
+        c.kv_block = 0;
         assert!(c.validate().is_err());
     }
 

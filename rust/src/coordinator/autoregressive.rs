@@ -73,10 +73,12 @@ impl<'s> ArEngine<'s> {
             .prefill_m
             .call_prefill(&pb.tokens, &pb.start, &pb.mask, &kv, &self.weights)?;
         self.kv = Some(r.kv);
+        // prefill is priced per *uncached* token: blocks attached from
+        // the prefix cache carry committed KV and cost no compute
         let virt = self
             .core
             .cost
-            .charge(self.mode, Phase::Chunk, pb.admitted.len(), p, p);
+            .charge(self.mode, Phase::Chunk, pb.admitted.len(), pb.uncached_tokens(), p);
         self.core.metrics.add_phase(PhaseKind::Prefill, timer.elapsed_ns(), virt);
         self.core.finish_prefill(&pb, &r.tok, out);
         Ok(())

@@ -161,10 +161,12 @@ impl<'s> EagleEngine<'s> {
             .t_prefill
             .call_prefill(&pb.tokens, &pb.start, &pb.mask, &kv, &self.t_weights)?;
         self.kv_target = Some(r.kv);
+        // prefill is priced per *uncached* token: blocks attached from
+        // the prefix cache carry committed KV and cost no compute
         let virt = self
             .core
             .cost
-            .charge(Mode::W4A16, Phase::Chunk, pb.admitted.len(), p, p);
+            .charge(Mode::W4A16, Phase::Chunk, pb.admitted.len(), pb.uncached_tokens(), p);
         self.core.metrics.add_phase(PhaseKind::Prefill, timer.elapsed_ns(), virt);
         // draft-model prefill (its own cache — the memory overhead QSPEC avoids)
         let timer = PhaseTimer::start();

@@ -233,6 +233,19 @@ pub struct PrefillBatch {
     pub tokens: Vec<i32>,
     pub start: Vec<i32>,
     pub mask: Vec<i32>,
+    /// Per-admission prompt tokens NOT covered by the prefix cache
+    /// (parallel to `admitted`) — the share prefill must compute.
+    pub uncached: Vec<usize>,
+}
+
+impl PrefillBatch {
+    /// Tokens the batched prefill call is priced on: the max uncached
+    /// count across this round's admissions (the sequences prefill in
+    /// one chunked call, so the longest uncached span sets its cost).
+    /// At least 1 — the last prompt token is never cached.
+    pub fn uncached_tokens(&self) -> usize {
+        self.uncached.iter().copied().max().unwrap_or(1).max(1)
+    }
 }
 
 /// Per-step decode/draft inputs gathered over the active slots.
@@ -500,7 +513,8 @@ impl BatchCore {
         let p = self.slots.prefill_t();
         let b = self.slots.batch();
         let mut admitted = Vec::new();
-        while !self.queue.is_empty() && !self.slots.free_slots().is_empty() {
+        let mut uncached = Vec::new();
+        while !self.queue.is_empty() && self.slots.free_slots().next().is_some() {
             let req = self.queue.pop_next().unwrap();
             let wait_ns = req.arrival.elapsed().as_nanos();
             self.metrics.queue_wait.record(wait_ns as u64);
@@ -548,10 +562,16 @@ impl BatchCore {
             let plen = req.prompt.len().min(p);
             let idx = self.slots.admit(
                 req.id,
-                plen,
+                &req.prompt[..plen],
                 req.params.max_tokens,
                 req.params.stop.clone(),
             )?;
+            let cached = self.slots.slot(idx).cached;
+            if self.slots.prefix_enabled() {
+                self.metrics.prefix_queries += 1;
+                self.metrics.prefix_hit_tokens += cached as u64;
+            }
+            uncached.push(plen - cached);
             admitted.push((idx, req));
         }
         if self.queue.is_empty() {
@@ -571,7 +591,7 @@ impl BatchCore {
             mask[*idx] = 1;
             tokens[*idx * p + s..*idx * p + p].copy_from_slice(&req.prompt[..p - s]);
         }
-        Ok(Some(PrefillBatch { admitted, tokens, start, mask }))
+        Ok(Some(PrefillBatch { admitted, tokens, start, mask, uncached }))
     }
 
     /// Record the prefill results: `first_tok[idx]` is the first
@@ -606,7 +626,7 @@ impl BatchCore {
     /// position, pad start, activity mask) over the active slots.
     /// `None` when no slot is active.
     pub fn step_inputs(&self) -> Option<StepBatch> {
-        let active = self.slots.active_slots();
+        let active: Vec<usize> = self.slots.active_slots().collect();
         if active.is_empty() {
             return None;
         }
@@ -773,6 +793,10 @@ pub fn build_engine<'s>(
     };
     engine.core_mut().set_policy(build_policy(cfg.sched));
     engine.core_mut().set_slo(cfg.slo.clone());
+    // paging knobs apply uniformly: the block pool is rebuilt here,
+    // before the first admission, so every engine kind pages its KV
+    // (and HierSpec its shadow tier) at the configured block size
+    engine.core_mut().slots.configure_paging(cfg.kv_block, cfg.prefix_cache);
     Ok(engine)
 }
 
@@ -958,6 +982,21 @@ mod tests {
         // trimmed — the counters must be reconciled back to the output
         assert_eq!(e.metrics().tokens_out, 2);
         assert_eq!(e.metrics().committed, 2);
+    }
+
+    #[test]
+    fn prefix_cache_counters_track_repeat_prompts() {
+        let mut e = MockEngine { core: core(1) };
+        e.core.slots.configure_paging(2, true);
+        let prompt = vec![1, 2, 3, 4, 5, 6];
+        e.submit(prompt.clone(), 2);
+        e.run_to_completion().unwrap();
+        assert_eq!(e.metrics().prefix_queries, 1);
+        assert_eq!(e.metrics().prefix_hit_tokens, 0, "cold cache");
+        e.submit(prompt, 2);
+        e.run_to_completion().unwrap();
+        assert_eq!(e.metrics().prefix_queries, 2);
+        assert_eq!(e.metrics().prefix_hit_tokens, 4, "second turn reuses full blocks");
     }
 
     #[test]

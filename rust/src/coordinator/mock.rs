@@ -96,6 +96,16 @@ impl Engine for EchoEngine {
         }
         let mut out = Vec::new();
         if let Some(pb) = self.core.admit_batch(&mut out)? {
+            // like the real engines, prefill is priced per *uncached*
+            // token — session-free benches and tests can observe the
+            // prefix cache's virtual-cost savings
+            self.core.cost.charge(
+                Mode::W4A16,
+                Phase::Chunk,
+                pb.admitted.len(),
+                pb.uncached_tokens(),
+                self.core.slots.prefill_t(),
+            );
             let first = vec![10i32; self.core.batch()];
             self.core.finish_prefill(&pb, &first, &mut out);
         }

@@ -132,10 +132,12 @@ impl<'s> QSpecEngine<'s> {
             .prefill_m
             .call_prefill(&pb.tokens, &pb.start, &pb.mask, &kv, &self.w_verify)?;
         self.kv = Some(r.kv);
+        // prefill is priced per *uncached* token: blocks attached from
+        // the prefix cache carry committed KV and cost no compute
         let virt = self
             .core
             .cost
-            .charge(Mode::W4A16, Phase::Chunk, pb.admitted.len(), p, p);
+            .charge(Mode::W4A16, Phase::Chunk, pb.admitted.len(), pb.uncached_tokens(), p);
         self.core.metrics.add_phase(PhaseKind::Prefill, timer.elapsed_ns(), virt);
 
         // ablation: fill the separate draft cache too (W4A4 prefill)
@@ -145,7 +147,7 @@ impl<'s> QSpecEngine<'s> {
             let virt = self
                 .core
                 .cost
-                .charge(Mode::W4A4, Phase::Chunk, pb.admitted.len(), p, p);
+                .charge(Mode::W4A4, Phase::Chunk, pb.admitted.len(), pb.uncached_tokens(), p);
             self.core.metrics.add_phase(PhaseKind::Prefill, 0, virt);
         }
 

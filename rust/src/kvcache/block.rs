@@ -1,0 +1,236 @@
+//! Fixed-size KV block allocator (vLLM-style paging, logical tier).
+//!
+//! The physical cache stays one device tensor owned by the engine; this
+//! allocator manages the *logical* pages layered over it: fixed-size
+//! blocks of `block_size` token positions, a free list, and refcounted
+//! copy-on-write sharing so a committed prefix can back many sequences
+//! (and the radix prefix cache) without duplication.
+//!
+//! A block's content is its token ids at known sequence positions —
+//! with the deterministic [`kv_proxy`](super::kv_proxy) mapping, the
+//! `(token, position)` pairs *are* the cache bytes, so two sequences
+//! sharing a token-identical prefix share bit-identical KV and a block
+//! can be attached to either by bumping its refcount. Managers with a
+//! quantized shadow tier store one shadow code per token in the same
+//! block (one shadow block per full block), so both tiers page
+//! together.
+
+/// Index of a block in the allocator's slab.
+pub type BlockId = usize;
+
+/// One logical KV page: refcount + token run (+ parallel shadow codes
+/// when the owning manager runs a quantized shadow tier).
+#[derive(Clone, Debug, Default)]
+struct Block {
+    refcount: u32,
+    tokens: Vec<i32>,
+    shadow: Vec<u16>,
+}
+
+/// Slab of fixed-size blocks with a free list and refcounted CoW
+/// sharing. All mutation goes through [`BlockAllocator::push`] /
+/// [`BlockAllocator::clone_block`], which uphold the invariants the
+/// property suite checks: a live block is never on the free list,
+/// refcounts never underflow (release of a free block traps), and
+/// writes only land in exclusively-owned (refcount 1) blocks — sharing
+/// diverges via copy, never in place.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    block_size: usize,
+    blocks: Vec<Block>,
+    free: Vec<BlockId>,
+}
+
+impl BlockAllocator {
+    pub fn new(block_size: usize, capacity: usize) -> Self {
+        assert!(block_size >= 1, "kv block size must be >= 1");
+        BlockAllocator {
+            block_size,
+            blocks: vec![Block::default(); capacity],
+            // pop order: low ids first (purely cosmetic/deterministic)
+            free: (0..capacity).rev().collect(),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.capacity() - self.free_count()
+    }
+
+    /// Take a block off the free list (refcount 0 -> 1, empty content).
+    /// `None` when the pool is exhausted — the caller evicts from the
+    /// prefix cache and retries.
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        let id = self.free.pop()?;
+        let b = &mut self.blocks[id];
+        debug_assert_eq!(b.refcount, 0, "free list held a live block");
+        b.refcount = 1;
+        b.tokens.clear();
+        b.shadow.clear();
+        Some(id)
+    }
+
+    /// Add a reference (prefix-cache insert, prefix attach at admit).
+    pub fn retain(&mut self, id: BlockId) {
+        let b = &mut self.blocks[id];
+        assert!(b.refcount > 0, "retain of a free block {id}");
+        b.refcount += 1;
+    }
+
+    /// Drop a reference; the block returns to the free list when the
+    /// last one goes. Releasing a free block is a double-free and
+    /// traps.
+    pub fn release(&mut self, id: BlockId) {
+        let b = &mut self.blocks[id];
+        assert!(b.refcount > 0, "double free of block {id}");
+        b.refcount -= 1;
+        if b.refcount == 0 {
+            self.free.push(id);
+        }
+    }
+
+    pub fn refcount(&self, id: BlockId) -> u32 {
+        self.blocks[id].refcount
+    }
+
+    pub fn tokens(&self, id: BlockId) -> &[i32] {
+        &self.blocks[id].tokens
+    }
+
+    /// Quantized shadow codes, parallel to [`BlockAllocator::tokens`]
+    /// (empty for managers without a shadow tier).
+    pub fn shadow_codes(&self, id: BlockId) -> &[u16] {
+        &self.blocks[id].shadow
+    }
+
+    pub fn len(&self, id: BlockId) -> usize {
+        self.blocks[id].tokens.len()
+    }
+
+    pub fn is_empty(&self, id: BlockId) -> bool {
+        self.blocks[id].tokens.is_empty()
+    }
+
+    pub fn is_full(&self, id: BlockId) -> bool {
+        self.blocks[id].tokens.len() >= self.block_size
+    }
+
+    /// Append one token (+ optional shadow code) to an exclusively
+    /// owned, non-full block. Shared blocks must be cloned first
+    /// ([`BlockAllocator::clone_block`]) — in-place writes to a shared
+    /// page would corrupt every other holder's prefix.
+    pub fn push(&mut self, id: BlockId, tok: i32, code: Option<u16>) {
+        let b = &mut self.blocks[id];
+        assert_eq!(b.refcount, 1, "push into shared block {id} (CoW required)");
+        assert!(b.tokens.len() < self.block_size, "push into full block {id}");
+        b.tokens.push(tok);
+        if let Some(c) = code {
+            b.shadow.push(c);
+        }
+    }
+
+    /// Copy-on-write divergence: allocate a fresh block holding a copy
+    /// of `src`'s content (both tiers) with refcount 1. The caller
+    /// swaps its table entry to the clone and releases its `src` ref;
+    /// other holders keep the shared bytes untouched. `None` when the
+    /// pool is exhausted.
+    pub fn clone_block(&mut self, src: BlockId) -> Option<BlockId> {
+        let id = self.alloc()?;
+        let (tokens, shadow) = {
+            let s = &self.blocks[src];
+            (s.tokens.clone(), s.shadow.clone())
+        };
+        let b = &mut self.blocks[id];
+        b.tokens = tokens;
+        b.shadow = shadow;
+        Some(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut a = BlockAllocator::new(4, 2);
+        let x = a.alloc().unwrap();
+        let y = a.alloc().unwrap();
+        assert_ne!(x, y);
+        assert!(a.alloc().is_none(), "capacity 2 exhausted");
+        assert_eq!(a.live_count(), 2);
+        a.release(x);
+        assert_eq!(a.free_count(), 1);
+        let z = a.alloc().unwrap();
+        assert_eq!(z, x, "freed block recycled");
+    }
+
+    #[test]
+    fn refcount_sharing_blocks_return_on_last_release() {
+        let mut a = BlockAllocator::new(4, 1);
+        let x = a.alloc().unwrap();
+        a.retain(x);
+        assert_eq!(a.refcount(x), 2);
+        a.release(x);
+        assert_eq!(a.free_count(), 0, "still one holder");
+        a.release(x);
+        assert_eq!(a.free_count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_traps() {
+        let mut a = BlockAllocator::new(4, 1);
+        let x = a.alloc().unwrap();
+        a.release(x);
+        a.release(x);
+    }
+
+    #[test]
+    #[should_panic(expected = "CoW required")]
+    fn push_into_shared_block_traps() {
+        let mut a = BlockAllocator::new(4, 1);
+        let x = a.alloc().unwrap();
+        a.retain(x);
+        a.push(x, 7, None);
+    }
+
+    #[test]
+    fn cow_clone_preserves_shared_bytes() {
+        let mut a = BlockAllocator::new(4, 2);
+        let x = a.alloc().unwrap();
+        a.push(x, 1, Some(9));
+        a.push(x, 2, Some(8));
+        a.retain(x); // second holder
+        let y = a.clone_block(x).unwrap();
+        a.release(x); // the diverging holder swaps x -> y
+        a.push(y, 3, Some(7));
+        assert_eq!(a.tokens(x), &[1, 2], "shared prefix bytes untouched");
+        assert_eq!(a.tokens(y), &[1, 2, 3]);
+        assert_eq!(a.shadow_codes(x), &[9, 8]);
+        assert_eq!(a.shadow_codes(y), &[9, 8, 7]);
+    }
+
+    #[test]
+    fn alloc_returns_cleared_blocks() {
+        let mut a = BlockAllocator::new(2, 1);
+        let x = a.alloc().unwrap();
+        a.push(x, 5, Some(1));
+        a.release(x);
+        let y = a.alloc().unwrap();
+        assert_eq!(y, x);
+        assert!(a.is_empty(y));
+        assert!(a.shadow_codes(y).is_empty());
+    }
+}

@@ -1,4 +1,4 @@
-//! KV-cache slot manager.
+//! KV-cache slot manager, paged.
 //!
 //! The physical cache is one device-resident tensor [L,2,B,Hkv,S,hd]
 //! owned by the engine; this module owns the *logical* state: which slot
@@ -9,6 +9,26 @@
 //! Continuous batching (ORCA-style): a finished slot is released and the
 //! next queued request is admitted into it immediately; other slots are
 //! untouched (their positions are per-slot).
+//!
+//! # Paged KV + radix prefix cache
+//!
+//! Per-slot contiguous reservations are replaced by a block/page layer
+//! ([`block::BlockAllocator`]): each slot owns a block table of
+//! fixed-size (`kv_block`, default [`DEFAULT_KV_BLOCK`]) token pages
+//! from a shared free list, refcounted with copy-on-write divergence.
+//! Since [`kv_proxy`] derives cache content deterministically from
+//! `(token, position)`, a block storing its token run at known
+//! positions *is* its KV bytes, and token-identical prefixes across
+//! sequences share bit-identical blocks. A radix cache
+//! ([`prefix::RadixPrefixCache`]) hangs off the committed full blocks:
+//! admission looks up the longest cached prefix of the prompt, attaches
+//! its blocks by refcount, and reports how many prompt tokens the match
+//! covers (the engine prices prefill per *uncached* token); the last
+//! prompt token is always treated as uncached so prefill still yields
+//! the first-token logits. `after_prefill`/`commit` append into the
+//! partial tail block (CoW on shared pages) and publish newly filled
+//! blocks back into the radix cache; LRU eviction reclaims only blocks
+//! whose last holder is the cache itself.
 //!
 //! # Hierarchical (quantized-shadow) cache simulation
 //!
@@ -24,8 +44,17 @@
 //! KV-overwriting. Engines without a shadow (`SlotManager::new`) pay
 //! nothing: every shadow hook is a no-op.
 
+pub mod block;
+pub mod prefix;
+
 use crate::coordinator::request::FinishReason;
 use crate::error::{QspecError, Result};
+
+use block::{BlockAllocator, BlockId};
+use prefix::RadixPrefixCache;
+
+/// Default KV block size in tokens (`--kv-block`).
+pub const DEFAULT_KV_BLOCK: usize = 16;
 
 /// Deterministic full-precision proxy value in [-1, 1) for the KV entry
 /// a (token, position) pair would write — the quantity the shadow tier
@@ -196,6 +225,10 @@ pub struct Slot {
     pub done: bool,
     /// why the slot finished (meaningful once `done`).
     pub finish: FinishReason,
+    /// prompt tokens covered by the prefix-cache match at admission
+    /// (their blocks were attached by refcount, so prefill is priced
+    /// on the remaining `prompt_len - cached` tokens only).
+    pub cached: usize,
 }
 
 impl Default for Slot {
@@ -210,6 +243,7 @@ impl Default for Slot {
             stop: Vec::new(),
             done: false,
             finish: FinishReason::Length,
+            cached: 0,
         }
     }
 }
@@ -223,6 +257,165 @@ fn stop_suffix_len(generated: &[i32], stops: &[Vec<i32>]) -> Option<usize> {
         .map(Vec::len)
 }
 
+/// The paging layer of one [`SlotManager`]: the shared block pool, the
+/// per-slot block tables over it, and the radix prefix cache hanging
+/// off committed full blocks. Block `k` of a table covers the slot's
+/// logical stream positions `[k*kv_block, (k+1)*kv_block)` — the
+/// *unpadded* prompt + committed-token run, which is what prefix
+/// matching is keyed on (positions agree across sequences sharing a
+/// prefix, so shared blocks carry bit-identical KV).
+#[derive(Debug)]
+struct Pager {
+    alloc: BlockAllocator,
+    prefix: RadixPrefixCache,
+    tables: Vec<Vec<BlockId>>,
+    /// per-slot logical stream length (tokens paged in).
+    lens: Vec<usize>,
+    /// per-slot count of full blocks already offered to the cache.
+    published: Vec<usize>,
+    prefix_enabled: bool,
+    /// width of the paged quantized shadow codes (one shadow block per
+    /// full block), present exactly when the manager has a shadow tier.
+    shadow_bits: Option<u8>,
+}
+
+impl Pager {
+    fn new(
+        batch: usize,
+        max_seq: usize,
+        kv_block: usize,
+        prefix_enabled: bool,
+        shadow_bits: Option<u8>,
+    ) -> Self {
+        // A slot's stream never outgrows max_seq by more than one
+        // commit batch, so it holds at most max_seq/kv_block + 2
+        // blocks. Two extra slots' worth of pool is the prefix cache's
+        // private headroom — see the exhaustion argument in
+        // [`Pager::alloc_block`].
+        let per_slot = max_seq / kv_block + 2;
+        Pager {
+            alloc: BlockAllocator::new(kv_block, (batch + 2) * per_slot),
+            prefix: RadixPrefixCache::new(),
+            tables: vec![Vec::new(); batch],
+            lens: vec![0; batch],
+            published: vec![0; batch],
+            prefix_enabled,
+            shadow_bits,
+        }
+    }
+
+    fn code(&self, tok: i32, pos: usize) -> Option<u16> {
+        self.shadow_bits.map(|b| QuantizedView::quantize(b, kv_proxy(tok, pos)))
+    }
+
+    /// Allocate a block, evicting LRU cache-only blocks on pressure.
+    /// Infallible by construction: live slots hold at most
+    /// `batch * per_slot` unique blocks, the pool is two slots larger,
+    /// so an empty free list implies cache-only residents — and a
+    /// cache block not shared with any live slot always has a
+    /// refcount-1 leaf below it (a slot holding a descendant holds the
+    /// whole matched path), so eviction can always make progress.
+    fn alloc_block(&mut self) -> BlockId {
+        loop {
+            if let Some(id) = self.alloc.alloc() {
+                return id;
+            }
+            assert!(
+                self.prefix.evict_one(&mut self.alloc),
+                "kv block pool exhausted with nothing evictable"
+            );
+        }
+    }
+
+    /// Append one token to slot `idx`'s stream: open a fresh block at
+    /// block boundaries, CoW-diverge a shared tail block, then write.
+    fn append(&mut self, idx: usize, tok: i32) {
+        let pos = self.lens[idx];
+        let code = self.code(tok, pos);
+        let bs = self.alloc.block_size();
+        if pos % bs == 0 {
+            let id = self.alloc_block();
+            self.tables[idx].push(id);
+        } else {
+            let last = *self.tables[idx].last().expect("partial stream without a tail block");
+            if self.alloc.refcount(last) > 1 {
+                // CoW: writing in place would corrupt the other
+                // holders' shared prefix bytes
+                let copy = loop {
+                    if let Some(c) = self.alloc.clone_block(last) {
+                        break c;
+                    }
+                    assert!(
+                        self.prefix.evict_one(&mut self.alloc),
+                        "kv block pool exhausted during CoW"
+                    );
+                };
+                self.alloc.release(last);
+                *self.tables[idx].last_mut().expect("tail block") = copy;
+            }
+        }
+        let id = *self.tables[idx].last().expect("tail block");
+        self.alloc.push(id, tok, code);
+        self.lens[idx] = pos + 1;
+    }
+
+    /// Page in a prompt at admission: attach the longest cached prefix
+    /// by refcount (capped so the last prompt token always prefills —
+    /// its forward pass yields the first-token logits) and fill the
+    /// rest into fresh blocks. Returns the cached token count.
+    fn admit(&mut self, idx: usize, prompt: &[i32]) -> usize {
+        debug_assert!(self.tables[idx].is_empty(), "slot paged in before release");
+        let bs = self.alloc.block_size();
+        let mut cached = 0;
+        if self.prefix_enabled {
+            let mut matched = self.prefix.longest_match(prompt, bs);
+            matched.truncate((prompt.len() - 1) / bs);
+            for &b in &matched {
+                self.alloc.retain(b);
+            }
+            cached = matched.len() * bs;
+            self.tables[idx] = matched;
+        }
+        self.lens[idx] = cached;
+        self.published[idx] = cached / bs;
+        for &t in &prompt[cached..] {
+            self.append(idx, t);
+        }
+        cached
+    }
+
+    /// Offer slot `idx`'s newly filled full blocks to the radix cache
+    /// (no-op until a block boundary was crossed since the last offer,
+    /// so steady-state decode commits stay allocation-free).
+    fn publish(&mut self, idx: usize) {
+        if !self.prefix_enabled {
+            return;
+        }
+        let bs = self.alloc.block_size();
+        let full = self.lens[idx] / bs;
+        if full <= self.published[idx] {
+            return;
+        }
+        let mut stream = Vec::with_capacity(self.lens[idx]);
+        for &b in &self.tables[idx] {
+            stream.extend_from_slice(self.alloc.tokens(b));
+        }
+        self.prefix.insert(&stream, &self.tables[idx], &mut self.alloc);
+        self.published[idx] = full;
+    }
+
+    /// Drop slot `idx`'s block references. Cache-held blocks survive
+    /// (that's the whole point: the next prompt sharing this prefix
+    /// attaches them instead of re-prefilling).
+    fn release(&mut self, idx: usize) {
+        for b in std::mem::take(&mut self.tables[idx]) {
+            self.alloc.release(b);
+        }
+        self.lens[idx] = 0;
+        self.published[idx] = 0;
+    }
+}
+
 /// Slot table + admission bookkeeping for one engine.
 #[derive(Debug)]
 pub struct SlotManager {
@@ -234,6 +427,8 @@ pub struct SlotManager {
     /// per-slot quantized shadow tier (HierSpec engines only; `None`
     /// keeps every shadow hook a no-op for the other engine kinds).
     shadow: Option<Vec<QuantizedView>>,
+    /// the paged logical cache: block tables + radix prefix cache.
+    pager: Pager,
 }
 
 impl SlotManager {
@@ -243,6 +438,7 @@ impl SlotManager {
             max_seq,
             prefill_t,
             shadow: None,
+            pager: Pager::new(batch, max_seq, DEFAULT_KV_BLOCK, true, None),
         }
     }
 
@@ -257,7 +453,61 @@ impl SlotManager {
             max_seq,
             prefill_t,
             shadow: Some((0..batch).map(|_| QuantizedView::new(kv_bits)).collect()),
+            pager: Pager::new(batch, max_seq, DEFAULT_KV_BLOCK, true, Some(kv_bits)),
         }
+    }
+
+    /// Reconfigure the paging layer (`--kv-block`, `--no-prefix-cache`).
+    /// Must run before any admission — the block pool is rebuilt.
+    pub fn configure_paging(&mut self, kv_block: usize, prefix_cache: bool) {
+        assert!(
+            self.slots.iter().all(|s| s.req_id.is_none()),
+            "configure_paging with live slots"
+        );
+        self.pager = Pager::new(
+            self.slots.len(),
+            self.max_seq,
+            kv_block,
+            prefix_cache,
+            self.shadow_bits(),
+        );
+    }
+
+    /// Configured KV block size in tokens.
+    pub fn kv_block(&self) -> usize {
+        self.pager.alloc.block_size()
+    }
+
+    /// Whether prefix-cache reuse is enabled.
+    pub fn prefix_enabled(&self) -> bool {
+        self.pager.prefix_enabled
+    }
+
+    /// Slot `idx`'s block table (block k covers logical stream
+    /// positions [k*kv_block, (k+1)*kv_block)).
+    pub fn block_table(&self, idx: usize) -> &[BlockId] {
+        &self.pager.tables[idx]
+    }
+
+    /// Token run stored in a block.
+    pub fn block_tokens(&self, id: BlockId) -> &[i32] {
+        self.pager.alloc.tokens(id)
+    }
+
+    /// Quantized shadow codes stored in a block (empty without a
+    /// shadow tier).
+    pub fn block_shadow_codes(&self, id: BlockId) -> &[u16] {
+        self.pager.alloc.shadow_codes(id)
+    }
+
+    /// Blocks currently held by the radix prefix cache.
+    pub fn prefix_cached_blocks(&self) -> usize {
+        self.pager.prefix.cached_blocks()
+    }
+
+    /// Blocks in use across slots and the prefix cache.
+    pub fn live_blocks(&self) -> usize {
+        self.pager.alloc.live_count()
     }
 
     /// Shadow-tier width, when one is configured.
@@ -309,39 +559,43 @@ impl SlotManager {
         self.slots.iter().enumerate()
     }
 
-    /// Indices of idle slots (free for admission).
-    pub fn free_slots(&self) -> Vec<usize> {
+    /// Indices of idle slots (free for admission). Borrows instead of
+    /// allocating — this runs on every engine step.
+    pub fn free_slots(&self) -> impl Iterator<Item = usize> + '_ {
         self.slots
             .iter()
             .enumerate()
             .filter(|(_, s)| s.req_id.is_none())
             .map(|(i, _)| i)
-            .collect()
     }
 
-    /// Indices of active (occupied, not done) slots.
-    pub fn active_slots(&self) -> Vec<usize> {
+    /// Indices of active (occupied, not done) slots. Borrows instead
+    /// of allocating — this runs on every engine step.
+    pub fn active_slots(&self) -> impl Iterator<Item = usize> + '_ {
         self.slots
             .iter()
             .enumerate()
             .filter(|(_, s)| s.req_id.is_some() && !s.done)
             .map(|(i, _)| i)
-            .collect()
     }
 
     pub fn any_active(&self) -> bool {
         self.slots.iter().any(|s| s.req_id.is_some() && !s.done)
     }
 
-    /// Admit a request into a free slot: returns the slot index.
-    /// `prompt_len` must fit the prefill chunk.
+    /// Admit a request into a free slot: returns the slot index. The
+    /// prompt must fit the prefill chunk. The prompt's blocks are paged
+    /// in here — the longest prefix-cache match is attached by refcount
+    /// (see [`Slot::cached`]) and only the remaining tokens need
+    /// prefill compute.
     pub fn admit(
         &mut self,
         req_id: u64,
-        prompt_len: usize,
+        prompt: &[i32],
         max_tokens: usize,
         stop: Vec<Vec<i32>>,
     ) -> Result<usize> {
+        let prompt_len = prompt.len();
         if prompt_len == 0 || prompt_len > self.prefill_t {
             return Err(QspecError::Scheduler(format!(
                 "prompt len {prompt_len} outside 1..={}",
@@ -350,15 +604,16 @@ impl SlotManager {
         }
         let idx = self
             .free_slots()
-            .first()
-            .copied()
+            .next()
             .ok_or_else(|| QspecError::Scheduler("no free slot".into()))?;
+        let cached = self.pager.admit(idx, prompt);
         let s = &mut self.slots[idx];
         *s = Slot {
             req_id: Some(req_id),
             start: (self.prefill_t - prompt_len) as i32,
             max_tokens,
             stop,
+            cached,
             ..Slot::default()
         };
         if let Some(views) = self.shadow.as_mut() {
@@ -372,6 +627,10 @@ impl SlotManager {
     /// when it is fed as the pending token). Returns done.
     pub fn after_prefill(&mut self, idx: usize, next_tok: i32, eos: i32) -> bool {
         let prefill_t = self.prefill_t as i32;
+        // the prompt's KV is now committed: page in the first generated
+        // token and publish the slot's full blocks to the prefix cache
+        self.pager.append(idx, next_tok);
+        self.pager.publish(idx);
         if let Some(views) = self.shadow.as_mut() {
             // prefill runs at verify precision: the first generated
             // token enters both tiers, requantized from full precision
@@ -438,6 +697,11 @@ impl SlotManager {
                 s.finish = FinishReason::Length;
             }
         }
+        // page in the verified tokens and publish newly filled blocks
+        for &t in &committed {
+            self.pager.append(idx, t);
+        }
+        self.pager.publish(idx);
         if let Some(views) = self.shadow.as_mut() {
             // verify-phase overwrite: speculative draft entries are
             // dropped and the verified tokens are requantized into the
@@ -464,15 +728,19 @@ impl SlotManager {
 
     /// Release a finished slot; returns (req_id, generated tokens).
     /// Clears both cache tiers: the logical slot state and, when a
-    /// shadow is configured, its quantized view.
+    /// shadow is configured, its quantized view. The slot's block
+    /// references are dropped — blocks the prefix cache also holds
+    /// stay resident for future prompts sharing the prefix.
     pub fn release(&mut self, idx: usize) -> Option<(u64, Vec<i32>)> {
         let s = &mut self.slots[idx];
         let id = s.req_id.take()?;
         let toks = std::mem::take(&mut s.generated);
         s.done = false;
+        s.cached = 0;
         if let Some(views) = self.shadow.as_mut() {
             views[idx].clear();
         }
+        self.pager.release(idx);
         Some((id, toks))
     }
 
@@ -501,9 +769,9 @@ mod tests {
     #[test]
     fn admit_fills_free_slots_in_order() {
         let mut m = mgr();
-        assert_eq!(m.admit(1, 5, 10, vec![]).unwrap(), 0);
-        assert_eq!(m.admit(2, 5, 10, vec![]).unwrap(), 1);
-        assert_eq!(m.free_slots(), vec![2, 3]);
+        assert_eq!(m.admit(1, &[1, 2, 3, 4, 5], 10, vec![]).unwrap(), 0);
+        assert_eq!(m.admit(2, &[1, 2, 3, 4, 5], 10, vec![]).unwrap(), 1);
+        assert_eq!(m.free_slots().collect::<Vec<_>>(), vec![2, 3]);
         assert_eq!(m.slot(0).start, 11);
         assert_eq!(m.active_count(), 2);
         assert_eq!(m.slot_of(2), Some(1));
@@ -513,23 +781,23 @@ mod tests {
     #[test]
     fn admit_rejects_oversized_prompt() {
         let mut m = mgr();
-        assert!(m.admit(1, 17, 10, vec![]).is_err());
-        assert!(m.admit(1, 0, 10, vec![]).is_err());
+        assert!(m.admit(1, &[3; 17], 10, vec![]).is_err());
+        assert!(m.admit(1, &[], 10, vec![]).is_err());
     }
 
     #[test]
     fn admit_when_full_errors() {
         let mut m = mgr();
         for i in 0..4 {
-            m.admit(i, 4, 4, vec![]).unwrap();
+            m.admit(i, &[1, 2, 3, 4], 4, vec![]).unwrap();
         }
-        assert!(m.admit(9, 4, 4, vec![]).is_err());
+        assert!(m.admit(9, &[1, 2, 3, 4], 4, vec![]).is_err());
     }
 
     #[test]
     fn prefill_commits_first_token() {
         let mut m = mgr();
-        let i = m.admit(1, 4, 10, vec![]).unwrap();
+        let i = m.admit(1, &[1, 2, 3, 4], 10, vec![]).unwrap();
         assert!(!m.after_prefill(i, 42, 2));
         assert_eq!(m.slot(i).pos, 16);
         assert_eq!(m.slot(i).generated, vec![42]);
@@ -539,7 +807,7 @@ mod tests {
     #[test]
     fn prefill_eos_finishes_immediately() {
         let mut m = mgr();
-        let i = m.admit(1, 4, 10, vec![]).unwrap();
+        let i = m.admit(1, &[1, 2, 3, 4], 10, vec![]).unwrap();
         assert!(m.after_prefill(i, 2, 2));
         assert_eq!(m.slot(i).finish, FinishReason::Stop);
     }
@@ -547,7 +815,7 @@ mod tests {
     #[test]
     fn commit_advances_pos_and_sets_pending() {
         let mut m = mgr();
-        let i = m.admit(1, 4, 10, vec![]).unwrap();
+        let i = m.admit(1, &[1, 2, 3, 4], 10, vec![]).unwrap();
         m.after_prefill(i, 42, 2);
         let c = m.commit(i, &[43, 44], 2, 3);
         assert_eq!(c, vec![43, 44]);
@@ -560,7 +828,7 @@ mod tests {
     #[test]
     fn commit_stops_at_eos() {
         let mut m = mgr();
-        let i = m.admit(1, 4, 10, vec![]).unwrap();
+        let i = m.admit(1, &[1, 2, 3, 4], 10, vec![]).unwrap();
         m.after_prefill(i, 5, 2);
         let c = m.commit(i, &[6, 2, 9], 2, 3);
         assert_eq!(c, vec![6, 2]); // 9 discarded after EOS
@@ -571,7 +839,7 @@ mod tests {
     #[test]
     fn commit_stops_at_budget() {
         let mut m = mgr();
-        let i = m.admit(1, 4, 3, vec![]).unwrap();
+        let i = m.admit(1, &[1, 2, 3, 4], 3, vec![]).unwrap();
         m.after_prefill(i, 5, 2);
         let c = m.commit(i, &[6, 7, 8], 2, 3);
         assert_eq!(c, vec![6, 7]); // budget 3 incl. prefill token
@@ -582,7 +850,7 @@ mod tests {
     #[test]
     fn commit_stops_at_seq_limit() {
         let mut m = SlotManager::new(1, 22, 16);
-        let i = m.admit(1, 4, 100, vec![]).unwrap();
+        let i = m.admit(1, &[1, 2, 3, 4], 100, vec![]).unwrap();
         m.after_prefill(i, 5, 2);
         let _ = m.commit(i, &[6], 2, 3);
         // pos = 17, 17 + 3 + 2 >= 22 -> done
@@ -593,7 +861,7 @@ mod tests {
     #[test]
     fn commit_trims_matched_stop_sequence() {
         let mut m = mgr();
-        let i = m.admit(1, 4, 20, vec![vec![7, 8]]).unwrap();
+        let i = m.admit(1, &[1, 2, 3, 4], 20, vec![vec![7, 8]]).unwrap();
         m.after_prefill(i, 5, 2);
         let c = m.commit(i, &[6, 7, 8, 9], 2, 3);
         // the matched [7, 8] is trimmed; 9 never committed
@@ -606,7 +874,7 @@ mod tests {
     #[test]
     fn stop_match_spanning_commits_trims_earlier_tokens() {
         let mut m = mgr();
-        let i = m.admit(1, 4, 20, vec![vec![6, 7]]).unwrap();
+        let i = m.admit(1, &[1, 2, 3, 4], 20, vec![vec![6, 7]]).unwrap();
         m.after_prefill(i, 5, 2);
         assert_eq!(m.commit(i, &[6], 2, 3), vec![6]);
         // match completes on the next commit; only this commit's share
@@ -621,7 +889,7 @@ mod tests {
     #[test]
     fn prefill_first_token_can_match_stop() {
         let mut m = mgr();
-        let i = m.admit(1, 4, 20, vec![vec![42]]).unwrap();
+        let i = m.admit(1, &[1, 2, 3, 4], 20, vec![vec![42]]).unwrap();
         assert!(m.after_prefill(i, 42, 2));
         assert!(m.slot(i).generated.is_empty());
         assert_eq!(m.slot(i).finish, FinishReason::Stop);
@@ -630,13 +898,13 @@ mod tests {
     #[test]
     fn release_returns_tokens_and_frees() {
         let mut m = mgr();
-        let i = m.admit(7, 4, 10, vec![]).unwrap();
+        let i = m.admit(7, &[1, 2, 3, 4], 10, vec![]).unwrap();
         m.after_prefill(i, 5, 2);
         m.commit(i, &[6, 2], 2, 3);
         let (id, toks) = m.release(i).unwrap();
         assert_eq!(id, 7);
         assert_eq!(toks, vec![5, 6, 2]);
-        assert!(m.free_slots().contains(&i));
+        assert!(m.free_slots().any(|f| f == i));
         assert!(m.release(i).is_none());
     }
 
@@ -652,7 +920,7 @@ mod tests {
     fn shadow_tracks_commits_and_rolls_back_speculation() {
         let mut m = SlotManager::with_shadow(2, 64, 16, 4);
         assert_eq!(m.shadow_bits(), Some(4));
-        let i = m.admit(1, 4, 10, vec![]).unwrap();
+        let i = m.admit(1, &[1, 2, 3, 4], 10, vec![]).unwrap();
         m.after_prefill(i, 5, 2);
         assert_eq!(m.shadow_view(i).unwrap().committed_len(), 1);
         // draft writes three speculative entries...
@@ -671,14 +939,14 @@ mod tests {
     #[test]
     fn release_clears_both_tiers() {
         let mut m = SlotManager::with_shadow(1, 64, 16, 4);
-        let i = m.admit(1, 4, 10, vec![]).unwrap();
+        let i = m.admit(1, &[1, 2, 3, 4], 10, vec![]).unwrap();
         m.after_prefill(i, 5, 2);
         m.shadow_speculate(i, &[6]);
         m.release(i).unwrap();
         assert_eq!(m.shadow_view(i).unwrap().committed_len(), 0);
         assert_eq!(m.shadow_view(i).unwrap().speculative_len(), 0);
         // the next admission starts from an empty shadow
-        let i = m.admit(2, 4, 10, vec![]).unwrap();
+        let i = m.admit(2, &[1, 2, 3, 4], 10, vec![]).unwrap();
         assert_eq!(m.shadow_error(i), 0.0);
     }
 
@@ -698,6 +966,77 @@ mod tests {
         assert!(
             QuantizedView::max_roundtrip_error(4) < QuantizedView::max_roundtrip_error(2)
         );
+    }
+
+    #[test]
+    fn paged_admit_reuses_committed_prefix() {
+        let mut m = SlotManager::new(2, 64, 16);
+        m.configure_paging(2, true);
+        let prompt = [1, 2, 3, 4, 5, 6, 7, 8];
+        let i = m.admit(1, &prompt, 10, vec![]).unwrap();
+        assert_eq!(m.slot(i).cached, 0, "cold cache: nothing matched");
+        m.after_prefill(i, 42, -1);
+        // stream [1..8, 42]: four full blocks published
+        assert_eq!(m.prefix_cached_blocks(), 4);
+        let first_table = m.block_table(i).to_vec();
+        m.release(i).unwrap();
+        // same prompt again: all full blocks match, capped so the last
+        // prompt token still prefills -> 3 of 4 blocks attach
+        let j = m.admit(2, &prompt, 10, vec![]).unwrap();
+        assert_eq!(m.slot(j).cached, 6);
+        assert_eq!(m.block_table(j)[..3], first_table[..3], "blocks shared, not copied");
+        // a diverging prompt only matches up to the divergence point
+        m.release(j).unwrap();
+        let k = m.admit(3, &[1, 2, 3, 4, 9, 9], 10, vec![]).unwrap();
+        assert_eq!(m.slot(k).cached, 4);
+    }
+
+    #[test]
+    fn prefix_cache_disabled_never_matches() {
+        let mut m = SlotManager::new(1, 64, 16);
+        m.configure_paging(2, false);
+        let prompt = [1, 2, 3, 4, 5, 6];
+        let i = m.admit(1, &prompt, 10, vec![]).unwrap();
+        m.after_prefill(i, 42, -1);
+        m.release(i).unwrap();
+        assert_eq!(m.prefix_cached_blocks(), 0);
+        let j = m.admit(2, &prompt, 10, vec![]).unwrap();
+        assert_eq!(m.slot(j).cached, 0);
+    }
+
+    #[test]
+    fn shadow_codes_page_with_full_blocks() {
+        let mut m = SlotManager::with_shadow(1, 64, 16, 4);
+        m.configure_paging(2, true);
+        let i = m.admit(1, &[1, 2, 3, 4], 10, vec![]).unwrap();
+        m.after_prefill(i, 5, -1);
+        let mut pos = 0usize;
+        for &b in m.block_table(i) {
+            let toks = m.block_tokens(b).to_vec();
+            assert_eq!(m.block_shadow_codes(b).len(), toks.len());
+            for (c, &t) in m.block_shadow_codes(b).iter().zip(&toks) {
+                assert_eq!(*c, QuantizedView::quantize(4, kv_proxy(t, pos)));
+                pos += 1;
+            }
+        }
+        assert_eq!(pos, 5, "both tiers page the whole stream");
+    }
+
+    #[test]
+    fn block_pool_pressure_evicts_lru_cache_blocks() {
+        let mut m = SlotManager::new(1, 8, 8);
+        m.configure_paging(1, true);
+        let cap = (1 + 2) * (8 + 2); // Pager::new capacity formula
+        for r in 0..20 {
+            // distinct prompts: each release parks blocks in the cache
+            let base = (r * 100) as i32;
+            let i = m.admit(r as u64, &[base, base + 1, base + 2, base + 3], 4, vec![]).unwrap();
+            m.after_prefill(i, base + 4, -1);
+            m.release(i).unwrap();
+            assert!(m.live_blocks() <= cap, "pool never overcommits");
+        }
+        // 20 x 5 blocks exceed the pool: LRU eviction must have run
+        assert!(m.prefix_cached_blocks() <= cap);
     }
 
     #[test]

@@ -1,0 +1,259 @@
+//! Radix (block-granular trie) prefix cache over committed KV blocks.
+//!
+//! Nodes map one *full* block's token run to the [`BlockId`] holding
+//! its KV; a path from the root spells a committed prefix. The cache
+//! holds its own refcount on every cached block, so blocks survive the
+//! releasing slot and are reclaimed only by [`RadixPrefixCache::evict_one`]
+//! — which evicts the least-recently-used *leaf* whose block has
+//! refcount 1 (i.e. the cache is the last holder). A block attached to
+//! a live slot, or an interior block whose extension is still cached,
+//! is never freed: any slot holding a descendant block also holds the
+//! whole matched path, so its ancestors' refcounts are > 1 too.
+//!
+//! Lookup ([`RadixPrefixCache::longest_match`]) walks the prompt in
+//! block-size chunks and returns the blocks of the longest cached
+//! prefix; admission attaches them by refcount and prefill starts at
+//! the match boundary. Partial (tail) blocks are never inserted — they
+//! stay private to their slot until commits fill them.
+
+use super::block::{BlockAllocator, BlockId};
+
+/// Sentinel: node slot is free (slab reuse).
+const DEAD: u64 = u64::MAX;
+
+#[derive(Debug)]
+struct Node {
+    /// the full block's token run (len == block_size).
+    tokens: Vec<i32>,
+    block: BlockId,
+    children: Vec<usize>,
+    /// `None` for first-block nodes hanging off the root.
+    parent: Option<usize>,
+    /// LRU stamp from the cache's logical clock; [`DEAD`] = freed slot.
+    last_use: u64,
+}
+
+/// Block-granular radix cache (the `PrefixCacheManager` role in real
+/// serving stacks, adapted to the logical block tier).
+#[derive(Debug, Default)]
+pub struct RadixPrefixCache {
+    nodes: Vec<Node>,
+    free_nodes: Vec<usize>,
+    /// children of the (implicit) root: candidate first blocks.
+    roots: Vec<usize>,
+    clock: u64,
+}
+
+impl RadixPrefixCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of blocks currently cached.
+    pub fn cached_blocks(&self) -> usize {
+        self.nodes.len() - self.free_nodes.len()
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    fn child_matching(&self, children: &[usize], run: &[i32]) -> Option<usize> {
+        children.iter().copied().find(|&n| self.nodes[n].tokens == run)
+    }
+
+    /// Blocks of the longest cached prefix of `prompt`, at `block_size`
+    /// granularity (only whole blocks match). Bumps the LRU stamp of
+    /// every node on the matched path.
+    pub fn longest_match(&mut self, prompt: &[i32], block_size: usize) -> Vec<BlockId> {
+        let now = self.tick();
+        let mut out = Vec::new();
+        let mut parent: Option<usize> = None;
+        for run in prompt.chunks(block_size) {
+            if run.len() < block_size {
+                break; // tail block: never cached
+            }
+            let children: &[usize] = match parent {
+                None => &self.roots,
+                Some(p) => &self.nodes[p].children,
+            };
+            let Some(n) = self.child_matching(children, run) else { break };
+            self.nodes[n].last_use = now;
+            out.push(self.nodes[n].block);
+            parent = Some(n);
+        }
+        out
+    }
+
+    /// Insert the full blocks of a committed stream: `stream` is the
+    /// slot's logical token run (prompt + generated commits), `table`
+    /// its block table. Existing nodes are shared (no duplicate
+    /// entries); each newly cached block gains one cache-owned
+    /// reference via `alloc.retain`.
+    pub fn insert(&mut self, stream: &[i32], table: &[BlockId], alloc: &mut BlockAllocator) {
+        let bs = alloc.block_size();
+        let now = self.tick();
+        let mut parent: Option<usize> = None;
+        for (k, run) in stream.chunks(bs).enumerate() {
+            if run.len() < bs {
+                break; // partial tail stays private to the slot
+            }
+            let children = match parent {
+                None => &self.roots,
+                Some(p) => &self.nodes[p].children,
+            };
+            if let Some(n) = self.child_matching(children, run) {
+                self.nodes[n].last_use = now;
+                parent = Some(n);
+                continue;
+            }
+            let n = self.new_node(run.to_vec(), table[k], parent, now);
+            alloc.retain(table[k]);
+            match parent {
+                None => self.roots.push(n),
+                Some(p) => self.nodes[p].children.push(n),
+            }
+            parent = Some(n);
+        }
+    }
+
+    fn new_node(
+        &mut self,
+        tokens: Vec<i32>,
+        block: BlockId,
+        parent: Option<usize>,
+        now: u64,
+    ) -> usize {
+        let node = Node { tokens, block, children: Vec::new(), parent, last_use: now };
+        match self.free_nodes.pop() {
+            Some(i) => {
+                self.nodes[i] = node;
+                i
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Evict the least-recently-used leaf whose block the cache is the
+    /// last holder of (refcount 1), releasing the block to the free
+    /// list. Returns false when nothing is evictable — every cached
+    /// block is still attached to a live slot (directly, or through a
+    /// cached extension whose path that slot holds).
+    pub fn evict_one(&mut self, alloc: &mut BlockAllocator) -> bool {
+        let victim = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| {
+                n.last_use != DEAD && n.children.is_empty() && alloc.refcount(n.block) == 1
+            })
+            .min_by_key(|(_, n)| n.last_use)
+            .map(|(i, _)| i);
+        let Some(i) = victim else { return false };
+        alloc.release(self.nodes[i].block);
+        let parent = self.nodes[i].parent;
+        match parent {
+            None => self.roots.retain(|&c| c != i),
+            Some(p) => self.nodes[p].children.retain(|&c| c != i),
+        }
+        self.nodes[i].last_use = DEAD;
+        self.nodes[i].tokens.clear();
+        self.nodes[i].children.clear();
+        self.free_nodes.push(i);
+        true
+    }
+
+    /// Drop every cached entry (releases all cache-owned refs).
+    pub fn clear(&mut self, alloc: &mut BlockAllocator) {
+        for n in &self.nodes {
+            if n.last_use != DEAD {
+                alloc.release(n.block);
+            }
+        }
+        self.nodes.clear();
+        self.free_nodes.clear();
+        self.roots.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fill `n` full blocks with `stream` tokens; returns the table.
+    fn fill(alloc: &mut BlockAllocator, stream: &[i32]) -> Vec<BlockId> {
+        let bs = alloc.block_size();
+        let mut table = Vec::new();
+        for (j, &t) in stream.iter().enumerate() {
+            if j % bs == 0 {
+                table.push(alloc.alloc().expect("capacity"));
+            }
+            alloc.push(*table.last().unwrap(), t, None);
+        }
+        table
+    }
+
+    #[test]
+    fn lookup_returns_longest_cached_prefix() {
+        let mut alloc = BlockAllocator::new(2, 16);
+        let mut c = RadixPrefixCache::new();
+        let stream = [1, 2, 3, 4, 5, 6];
+        let table = fill(&mut alloc, &stream);
+        c.insert(&stream, &table, &mut alloc);
+        assert_eq!(c.cached_blocks(), 3);
+        // full match on all three blocks
+        assert_eq!(c.longest_match(&[1, 2, 3, 4, 5, 6, 9], 2), table);
+        // divergence inside block 2: only the first block matches
+        assert_eq!(c.longest_match(&[1, 2, 9, 9], 2), table[..1]);
+        // partial tail (< block) never matches
+        assert_eq!(c.longest_match(&[1], 2), Vec::<BlockId>::new());
+        assert_eq!(c.longest_match(&[9, 9], 2), Vec::<BlockId>::new());
+    }
+
+    #[test]
+    fn insert_is_idempotent_and_shares_nodes() {
+        let mut alloc = BlockAllocator::new(2, 16);
+        let mut c = RadixPrefixCache::new();
+        let stream = [1, 2, 3, 4];
+        let table = fill(&mut alloc, &stream);
+        c.insert(&stream, &table, &mut alloc);
+        let rc = alloc.refcount(table[0]);
+        c.insert(&stream, &table, &mut alloc);
+        assert_eq!(c.cached_blocks(), 2, "re-insert adds nothing");
+        assert_eq!(alloc.refcount(table[0]), rc, "no duplicate cache refs");
+        // a diverging stream shares the common first block node
+        let stream2 = [1, 2, 7, 8];
+        let table2 = fill(&mut alloc, &stream2);
+        c.insert(&stream2, &table2, &mut alloc);
+        assert_eq!(c.cached_blocks(), 3, "first block shared, second forked");
+    }
+
+    #[test]
+    fn eviction_takes_lru_leaf_and_spares_referenced_blocks() {
+        let mut alloc = BlockAllocator::new(2, 16);
+        let mut c = RadixPrefixCache::new();
+        let a = fill(&mut alloc, &[1, 2, 3, 4]);
+        c.insert(&[1, 2, 3, 4], &a, &mut alloc);
+        let b = fill(&mut alloc, &[5, 6]);
+        c.insert(&[5, 6], &b, &mut alloc);
+        // slots release their refs; the cache is now the last holder
+        for &id in a.iter().chain(&b) {
+            alloc.release(id);
+        }
+        // touch the [5,6] entry so the [1,2]->[3,4] chain is older
+        c.longest_match(&[5, 6], 2);
+        assert!(c.evict_one(&mut alloc));
+        // LRU leaf is [3,4] (the chain's leaf; [1,2] is interior)
+        assert_eq!(alloc.refcount(a[1]), 0, "leaf block freed");
+        assert_eq!(alloc.refcount(a[0]), 1, "interior spared until its leaf goes");
+        // a block still attached to a slot is never evicted
+        alloc.retain(b[0]); // simulated live slot attach
+        assert!(c.evict_one(&mut alloc), "the [1,2] node (now childless) is evictable");
+        assert!(!c.evict_one(&mut alloc), "only the slot-held [5,6] remains: not evictable");
+        assert_eq!(alloc.refcount(b[0]), 2, "slot-held block untouched");
+    }
+}

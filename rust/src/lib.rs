@@ -12,7 +12,7 @@
 //!   FCFS / priority-with-aging / SJF / EDF, plus per-class SLO-based
 //!   shedding), continuous batcher, speculative scheduler with
 //!   KV-overwriting, AR + EAGLE baselines, L20 roofline cost model,
-//!   metrics, workloads, TCP server (protocol v1.2). All engines
+//!   metrics, workloads, TCP server (protocol v1.3). All engines
 //!   implement `coordinator::Engine` over a shared
 //!   `coordinator::BatchCore`; drivers hold `&mut dyn Engine` built by
 //!   `coordinator::build_engine`.

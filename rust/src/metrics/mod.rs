@@ -64,6 +64,12 @@ pub struct EngineMetrics {
     /// waited in the queue but never ran, so they count in `queue_wait`
     /// only.
     pub deadline_expired: u64,
+    /// prefix-cache lookups at admission (one per admitted request
+    /// when the cache is enabled; 0 means the cache is off).
+    pub prefix_queries: u64,
+    /// prompt tokens covered by prefix-cache matches — prefill compute
+    /// skipped by attaching committed blocks instead of recomputing.
+    pub prefix_hit_tokens: u64,
     /// per-request end-to-end latency (wall ns)
     pub req_latency: LogHistogram,
     /// per-request queue wait (submit -> admission, wall ns)
@@ -111,6 +117,16 @@ impl EngineMetrics {
             return None;
         }
         Some(self.accepted as f64 / self.drafted as f64)
+    }
+
+    /// Mean prefix-cache hit tokens per lookup, or `None` when the
+    /// cache never ran a lookup (cache disabled, or no admissions
+    /// yet) — same null convention as [`Self::acceptance_rate_opt`].
+    pub fn prefix_hit_rate_opt(&self) -> Option<f64> {
+        if self.prefix_queries == 0 {
+            return None;
+        }
+        Some(self.prefix_hit_tokens as f64 / self.prefix_queries as f64)
     }
 
     /// Wall-clock generation throughput (token/s).
@@ -167,6 +183,10 @@ impl EngineMetrics {
             ("cancelled", num(self.cancelled as f64)),
             ("shed", num(self.shed as f64)),
             ("deadline_expired", num(self.deadline_expired as f64)),
+            ("prefix_queries", num(self.prefix_queries as f64)),
+            ("prefix_hit_tokens", num(self.prefix_hit_tokens as f64)),
+            // null (not 0.0) when the cache never ran a lookup
+            ("prefix_hit_rate", self.prefix_hit_rate_opt().map_or(Json::Null, num)),
             // null (not 0.0) when the engine never drafted
             ("acceptance_rate", self.acceptance_rate_opt().map_or(Json::Null, num)),
             ("wall_tok_s", num(self.wall_tokens_per_s())),
@@ -251,6 +271,22 @@ mod tests {
         assert!(j.get("cancelled").is_some());
         assert!(j.get("shed").is_some());
         assert!(j.get("deadline_expired").is_some());
+        assert!(j.get("prefix_queries").is_some());
+        assert!(j.get("prefix_hit_tokens").is_some());
+    }
+
+    #[test]
+    fn prefix_hit_rate_is_null_until_first_lookup() {
+        let m = EngineMetrics::new();
+        assert!(m.prefix_hit_rate_opt().is_none());
+        assert_eq!(m.to_json().get("prefix_hit_rate"), Some(&Json::Null));
+        let mut m = EngineMetrics::new();
+        m.prefix_queries = 4;
+        m.prefix_hit_tokens = 32;
+        assert_eq!(m.prefix_hit_rate_opt(), Some(8.0));
+        // an enabled cache with no hits still reports the number
+        m.prefix_hit_tokens = 0;
+        assert_eq!(m.to_json().get("prefix_hit_rate"), Some(&num(0.0)));
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! TCP line-protocol serving frontend (protocol v1.2).
+//! TCP line-protocol serving frontend (protocol v1.3).
 //!
 //! Since v1.2 the server is an **engine pool**: `--replicas N` (or a
 //! repeated `--engine` for a heterogeneous pool) spawns one engine
@@ -17,7 +17,8 @@
 //! per-request sampling params and the QoS surface under whichever
 //! `--sched` policy the server was started with. The router places new
 //! requests by the `--route` policy (`round_robin` | `least_loaded` |
-//! `acceptance_aware`; see [`pool::RoutePolicy`]), owns the drain
+//! `acceptance_aware` | `prefix_affinity`; see [`pool::RoutePolicy`]),
+//! owns the drain
 //! lifecycle, and enforces the admission SLO pool-wide (per-class
 //! thresholds via `--shed-below`; per-replica p99 backpressure).
 //! Request ids are partitioned across replicas (`id % pool` names the
@@ -25,7 +26,7 @@
 //! the owning replica. A single-replica pool behaves byte-for-byte
 //! like the v1.1 server on the v1/v1.1 surface.
 //!
-//! # Protocol v1.2 — one JSON object per line, both directions
+//! # Protocol v1.3 — one JSON object per line, both directions
 //!
 //! Five ops, selected by the `"op"` field (absent = `generate`, the
 //! legacy bare-prompt form):
@@ -125,6 +126,19 @@
 //! `queue_p99_ms` are computed from the same live wait window the SLO
 //! shedder reads (not the boot-to-now histogram), so the numbers an
 //! operator sees are the numbers that trigger shedding.
+//!
+//! # v1.3 — prefix-cache observability
+//!
+//! v1.3 is additive: every `stats` frame (per-replica and pooled)
+//! gains three fields from the paged-KV radix prefix cache —
+//! `prefix_queries` (admissions that ran a prefix lookup),
+//! `prefix_hit_tokens` (prompt tokens whose KV was reused from cached
+//! blocks instead of prefilled) and `prefix_hit_rate` (hit tokens per
+//! lookup; `null` while no lookup has run, e.g. under
+//! `--no-prefix-cache` — the `acceptance_rate` null convention). The
+//! pooled rate is recomputed from the summed counters. v1.3 also adds
+//! the `prefix_affinity` route policy; no ops or request fields
+//! changed, so v1.2 clients parse v1.3 frames unmodified.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -435,10 +449,12 @@ pub fn format_overloaded(ov: &Overload) -> String {
 /// boot, so its p99 could keep reading "overloaded" hours after the
 /// signal that actually sheds had recovered — or vice versa), and
 /// adds the raw `drafted`/`accepted` counters so the pool router can
-/// merge acceptance across replicas without averaging averages. In
-/// pool serving this frame becomes one entry of `replicas: [...]`;
-/// the router aggregates the pooled top level (see
-/// [`pool::merge_stats`]).
+/// merge acceptance across replicas without averaging averages. v1.3
+/// adds the prefix-cache counters (`prefix_queries` /
+/// `prefix_hit_tokens` / `prefix_hit_rate`) under the same
+/// raw-counters-plus-null-rate pattern. In pool serving this frame
+/// becomes one entry of `replicas: [...]`; the router aggregates the
+/// pooled top level (see [`pool::merge_stats`]).
 pub fn format_stats(engine: &dyn Engine) -> String {
     let m = engine.metrics();
     let depths = engine
@@ -462,6 +478,9 @@ pub fn format_stats(engine: &dyn Engine) -> String {
         ("drafted", num(m.drafted as f64)),
         ("accepted", num(m.accepted as f64)),
         ("acceptance_rate", m.acceptance_rate_opt().map_or(Json::Null, num)),
+        ("prefix_queries", num(m.prefix_queries as f64)),
+        ("prefix_hit_tokens", num(m.prefix_hit_tokens as f64)),
+        ("prefix_hit_rate", m.prefix_hit_rate_opt().map_or(Json::Null, num)),
         ("wall_tok_s", num(m.wall_tokens_per_s())),
         ("virt_tok_s", num(m.virt_tokens_per_s())),
         ("queue_p50_ms", num(engine.recent_queue_wait_ns(50.0) as f64 / 1e6)),
@@ -567,7 +586,7 @@ pub fn serve(sess: &Session, cfg: &ServeConfig) -> Result<()> {
     let listener = TcpListener::bind(("127.0.0.1", cfg.port))?;
     println!(
         "qspec listening on 127.0.0.1:{} (replicas={}, engines={}, route={}, sched={}, \
-         slo={}, protocol v1.2)",
+         slo={}, protocol v1.3)",
         cfg.port,
         n,
         kinds.iter().map(|k| k.label()).collect::<Vec<_>>().join("+"),

@@ -1,5 +1,5 @@
 //! Engine-pool serving: replica lifecycle + frontend router
-//! (protocol v1.2).
+//! (protocol v1.3).
 //!
 //! The v1.1 server drove exactly one engine on the main thread. This
 //! module turns that single loop into a pool:
@@ -25,8 +25,12 @@
 //!   mutable table to go stale.
 //! * **Router** — [`RouterCore`] owns admission: an object-safe
 //!   [`RoutePolicy`] (`round_robin` | `least_loaded` |
-//!   `acceptance_aware`, `--route`) picks a replica among the live
-//!   (non-draining) ones, and the SLO check moved up here from the
+//!   `acceptance_aware` | `prefix_affinity`, `--route`) picks a
+//!   replica among the live (non-draining) ones — `prefix_affinity`
+//!   sends a request to the replica whose recently routed prompts
+//!   share the longest prefix with it, so repeat turns land where
+//!   their KV blocks are already cached — and the SLO check moved up
+//!   here from the
 //!   per-engine `BatchCore`: the depth signal is pool-wide (per-class
 //!   cap x live replicas, counting queued + in-channel requests), the
 //!   p99 queue-wait signal acts as per-replica backpressure (a
@@ -49,6 +53,12 @@
 //!   identity, depth, acceptance and tok/s. A single-replica pool
 //!   reproduces the v1.1 top-level numbers exactly, keeping legacy
 //!   clients byte-compatible.
+//! * **v1.3 stats additions** — every stats frame (per-replica and
+//!   pooled) now carries the prefix-cache counters:
+//!   `prefix_queries` / `prefix_hit_tokens` sum across replicas, and
+//!   the pooled `prefix_hit_rate` is recomputed from those sums
+//!   (`null` while `prefix_queries` is 0 — cache disabled or no
+//!   admissions yet — mirroring the `acceptance_rate` convention).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -233,7 +243,10 @@ pub trait RoutePolicy: Send {
     fn name(&self) -> &'static str;
 
     /// Pick one of the candidates; returns its `replica` index.
-    fn pick(&mut self, candidates: &[Candidate]) -> usize;
+    /// `prompt` is the request's raw prompt text — only
+    /// prefix-affinity routing reads it, every other policy ignores
+    /// it (ops with no prompt pass `""`).
+    fn pick(&mut self, candidates: &[Candidate], prompt: &str) -> usize;
 }
 
 /// Build the policy selected by config (`--route` on the CLI).
@@ -242,6 +255,7 @@ pub fn build_route_policy(kind: RouteKind) -> Box<dyn RoutePolicy> {
         RouteKind::RoundRobin => Box::new(RoundRobinPolicy { next: 0 }),
         RouteKind::LeastLoaded => Box::new(LeastLoadedPolicy),
         RouteKind::AcceptanceAware => Box::new(AcceptanceAwarePolicy),
+        RouteKind::PrefixAffinity => Box::new(PrefixAffinityPolicy::new()),
     }
 }
 
@@ -256,7 +270,7 @@ impl RoutePolicy for RoundRobinPolicy {
         "round_robin"
     }
 
-    fn pick(&mut self, candidates: &[Candidate]) -> usize {
+    fn pick(&mut self, candidates: &[Candidate], _prompt: &str) -> usize {
         let i = self.next % candidates.len();
         self.next = self.next.wrapping_add(1);
         candidates[i].replica
@@ -274,7 +288,7 @@ impl RoutePolicy for LeastLoadedPolicy {
         "least_loaded"
     }
 
-    fn pick(&mut self, candidates: &[Candidate]) -> usize {
+    fn pick(&mut self, candidates: &[Candidate], _prompt: &str) -> usize {
         candidates
             .iter()
             .min_by_key(|c| (c.load(), c.replica))
@@ -305,7 +319,7 @@ impl RoutePolicy for AcceptanceAwarePolicy {
         "acceptance_aware"
     }
 
-    fn pick(&mut self, candidates: &[Candidate]) -> usize {
+    fn pick(&mut self, candidates: &[Candidate], _prompt: &str) -> usize {
         let effective = |c: &Candidate| {
             let a = c.acceptance.unwrap_or(0.0).clamp(0.0, MAX_ACCEPTANCE_DEFLATION);
             c.load() as f64 * (1.0 - a)
@@ -318,6 +332,73 @@ impl RoutePolicy for AcceptanceAwarePolicy {
             }
         }
         best.replica
+    }
+}
+
+/// How many recently routed prompts the prefix-affinity policy
+/// remembers per replica. Bounded FIFO: a replica's radix cache is
+/// LRU too, so remembering more than its working set would only
+/// route to prefixes the replica has already evicted.
+const PREFIX_MEMORY: usize = 32;
+
+/// Route to the replica most likely to hold the request's prompt
+/// prefix in its radix KV cache. The router cannot see replica cache
+/// state directly (prompts are tokenized replica-side), so it keeps
+/// its own model: the last [`PREFIX_MEMORY`] prompt texts it routed
+/// to each replica. The pick maximizes the longest common byte
+/// prefix between the incoming prompt and any remembered prompt;
+/// a zero-length match (or a tie) falls back to least-loaded, then
+/// to the lower index — so a cold pool behaves exactly like
+/// `least_loaded` until sessions develop affinity. The routed prompt
+/// is then remembered for the winner, which is what pins a session's
+/// later turns (sharing its system/history prefix) to one replica.
+struct PrefixAffinityPolicy {
+    /// replica index -> recently routed prompt texts (bounded FIFO).
+    seen: HashMap<usize, Vec<String>>,
+}
+
+impl PrefixAffinityPolicy {
+    fn new() -> Self {
+        PrefixAffinityPolicy { seen: HashMap::new() }
+    }
+
+    /// Longest prefix (in bytes) the prompt shares with anything
+    /// recently routed to replica `k`.
+    fn affinity(&self, k: usize, prompt: &str) -> usize {
+        self.seen
+            .get(&k)
+            .map(|ps| ps.iter().map(|p| common_prefix_len(p, prompt)).max().unwrap_or(0))
+            .unwrap_or(0)
+    }
+}
+
+fn common_prefix_len(a: &str, b: &str) -> usize {
+    a.bytes().zip(b.bytes()).take_while(|(x, y)| x == y).count()
+}
+
+impl RoutePolicy for PrefixAffinityPolicy {
+    fn name(&self) -> &'static str {
+        "prefix_affinity"
+    }
+
+    fn pick(&mut self, candidates: &[Candidate], prompt: &str) -> usize {
+        // longest affinity wins; ties (including the no-hit case,
+        // affinity 0 everywhere) break least-loaded, then on index
+        let best = candidates
+            .iter()
+            .min_by_key(|c| {
+                (std::cmp::Reverse(self.affinity(c.replica, prompt)), c.load(), c.replica)
+            })
+            .expect("pick over empty candidates")
+            .replica;
+        if !prompt.is_empty() {
+            let ps = self.seen.entry(best).or_default();
+            ps.push(prompt.to_string());
+            if ps.len() > PREFIX_MEMORY {
+                ps.remove(0);
+            }
+        }
+        best
     }
 }
 
@@ -426,7 +507,22 @@ impl RouterCore {
     /// signal is per-replica backpressure — replicas past it are
     /// unroutable, and only when that empties the candidate set is the
     /// request shed.
+    ///
+    /// Promptless convenience wrapper over [`Self::route_for`] —
+    /// routes as if the prompt were empty, which every policy except
+    /// `prefix_affinity` treats identically.
     pub fn route(&mut self, class: u8) -> std::result::Result<usize, Overload> {
+        self.route_for(class, "")
+    }
+
+    /// Full admission path: like [`Self::route`], but the request's
+    /// prompt text rides along so prefix-affinity routing can match
+    /// it against each replica's recently routed prompts.
+    pub fn route_for(
+        &mut self,
+        class: u8,
+        prompt: &str,
+    ) -> std::result::Result<usize, Overload> {
         let live = self.candidates();
         if live.is_empty() {
             self.shed += 1;
@@ -482,7 +578,7 @@ impl RouterCore {
                 }
             }
         };
-        Ok(self.policy.pick(&eligible))
+        Ok(self.policy.pick(&eligible, prompt))
     }
 }
 
@@ -558,7 +654,7 @@ fn route_generate(
     resp: mpsc::Sender<String>,
 ) {
     loop {
-        match core.route(g.priority) {
+        match core.route_for(g.priority, &g.prompt) {
             Err(ov) => {
                 let _ = resp.send(format_overloaded(&ov));
                 return;
@@ -669,6 +765,12 @@ pub fn merge_stats(core: &RouterCore, entries: &[(usize, Json, bool)]) -> Json {
         .collect();
     let (drafted, accepted) = (sum("drafted"), sum("accepted"));
     let acceptance = if drafted > 0.0 { num(accepted / drafted) } else { Json::Null };
+    // pooled prefix hit rate from the summed counters (a mean of
+    // per-replica rates would weight an idle replica like a busy one);
+    // null until any replica ran a lookup, same convention as
+    // acceptance_rate
+    let (prefix_q, prefix_hit) = (sum("prefix_queries"), sum("prefix_hit_tokens"));
+    let prefix_rate = if prefix_q > 0.0 { num(prefix_hit / prefix_q) } else { Json::Null };
     obj(vec![
         ("engine", ident("engine")),
         ("sched", ident("sched")),
@@ -689,6 +791,9 @@ pub fn merge_stats(core: &RouterCore, entries: &[(usize, Json, bool)]) -> Json {
         ("drafted", num(drafted)),
         ("accepted", num(accepted)),
         ("acceptance_rate", acceptance),
+        ("prefix_queries", num(prefix_q)),
+        ("prefix_hit_tokens", num(prefix_hit)),
+        ("prefix_hit_rate", prefix_rate),
         ("wall_tok_s", num(sum("wall_tok_s"))),
         ("virt_tok_s", num(sum("virt_tok_s"))),
         ("queue_p50_ms", num(max("queue_p50_ms"))),
@@ -1000,6 +1105,56 @@ mod tests {
     }
 
     #[test]
+    fn prefix_affinity_pins_repeat_prefixes_and_falls_back_least_loaded() {
+        let sts = statuses(2);
+        set(&sts[0], 1, 0, 0);
+        let mut core = RouterCore::new(sts, RouteKind::PrefixAffinity, SloConfig::default());
+        // cold pool, no affinity anywhere: behaves like least_loaded
+        let sys = "SYSTEM: you are a helpful assistant.\nUSER: ";
+        let turn1 = format!("{sys}what is QSPEC?");
+        assert_eq!(core.route_for(1, &turn1).unwrap(), 1);
+        // the same session's next turn shares the system+history
+        // prefix: it sticks to replica 1 even though 1 now carries
+        // more load than 0
+        core.statuses[1].queue_depth.store(5, Ordering::Relaxed);
+        let turn2 = format!("{sys}what is QSPEC?\nASSISTANT: ...\nUSER: and HierSpec?");
+        assert_eq!(core.route_for(1, &turn2).unwrap(), 1);
+        // an unrelated prompt has no affinity: least-loaded fallback
+        assert_eq!(core.route_for(1, "zzz completely different").unwrap(), 0);
+        // the promptless wrapper routes too (and never panics)
+        assert_eq!(core.route(1).unwrap(), 0);
+    }
+
+    #[test]
+    fn prefix_affinity_prefers_the_longer_match() {
+        let sts = statuses(2);
+        let mut core = RouterCore::new(sts, RouteKind::PrefixAffinity, SloConfig::default());
+        // seed a distinct prefix on each replica, steering the second
+        // (affinity-less) prompt to replica 1 with a load nudge
+        assert_eq!(core.route_for(1, "aaaa 1").unwrap(), 0);
+        core.statuses[0].queue_depth.store(1, Ordering::Relaxed);
+        assert_eq!(core.route_for(1, "bbbb 1").unwrap(), 1);
+        core.statuses[0].queue_depth.store(0, Ordering::Relaxed);
+        // "bbbb 2" shares 5 bytes with replica 1's memory and 0 with
+        // replica 0's: the longer match wins despite the index tie
+        // break favoring 0
+        assert_eq!(core.route_for(1, "bbbb 2").unwrap(), 1);
+        assert_eq!(core.route_for(1, "aaaa 2").unwrap(), 0);
+    }
+
+    #[test]
+    fn prefix_affinity_memory_is_bounded() {
+        let sts = statuses(1);
+        let mut core = RouterCore::new(sts, RouteKind::PrefixAffinity, SloConfig::default());
+        // far more prompts than PREFIX_MEMORY; routing must stay sane
+        // (single replica: every pick is 0) and old prompts must age
+        // out of the affinity model without any panic
+        for i in 0..200 {
+            assert_eq!(core.route_for(1, &format!("prompt {i}")).unwrap(), 0);
+        }
+    }
+
+    #[test]
     fn drain_excludes_and_undrain_restores() {
         let sts = statuses(2);
         let mut core = RouterCore::new(sts, RouteKind::RoundRobin, SloConfig::default());
@@ -1122,6 +1277,7 @@ mod tests {
                 "active":1,"slots":8,"requests_done":7,"cancelled":1,
                 "shed":0,"deadline_expired":0,"tokens_out":40,
                 "drafted":10,"accepted":8,"acceptance_rate":0.8,
+                "prefix_queries":4,"prefix_hit_tokens":32,"prefix_hit_rate":8.0,
                 "wall_tok_s":100.5,"virt_tok_s":900.0,"queue_p50_ms":1.0,
                 "queue_p99_ms":2.0,"latency_p50_ms":5.0,"latency_p99_ms":9.0}"#,
         )
@@ -1131,6 +1287,7 @@ mod tests {
             "queue_depth", "active", "slots", "requests_done", "cancelled", "shed",
             "deadline_expired", "tokens_out", "wall_tok_s", "virt_tok_s", "queue_p50_ms",
             "queue_p99_ms", "latency_p50_ms", "latency_p99_ms", "oldest_queued_ms",
+            "prefix_queries", "prefix_hit_tokens", "prefix_hit_rate",
         ] {
             assert_eq!(merged.get(key), frame.get(key), "pooled {key} must pass through");
         }
@@ -1155,7 +1312,8 @@ mod tests {
                 "queue_depth_by_priority":[2,0,0,0],"active":1,"slots":8,
                 "requests_done":5,"cancelled":0,"shed":0,"deadline_expired":0,
                 "tokens_out":30,"drafted":100,"accepted":80,
-                "acceptance_rate":0.8,"wall_tok_s":10.0,"virt_tok_s":20.0,
+                "acceptance_rate":0.8,"prefix_queries":3,"prefix_hit_tokens":48,
+                "prefix_hit_rate":16.0,"wall_tok_s":10.0,"virt_tok_s":20.0,
                 "queue_p50_ms":1.0,"queue_p99_ms":4.0,"latency_p50_ms":2.0,
                 "latency_p99_ms":8.0,"oldest_queued_ms":1.5}"#,
         )
@@ -1165,7 +1323,8 @@ mod tests {
                 "queue_depth_by_priority":[0,1,0,0],"active":2,"slots":8,
                 "requests_done":3,"cancelled":1,"shed":0,"deadline_expired":1,
                 "tokens_out":10,"drafted":100,"accepted":40,
-                "acceptance_rate":0.4,"wall_tok_s":5.0,"virt_tok_s":10.0,
+                "acceptance_rate":0.4,"prefix_queries":1,"prefix_hit_tokens":0,
+                "prefix_hit_rate":0.0,"wall_tok_s":5.0,"virt_tok_s":10.0,
                 "queue_p50_ms":2.0,"queue_p99_ms":3.0,"latency_p50_ms":4.0,
                 "latency_p99_ms":6.0,"oldest_queued_ms":0.5}"#,
         )
@@ -1182,6 +1341,11 @@ mod tests {
         assert_eq!(merged.get("tokens_out").unwrap().as_i64(), Some(40));
         // pooled acceptance from the summed counters, not a mean of means
         assert_eq!(merged.get("acceptance_rate").unwrap().as_f64(), Some(0.6));
+        // same for the prefix hit rate: 48 hit tokens / 4 lookups, not
+        // a mean of the per-replica 16.0 and 0.0
+        assert_eq!(merged.get("prefix_queries").unwrap().as_i64(), Some(4));
+        assert_eq!(merged.get("prefix_hit_tokens").unwrap().as_i64(), Some(48));
+        assert_eq!(merged.get("prefix_hit_rate").unwrap().as_f64(), Some(12.0));
         assert_eq!(merged.get("wall_tok_s").unwrap().as_f64(), Some(15.0));
         // percentiles merge conservatively (max)
         assert_eq!(merged.get("queue_p99_ms").unwrap().as_f64(), Some(4.0));

@@ -304,6 +304,17 @@ fn stats_shape(engine: &mut dyn Engine) {
     } else {
         assert!(acc.as_f64().is_some(), "{name}: drafting engines report a number");
     }
+    // v1.3 prefix-cache counters follow the same raw-counters +
+    // null-until-measured convention
+    for key in ["prefix_queries", "prefix_hit_tokens"] {
+        assert!(stats.get(key).and_then(Json::as_f64).is_some(), "{name}: stats {key}");
+    }
+    let rate = stats.get("prefix_hit_rate").unwrap();
+    if engine.metrics().prefix_queries == 0 {
+        assert_eq!(rate, &Json::Null, "{name}: no lookups yet reports null");
+    } else {
+        assert!(rate.as_f64().is_some(), "{name}: measured hit rate is a number");
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -93,7 +93,7 @@ fn shadow_consistent_under_random_speculate_commit_interleavings() {
         |(bits, raw)| {
             let bits = (*bits).clamp(2, 8) as u8;
             let mut m = SlotManager::with_shadow(2, 4096, 16, bits);
-            let idx = m.admit(7, 4, 100_000, vec![]).map_err(|e| e.to_string())?;
+            let idx = m.admit(7, &[1, 2, 3, 4], 100_000, vec![]).map_err(|e| e.to_string())?;
             m.after_prefill(idx, 11, -1); // EOS -1: never matched
             let mut expected_committed = 1usize;
             let mut draws = raw.iter().copied().peekable();
@@ -152,7 +152,7 @@ fn shadow_consistent_under_random_speculate_commit_interleavings() {
 #[test]
 fn release_clears_both_tiers_and_next_request_starts_clean() {
     let mut m = SlotManager::with_shadow(1, 256, 16, 4);
-    let idx = m.admit(1, 4, 100, vec![]).unwrap();
+    let idx = m.admit(1, &[1, 2, 3, 4], 100, vec![]).unwrap();
     m.after_prefill(idx, 5, -1);
     m.shadow_speculate(idx, &[6, 7, 8]);
     m.commit(idx, &[6, 9], -1, 3);
@@ -162,14 +162,14 @@ fn release_clears_both_tiers_and_next_request_starts_clean() {
     assert_eq!(id, 1);
     assert_eq!(toks, vec![5, 6, 9]);
     // both tiers cleared: logical slot free, shadow empty
-    assert!(m.free_slots().contains(&idx));
+    assert!(m.free_slots().any(|f| f == idx));
     let v = m.shadow_view(idx).unwrap();
     assert_eq!(v.committed_len(), 0);
     assert_eq!(v.speculative_len(), 0);
     assert_eq!(m.shadow_error(idx), 0.0);
 
     // the slot is immediately reusable with a pristine shadow
-    let idx2 = m.admit(2, 4, 100, vec![]).unwrap();
+    let idx2 = m.admit(2, &[1, 2, 3, 4], 100, vec![]).unwrap();
     assert_eq!(idx2, idx);
     assert_eq!(m.shadow_view(idx2).unwrap().committed_len(), 0);
     assert!(m.shadow_view(idx2).unwrap().is_consistent());

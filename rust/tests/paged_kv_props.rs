@@ -1,0 +1,497 @@
+//! Property tests for the paged KV layer — `kvcache::block::BlockAllocator`,
+//! `kvcache::prefix::RadixPrefixCache`, and the `SlotManager` paging
+//! built on them (companion to `kv_quant_props.rs`, which covers the
+//! quantized shadow tier itself).
+//!
+//! What must hold:
+//!   1. the allocator agrees with a plain refcount model under random
+//!      alloc/retain/release/push sequences — no double-free (a freed
+//!      block never resurfaces while the model holds it live), no
+//!      refcount underflow, and the free/live accounting always sums
+//!      to capacity;
+//!   2. copy-on-write divergence preserves the shared prefix: after
+//!      two sequences fork off a common cached prompt and commit
+//!      different tails, each reads back exactly its own stream and
+//!      the attached prefix blocks still hold the original bytes;
+//!   3. `longest_match` returns exactly the longest cached prefix, at
+//!      block granularity, against a brute-force reference over every
+//!      inserted stream;
+//!   4. LRU eviction only ever reclaims blocks whose last holder is
+//!      the cache — a block still referenced by a (simulated) live
+//!      slot survives any amount of eviction pressure, bytes intact;
+//!   5. with a quantized shadow tier, shadow codes page together with
+//!      the full blocks under random admit/speculate/commit/release
+//!      interleavings: one code per token, each requantizing from the
+//!      token's full-precision proxy at its stream position;
+//!   6. end to end through `BatchCore`: a follow-up request sharing a
+//!      committed prefix is admitted with its matched blocks attached,
+//!      so prefill is priced on the uncached remainder only and the
+//!      hit shows up in the engine metrics.
+
+use std::collections::HashMap;
+
+use qspec::coordinator::BatchCore;
+use qspec::costmodel::{twins::Twin, CostModel};
+use qspec::kvcache::block::{BlockAllocator, BlockId};
+use qspec::kvcache::prefix::RadixPrefixCache;
+use qspec::kvcache::{kv_proxy, QuantizedView, SlotManager};
+use qspec::util::check::check;
+use qspec::util::prng::Pcg32;
+
+/// Fill full+tail blocks with `stream` tokens (the slot-side half of a
+/// cache insert); returns the block table. The caller owns one ref per
+/// block, standing in for a live slot's table.
+fn fill(alloc: &mut BlockAllocator, stream: &[i32]) -> Vec<BlockId> {
+    let bs = alloc.block_size();
+    let mut table = Vec::new();
+    for (j, &t) in stream.iter().enumerate() {
+        if j % bs == 0 {
+            table.push(alloc.alloc().expect("test pool sized generously"));
+        }
+        alloc.push(*table.last().unwrap(), t, None);
+    }
+    table
+}
+
+#[test]
+fn block_allocator_agrees_with_a_refcount_model() {
+    check(
+        "block-allocator-model",
+        400,
+        |r: &mut Pcg32| {
+            let ops: Vec<u32> = (0..r.range_inclusive(10, 120)).map(|_| r.next_u32()).collect();
+            ops
+        },
+        |ops| {
+            const CAP: usize = 8;
+            let mut a = BlockAllocator::new(4, CAP);
+            // the reference: live block -> refcount (absent = free)
+            let mut model: HashMap<BlockId, u32> = HashMap::new();
+            let live_pick = |model: &HashMap<BlockId, u32>, draw: u32| -> Option<BlockId> {
+                let mut live: Vec<BlockId> = model.keys().copied().collect();
+                live.sort_unstable();
+                if live.is_empty() {
+                    None
+                } else {
+                    Some(live[draw as usize % live.len()])
+                }
+            };
+            for op in ops {
+                match op % 4 {
+                    0 => {
+                        let got = a.alloc();
+                        if model.len() == CAP {
+                            if got.is_some() {
+                                return Err("alloc succeeded past capacity".into());
+                            }
+                        } else {
+                            let id = got.ok_or("alloc failed below capacity")?;
+                            if model.contains_key(&id) {
+                                return Err(format!("alloc returned live block {id}"));
+                            }
+                            if !a.is_empty(id) {
+                                return Err(format!("alloc returned dirty block {id}"));
+                            }
+                            model.insert(id, 1);
+                        }
+                    }
+                    1 => {
+                        if let Some(id) = live_pick(&model, op / 4) {
+                            a.retain(id);
+                            *model.get_mut(&id).unwrap() += 1;
+                        }
+                    }
+                    2 => {
+                        if let Some(id) = live_pick(&model, op / 4) {
+                            // the model never double-frees, so release
+                            // must never trap (no underflow)
+                            a.release(id);
+                            let rc = model.get_mut(&id).unwrap();
+                            *rc -= 1;
+                            if *rc == 0 {
+                                model.remove(&id);
+                            }
+                        }
+                    }
+                    _ => {
+                        // writes only into exclusively owned, non-full blocks
+                        if let Some(id) = live_pick(&model, op / 4) {
+                            if model[&id] == 1 && !a.is_full(id) {
+                                a.push(id, (op % 97) as i32, None);
+                            }
+                        }
+                    }
+                }
+                if a.free_count() + a.live_count() != CAP {
+                    return Err(format!(
+                        "accounting broke: {} free + {} live != {CAP}",
+                        a.free_count(),
+                        a.live_count()
+                    ));
+                }
+                if a.live_count() != model.len() {
+                    return Err(format!(
+                        "allocator holds {} live, model {}",
+                        a.live_count(),
+                        model.len()
+                    ));
+                }
+                for (&id, &rc) in &model {
+                    if a.refcount(id) != rc {
+                        return Err(format!(
+                            "block {id}: refcount {} != model {rc}",
+                            a.refcount(id)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn cow_divergence_preserves_shared_prefix_bytes() {
+    check(
+        "cow-shared-prefix",
+        300,
+        |r: &mut Pcg32| {
+            let bs = r.range_inclusive(1, 4);
+            let plen = r.range_inclusive(2, 12);
+            let tails: Vec<u32> = (0..16).map(|_| r.next_u32()).collect();
+            (bs, (plen, tails))
+        },
+        |(bs, (plen, tails))| {
+            let bs = (*bs).clamp(1, 4) as usize;
+            let plen = (*plen).clamp(2, 12) as usize;
+            let mut m = SlotManager::new(2, 512, 16);
+            m.configure_paging(bs, true);
+            let prompt: Vec<i32> = (0..plen as i32).map(|j| j % 7).collect();
+            // seed the cache: one request commits the prompt and releases
+            let i = m.admit(1, &prompt, 64, vec![]).map_err(|e| e.to_string())?;
+            m.after_prefill(i, 50, -1);
+            m.release(i).expect("seed slot releases");
+            // two sequences fork off the shared prefix...
+            let a = m.admit(2, &prompt, 64, vec![]).map_err(|e| e.to_string())?;
+            let b = m.admit(3, &prompt, 64, vec![]).map_err(|e| e.to_string())?;
+            let shared = m.slot(a).cached / bs;
+            if m.block_table(a)[..shared] != m.block_table(b)[..shared] {
+                return Err("matched prefix blocks not shared".into());
+            }
+            m.after_prefill(a, 60, -1);
+            m.after_prefill(b, 70, -1);
+            // ...and commit different tails
+            let mut expect_a = [prompt.clone(), vec![60]].concat();
+            let mut expect_b = [prompt.clone(), vec![70]].concat();
+            for (j, &t) in tails.iter().enumerate() {
+                let tok = (t % 41) as i32 + 100;
+                if j % 2 == 0 {
+                    expect_a.extend(m.commit(a, &[tok], -1, 4));
+                } else {
+                    expect_b.extend(m.commit(b, &[tok + 1], -1, 4));
+                }
+            }
+            // each table reads back exactly its own stream
+            for (idx, expect) in [(a, &expect_a), (b, &expect_b)] {
+                let got: Vec<i32> =
+                    m.block_table(idx).iter().flat_map(|&id| m.block_tokens(id)).copied().collect();
+                if &got != expect {
+                    return Err(format!("slot {idx}: paged {got:?}, committed {expect:?}"));
+                }
+            }
+            // and the blocks the fork shared still hold the prompt bytes
+            let cached: Vec<i32> = m.block_table(a)[..shared]
+                .iter()
+                .flat_map(|&id| m.block_tokens(id))
+                .copied()
+                .collect();
+            if cached != prompt[..shared * bs] {
+                return Err("divergence corrupted the shared prefix".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn longest_match_agrees_with_a_reference_model() {
+    check(
+        "radix-longest-match",
+        400,
+        |r: &mut Pcg32| {
+            let bs = r.range_inclusive(1, 3);
+            // tiny alphabet + short streams force heavy prefix overlap
+            let draws: Vec<u32> = (0..40).map(|_| r.below(1 << 16)).collect();
+            (bs, draws)
+        },
+        |(bs, draws)| {
+            let bs = (*bs).clamp(1, 3) as usize;
+            let mut alloc = BlockAllocator::new(bs, 256);
+            let mut c = RadixPrefixCache::new();
+            let mut streams: Vec<Vec<i32>> = Vec::new();
+            let mut d = draws.iter().copied();
+            for _ in 0..6 {
+                let len = (d.next().unwrap_or(3) % 8 + 1) as usize;
+                let s: Vec<i32> = (0..len).map(|_| (d.next().unwrap_or(0) % 3) as i32).collect();
+                let table = fill(&mut alloc, &s);
+                c.insert(&s, &table, &mut alloc);
+                streams.push(s);
+            }
+            for _ in 0..8 {
+                let len = (d.next().unwrap_or(3) % 9) as usize;
+                let probe: Vec<i32> =
+                    (0..len).map(|_| (d.next().unwrap_or(0) % 3) as i32).collect();
+                // reference: longest run of full blocks any inserted
+                // stream shares with the probe
+                let expected = streams
+                    .iter()
+                    .map(|s| {
+                        let mut k = 0;
+                        while (k + 1) * bs <= s.len().min(probe.len())
+                            && s[k * bs..(k + 1) * bs] == probe[k * bs..(k + 1) * bs]
+                        {
+                            k += 1;
+                        }
+                        k
+                    })
+                    .max()
+                    .unwrap_or(0);
+                let got = c.longest_match(&probe, bs);
+                if got.len() != expected {
+                    return Err(format!(
+                        "probe {probe:?}: matched {} blocks, reference {expected}",
+                        got.len()
+                    ));
+                }
+                let toks: Vec<i32> =
+                    got.iter().flat_map(|&id| alloc.tokens(id)).copied().collect();
+                if toks != probe[..expected * bs] {
+                    return Err(format!("matched blocks hold {toks:?}, probe {probe:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn eviction_never_frees_slot_referenced_blocks() {
+    check(
+        "radix-eviction-safety",
+        300,
+        |r: &mut Pcg32| {
+            let bs = r.range_inclusive(1, 3);
+            let draws: Vec<u32> = (0..32).map(|_| r.next_u32()).collect();
+            (bs, draws)
+        },
+        |(bs, draws)| {
+            let bs = (*bs).clamp(1, 3) as usize;
+            let mut alloc = BlockAllocator::new(bs, 256);
+            let mut c = RadixPrefixCache::new();
+            let mut d = draws.iter().copied();
+            // insert a handful of overlapping streams; every other one
+            // keeps its slot reference (a live sequence), the rest
+            // release theirs so the cache becomes the last holder
+            let mut held: Vec<(BlockId, Vec<i32>)> = Vec::new();
+            for k in 0..6 {
+                let len = (d.next().unwrap_or(3) % 8 + 1) as usize;
+                let s: Vec<i32> = (0..len).map(|_| (d.next().unwrap_or(0) % 3) as i32).collect();
+                let table = fill(&mut alloc, &s);
+                c.insert(&s, &table, &mut alloc);
+                for &id in &table {
+                    if k % 2 == 0 {
+                        held.push((id, alloc.tokens(id).to_vec()));
+                    } else {
+                        alloc.release(id);
+                    }
+                }
+            }
+            // drain the cache under full eviction pressure
+            let mut evictions = 0;
+            while c.evict_one(&mut alloc) {
+                evictions += 1;
+                if evictions > 256 {
+                    return Err("eviction failed to terminate".into());
+                }
+                for (id, toks) in &held {
+                    if alloc.refcount(*id) == 0 {
+                        return Err(format!("evicted slot-held block {id}"));
+                    }
+                    if alloc.tokens(*id) != toks {
+                        return Err(format!("eviction corrupted held block {id}"));
+                    }
+                }
+            }
+            // fixpoint: everything still cached is pinned by a holder
+            // (directly, or through a held descendant's matched path)
+            for (id, toks) in &held {
+                if alloc.refcount(*id) == 0 || alloc.tokens(*id) != toks {
+                    return Err(format!("held block {id} lost after drain"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn shadow_blocks_stay_consistent_under_random_interleavings() {
+    check(
+        "paged-shadow-consistency",
+        250,
+        |r: &mut Pcg32| {
+            let bits = r.range_inclusive(2, 8);
+            let ops: Vec<u32> = (0..r.range_inclusive(10, 60)).map(|_| r.next_u32()).collect();
+            (bits, ops)
+        },
+        |(bits, ops)| {
+            let bits = (*bits).clamp(2, 8) as u8;
+            let mut m = SlotManager::with_shadow(2, 512, 16, bits);
+            m.configure_paging(2, true);
+            // per-slot expected logical stream (prompt + generated)
+            let mut expect: [Option<Vec<i32>>; 2] = [None, None];
+            let mut next_id = 1u64;
+            for &op in ops {
+                let slot = (op as usize / 4) % 2;
+                match op % 4 {
+                    0 => {
+                        // admit picks the first free slot itself; track
+                        // whichever index it lands on
+                        if m.free_slots().next().is_some() {
+                            let plen = (op / 8) as usize % 8 + 1;
+                            let prompt: Vec<i32> =
+                                (0..plen as i32).map(|j| (j + (op % 5) as i32) % 9).collect();
+                            let idx = m
+                                .admit(next_id, &prompt, 6 + (op as usize / 16) % 10, vec![])
+                                .map_err(|e| e.to_string())?;
+                            next_id += 1;
+                            let first = (op / 32 % 9) as i32 + 10;
+                            m.after_prefill(idx, first, -1);
+                            let mut s = prompt;
+                            s.push(first);
+                            expect[idx] = Some(s);
+                        }
+                    }
+                    1 => {
+                        if expect[slot].is_some() && !m.slot(slot).done {
+                            let n = (op / 8) as usize % 3 + 1;
+                            let toks: Vec<i32> =
+                                (0..n).map(|j| (op / 16 % 9) as i32 + j as i32 + 20).collect();
+                            let committed = m.commit(slot, &toks, -1, 4);
+                            expect[slot].as_mut().unwrap().extend(committed);
+                        }
+                    }
+                    2 => {
+                        if expect[slot].is_some() {
+                            // draft-phase speculation touches only the
+                            // shadow view, never the paged blocks
+                            m.shadow_speculate(slot, &[3, 4]);
+                            if !m.slot(slot).done {
+                                let committed = m.commit(slot, &[5], -1, 4);
+                                expect[slot].as_mut().unwrap().extend(committed);
+                            }
+                        }
+                    }
+                    _ => {
+                        if expect[slot].is_some() {
+                            m.release(slot).expect("occupied slot releases");
+                            expect[slot] = None;
+                        }
+                    }
+                }
+                check_streams(&m, &expect, bits)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Both tiers of every live slot page the same stream: block tokens
+/// concatenate to the expected run, and each shadow code requantizes
+/// from the token's full-precision proxy at its stream position.
+fn check_streams(
+    m: &SlotManager,
+    expect: &[Option<Vec<i32>>; 2],
+    bits: u8,
+) -> Result<(), String> {
+    for (slot, want) in expect.iter().enumerate() {
+        let Some(want) = want else { continue };
+        let mut pos = 0usize;
+        for &id in m.block_table(slot) {
+            let toks = m.block_tokens(id);
+            let codes = m.block_shadow_codes(id);
+            if codes.len() != toks.len() {
+                return Err(format!("block {id}: {} codes, {} tokens", codes.len(), toks.len()));
+            }
+            for (&code, &tok) in codes.iter().zip(toks) {
+                if want.get(pos) != Some(&tok) {
+                    return Err(format!(
+                        "slot {slot} pos {pos}: paged {tok}, committed {:?}",
+                        want.get(pos)
+                    ));
+                }
+                if code != QuantizedView::quantize(bits, kv_proxy(tok, pos)) {
+                    return Err(format!("slot {slot} pos {pos}: stale shadow code"));
+                }
+                pos += 1;
+            }
+        }
+        if pos != want.len() {
+            return Err(format!("slot {slot}: paged {pos} of {} tokens", want.len()));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn follow_up_admission_prices_prefill_on_uncached_tokens_only() {
+    let mut core = BatchCore::new(
+        SlotManager::new(1, 256, 16),
+        CostModel::new(Twin::lookup("llama2-7b")),
+    );
+    core.slots.configure_paging(4, true);
+    let prompt: Vec<i32> = (1..=16).collect();
+    let mut out = Vec::new();
+
+    // cold cache: the whole prompt prefills
+    core.submit(prompt.clone(), 2);
+    let pb = core.admit_batch(&mut out).unwrap().expect("admission");
+    assert_eq!(pb.uncached, vec![16]);
+    assert_eq!(pb.uncached_tokens(), 16);
+    core.finish_prefill(&pb, &[10], &mut out);
+    let idx = pb.admitted[0].0;
+    core.commit(idx, &[11], 4, &mut out); // budget 2 -> done, slot released
+    assert_eq!(core.metrics.prefix_queries, 1);
+    assert_eq!(core.metrics.prefix_hit_tokens, 0);
+
+    // follow-up sharing the full prompt: all four kv_block-4 blocks are
+    // cached; three attach (the last prompt token always prefills), so
+    // the prefill call is priced on 4 tokens instead of 16
+    core.submit(prompt, 2);
+    let pb2 = core.admit_batch(&mut out).unwrap().expect("admission");
+    assert_eq!(pb2.uncached, vec![4], "12 of 16 prompt tokens skipped prefill");
+    assert_eq!(pb2.uncached_tokens(), 4);
+    assert_eq!(core.metrics.prefix_queries, 2);
+    assert_eq!(core.metrics.prefix_hit_tokens, 12);
+    assert_eq!(core.metrics.prefix_hit_rate_opt(), Some(6.0));
+}
+
+#[test]
+fn disabled_prefix_cache_never_skips_and_never_counts() {
+    let mut core = BatchCore::new(
+        SlotManager::new(1, 256, 16),
+        CostModel::new(Twin::lookup("llama2-7b")),
+    );
+    core.slots.configure_paging(4, false);
+    let prompt: Vec<i32> = (1..=16).collect();
+    let mut out = Vec::new();
+    for _ in 0..2 {
+        core.submit(prompt.clone(), 2);
+        let pb = core.admit_batch(&mut out).unwrap().expect("admission");
+        assert_eq!(pb.uncached, vec![16], "cache off: full prefill every time");
+        core.finish_prefill(&pb, &[10], &mut out);
+        core.commit(pb.admitted[0].0, &[11], 4, &mut out);
+    }
+    assert_eq!(core.metrics.prefix_queries, 0, "disabled cache runs no lookups");
+    assert_eq!(core.metrics.prefix_hit_rate_opt(), None);
+}

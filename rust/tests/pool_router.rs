@@ -1,13 +1,14 @@
-//! Engine-pool conformance suite (protocol v1.2): mock replica pools
+//! Engine-pool conformance suite (protocol v1.3): mock replica pools
 //! served through the real frontend — conn threads -> router thread ->
 //! replica threads — plus property tests on the routing layer.
 //!
 //! Everything here is session-free: replicas are
 //! `coordinator::mock::EchoEngine` instances living on their own
 //! threads exactly like real engine workers (built in-thread, id space
-//! partitioned, status published), so the full v1.2 surface — routed
-//! admission, owner-scoped cancel, drain/undrain, per-class shedding,
-//! pooled stats — runs in CI without artifacts.
+//! partitioned, status published), so the full v1.3 surface — routed
+//! admission (incl. prefix-affinity placement), owner-scoped cancel,
+//! drain/undrain, per-class shedding, pooled stats with the
+//! prefix-cache counters — runs in CI without artifacts.
 
 use std::net::TcpListener;
 use std::sync::{mpsc, Arc};
@@ -34,11 +35,16 @@ struct ReplicaSpec {
     batch: usize,
     delay_ms: u64,
     acceptance: Option<f64>,
+    /// KV block size for the paged cache. The default (16) equals the
+    /// mock prefill clamp, so prompts can never span a full block and
+    /// the prefix cache stays inert; the affinity scenario shrinks it
+    /// to make repeat prefixes actually hit.
+    kv_block: usize,
 }
 
 impl ReplicaSpec {
     fn new(batch: usize, delay_ms: u64) -> Self {
-        ReplicaSpec { batch, delay_ms, acceptance: None }
+        ReplicaSpec { batch, delay_ms, acceptance: None, kv_block: 16 }
     }
 }
 
@@ -49,7 +55,7 @@ struct ReplicaReport {
     cancelled: u64,
 }
 
-/// Bind an ephemeral port and stand up the full v1.2 serving stack
+/// Bind an ephemeral port and stand up the full v1.3 serving stack
 /// over mock replicas: exactly `n_conns` connections are served, then
 /// the stack winds down and each replica posts its [`ReplicaReport`].
 fn start_pool(
@@ -75,6 +81,7 @@ fn start_pool(
             if let Some(a) = spec.acceptance {
                 engine = engine.with_acceptance(a);
             }
+            engine.core_mut().slots.configure_paging(spec.kv_block, true);
             engine.core_mut().set_id_space(k as u64, n as u64);
             server::pool::replica_loop(&rx, &tok, &mut engine, &st).expect("replica loop");
             let m = engine.metrics();
@@ -299,6 +306,84 @@ fn pooled_stats_merge_per_replica_identity_and_acceptance() {
         let acc0 = reps[0].get("acceptance_rate").unwrap().as_f64().expect("drafter");
         assert!((acc0 - 0.75).abs() < 1e-9);
         assert_eq!(reps[1].get("acceptance_rate"), Some(&Json::Null), "AR echo: null");
+    });
+    client.join().unwrap();
+    finish(report_rx, joins);
+}
+
+// ---------------------------------------------------------------------------
+// prefix-affinity routing + prefix-cache stats, end to end
+// ---------------------------------------------------------------------------
+
+/// The v1.3 acceptance scenario: under `prefix_affinity`, the second
+/// turn of a session lands on the replica already holding its prefix
+/// in the paged KV cache — even when that replica is busier — while
+/// unrelated prompts fall back to least-loaded, and the pooled stats
+/// report the cache hits.
+#[test]
+fn prefix_affinity_lands_follow_up_turns_on_the_caching_replica() {
+    // kv_block 4 so the 16-token prefill clamp spans multiple blocks
+    // and a shared prefix can actually be served from cache
+    let mut spec = ReplicaSpec::new(2, 3);
+    spec.kv_block = 4;
+    let specs = [spec, spec];
+    let (addr, report_rx, joins) =
+        start_pool(&specs, RouteKind::PrefixAffinity, SloConfig::default(), 1);
+    let client = thread::spawn(move || {
+        let sys = "you are a helpful bot. "; // > 16 chars: spans the clamp
+        let mut c = Client::connect(&addr);
+        // turn 1 of the session: cold pool, affinity nowhere — the
+        // least-loaded/index fallback places it (deterministically on
+        // replica 0, but derive the owner from the id to stay robust)
+        c.send(&format!(r#"{{"prompt":"{sys}q one","max_tokens":2}}"#));
+        let t1 = c.recv();
+        let k1 = (t1.get("id").unwrap().as_i64().unwrap() % 2) as u64;
+        // a long stream sharing the prefix sticks to the same replica
+        // and keeps it busy for the rest of the scenario
+        c.send(&format!(
+            r#"{{"op":"generate","prompt":"{sys}q pin","max_tokens":400,"stream":true}}"#
+        ));
+        let pin_id = c.first_new_delta_id(&[]);
+        assert_eq!(pin_id % 2, k1 as i64, "shared prefix must follow the session");
+        // turn 2: the other replica is idle, but affinity must beat
+        // the load difference and land on the caching replica
+        c.send(&format!(r#"{{"prompt":"{sys}q two","max_tokens":2}}"#));
+        let (t2, _) = c.recv_until(|j| {
+            j.get("finish_reason").is_some() && j.get("id").unwrap().as_i64() != Some(pin_id)
+        });
+        assert_eq!(
+            t2.get("id").unwrap().as_i64().unwrap() % 2,
+            k1 as i64,
+            "second turn must land on the replica holding its prefix"
+        );
+        // an unrelated prompt has no affinity anywhere: least-loaded
+        // fallback routes it away from the busy caching replica
+        c.send(r#"{"prompt":"zzzz zzzz zzzz zzzz","max_tokens":2}"#);
+        let (t3, _) = c.recv_until(|j| {
+            j.get("finish_reason").is_some() && j.get("id").unwrap().as_i64() != Some(pin_id)
+        });
+        assert_ne!(
+            t3.get("id").unwrap().as_i64().unwrap() % 2,
+            k1 as i64,
+            "no-affinity prompt must fall back least-loaded"
+        );
+        c.send(&format!(r#"{{"op":"cancel","id":{pin_id}}}"#));
+        let (_, _) = c.recv_until(|j| j.get("cancelled").is_some());
+        // pooled v1.3 stats: 4 admissions ran a prefix lookup; the pin
+        // and turn 2 each reused 3 of their 4 blocks (12 tokens — the
+        // last prompt block always prefills to yield first-token
+        // logits), so 24 hit tokens and a 6.0 pooled hit rate
+        c.send(r#"{"op":"stats"}"#);
+        let (stats, _) = c.recv_until(|j| j.get("replicas").is_some());
+        assert_eq!(stats.get("route").unwrap().as_str(), Some("prefix_affinity"));
+        assert_eq!(stats.get("prefix_queries").unwrap().as_i64(), Some(4));
+        assert_eq!(stats.get("prefix_hit_tokens").unwrap().as_i64(), Some(24));
+        assert_eq!(stats.get("prefix_hit_rate").unwrap().as_f64(), Some(6.0));
+        // the hits all live on the session's replica
+        let reps = stats.get("replicas").unwrap().as_arr().unwrap();
+        let hits = |k: usize| reps[k].get("prefix_hit_tokens").unwrap().as_i64().unwrap();
+        assert_eq!(hits(k1 as usize), 24);
+        assert_eq!(hits(1 - k1 as usize), 0);
     });
     client.join().unwrap();
     finish(report_rx, joins);

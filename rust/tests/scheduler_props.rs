@@ -46,12 +46,14 @@ fn slot_manager_invariants_under_random_ops() {
                 match op % 3 {
                     0 => {
                         // admit if possible
-                        if !m.free_slots().is_empty() {
+                        if m.free_slots().next().is_some() {
                             let plen = 1 + (op as usize % prefill_t);
+                            let prompt: Vec<i32> =
+                                (0..plen).map(|j| (op as i32 + j as i32) % 50).collect();
                             let id = next_id;
                             next_id += 1;
                             let idx = m
-                                .admit(id, plen, 4 + op as usize % 20, vec![])
+                                .admit(id, &prompt, 4 + op as usize % 20, vec![])
                                 .map_err(|e| format!("admit: {e}"))?;
                             let t0 = 10 + (op % 40) as i32;
                             m.after_prefill(idx, t0, EOS);
@@ -63,8 +65,7 @@ fn slot_manager_invariants_under_random_ops() {
                     }
                     1 => {
                         // commit a random batch of tokens on an active slot
-                        let active = m.active_slots();
-                        if let Some(&idx) = active.first() {
+                        if let Some(idx) = m.active_slots().next() {
                             let id = m.slot(idx).req_id.unwrap();
                             let pos_before = m.slot(idx).pos;
                             let n = 1 + (op as usize % (gamma + 1));
