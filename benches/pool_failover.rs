@@ -1,0 +1,213 @@
+//! Pool-failover bench: a two-worker distributed pool (real TCP
+//! transport, protocol v1.4) loses one worker mid-burst — its engine
+//! faults and drops the router connection — with work stealing on vs
+//! off. The numbers that matter: how many requests still complete,
+//! how many turn into `replica_lost` errors, and what the survivor's
+//! tail latency looks like while it absorbs the stolen queue.
+//!
+//! Entirely session-free: workers are `EchoEngine`s behind
+//! `transport::serve_worker` on loopback sockets, so this bench runs
+//! without artifacts and doubles as the CI smoke for the v1.4
+//! failure/steal path (`QSPEC_BENCH_SMOKE=1`, wired into `ci.sh
+//! test`). With stealing every request must complete; without it the
+//! doomed worker's share is answered with structured retryable
+//! errors — the bench asserts both.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use qspec::bench::runner::{full_mode, smoke_mode};
+use qspec::bench::{write_json, Table};
+use qspec::config::{RouteKind, SloConfig};
+use qspec::coordinator::mock::{mock_tokenizer, FailureMode};
+use qspec::coordinator::EchoEngine;
+use qspec::server::transport::{self, RemoteOpts};
+use qspec::server::{self, GenerateOp, Inbound, Op, PoolLifecycle, RouterCore};
+use qspec::util::json::{arr, num, obj, s, Json};
+use qspec::util::stats::percentile_sorted;
+
+/// Grab an ephemeral loopback port for a worker to bind.
+fn free_addr() -> String {
+    let l = TcpListener::bind("127.0.0.1:0").expect("probe bind");
+    let addr = format!("127.0.0.1:{}", l.local_addr().unwrap().port());
+    drop(l);
+    addr
+}
+
+/// A worker process stand-in: `serve_worker` over an `EchoEngine` on
+/// its own (detached) thread and listener. `doomed` arms the fault
+/// that kills the router session a few scheduling cycles in.
+fn spawn_worker(addr: &str, doomed: bool) {
+    let addr = addr.to_string();
+    thread::spawn(move || {
+        let tok = mock_tokenizer();
+        let mut engine = EchoEngine::new(4, 512, 2);
+        if doomed {
+            engine = engine.with_failure(FailureMode::DropConn(3));
+        }
+        let _ = transport::serve_worker(&addr, &tok, &mut engine);
+    });
+}
+
+fn wait_listening(addr: &str) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while TcpStream::connect(addr).is_err() {
+        assert!(Instant::now() < deadline, "worker at {addr} never came up");
+        thread::sleep(Duration::from_millis(10));
+    }
+}
+
+struct RunOut {
+    completed: u64,
+    lost: u64,
+    stolen: i64,
+    restarts: i64,
+    p99_ms: f64,
+    req_per_s: f64,
+}
+
+/// One burst against a fresh two-worker pool whose first worker dies
+/// under load. Channel-level clients (no frontend conn threads): the
+/// bench measures the transport failure path, not socket accept.
+fn run_mode(steal: bool, n_req: usize) -> RunOut {
+    let w0 = free_addr();
+    let w1 = free_addr();
+    spawn_worker(&w0, true);
+    spawn_worker(&w1, false);
+    let (rtx, rrx) = mpsc::channel::<Inbound>();
+    let mut slots = Vec::new();
+    let mut statuses = Vec::new();
+    for (k, addr) in [&w0, &w1].into_iter().enumerate() {
+        wait_listening(addr);
+        let remote = transport::connect_remote(
+            k,
+            2,
+            addr,
+            rtx.clone(),
+            RemoteOpts { steal, retry_after_ms: 100 },
+        )
+        .expect("worker handshake");
+        statuses.push(remote.handle.status.clone());
+        slots.push(Some(remote.handle));
+    }
+    let mut core = RouterCore::new(statuses, RouteKind::RoundRobin, SloConfig::default());
+    thread::spawn(move || {
+        let mut slots = slots;
+        let mut life = PoolLifecycle::new();
+        let _ = server::pool::router_loop_dynamic(&rrx, &mut core, &mut slots, &mut life);
+    });
+
+    // one burst, every request in flight before the fault trips
+    let (resp_tx, resp_rx) = mpsc::channel::<String>();
+    let t0 = Instant::now();
+    for i in 0..n_req {
+        let g = GenerateOp {
+            prompt: format!("q: job {} ?\n", i % 10),
+            max_tokens: 32,
+            stream: false,
+            temperature: 0.0,
+            seed: 0,
+            stop: Vec::new(),
+            priority: 0,
+            deadline_ms: None,
+        };
+        rtx.send(Inbound::Op { conn: 1, op: Op::Generate(g), resp: resp_tx.clone() })
+            .expect("router alive");
+    }
+    drop(resp_tx);
+
+    // exactly one terminal frame per request: `done` (possibly after a
+    // steal + re-route) or a structured `replica_lost`
+    let mut lat_ns: Vec<u64> = Vec::new();
+    let mut lost = 0u64;
+    for _ in 0..n_req {
+        let line = resp_rx.recv().expect("one frame per request");
+        let j = Json::parse(&line).expect("frame");
+        match j.get("error").and_then(|e| e.get("code")).and_then(Json::as_str) {
+            Some("replica_lost") => lost += 1,
+            Some(code) => panic!("unexpected error frame: {code}"),
+            None => {
+                let ms = j.get("latency_ms").and_then(Json::as_f64).unwrap_or(0.0);
+                lat_ns.push((ms * 1e6) as u64);
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // lifecycle counters straight from the router's pooled stats
+    let (stx, srx) = mpsc::channel::<String>();
+    rtx.send(Inbound::Op { conn: 1, op: Op::Stats, resp: stx }).expect("router alive");
+    let stats = Json::parse(&srx.recv().expect("stats frame")).expect("stats json");
+    let stolen = stats.get("stolen").and_then(Json::as_i64).unwrap_or(0);
+    let restarts = stats.get("restarts").and_then(Json::as_i64).unwrap_or(0);
+    drop(rtx);
+
+    lat_ns.sort_unstable();
+    RunOut {
+        completed: lat_ns.len() as u64,
+        lost,
+        stolen,
+        restarts,
+        p99_ms: percentile_sorted(&lat_ns, 99.0) as f64 / 1e6,
+        req_per_s: n_req as f64 / wall_s.max(1e-9),
+    }
+}
+
+fn main() {
+    let n_req = if full_mode() {
+        64
+    } else if smoke_mode() {
+        8 // ci.sh test: one burst per mode, still killing a worker
+    } else {
+        24
+    };
+    println!(
+        "pool: 2 TCP workers (worker 0 faults under load), burst of {n_req} requests/mode"
+    );
+
+    let mut table = Table::new(&[
+        "mode",
+        "completed",
+        "replica_lost",
+        "stolen",
+        "restarts",
+        "p99 ms",
+        "req/s",
+    ]);
+    let mut out_rows = Vec::new();
+    for steal in [true, false] {
+        let out = run_mode(steal, n_req);
+        if steal {
+            // stealing re-admits the dead worker's un-streamed queue:
+            // nothing may be lost, and at least one transfer happened
+            assert_eq!(out.lost, 0, "stealing must complete every request");
+            assert!(out.stolen >= 1, "the doomed worker's queue must be stolen");
+        } else {
+            assert!(out.lost >= 1, "without stealing the doomed share is lost");
+        }
+        assert_eq!(out.completed + out.lost, n_req as u64);
+        let mode = if steal { "steal" } else { "no_steal" };
+        table.row(&[
+            mode.to_string(),
+            out.completed.to_string(),
+            out.lost.to_string(),
+            out.stolen.to_string(),
+            out.restarts.to_string(),
+            format!("{:.1}", out.p99_ms),
+            format!("{:.0}", out.req_per_s),
+        ]);
+        out_rows.push(obj(vec![
+            ("mode", s(mode)),
+            ("completed", num(out.completed as f64)),
+            ("replica_lost", num(out.lost as f64)),
+            ("stolen", num(out.stolen as f64)),
+            ("restarts", num(out.restarts as f64)),
+            ("p99_ms", num(out.p99_ms)),
+            ("req_per_s", num(out.req_per_s)),
+        ]));
+    }
+    table.print("Failover — one worker dies mid-burst, stealing on vs off");
+    write_json("pool_failover", &arr(out_rows)).unwrap();
+}

@@ -30,19 +30,98 @@ fi
 
 if [ "${1:-}" = "test" ]; then
     # conformance battery (every EngineKind) + pool/router protocol
-    # v1.3 scenarios + acceptance losslessness + quantized-KV shadow
+    # v1.3 scenarios + the v1.4 distributed-transport suite (TCP
+    # workers, mid-stream death, stealing, rejoin, autoscaler
+    # properties) + acceptance losslessness + quantized-KV shadow
     # and paged-KV/prefix-cache properties, with per-engine summaries
     cargo test --release \
-        --test engine_trait --test pool_router \
+        --test engine_trait --test pool_router --test transport \
         --test acceptance_props --test kv_quant_props \
         --test paged_kv_props \
         -- --nocapture
     # the pool-router bench races the route policies over mock
     # replicas; the prefix-reuse bench races the paged KV + radix
-    # cache against cold prefill: both session-free, so they smoke
-    # unconditionally
+    # cache against cold prefill; the pool-failover bench kills a TCP
+    # worker mid-burst with stealing on vs off: all session-free, so
+    # they smoke unconditionally
     QSPEC_BENCH_SMOKE=1 cargo bench --bench pool_router
     QSPEC_BENCH_SMOKE=1 cargo bench --bench prefix_reuse
+    QSPEC_BENCH_SMOKE=1 cargo bench --bench pool_failover
+
+    # --- two-process failover smoke (protocol v1.4) ----------------
+    # the real binary as a standalone worker process on loopback,
+    # SIGKILLed and respawned on the same port: the router pool must
+    # answer before the kill, count the rejoin in `restarts`, and
+    # serve again after it. bash /dev/tcp keeps this dependency-free.
+    cargo build --release --bins
+    SMOKE_PIDS=""
+    smoke_cleanup() {
+        for p in $SMOKE_PIDS; do kill -9 "$p" 2>/dev/null || true; done
+    }
+    trap smoke_cleanup EXIT
+    BIN="target/release/qspec"
+    if [ ! -x "$BIN" ]; then
+        BIN=$(find target/release -maxdepth 1 -type f -executable \
+            ! -name '*.d' 2>/dev/null | head -n 1 || true)
+    fi
+    if [ -z "$BIN" ] || [ ! -x "$BIN" ]; then
+        echo "ci.sh test: no release binary found — two-process smoke skipped"
+    else
+        WPORT=$((21000 + RANDOM % 20000))
+        FPORT=$((WPORT + 1))
+        "$BIN" serve --worker 127.0.0.1:"$WPORT" --mock --mock-delay-ms 5 \
+            >/dev/null 2>&1 &
+        W1=$!
+        SMOKE_PIDS="$SMOKE_PIDS $W1"
+        for _ in $(seq 1 100); do
+            (echo >/dev/tcp/127.0.0.1/"$WPORT") 2>/dev/null && break
+            sleep 0.1
+        done
+        "$BIN" serve --port "$FPORT" --replica-addr 127.0.0.1:"$WPORT" \
+            >/dev/null 2>&1 &
+        SMOKE_PIDS="$SMOKE_PIDS $!"
+        for _ in $(seq 1 100); do
+            (echo >/dev/tcp/127.0.0.1/"$FPORT") 2>/dev/null && break
+            sleep 0.1
+        done
+        exec 3<>/dev/tcp/127.0.0.1/"$FPORT"
+        printf '%s\n' \
+            '{"op":"generate","prompt":"q: smoke ?\n","max_tokens":4,"stream":false}' >&3
+        IFS= read -r -t 30 RESP <&3 \
+            || { echo "smoke: no response from pool" >&2; exit 1; }
+        case "$RESP" in
+            *'"done"'*) ;;
+            *) echo "smoke: bad pre-kill response: $RESP" >&2; exit 1 ;;
+        esac
+        kill -9 "$W1"
+        "$BIN" serve --worker 127.0.0.1:"$WPORT" --mock --mock-delay-ms 5 \
+            >/dev/null 2>&1 &
+        SMOKE_PIDS="$SMOKE_PIDS $!"
+        REJOINED=""
+        for _ in $(seq 1 100); do
+            printf '%s\n' '{"op":"stats"}' >&3
+            IFS= read -r -t 10 RESP <&3 || break
+            case "$RESP" in
+                *'"restarts":'[1-9]*) REJOINED=1; break ;;
+            esac
+            sleep 0.2
+        done
+        if [ -z "$REJOINED" ]; then
+            echo "smoke: respawned worker never rejoined the pool" >&2
+            exit 1
+        fi
+        printf '%s\n' \
+            '{"op":"generate","prompt":"q: back ?\n","max_tokens":4,"stream":false}' >&3
+        IFS= read -r -t 30 RESP <&3 \
+            || { echo "smoke: no response after respawn" >&2; exit 1; }
+        case "$RESP" in
+            *'"done"'*) ;;
+            *) echo "smoke: bad post-respawn response: $RESP" >&2; exit 1 ;;
+        esac
+        exec 3>&- 3<&-
+        smoke_cleanup
+        echo "ci.sh: two-process failover smoke passed"
+    fi
     if [ -f artifacts/manifest.json ]; then
         # smoke the QoS and hierspec benches (tiny grids): the hierspec
         # bench asserts draft-cost < AR baseline and acceptance < 1.0

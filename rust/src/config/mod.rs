@@ -367,6 +367,29 @@ pub struct ServeConfig {
     /// radix prefix-cache reuse of committed KV blocks
     /// (`--no-prefix-cache` disables it).
     pub prefix_cache: bool,
+    /// remote worker endpoints (`--replica-addr host:port`,
+    /// repeatable): joined to the pool after the local replicas, in
+    /// flag order. `--replicas 0` plus at least one address runs the
+    /// router with no local engine (and no artifact session).
+    pub replica_addrs: Vec<String>,
+    /// run as a single-replica worker bound to this address
+    /// (`--worker host:port`) instead of a router.
+    pub worker: Option<String>,
+    /// worker-only (`--mock`): serve the session-free mock echo
+    /// engine — no artifacts required; used by lifecycle tests/CI.
+    pub mock: bool,
+    /// worker-only (`--mock-delay-ms`): per-cycle stall of the mock
+    /// engine, to make streams observable mid-flight.
+    pub mock_delay_ms: u64,
+    /// autoscaler floor (`--min-replicas`); `None` pins the floor at
+    /// the boot pool size.
+    pub min_replicas: Option<usize>,
+    /// autoscaler ceiling and id-space capacity (`--max-replicas`);
+    /// `None` fixes the pool at its boot size (v1.3 behavior).
+    pub max_replicas: Option<usize>,
+    /// re-admit a dead replica's queued (never-streamed) generates to
+    /// live replicas (`--no-steal` downgrades them to `replica_lost`).
+    pub steal: bool,
 }
 
 impl Default for ServeConfig {
@@ -391,20 +414,53 @@ impl Default for ServeConfig {
             port: 7199,
             kv_block: crate::kvcache::DEFAULT_KV_BLOCK,
             prefix_cache: true,
+            replica_addrs: Vec::new(),
+            worker: None,
+            mock: false,
+            mock_delay_ms: 0,
+            min_replicas: None,
+            max_replicas: None,
+            steal: true,
         }
     }
 }
 
 impl ServeConfig {
-    /// The engine kind of every pool replica, in replica order:
-    /// the explicit heterogeneous list when given, otherwise
-    /// `engine` repeated `replicas` times. Always non-empty.
+    /// The engine kind of every *local* pool replica, in replica
+    /// order: the explicit heterogeneous list when given, otherwise
+    /// `engine` repeated `replicas` times. Empty only for a
+    /// remote-only router (`--replicas 0` with `--replica-addr`).
     pub fn pool_engines(&self) -> Vec<EngineKind> {
         if self.engines.is_empty() {
-            vec![self.engine.clone(); self.replicas.max(1)]
+            vec![self.engine.clone(); self.replicas]
         } else {
             self.engines.clone()
         }
+    }
+
+    /// Boot-time pool size: local replicas plus remote workers.
+    pub fn total_replicas(&self) -> usize {
+        self.replicas + self.replica_addrs.len()
+    }
+
+    /// Router slot count and id-space stride: `--max-replicas` when
+    /// set, otherwise the boot size (fixed pool, exactly the v1.3
+    /// layout). Sizing the stride by capacity is what lets the
+    /// autoscaler resize the pool without remapping request ids.
+    pub fn capacity(&self) -> usize {
+        self.max_replicas.unwrap_or_else(|| self.total_replicas())
+    }
+
+    /// Autoscaler floor: `--min-replicas` when set, otherwise the
+    /// boot size (never scale below what the operator started).
+    pub fn min_live(&self) -> usize {
+        self.min_replicas.unwrap_or_else(|| self.total_replicas())
+    }
+
+    /// The autoscaler control loop runs iff the operator opened a
+    /// scaling window with `--min-replicas` / `--max-replicas`.
+    pub fn autoscale_enabled(&self) -> bool {
+        self.min_replicas.is_some() || self.max_replicas.is_some()
     }
 
     fn validate_engine(kind: &EngineKind) -> Result<()> {
@@ -437,11 +493,51 @@ impl ServeConfig {
         if self.kv_block == 0 {
             return Err(QspecError::Config("kv_block must be >= 1".into()));
         }
-        if self.replicas == 0 || self.replicas > MAX_REPLICAS {
+        if let Some(w) = &self.worker {
+            if w.is_empty() {
+                return Err(QspecError::Config("--worker needs a bind address".into()));
+            }
+            if !self.replica_addrs.is_empty() {
+                return Err(QspecError::Config(
+                    "a worker serves one replica; --replica-addr is a router flag".into(),
+                ));
+            }
+            if self.autoscale_enabled() {
+                return Err(QspecError::Config(
+                    "--min-replicas/--max-replicas are router flags; a worker is one replica"
+                        .into(),
+                ));
+            }
+        } else if self.mock {
+            return Err(QspecError::Config(
+                "--mock serves the session-free echo engine and requires --worker".into(),
+            ));
+        }
+        let total = self.total_replicas();
+        if self.worker.is_none() && (total == 0 || total > MAX_REPLICAS) {
             return Err(QspecError::Config(format!(
-                "replicas {} outside 1..={MAX_REPLICAS}",
-                self.replicas
+                "pool size {total} outside 1..={MAX_REPLICAS} \
+                 (--replicas plus --replica-addr entries)"
             )));
+        }
+        if let Some(mx) = self.max_replicas {
+            if mx < total {
+                return Err(QspecError::Config(format!(
+                    "--max-replicas {mx} below the boot pool size {total}"
+                )));
+            }
+            if mx > MAX_REPLICAS {
+                return Err(QspecError::Config(format!(
+                    "--max-replicas {mx} outside 1..={MAX_REPLICAS}"
+                )));
+            }
+        }
+        if let Some(mn) = self.min_replicas {
+            if mn == 0 || mn > total {
+                return Err(QspecError::Config(format!(
+                    "--min-replicas {mn} outside 1..={total} (the boot pool size)"
+                )));
+            }
         }
         if !self.engines.is_empty() && self.replicas != self.engines.len() {
             // no "replicas == 1 means unset" exemption: an explicit
@@ -570,6 +666,56 @@ mod tests {
             EngineKind::HierSpec { gamma: 3, kv_bits: 1 },
         ];
         c.replicas = 2;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn distributed_pool_validation() {
+        // remote-only router: no local replicas, remote addresses only
+        let mut c = ServeConfig::default();
+        c.replicas = 0;
+        c.replica_addrs = vec!["127.0.0.1:7311".into()];
+        assert!(c.validate().is_ok());
+        assert_eq!(c.total_replicas(), 1);
+        assert!(c.pool_engines().is_empty());
+        // capacity defaults to the boot size; --max-replicas widens it
+        assert_eq!(c.capacity(), 1);
+        assert!(!c.autoscale_enabled());
+        c.max_replicas = Some(4);
+        assert!(c.validate().is_ok());
+        assert_eq!(c.capacity(), 4);
+        assert!(c.autoscale_enabled());
+        c.max_replicas = Some(0);
+        assert!(c.validate().is_err(), "ceiling below the boot size");
+        c.max_replicas = Some(MAX_REPLICAS + 1);
+        assert!(c.validate().is_err());
+        c.max_replicas = None;
+        c.min_replicas = Some(2);
+        assert!(c.validate().is_err(), "floor above the boot size");
+        c.min_replicas = Some(1);
+        assert!(c.validate().is_ok());
+        assert_eq!(c.min_live(), 1);
+        // no replicas at all
+        let mut c = ServeConfig::default();
+        c.replicas = 0;
+        assert!(c.validate().is_err());
+        // worker mode excludes the router-only flags
+        let mut c = ServeConfig::default();
+        c.worker = Some("127.0.0.1:7311".into());
+        assert!(c.validate().is_ok());
+        c.mock = true;
+        assert!(c.validate().is_ok());
+        c.replica_addrs = vec!["127.0.0.1:7312".into()];
+        assert!(c.validate().is_err(), "--replica-addr is a router flag");
+        c.replica_addrs.clear();
+        c.max_replicas = Some(4);
+        assert!(c.validate().is_err(), "scaling window is a router flag");
+        c.worker = Some(String::new());
+        c.max_replicas = None;
+        assert!(c.validate().is_err(), "empty bind address");
+        // --mock without --worker
+        let mut c = ServeConfig::default();
+        c.mock = true;
         assert!(c.validate().is_err());
     }
 

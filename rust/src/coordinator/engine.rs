@@ -98,6 +98,21 @@ pub trait Engine {
         Vec::new()
     }
 
+    /// Live-retune the engine's speculation knobs (protocol v1.4
+    /// `reconfigure` op): draft depth `gamma` and/or draft-side KV
+    /// quantization width `kv_bits`. The autoscaler drives this from
+    /// observed acceptance (QuantSpec's tuning rule: widen the shadow
+    /// tier when acceptance sags, narrow it when acceptance is high).
+    /// Engines whose knobs are baked into compiled modules keep the
+    /// default and answer with a precise `bad_request`.
+    fn reconfigure(&mut self, gamma: Option<usize>, kv_bits: Option<u8>) -> Result<()> {
+        let _ = (gamma, kv_bits);
+        Err(QspecError::Config(format!(
+            "engine \"{}\" does not support live reconfigure",
+            self.name()
+        )))
+    }
+
     /// Whether this engine can only decode greedily. Every current
     /// engine runs AOT entries that return argmax tokens and never
     /// expose logits to the host, so the default is `true`; an engine

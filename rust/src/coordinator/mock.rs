@@ -15,6 +15,13 @@
 //!   throughput (more tokens per fixed-delay cycle), which is exactly
 //!   the signal the pool's `acceptance_aware` route policy bets on.
 //!
+//! For the v1.4 lifecycle layer (transport failover, respawn,
+//! autoscaling) the mock grows two more knobs: [`FailureMode`] fault
+//! injection (panic, stall, or clean error after N working cycles, so
+//! replica-death paths are reachable without killing processes) and a
+//! settable draft depth via [`Engine::reconfigure`], making the
+//! router's live `reconfigure` op observable session-free.
+//!
 //! The protocol test suites and `benches/pool_router.rs` build mock
 //! replica pools from this engine; `tests/engine_trait.rs` runs it
 //! through the same conformance battery as the real engines.
@@ -22,15 +29,41 @@
 use std::time::Duration;
 
 use crate::costmodel::{twins::Twin, CostModel, Phase};
-use crate::error::Result;
+use crate::error::{QspecError, Result};
 use crate::kvcache::SlotManager;
 use crate::model::{Mode, Tokenizer};
 
 use super::engine::{BatchCore, Engine};
 use super::request::StepEvent;
 
-/// Draft depth of the simulated speculative mode.
-const MOCK_GAMMA: usize = 4;
+/// Default draft depth of the simulated speculative mode (retunable
+/// per engine instance through [`Engine::reconfigure`]).
+pub const MOCK_GAMMA: usize = 4;
+
+/// Injected fault for lifecycle tests and failover benches: all three
+/// modes count *working* scheduling cycles (idle waits don't step the
+/// engine), so `PanicAfterN(3)` fires on the 4th cycle that actually
+/// processes work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureMode {
+    /// `panic!` in `step()` once more than N cycles have run — models a
+    /// replica thread/process dying hard (the channel closes, a remote
+    /// worker's socket drops without a goodbye).
+    PanicAfterN(u64),
+    /// One-time `sleep(ms)` on exactly cycle N — models a wedged or
+    /// GC-pausing replica that is still alive (heartbeats keep flowing;
+    /// the router must *not* declare it dead, just see stale stats).
+    StallForMs {
+        /// the working cycle on which the stall fires
+        cycle: u64,
+        /// stall duration in milliseconds
+        ms: u64,
+    },
+    /// `step()` returns `Err` once more than N cycles have run — the
+    /// replica loop exits cleanly, which for a remote worker drops the
+    /// transport connection without killing the process.
+    DropConn(u64),
+}
 
 /// The alphabet behind [`mock_tokenizer`]: token 10 decodes to `'h'`,
 /// so echo output reads "hijk..." in every session-free test/bench.
@@ -52,6 +85,15 @@ pub struct EchoEngine {
     /// simulated draft-acceptance rate in [0, 1]; `None` = plain AR
     /// echo (never drafts, acceptance reported as null).
     acceptance: Option<f64>,
+    /// simulated draft depth; live-tunable via `reconfigure`.
+    gamma: usize,
+    /// mirrored `kv_bits` from the last `reconfigure` — the mock has no
+    /// shadow cache, so this is observability only.
+    kv_bits: Option<u8>,
+    /// injected fault, if any; counts down against `cycles`.
+    failure: Option<FailureMode>,
+    /// working scheduling cycles completed (idle waits excluded).
+    cycles: u64,
 }
 
 impl EchoEngine {
@@ -65,6 +107,10 @@ impl EchoEngine {
             ),
             step_delay: Duration::from_millis(delay_ms),
             acceptance: None,
+            gamma: MOCK_GAMMA,
+            kv_bits: None,
+            failure: None,
+            cycles: 0,
         }
     }
 
@@ -74,6 +120,28 @@ impl EchoEngine {
     pub fn with_acceptance(mut self, a: f64) -> Self {
         self.acceptance = Some(a.clamp(0.0, 1.0));
         self
+    }
+
+    /// Arm an injected fault (see [`FailureMode`]); lifecycle tests and
+    /// the failover bench kill mock replicas through this.
+    pub fn with_failure(mut self, mode: FailureMode) -> Self {
+        self.failure = Some(mode);
+        self
+    }
+
+    /// Current simulated draft depth (default [`MOCK_GAMMA`]).
+    pub fn gamma(&self) -> usize {
+        self.gamma
+    }
+
+    /// `kv_bits` from the most recent `reconfigure`, if any.
+    pub fn kv_bits(&self) -> Option<u8> {
+        self.kv_bits
+    }
+
+    /// Working scheduling cycles completed so far.
+    pub fn cycles(&self) -> u64 {
+        self.cycles
     }
 }
 
@@ -91,6 +159,21 @@ impl Engine for EchoEngine {
     }
 
     fn step(&mut self) -> Result<Vec<StepEvent>> {
+        self.cycles += 1;
+        match self.failure {
+            Some(FailureMode::PanicAfterN(n)) if self.cycles > n => {
+                panic!("injected failure: mock replica panicked after {n} cycles")
+            }
+            Some(FailureMode::StallForMs { cycle, ms }) if self.cycles == cycle => {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            Some(FailureMode::DropConn(n)) if self.cycles > n => {
+                return Err(QspecError::Scheduler(format!(
+                    "injected failure: mock replica dropped after {n} cycles"
+                )));
+            }
+            _ => {}
+        }
         if !self.step_delay.is_zero() {
             std::thread::sleep(self.step_delay);
         }
@@ -111,11 +194,12 @@ impl Engine for EchoEngine {
         }
         if let Some(sb) = self.core.step_inputs() {
             // tokens per cycle: 1 greedy + the simulated accepted drafts
+            let gamma = self.gamma;
             let accepted = self
                 .acceptance
-                .map(|a| (MOCK_GAMMA as f64 * a).round() as usize)
+                .map(|a| (gamma as f64 * a).round() as usize)
                 .unwrap_or(0)
-                .min(MOCK_GAMMA);
+                .min(gamma);
             let k = 1 + accepted;
             // the virtual clock must advance every cycle (conformance
             // battery invariant); one batched decode charge per cycle
@@ -123,13 +207,31 @@ impl Engine for EchoEngine {
             for &i in &sb.active {
                 let toks: Vec<i32> = (1..=k as i32).map(|d| sb.tok[i] + d).collect();
                 if self.acceptance.is_some() {
-                    self.core.metrics.drafted += MOCK_GAMMA as u64;
+                    self.core.metrics.drafted += gamma as u64;
                     self.core.metrics.accepted += accepted as u64;
                 }
                 self.core.commit(i, &toks, k, &mut out);
             }
         }
         Ok(out)
+    }
+
+    fn reconfigure(&mut self, gamma: Option<usize>, kv_bits: Option<u8>) -> Result<()> {
+        if let Some(g) = gamma {
+            if !(1..=8).contains(&g) {
+                return Err(QspecError::Config(format!("gamma {g} outside 1..=8")));
+            }
+            self.gamma = g;
+        }
+        if let Some(b) = kv_bits {
+            if !(2..=8).contains(&b) {
+                return Err(QspecError::Config(format!("kv_bits {b} outside 2..=8")));
+            }
+            // no shadow cache to retune in the mock; recorded so tests
+            // can observe that the op landed
+            self.kv_bits = Some(b);
+        }
+        Ok(())
     }
 }
 
@@ -166,5 +268,54 @@ mod tests {
         assert!((acc - 0.75).abs() < 1e-9, "measured acceptance {acc}");
         // fewer cycles than the AR echo for the same budget
         assert!(spec.cost().virtual_ns > 0);
+    }
+
+    #[test]
+    fn reconfigure_retunes_gamma_live() {
+        let mut e = EchoEngine::new(1, 256, 0).with_acceptance(1.0);
+        assert_eq!(e.gamma(), MOCK_GAMMA);
+        e.reconfigure(Some(2), Some(4)).unwrap();
+        assert_eq!(e.gamma(), 2);
+        assert_eq!(e.kv_bits(), Some(4));
+        e.submit(vec![1], 9);
+        e.run_to_completion().unwrap();
+        // gamma 2 at full acceptance -> 3 tokens/cycle -> 3 cycles of
+        // drafting for 9 tokens (first cycle is the prefill)
+        assert_eq!(e.metrics().drafted, 6);
+        assert_eq!(e.metrics().accepted, 6);
+        assert!(e.reconfigure(Some(0), None).is_err(), "gamma 0 rejected");
+        assert!(e.reconfigure(None, Some(16)).is_err(), "kv_bits 16 rejected");
+        assert_eq!(e.gamma(), 2, "failed reconfigure must not change state");
+    }
+
+    #[test]
+    fn drop_conn_failure_errors_after_n_cycles() {
+        let mut e = EchoEngine::new(1, 64, 0).with_failure(FailureMode::DropConn(2));
+        e.submit(vec![1], 32);
+        assert!(e.step().is_ok(), "cycle 1 works");
+        assert!(e.step().is_ok(), "cycle 2 works");
+        let err = e.step().expect_err("cycle 3 trips the injected drop");
+        assert!(err.to_string().contains("injected failure"), "got: {err}");
+        assert_eq!(e.cycles(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "injected failure")]
+    fn panic_failure_panics_after_n_cycles() {
+        let mut e = EchoEngine::new(1, 64, 0).with_failure(FailureMode::PanicAfterN(1));
+        e.submit(vec![1], 32);
+        let _ = e.step();
+        let _ = e.step();
+    }
+
+    #[test]
+    fn stall_failure_sleeps_once_then_recovers() {
+        let mut e = EchoEngine::new(1, 64, 0)
+            .with_failure(FailureMode::StallForMs { cycle: 2, ms: 30 });
+        e.submit(vec![1], 6);
+        let t0 = std::time::Instant::now();
+        let fins = e.run_to_completion().unwrap();
+        assert_eq!(fins[0].tokens, vec![10, 11, 12, 13, 14, 15], "output unchanged");
+        assert!(t0.elapsed() >= Duration::from_millis(30), "stall observed");
     }
 }

@@ -1,0 +1,456 @@
+//! Acceptance-driven pool autoscaling (protocol v1.4).
+//!
+//! A deterministic control loop over the signals the router already
+//! collects per replica — load, the p99-wait backpressure signal,
+//! measured draft acceptance, and the pool shed counter. The router
+//! ticks [`AutoscaleCore::tick`] on its idle timeout and applies the
+//! returned [`Action`]s; the core itself never touches a thread,
+//! channel, or clock, which is what makes its invariants
+//! property-testable:
+//!
+//! * **never exceeds the maximum** — occupied slots plus in-flight
+//!   spawns never pass `max_replicas`, under any signal sequence;
+//! * **scales down only when drained** — a replica is first drained
+//!   (stops admitting, finishes its queue) and only retired once its
+//!   load reaches zero, and never below `min_replicas`;
+//! * **retune stays in bounds** — per-replica `gamma` stays within
+//!   `1..=8` and `kv_bits` within `2..=8` whatever the acceptance
+//!   trajectory.
+//!
+//! The scaling policy is intentionally simple (this is a serving-
+//! systems reproduction, not a control-theory paper): scale up one
+//! vacant slot per tick while the pool sheds or every live replica is
+//! past the wait threshold; drain the highest-index replica after a
+//! sustained idle streak; retire a drained replica once empty; and
+//! retune speculation per replica from its acceptance rate — low
+//! acceptance shortens the draft window and raises draft-KV fidelity
+//! (`gamma - 1`, `kv_bits + 1`), high acceptance does the reverse,
+//! following the QuantSpec observation that the draft-side
+//! quantization knob should track observed acceptance.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::config::{EngineKind, ServeConfig};
+
+/// Bounds for the speculation-depth knob (mirrors the `reconfigure`
+/// op validation in the wire layer).
+const GAMMA_BOUNDS: (usize, usize) = (1, 8);
+/// Bounds for the draft-KV precision knob.
+const KV_BITS_BOUNDS: (u8, u8) = (2, 8);
+
+/// One capacity slot's lifecycle view, sampled by the router each
+/// tick (`samples[k].replica == k` — the vector spans every slot).
+#[derive(Clone, Debug)]
+pub struct ReplicaSample {
+    pub replica: usize,
+    /// capacity reserved, no worker (candidate for a scale-up).
+    pub vacant: bool,
+    /// worker lost; waiting on respawn or reclamation.
+    pub dead: bool,
+    pub draining: bool,
+    /// queued + active + in-channel requests.
+    pub load: usize,
+    /// max(p99 queue wait, oldest queued age) in ns.
+    pub wait_signal_ns: u64,
+    /// measured draft acceptance; `None` before the first draft.
+    pub acceptance: Option<f64>,
+}
+
+/// What the autoscaler wants done; the router applies these.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Action {
+    /// Fill vacant slot `replica` with a fresh worker.
+    ScaleUp { replica: usize },
+    /// Stop admitting to `replica`; its queue finishes undisturbed.
+    Drain { replica: usize },
+    /// Return drained/dead slot `replica` to vacancy.
+    Retire { replica: usize },
+    /// Retune `replica`'s speculation knobs via the `reconfigure` op.
+    Reconfigure { replica: usize, gamma: Option<usize>, kv_bits: Option<u8> },
+}
+
+/// Autoscaler tuning. All thresholds are in router ticks (one tick
+/// per router idle timeout, ~200 ms) so the core stays clock-free.
+#[derive(Clone, Debug)]
+pub struct AutoscaleConfig {
+    /// never drain/retire below this many live replicas.
+    pub min_replicas: usize,
+    /// never occupy more than this many slots (== pool capacity).
+    pub max_replicas: usize,
+    /// scale up when every routable replica's wait signal exceeds
+    /// this (ms) — the same backpressure signal the SLO shedder uses.
+    pub scale_up_wait_ms: f64,
+    /// consecutive all-idle ticks before draining one replica.
+    pub idle_ticks: u32,
+    /// ticks a slot may stay dead (respawn grace) before the core
+    /// reclaims it to vacancy.
+    pub dead_grace_ticks: u32,
+    /// acceptance below this triggers a conservative retune.
+    pub accept_low: f64,
+    /// acceptance above this triggers an aggressive retune.
+    pub accept_high: f64,
+    /// ticks between retunes of the same replica.
+    pub retune_cooldown_ticks: u32,
+    /// assumed starting speculation depth per replica.
+    pub gamma0: usize,
+    /// assumed starting draft-KV precision per replica.
+    pub kv_bits0: u8,
+    /// master switch for the per-replica retune loop.
+    pub retune: bool,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            min_replicas: 1,
+            max_replicas: 1,
+            scale_up_wait_ms: 50.0,
+            idle_ticks: 25,
+            dead_grace_ticks: 50,
+            accept_low: 0.3,
+            accept_high: 0.85,
+            retune_cooldown_ticks: 50,
+            gamma0: 3,
+            kv_bits0: 4,
+            retune: true,
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    /// Derive the autoscaler tuning from the serve config: the
+    /// min/max window from `--min-replicas`/`--max-replicas` and the
+    /// knob starting points from the configured engine (the retune
+    /// loop only ever acts on engines that accept `reconfigure`).
+    pub fn for_pool(cfg: &ServeConfig) -> Self {
+        let (gamma0, kv_bits0) = match &cfg.engine {
+            EngineKind::HierSpec { gamma, kv_bits } => (*gamma, *kv_bits),
+            _ => (AutoscaleConfig::default().gamma0, AutoscaleConfig::default().kv_bits0),
+        };
+        AutoscaleConfig {
+            min_replicas: cfg.min_live(),
+            max_replicas: cfg.capacity(),
+            gamma0,
+            kv_bits0,
+            ..AutoscaleConfig::default()
+        }
+    }
+}
+
+/// The deterministic autoscaler state machine. Feed it one
+/// [`ReplicaSample`] vector (plus the cumulative router shed counter)
+/// per tick; it emits the [`Action`]s that keep the pool inside
+/// `min..=max` and the speculation knobs matched to acceptance.
+pub struct AutoscaleCore {
+    cfg: AutoscaleConfig,
+    last_shed: u64,
+    first_tick: bool,
+    idle_streak: u32,
+    /// slots a ScaleUp was issued for and which are still vacant.
+    spawning: HashSet<usize>,
+    /// consecutive ticks each slot has been dead.
+    dead_ticks: HashMap<usize, u32>,
+    /// the core's model of each replica's current knobs.
+    gamma: HashMap<usize, usize>,
+    kv_bits: HashMap<usize, u8>,
+    /// tick index after which each replica may retune again.
+    retune_after: HashMap<usize, u64>,
+    ticks: u64,
+}
+
+impl AutoscaleCore {
+    pub fn new(cfg: AutoscaleConfig) -> Self {
+        AutoscaleCore {
+            cfg,
+            last_shed: 0,
+            first_tick: true,
+            idle_streak: 0,
+            spawning: HashSet::new(),
+            dead_ticks: HashMap::new(),
+            gamma: HashMap::new(),
+            kv_bits: HashMap::new(),
+            retune_after: HashMap::new(),
+            ticks: 0,
+        }
+    }
+
+    /// One control step. `shed_total` is the router's cumulative shed
+    /// counter; the core reacts to its per-tick delta.
+    pub fn tick(&mut self, samples: &[ReplicaSample], shed_total: u64) -> Vec<Action> {
+        self.ticks += 1;
+        let mut actions = Vec::new();
+        // sheds that happened before the autoscaler existed are not
+        // pressure; start the delta from the first observation
+        let shed_delta = if self.first_tick {
+            self.first_tick = false;
+            0
+        } else {
+            shed_total.saturating_sub(self.last_shed)
+        };
+        self.last_shed = shed_total;
+
+        // a slot the router filled is no longer spawning; its knobs
+        // start from the configured defaults again
+        self.spawning.retain(|k| samples.get(*k).is_some_and(|s| s.vacant));
+
+        let occupied: Vec<&ReplicaSample> =
+            samples.iter().filter(|s| !s.vacant && !s.dead).collect();
+        let routable: Vec<&ReplicaSample> =
+            occupied.iter().filter(|s| !s.draining).copied().collect();
+
+        // --- dead-slot reclamation (respawn grace first) -----------
+        for s in samples {
+            if s.dead && !s.vacant {
+                let t = self.dead_ticks.entry(s.replica).or_insert(0);
+                *t += 1;
+                if *t >= self.cfg.dead_grace_ticks {
+                    self.dead_ticks.remove(&s.replica);
+                    self.forget(s.replica);
+                    actions.push(Action::Retire { replica: s.replica });
+                }
+            } else {
+                self.dead_ticks.remove(&s.replica);
+            }
+        }
+
+        // --- scale up under pressure -------------------------------
+        let wait_pressure = !routable.is_empty()
+            && routable
+                .iter()
+                .all(|s| s.wait_signal_ns as f64 / 1e6 > self.cfg.scale_up_wait_ms);
+        let planned = occupied.len() + self.spawning.len();
+        if (shed_delta > 0 || wait_pressure) && planned < self.cfg.max_replicas {
+            if let Some(k) = samples
+                .iter()
+                .find(|s| s.vacant && !self.spawning.contains(&s.replica))
+                .map(|s| s.replica)
+            {
+                self.spawning.insert(k);
+                actions.push(Action::ScaleUp { replica: k });
+            }
+        }
+
+        // --- scale down when idle ----------------------------------
+        let idle = shed_delta == 0 && occupied.iter().all(|s| s.load == 0);
+        self.idle_streak = if idle { self.idle_streak + 1 } else { 0 };
+        // finish any in-progress drain first: retire one drained,
+        // empty replica per tick (never dipping below the minimum)
+        if let Some(k) = occupied
+            .iter()
+            .find(|s| s.draining && s.load == 0 && occupied.len() > self.cfg.min_replicas)
+            .map(|s| s.replica)
+        {
+            self.forget(k);
+            actions.push(Action::Retire { replica: k });
+        } else if self.idle_streak >= self.cfg.idle_ticks
+            && routable.len() == occupied.len()
+            && occupied.len() > self.cfg.min_replicas
+        {
+            // a sustained idle pool gives one replica back: drain the
+            // highest index (boot replicas live at the low indices)
+            if let Some(k) = routable.iter().map(|s| s.replica).max() {
+                self.idle_streak = 0;
+                actions.push(Action::Drain { replica: k });
+            }
+        }
+
+        // --- acceptance-driven retune ------------------------------
+        if self.cfg.retune {
+            for s in &routable {
+                let Some(a) = s.acceptance else { continue };
+                if *self.retune_after.get(&s.replica).unwrap_or(&0) > self.ticks {
+                    continue;
+                }
+                let g = *self.gamma.get(&s.replica).unwrap_or(&self.cfg.gamma0);
+                let b = *self.kv_bits.get(&s.replica).unwrap_or(&self.cfg.kv_bits0);
+                // low acceptance: drafts are being thrown away — draft
+                // less, at higher fidelity. high acceptance: the draft
+                // path is trustworthy — speculate deeper, spend fewer
+                // bits on it.
+                let (ng, nb) = if a < self.cfg.accept_low {
+                    let ng = g.saturating_sub(1).max(GAMMA_BOUNDS.0);
+                    (ng, b.saturating_add(1).min(KV_BITS_BOUNDS.1))
+                } else if a > self.cfg.accept_high {
+                    ((g + 1).min(GAMMA_BOUNDS.1), b.saturating_sub(1).max(KV_BITS_BOUNDS.0))
+                } else {
+                    continue;
+                };
+                let gamma = (ng != g).then_some(ng);
+                let kv_bits = (nb != b).then_some(nb);
+                if gamma.is_none() && kv_bits.is_none() {
+                    continue;
+                }
+                self.gamma.insert(s.replica, ng);
+                self.kv_bits.insert(s.replica, nb);
+                self.retune_after
+                    .insert(s.replica, self.ticks + self.cfg.retune_cooldown_ticks as u64);
+                actions.push(Action::Reconfigure { replica: s.replica, gamma, kv_bits });
+            }
+        }
+        actions
+    }
+
+    /// Drop per-replica model state when a slot leaves the pool (its
+    /// replacement starts from the configured defaults).
+    fn forget(&mut self, k: usize) {
+        self.gamma.remove(&k);
+        self.kv_bits.remove(&k);
+        self.retune_after.remove(&k);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(replica: usize) -> ReplicaSample {
+        ReplicaSample {
+            replica,
+            vacant: false,
+            dead: false,
+            draining: false,
+            load: 0,
+            wait_signal_ns: 0,
+            acceptance: None,
+        }
+    }
+
+    fn cfg(min: usize, max: usize) -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_replicas: min,
+            max_replicas: max,
+            idle_ticks: 2,
+            dead_grace_ticks: 3,
+            retune_cooldown_ticks: 2,
+            ..AutoscaleConfig::default()
+        }
+    }
+
+    #[test]
+    fn sheds_trigger_one_scale_up_into_a_vacant_slot() {
+        let mut core = AutoscaleCore::new(cfg(1, 3));
+        let mut samples = vec![sample(0), sample(1), sample(2)];
+        samples[1].vacant = true;
+        samples[2].vacant = true;
+        // tick 1 observes the baseline; no pre-existing shed pressure
+        assert_eq!(core.tick(&samples, 5), vec![]);
+        // a new shed arrives: fill exactly one vacant slot
+        let acts = core.tick(&samples, 6);
+        assert_eq!(acts, vec![Action::ScaleUp { replica: 1 }]);
+        // still shedding, one spawn in flight: the next vacant slot
+        let acts = core.tick(&samples, 7);
+        assert_eq!(acts, vec![Action::ScaleUp { replica: 2 }]);
+        // all capacity planned: never exceed max even while shedding
+        assert_eq!(core.tick(&samples, 99), vec![]);
+    }
+
+    #[test]
+    fn wait_pressure_scales_up_without_sheds() {
+        let mut core = AutoscaleCore::new(cfg(1, 2));
+        let mut samples = vec![sample(0), sample(1)];
+        samples[1].vacant = true;
+        samples[0].wait_signal_ns = 200_000_000; // 200 ms > 50 ms threshold
+        samples[0].load = 4;
+        let acts = core.tick(&samples, 0);
+        assert_eq!(acts, vec![Action::ScaleUp { replica: 1 }]);
+        // the spawn is in flight: no duplicate while the slot stays vacant
+        assert_eq!(core.tick(&samples, 0), vec![]);
+    }
+
+    #[test]
+    fn idle_pool_drains_then_retires_only_when_empty() {
+        let mut core = AutoscaleCore::new(cfg(1, 2));
+        let mut samples = vec![sample(0), sample(1)];
+        // busy: no scale-down
+        samples[1].load = 2;
+        for _ in 0..5 {
+            assert_eq!(core.tick(&samples, 0), vec![]);
+        }
+        // idle for idle_ticks: drain the highest index
+        samples[1].load = 0;
+        assert_eq!(core.tick(&samples, 0), vec![]);
+        assert_eq!(core.tick(&samples, 0), vec![Action::Drain { replica: 1 }]);
+        // draining but still loaded: not retired yet
+        samples[1].draining = true;
+        samples[1].load = 3;
+        assert_eq!(core.tick(&samples, 0), vec![]);
+        // drained empty: retired
+        samples[1].load = 0;
+        assert_eq!(core.tick(&samples, 0), vec![Action::Retire { replica: 1 }]);
+    }
+
+    #[test]
+    fn never_drains_below_min_replicas() {
+        let mut core = AutoscaleCore::new(cfg(2, 3));
+        let samples = vec![sample(0), sample(1)];
+        for _ in 0..20 {
+            assert_eq!(core.tick(&samples, 0), vec![], "idle at min must hold steady");
+        }
+    }
+
+    #[test]
+    fn dead_slot_reclaimed_after_grace() {
+        let mut core = AutoscaleCore::new(cfg(1, 2));
+        let mut samples = vec![sample(0), sample(1)];
+        samples[1].dead = true;
+        // grace period: leave the slot for the respawn supervisor
+        assert_eq!(core.tick(&samples, 0), vec![]);
+        assert_eq!(core.tick(&samples, 0), vec![]);
+        assert_eq!(core.tick(&samples, 0), vec![Action::Retire { replica: 1 }]);
+        // a recovered slot resets the grace counter
+        samples[1].dead = false;
+        core.tick(&samples, 0);
+        samples[1].dead = true;
+        assert_eq!(core.tick(&samples, 0), vec![]);
+    }
+
+    #[test]
+    fn retune_follows_acceptance_and_respects_cooldown() {
+        let mut core = AutoscaleCore::new(cfg(1, 1));
+        let mut samples = vec![sample(0)];
+        samples[0].acceptance = Some(0.1);
+        // gamma0=3, kv_bits0=4 -> low acceptance: gamma 2, kv_bits 5
+        let acts = core.tick(&samples, 0);
+        assert_eq!(
+            acts,
+            vec![Action::Reconfigure { replica: 0, gamma: Some(2), kv_bits: Some(5) }]
+        );
+        // cooldown holds even under continued low acceptance
+        assert_eq!(core.tick(&samples, 0), vec![]);
+        let acts = core.tick(&samples, 0);
+        assert_eq!(
+            acts,
+            vec![Action::Reconfigure { replica: 0, gamma: Some(1), kv_bits: Some(6) }]
+        );
+        // mid-band acceptance never retunes
+        samples[0].acceptance = Some(0.5);
+        for _ in 0..10 {
+            assert_eq!(core.tick(&samples, 0), vec![]);
+        }
+    }
+
+    #[test]
+    fn retune_saturates_at_the_knob_bounds() {
+        let mut core = AutoscaleCore::new(cfg(1, 1));
+        let mut samples = vec![sample(0)];
+        samples[0].acceptance = Some(0.99);
+        let mut gammas = Vec::new();
+        let mut bits = Vec::new();
+        for _ in 0..100 {
+            for a in core.tick(&samples, 0) {
+                if let Action::Reconfigure { gamma, kv_bits, .. } = a {
+                    gammas.extend(gamma);
+                    bits.extend(kv_bits);
+                }
+            }
+        }
+        assert!(gammas.iter().all(|g| (1..=8).contains(g)), "{gammas:?}");
+        assert!(bits.iter().all(|b| (2..=8).contains(b)), "{bits:?}");
+        assert_eq!(gammas.last(), Some(&8), "gamma climbs to its ceiling and stops");
+        assert_eq!(bits.last(), Some(&2), "kv_bits falls to its floor and stops");
+        // at the bounds: no further (empty) reconfigure actions
+        for _ in 0..10 {
+            assert_eq!(core.tick(&samples, 0), vec![]);
+        }
+    }
+}

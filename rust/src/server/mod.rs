@@ -1,4 +1,4 @@
-//! TCP line-protocol serving frontend (protocol v1.3).
+//! TCP line-protocol serving frontend (protocol v1.4).
 //!
 //! Since v1.2 the server is an **engine pool**: `--replicas N` (or a
 //! repeated `--engine` for a heterogeneous pool) spawns one engine
@@ -6,6 +6,15 @@
 //!
 //!   client --tcp--> conn thread --mpsc--> router --mpsc--> replica k
 //!          <--tcp-- writer thread <------ frames (deltas/results)
+//!
+//! Since v1.4 the pool can also span **processes and hosts**: `qspec
+//! serve --worker addr` exposes one engine replica as a standalone TCP
+//! worker, and `--replica-addr host:port` (repeatable, mixable with
+//! local `--engine` replicas) attaches it to a router's pool behind the
+//! same [`ReplicaHandle`] boundary (see [`transport`]). A lifecycle
+//! layer rides on the transport: heartbeat failure detection, work
+//! stealing off dead replicas, respawn with exponential backoff, and
+//! an acceptance-driven autoscaler ([`autoscale`]).
 //!
 //! PJRT handles are not Send, so each replica's session/engine live on
 //! its worker thread (replica 0 reuses the caller's session on the
@@ -26,20 +35,22 @@
 //! the owning replica. A single-replica pool behaves byte-for-byte
 //! like the v1.1 server on the v1/v1.1 surface.
 //!
-//! # Protocol v1.3 — one JSON object per line, both directions
+//! # Protocol v1.4 — one JSON object per line, both directions
 //!
-//! Five ops, selected by the `"op"` field (absent = `generate`, the
+//! Six ops, selected by the `"op"` field (absent = `generate`, the
 //! legacy bare-prompt form):
 //!
 //! ```text
-//! generate: {"op":"generate","prompt":"q: g xy ?\n","max_tokens":64,
-//!            "stream":true,"stop":["\n"],"temperature":0,"seed":1,
-//!            "priority":2,"deadline_ms":1500}
-//!   legacy: {"prompt":"q: g xy ?\n","max_tokens":64}
-//! cancel  : {"op":"cancel","id":3}
-//! stats   : {"op":"stats"}
-//! drain   : {"op":"drain","replica":1}      (v1.2)
-//! undrain : {"op":"undrain","replica":1}    (v1.2)
+//! generate   : {"op":"generate","prompt":"q: g xy ?\n","max_tokens":64,
+//!               "stream":true,"stop":["\n"],"temperature":0,"seed":1,
+//!               "priority":2,"deadline_ms":1500}
+//!   legacy   : {"prompt":"q: g xy ?\n","max_tokens":64}
+//! cancel     : {"op":"cancel","id":3}
+//! stats      : {"op":"stats"}
+//! drain      : {"op":"drain","replica":1}                      (v1.2)
+//! undrain    : {"op":"undrain","replica":1}                    (v1.2)
+//! reconfigure: {"op":"reconfigure","replica":1,"gamma":2,
+//!               "kv_bits":4}                                   (v1.4)
 //! ```
 //!
 //! Generate fields: `prompt` (required string); `max_tokens` (integer,
@@ -139,6 +150,49 @@
 //! pooled rate is recomputed from the summed counters. v1.3 also adds
 //! the `prefix_affinity` route policy; no ops or request fields
 //! changed, so v1.2 clients parse v1.3 frames unmodified.
+//!
+//! # v1.4 — distributed pools, lifecycle, autoscaling
+//!
+//! v1.4 adds one op, one error code and a handful of additive `stats`
+//! fields; an in-process-only pool is wire-compatible with v1.3
+//! clients (every v1.3 frame keeps its exact shape — the new stats
+//! counters ride along like the v1.3 prefix fields did).
+//!
+//! *`reconfigure` op* — `{"op":"reconfigure","replica":k,"gamma":G,
+//! "kv_bits":B}` (at least one of `gamma`/`kv_bits`; `gamma` in
+//! `1..=8`, `kv_bits` in `2..=8`) live-retunes replica `k`'s
+//! speculation knobs through [`Engine::reconfigure`]. Ack:
+//! `{"replica":k,"reconfigured":true,"gamma":G,"kv_bits":B}` (only the
+//! fields that were sent). Engines with compiled-in knobs answer
+//! `bad_request`; a dead/vacant replica answers `not_found`. Like the
+//! drain ops this is an operator surface, loopback-trusted.
+//!
+//! *`replica_lost` error* — when a replica dies (worker process
+//! killed, transport heartbeat timeout) with requests on board, each
+//! request that already **streamed output** answers a terminal
+//! `{"id":N,"error":{"code":"replica_lost","message":...,
+//! "retry_after_ms":M}}` frame: the stream cannot be resumed (the dead
+//! engine held its KV state), so the client is told to retry, with the
+//! same backoff hint shape as `overloaded`. Requests that had not yet
+//! streamed anything are **stolen**: silently re-admitted to the
+//! router (fresh id, fresh queue position) and served by a surviving
+//! replica — the client just sees a normal (slower) response. Stealing
+//! is safe precisely because generation is deterministic given the
+//! request and nothing reached the client yet; `--no-steal` turns it
+//! off, downgrading those requests to `replica_lost` too.
+//!
+//! *`stats` additions* — the pooled frame gains lifecycle counters:
+//! `restarts` (replicas that died and rejoined — respawned local
+//! workers or reconnected remote ones), `stolen` (requests re-admitted
+//! off dead replicas), `lost_streams` (streams answered
+//! `replica_lost`), `scale_ups`/`scale_downs` (autoscaler resizes).
+//! Remote replicas appear in `replicas: [...]` tagged with the
+//! worker's engine identity; vacant autoscaler slots are omitted.
+//!
+//! The router<->worker wire runs the same one-JSON-object-per-line
+//! framing with a tag envelope so one socket multiplexes every
+//! client connection; see [`transport`] for that format, the
+//! heartbeat/steal lifecycle, and the reconnect backoff.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -153,13 +207,16 @@ use crate::model::Tokenizer;
 use crate::runtime::Session;
 use crate::util::json::{num, obj, s, Json};
 
+pub mod autoscale;
 pub mod pool;
+pub mod transport;
 
+pub use autoscale::{Action, AutoscaleConfig, AutoscaleCore, ReplicaSample};
 pub use pool::{
-    Candidate, ReplicaHandle, ReplicaStatus, RoutePolicy, RouterCore,
+    Candidate, PoolLifecycle, ReplicaHandle, ReplicaStatus, RoutePolicy, RouterCore,
 };
 
-/// A parsed protocol-v1.2 operation.
+/// A parsed protocol operation (v1.2 surface + the v1.4 `reconfigure`).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Op {
     Generate(GenerateOp),
@@ -170,6 +227,9 @@ pub enum Op {
     Drain { replica: usize },
     /// v1.2 admin: re-admit a drained replica.
     Undrain { replica: usize },
+    /// v1.4 admin: live-retune a replica's speculation knobs (draft
+    /// depth and/or draft-side KV quantization width).
+    Reconfigure { replica: usize, gamma: Option<usize>, kv_bits: Option<u8> },
 }
 
 /// The `generate` op: prompt + wire-level sampling params + QoS.
@@ -198,6 +258,16 @@ pub enum Inbound {
     Op { conn: u64, op: Op, resp: mpsc::Sender<String> },
     /// The client hung up: cancel everything it still has in flight.
     Disconnect { conn: u64 },
+    /// v1.4 lifecycle (router-bound only): a replica's transport or
+    /// thread died. Carries how many of its outstanding requests were
+    /// stolen back into the router vs lost mid-stream, so the pooled
+    /// counters stay exact. A bare engine loop ignores it.
+    ReplicaDown { replica: usize, reason: String, stolen: u64, lost: u64 },
+    /// v1.4 lifecycle (router-bound only): a replica (re)joined the
+    /// pool. `handle` is `Some` for a freshly spawned local replica
+    /// (the old channel died with the thread); `None` for a remote
+    /// replica whose proxy reconnected behind its existing handle.
+    ReplicaUp { replica: usize, handle: Option<ReplicaHandle> },
 }
 
 fn json_type(j: &Json) -> &'static str {
@@ -355,10 +425,89 @@ pub fn parse_op(
                 "op \"{op_name}\" requires an integer \"replica\""
             ))),
         },
+        "reconfigure" => {
+            let replica = opt_uint(&j, "replica")?.ok_or_else(|| {
+                QspecError::Config(
+                    "op \"reconfigure\" requires an integer \"replica\"".into(),
+                )
+            })? as usize;
+            let gamma = match opt_uint(&j, "gamma")? {
+                Some(g) if (1..=8).contains(&g) => Some(g as usize),
+                Some(g) => {
+                    return Err(QspecError::Config(format!(
+                        "field \"gamma\": {g} outside 1..=8"
+                    )))
+                }
+                None => None,
+            };
+            let kv_bits = match opt_uint(&j, "kv_bits")? {
+                Some(b) if (2..=8).contains(&b) => Some(b as u8),
+                Some(b) => {
+                    return Err(QspecError::Config(format!(
+                        "field \"kv_bits\": {b} outside 2..=8"
+                    )))
+                }
+                None => None,
+            };
+            if gamma.is_none() && kv_bits.is_none() {
+                return Err(QspecError::Config(
+                    "op \"reconfigure\" requires \"gamma\" and/or \"kv_bits\"".into(),
+                ));
+            }
+            Ok(Op::Reconfigure { replica, gamma, kv_bits })
+        }
         other => Err(QspecError::Config(format!(
-            "unknown op \"{other}\" (expected generate|cancel|stats|drain|undrain)"
+            "unknown op \"{other}\" \
+             (expected generate|cancel|stats|drain|undrain|reconfigure)"
         ))),
     }
+}
+
+/// Re-serialize a parsed [`Op`] to its canonical wire form — the
+/// transport layer forwards router-parsed ops to remote workers as
+/// protocol lines, so `parse_op(format_op(op)) == op` must hold for
+/// every op (pinned by tests).
+pub fn format_op(op: &Op) -> String {
+    let j = match op {
+        Op::Generate(g) => {
+            let mut fields = vec![
+                ("op", s("generate")),
+                ("prompt", s(&g.prompt)),
+                ("max_tokens", num(g.max_tokens as f64)),
+                ("stream", Json::Bool(g.stream)),
+                ("temperature", num(g.temperature as f64)),
+                ("seed", num(g.seed as f64)),
+                ("priority", num(g.priority as f64)),
+            ];
+            if !g.stop.is_empty() {
+                fields.push(("stop", Json::Arr(g.stop.iter().map(|t| s(t)).collect())));
+            }
+            if let Some(d) = g.deadline_ms {
+                fields.push(("deadline_ms", num(d as f64)));
+            }
+            obj(fields)
+        }
+        Op::Cancel { id } => obj(vec![("op", s("cancel")), ("id", num(*id as f64))]),
+        Op::Stats => obj(vec![("op", s("stats"))]),
+        Op::Drain { replica } => {
+            obj(vec![("op", s("drain")), ("replica", num(*replica as f64))])
+        }
+        Op::Undrain { replica } => {
+            obj(vec![("op", s("undrain")), ("replica", num(*replica as f64))])
+        }
+        Op::Reconfigure { replica, gamma, kv_bits } => {
+            let mut fields =
+                vec![("op", s("reconfigure")), ("replica", num(*replica as f64))];
+            if let Some(g) = gamma {
+                fields.push(("gamma", num(*g as f64)));
+            }
+            if let Some(b) = kv_bits {
+                fields.push(("kv_bits", num(*b as f64)));
+            }
+            obj(fields)
+        }
+    };
+    j.to_string()
 }
 
 /// Format the non-streaming result line.
@@ -410,6 +559,47 @@ pub fn format_drain(replica: usize, draining: bool) -> String {
         ("draining", Json::Bool(draining)),
     ])
     .to_string()
+}
+
+/// Ack line for a v1.4 `reconfigure` op: echoes the replica and the
+/// knobs that were applied.
+pub fn format_reconfigured(
+    replica: usize,
+    gamma: Option<usize>,
+    kv_bits: Option<u8>,
+) -> String {
+    let mut fields = vec![
+        ("replica", num(replica as f64)),
+        ("reconfigured", Json::Bool(true)),
+    ];
+    if let Some(g) = gamma {
+        fields.push(("gamma", num(g as f64)));
+    }
+    if let Some(b) = kv_bits {
+        fields.push(("kv_bits", num(b as f64)));
+    }
+    obj(fields).to_string()
+}
+
+/// Terminal `replica_lost` error line (v1.4): the replica serving this
+/// request died and the partial stream cannot be resumed; the client
+/// should retry after the hinted backoff. `id` is present when the
+/// stream had already been assigned one (deltas flowed).
+pub fn format_replica_lost(id: Option<u64>, replica: usize, retry_after_ms: u64) -> String {
+    let err = obj(vec![
+        ("code", s("replica_lost")),
+        (
+            "message",
+            s(&format!("replica {replica} died with this request on board; retry")),
+        ),
+        ("retry_after_ms", num(retry_after_ms as f64)),
+    ]);
+    let mut fields = Vec::new();
+    if let Some(id) = id {
+        fields.push(("id", num(id as f64)));
+    }
+    fields.push(("error", err));
+    obj(fields).to_string()
 }
 
 /// Structured error line for protocol violations.
@@ -552,71 +742,164 @@ pub fn conn_thread(
 
 /// Run the server until the process is killed. Replica 0 runs on this
 /// thread over the caller's session (PJRT handles are not Send);
-/// replicas 1.. each open their own session on a worker thread; the
-/// router thread owns admission and the conn threads feed it.
+/// local replicas 1.. each open their own session on a worker thread;
+/// remote replicas (`--replica-addr`) are reached through a
+/// [`transport`] proxy behind the same [`ReplicaHandle`]; the router
+/// thread owns admission, lifecycle and autoscaling, and the conn
+/// threads feed it.
 pub fn serve(sess: &Session, cfg: &ServeConfig) -> Result<()> {
-    cfg.validate()?;
-    let tok = Tokenizer::load(&sess.store.tokenizer_path())?;
-    let kinds = cfg.pool_engines();
-    let n = kinds.len();
+    serve_pool(Some(sess), cfg)
+}
 
-    // replica 0: built here so the single-replica server keeps its
-    // zero-extra-session footprint. Engine-level shedding is disabled
-    // pool-wide — admission SLO enforcement lives in the router.
-    let mut cfg0 = cfg.clone();
-    cfg0.engine = kinds[0].clone();
-    cfg0.slo = SloConfig::default();
-    let mut engine = build_engine(sess, &cfg0)?;
-    engine.core_mut().set_id_space(0, n as u64);
-    let default_max_tokens = cfg.max_tokens_default;
-    // every replica shares --size, so the KV depth (and with it the
-    // max_tokens clamp) is pool-uniform
-    let max_tokens_cap = engine.max_seq();
-    let status0 = Arc::new(ReplicaStatus::new());
-    let (tx0, rx0) = mpsc::channel::<Inbound>();
-    let mut replicas = vec![ReplicaHandle {
-        tx: tx0,
-        status: status0.clone(),
-        label: kinds[0].label().to_string(),
-    }];
-    for (k, kind) in kinds.iter().enumerate().skip(1) {
-        replicas.push(pool::spawn_replica(k, n, cfg, kind.clone())?);
+/// Run a router over remote workers only (`--replica-addr` without any
+/// local `--engine`): no session or artifacts are opened — every
+/// engine lives in a worker process, and this process is pure
+/// routing + lifecycle.
+pub fn serve_remote(cfg: &ServeConfig) -> Result<()> {
+    serve_pool(None, cfg)
+}
+
+fn serve_pool(sess: Option<&Session>, cfg: &ServeConfig) -> Result<()> {
+    cfg.validate()?;
+    let kinds = cfg.pool_engines();
+    let n_local = kinds.len();
+    let total = n_local + cfg.replica_addrs.len();
+    // the id stride is the pool *capacity*, not the boot size: the
+    // autoscaler can then fill vacant slots without disturbing the
+    // `id % capacity` owner arithmetic. Default (no --max-replicas)
+    // keeps capacity == boot size, i.e. the exact v1.3 id layout.
+    let capacity = cfg.capacity();
+
+    let (rtx, rrx) = mpsc::channel::<Inbound>();
+    let mut slots: Vec<Option<ReplicaHandle>> = Vec::new();
+    // replica 0: built inline when local engines are in play, so the
+    // single-replica server keeps its zero-extra-session footprint.
+    // Engine-level shedding is disabled pool-wide — admission SLO
+    // enforcement lives in the router.
+    let mut local0 = None;
+    let mut max_tokens_cap = 0usize;
+    if n_local > 0 {
+        let sess = sess.ok_or_else(|| {
+            QspecError::Config("local replicas require an artifact session".into())
+        })?;
+        let tok = Tokenizer::load(&sess.store.tokenizer_path())?;
+        let mut cfg0 = cfg.clone();
+        cfg0.engine = kinds[0].clone();
+        cfg0.slo = SloConfig::default();
+        let mut engine = build_engine(sess, &cfg0)?;
+        engine.core_mut().set_id_space(0, capacity as u64);
+        // every local replica shares --size, so the KV depth (and with
+        // it the max_tokens clamp) is pool-uniform
+        max_tokens_cap = engine.max_seq();
+        let status0 = Arc::new(ReplicaStatus::new());
+        let (tx0, rx0) = mpsc::channel::<Inbound>();
+        slots.push(Some(ReplicaHandle {
+            tx: tx0,
+            status: status0.clone(),
+            label: kinds[0].label().to_string(),
+        }));
+        for (k, kind) in kinds.iter().enumerate().skip(1) {
+            slots.push(Some(pool::spawn_replica(k, capacity, cfg, kind.clone())?));
+        }
+        local0 = Some((tok, engine, rx0, status0));
     }
+    for (i, addr) in cfg.replica_addrs.iter().enumerate() {
+        let remote = transport::connect_remote(
+            n_local + i,
+            capacity,
+            addr,
+            rtx.clone(),
+            transport::RemoteOpts {
+                steal: cfg.steal,
+                retry_after_ms: cfg.slo.retry_after_ms,
+            },
+        )?;
+        // a remote worker's clamp rides its own engine's max_seq; the
+        // router clamps to the tightest cap in the pool
+        max_tokens_cap = if max_tokens_cap == 0 {
+            remote.max_seq
+        } else {
+            max_tokens_cap.min(remote.max_seq)
+        };
+        slots.push(Some(remote.handle));
+    }
+    for _ in total..capacity {
+        slots.push(None); // vacant autoscaler headroom
+    }
+    let default_max_tokens = cfg.max_tokens_default;
 
     let listener = TcpListener::bind(("127.0.0.1", cfg.port))?;
     println!(
-        "qspec listening on 127.0.0.1:{} (replicas={}, engines={}, route={}, sched={}, \
-         slo={}, protocol v1.3)",
+        "qspec listening on 127.0.0.1:{} (replicas={}{}, engines={}, route={}, sched={}, \
+         slo={}, protocol v1.4)",
         cfg.port,
-        n,
-        kinds.iter().map(|k| k.label()).collect::<Vec<_>>().join("+"),
+        total,
+        if capacity > total { format!("/{capacity}") } else { String::new() },
+        slots
+            .iter()
+            .flatten()
+            .map(|h| h.label.as_str())
+            .collect::<Vec<_>>()
+            .join("+"),
         cfg.route.label(),
         cfg.sched.label(),
         if cfg.slo.enabled() { "on" } else { "off" },
     );
 
-    // router thread: conn threads -> router -> replicas
-    let statuses: Vec<Arc<ReplicaStatus>> = replicas.iter().map(|r| r.status.clone()).collect();
+    // router: conn threads -> router -> replicas (local channel or
+    // transport proxy)
+    let statuses: Vec<Arc<ReplicaStatus>> = slots
+        .iter()
+        .map(|sl| {
+            sl.as_ref().map(|h| h.status.clone()).unwrap_or_else(|| {
+                Arc::new(ReplicaStatus::new())
+            })
+        })
+        .collect();
     let mut core = RouterCore::new(statuses, cfg.route, cfg.slo.clone());
-    let (rtx, rrx) = mpsc::channel::<Inbound>();
-    std::thread::spawn(move || {
-        let _ = pool::router_loop(&rrx, &mut core, &replicas);
-    });
+    for k in total..capacity {
+        core.set_vacant(k, true);
+    }
+    let mut life = PoolLifecycle::new();
+    if n_local > 0 {
+        // respawner for dead local replica threads and for autoscaler
+        // scale-ups: every spawned replica opens its own session, so
+        // the closure may run from any supervisor thread
+        let cfg2 = cfg.clone();
+        let kinds2 = kinds.clone();
+        life.spawner = Some(Arc::new(move |k: usize| {
+            let kind = kinds2.get(k).cloned().unwrap_or_else(|| cfg2.engine.clone());
+            pool::spawn_replica(k, capacity, &cfg2, kind)
+        }));
+    }
+    if cfg.autoscale_enabled() {
+        life.autoscale = Some(AutoscaleCore::new(AutoscaleConfig::for_pool(cfg)));
+    }
 
+    let ltx = rtx.clone();
     std::thread::spawn(move || {
         let mut next_conn = 0u64;
         for stream in listener.incoming().flatten() {
             // conn ids start at 1; 0 is the router's own (stats fan-out)
             next_conn += 1;
             let conn = next_conn;
-            let rtx = rtx.clone();
+            let ltx = ltx.clone();
             std::thread::spawn(move || {
-                conn_thread(stream, conn, rtx, default_max_tokens, max_tokens_cap)
+                conn_thread(stream, conn, ltx, default_max_tokens, max_tokens_cap)
             });
         }
     });
 
-    pool::replica_loop(&rx0, &tok, engine.as_mut(), &status0)
+    match local0 {
+        Some((tok, mut engine, rx0, status0)) => {
+            std::thread::spawn(move || {
+                let _ = pool::router_loop_dynamic(&rrx, &mut core, &mut slots, &mut life);
+            });
+            pool::replica_loop(&rx0, &tok, engine.as_mut(), &status0)
+        }
+        // remote-only: this thread *is* the router
+        None => pool::router_loop_dynamic(&rrx, &mut core, &mut slots, &mut life),
+    }
 }
 
 /// Engine-generic serving loop over a single engine — the standalone
@@ -792,6 +1075,98 @@ mod tests {
             let e = parse_op(line, 64, 512).unwrap_err().to_string();
             assert!(e.contains("\"replica\""), "{e}");
         }
+    }
+
+    #[test]
+    fn reconfigure_op_parses_and_validates() {
+        assert_eq!(
+            parse_op(r#"{"op":"reconfigure","replica":1,"gamma":2,"kv_bits":4}"#, 64, 512)
+                .unwrap(),
+            Op::Reconfigure { replica: 1, gamma: Some(2), kv_bits: Some(4) }
+        );
+        assert_eq!(
+            parse_op(r#"{"op":"reconfigure","replica":0,"gamma":8}"#, 64, 512).unwrap(),
+            Op::Reconfigure { replica: 0, gamma: Some(8), kv_bits: None }
+        );
+        let e = parse_op(r#"{"op":"reconfigure","replica":0}"#, 64, 512)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("\"gamma\"") && e.contains("\"kv_bits\""), "{e}");
+        let e = parse_op(r#"{"op":"reconfigure","gamma":2}"#, 64, 512)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("\"replica\""), "{e}");
+        let e = parse_op(r#"{"op":"reconfigure","replica":0,"gamma":9}"#, 64, 512)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("\"gamma\"") && e.contains("outside"), "{e}");
+        let e = parse_op(r#"{"op":"reconfigure","replica":0,"kv_bits":1}"#, 64, 512)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("\"kv_bits\"") && e.contains("outside"), "{e}");
+    }
+
+    #[test]
+    fn format_op_roundtrips_through_parse_op() {
+        let ops = vec![
+            Op::Generate(GenerateOp {
+                prompt: "q: g xy ?\n".into(),
+                max_tokens: 48,
+                stream: true,
+                temperature: 0.5,
+                seed: 7,
+                stop: vec!["\n".into(), "a: ".into()],
+                priority: 3,
+                deadline_ms: Some(1500),
+            }),
+            Op::Generate(GenerateOp {
+                prompt: "hi".into(),
+                max_tokens: 8,
+                stream: false,
+                temperature: 0.0,
+                seed: 0,
+                stop: Vec::new(),
+                priority: DEFAULT_PRIORITY,
+                deadline_ms: None,
+            }),
+            Op::Cancel { id: 9 },
+            Op::Stats,
+            Op::Drain { replica: 1 },
+            Op::Undrain { replica: 0 },
+            Op::Reconfigure { replica: 2, gamma: Some(4), kv_bits: Some(3) },
+            Op::Reconfigure { replica: 0, gamma: None, kv_bits: Some(8) },
+        ];
+        for op in ops {
+            let line = format_op(&op);
+            let back = parse_op(&line, 64, 512).unwrap();
+            assert_eq!(back, op, "roundtrip of {line}");
+        }
+    }
+
+    #[test]
+    fn reconfigured_ack_is_structured() {
+        let j = Json::parse(&format_reconfigured(1, Some(2), None)).unwrap();
+        assert_eq!(j.get("replica").unwrap().as_i64(), Some(1));
+        assert_eq!(j.get("reconfigured"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("gamma").unwrap().as_i64(), Some(2));
+        assert!(j.get("kv_bits").is_none(), "unsent knob omitted from the ack");
+    }
+
+    #[test]
+    fn replica_lost_frame_carries_retry_hint() {
+        let j = Json::parse(&format_replica_lost(Some(11), 2, 500)).unwrap();
+        assert_eq!(j.get("id").unwrap().as_i64(), Some(11));
+        let err = j.get("error").unwrap();
+        assert_eq!(err.get("code").unwrap().as_str(), Some("replica_lost"));
+        assert_eq!(err.get("retry_after_ms").unwrap().as_i64(), Some(500));
+        assert!(err.get("message").unwrap().as_str().unwrap().contains("replica 2"));
+        // a request that never streamed has no client-visible id
+        let j = Json::parse(&format_replica_lost(None, 0, 250)).unwrap();
+        assert!(j.get("id").is_none());
+        assert_eq!(
+            j.get("error").unwrap().get("code").unwrap().as_str(),
+            Some("replica_lost")
+        );
     }
 
     #[test]

@@ -59,8 +59,27 @@
 //!   the pooled `prefix_hit_rate` is recomputed from those sums
 //!   (`null` while `prefix_queries` is 0 — cache disabled or no
 //!   admissions yet — mirroring the `acceptance_rate` convention).
+//! * **v1.4 lifecycle** — the pool is sized by *capacity*, not boot
+//!   count: [`RouterCore`] holds one slot per potential replica (the
+//!   `--max-replicas` ceiling), the id stride is the capacity, and
+//!   slots beyond the boot size are *vacant* (never routed, absent
+//!   from stats) until the autoscaler fills them — so resizing never
+//!   disturbs the `id % capacity` owner arithmetic. Without
+//!   `--max-replicas` the capacity is the boot size and the layout is
+//!   exactly v1.3. [`router_loop_dynamic`] adds the lifecycle
+//!   dispatch: `ReplicaDown`/`ReplicaUp` messages (from [`transport`]
+//!   proxies and respawn supervisors), respawn-with-backoff for dead
+//!   local replicas through a [`PoolLifecycle`] spawner, the
+//!   [`AutoscaleCore`] tick, and the v1.4 `reconfigure` op. A replica
+//!   handle is now also how a *remote* worker is reached (the
+//!   transport proxy thread owns the socket and presents the same
+//!   `mpsc` face), so every path below is transport-agnostic. The
+//!   static [`router_loop`] wrapper keeps the v1.3 call shape for
+//!   fixed in-process pools.
+//!
+//! [`transport`]: super::transport
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
@@ -72,9 +91,11 @@ use crate::model::Tokenizer;
 use crate::runtime::{ArtifactStore, Session};
 use crate::util::json::{num, obj, s, Json};
 
+use super::autoscale::{Action, AutoscaleCore, ReplicaSample};
 use super::{
     format_cancelled, format_delta, format_drain, format_error, format_overloaded,
-    format_response, format_stats, format_stream_done, GenerateOp, Inbound, Op,
+    format_reconfigured, format_response, format_stats, format_stream_done, GenerateOp,
+    Inbound, Op,
 };
 use crate::coordinator::request::NUM_PRIORITY_CLASSES;
 use crate::coordinator::{GenerationRequest, SamplingParams};
@@ -121,6 +142,17 @@ impl ReplicaStatus {
             .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |p| p.checked_sub(1));
     }
 
+    /// Zero the load signals. Called when a replica dies (its queued
+    /// and in-channel work is gone with it, so a stale `pending` count
+    /// must not keep weighing on the routing view — satellite of the
+    /// v1.4 lifecycle work) and when a vacant slot is reclaimed.
+    fn zero_load(&self) {
+        self.queue_depth.store(0, Ordering::Relaxed);
+        self.active.store(0, Ordering::Relaxed);
+        self.pending.store(0, Ordering::Relaxed);
+        self.wait_signal_ns.store(0, Ordering::Relaxed);
+    }
+
     /// Point-in-time routing view of this replica.
     pub fn snapshot(&self, replica: usize) -> Candidate {
         let drafted = self.drafted.load(Ordering::Relaxed);
@@ -143,7 +175,13 @@ impl ReplicaStatus {
 /// The frontend's handle on one replica worker: the channel into its
 /// loop plus the shared status block. Frames flow back to clients
 /// directly (each op carries its connection's frame sender), so the
-/// router is never on the streaming path.
+/// router is never on the streaming path. Since v1.4 the worker
+/// behind the channel may also be a [`transport`] proxy thread
+/// forwarding to a remote process — the router cannot tell and does
+/// not need to.
+///
+/// [`transport`]: super::transport
+#[derive(Clone)]
 pub struct ReplicaHandle {
     pub tx: mpsc::Sender<Inbound>,
     pub status: Arc<ReplicaStatus>,
@@ -414,6 +452,11 @@ pub struct RouterCore {
     statuses: Vec<Arc<ReplicaStatus>>,
     draining: Vec<bool>,
     dead: Vec<bool>,
+    /// capacity slots not currently backed by a worker: never routed,
+    /// never polled for stats, waiting for the autoscaler to fill
+    /// them. Distinct from `dead` (a worker existed and was lost) so
+    /// lifecycle counters and respawn policy can tell them apart.
+    vacant: Vec<bool>,
     policy: Box<dyn RoutePolicy>,
     slo: SloConfig,
     /// last successful stats snapshot per replica: a replica that
@@ -425,6 +468,19 @@ pub struct RouterCore {
     /// admissions shed at the router (pool SLO or no live replica);
     /// merged into the pooled `stats.shed`.
     pub shed: u64,
+    /// dead replicas replaced by a fresh worker (local respawn or
+    /// remote reconnect); merged into the pooled `stats.restarts`.
+    pub restarts: u64,
+    /// queued (not yet streamed) generates re-admitted from a dead
+    /// replica to the live pool; pooled `stats.stolen`.
+    pub stolen: u64,
+    /// in-flight streams cut by a replica death (client got a
+    /// `replica_lost` frame); pooled `stats.lost_streams`.
+    pub lost_streams: u64,
+    /// vacant slots filled by the autoscaler; pooled `stats.scale_ups`.
+    pub scale_ups: u64,
+    /// drained replicas retired to vacancy; pooled `stats.scale_downs`.
+    pub scale_downs: u64,
 }
 
 impl RouterCore {
@@ -435,10 +491,16 @@ impl RouterCore {
             statuses,
             draining: vec![false; n],
             dead: vec![false; n],
+            vacant: vec![false; n],
             policy: build_route_policy(route),
             slo,
             stats_cache: vec![None; n],
             shed: 0,
+            restarts: 0,
+            stolen: 0,
+            lost_streams: 0,
+            scale_ups: 0,
+            scale_downs: 0,
         }
     }
 
@@ -456,7 +518,9 @@ impl RouterCore {
 
     /// The owning replica of a request id — exact by construction:
     /// replica `k` only ever assigns ids congruent to `k` mod the pool
-    /// size (see `BatchCore::set_id_space`).
+    /// *capacity* (see `BatchCore::set_id_space`). Sizing the stride by
+    /// capacity rather than the live count is what lets the v1.4
+    /// autoscaler add and retire replicas without ever remapping ids.
     pub fn owner_of(&self, id: u64) -> usize {
         (id % self.statuses.len() as u64) as usize
     }
@@ -479,10 +543,15 @@ impl RouterCore {
     }
 
     /// A replica whose channel closed (worker died) is never routed to
-    /// again.
+    /// again (until [`Self::revive`]). Its load signals — including the
+    /// router-owned `pending` count for requests still in the channel
+    /// gap — are zeroed: that work died with the worker, and a stale
+    /// nonzero `pending` would otherwise skew pool-depth SLO math
+    /// forever.
     pub fn mark_dead(&mut self, k: usize) {
         if let Some(d) = self.dead.get_mut(k) {
             *d = true;
+            self.statuses[k].zero_load();
         }
     }
 
@@ -490,12 +559,82 @@ impl RouterCore {
         self.dead.get(k).copied().unwrap_or(false)
     }
 
+    /// A replacement worker took over slot `k`: clear the dead flag so
+    /// the slot is routable again.
+    pub fn revive(&mut self, k: usize) {
+        if let Some(d) = self.dead.get_mut(k) {
+            *d = false;
+        }
+    }
+
+    /// Mark/unmark slot `k` as vacant (capacity reserved, no worker).
+    pub fn set_vacant(&mut self, k: usize, vacant: bool) {
+        if let Some(v) = self.vacant.get_mut(k) {
+            *v = vacant;
+        }
+    }
+
+    pub fn is_vacant(&self, k: usize) -> bool {
+        self.vacant.get(k).copied().unwrap_or(false)
+    }
+
+    /// Adopt a replacement worker's status block for slot `k` (a
+    /// respawned local worker publishes into a fresh `ReplicaStatus`;
+    /// the router must read the new one).
+    pub fn attach_status(&mut self, k: usize, status: Arc<ReplicaStatus>) {
+        if let Some(slot) = self.statuses.get_mut(k) {
+            *slot = status;
+        }
+    }
+
+    /// Per-slot lifecycle view for the autoscaler: every capacity slot
+    /// (index == `replica`), with its flags and load signals.
+    pub fn lifecycle_samples(&self) -> Vec<ReplicaSample> {
+        self.statuses
+            .iter()
+            .enumerate()
+            .map(|(k, st)| {
+                let c = st.snapshot(k);
+                ReplicaSample {
+                    replica: k,
+                    vacant: self.vacant[k],
+                    dead: self.dead[k],
+                    draining: self.draining[k],
+                    load: c.load(),
+                    wait_signal_ns: c.wait_signal_ns,
+                    acceptance: c.acceptance,
+                }
+            })
+            .collect()
+    }
+
+    /// Retire slot `k` back to vacancy if it holds no work: permitted
+    /// for a dead slot, or a draining slot whose load reached zero.
+    /// Returns whether the retirement happened (the caller then drops
+    /// the handle).
+    pub fn retire(&mut self, k: usize) -> bool {
+        if k >= self.statuses.len() || self.vacant[k] {
+            return false;
+        }
+        let drained = self.draining[k] && self.statuses[k].snapshot(k).load() == 0;
+        if !(self.dead[k] || drained) {
+            return false;
+        }
+        self.dead[k] = false;
+        self.draining[k] = false;
+        self.vacant[k] = true;
+        self.stats_cache[k] = None;
+        self.statuses[k].zero_load();
+        self.scale_downs += 1;
+        true
+    }
+
     /// Snapshots of the routable (live, non-draining) replicas.
     pub fn candidates(&self) -> Vec<Candidate> {
         self.statuses
             .iter()
             .enumerate()
-            .filter(|(k, _)| !self.draining[*k] && !self.dead[*k])
+            .filter(|(k, _)| !self.draining[*k] && !self.dead[*k] && !self.vacant[*k])
             .map(|(k, st)| st.snapshot(k))
             .collect()
     }
@@ -582,65 +721,347 @@ impl RouterCore {
     }
 }
 
-/// The router thread: take parsed ops from the connection threads,
-/// place generates on replicas, forward cancels to the owner, answer
-/// drain/undrain/stats itself, broadcast disconnects. Returns when
-/// every inbound sender is gone (tests drive it this way; under
-/// `serve` the listener keeps the channel open forever).
+/// How a dead local replica gets a replacement worker: the closure
+/// builds a fresh [`ReplicaHandle`] for slot `k` (opening its own
+/// session — it runs on a supervisor thread, never on the router).
+pub type Spawner = Arc<dyn Fn(usize) -> Result<ReplicaHandle> + Send + Sync>;
+
+/// First respawn delay; doubles per failed attempt.
+const RESPAWN_BACKOFF_BASE: Duration = Duration::from_millis(250);
+/// Respawn delay ceiling.
+const RESPAWN_BACKOFF_CAP: Duration = Duration::from_secs(8);
+/// Attempts before a respawn supervisor gives up on a slot.
+const RESPAWN_MAX_ATTEMPTS: u32 = 6;
+
+/// Lifecycle companion to [`router_loop_dynamic`]: the optional
+/// autoscaler, the optional local-respawn spawner, and the private
+/// channel respawn supervisors answer on (kept separate from the main
+/// inbound channel so tests can still terminate the router by
+/// dropping their senders).
+pub struct PoolLifecycle {
+    /// autoscaler control loop, ticked by the router; `None` keeps the
+    /// pool fixed-size (v1.3 behavior).
+    pub autoscale: Option<AutoscaleCore>,
+    /// how to rebuild a dead local replica; `None` disables respawn
+    /// (and autoscaler scale-ups) — e.g. a remote-only router with no
+    /// local artifacts.
+    pub spawner: Option<Spawner>,
+    /// router wakeup period: lifecycle drain + autoscale cadence.
+    pub tick: Duration,
+    life_tx: mpsc::Sender<Inbound>,
+    life_rx: mpsc::Receiver<Inbound>,
+    /// slots with a respawn/scale-up supervisor already in flight.
+    respawning: HashSet<usize>,
+}
+
+impl Default for PoolLifecycle {
+    fn default() -> Self {
+        let (life_tx, life_rx) = mpsc::channel();
+        PoolLifecycle {
+            autoscale: None,
+            spawner: None,
+            tick: Duration::from_millis(200),
+            life_tx,
+            life_rx,
+            respawning: HashSet::new(),
+        }
+    }
+}
+
+impl PoolLifecycle {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a supervisor thread that (re)builds slot `k` with
+    /// exponential backoff and reports the outcome as a lifecycle
+    /// message. No-op if there is no spawner or a supervisor for `k`
+    /// is already running.
+    fn maybe_respawn(&mut self, k: usize) {
+        let Some(spawner) = self.spawner.clone() else { return };
+        if !self.respawning.insert(k) {
+            return;
+        }
+        let tx = self.life_tx.clone();
+        let spawned = std::thread::Builder::new()
+            .name(format!("qspec-respawn-{k}"))
+            .spawn(move || {
+                let mut backoff = RESPAWN_BACKOFF_BASE;
+                for attempt in 1..=RESPAWN_MAX_ATTEMPTS {
+                    std::thread::sleep(backoff);
+                    match spawner(k) {
+                        Ok(handle) => {
+                            let _ = tx
+                                .send(Inbound::ReplicaUp { replica: k, handle: Some(handle) });
+                            return;
+                        }
+                        Err(e) => {
+                            log::warn!("respawn of replica {k}: attempt {attempt} failed: {e}");
+                            backoff = (backoff * 2).min(RESPAWN_BACKOFF_CAP);
+                        }
+                    }
+                }
+                // terminal: report so the router clears the in-flight
+                // flag (the slot stays dead until retired/rescaled)
+                let _ = tx.send(Inbound::ReplicaDown {
+                    replica: k,
+                    reason: format!("respawn gave up after {RESPAWN_MAX_ATTEMPTS} attempts"),
+                    stolen: 0,
+                    lost: 0,
+                });
+            })
+            .is_ok();
+        if !spawned {
+            self.respawning.remove(&k);
+        }
+    }
+}
+
+/// The fixed-pool router thread (v1.3 call shape, kept for in-process
+/// pools and the property/bench harnesses): every slot is occupied and
+/// stays occupied, no respawn, no autoscaler. Delegates to
+/// [`router_loop_dynamic`] over cloned handles.
 pub fn router_loop(
     rx: &mpsc::Receiver<Inbound>,
     core: &mut RouterCore,
     replicas: &[ReplicaHandle],
 ) -> Result<()> {
-    for msg in rx.iter() {
-        match msg {
-            Inbound::Op { conn, op: Op::Generate(g), resp } => {
-                route_generate(core, replicas, conn, g, resp);
+    let mut slots: Vec<Option<ReplicaHandle>> = replicas.iter().cloned().map(Some).collect();
+    let mut life = PoolLifecycle::default();
+    router_loop_dynamic(rx, core, &mut slots, &mut life)
+}
+
+/// The router thread: take parsed ops from the connection threads,
+/// place generates on replicas, forward cancels (and v1.4
+/// reconfigures) to the owner, answer drain/undrain/stats itself,
+/// broadcast disconnects to live replicas, and run the v1.4 lifecycle
+/// — replica death/replacement bookkeeping, respawn supervision, and
+/// the autoscaler tick. Returns when every inbound sender is gone
+/// (tests drive it this way; under `serve` the listener keeps the
+/// channel open forever).
+pub fn router_loop_dynamic(
+    rx: &mpsc::Receiver<Inbound>,
+    core: &mut RouterCore,
+    slots: &mut Vec<Option<ReplicaHandle>>,
+    life: &mut PoolLifecycle,
+) -> Result<()> {
+    assert_eq!(slots.len(), core.len(), "slot table must span the pool capacity");
+    let mut last_tick = Instant::now();
+    loop {
+        match rx.recv_timeout(life.tick) {
+            Ok(msg) => {
+                dispatch(msg, core, slots, life);
+                while let Ok(msg) = rx.try_recv() {
+                    dispatch(msg, core, slots, life);
+                }
             }
-            Inbound::Op { conn, op: Op::Cancel { id }, resp } => {
-                // ownership is arithmetic (id % pool), so the cancel
-                // always lands on the replica that assigned the id;
-                // that replica still enforces conn scoping
-                let k = core.owner_of(id);
-                let forwarded = !core.is_dead(k)
-                    && replicas[k]
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
+        }
+        // supervisor outcomes ride a private channel: drain it here so
+        // a respawned worker rejoins even under zero client traffic
+        while let Ok(msg) = life.life_rx.try_recv() {
+            dispatch(msg, core, slots, life);
+        }
+        if last_tick.elapsed() >= life.tick {
+            last_tick = Instant::now();
+            autoscale_tick(core, slots, life);
+        }
+    }
+}
+
+/// Route one inbound message against the slot table.
+fn dispatch(
+    msg: Inbound,
+    core: &mut RouterCore,
+    slots: &mut [Option<ReplicaHandle>],
+    life: &mut PoolLifecycle,
+) {
+    match msg {
+        Inbound::Op { conn, op: Op::Generate(g), resp } => {
+            route_generate(core, slots, life, conn, g, resp);
+        }
+        Inbound::Op { conn, op: Op::Cancel { id }, resp } => {
+            // ownership is arithmetic (id % capacity), so the cancel
+            // always lands on the replica that assigned the id; that
+            // replica still enforces conn scoping
+            let k = core.owner_of(id);
+            let mut forwarded = false;
+            if !core.is_dead(k) && !core.is_vacant(k) {
+                if let Some(r) = &slots[k] {
+                    forwarded = r
                         .tx
                         .send(Inbound::Op { conn, op: Op::Cancel { id }, resp: resp.clone() })
                         .is_ok();
-                if !forwarded {
-                    let _ = resp.send(format_error(
-                        "not_found",
-                        &format!("no in-flight request with id {id}"),
-                    ));
+                    if !forwarded {
+                        note_dead(core, slots, life, k, "channel closed on cancel");
+                    }
                 }
             }
-            Inbound::Op { op: Op::Stats, resp, .. } => {
-                let _ = resp.send(pool_stats(core, replicas).to_string());
+            if !forwarded {
+                let _ = resp.send(format_error(
+                    "not_found",
+                    &format!("no in-flight request with id {id}"),
+                ));
             }
-            Inbound::Op { op: Op::Drain { replica }, resp, .. } => {
-                let line = match core.set_draining(replica, true) {
-                    Ok(()) => format_drain(replica, true),
-                    Err(e) => format_error("bad_request", &e.to_string()),
-                };
-                let _ = resp.send(line);
+        }
+        Inbound::Op { conn, op: Op::Reconfigure { replica, gamma, kv_bits }, resp } => {
+            let mut forwarded = false;
+            if replica < core.len() && !core.is_dead(replica) && !core.is_vacant(replica) {
+                if let Some(r) = &slots[replica] {
+                    let msg = Inbound::Op {
+                        conn,
+                        op: Op::Reconfigure { replica, gamma, kv_bits },
+                        resp: resp.clone(),
+                    };
+                    forwarded = r.tx.send(msg).is_ok();
+                    if !forwarded {
+                        note_dead(core, slots, life, replica, "channel closed on reconfigure");
+                    }
+                }
             }
-            Inbound::Op { op: Op::Undrain { replica }, resp, .. } => {
-                let line = match core.set_draining(replica, false) {
-                    Ok(()) => format_drain(replica, false),
-                    Err(e) => format_error("bad_request", &e.to_string()),
-                };
-                let _ = resp.send(line);
+            if !forwarded {
+                let _ = resp.send(format_error(
+                    "not_found",
+                    &format!("no live replica {replica} to reconfigure"),
+                ));
             }
-            Inbound::Disconnect { conn } => {
-                // each replica cancels whatever this connection still
-                // has in flight on it
-                for r in replicas {
+        }
+        Inbound::Op { op: Op::Stats, resp, .. } => {
+            let _ = resp.send(pool_stats(core, slots).to_string());
+        }
+        Inbound::Op { op: Op::Drain { replica }, resp, .. } => {
+            let line = match core.set_draining(replica, true) {
+                Ok(()) => format_drain(replica, true),
+                Err(e) => format_error("bad_request", &e.to_string()),
+            };
+            let _ = resp.send(line);
+        }
+        Inbound::Op { op: Op::Undrain { replica }, resp, .. } => {
+            let line = match core.set_draining(replica, false) {
+                Ok(()) => format_drain(replica, false),
+                Err(e) => format_error("bad_request", &e.to_string()),
+            };
+            let _ = resp.send(line);
+        }
+        Inbound::Disconnect { conn } => {
+            // each live replica cancels whatever this connection still
+            // has in flight on it; dead and vacant slots are skipped —
+            // sending into a dead proxy's channel would queue forever
+            // (and pre-v1.4, erroring through the shared arithmetic
+            // here was a bug)
+            for (k, slot) in slots.iter().enumerate() {
+                if core.is_dead(k) || core.is_vacant(k) {
+                    continue;
+                }
+                if let Some(r) = slot {
                     let _ = r.tx.send(Inbound::Disconnect { conn });
                 }
             }
         }
+        Inbound::ReplicaDown { replica, reason, stolen, lost } => {
+            core.stolen += stolen;
+            core.lost_streams += lost;
+            life.respawning.remove(&replica);
+            if replica < core.len() && !core.is_dead(replica) && !core.is_vacant(replica) {
+                log::warn!(
+                    "replica {replica} down ({reason}): {stolen} stolen, {lost} streams lost"
+                );
+                note_dead(core, slots, life, replica, &reason);
+            }
+        }
+        Inbound::ReplicaUp { replica, handle } => {
+            if replica >= core.len() {
+                return;
+            }
+            life.respawning.remove(&replica);
+            if let Some(h) = handle {
+                core.attach_status(replica, h.status.clone());
+                slots[replica] = Some(h);
+            }
+            if core.is_vacant(replica) {
+                core.set_vacant(replica, false);
+                core.scale_ups += 1;
+                log::info!("replica {replica} up: vacant slot filled (scale-up)");
+            } else {
+                core.restarts += 1;
+                log::info!("replica {replica} up: rejoined after restart");
+            }
+            core.revive(replica);
+        }
     }
-    Ok(())
+}
+
+/// Centralized death bookkeeping: mark the slot dead (zeroing its load
+/// view) and, when a spawner is configured, start a backoff respawn
+/// supervisor for it.
+fn note_dead(
+    core: &mut RouterCore,
+    slots: &[Option<ReplicaHandle>],
+    life: &mut PoolLifecycle,
+    k: usize,
+    reason: &str,
+) {
+    if !core.is_dead(k) {
+        let label = slots[k].as_ref().map(|r| r.label.as_str()).unwrap_or("vacant");
+        log::warn!("replica {k} ({label}) {reason}; marked dead");
+    }
+    core.mark_dead(k);
+    life.maybe_respawn(k);
+}
+
+/// Drive the autoscaler one tick and apply its actions to the pool.
+fn autoscale_tick(
+    core: &mut RouterCore,
+    slots: &mut [Option<ReplicaHandle>],
+    life: &mut PoolLifecycle,
+) {
+    let samples = core.lifecycle_samples();
+    let shed = core.shed;
+    // take the core out so applying actions can borrow `life` mutably
+    let Some(mut scale) = life.autoscale.take() else { return };
+    let actions = scale.tick(&samples, shed);
+    life.autoscale = Some(scale);
+    for action in actions {
+        match action {
+            Action::ScaleUp { replica } => {
+                // the spawner path doubles as the scale-up path: the
+                // supervisor fills the vacant slot and reports
+                // ReplicaUp like any respawn
+                life.maybe_respawn(replica);
+            }
+            Action::Drain { replica } => {
+                let _ = core.set_draining(replica, true);
+            }
+            Action::Retire { replica } => {
+                if core.retire(replica) {
+                    slots[replica] = None;
+                    log::info!("replica {replica} retired to vacancy (scale-down)");
+                }
+            }
+            Action::Reconfigure { replica, gamma, kv_bits } => {
+                if core.is_dead(replica) || core.is_vacant(replica) {
+                    continue;
+                }
+                if let Some(r) = &slots[replica] {
+                    // fire-and-forget: the ack goes to a throwaway
+                    // channel (conn 0 — the router's own id)
+                    let (ack_tx, _ack_rx) = mpsc::channel();
+                    let msg = Inbound::Op {
+                        conn: 0,
+                        op: Op::Reconfigure { replica, gamma, kv_bits },
+                        resp: ack_tx,
+                    };
+                    if r.tx.send(msg).is_ok() {
+                        log::info!(
+                            "autoscaler retuned replica {replica}: gamma={gamma:?} \
+                             kv_bits={kv_bits:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Place one generate: shed against the pool SLO or forward to the
@@ -648,7 +1069,8 @@ pub fn router_loop(
 /// worker is gone.
 fn route_generate(
     core: &mut RouterCore,
-    replicas: &[ReplicaHandle],
+    slots: &[Option<ReplicaHandle>],
+    life: &mut PoolLifecycle,
     conn: u64,
     g: GenerateOp,
     resp: mpsc::Sender<String>,
@@ -660,17 +1082,29 @@ fn route_generate(
                 return;
             }
             Ok(k) => {
-                replicas[k].status.pending.fetch_add(1, Ordering::Relaxed);
-                let msg =
-                    Inbound::Op { conn, op: Op::Generate(g.clone()), resp: resp.clone() };
-                if replicas[k].tx.send(msg).is_ok() {
+                let sent = match &slots[k] {
+                    Some(r) => {
+                        r.status.pending.fetch_add(1, Ordering::Relaxed);
+                        let msg = Inbound::Op {
+                            conn,
+                            op: Op::Generate(g.clone()),
+                            resp: resp.clone(),
+                        };
+                        let ok = r.tx.send(msg).is_ok();
+                        if !ok {
+                            // worker gone: roll back the load marker
+                            r.status.dec_pending();
+                        }
+                        ok
+                    }
+                    None => false,
+                };
+                if sent {
                     return;
                 }
-                // worker gone: roll back the load marker, never route
-                // here again, try the next-best replica
-                replicas[k].status.dec_pending();
-                core.mark_dead(k);
-                log::warn!("replica {k} ({}) channel closed; rerouting", replicas[k].label);
+                // never route here again (until revived), try the
+                // next-best replica
+                note_dead(core, slots, life, k, "channel closed");
             }
         }
     }
@@ -686,11 +1120,14 @@ fn route_generate(
 /// one [`STATS_TIMEOUT`] total (the slowest replica), not the sum — a
 /// stats poll must not stall admission behind a wedged replica times
 /// the pool size. A replica that still misses the window is reported
-/// from its last successful snapshot, marked `stale`.
-pub fn pool_stats(core: &mut RouterCore, replicas: &[ReplicaHandle]) -> Json {
+/// from its last successful snapshot, marked `stale`. Dead and vacant
+/// slots are omitted entirely — their cumulative counters left with
+/// their worker.
+pub fn pool_stats(core: &mut RouterCore, replicas: &[Option<ReplicaHandle>]) -> Json {
     let mut waiting: Vec<(usize, mpsc::Receiver<String>)> = Vec::new();
     for (k, r) in replicas.iter().enumerate() {
-        if core.is_dead(k) {
+        let Some(r) = r else { continue };
+        if core.is_dead(k) || core.is_vacant(k) {
             continue;
         }
         let (stx, srx) = mpsc::channel::<String>();
@@ -800,6 +1237,12 @@ pub fn merge_stats(core: &RouterCore, entries: &[(usize, Json, bool)]) -> Json {
         ("queue_p99_ms", num(max("queue_p99_ms"))),
         ("latency_p50_ms", num(max("latency_p50_ms"))),
         ("latency_p99_ms", num(max("latency_p99_ms"))),
+        // v1.4 lifecycle counters (router-owned, cumulative)
+        ("restarts", num(core.restarts as f64)),
+        ("stolen", num(core.stolen as f64)),
+        ("lost_streams", num(core.lost_streams as f64)),
+        ("scale_ups", num(core.scale_ups as f64)),
+        ("scale_downs", num(core.scale_downs as f64)),
         ("replicas", Json::Arr(replica_entries)),
     ])
 }
@@ -952,6 +1395,20 @@ fn handle_inbound(
                 "bad_request",
                 "drain/undrain are pool-router ops; this endpoint is a bare engine loop",
             ));
+        }
+        Inbound::Op { op: Op::Reconfigure { replica, gamma, kv_bits }, resp, .. } => {
+            // v1.4 live retune: the engine validates the knobs (and
+            // most engines reject outright — compiled speculation
+            // depth cannot change underfoot; the mock engine accepts)
+            let line = match engine.reconfigure(gamma, kv_bits) {
+                Ok(()) => format_reconfigured(replica, gamma, kv_bits),
+                Err(e) => format_error("bad_request", &e.to_string()),
+            };
+            let _ = resp.send(line);
+        }
+        Inbound::ReplicaDown { .. } | Inbound::ReplicaUp { .. } => {
+            // router-bound lifecycle messages; meaningless to (and
+            // unreachable in) a bare engine loop
         }
         Inbound::Disconnect { conn } => {
             let dead: Vec<u64> = responders
@@ -1374,5 +1831,130 @@ mod tests {
             Some(ClassSlo { max_queue_depth: Some(4), p99_queue_wait_ms: None })
         );
         assert!(slo.class_thresholds(3).is_none());
+    }
+
+    #[test]
+    fn dynamic_loop_skips_dead_on_disconnect_and_counts_lifecycle() {
+        let sts = statuses(2);
+        sts[0].pending.store(3, Ordering::Relaxed);
+        let (tx0, rx0) = mpsc::channel();
+        let (tx1, rx1) = mpsc::channel();
+        let mut slots = vec![
+            Some(ReplicaHandle { tx: tx0, status: sts[0].clone(), label: "mock".into() }),
+            Some(ReplicaHandle { tx: tx1, status: sts[1].clone(), label: "mock".into() }),
+        ];
+        let mut core = RouterCore::new(sts.clone(), RouteKind::RoundRobin, SloConfig::default());
+        let (rtx, rrx) = mpsc::channel();
+        let t = std::thread::spawn(move || {
+            let mut life = PoolLifecycle::default();
+            router_loop_dynamic(&rrx, &mut core, &mut slots, &mut life).unwrap();
+            core
+        });
+        // replica 0's worker dies with 3 requests in its channel gap
+        drop(rx0);
+        // a cancel owned by replica 0 discovers the death
+        let (ctx, crx) = mpsc::channel();
+        rtx.send(Inbound::Op { conn: 1, op: Op::Cancel { id: 0 }, resp: ctx }).unwrap();
+        let line = crx.recv().unwrap();
+        assert!(line.contains("not_found"), "{line}");
+        // disconnect broadcast must skip the dead replica (pre-v1.4 it
+        // queued into the dead channel / raced the shared arithmetic)
+        rtx.send(Inbound::Disconnect { conn: 1 }).unwrap();
+        // a transport-style death report folds its counters in
+        rtx.send(Inbound::ReplicaDown {
+            replica: 0,
+            reason: "test".into(),
+            stolen: 2,
+            lost: 1,
+        })
+        .unwrap();
+        drop(rtx);
+        let core = t.join().unwrap();
+        assert!(core.is_dead(0));
+        assert_eq!(
+            sts[0].pending.load(Ordering::Relaxed),
+            0,
+            "a dead replica's channel-gap pending must be released"
+        );
+        assert_eq!(core.stolen, 2);
+        assert_eq!(core.lost_streams, 1);
+        let got: Vec<Inbound> = rx1.try_iter().collect();
+        assert!(
+            got.iter().any(|m| matches!(m, Inbound::Disconnect { conn: 1 })),
+            "the live replica still receives the disconnect"
+        );
+    }
+
+    #[test]
+    fn replica_up_revives_and_counts_restart_or_scale_up() {
+        let sts = statuses(2);
+        let mut core = RouterCore::new(sts, RouteKind::RoundRobin, SloConfig::default());
+        core.set_vacant(1, true);
+        // vacant slots are never routed
+        for _ in 0..4 {
+            assert_eq!(core.route(1).unwrap(), 0);
+        }
+        let mut slots: Vec<Option<ReplicaHandle>> = vec![None, None];
+        let mut life = PoolLifecycle::default();
+        let (tx1, _keep1) = mpsc::channel();
+        let h = ReplicaHandle {
+            tx: tx1,
+            status: Arc::new(ReplicaStatus::new()),
+            label: "mock".into(),
+        };
+        dispatch(Inbound::ReplicaUp { replica: 1, handle: Some(h) }, &mut core, &mut slots,
+                 &mut life);
+        assert_eq!(core.scale_ups, 1, "filling a vacant slot is a scale-up");
+        assert!(!core.is_vacant(1));
+        assert!(slots[1].is_some());
+        // replacing a dead slot is a restart
+        core.mark_dead(1);
+        let (tx2, _keep2) = mpsc::channel();
+        let h2 = ReplicaHandle {
+            tx: tx2,
+            status: Arc::new(ReplicaStatus::new()),
+            label: "mock".into(),
+        };
+        dispatch(Inbound::ReplicaUp { replica: 1, handle: Some(h2) }, &mut core, &mut slots,
+                 &mut life);
+        assert_eq!(core.restarts, 1);
+        assert!(!core.is_dead(1));
+    }
+
+    #[test]
+    fn retire_requires_drained_or_dead() {
+        let sts = statuses(3);
+        set(&sts[1], 1, 0, 0);
+        let mut core = RouterCore::new(sts, RouteKind::RoundRobin, SloConfig::default());
+        assert!(!core.retire(0), "a live undrained replica must not retire");
+        core.set_draining(1, true).unwrap();
+        assert!(!core.retire(1), "draining with queued work must not retire");
+        core.statuses[1].queue_depth.store(0, Ordering::Relaxed);
+        assert!(core.retire(1), "drained and empty retires");
+        assert!(core.is_vacant(1));
+        assert!(!core.retire(1), "already vacant");
+        core.mark_dead(2);
+        assert!(core.retire(2), "a dead slot can be reclaimed to vacancy");
+        assert_eq!(core.scale_downs, 2);
+        // retired slots never route
+        for _ in 0..4 {
+            assert_eq!(core.route(1).unwrap(), 0);
+        }
+    }
+
+    #[test]
+    fn merge_stats_carries_lifecycle_counters() {
+        let mut core = RouterCore::new(statuses(1), RouteKind::RoundRobin, SloConfig::default());
+        core.restarts = 1;
+        core.stolen = 2;
+        core.lost_streams = 3;
+        core.scale_ups = 4;
+        core.scale_downs = 5;
+        let merged = merge_stats(&core, &[]);
+        assert_eq!(merged.get("restarts").unwrap().as_i64(), Some(1));
+        assert_eq!(merged.get("stolen").unwrap().as_i64(), Some(2));
+        assert_eq!(merged.get("lost_streams").unwrap().as_i64(), Some(3));
+        assert_eq!(merged.get("scale_ups").unwrap().as_i64(), Some(4));
+        assert_eq!(merged.get("scale_downs").unwrap().as_i64(), Some(5));
     }
 }

@@ -1,0 +1,1148 @@
+//! Cross-host replica transport (protocol v1.4): the router<->worker
+//! wire behind remote [`ReplicaHandle`]s.
+//!
+//! ```text
+//!   router process                          worker process (--worker)
+//!   ------------------                      --------------------------
+//!   RouterCore --mpsc--> proxy thread --tcp--> reader thread --mpsc--+
+//!                          |   ^                                     v
+//!                          |   +--- lines --- writer <-- frames -- replica_loop
+//!                          +--> ReplicaDown/Up, stolen ops --> router
+//! ```
+//!
+//! One socket multiplexes every client connection. The router side is a
+//! *proxy thread* that owns the socket and presents the exact `mpsc`
+//! face of a local replica ([`connect_remote`] returns an ordinary
+//! [`ReplicaHandle`]), so `RouterCore` routes over a heterogeneous
+//! local+remote pool without knowing which is which. The worker side
+//! ([`serve_worker`]) runs the same [`pool::replica_loop`] a local
+//! replica runs — the engine cannot tell it is remote.
+//!
+//! # Wire format
+//!
+//! One JSON object per line, both directions:
+//!
+//! ```text
+//! router -> worker   {"hello":{"pool":N,"replica":K}}          once per connect
+//! worker -> router   {"welcome":{"engine":"...","max_seq":M,
+//!                     "ops_seen":S,"slots":C}}                 handshake reply
+//! router -> worker   {"conn":C,"op":{...},"tag":T}             any protocol op
+//! router -> worker   {"disconnect":C}                          client hung up
+//! router -> worker   {"ping":K}                                every tick
+//! worker -> router   {"pong":K}
+//! worker -> router   {"frame":{...},"tag":T}                   replies + deltas
+//! worker -> router   {"status":{...}}                          ~100 ms cadence
+//! ```
+//!
+//! Tags are per-proxy sequence numbers: every forwarded op gets one,
+//! and every reply frame carries it back, so one socket can interleave
+//! concurrent streams. A frame without a `delta` key is terminal for
+//! its tag. The `status` push mirrors the [`ReplicaStatus`] atomics a
+//! local replica publishes through shared memory; `ops_seen` (total
+//! generates the worker ever read off the wire) lets the proxy compute
+//! the in-flight `pending` count exactly across reconnects.
+//!
+//! # Lifecycle
+//!
+//! The proxy pings every tick (250 ms) and declares the worker dead on
+//! socket EOF/error or 2 s of silence (`kill -9` closes the socket, so
+//! detection is immediate; the timeout catches wedged hosts). On death
+//! every outstanding tag is drained: requests that already streamed
+//! output answer a terminal `replica_lost` frame (the dead engine held
+//! their KV state); requests that had not are *stolen* — re-admitted
+//! to the router and re-routed to a surviving replica (disable with
+//! `--no-steal`). Then `ReplicaDown` is sent, the routing status is
+//! zeroed, and the proxy reconnects with exponential backoff
+//! (200 ms -> 5 s, forever — the handle being dropped by a pool
+//! retire is what stops it). A successful re-handshake sends
+//! `ReplicaUp { handle: None }`: the handle (and its channel) survived,
+//! only the socket behind it was replaced.
+//!
+//! The worker pins its id space (`replica`/`pool` stride) on the first
+//! hello it ever accepts and keeps it for the life of the process, so
+//! ids stay unique across router reconnects. If a router vanishes
+//! without disconnects, orphaned generations run to completion against
+//! dropped responders and are discarded — the next session starts with
+//! clean counters.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Engine;
+use crate::error::{QspecError, Result};
+use crate::model::Tokenizer;
+use crate::util::json::{num, obj, s, Json};
+
+use super::pool::{self, ReplicaHandle, ReplicaStatus};
+use super::{format_error, format_op, format_replica_lost, parse_op, Inbound, Op};
+
+/// Handshake (hello/welcome) must complete within this budget — a
+/// worker that cannot answer promptly is treated as down.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+/// Proxy tick: ping cadence and the granularity of reconnect/backoff
+/// checks.
+const TICK: Duration = Duration::from_millis(250);
+/// Silence budget before the proxy declares the worker dead. Status
+/// pushes arrive every ~100 ms, so a healthy link never gets close.
+const HEARTBEAT_TIMEOUT: Duration = Duration::from_secs(2);
+/// First reconnect delay after a death; doubled per failure.
+const RECONNECT_BACKOFF_BASE: Duration = Duration::from_millis(200);
+/// Reconnect delay ceiling.
+const RECONNECT_BACKOFF_CAP: Duration = Duration::from_secs(5);
+/// Worker-side cadence of unsolicited `status` pushes.
+const STATUS_INTERVAL: Duration = Duration::from_millis(100);
+/// `max_tokens` fallback on the worker. Unused in practice: the router
+/// re-serializes ops through [`format_op`], which always emits
+/// `max_tokens` explicitly.
+const WORKER_DEFAULT_MAX_TOKENS: usize = 64;
+
+// ---------------------------------------------------------------------------
+// envelope format
+// ---------------------------------------------------------------------------
+
+/// A parsed router->worker line.
+enum Envelope {
+    /// A tagged protocol op on behalf of client connection `conn`.
+    Op { tag: u64, conn: u64, op: Json },
+    /// Client `conn` hung up on the router.
+    Disconnect { conn: u64 },
+    /// Heartbeat probe; answered with `{"pong":K}`.
+    Ping(u64),
+}
+
+/// Wrap a router-parsed op for the wire.
+fn format_envelope(tag: u64, conn: u64, op: &Op) -> String {
+    let op_json = Json::parse(&format_op(op)).expect("format_op emits valid JSON");
+    obj(vec![
+        ("conn", num(conn as f64)),
+        ("op", op_json),
+        ("tag", num(tag as f64)),
+    ])
+    .to_string()
+}
+
+/// Parse one router->worker line.
+fn parse_envelope(line: &str) -> Result<Envelope> {
+    let j = Json::parse(line)?;
+    if let Some(k) = j.get("ping").and_then(Json::as_f64) {
+        return Ok(Envelope::Ping(k as u64));
+    }
+    if let Some(c) = j.get("disconnect").and_then(Json::as_f64) {
+        return Ok(Envelope::Disconnect { conn: c as u64 });
+    }
+    let tag = j.get("tag").and_then(Json::as_f64);
+    let conn = j.get("conn").and_then(Json::as_f64);
+    match (tag, conn, j.get("op")) {
+        (Some(tag), Some(conn), Some(op)) => Ok(Envelope::Op {
+            tag: tag as u64,
+            conn: conn as u64,
+            op: op.clone(),
+        }),
+        _ => Err(QspecError::Config(
+            "envelope requires \"tag\", \"conn\" and \"op\"".into(),
+        )),
+    }
+}
+
+/// Wrap a reply frame with its tag. `frame` is a JSON object produced
+/// by our own formatters, so it is spliced without a reparse (deltas
+/// are the hot path here).
+fn frame_line(tag: u64, frame: &str) -> String {
+    format!("{{\"frame\":{frame},\"tag\":{tag}}}")
+}
+
+/// The router's side of the handshake.
+fn format_hello(replica: usize, pool: usize) -> String {
+    obj(vec![(
+        "hello",
+        obj(vec![
+            ("pool", num(pool as f64)),
+            ("replica", num(replica as f64)),
+        ]),
+    )])
+    .to_string()
+}
+
+/// Parse a hello; yields `(replica, pool)`.
+fn parse_hello(line: &str) -> Result<(usize, usize)> {
+    let j = Json::parse(line)?;
+    let h = j
+        .get("hello")
+        .ok_or_else(|| QspecError::Config("expected a hello frame".into()))?;
+    let replica = h.req_usize("replica")?;
+    let pool = h.req_usize("pool")?;
+    if pool == 0 || replica >= pool {
+        return Err(QspecError::Config(format!(
+            "hello: replica {replica} outside pool of {pool}"
+        )));
+    }
+    Ok((replica, pool))
+}
+
+/// What a worker reports about itself at handshake.
+#[derive(Debug)]
+struct Welcome {
+    engine: String,
+    max_seq: usize,
+    ops_seen: u64,
+    slots: usize,
+}
+
+/// The worker's side of the handshake.
+fn format_welcome(engine: &dyn Engine, ops_seen: u64) -> String {
+    obj(vec![(
+        "welcome",
+        obj(vec![
+            ("engine", s(engine.name())),
+            ("max_seq", num(engine.max_seq() as f64)),
+            ("ops_seen", num(ops_seen as f64)),
+            ("slots", num(engine.slot_capacity() as f64)),
+        ]),
+    )])
+    .to_string()
+}
+
+/// Parse a welcome.
+fn parse_welcome(line: &str) -> Result<Welcome> {
+    let j = Json::parse(line)?;
+    let w = j
+        .get("welcome")
+        .ok_or_else(|| QspecError::Config("expected a welcome frame".into()))?;
+    Ok(Welcome {
+        engine: w.req_str("engine")?.to_string(),
+        max_seq: w.req_usize("max_seq")?,
+        ops_seen: w.get("ops_seen").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        slots: w.req_usize("slots")?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// worker side (`qspec serve --worker ADDR`)
+// ---------------------------------------------------------------------------
+
+/// The worker-side status push mirroring [`ReplicaStatus`].
+fn status_json(status: &ReplicaStatus, ops_seen: u64) -> Json {
+    obj(vec![
+        ("accepted", num(status.accepted.load(Ordering::Relaxed) as f64)),
+        ("active", num(status.active.load(Ordering::Relaxed) as f64)),
+        ("drafted", num(status.drafted.load(Ordering::Relaxed) as f64)),
+        ("ops_seen", num(ops_seen as f64)),
+        ("pending", num(status.pending.load(Ordering::Relaxed) as f64)),
+        ("queue_depth", num(status.queue_depth.load(Ordering::Relaxed) as f64)),
+        ("slots", num(status.slots.load(Ordering::Relaxed) as f64)),
+        (
+            "wait_signal_ns",
+            num(status.wait_signal_ns.load(Ordering::Relaxed) as f64),
+        ),
+    ])
+}
+
+/// Push the live status over the wire every [`STATUS_INTERVAL`] until
+/// the writer goes away.
+fn worker_status_pusher(
+    out_tx: &mpsc::Sender<String>,
+    status: &ReplicaStatus,
+    ops_seen: &AtomicU64,
+) {
+    loop {
+        std::thread::sleep(STATUS_INTERVAL);
+        let line =
+            obj(vec![("status", status_json(status, ops_seen.load(Ordering::Relaxed)))])
+                .to_string();
+        if out_tx.send(line).is_err() {
+            return;
+        }
+    }
+}
+
+/// Worker-side socket reader: parse envelopes, feed the replica loop,
+/// answer pings. Dropping `wtx` on exit is what ends the session.
+fn worker_reader(
+    reader: BufReader<TcpStream>,
+    wtx: mpsc::Sender<Inbound>,
+    out_tx: mpsc::Sender<String>,
+    max_tokens_cap: usize,
+    status: Arc<ReplicaStatus>,
+    ops_seen: Arc<AtomicU64>,
+) {
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_envelope(&line) {
+            Ok(Envelope::Ping(k)) => {
+                if out_tx.send(obj(vec![("pong", num(k as f64))]).to_string()).is_err() {
+                    break;
+                }
+            }
+            Ok(Envelope::Disconnect { conn }) => {
+                if wtx.send(Inbound::Disconnect { conn }).is_err() {
+                    break;
+                }
+            }
+            Ok(Envelope::Op { tag, conn, op }) => {
+                let op = match parse_op(
+                    &op.to_string(),
+                    WORKER_DEFAULT_MAX_TOKENS,
+                    max_tokens_cap,
+                ) {
+                    Ok(op) => op,
+                    Err(e) => {
+                        let frame = format_error("bad_request", &e.to_string());
+                        if out_tx.send(frame_line(tag, &frame)).is_err() {
+                            break;
+                        }
+                        continue;
+                    }
+                };
+                if matches!(op, Op::Generate(_)) {
+                    // in-channel marker, mirrored to the proxy via the
+                    // status push (ops_seen keys its reconciliation)
+                    status.pending.fetch_add(1, Ordering::Relaxed);
+                    ops_seen.fetch_add(1, Ordering::Relaxed);
+                }
+                // per-op forwarder: wraps this op's reply frames with
+                // its tag; exits when the replica loop drops the
+                // responder after the terminal frame
+                let (ftx, frx) = mpsc::channel::<String>();
+                let fwd_out = out_tx.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("qspec-worker-fwd".into())
+                    .spawn(move || {
+                        for frame in frx {
+                            if fwd_out.send(frame_line(tag, &frame)).is_err() {
+                                break;
+                            }
+                        }
+                    });
+                if spawned.is_err() {
+                    break;
+                }
+                if wtx.send(Inbound::Op { conn, op, resp: ftx }).is_err() {
+                    break;
+                }
+            }
+            Err(e) => log::warn!("worker: bad envelope: {e}"),
+        }
+    }
+}
+
+/// Expose one engine as a standalone worker process: accept one router
+/// at a time on `addr`, speak the envelope protocol, and drive the
+/// engine with the same [`pool::replica_loop`] a local pool replica
+/// runs. Returns only on a listener error; an engine fault drops the
+/// router connection (so its proxy runs the failure path) but keeps
+/// the process alive for the reconnect.
+pub fn serve_worker(addr: &str, tok: &Tokenizer, engine: &mut dyn Engine) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    println!(
+        "qspec worker listening on {local} (engine={}, max_seq={}, protocol v1.4)",
+        engine.name(),
+        engine.max_seq(),
+    );
+    let status = Arc::new(ReplicaStatus::new());
+    let ops_seen = Arc::new(AtomicU64::new(0));
+    let mut id_space_set = false;
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
+        let mut reader = match stream.try_clone() {
+            Ok(r) => BufReader::new(r),
+            Err(_) => continue,
+        };
+        let mut hello = String::new();
+        if reader.read_line(&mut hello).map(|n| n == 0).unwrap_or(true) {
+            continue;
+        }
+        let (replica, pool_n) = match parse_hello(&hello) {
+            Ok(h) => h,
+            Err(e) => {
+                log::warn!("worker: bad hello: {e}");
+                continue;
+            }
+        };
+        // the first adopting router pins the id space for the life of
+        // the process, so ids stay unique across router reconnects
+        if !id_space_set {
+            engine.core_mut().set_id_space(replica as u64, pool_n as u64);
+            id_space_set = true;
+        }
+        let _ = stream.set_read_timeout(None);
+        let mut w = match stream.try_clone() {
+            Ok(w) => w,
+            Err(_) => continue,
+        };
+        let welcome = format_welcome(&*engine, ops_seen.load(Ordering::Relaxed));
+        if writeln!(w, "{welcome}").is_err() {
+            continue;
+        }
+        log::info!("worker: router adopted this process as replica {replica}/{pool_n}");
+        // generates the dead session never admitted left the marker up
+        status.pending.store(0, Ordering::Relaxed);
+        let (wtx, wrx) = mpsc::channel::<Inbound>();
+        let (out_tx, out_rx) = mpsc::channel::<String>();
+        let writer = std::thread::Builder::new()
+            .name("qspec-worker-wr".into())
+            .spawn(move || {
+                for line in out_rx {
+                    if writeln!(w, "{line}").is_err() {
+                        break;
+                    }
+                }
+            })?;
+        {
+            let out_tx = out_tx.clone();
+            let status = status.clone();
+            let ops_seen = ops_seen.clone();
+            std::thread::Builder::new()
+                .name("qspec-worker-status".into())
+                .spawn(move || worker_status_pusher(&out_tx, &status, &ops_seen))?;
+        }
+        {
+            let status = status.clone();
+            let ops_seen = ops_seen.clone();
+            let cap = engine.max_seq();
+            std::thread::Builder::new()
+                .name("qspec-worker-rd".into())
+                .spawn(move || worker_reader(reader, wtx, out_tx, cap, status, ops_seen))?;
+        }
+        // session: runs until the router hangs up (the reader drops the
+        // op channel) or the engine faults
+        if let Err(e) = pool::replica_loop(&wrx, tok, &mut *engine, &status) {
+            log::warn!("worker: engine fault, dropping router connection: {e}");
+        }
+        let _ = stream.shutdown(Shutdown::Both);
+        let _ = writer.join();
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// router side (proxy behind a ReplicaHandle)
+// ---------------------------------------------------------------------------
+
+/// Pool-level knobs the proxy needs for its failure path.
+pub struct RemoteOpts {
+    /// Re-admit a dead replica's un-streamed generates to the router
+    /// instead of answering `replica_lost` (`--no-steal` clears it).
+    pub steal: bool,
+    /// Backoff hint carried by `replica_lost` frames.
+    pub retry_after_ms: u64,
+}
+
+/// What [`connect_remote`] hands the pool: the transport-agnostic
+/// handle plus the worker's sequence cap (the router clamps
+/// `max_tokens` to the tightest cap in the pool).
+pub struct Remote {
+    /// Routes like a local replica; behind it sits the proxy thread.
+    pub handle: ReplicaHandle,
+    /// The remote engine's `max_seq`.
+    pub max_seq: usize,
+}
+
+/// Everything the proxy thread wakes up for.
+enum Event {
+    /// The router routed something to this replica.
+    In(Inbound),
+    /// A worker line from the session with this generation counter.
+    Line(u64, String),
+    /// Socket EOF/error in the given session generation.
+    Eof(u64),
+    /// Every clone of the handle's sender is gone (slot retired or
+    /// pool shut down): the proxy exits.
+    HandleClosed,
+}
+
+/// One forwarded op awaiting its terminal frame.
+struct TagEntry {
+    conn: u64,
+    resp: mpsc::Sender<String>,
+    op: Op,
+    /// A delta already reached the client — the stream is not
+    /// replayable and dies as `replica_lost` if the worker does.
+    streamed: bool,
+    /// Request id, learned from the first delta frame.
+    id: Option<u64>,
+}
+
+/// Proxy state: the router side of one remote replica.
+struct Proxy {
+    replica: usize,
+    pool: usize,
+    addr: String,
+    router_tx: mpsc::Sender<Inbound>,
+    opts: RemoteOpts,
+    status: Arc<ReplicaStatus>,
+    outstanding: HashMap<u64, TagEntry>,
+    next_tag: u64,
+    /// Generates written to the socket this session.
+    ops_sent: u64,
+    /// The worker's `ops_seen` at this session's handshake.
+    seen_base: u64,
+    /// Session generation; bumped on every death so buffered events
+    /// from a dead socket's reader are discarded.
+    gen: u64,
+}
+
+/// Connect to a worker, complete the handshake synchronously (boot
+/// fails fast on an unreachable address), and spawn the proxy thread
+/// that owns the socket from here on.
+pub fn connect_remote(
+    replica: usize,
+    pool: usize,
+    addr: &str,
+    router_tx: mpsc::Sender<Inbound>,
+    opts: RemoteOpts,
+) -> Result<Remote> {
+    let (stream, reader, welcome) = handshake(addr, replica, pool)?;
+    let status = Arc::new(ReplicaStatus::new());
+    status.slots.store(welcome.slots, Ordering::Relaxed);
+    let label = format!("{}@{addr}", welcome.engine);
+    let (ptx, prx) = mpsc::channel::<Inbound>();
+    let (etx, erx) = mpsc::channel::<Event>();
+    // pump: the handle's channel outlives any one socket session
+    {
+        let etx = etx.clone();
+        std::thread::Builder::new()
+            .name(format!("qspec-remote-pump-{replica}"))
+            .spawn(move || {
+                for msg in prx {
+                    if etx.send(Event::In(msg)).is_err() {
+                        return;
+                    }
+                }
+                let _ = etx.send(Event::HandleClosed);
+            })?;
+    }
+    spawn_socket_reader(replica, 0, reader, &etx)?;
+    let proxy = Proxy {
+        replica,
+        pool,
+        addr: addr.to_string(),
+        router_tx,
+        opts,
+        status: status.clone(),
+        outstanding: HashMap::new(),
+        next_tag: 1,
+        ops_sent: 0,
+        seen_base: welcome.ops_seen,
+        gen: 0,
+    };
+    std::thread::Builder::new()
+        .name(format!("qspec-remote-{replica}"))
+        .spawn(move || proxy.run(stream, erx, etx))?;
+    Ok(Remote {
+        handle: ReplicaHandle { tx: ptx, status, label },
+        max_seq: welcome.max_seq,
+    })
+}
+
+/// Dial + hello/welcome under [`HANDSHAKE_TIMEOUT`]. Returns the
+/// socket (write side), the buffered reader (it may already hold
+/// bytes past the welcome) and the parsed welcome.
+fn handshake(
+    addr: &str,
+    replica: usize,
+    pool: usize,
+) -> Result<(TcpStream, BufReader<TcpStream>, Welcome)> {
+    let stream = TcpStream::connect(addr)?;
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    let mut w = stream.try_clone()?;
+    writeln!(w, "{}", format_hello(replica, pool))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Err(QspecError::Config(format!(
+            "worker {addr} closed the connection during handshake"
+        )));
+    }
+    let welcome = parse_welcome(&line)?;
+    stream.set_read_timeout(None)?;
+    Ok((stream, reader, welcome))
+}
+
+/// Feed one session's socket lines into the proxy's event channel,
+/// stamped with the session generation.
+fn spawn_socket_reader(
+    replica: usize,
+    gen: u64,
+    reader: BufReader<TcpStream>,
+    etx: &mpsc::Sender<Event>,
+) -> Result<()> {
+    let etx = etx.clone();
+    std::thread::Builder::new()
+        .name(format!("qspec-remote-rd-{replica}"))
+        .spawn(move || {
+            for line in reader.lines() {
+                let Ok(line) = line else { break };
+                if etx.send(Event::Line(gen, line)).is_err() {
+                    return;
+                }
+            }
+            let _ = etx.send(Event::Eof(gen));
+        })?;
+    Ok(())
+}
+
+impl Proxy {
+    /// Proxy main loop: multiplex router traffic and worker lines,
+    /// heartbeat the link, and on death drain + reconnect. Exits when
+    /// the handle is dropped (slot retired / pool shut down).
+    fn run(mut self, first: TcpStream, erx: mpsc::Receiver<Event>, etx: mpsc::Sender<Event>) {
+        let mut sock = Some(first);
+        let mut last_seen = Instant::now();
+        let mut last_ping = Instant::now();
+        let mut ping_seq = 0u64;
+        let mut backoff = RECONNECT_BACKOFF_BASE;
+        let mut next_attempt = Instant::now();
+        loop {
+            let mut failure: Option<String> = None;
+            match erx.recv_timeout(TICK) {
+                Ok(Event::HandleClosed) => return,
+                Ok(Event::In(msg)) => {
+                    if let Err(reason) = self.forward(msg, &mut sock) {
+                        failure = Some(reason);
+                    }
+                }
+                Ok(Event::Line(g, line)) if g == self.gen => {
+                    last_seen = Instant::now();
+                    self.handle_line(&line, &mut sock);
+                }
+                Ok(Event::Eof(g)) if g == self.gen => {
+                    failure = Some("worker closed the connection".into());
+                }
+                // a dead session's reader draining its buffer
+                Ok(Event::Line(..)) | Ok(Event::Eof(_)) => {}
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+            if sock.is_some() {
+                if failure.is_none() && last_ping.elapsed() >= TICK {
+                    ping_seq += 1;
+                    last_ping = Instant::now();
+                    let line = obj(vec![("ping", num(ping_seq as f64))]).to_string();
+                    let s = sock.as_mut().expect("checked above");
+                    if writeln!(s, "{line}").is_err() {
+                        failure = Some("write to worker failed".into());
+                    }
+                }
+                if failure.is_none() && last_seen.elapsed() >= HEARTBEAT_TIMEOUT {
+                    failure = Some(format!(
+                        "heartbeat timeout ({} ms of silence)",
+                        HEARTBEAT_TIMEOUT.as_millis()
+                    ));
+                }
+                if let Some(reason) = failure {
+                    if !self.on_death(&mut sock, &reason) {
+                        return; // router is gone
+                    }
+                    backoff = RECONNECT_BACKOFF_BASE;
+                    next_attempt = Instant::now() + backoff;
+                }
+            } else if Instant::now() >= next_attempt {
+                match handshake(&self.addr, self.replica, self.pool) {
+                    Ok((stream, reader, welcome)) => {
+                        self.gen += 1;
+                        self.seen_base = welcome.ops_seen;
+                        self.ops_sent = 0;
+                        self.status.slots.store(welcome.slots, Ordering::Relaxed);
+                        if spawn_socket_reader(self.replica, self.gen, reader, &etx)
+                            .is_err()
+                        {
+                            let _ = stream.shutdown(Shutdown::Both);
+                            next_attempt = Instant::now() + backoff;
+                            continue;
+                        }
+                        sock = Some(stream);
+                        last_seen = Instant::now();
+                        last_ping = Instant::now();
+                        log::info!(
+                            "replica {}: reconnected to {}",
+                            self.replica,
+                            self.addr
+                        );
+                        let up =
+                            Inbound::ReplicaUp { replica: self.replica, handle: None };
+                        if self.router_tx.send(up).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        log::debug!(
+                            "replica {}: reconnect to {} failed: {e}",
+                            self.replica,
+                            self.addr
+                        );
+                        backoff = (backoff * 2).min(RECONNECT_BACKOFF_CAP);
+                        next_attempt = Instant::now() + backoff;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Forward one routed message onto the wire. `Err` carries the
+    /// failure reason when the socket write fails.
+    fn forward(
+        &mut self,
+        msg: Inbound,
+        sock: &mut Option<TcpStream>,
+    ) -> std::result::Result<(), String> {
+        match msg {
+            Inbound::Op { conn, op, resp } => {
+                if sock.is_none() {
+                    // channel-gap leftovers routed before the router
+                    // learned this replica died
+                    self.refuse(conn, op, resp);
+                    return Ok(());
+                }
+                let tag = self.next_tag;
+                self.next_tag += 1;
+                let line = format_envelope(tag, conn, &op);
+                if matches!(op, Op::Generate(_)) {
+                    self.ops_sent += 1;
+                }
+                self.outstanding
+                    .insert(tag, TagEntry { conn, resp, op, streamed: false, id: None });
+                let s = sock.as_mut().expect("checked above");
+                if writeln!(s, "{line}").is_err() {
+                    // the entry stays outstanding: on_death steals it
+                    return Err("write to worker failed".into());
+                }
+                Ok(())
+            }
+            Inbound::Disconnect { conn } => {
+                // the worker cancels that connection's requests without
+                // terminal frames (the client is gone): forget its tags
+                self.outstanding.retain(|_, e| e.conn != conn);
+                if let Some(s) = sock.as_mut() {
+                    let line = obj(vec![("disconnect", num(conn as f64))]).to_string();
+                    if writeln!(s, "{line}").is_err() {
+                        return Err("write to worker failed".into());
+                    }
+                }
+                Ok(())
+            }
+            // router-bound lifecycle messages are never routed here
+            Inbound::ReplicaDown { .. } | Inbound::ReplicaUp { .. } => Ok(()),
+        }
+    }
+
+    /// Answer a message routed at a dead session without a socket.
+    fn refuse(&mut self, conn: u64, op: Op, resp: mpsc::Sender<String>) {
+        match op {
+            Op::Generate(g) => {
+                if self.opts.steal {
+                    let msg = Inbound::Op { conn, op: Op::Generate(g), resp };
+                    let _ = self.router_tx.send(msg);
+                } else {
+                    let _ = resp.send(format_replica_lost(
+                        None,
+                        self.replica,
+                        self.opts.retry_after_ms,
+                    ));
+                }
+            }
+            Op::Cancel { id } => {
+                let _ = resp.send(format_error(
+                    "not_found",
+                    &format!("no in-flight request with id {id}"),
+                ));
+            }
+            _ => {} // stats/admin acks die silently
+        }
+    }
+
+    /// Handle one worker line: pong, status push, or a tagged frame.
+    fn handle_line(&mut self, line: &str, sock: &mut Option<TcpStream>) {
+        if line.trim().is_empty() {
+            return;
+        }
+        let Ok(j) = Json::parse(line) else {
+            log::warn!("replica {}: unparseable worker line", self.replica);
+            return;
+        };
+        if j.get("pong").is_some() {
+            return; // freshness was recorded by the caller
+        }
+        if let Some(st) = j.get("status") {
+            self.apply_status(st);
+            return;
+        }
+        let tag = j.get("tag").and_then(Json::as_f64);
+        let (Some(tag), Some(frame)) = (tag, j.get("frame")) else {
+            return;
+        };
+        let tag = tag as u64;
+        if frame.get("delta").is_some() {
+            let frame_id = frame.get("id").and_then(Json::as_f64).map(|v| v as u64);
+            let (client_dead, conn, id) = {
+                let Some(entry) = self.outstanding.get_mut(&tag) else { return };
+                entry.streamed = true;
+                if entry.id.is_none() {
+                    entry.id = frame_id;
+                }
+                let dead = entry.resp.send(frame.to_string()).is_err();
+                (dead, entry.conn, entry.id)
+            };
+            if client_dead {
+                // the client's writer is gone: cancel at the worker so
+                // the slot frees; the ack comes back with an unknown
+                // tag and is dropped
+                if let (Some(id), Some(s)) = (id, sock.as_mut()) {
+                    let tag2 = self.next_tag;
+                    self.next_tag += 1;
+                    let line = format_envelope(tag2, conn, &Op::Cancel { id });
+                    let _ = writeln!(s, "{line}");
+                }
+            }
+        } else {
+            // terminal for its tag (result, stream done, ack or error)
+            if let Some(entry) = self.outstanding.remove(&tag) {
+                let _ = entry.resp.send(frame.to_string());
+            }
+        }
+    }
+
+    /// Mirror a worker status push into the shared routing view.
+    fn apply_status(&self, st: &Json) {
+        let get = |k: &str| st.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let status = &self.status;
+        status.queue_depth.store(get("queue_depth") as usize, Ordering::Relaxed);
+        status.active.store(get("active") as usize, Ordering::Relaxed);
+        status.slots.store(get("slots") as usize, Ordering::Relaxed);
+        status.wait_signal_ns.store(get("wait_signal_ns") as u64, Ordering::Relaxed);
+        status.drafted.store(get("drafted") as u64, Ordering::Relaxed);
+        status.accepted.store(get("accepted") as u64, Ordering::Relaxed);
+        // pending as the router's SLO math defines it: generates routed
+        // but not yet admitted = written this session minus admitted
+        // this session, plus the worker's own in-channel count
+        let seen = (get("ops_seen") as u64).saturating_sub(self.seen_base);
+        let pending = self.ops_sent.saturating_sub(seen) + get("pending") as u64;
+        status.pending.store(pending as usize, Ordering::Relaxed);
+    }
+
+    /// The worker died: close the socket, invalidate its reader, drain
+    /// every outstanding tag (steal or `replica_lost`), zero the
+    /// routing view and tell the router. Returns false when the router
+    /// channel itself is gone.
+    fn on_death(&mut self, sock: &mut Option<TcpStream>, reason: &str) -> bool {
+        if let Some(s) = sock.take() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        self.gen += 1;
+        let mut stolen = 0u64;
+        let mut lost = 0u64;
+        for (_, entry) in self.outstanding.drain() {
+            match entry.op {
+                Op::Generate(g) => {
+                    if entry.streamed {
+                        // deltas reached the client: the stream cannot
+                        // be resumed (the dead engine held its KV)
+                        let _ = entry.resp.send(format_replica_lost(
+                            entry.id,
+                            self.replica,
+                            self.opts.retry_after_ms,
+                        ));
+                        lost += 1;
+                    } else if self.opts.steal {
+                        // deterministic + nothing reached the client:
+                        // re-admit and let a survivor serve it
+                        let msg = Inbound::Op {
+                            conn: entry.conn,
+                            op: Op::Generate(g),
+                            resp: entry.resp,
+                        };
+                        if self.router_tx.send(msg).is_ok() {
+                            stolen += 1;
+                        }
+                    } else {
+                        let _ = entry.resp.send(format_replica_lost(
+                            None,
+                            self.replica,
+                            self.opts.retry_after_ms,
+                        ));
+                        lost += 1;
+                    }
+                }
+                Op::Cancel { id } => {
+                    let _ = entry.resp.send(format_error(
+                        "not_found",
+                        &format!("no in-flight request with id {id}"),
+                    ));
+                }
+                _ => {} // stats/admin acks die silently with the worker
+            }
+        }
+        // a dead replica's load must not weigh on routing
+        self.status.queue_depth.store(0, Ordering::Relaxed);
+        self.status.active.store(0, Ordering::Relaxed);
+        self.status.pending.store(0, Ordering::Relaxed);
+        self.status.wait_signal_ns.store(0, Ordering::Relaxed);
+        self.ops_sent = 0;
+        log::warn!(
+            "replica {} ({}) lost: {reason} (stolen={stolen}, lost={lost})",
+            self.replica,
+            self.addr
+        );
+        self.router_tx
+            .send(Inbound::ReplicaDown {
+                replica: self.replica,
+                reason: reason.to_string(),
+                stolen,
+                lost,
+            })
+            .is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::mock::EchoEngine;
+    use crate::server::GenerateOp;
+
+    fn sample_generate() -> Op {
+        Op::Generate(GenerateOp {
+            prompt: "hello distributed world".into(),
+            max_tokens: 16,
+            stream: true,
+            temperature: 0.5,
+            seed: 7,
+            stop: vec!["END".into()],
+            priority: 1,
+            deadline_ms: Some(1500),
+        })
+    }
+
+    #[test]
+    fn envelope_roundtrip_for_every_op() {
+        let ops = vec![
+            sample_generate(),
+            Op::Cancel { id: 42 },
+            Op::Stats,
+            Op::Drain { replica: 1 },
+            Op::Undrain { replica: 1 },
+            Op::Reconfigure { replica: 2, gamma: Some(4), kv_bits: Some(3) },
+        ];
+        for (i, op) in ops.into_iter().enumerate() {
+            let tag = 10 + i as u64;
+            let line = format_envelope(tag, 5, &op);
+            match parse_envelope(&line).expect("envelope parses") {
+                Envelope::Op { tag: t, conn, op: inner } => {
+                    assert_eq!(t, tag);
+                    assert_eq!(conn, 5);
+                    let reparsed =
+                        parse_op(&inner.to_string(), 64, 4096).expect("inner op parses");
+                    assert_eq!(reparsed, op);
+                }
+                _ => panic!("expected an op envelope"),
+            }
+        }
+    }
+
+    #[test]
+    fn ping_disconnect_and_frame_lines_parse() {
+        match parse_envelope("{\"ping\":9}").expect("ping parses") {
+            Envelope::Ping(k) => assert_eq!(k, 9),
+            _ => panic!("expected ping"),
+        }
+        match parse_envelope("{\"disconnect\":3}").expect("disconnect parses") {
+            Envelope::Disconnect { conn } => assert_eq!(conn, 3),
+            _ => panic!("expected disconnect"),
+        }
+        assert!(parse_envelope("{\"op\":{\"op\":\"stats\"}}").is_err());
+        let line = frame_line(17, &format_error("bad_request", "nope"));
+        let j = Json::parse(&line).expect("frame line is valid JSON");
+        assert_eq!(j.get("tag").and_then(Json::as_f64), Some(17.0));
+        assert!(j.get("frame").and_then(|f| f.get("error")).is_some());
+    }
+
+    #[test]
+    fn hello_and_welcome_roundtrip() {
+        let (replica, pool) = parse_hello(&format_hello(3, 8)).expect("hello parses");
+        assert_eq!((replica, pool), (3, 8));
+        assert!(parse_hello(&format_hello(8, 8)).is_err(), "replica outside pool");
+        let engine = EchoEngine::new(4, 128, 0);
+        let w = parse_welcome(&format_welcome(&engine, 21)).expect("welcome parses");
+        assert_eq!(w.engine, "mock");
+        assert_eq!(w.max_seq, 128);
+        assert_eq!(w.ops_seen, 21);
+        assert_eq!(w.slots, 4);
+    }
+
+    fn test_proxy(steal: bool) -> (Proxy, mpsc::Receiver<Inbound>) {
+        let (rtx, rrx) = mpsc::channel();
+        let proxy = Proxy {
+            replica: 3,
+            pool: 4,
+            addr: "127.0.0.1:0".into(),
+            router_tx: rtx,
+            opts: RemoteOpts { steal, retry_after_ms: 250 },
+            status: Arc::new(ReplicaStatus::new()),
+            outstanding: HashMap::new(),
+            next_tag: 1,
+            ops_sent: 0,
+            seen_base: 10,
+            gen: 0,
+        };
+        (proxy, rrx)
+    }
+
+    #[test]
+    fn status_push_reconciles_pending_across_the_wire() {
+        let (mut proxy, _rrx) = test_proxy(true);
+        proxy.ops_sent = 5;
+        let st = obj(vec![
+            ("accepted", num(30.0)),
+            ("active", num(2.0)),
+            ("drafted", num(40.0)),
+            ("ops_seen", num(12.0)), // 2 admitted this session (base 10)
+            ("pending", num(1.0)),
+            ("queue_depth", num(4.0)),
+            ("slots", num(8.0)),
+            ("wait_signal_ns", num(900.0)),
+        ]);
+        proxy.apply_status(&st);
+        let s = &proxy.status;
+        assert_eq!(s.queue_depth.load(Ordering::Relaxed), 4);
+        assert_eq!(s.active.load(Ordering::Relaxed), 2);
+        assert_eq!(s.slots.load(Ordering::Relaxed), 8);
+        assert_eq!(s.wait_signal_ns.load(Ordering::Relaxed), 900);
+        assert_eq!(s.drafted.load(Ordering::Relaxed), 40);
+        assert_eq!(s.accepted.load(Ordering::Relaxed), 30);
+        // 5 written - (12 - 10) admitted + 1 in the worker channel
+        assert_eq!(s.pending.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn death_drain_steals_unstreamed_and_loses_streamed() {
+        let (mut proxy, rrx) = test_proxy(true);
+        let (streamed_tx, streamed_rx) = mpsc::channel();
+        let (fresh_tx, fresh_rx) = mpsc::channel();
+        let (cancel_tx, cancel_rx) = mpsc::channel();
+        proxy.outstanding.insert(
+            1,
+            TagEntry {
+                conn: 7,
+                resp: streamed_tx,
+                op: sample_generate(),
+                streamed: true,
+                id: Some(11),
+            },
+        );
+        proxy.outstanding.insert(
+            2,
+            TagEntry {
+                conn: 8,
+                resp: fresh_tx,
+                op: sample_generate(),
+                streamed: false,
+                id: None,
+            },
+        );
+        proxy.outstanding.insert(
+            3,
+            TagEntry {
+                conn: 7,
+                resp: cancel_tx,
+                op: Op::Cancel { id: 11 },
+                streamed: false,
+                id: None,
+            },
+        );
+        proxy.status.pending.store(3, Ordering::Relaxed);
+        assert!(proxy.on_death(&mut None, "test kill"));
+        // streamed generate: terminal replica_lost carrying its id
+        let lost = streamed_rx.try_recv().expect("streamed stream got a terminal");
+        assert!(lost.contains("replica_lost"), "got: {lost}");
+        assert!(lost.contains("\"id\":11"), "got: {lost}");
+        assert!(lost.contains("\"retry_after_ms\":250"), "got: {lost}");
+        // cancel: answered not_found locally
+        let nf = cancel_rx.try_recv().expect("cancel got an answer");
+        assert!(nf.contains("not_found"), "got: {nf}");
+        // un-streamed generate: stolen back into the router, then the
+        // lifecycle notice with exact counters
+        let mut saw_steal = false;
+        let mut saw_down = false;
+        while let Ok(msg) = rrx.try_recv() {
+            match msg {
+                Inbound::Op { conn, op: Op::Generate(_), .. } => {
+                    assert_eq!(conn, 8);
+                    saw_steal = true;
+                }
+                Inbound::ReplicaDown { replica, stolen, lost, .. } => {
+                    assert_eq!(replica, 3);
+                    assert_eq!(stolen, 1);
+                    assert_eq!(lost, 1);
+                    saw_down = true;
+                }
+                _ => panic!("unexpected router message"),
+            }
+        }
+        assert!(saw_steal && saw_down);
+        assert!(fresh_rx.try_recv().is_err(), "stolen stream got no frame");
+        assert_eq!(proxy.status.pending.load(Ordering::Relaxed), 0);
+        assert!(proxy.outstanding.is_empty());
+    }
+
+    #[test]
+    fn death_without_steal_answers_replica_lost_for_fresh_generates() {
+        let (mut proxy, rrx) = test_proxy(false);
+        let (fresh_tx, fresh_rx) = mpsc::channel();
+        proxy.outstanding.insert(
+            1,
+            TagEntry {
+                conn: 9,
+                resp: fresh_tx,
+                op: sample_generate(),
+                streamed: false,
+                id: None,
+            },
+        );
+        assert!(proxy.on_death(&mut None, "test kill"));
+        let lost = fresh_rx.try_recv().expect("fresh stream got a terminal");
+        assert!(lost.contains("replica_lost"), "got: {lost}");
+        assert!(!lost.contains("\"id\":"), "no id was ever assigned: {lost}");
+        match rrx.try_recv().expect("lifecycle notice") {
+            Inbound::ReplicaDown { stolen, lost, .. } => {
+                assert_eq!(stolen, 0);
+                assert_eq!(lost, 1);
+            }
+            _ => panic!("expected ReplicaDown"),
+        }
+    }
+
+    #[test]
+    fn terminal_frames_clear_tags_and_deltas_mark_streamed() {
+        let (mut proxy, _rrx) = test_proxy(true);
+        let (tx, rx) = mpsc::channel();
+        proxy.outstanding.insert(
+            4,
+            TagEntry { conn: 2, resp: tx, op: sample_generate(), streamed: false, id: None },
+        );
+        let payload = "{\"delta\":\"hi\",\"id\":19,\"n_tokens\":1}";
+        proxy.handle_line(&frame_line(4, payload), &mut None);
+        assert_eq!(rx.try_recv().expect("delta forwarded"), payload);
+        let e = proxy.outstanding.get(&4).expect("still outstanding");
+        assert!(e.streamed);
+        assert_eq!(e.id, Some(19));
+        let done = frame_line(4, "{\"done\":true,\"id\":19}");
+        proxy.handle_line(&done, &mut None);
+        assert!(rx.try_recv().expect("terminal forwarded").contains("done"));
+        assert!(proxy.outstanding.is_empty());
+        // unknown tags (e.g. acks for hygiene cancels) are dropped
+        proxy.handle_line(&frame_line(99, "{\"cancelled\":19}"), &mut None);
+    }
+}

@@ -1,0 +1,368 @@
+//! Distributed-transport suite (protocol v1.4): mock workers served
+//! over real TCP sockets behind `transport::connect_remote` proxies,
+//! driven through the same frontend conn threads + dynamic router as
+//! production — so the full cross-host surface (envelope round trip,
+//! heartbeat death detection, mid-stream `replica_lost`, queued-work
+//! stealing, worker rejoin accounting) runs in CI without artifacts.
+//!
+//! The last scenario is genuinely two-process: it spawns the real
+//! `qspec serve --worker --mock` binary, SIGKILLs it mid-stream, and
+//! respawns it on the same address — the closest thing to a cross-host
+//! failover a single CI box can stage.
+
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use qspec::config::{RouteKind, SloConfig};
+use qspec::coordinator::mock::FailureMode;
+use qspec::coordinator::EchoEngine;
+use qspec::server::transport::{self, RemoteOpts};
+use qspec::server::{
+    self, Action, AutoscaleConfig, AutoscaleCore, Inbound, PoolLifecycle, ReplicaSample,
+    RouterCore,
+};
+use qspec::util::prng::Pcg32;
+
+mod common;
+use common::{mock_tokenizer, Client};
+
+// ---------------------------------------------------------------------------
+// harness: in-thread workers + a real router/frontend over TCP proxies
+// ---------------------------------------------------------------------------
+
+/// Grab an ephemeral port the worker can (re)bind.
+fn free_addr() -> String {
+    let l = TcpListener::bind("127.0.0.1:0").expect("probe bind");
+    let addr = format!("127.0.0.1:{}", l.local_addr().unwrap().port());
+    drop(l);
+    addr
+}
+
+/// Run `serve_worker` over an `EchoEngine` on a detached thread —
+/// process-shaped (own listener, own id space pinned by the adopting
+/// router) without the process-spawn cost. The optional fault makes
+/// the engine die mid-session exactly like a crashing real worker.
+fn spawn_mock_worker(addr: &str, delay_ms: u64, failure: Option<FailureMode>) {
+    let addr = addr.to_string();
+    thread::spawn(move || {
+        let tok = mock_tokenizer();
+        let mut engine = EchoEngine::new(8, 512, delay_ms);
+        if let Some(mode) = failure {
+            engine = engine.with_failure(mode);
+        }
+        let _ = server::transport::serve_worker(&addr, &tok, &mut engine);
+    });
+}
+
+/// Poll-connect until the worker's listener is up. The probe itself is
+/// harmless: the worker reads EOF where the hello should be and goes
+/// back to accepting.
+fn wait_listening(addr: &str) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if TcpStream::connect(addr).is_ok() {
+            return;
+        }
+        assert!(Instant::now() < deadline, "worker at {addr} never came up");
+        thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Stand up the full remote-pool stack — one proxy per worker address,
+/// dynamic router thread, TCP frontend — and return the frontend
+/// address. Round-robin routing, default SLO, `retry_after_ms: 250`.
+fn start_router(worker_addrs: &[String], steal: bool, n_conns: usize) -> String {
+    let n = worker_addrs.len();
+    let (rtx, rrx) = mpsc::channel::<Inbound>();
+    let mut slots = Vec::new();
+    let mut statuses = Vec::new();
+    for (k, addr) in worker_addrs.iter().enumerate() {
+        wait_listening(addr);
+        let remote = transport::connect_remote(
+            k,
+            n,
+            addr,
+            rtx.clone(),
+            RemoteOpts { steal, retry_after_ms: 250 },
+        )
+        .expect("worker handshake");
+        statuses.push(remote.handle.status.clone());
+        slots.push(Some(remote.handle));
+    }
+    let mut core = RouterCore::new(statuses, RouteKind::RoundRobin, SloConfig::default());
+    thread::spawn(move || {
+        let mut slots = slots;
+        let mut life = PoolLifecycle::new();
+        let _ = server::pool::router_loop_dynamic(&rrx, &mut core, &mut slots, &mut life);
+    });
+    let listener = TcpListener::bind("127.0.0.1:0").expect("frontend bind");
+    let addr = format!("127.0.0.1:{}", listener.local_addr().unwrap().port());
+    thread::spawn(move || {
+        for conn in 0..n_conns as u64 {
+            let Ok((stream, _)) = listener.accept() else { return };
+            let rtx = rtx.clone();
+            thread::spawn(move || server::conn_thread(stream, conn + 1, rtx, 16, 512));
+        }
+    });
+    addr
+}
+
+/// Poll the router's pooled stats until the cumulative `restarts`
+/// counter reaches `want` (a worker rejoined) or the deadline passes.
+fn wait_for_restarts(c: &mut Client, want: i64, secs: u64) {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        c.send(r#"{"op":"stats"}"#);
+        let (stats, _) = c.recv_until(|j| j.get("restarts").is_some());
+        if stats.get("restarts").unwrap().as_i64().unwrap() >= want {
+            return;
+        }
+        assert!(Instant::now() < deadline, "no rejoin: restarts never reached {want}");
+        thread::sleep(Duration::from_millis(50));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenarios
+// ---------------------------------------------------------------------------
+
+/// A healthy remote worker is indistinguishable from a local replica:
+/// streaming and non-streaming generates round-trip through the proxy,
+/// and the pooled stats carry the replica table + v1.4 lifecycle
+/// counters (all zero while nothing has died).
+#[test]
+fn remote_round_trip_streams_and_stats() {
+    let waddr = free_addr();
+    spawn_mock_worker(&waddr, 0, None);
+    let front = start_router(&[waddr], true, 2);
+    let mut c = Client::connect(&front);
+
+    let (text, ntok, done) = c.stream_generate(
+        r#"{"op":"generate","prompt":"q: remote hello ?\n","max_tokens":12,"stream":true}"#,
+    );
+    assert!(!text.is_empty() && ntok > 0);
+    assert_eq!(done.get("finish_reason").unwrap().as_str(), Some("length"));
+
+    c.send(r#"{"op":"generate","prompt":"q: once more ?\n","max_tokens":8,"stream":false}"#);
+    let (j, _) = c.recv_until(|j| j.get("done").is_some() || j.get("error").is_some());
+    assert!(j.get("error").is_none(), "healthy remote must answer: {j:?}");
+    assert_eq!(j.get("tokens").unwrap().as_i64(), Some(8));
+
+    c.send(r#"{"op":"stats"}"#);
+    let (stats, _) = c.recv_until(|j| j.get("restarts").is_some());
+    assert_eq!(stats.get("restarts").unwrap().as_i64(), Some(0));
+    assert_eq!(stats.get("stolen").unwrap().as_i64(), Some(0));
+    assert_eq!(stats.get("lost_streams").unwrap().as_i64(), Some(0));
+    let reps = stats.get("replicas").unwrap().as_arr().unwrap();
+    assert_eq!(reps.len(), 1);
+}
+
+/// A worker that dies mid-stream turns into a structured, retryable
+/// error on the client: `replica_lost` carrying the pool's
+/// `retry_after_ms` hint — never a silent hang or a dropped socket.
+#[test]
+fn dead_worker_mid_stream_answers_replica_lost() {
+    let waddr = free_addr();
+    spawn_mock_worker(&waddr, 10, Some(FailureMode::DropConn(5)));
+    // steal off: even a not-yet-streamed generate answers replica_lost,
+    // so the assertion cannot race the first delta
+    let front = start_router(&[waddr], false, 2);
+    let mut c = Client::connect(&front);
+
+    c.send(r#"{"op":"generate","prompt":"q: doomed ?\n","max_tokens":400,"stream":true}"#);
+    let (j, _) = c.recv_until(|j| j.get("error").is_some());
+    let err = j.get("error").unwrap();
+    assert_eq!(err.get("code").unwrap().as_str(), Some("replica_lost"));
+    assert_eq!(err.get("retry_after_ms").unwrap().as_i64(), Some(250));
+}
+
+/// Work queued on a dying replica is not lost: the proxy re-admits its
+/// un-streamed generates to the router, which places them on the
+/// survivor — every request completes and the pooled `stolen` counter
+/// records the transfer.
+#[test]
+fn queued_work_is_stolen_to_a_survivor() {
+    let w0 = free_addr();
+    let w1 = free_addr();
+    // w0 is slow and dies after a couple of cycles; w1 is healthy
+    spawn_mock_worker(&w0, 30, Some(FailureMode::DropConn(2)));
+    spawn_mock_worker(&w1, 0, None);
+    let front = start_router(&[w0, w1], true, 2);
+    let mut c = Client::connect(&front);
+
+    for i in 0..6 {
+        c.send(&format!(
+            r#"{{"op":"generate","prompt":"q: job{i} ?\n","max_tokens":24,"stream":false}}"#
+        ));
+    }
+    // non-streamed generates are always steal-eligible, so all six
+    // must finish even though half were placed on the doomed replica
+    for _ in 0..6 {
+        let (j, _) = c.recv_until(|j| j.get("done").is_some() || j.get("error").is_some());
+        assert!(j.get("error").is_none(), "stolen generate must complete: {j:?}");
+        assert_eq!(j.get("tokens").unwrap().as_i64(), Some(24));
+    }
+    c.send(r#"{"op":"stats"}"#);
+    let (stats, _) = c.recv_until(|j| j.get("stolen").is_some());
+    assert!(
+        stats.get("stolen").unwrap().as_i64().unwrap() >= 1,
+        "the dead replica's queue must have been stolen: {stats:?}"
+    );
+}
+
+/// A worker whose engine faults drops the router connection but keeps
+/// its process (here: thread + listener) alive; the proxy reconnects
+/// with backoff and the router counts the rejoin in `restarts`.
+#[test]
+fn dropped_conn_worker_reconnects_and_counts_restart() {
+    let waddr = free_addr();
+    spawn_mock_worker(&waddr, 20, Some(FailureMode::DropConn(2)));
+    let front = start_router(&[waddr], true, 2);
+    let mut c = Client::connect(&front);
+
+    // admitting work trips the fault within a few cycles; the generate
+    // itself may be stolen into a shed (no survivor) — irrelevant here,
+    // the stats poll skips whatever frame it turns into
+    c.send(r#"{"op":"generate","prompt":"q: casualty ?\n","max_tokens":64,"stream":false}"#);
+    wait_for_restarts(&mut c, 1, 20);
+}
+
+/// Property test on the autoscaler core: whatever the (randomized)
+/// pool telemetry looks like, every emitted action targets a slot in a
+/// state that action is valid for, respects the min/max bounds, and
+/// keeps the retune knobs inside the engine's accepted ranges.
+#[test]
+fn autoscaler_actions_always_target_valid_slots() {
+    let mut rng = Pcg32::seeded(0x7ab5_0f2d);
+    for trial in 0..20u32 {
+        let cap = 1 + rng.below(6) as usize;
+        let min = 1 + rng.below(cap as u32) as usize;
+        let cfg = AutoscaleConfig {
+            min_replicas: min,
+            max_replicas: cap,
+            idle_ticks: 1 + rng.below(4),
+            dead_grace_ticks: 1 + rng.below(6),
+            retune_cooldown_ticks: rng.below(4),
+            ..AutoscaleConfig::default()
+        };
+        let mut core = AutoscaleCore::new(cfg.clone());
+        let mut shed = 0u64;
+        for _ in 0..400 {
+            shed += rng.below(3) as u64;
+            let samples: Vec<ReplicaSample> = (0..cap)
+                .map(|k| {
+                    let vacant = rng.below(4) == 0;
+                    let dead = !vacant && rng.below(4) == 0;
+                    let draining = !vacant && !dead && rng.below(4) == 0;
+                    ReplicaSample {
+                        replica: k,
+                        vacant,
+                        dead,
+                        draining,
+                        load: rng.below(5) as usize,
+                        wait_signal_ns: rng.below(200) as u64 * 1_000_000,
+                        acceptance: (rng.below(2) == 1).then(|| rng.next_f64()),
+                    }
+                })
+                .collect();
+            let occupied = samples.iter().filter(|s| !s.vacant && !s.dead).count();
+            for a in core.tick(&samples, shed) {
+                match a {
+                    Action::ScaleUp { replica } => {
+                        let s = &samples[replica];
+                        assert!(s.vacant, "trial {trial}: scale-up into a held slot");
+                        assert!(occupied < cfg.max_replicas, "trial {trial}: over capacity");
+                    }
+                    Action::Drain { replica } => {
+                        let s = &samples[replica];
+                        assert!(
+                            !s.vacant && !s.dead && !s.draining,
+                            "trial {trial}: drain of a non-routable slot"
+                        );
+                        assert!(occupied > cfg.min_replicas, "trial {trial}: below minimum");
+                    }
+                    Action::Retire { replica } => {
+                        let s = &samples[replica];
+                        assert!(
+                            s.dead
+                                || (s.draining
+                                    && s.load == 0
+                                    && occupied > cfg.min_replicas),
+                            "trial {trial}: retire of a live slot: {s:?}"
+                        );
+                    }
+                    Action::Reconfigure { replica, gamma, kv_bits } => {
+                        let s = &samples[replica];
+                        assert!(!s.vacant && !s.dead && !s.draining);
+                        assert!(s.acceptance.is_some(), "trial {trial}: retune before data");
+                        assert!(gamma.is_some() || kv_bits.is_some());
+                        if let Some(g) = gamma {
+                            assert!((1..=8).contains(&g), "trial {trial}: gamma {g}");
+                        }
+                        if let Some(b) = kv_bits {
+                            assert!((2..=8).contains(&b), "trial {trial}: kv_bits {b}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The real thing, end to end: a separate `qspec serve --worker --mock`
+/// process, SIGKILLed mid-stream (no goodbye of any kind), then a
+/// fresh process respawned on the same address. The client sees a
+/// structured `replica_lost`, the router counts the rejoin, and the
+/// pool serves again.
+#[test]
+fn two_process_worker_survives_kill9_and_respawn() {
+    let Some(bin) = option_env!("CARGO_BIN_EXE_qspec") else {
+        eprintln!("transport: CARGO_BIN_EXE_qspec unset (lib-only build) — skipping");
+        return;
+    };
+    let waddr = free_addr();
+    let spawn_worker = || -> Child {
+        Command::new(bin)
+            .args(["serve", "--worker", waddr.as_str(), "--mock", "--mock-delay-ms", "20"])
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn worker process")
+    };
+    let mut child = spawn_worker();
+    wait_listening(&waddr);
+    let front = start_router(&[waddr.clone()], false, 2);
+    let mut c = Client::connect(&front);
+
+    // healthy round trip across the process boundary
+    let (text, ntok, _) = c.stream_generate(
+        r#"{"op":"generate","prompt":"q: ipc ?\n","max_tokens":8,"stream":true}"#,
+    );
+    assert!(!text.is_empty());
+    assert_eq!(ntok, 8);
+
+    // kill -9 mid-stream: wait for the first delta so the stream is
+    // provably in flight, then SIGKILL the worker process
+    c.send(r#"{"op":"generate","prompt":"q: doomed ?\n","max_tokens":400,"stream":true}"#);
+    let _ = c.recv_until(|j| j.get("delta").is_some());
+    child.kill().expect("kill -9 worker");
+    let _ = child.wait();
+    let (j, _) = c.recv_until(|j| j.get("error").is_some());
+    let err = j.get("error").unwrap();
+    assert_eq!(err.get("code").unwrap().as_str(), Some("replica_lost"));
+    assert!(err.get("retry_after_ms").is_some());
+
+    // a fresh process on the same address: the proxy's backoff loop
+    // adopts it, the router counts the restart, service resumes
+    let mut child2 = spawn_worker();
+    wait_for_restarts(&mut c, 1, 30);
+    let (_, ntok2, _) = c.stream_generate(
+        r#"{"op":"generate","prompt":"q: back ?\n","max_tokens":6,"stream":true}"#,
+    );
+    assert_eq!(ntok2, 6);
+    let _ = child2.kill();
+    let _ = child2.wait();
+}
