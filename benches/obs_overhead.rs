@@ -1,0 +1,183 @@
+//! Observability overhead bench (protocol v1.5): the tracing ring's
+//! promise is "free when off", and this bench holds it to that. Two
+//! probes:
+//!
+//! 1. Raw hot-path cost: a fixed arithmetic work unit runs bare
+//!    (baseline), then with `instant`/`instant_with`/`scope` calls
+//!    against a *disabled* tracer, then against an enabled one. The
+//!    disabled column must land within noise of the baseline — the
+//!    bench asserts disabled <= 1.5x baseline, generous enough to
+//!    absorb CI jitter while still catching an accidental allocation
+//!    or lock on the off path (those show up as 10-100x, not 1.5x).
+//!
+//! 2. Engine end-to-end: identical `EchoEngine` workloads with the
+//!    core tracer off vs on, reporting tokens/s for both so the cost
+//!    of full lifecycle + phase instrumentation is visible in
+//!    bench_out/obs_overhead.json over time.
+//!
+//! Session-free; doubles as the CI smoke for the obs hot path
+//! (`QSPEC_BENCH_SMOKE=1`, wired into `ci.sh test`).
+
+use std::hint::black_box;
+use std::sync::Arc;
+use std::time::Instant;
+
+use qspec::bench::runner::{full_mode, smoke_mode};
+use qspec::bench::{write_json, Table};
+use qspec::coordinator::{EchoEngine, Engine};
+use qspec::obs::Tracer;
+use qspec::util::json::{arr, num, obj, s};
+
+/// The fixed unit of "real work" the tracer calls ride along with:
+/// enough arithmetic that one loop iteration is not pure call
+/// overhead, small enough that a tracer regression still dominates.
+fn work_unit(x: u64) -> u64 {
+    let mut v = x.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    for _ in 0..16 {
+        v ^= v >> 13;
+        v = v.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    }
+    v
+}
+
+/// Time `iters` work units with per-iteration tracer calls supplied
+/// by `hook`. Returns seconds.
+fn timed<F: FnMut(u64)>(iters: u64, mut hook: F) -> f64 {
+    let mut acc = 0u64;
+    let t0 = Instant::now();
+    for i in 0..iters {
+        acc = acc.wrapping_add(work_unit(black_box(i)));
+        hook(i);
+    }
+    black_box(acc);
+    t0.elapsed().as_secs_f64()
+}
+
+struct RawOut {
+    baseline_s: f64,
+    disabled_s: f64,
+    enabled_s: f64,
+}
+
+fn raw_hot_path(iters: u64) -> RawOut {
+    let off = Arc::new(Tracer::disabled(4096));
+    let on = Arc::new(Tracer::new(4096));
+
+    // interleave a warmup round so neither column pays first-touch costs
+    for t in [&off, &on] {
+        let t2 = t.clone();
+        timed(iters / 10 + 1, move |i| {
+            t2.instant("warmup", None, i);
+        });
+    }
+
+    let baseline_s = timed(iters, |_| {});
+    let off2 = off.clone();
+    let disabled_s = timed(iters, move |i| {
+        off2.instant("bench.tick", Some(i), i);
+        off2.instant_with("bench.detail", None, i, || format!("iter {i}"));
+        let _g = off2.scope("bench.span");
+    });
+    let on2 = on.clone();
+    let enabled_s = timed(iters, move |i| {
+        on2.instant("bench.tick", Some(i), i);
+        on2.instant_with("bench.detail", None, i, || format!("iter {i}"));
+        let _g = on2.scope("bench.span");
+    });
+
+    assert!(off.is_empty(), "disabled tracer must record nothing");
+    assert_eq!(off.dropped(), 0);
+    assert!(!on.is_empty(), "enabled tracer must record");
+
+    RawOut { baseline_s, disabled_s, enabled_s }
+}
+
+struct EngineOut {
+    tokens: u64,
+    tok_per_s: f64,
+}
+
+/// One full echo workload with the core tracer forced on or off;
+/// every request goes through submit -> run_to_completion, so the
+/// lifecycle instants and phase spans all sit on the measured path.
+fn engine_run(n_req: usize, max_tokens: usize, traced: bool) -> EngineOut {
+    let mut engine = EchoEngine::new(8, 512, 0);
+    engine.core().trace.set_enabled(traced);
+    let t0 = Instant::now();
+    let mut tokens = 0u64;
+    for i in 0..n_req {
+        let prompt: Vec<i32> = (0..8).map(|k| (i * 8 + k) as i32 % 100 + 1).collect();
+        engine.submit(prompt, max_tokens);
+    }
+    for fin in engine.run_to_completion().expect("echo engine never faults") {
+        tokens += fin.tokens.len() as u64;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    EngineOut { tokens, tok_per_s: tokens as f64 / wall.max(1e-9) }
+}
+
+fn main() {
+    let (iters, n_req) = if full_mode() {
+        (2_000_000u64, 256)
+    } else if smoke_mode() {
+        (50_000u64, 16) // ci.sh test: still exercises all three columns
+    } else {
+        (500_000u64, 64)
+    };
+    println!("obs overhead: {iters} raw work units/column, {n_req} echo requests/run");
+
+    let raw = raw_hot_path(iters);
+    let ns_per = |secs: f64| secs / iters as f64 * 1e9;
+    let rel = raw.disabled_s / raw.baseline_s.max(1e-12);
+
+    let mut table = Table::new(&["config", "ns/iter", "vs baseline"]);
+    table.row(&["baseline (no tracer)".into(), format!("{:.1}", ns_per(raw.baseline_s)), "1.00x".into()]);
+    table.row(&["tracing disabled".into(), format!("{:.1}", ns_per(raw.disabled_s)), format!("{rel:.2}x")]);
+    table.row(&[
+        "tracing enabled".into(),
+        format!("{:.1}", ns_per(raw.enabled_s)),
+        format!("{:.2}x", raw.enabled_s / raw.baseline_s.max(1e-12)),
+    ]);
+    table.print("Tracer hot path — per-iteration cost next to a fixed work unit");
+
+    // the acceptance bar: off-path tracing is within noise of no tracing
+    assert!(
+        rel <= 1.5,
+        "disabled tracing must be within noise of baseline (got {rel:.2}x)"
+    );
+
+    let mut etable = Table::new(&["tracer", "tokens", "tok/s"]);
+    let mut rows = Vec::new();
+    for traced in [false, true] {
+        let out = engine_run(n_req, 32, traced);
+        assert!(out.tokens > 0, "echo run must produce tokens");
+        let label = if traced { "on" } else { "off" };
+        etable.row(&[label.into(), out.tokens.to_string(), format!("{:.0}", out.tok_per_s)]);
+        rows.push(obj(vec![
+            ("config", s(&format!("engine_trace_{label}"))),
+            ("tokens", num(out.tokens as f64)),
+            ("tok_per_s", num(out.tok_per_s)),
+        ]));
+    }
+    etable.print("EchoEngine end-to-end — full lifecycle instrumentation off vs on");
+
+    let mut out_rows = vec![
+        obj(vec![
+            ("config", s("raw_baseline")),
+            ("ns_per_iter", num(ns_per(raw.baseline_s))),
+            ("vs_baseline", num(1.0)),
+        ]),
+        obj(vec![
+            ("config", s("raw_disabled")),
+            ("ns_per_iter", num(ns_per(raw.disabled_s))),
+            ("vs_baseline", num(rel)),
+        ]),
+        obj(vec![
+            ("config", s("raw_enabled")),
+            ("ns_per_iter", num(ns_per(raw.enabled_s))),
+            ("vs_baseline", num(raw.enabled_s / raw.baseline_s.max(1e-12))),
+        ]),
+    ];
+    out_rows.extend(rows);
+    write_json("obs_overhead", &arr(out_rows)).unwrap();
+}

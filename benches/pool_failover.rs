@@ -86,7 +86,7 @@ fn run_mode(steal: bool, n_req: usize) -> RunOut {
             2,
             addr,
             rtx.clone(),
-            RemoteOpts { steal, retry_after_ms: 100 },
+            RemoteOpts { steal, retry_after_ms: 100, ..RemoteOpts::default() },
         )
         .expect("worker handshake");
         statuses.push(remote.handle.status.clone());

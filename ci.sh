@@ -5,13 +5,14 @@
 #   ./ci.sh fast     # build + tests only (skip fmt/clippy/doc)
 #   ./ci.sh lint     # fmt + clippy + doc only (skip build/tests)
 #   ./ci.sh test     # the cross-engine conformance + property suites
-#                    # (incl. the session-free pool/router v1.3 suite
-#                    # and the paged-KV/prefix-cache properties)
-#                    # with --nocapture summaries, then bench smokes:
-#                    # pool_router + prefix_reuse always (mock
-#                    # replicas/engines, no artifacts needed);
-#                    # sched_qos + hierspec_selfspec when artifacts/
-#                    # is present
+#                    # (incl. the session-free pool/router v1.3 suite,
+#                    # the paged-KV/prefix-cache properties, and the
+#                    # v1.5 observability suite) with --nocapture
+#                    # summaries, then bench smokes: pool_router +
+#                    # prefix_reuse + pool_failover + obs_overhead
+#                    # always (mock replicas/engines, no artifacts
+#                    # needed); sched_qos + hierspec_selfspec when
+#                    # artifacts/ is present
 #
 # Integration tests skip themselves when artifacts/ is absent; run
 # `make artifacts` first for full end-to-end coverage.
@@ -33,20 +34,24 @@ if [ "${1:-}" = "test" ]; then
     # v1.3 scenarios + the v1.4 distributed-transport suite (TCP
     # workers, mid-stream death, stealing, rejoin, autoscaler
     # properties) + acceptance losslessness + quantized-KV shadow
-    # and paged-KV/prefix-cache properties, with per-engine summaries
+    # and paged-KV/prefix-cache properties + the v1.5 observability
+    # suite (tracing-ring properties, metrics/dump wire ops, flight
+    # recorder), with per-engine summaries
     cargo test --release \
         --test engine_trait --test pool_router --test transport \
         --test acceptance_props --test kv_quant_props \
-        --test paged_kv_props \
+        --test paged_kv_props --test obs_props \
         -- --nocapture
     # the pool-router bench races the route policies over mock
     # replicas; the prefix-reuse bench races the paged KV + radix
     # cache against cold prefill; the pool-failover bench kills a TCP
-    # worker mid-burst with stealing on vs off: all session-free, so
+    # worker mid-burst with stealing on vs off; the obs-overhead bench
+    # asserts disabled tracing costs nothing: all session-free, so
     # they smoke unconditionally
     QSPEC_BENCH_SMOKE=1 cargo bench --bench pool_router
     QSPEC_BENCH_SMOKE=1 cargo bench --bench prefix_reuse
     QSPEC_BENCH_SMOKE=1 cargo bench --bench pool_failover
+    QSPEC_BENCH_SMOKE=1 cargo bench --bench obs_overhead
 
     # --- two-process failover smoke (protocol v1.4) ----------------
     # the real binary as a standalone worker process on loopback,
@@ -69,6 +74,7 @@ if [ "${1:-}" = "test" ]; then
     else
         WPORT=$((21000 + RANDOM % 20000))
         FPORT=$((WPORT + 1))
+        MPORT=$((WPORT + 2))
         "$BIN" serve --worker 127.0.0.1:"$WPORT" --mock --mock-delay-ms 5 \
             >/dev/null 2>&1 &
         W1=$!
@@ -78,6 +84,7 @@ if [ "${1:-}" = "test" ]; then
             sleep 0.1
         done
         "$BIN" serve --port "$FPORT" --replica-addr 127.0.0.1:"$WPORT" \
+            --metrics-addr 127.0.0.1:"$MPORT" \
             >/dev/null 2>&1 &
         SMOKE_PIDS="$SMOKE_PIDS $!"
         for _ in $(seq 1 100); do
@@ -93,6 +100,24 @@ if [ "${1:-}" = "test" ]; then
             *'"done"'*) ;;
             *) echo "smoke: bad pre-kill response: $RESP" >&2; exit 1 ;;
         esac
+        # --- metrics-endpoint smoke (protocol v1.5) ----------------
+        # plain-HTTP scrape of the router's --metrics-addr: the body
+        # must be well-formed Prometheus exposition text naming the
+        # request we just ran. bash /dev/tcp again — no curl needed.
+        for _ in $(seq 1 100); do
+            (echo >/dev/tcp/127.0.0.1/"$MPORT") 2>/dev/null && break
+            sleep 0.1
+        done
+        exec 4<>/dev/tcp/127.0.0.1/"$MPORT" \
+            || { echo "smoke: metrics endpoint not listening" >&2; exit 1; }
+        printf 'GET /metrics HTTP/1.0\r\n\r\n' >&4
+        METRICS=$(cat <&4)
+        exec 4>&- 4<&- 2>/dev/null || true
+        case "$METRICS" in
+            *'200 OK'*'# TYPE'*qspec_requests_done_total*) ;;
+            *) echo "smoke: bad metrics scrape: $METRICS" >&2; exit 1 ;;
+        esac
+        echo "ci.sh: metrics-endpoint smoke passed"
         kill -9 "$W1"
         "$BIN" serve --worker 127.0.0.1:"$WPORT" --mock --mock-delay-ms 5 \
             >/dev/null 2>&1 &

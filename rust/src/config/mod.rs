@@ -390,6 +390,18 @@ pub struct ServeConfig {
     /// re-admit a dead replica's queued (never-streamed) generates to
     /// live replicas (`--no-steal` downgrades them to `replica_lost`).
     pub steal: bool,
+    /// v1.5 (`--metrics-addr host:port`): serve the pooled stats as
+    /// Prometheus text over plain HTTP for scrapers, alongside the
+    /// line-protocol `{"op":"metrics"}`. Router-only; off by default.
+    pub metrics_addr: Option<String>,
+    /// v1.5 (`--heartbeat-ms`): silence budget before the router's
+    /// proxy declares a remote worker dead; the ping tick derives from
+    /// it (budget/8, floored at 50 ms). Default 2000 preserves the
+    /// historical 250 ms tick / 2 s timeout.
+    pub heartbeat_ms: u64,
+    /// v1.5 (`--status-push-ms`, worker-only): cadence of the worker's
+    /// unsolicited status pushes. Default 100 ms, as before.
+    pub status_push_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -421,6 +433,9 @@ impl Default for ServeConfig {
             min_replicas: None,
             max_replicas: None,
             steal: true,
+            metrics_addr: None,
+            heartbeat_ms: crate::server::transport::DEFAULT_HEARTBEAT_MS,
+            status_push_ms: crate::server::transport::DEFAULT_STATUS_PUSH_MS,
         }
     }
 }
@@ -508,6 +523,11 @@ impl ServeConfig {
                         .into(),
                 ));
             }
+            if self.metrics_addr.is_some() {
+                return Err(QspecError::Config(
+                    "--metrics-addr is a router flag; scrape the router, not a worker".into(),
+                ));
+            }
         } else if self.mock {
             return Err(QspecError::Config(
                 "--mock serves the session-free echo engine and requires --worker".into(),
@@ -554,6 +574,17 @@ impl ServeConfig {
                 "at most {MAX_REPLICAS} --engine entries (got {})",
                 self.engines.len()
             )));
+        }
+        if self.heartbeat_ms == 0 {
+            return Err(QspecError::Config("--heartbeat-ms must be > 0".into()));
+        }
+        if self.status_push_ms == 0 {
+            return Err(QspecError::Config("--status-push-ms must be > 0".into()));
+        }
+        if let Some(m) = &self.metrics_addr {
+            if m.is_empty() {
+                return Err(QspecError::Config("--metrics-addr needs a bind address".into()));
+            }
         }
         Self::validate_engine(&self.engine)?;
         for kind in &self.engines {
@@ -717,6 +748,32 @@ mod tests {
         let mut c = ServeConfig::default();
         c.mock = true;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn v1_5_observability_knobs_validate() {
+        // defaults preserve the historical timing constants
+        let c = ServeConfig::default();
+        assert_eq!(c.heartbeat_ms, 2000);
+        assert_eq!(c.status_push_ms, 100);
+        assert!(c.metrics_addr.is_none());
+        // cadences must be positive
+        let mut c = ServeConfig::default();
+        c.heartbeat_ms = 0;
+        assert!(c.validate().is_err(), "zero heartbeat");
+        let mut c = ServeConfig::default();
+        c.status_push_ms = 0;
+        assert!(c.validate().is_err(), "zero status push");
+        // the metrics endpoint is a router flag
+        let mut c = ServeConfig::default();
+        c.metrics_addr = Some("127.0.0.1:9100".into());
+        assert!(c.validate().is_ok());
+        c.metrics_addr = Some(String::new());
+        assert!(c.validate().is_err(), "empty metrics bind address");
+        let mut c = ServeConfig::default();
+        c.worker = Some("127.0.0.1:7311".into());
+        c.metrics_addr = Some("127.0.0.1:9100".into());
+        assert!(c.validate().is_err(), "--metrics-addr is a router flag");
     }
 
     #[test]

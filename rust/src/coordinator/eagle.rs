@@ -239,7 +239,7 @@ impl<'s> EagleEngine<'s> {
             let dec = greedy_accept(drafts, vt);
             self.core.metrics.drafted += g as u64;
             self.core.metrics.accepted += dec.accepted as u64;
-            self.core.metrics.accept_len.add(dec.accepted as f64);
+            self.core.metrics.record_accept(dec.accepted as u64);
             self.core.commit(i, &dec.committed, g, out);
         }
         self.core.metrics.add_phase(PhaseKind::Host, timer.elapsed_ns(), 0);

@@ -34,6 +34,7 @@
 //!   `--sched` and the shedding thresholds identically.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::{ClassSlo, EngineKind, SchedKind, ServeConfig, SloConfig};
@@ -42,6 +43,7 @@ use crate::error::{QspecError, Result};
 use crate::kvcache::SlotManager;
 use crate::metrics::EngineMetrics;
 use crate::model::tokenizer::{EOS, PAD};
+use crate::obs::Tracer;
 use crate::runtime::Session;
 
 use super::autoregressive::ArEngine;
@@ -302,6 +304,11 @@ pub struct BatchCore {
     /// strides by the pool size so ids stay unique pool-wide.
     id_stride: u64,
     inflight: HashMap<u64, Inflight>,
+    /// Trace ring (obs, protocol v1.5): `request.*` lifecycle instants
+    /// land here and the engines open `phase.*` spans against it; the
+    /// flight recorder snapshots it on death. `Arc` so phase code can
+    /// hold an owning [`crate::obs::SpanScope`] while mutating the core.
+    pub trace: Arc<Tracer>,
 }
 
 impl BatchCore {
@@ -316,6 +323,7 @@ impl BatchCore {
             next_id: 0,
             id_stride: 1,
             inflight: HashMap::new(),
+            trace: Arc::new(Tracer::from_env()),
         }
     }
 
@@ -380,6 +388,7 @@ impl BatchCore {
             id,
             Inflight { submitted: r.arrival, queue_ns: 0, prompt_tokens },
         );
+        self.trace.instant("request.submitted", Some(id), prompt_tokens as u64);
         self.queue.push(r);
         id
     }
@@ -547,6 +556,7 @@ impl BatchCore {
                     None => (wait_ns, req.prompt.len()),
                 };
                 self.metrics.deadline_expired += 1;
+                self.trace.instant("request.expired", Some(req.id), 0);
                 out.push(StepEvent::Done(Finished {
                     id: req.id,
                     tokens: Vec::new(),
@@ -587,6 +597,7 @@ impl BatchCore {
                 self.metrics.prefix_hit_tokens += cached as u64;
             }
             uncached.push(plen - cached);
+            self.trace.instant("request.admitted", Some(req.id), plen as u64);
             admitted.push((idx, req));
         }
         if self.queue.is_empty() {
@@ -707,6 +718,7 @@ impl BatchCore {
             };
             self.metrics.req_latency.record(latency_ns as u64);
             self.metrics.requests_done += 1;
+            self.trace.instant("request.done", Some(id), tokens.len() as u64);
             out.push(StepEvent::Done(Finished {
                 id,
                 tokens,
@@ -738,6 +750,7 @@ impl BatchCore {
                 None => (queue_ns, req.prompt.len()),
             };
             self.metrics.cancelled += 1;
+            self.trace.instant("request.cancelled", Some(id), 0);
             return Some(Finished {
                 id,
                 tokens: Vec::new(),
@@ -754,6 +767,7 @@ impl BatchCore {
             None => (0, 0, 0),
         };
         self.metrics.cancelled += 1;
+        self.trace.instant("request.cancelled", Some(id), tokens.len() as u64);
         Some(Finished {
             id,
             tokens,
@@ -1280,6 +1294,23 @@ mod tests {
         c.submit_request(qos(vec![3], 4, 3));
         c.submit_request(qos(vec![4], 4, 3));
         assert_eq!(c.queue_depth_by_priority(), [1, 1, 0, 2]);
+    }
+
+    #[test]
+    fn request_lifecycle_is_traced() {
+        let mut e = MockEngine { core: core(1) };
+        e.core.trace.set_enabled(true);
+        let id = e.submit(vec![1, 2], 2);
+        e.run_to_completion().unwrap();
+        let evs = e.core.trace.snapshot();
+        let names: Vec<&str> =
+            evs.iter().filter(|ev| ev.request == Some(id)).map(|ev| ev.name).collect();
+        assert!(names.contains(&"request.submitted"), "{names:?}");
+        assert!(names.contains(&"request.admitted"), "{names:?}");
+        assert!(names.contains(&"request.done"), "{names:?}");
+        // submitted carries the prompt length, done the output length
+        let sub = evs.iter().find(|ev| ev.name == "request.submitted").unwrap();
+        assert_eq!(sub.tokens, 2);
     }
 
     #[test]

@@ -142,6 +142,7 @@ impl<'s> HierSpecEngine<'s> {
             None => return Ok(()),
         };
         let p = self.core.slots.prefill_t();
+        let span = self.core.trace.scope("phase.prefill");
         let timer = PhaseTimer::start();
         let kv = self.kv.take().expect("kv");
         let r = self
@@ -156,6 +157,7 @@ impl<'s> HierSpecEngine<'s> {
             .charge(Mode::W4A16, Phase::Chunk, pb.admitted.len(), pb.uncached_tokens(), p);
         self.core.metrics.add_phase(PhaseKind::Prefill, timer.elapsed_ns(), virt);
         self.core.finish_prefill(&pb, &r.tok, out);
+        drop(span);
         Ok(())
     }
 
@@ -194,6 +196,7 @@ impl<'s> HierSpecEngine<'s> {
 
         // ---- draft phase: gamma sequential W4A16 decode steps over the
         // quantized shadow tier ------------------------------------------
+        let span = self.core.trace.scope("phase.draft");
         let timer = PhaseTimer::start();
         let mut kv = self.kv.take().expect("kv");
         let mut cur = sb.tok.clone();
@@ -240,9 +243,11 @@ impl<'s> HierSpecEngine<'s> {
         }
         self.kv = Some(kv);
         self.core.metrics.add_phase(PhaseKind::Draft, timer.elapsed_ns(), virt);
+        drop(span);
 
         // ---- verify phase: one W4A16 parallel chunk over full
         // precision; its KV writes overwrite the draft's entries --------
+        let span = self.core.trace.scope("phase.verify");
         let mut vtokens = vec![PAD; b * (g + 1)];
         for slot in 0..b {
             vtokens[slot * (g + 1)] = sb.tok[slot];
@@ -261,8 +266,10 @@ impl<'s> HierSpecEngine<'s> {
             .cost
             .charge(Mode::W4A16, Phase::Chunk, sb.active.len(), g + 1, sb.mean_ctx);
         self.core.metrics.add_phase(PhaseKind::Verify, timer.elapsed_ns(), virt);
+        drop(span);
 
         // ---- acceptance + commit (requantizes the shadow) --------------
+        let span = self.core.trace.scope("phase.commit");
         let timer = PhaseTimer::start();
         for &i in &sb.active {
             let dr = &drafts[i * g..(i + 1) * g];
@@ -270,7 +277,7 @@ impl<'s> HierSpecEngine<'s> {
             let dec = greedy_accept(dr, vt);
             self.core.metrics.drafted += g as u64;
             self.core.metrics.accepted += dec.accepted as u64;
-            self.core.metrics.accept_len.add(dec.accepted as f64);
+            self.core.metrics.record_accept(dec.accepted as u64);
             if self.cfg.collect_similarity {
                 for j in 0..g {
                     if self.samples.len() < 100_000 {
@@ -285,6 +292,7 @@ impl<'s> HierSpecEngine<'s> {
             self.core.commit(i, &dec.committed, g, out);
         }
         self.core.metrics.add_phase(PhaseKind::Host, timer.elapsed_ns(), 0);
+        drop(span);
         Ok(())
     }
 }

@@ -209,6 +209,7 @@ impl Engine for EchoEngine {
                 if self.acceptance.is_some() {
                     self.core.metrics.drafted += gamma as u64;
                     self.core.metrics.accepted += accepted as u64;
+                    self.core.metrics.record_accept(accepted as u64);
                 }
                 self.core.commit(i, &toks, k, &mut out);
             }

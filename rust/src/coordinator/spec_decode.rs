@@ -125,6 +125,7 @@ impl<'s> QSpecEngine<'s> {
             None => return Ok(()),
         };
         let p = self.core.slots.prefill_t();
+        let span = self.core.trace.scope("phase.prefill");
 
         let timer = PhaseTimer::start();
         let kv = self.kv.take().expect("kv");
@@ -152,6 +153,7 @@ impl<'s> QSpecEngine<'s> {
         }
 
         self.core.finish_prefill(&pb, &r.tok, out);
+        drop(span);
         Ok(())
     }
 
@@ -165,6 +167,7 @@ impl<'s> QSpecEngine<'s> {
         let g = self.cfg.gamma;
 
         // ---- draft phase (W4A4 fused loop) -----------------------------
+        let span = self.core.trace.scope("phase.draft");
         let timer = PhaseTimer::start();
         let dkv = if self.cfg.overwrite {
             self.kv.take().expect("kv")
@@ -186,8 +189,10 @@ impl<'s> QSpecEngine<'s> {
                 .charge(Mode::W4A4, Phase::Decode, sb.active.len(), 1, sb.mean_ctx);
         }
         self.core.metrics.add_phase(PhaseKind::Draft, timer.elapsed_ns(), virt);
+        drop(span);
 
         // ---- verify phase (W4A16 parallel chunk; KV-overwriting) -------
+        let span = self.core.trace.scope("phase.verify");
         let mut vtokens = vec![PAD; b * (g + 1)];
         for slot in 0..b {
             vtokens[slot * (g + 1)] = sb.tok[slot];
@@ -206,8 +211,10 @@ impl<'s> QSpecEngine<'s> {
             .cost
             .charge(Mode::W4A16, Phase::Chunk, sb.active.len(), g + 1, sb.mean_ctx);
         self.core.metrics.add_phase(PhaseKind::Verify, timer.elapsed_ns(), virt);
+        drop(span);
 
         // ---- acceptance + commit ---------------------------------------
+        let span = self.core.trace.scope("phase.commit");
         let timer = PhaseTimer::start();
         for &i in &sb.active {
             let drafts = &d.toks[i * g..(i + 1) * g];
@@ -215,7 +222,7 @@ impl<'s> QSpecEngine<'s> {
             let dec = greedy_accept(drafts, vt);
             self.core.metrics.drafted += g as u64;
             self.core.metrics.accepted += dec.accepted as u64;
-            self.core.metrics.accept_len.add(dec.accepted as f64);
+            self.core.metrics.record_accept(dec.accepted as u64);
             if self.cfg.collect_similarity {
                 for j in 0..g {
                     if self.samples.len() < 100_000 {
@@ -230,6 +237,7 @@ impl<'s> QSpecEngine<'s> {
             self.core.commit(i, &dec.committed, g, out);
         }
         self.core.metrics.add_phase(PhaseKind::Host, timer.elapsed_ns(), 0);
+        drop(span);
         Ok(())
     }
 }

@@ -12,7 +12,8 @@
 //!   FCFS / priority-with-aging / SJF / EDF, plus per-class SLO-based
 //!   shedding), continuous batcher, speculative scheduler with
 //!   KV-overwriting, AR + EAGLE baselines, L20 roofline cost model,
-//!   metrics, workloads, TCP server (protocol v1.3). All engines
+//!   metrics, workloads, observability (tracing / Prometheus export /
+//!   flight recorder), TCP server (protocol v1.5). All engines
 //!   implement `coordinator::Engine` over a shared
 //!   `coordinator::BatchCore`; drivers hold `&mut dyn Engine` built by
 //!   `coordinator::build_engine`.
@@ -32,6 +33,7 @@ pub mod evalsuite;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod sampler;
 pub mod server;

@@ -76,6 +76,11 @@ pub struct EngineMetrics {
     pub queue_wait: LogHistogram,
     /// per-cycle accepted-length summary
     pub accept_len: Summary,
+    /// per-cycle accepted-length *distribution* (log-bucketed): the
+    /// summary above carries mean/std, this carries the shape — what
+    /// fraction of cycles accepted 0, 1, ..., gamma drafts — for the
+    /// Prometheus export and the acceptance-tuning loops.
+    pub accept_hist: LogHistogram,
 }
 
 impl EngineMetrics {
@@ -85,6 +90,15 @@ impl EngineMetrics {
 
     fn idx(p: PhaseKind) -> usize {
         PhaseKind::ALL.iter().position(|&x| x == p).unwrap()
+    }
+
+    /// Record one verify cycle's accepted-draft count in both the
+    /// summary (mean/std) and the distribution histogram. The engines'
+    /// acceptance loops call this instead of touching `accept_len`
+    /// directly so the two views can never drift apart.
+    pub fn record_accept(&mut self, accepted: u64) {
+        self.accept_len.add(accepted as f64);
+        self.accept_hist.record(accepted);
     }
 
     pub fn add_phase(&mut self, p: PhaseKind, wall_ns: u128, virt_ns: u128) {
@@ -287,6 +301,19 @@ mod tests {
         // an enabled cache with no hits still reports the number
         m.prefix_hit_tokens = 0;
         assert_eq!(m.to_json().get("prefix_hit_rate"), Some(&num(0.0)));
+    }
+
+    #[test]
+    fn record_accept_feeds_summary_and_histogram() {
+        let mut m = EngineMetrics::new();
+        for a in [0u64, 2, 2, 4] {
+            m.record_accept(a);
+        }
+        assert_eq!(m.accept_len.count(), 4);
+        assert!((m.accept_len.mean() - 2.0).abs() < 1e-9);
+        assert_eq!(m.accept_hist.count(), 4);
+        let total: u64 = m.accept_hist.nonzero_buckets().map(|(_, c)| c).sum();
+        assert_eq!(total, 4);
     }
 
     #[test]

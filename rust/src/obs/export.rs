@@ -1,0 +1,388 @@
+//! Prometheus text exposition over a `stats` frame.
+//!
+//! The renderer is deliberately *frame-shaped*, not engine-shaped: it
+//! takes the JSON `stats` snapshot (a per-replica v1.1 frame or the
+//! pooled v1.5 frame — same keys, the pooled one adds lifecycle
+//! counters and a `replicas` array) and emits text-format metrics.
+//! That keeps one code path for all three serving surfaces — the
+//! `{"op":"metrics"}` wire op on a bare engine loop, the same op on
+//! the pool router, and the router's `--metrics-addr` HTTP scrape
+//! endpoint — and means the exporter can never disagree with what
+//! `stats` reports.
+//!
+//! Conventions: counters get a `_total` suffix, time gauges are
+//! converted to seconds, the sparse `hist` field (v1.5 `stats`
+//! addition: `[upper_bound, count]` pairs per histogram) renders as
+//! cumulative Prometheus histograms with a `+Inf` bucket, and
+//! `qspec_build_info` carries version / protocol / engine / sched /
+//! route as labels on a constant `1`.
+
+use crate::util::json::Json;
+
+/// `Content-Type` the HTTP scrape endpoint answers with.
+pub const PROMETHEUS_CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+fn esc(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn header(out: &mut String, name: &str, help: &str, kind: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+fn sample(out: &mut String, name: &str, labels: &[(&str, String)], v: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, val)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{k}=\"{}\"", esc(val)));
+        }
+        out.push('}');
+    }
+    out.push_str(&format!(" {v}\n"));
+}
+
+fn num_field(stats: &Json, key: &str) -> Option<f64> {
+    stats.get(key).and_then(Json::as_f64)
+}
+
+/// Emit one top-level numeric field as a counter/gauge, silently
+/// skipping fields the frame doesn't carry (a bare engine frame has
+/// no lifecycle counters; `null` rates are simply absent).
+fn metric(out: &mut String, stats: &Json, key: &str, name: &str, help: &str, kind: &str) {
+    if let Some(v) = num_field(stats, key) {
+        header(out, name, help, kind);
+        sample(out, name, &[], v);
+    }
+}
+
+/// Scaled variant (ms -> s conversions).
+fn metric_scaled(
+    out: &mut String,
+    stats: &Json,
+    key: &str,
+    name: &str,
+    help: &str,
+    kind: &str,
+    scale: f64,
+) {
+    if let Some(v) = num_field(stats, key) {
+        header(out, name, help, kind);
+        sample(out, name, &[], v * scale);
+    }
+}
+
+/// Render one sparse `[upper, count]` histogram as cumulative
+/// Prometheus buckets (`scale` converts the stored upper bounds, e.g.
+/// ns -> s). `_sum` is approximated from the bucket upper bounds —
+/// exact sums are not tracked, and the approximation errs high by at
+/// most one bucket width (~6%).
+fn histogram(out: &mut String, name: &str, help: &str, pairs: &[Json], scale: f64) {
+    header(out, name, help, "histogram");
+    let mut cum = 0.0;
+    let mut sum = 0.0;
+    for p in pairs {
+        let Some([le, count]) = p.as_arr().and_then(|a| {
+            Some([a.first()?.as_f64()?, a.get(1)?.as_f64()?])
+        }) else {
+            continue;
+        };
+        cum += count;
+        sum += le * scale * count;
+        sample(out, &format!("{name}_bucket"), &[("le", format!("{}", le * scale))], cum);
+    }
+    sample(out, &format!("{name}_bucket"), &[("le", "+Inf".to_string())], cum);
+    sample(out, &format!("{name}_sum"), &[], sum);
+    sample(out, &format!("{name}_count"), &[], cum);
+}
+
+/// Render a `stats` frame as Prometheus text. Works on any frame
+/// shape the server produces; unknown/missing fields are skipped, so
+/// v1.4-era cached snapshots degrade gracefully.
+pub fn prometheus(stats: &Json) -> String {
+    let mut out = String::new();
+
+    // build identity as labels on a constant: this is how scrapes and
+    // dashboards attribute a time series to a build/config
+    let mut labels: Vec<(&str, String)> = Vec::new();
+    for key in ["version", "protocol", "engine", "sched", "route"] {
+        if let Some(v) = stats.get(key).and_then(Json::as_str) {
+            labels.push((key, v.to_string()));
+        }
+    }
+    header(&mut out, "qspec_build_info", "build/config identity (constant 1)", "gauge");
+    sample(&mut out, "qspec_build_info", &labels, 1.0);
+
+    metric_scaled(
+        &mut out,
+        stats,
+        "uptime_ms",
+        "qspec_uptime_seconds",
+        "seconds since process start",
+        "gauge",
+        1e-3,
+    );
+
+    // cumulative counters
+    for (key, name, help) in [
+        ("requests_done", "qspec_requests_done_total", "requests finished"),
+        ("cancelled", "qspec_cancelled_total", "requests cancelled mid-flight"),
+        ("shed", "qspec_shed_total", "admissions rejected by the SLO"),
+        ("deadline_expired", "qspec_deadline_expired_total", "requests expired in queue"),
+        ("tokens_out", "qspec_tokens_out_total", "tokens generated"),
+        ("drafted", "qspec_drafted_total", "draft tokens proposed"),
+        ("accepted", "qspec_accepted_total", "draft tokens accepted"),
+        ("prefix_queries", "qspec_prefix_queries_total", "prefix-cache lookups"),
+        ("prefix_hit_tokens", "qspec_prefix_hit_tokens_total", "prompt tokens served from cache"),
+        // pool lifecycle (router frames only)
+        ("restarts", "qspec_restarts_total", "replicas replaced after death"),
+        ("stolen", "qspec_stolen_total", "queued requests re-admitted from dead replicas"),
+        ("lost_streams", "qspec_lost_streams_total", "in-flight streams cut by replica death"),
+        ("scale_ups", "qspec_scale_ups_total", "vacant slots filled by the autoscaler"),
+        ("scale_downs", "qspec_scale_downs_total", "replicas retired to vacancy"),
+    ] {
+        metric(&mut out, stats, key, name, help, "counter");
+    }
+
+    // live gauges
+    metric(&mut out, stats, "queue_depth", "qspec_queue_depth", "requests queued", "gauge");
+    metric(&mut out, stats, "active", "qspec_active_requests", "requests generating", "gauge");
+    metric(&mut out, stats, "slots", "qspec_slots", "generation slot capacity", "gauge");
+    metric(
+        &mut out,
+        stats,
+        "acceptance_rate",
+        "qspec_acceptance_rate",
+        "accepted/drafted ratio",
+        "gauge",
+    );
+    metric(
+        &mut out,
+        stats,
+        "prefix_hit_rate",
+        "qspec_prefix_hit_tokens_per_query",
+        "mean cached prompt tokens per lookup",
+        "gauge",
+    );
+    metric(
+        &mut out,
+        stats,
+        "wall_tok_s",
+        "qspec_wall_tokens_per_second",
+        "wall-clock generation throughput",
+        "gauge",
+    );
+    metric(
+        &mut out,
+        stats,
+        "virt_tok_s",
+        "qspec_virt_tokens_per_second",
+        "cost-model generation throughput",
+        "gauge",
+    );
+    for (key, name, help) in [
+        ("oldest_queued_ms", "qspec_oldest_queued_seconds", "age of the oldest queued request"),
+        ("queue_p50_ms", "qspec_queue_wait_p50_seconds", "median queue wait"),
+        ("queue_p99_ms", "qspec_queue_wait_p99_seconds", "p99 queue wait"),
+        ("latency_p50_ms", "qspec_request_latency_p50_seconds", "median request latency"),
+        ("latency_p99_ms", "qspec_request_latency_p99_seconds", "p99 request latency"),
+    ] {
+        metric_scaled(&mut out, stats, key, name, help, "gauge", 1e-3);
+    }
+
+    if let Some(depths) = stats.get("queue_depth_by_priority").and_then(Json::as_arr) {
+        header(
+            &mut out,
+            "qspec_queue_depth_class",
+            "requests queued per priority class",
+            "gauge",
+        );
+        for (c, d) in depths.iter().enumerate() {
+            if let Some(v) = d.as_f64() {
+                sample(&mut out, "qspec_queue_depth_class", &[("class", c.to_string())], v);
+            }
+        }
+    }
+
+    // v1.5 histograms: sparse [upper, count] pairs from the frame
+    if let Some(h) = stats.get("hist") {
+        if let Some(p) = h.get("req_latency_ns").and_then(Json::as_arr) {
+            histogram(
+                &mut out,
+                "qspec_request_latency_seconds",
+                "end-to-end request latency",
+                p,
+                1e-9,
+            );
+        }
+        if let Some(p) = h.get("queue_wait_ns").and_then(Json::as_arr) {
+            histogram(
+                &mut out,
+                "qspec_queue_wait_seconds",
+                "submit-to-admission queue wait",
+                p,
+                1e-9,
+            );
+        }
+        if let Some(p) = h.get("accept_len").and_then(Json::as_arr) {
+            histogram(
+                &mut out,
+                "qspec_accept_len",
+                "accepted drafts per verify cycle",
+                p,
+                1.0,
+            );
+        }
+    }
+
+    // per-replica breakdown (pooled frames)
+    if let Some(reps) = stats.get("replicas").and_then(Json::as_arr) {
+        let per_replica: [(&str, &str, &str, &str); 6] = [
+            ("queue_depth", "qspec_replica_queue_depth", "requests queued", "gauge"),
+            ("active", "qspec_replica_active_requests", "requests generating", "gauge"),
+            ("requests_done", "qspec_replica_requests_done_total", "requests finished", "counter"),
+            ("tokens_out", "qspec_replica_tokens_out_total", "tokens generated", "counter"),
+            ("acceptance_rate", "qspec_replica_acceptance_rate", "accepted/drafted", "gauge"),
+            ("wall_tok_s", "qspec_replica_wall_tokens_per_second", "throughput", "gauge"),
+        ];
+        for (key, name, help, kind) in per_replica {
+            let mut wrote_header = false;
+            for r in reps {
+                let Some(k) = r.get("replica").and_then(Json::as_f64) else { continue };
+                let Some(v) = r.get(key).and_then(Json::as_f64) else { continue };
+                if !wrote_header {
+                    header(&mut out, name, help, kind);
+                    wrote_header = true;
+                }
+                let mut labels = vec![("replica", format!("{k}"))];
+                if let Some(e) = r.get("engine").and_then(Json::as_str) {
+                    labels.push(("engine", e.to_string()));
+                }
+                sample(&mut out, name, &labels, v);
+            }
+        }
+        header(&mut out, "qspec_replica_draining", "1 while draining", "gauge");
+        for r in reps {
+            let Some(k) = r.get("replica").and_then(Json::as_f64) else { continue };
+            let draining = matches!(r.get("draining"), Some(Json::Bool(true)));
+            sample(
+                &mut out,
+                "qspec_replica_draining",
+                &[("replica", format!("{k}"))],
+                if draining { 1.0 } else { 0.0 },
+            );
+        }
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame() -> Json {
+        Json::parse(
+            r#"{"engine":"mock","sched":"fcfs","route":"round_robin",
+                "version":"0.3.0","protocol":"v1.5","uptime_ms":2500,
+                "queue_depth":2,"queue_depth_by_priority":[1,1,0,0],
+                "oldest_queued_ms":3.5,"active":1,"slots":8,
+                "requests_done":7,"cancelled":1,"shed":0,
+                "deadline_expired":0,"tokens_out":40,"drafted":10,
+                "accepted":8,"acceptance_rate":0.8,"prefix_queries":4,
+                "prefix_hit_tokens":32,"prefix_hit_rate":8.0,
+                "wall_tok_s":100.5,"virt_tok_s":900.0,"queue_p50_ms":1.0,
+                "queue_p99_ms":2.0,"latency_p50_ms":5.0,"latency_p99_ms":9.0,
+                "restarts":1,"stolen":2,"lost_streams":0,"scale_ups":0,
+                "scale_downs":0,
+                "hist":{"req_latency_ns":[[1000000,3],[8000000,4]],
+                        "queue_wait_ns":[[500000,7]],
+                        "accept_len":[[1,2],[3,5]]},
+                "replicas":[{"replica":0,"engine":"mock","queue_depth":2,
+                             "active":1,"requests_done":7,"tokens_out":40,
+                             "acceptance_rate":0.8,"wall_tok_s":100.5,
+                             "draining":false}]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn build_info_carries_identity_labels() {
+        let text = prometheus(&frame());
+        assert!(text.contains(
+            "qspec_build_info{version=\"0.3.0\",protocol=\"v1.5\",engine=\"mock\",\
+             sched=\"fcfs\",route=\"round_robin\"} 1"
+        ));
+        assert!(text.contains("qspec_uptime_seconds 2.5"));
+    }
+
+    #[test]
+    fn counters_and_gauges_have_help_and_type() {
+        let text = prometheus(&frame());
+        for name in [
+            "qspec_requests_done_total",
+            "qspec_tokens_out_total",
+            "qspec_restarts_total",
+            "qspec_queue_depth",
+            "qspec_acceptance_rate",
+            "qspec_wall_tokens_per_second",
+        ] {
+            assert!(text.contains(&format!("# HELP {name} ")), "missing HELP for {name}");
+            assert!(text.contains(&format!("# TYPE {name} ")), "missing TYPE for {name}");
+            assert!(text.contains(&format!("{name} ")), "missing sample for {name}");
+        }
+        assert!(text.contains("qspec_requests_done_total 7"));
+        assert!(text.contains("qspec_queue_depth_class{class=\"1\"} 1"));
+        assert!(text.contains("qspec_queue_wait_p99_seconds 0.002"));
+    }
+
+    #[test]
+    fn histograms_are_cumulative_with_inf() {
+        let text = prometheus(&frame());
+        assert!(text.contains("# TYPE qspec_request_latency_seconds histogram"));
+        assert!(text.contains("qspec_request_latency_seconds_bucket{le=\"0.001\"} 3"));
+        assert!(text.contains("qspec_request_latency_seconds_bucket{le=\"0.008\"} 7"));
+        assert!(text.contains("qspec_request_latency_seconds_bucket{le=\"+Inf\"} 7"));
+        assert!(text.contains("qspec_request_latency_seconds_count 7"));
+        assert!(text.contains("qspec_accept_len_bucket{le=\"3\"} 7"));
+        assert!(text.contains("qspec_accept_len_count 7"));
+    }
+
+    #[test]
+    fn per_replica_series_are_labeled() {
+        let text = prometheus(&frame());
+        assert!(text
+            .contains("qspec_replica_queue_depth{replica=\"0\",engine=\"mock\"} 2"));
+        assert!(text.contains("qspec_replica_draining{replica=\"0\"} 0"));
+    }
+
+    #[test]
+    fn sparse_frames_render_without_optional_fields() {
+        // a bare engine frame: no route, no lifecycle, no hist, null
+        // acceptance — nothing may panic or emit garbage
+        let j = Json::parse(
+            r#"{"engine":"qspec","sched":"fcfs","queue_depth":0,"active":0,
+                "slots":8,"requests_done":0,"acceptance_rate":null}"#,
+        )
+        .unwrap();
+        let text = prometheus(&j);
+        assert!(text.contains("qspec_build_info{engine=\"qspec\",sched=\"fcfs\"} 1"));
+        assert!(text.contains("qspec_queue_depth 0"));
+        assert!(!text.contains("qspec_restarts_total"));
+        assert!(!text.contains("qspec_acceptance_rate"), "null renders as absent");
+        // every non-comment line is "name{...} value"
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (name, val) = line.rsplit_once(' ').expect("metric line");
+            assert!(!name.is_empty());
+            assert!(val.parse::<f64>().is_ok() || val == "+Inf", "bad value {val}");
+        }
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        assert_eq!(esc("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

@@ -1,0 +1,181 @@
+//! Crash flight recorder: snapshot a tracer's ring into a JSON
+//! artifact when something dies.
+//!
+//! The tracer already keeps the last N events in a bounded ring; this
+//! module is the *exit path* — it turns that ring into a single-line
+//! JSON dump and writes it to a `flight-*.json` file. Three triggers:
+//!
+//! * a worker's engine loop panics (`transport::serve_worker` catches
+//!   the unwind and dumps the engine's own ring);
+//! * the router detects a replica death (`pool::note_dead` dumps the
+//!   router's ring, which holds the routing/heartbeat timeline for
+//!   the lost replica);
+//! * an operator sends `{"op":"dump"}` for a live snapshot.
+//!
+//! Dumps are one JSON object per file so `jq` / `Json::parse` read
+//! them directly; the filename embeds who dumped and when:
+//! `flight-<replica|router>-<uptime_ms>-<seq>.json`.
+
+use std::fs;
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::trace::TraceEvent;
+
+/// Environment variable overriding where serving paths write flight
+/// dumps; default `flight-dumps/` under the working directory.
+/// Library/bench/test paths never write dumps unless given a dir
+/// explicitly, so nothing pollutes the cwd outside `serve`.
+pub const FLIGHT_DIR_ENV: &str = "QSPEC_FLIGHT_DIR";
+
+/// The dump directory for serving paths: `$QSPEC_FLIGHT_DIR` or
+/// `flight-dumps`.
+pub fn dir_from_env() -> PathBuf {
+    std::env::var(FLIGHT_DIR_ENV)
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("flight-dumps"))
+}
+
+/// Monotone per-process dump counter — keeps filenames unique even
+/// when two dumps land in the same millisecond (e.g. a panic dump and
+/// the router-side death dump for the same incident).
+static DUMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Build the dump object for a ring snapshot. `replica` is `None` for
+/// router-side dumps; `dropped` is how many older events the ring
+/// evicted before the snapshot (so readers know the window is
+/// truncated, not complete).
+pub fn dump_json(
+    reason: &str,
+    replica: Option<usize>,
+    engine: &str,
+    events: &[TraceEvent],
+    dropped: u64,
+) -> Json {
+    obj(vec![
+        ("reason", s(reason)),
+        (
+            "replica",
+            match replica {
+                Some(k) => num(k as f64),
+                None => Json::Null,
+            },
+        ),
+        ("engine", s(engine)),
+        ("version", s(super::version())),
+        ("protocol", s(crate::server::PROTOCOL_VERSION)),
+        ("uptime_ms", num(super::uptime_ms() as f64)),
+        ("dropped", num(dropped as f64)),
+        ("n_events", num(events.len() as f64)),
+        ("events", arr(events.iter().map(TraceEvent::to_json).collect())),
+    ])
+}
+
+/// Write a dump object to `dir` (created if needed). Returns the path
+/// written. Failures are returned, not panicked on — the flight
+/// recorder runs on death paths and must never make things worse.
+pub fn write_dump(dir: &Path, dump: &Json) -> io::Result<PathBuf> {
+    fs::create_dir_all(dir)?;
+    let who = match dump.get("replica").and_then(Json::as_usize) {
+        Some(k) => format!("{k}"),
+        None => "router".to_string(),
+    };
+    let seq = DUMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let path = dir.join(format!("flight-{who}-{}-{seq}.json", super::uptime_ms()));
+    let mut f = fs::File::create(&path)?;
+    f.write_all(dump.to_string().as_bytes())?;
+    f.write_all(b"\n")?;
+    Ok(path)
+}
+
+/// Convenience: snapshot `tracer` and write a dump, logging (not
+/// propagating) any I/O error. Used from the death paths where the
+/// caller has nothing useful to do with a failure.
+pub fn record(
+    dir: &Path,
+    reason: &str,
+    replica: Option<usize>,
+    engine: &str,
+    tracer: &super::Tracer,
+) -> Option<PathBuf> {
+    let dump = dump_json(reason, replica, engine, &tracer.snapshot(), tracer.dropped());
+    match write_dump(dir, &dump) {
+        Ok(p) => {
+            log::info!("flight recorder: wrote {} ({reason})", p.display());
+            Some(p)
+        }
+        Err(e) => {
+            log::warn!("flight recorder: dump failed: {e}");
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Tracer;
+    use std::sync::Arc;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("qspec-flight-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn dump_json_shape() {
+        let t = Arc::new(Tracer::new(16));
+        t.instant("request.submitted", Some(7), 3);
+        let span = t.scope("phase.draft");
+        drop(span);
+        let d = dump_json("test", Some(2), "mock", &t.snapshot(), t.dropped());
+        assert_eq!(d.get("reason").and_then(Json::as_str), Some("test"));
+        assert_eq!(d.get("replica").and_then(Json::as_usize), Some(2));
+        assert_eq!(d.get("n_events").and_then(Json::as_usize), Some(3));
+        assert_eq!(d.get("dropped").and_then(Json::as_usize), Some(0));
+        let evs = d.get("events").and_then(Json::as_arr).expect("events");
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].get("name").and_then(Json::as_str), Some("request.submitted"));
+        // round-trips through the wire encoding
+        let rt = Json::parse(&d.to_string()).expect("parse");
+        assert_eq!(rt.get("engine").and_then(Json::as_str), Some("mock"));
+    }
+
+    #[test]
+    fn router_dump_has_null_replica() {
+        let d = dump_json("replica_lost", None, "pool", &[], 0);
+        assert!(matches!(d.get("replica"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn write_dump_creates_unique_parseable_files() {
+        let dir = tmpdir("write");
+        let t = Arc::new(Tracer::new(8));
+        t.instant("route.assign", Some(1), 0);
+        let d = dump_json("panic: boom", Some(0), "mock", &t.snapshot(), 0);
+        let p1 = write_dump(&dir, &d).expect("write 1");
+        let p2 = write_dump(&dir, &d).expect("write 2");
+        assert_ne!(p1, p2, "seq counter keeps filenames unique");
+        let text = fs::read_to_string(&p1).expect("read");
+        let back = Json::parse(text.trim()).expect("parse dump file");
+        assert_eq!(back.get("reason").and_then(Json::as_str), Some("panic: boom"));
+        assert!(p1.file_name().unwrap().to_str().unwrap().starts_with("flight-0-"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn record_snapshots_tracer() {
+        let dir = tmpdir("record");
+        let t = Tracer::new(8);
+        t.instant("replica.lost", None, 0);
+        let p = record(&dir, "replica_lost", None, "pool", &t).expect("dump path");
+        let back = Json::parse(fs::read_to_string(&p).unwrap().trim()).unwrap();
+        assert_eq!(back.get("n_events").and_then(Json::as_usize), Some(1));
+        assert!(p.file_name().unwrap().to_str().unwrap().starts_with("flight-router-"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

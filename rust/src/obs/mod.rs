@@ -1,0 +1,79 @@
+//! Observability: structured tracing, metrics export, and the crash
+//! flight recorder (protocol v1.5).
+//!
+//! Three pillars, each usable on its own:
+//!
+//! * [`trace`] — a lightweight span/event API backed by a bounded
+//!   ring buffer. The engines open `phase.*` spans around prefill /
+//!   draft / verify / commit, the `BatchCore` stamps `request.*`
+//!   lifecycle instants (submitted, admitted, done, cancelled, ...),
+//!   and the router/transport layers stamp `route.*` / `replica.*`
+//!   events — so one request's timeline reconstructs across router
+//!   and worker from their rings. Disabled tracing is a single
+//!   relaxed atomic load: zero allocation, zero locking.
+//! * [`export`] — renders a `stats` frame (per-replica v1.1 shape or
+//!   the pooled v1.5 shape, including the sparse `hist` histograms)
+//!   as Prometheus text exposition, served from the `{"op":"metrics"}`
+//!   wire op and the router's `--metrics-addr` HTTP scrape endpoint.
+//! * [`flight`] — snapshots a tracer's ring into a JSON artifact on
+//!   replica death, worker panic, or an explicit `{"op":"dump"}`, so
+//!   the seconds before a failure are always inspectable.
+//!
+//! The time base is shared: every event carries microseconds since
+//! [`init`] (first use wins), so events from different tracers in one
+//! process order correctly.
+
+pub mod export;
+pub mod flight;
+pub mod trace;
+
+pub use trace::{EventKind, SpanScope, TraceEvent, Tracer};
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static PROCESS_START: OnceLock<Instant> = OnceLock::new();
+
+/// Pin the process time base. Idempotent; `main` calls it first thing
+/// so `uptime_ms` measures the whole process, but any earlier caller
+/// of [`now_us`]/[`uptime_ms`] pins it implicitly.
+pub fn init() {
+    let _ = PROCESS_START.get_or_init(Instant::now);
+}
+
+fn start() -> Instant {
+    *PROCESS_START.get_or_init(Instant::now)
+}
+
+/// Milliseconds since [`init`] — the `uptime_ms` field of every stats
+/// frame and flight dump.
+pub fn uptime_ms() -> u64 {
+    start().elapsed().as_millis().min(u64::MAX as u128) as u64
+}
+
+/// Microseconds since [`init`] — the timestamp on every trace event.
+pub fn now_us() -> u64 {
+    start().elapsed().as_micros().min(u64::MAX as u128) as u64
+}
+
+/// The crate version baked into stats frames, `qspec_build_info`, and
+/// flight dumps, so every scrape and artifact is attributable to a
+/// build.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_base_is_monotone() {
+        init();
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+        assert!(uptime_ms() <= now_us() / 1000 + 1);
+        assert!(!version().is_empty());
+    }
+}

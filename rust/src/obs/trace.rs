@@ -1,0 +1,403 @@
+//! Ring-buffer tracing core: spans (RAII start/end pairs) and instant
+//! events over a bounded, lock-cheap ring.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Disabled tracing must cost nothing on the hot path** — one
+//!    relaxed atomic load, no allocation, no lock. The engines call
+//!    into this once per scheduling phase and once per request
+//!    lifecycle transition, so anything heavier would show up in the
+//!    `benches/obs_overhead.rs` race.
+//! 2. **Bounded memory** — the ring holds the last `capacity` events
+//!    and drops the oldest beyond that (counting the drops). This is
+//!    what makes the ring double as the flight recorder: it always
+//!    holds the most recent history, never grows, and a snapshot is
+//!    one lock + clone.
+//! 3. **Panic-safe** — a replica thread that panics mid-span must not
+//!    poison the ring (the panic path is exactly when the flight
+//!    recorder is read), so the lock is taken through
+//!    `unwrap_or_else(PoisonError::into_inner)`.
+//!
+//! Span events carry the owning thread id (a process-local counter,
+//! not the OS tid), so per-thread start/end sequences replay as
+//! well-formed nesting stacks even when many threads interleave in
+//! the shared ring — `tests/obs_props.rs` pins this property.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::{num, obj, s, Json};
+
+use super::now_us;
+
+/// Default ring capacity: enough for a few seconds of busy-engine
+/// history (4 phase spans x 2 events per cycle plus request instants)
+/// while keeping a full snapshot cheap to clone and dump.
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// Environment variable gating tracing at construction:
+/// `QSPEC_TRACE=0` / `off` / `false` starts tracers disabled.
+pub const TRACE_ENV: &str = "QSPEC_TRACE";
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Process-local thread id: monotone per thread creation, stable
+    /// for the thread's lifetime. Cheaper and more readable in dumps
+    /// than the OS tid.
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+fn current_tid() -> u64 {
+    TID.with(|t| *t)
+}
+
+/// What one trace event records.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// a span opened (paired with the `End` carrying the same `span`)
+    Start,
+    /// a span closed
+    End,
+    /// a point event with no duration
+    Instant,
+}
+
+impl EventKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EventKind::Start => "start",
+            EventKind::End => "end",
+            EventKind::Instant => "instant",
+        }
+    }
+}
+
+/// One entry in the ring. `name` is always a `&'static str` so the
+/// enabled fast path allocates only when a lazy `detail` closure runs.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// microseconds since `obs::init` (process time base)
+    pub t_us: u64,
+    pub kind: EventKind,
+    pub name: &'static str,
+    /// span id linking a Start to its End; 0 for instants
+    pub span: u64,
+    /// process-local id of the emitting thread
+    pub tid: u64,
+    /// request id the event belongs to, if any
+    pub request: Option<u64>,
+    /// token count riding along (prompt tokens, committed tokens, ...)
+    pub tokens: u64,
+    /// optional free-form context (route reason, error text, ...)
+    pub detail: Option<String>,
+}
+
+impl TraceEvent {
+    /// Dump form (flight recorder / `{"op":"dump"}` bodies).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("t_us", num(self.t_us as f64)),
+            ("kind", s(self.kind.as_str())),
+            ("name", s(self.name)),
+            ("span", num(self.span as f64)),
+            ("tid", num(self.tid as f64)),
+        ];
+        if let Some(r) = self.request {
+            fields.push(("request", num(r as f64)));
+        }
+        if self.tokens > 0 {
+            fields.push(("tokens", num(self.tokens as f64)));
+        }
+        if let Some(d) = &self.detail {
+            fields.push(("detail", s(d)));
+        }
+        obj(fields)
+    }
+}
+
+#[derive(Debug, Default)]
+struct RingState {
+    ring: VecDeque<TraceEvent>,
+    /// events evicted from the full ring since creation/clear
+    dropped: u64,
+}
+
+/// The tracing core: an enable flag, a span-id counter, and the
+/// bounded ring. Shared as `Arc<Tracer>` between an engine's
+/// `BatchCore`, its serving loop, and whoever snapshots the flight
+/// recorder.
+#[derive(Debug)]
+pub struct Tracer {
+    enabled: AtomicBool,
+    next_span: AtomicU64,
+    capacity: usize,
+    state: Mutex<RingState>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new(DEFAULT_RING_CAPACITY)
+    }
+}
+
+impl Tracer {
+    /// An enabled tracer with the given ring capacity (>= 1).
+    pub fn new(capacity: usize) -> Self {
+        Tracer {
+            enabled: AtomicBool::new(true),
+            next_span: AtomicU64::new(1),
+            capacity: capacity.max(1),
+            state: Mutex::new(RingState::default()),
+        }
+    }
+
+    /// A tracer that starts disabled (`set_enabled(true)` arms it).
+    pub fn disabled(capacity: usize) -> Self {
+        let t = Self::new(capacity);
+        t.enabled.store(false, Ordering::Relaxed);
+        t
+    }
+
+    /// Default-capacity tracer honoring [`TRACE_ENV`]: enabled unless
+    /// the environment says `0` / `off` / `false`.
+    pub fn from_env() -> Self {
+        let off = std::env::var(TRACE_ENV)
+            .map(|v| matches!(v.trim(), "0" | "off" | "false"))
+            .unwrap_or(false);
+        if off {
+            Self::disabled(DEFAULT_RING_CAPACITY)
+        } else {
+            Self::new(DEFAULT_RING_CAPACITY)
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, RingState> {
+        // a panicking span holder must not poison the flight recorder
+        self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        let mut st = self.lock();
+        if st.ring.len() >= self.capacity {
+            st.ring.pop_front();
+            st.dropped += 1;
+        }
+        st.ring.push_back(ev);
+    }
+
+    /// Point event. No-op (and allocation-free) when disabled.
+    pub fn instant(&self, name: &'static str, request: Option<u64>, tokens: u64) {
+        if !self.enabled() {
+            return;
+        }
+        self.push(TraceEvent {
+            t_us: now_us(),
+            kind: EventKind::Instant,
+            name,
+            span: 0,
+            tid: current_tid(),
+            request,
+            tokens,
+            detail: None,
+        });
+    }
+
+    /// Point event with lazily built detail text: the closure only
+    /// runs when tracing is enabled, so callers can format reasons
+    /// without paying for them on the disabled path.
+    pub fn instant_with(
+        &self,
+        name: &'static str,
+        request: Option<u64>,
+        tokens: u64,
+        detail: impl FnOnce() -> String,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        self.push(TraceEvent {
+            t_us: now_us(),
+            kind: EventKind::Instant,
+            name,
+            span: 0,
+            tid: current_tid(),
+            request,
+            tokens,
+            detail: Some(detail()),
+        });
+    }
+
+    /// Open a span: emits `Start` now, `End` when the returned guard
+    /// drops. A span opened while disabled stays silent even if
+    /// tracing is enabled before it closes (no orphan `End`s).
+    pub fn scope(self: &Arc<Self>, name: &'static str) -> SpanScope {
+        self.scope_req(name, None, 0)
+    }
+
+    /// [`Self::scope`] carrying a request id and token count.
+    pub fn scope_req(
+        self: &Arc<Self>,
+        name: &'static str,
+        request: Option<u64>,
+        tokens: u64,
+    ) -> SpanScope {
+        if !self.enabled() {
+            return SpanScope { tracer: None, name, span: 0, request };
+        }
+        let span = self.next_span.fetch_add(1, Ordering::Relaxed);
+        self.push(TraceEvent {
+            t_us: now_us(),
+            kind: EventKind::Start,
+            name,
+            span,
+            tid: current_tid(),
+            request,
+            tokens,
+            detail: None,
+        });
+        SpanScope { tracer: Some(self.clone()), name, span, request }
+    }
+
+    /// Clone out the ring's current contents, oldest first.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        self.lock().ring.iter().cloned().collect()
+    }
+
+    /// Events evicted from the full ring since creation/clear.
+    pub fn dropped(&self) -> u64 {
+        self.lock().dropped
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().ring.is_empty()
+    }
+
+    /// Empty the ring (and the drop counter).
+    pub fn clear(&self) {
+        let mut st = self.lock();
+        st.ring.clear();
+        st.dropped = 0;
+    }
+}
+
+/// RAII guard closing a span on drop. Owns its `Arc<Tracer>` so it
+/// never borrows the engine that opened it — phase code can mutate
+/// the `BatchCore` freely while a scope is live.
+pub struct SpanScope {
+    tracer: Option<Arc<Tracer>>,
+    name: &'static str,
+    span: u64,
+    request: Option<u64>,
+}
+
+impl Drop for SpanScope {
+    fn drop(&mut self) {
+        if let Some(t) = self.tracer.take() {
+            t.push(TraceEvent {
+                t_us: now_us(),
+                kind: EventKind::End,
+                name: self.name,
+                span: self.span,
+                tid: current_tid(),
+                request: self.request,
+                tokens: 0,
+                detail: None,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_pair_start_and_end() {
+        let t = Arc::new(Tracer::new(64));
+        {
+            let _outer = t.scope("outer");
+            let _inner = t.scope_req("inner", Some(7), 3);
+        }
+        let evs = t.snapshot();
+        assert_eq!(evs.len(), 4);
+        assert_eq!(evs[0].kind, EventKind::Start);
+        assert_eq!(evs[0].name, "outer");
+        assert_eq!(evs[1].name, "inner");
+        assert_eq!(evs[1].request, Some(7));
+        // inner closes before outer (drop order)
+        assert_eq!(evs[2].kind, EventKind::End);
+        assert_eq!(evs[2].span, evs[1].span);
+        assert_eq!(evs[3].span, evs[0].span);
+        assert_ne!(evs[0].span, evs[1].span);
+    }
+
+    #[test]
+    fn disabled_tracer_emits_nothing() {
+        let t = Arc::new(Tracer::disabled(64));
+        assert!(!t.enabled());
+        t.instant("ev", None, 0);
+        t.instant_with("ev2", Some(1), 2, || unreachable!("lazy detail must not run"));
+        {
+            let _g = t.scope("quiet");
+            // enabling mid-span must not produce an orphan End
+            t.set_enabled(true);
+        }
+        assert!(t.is_empty());
+        t.instant("now", None, 0);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let t = Tracer::new(8);
+        for _ in 0..100 {
+            t.instant("tick", None, 0);
+        }
+        assert_eq!(t.len(), 8);
+        assert_eq!(t.dropped(), 92);
+        t.clear();
+        assert!(t.is_empty());
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn event_json_shape() {
+        let t = Tracer::new(8);
+        t.instant_with("route.shed", Some(42), 5, || "pool full".into());
+        let j = t.snapshot()[0].to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("route.shed"));
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("instant"));
+        assert_eq!(j.get("request").unwrap().as_i64(), Some(42));
+        assert_eq!(j.get("tokens").unwrap().as_i64(), Some(5));
+        assert_eq!(j.get("detail").unwrap().as_str(), Some("pool full"));
+        // round-trips through the line protocol's JSON
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn timestamps_are_monotone_within_a_thread() {
+        let t = Arc::new(Tracer::new(16));
+        let _g = t.scope("a");
+        t.instant("b", None, 0);
+        let evs = t.snapshot();
+        assert!(evs.windows(2).all(|w| w[0].t_us <= w[1].t_us));
+    }
+}

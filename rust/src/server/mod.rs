@@ -1,4 +1,4 @@
-//! TCP line-protocol serving frontend (protocol v1.4).
+//! TCP line-protocol serving frontend (protocol v1.5).
 //!
 //! Since v1.2 the server is an **engine pool**: `--replicas N` (or a
 //! repeated `--engine` for a heterogeneous pool) spawns one engine
@@ -35,9 +35,9 @@
 //! the owning replica. A single-replica pool behaves byte-for-byte
 //! like the v1.1 server on the v1/v1.1 surface.
 //!
-//! # Protocol v1.4 — one JSON object per line, both directions
+//! # Protocol v1.5 — one JSON object per line, both directions
 //!
-//! Six ops, selected by the `"op"` field (absent = `generate`, the
+//! Eight ops, selected by the `"op"` field (absent = `generate`, the
 //! legacy bare-prompt form):
 //!
 //! ```text
@@ -51,6 +51,8 @@
 //! undrain    : {"op":"undrain","replica":1}                    (v1.2)
 //! reconfigure: {"op":"reconfigure","replica":1,"gamma":2,
 //!               "kv_bits":4}                                   (v1.4)
+//! metrics    : {"op":"metrics"}                                (v1.5)
+//! dump       : {"op":"dump"}                                   (v1.5)
 //! ```
 //!
 //! Generate fields: `prompt` (required string); `max_tokens` (integer,
@@ -189,6 +191,41 @@
 //! Remote replicas appear in `replicas: [...]` tagged with the
 //! worker's engine identity; vacant autoscaler slots are omitted.
 //!
+//! # v1.5 — observability: metrics export + flight recorder
+//!
+//! v1.5 is additive — v1.4 clients are unaffected. Two new ops and a
+//! few new `stats` fields:
+//!
+//! *`metrics` op* — `{"op":"metrics"}` answers one line
+//! `{"op":"metrics","body":"<text>"}` whose `body` is the full
+//! Prometheus text exposition of the `stats` snapshot (counters with
+//! `_total`, gauges in base units, the new log-bucketed histograms as
+//! cumulative `_bucket` series, `qspec_build_info` identity labels,
+//! and per-replica labeled series on a pool router). The same text is
+//! served as plain HTTP on `--metrics-addr host:port` (any GET path),
+//! ready for a Prometheus scrape job — see [`crate::obs::export`].
+//!
+//! *`dump` op* — `{"op":"dump"}` answers one line
+//! `{"op":"dump",...}` with a flight-recorder snapshot: the recent
+//! trace-event ring (request lifecycle instants, phase spans, route /
+//! lifecycle events). On a pool router the frame carries the router's
+//! own ring plus one entry per live replica. The same snapshot is
+//! written to a `flight-*.json` file automatically when a replica
+//! dies, a worker panics, or the router loses a replica — see
+//! [`crate::obs::flight`].
+//!
+//! *`stats` additions* — every frame (per-replica and pooled) gains
+//! `uptime_ms`, `version` (crate version) and `protocol`
+//! ([`PROTOCOL_VERSION`]), plus a `hist` object carrying the sparse
+//! non-empty buckets of the log-bucketed `req_latency_ns`,
+//! `queue_wait_ns` and `accept_len` histograms as
+//! `[upper_bound, count]` pairs (pooled frames merge them bucketwise).
+//!
+//! Worker cadence knobs: `--heartbeat-ms` (router-side ping cadence;
+//! death is declared after one heartbeat interval of silence) and
+//! `--status-push-ms` (worker-side status push cadence) tune the v1.4
+//! lifecycle detection without protocol changes.
+//!
 //! The router<->worker wire runs the same one-JSON-object-per-line
 //! framing with a tag envelope so one socket multiplexes every
 //! client connection; see [`transport`] for that format, the
@@ -216,7 +253,13 @@ pub use pool::{
     Candidate, PoolLifecycle, ReplicaHandle, ReplicaStatus, RoutePolicy, RouterCore,
 };
 
-/// A parsed protocol operation (v1.2 surface + the v1.4 `reconfigure`).
+/// Wire protocol version reported in `stats` frames, flight dumps and
+/// `qspec_build_info`. Bumped additively: a vX.Y client parses every
+/// vX.(Y+1) frame it knows about unchanged.
+pub const PROTOCOL_VERSION: &str = "v1.5";
+
+/// A parsed protocol operation (v1.2 surface + the v1.4 `reconfigure`
+/// + the v1.5 observability ops).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Op {
     Generate(GenerateOp),
@@ -230,6 +273,13 @@ pub enum Op {
     /// v1.4 admin: live-retune a replica's speculation knobs (draft
     /// depth and/or draft-side KV quantization width).
     Reconfigure { replica: usize, gamma: Option<usize>, kv_bits: Option<u8> },
+    /// v1.5: the `stats` snapshot rendered as Prometheus text
+    /// (answered as `{"op":"metrics","body":"<text>"}`).
+    Metrics,
+    /// v1.5: flight-recorder snapshot of the recent trace-event ring
+    /// (router + live replicas on a pool; the engine's own ring on a
+    /// bare engine loop / worker).
+    Dump,
 }
 
 /// The `generate` op: prompt + wire-level sampling params + QoS.
@@ -418,6 +468,8 @@ pub fn parse_op(
             )),
         },
         "stats" => Ok(Op::Stats),
+        "metrics" => Ok(Op::Metrics),
+        "dump" => Ok(Op::Dump),
         "drain" | "undrain" => match opt_uint(&j, "replica")? {
             Some(k) if op_name == "drain" => Ok(Op::Drain { replica: k as usize }),
             Some(k) => Ok(Op::Undrain { replica: k as usize }),
@@ -458,7 +510,7 @@ pub fn parse_op(
         }
         other => Err(QspecError::Config(format!(
             "unknown op \"{other}\" \
-             (expected generate|cancel|stats|drain|undrain|reconfigure)"
+             (expected generate|cancel|stats|metrics|dump|drain|undrain|reconfigure)"
         ))),
     }
 }
@@ -489,6 +541,8 @@ pub fn format_op(op: &Op) -> String {
         }
         Op::Cancel { id } => obj(vec![("op", s("cancel")), ("id", num(*id as f64))]),
         Op::Stats => obj(vec![("op", s("stats"))]),
+        Op::Metrics => obj(vec![("op", s("metrics"))]),
+        Op::Dump => obj(vec![("op", s("dump"))]),
         Op::Drain { replica } => {
             obj(vec![("op", s("drain")), ("replica", num(*replica as f64))])
         }
@@ -642,9 +696,11 @@ pub fn format_overloaded(ov: &Overload) -> String {
 /// merge acceptance across replicas without averaging averages. v1.3
 /// adds the prefix-cache counters (`prefix_queries` /
 /// `prefix_hit_tokens` / `prefix_hit_rate`) under the same
-/// raw-counters-plus-null-rate pattern. In pool serving this frame
-/// becomes one entry of `replicas: [...]`; the router aggregates the
-/// pooled top level (see [`pool::merge_stats`]).
+/// raw-counters-plus-null-rate pattern. v1.5 adds `uptime_ms` /
+/// `version` / `protocol` identity fields and the sparse `hist`
+/// object feeding the Prometheus histograms. In pool serving this
+/// frame becomes one entry of `replicas: [...]`; the router
+/// aggregates the pooled top level (see [`pool::merge_stats`]).
 pub fn format_stats(engine: &dyn Engine) -> String {
     let m = engine.metrics();
     let depths = engine
@@ -677,8 +733,32 @@ pub fn format_stats(engine: &dyn Engine) -> String {
         ("queue_p99_ms", num(engine.recent_queue_wait_ns(99.0) as f64 / 1e6)),
         ("latency_p50_ms", num(m.req_latency.percentile(50.0) as f64 / 1e6)),
         ("latency_p99_ms", num(m.req_latency.percentile(99.0) as f64 / 1e6)),
+        // v1.5 identity + distribution fields (additive)
+        ("uptime_ms", num(crate::obs::uptime_ms() as f64)),
+        ("version", s(crate::obs::version())),
+        ("protocol", s(PROTOCOL_VERSION)),
+        (
+            "hist",
+            obj(vec![
+                ("req_latency_ns", hist_pairs(&m.req_latency)),
+                ("queue_wait_ns", hist_pairs(&m.queue_wait)),
+                ("accept_len", hist_pairs(&m.accept_hist)),
+            ]),
+        ),
     ])
     .to_string()
+}
+
+/// Sparse wire form of a log-bucketed histogram: the non-empty
+/// buckets as `[upper_bound, count]` pairs, ascending. The pool
+/// router merges these bucketwise ([`pool::merge_stats`]) and the
+/// exporter renders them cumulative ([`crate::obs::export`]).
+fn hist_pairs(h: &crate::util::stats::LogHistogram) -> Json {
+    Json::Arr(
+        h.nonzero_buckets()
+            .map(|(le, c)| Json::Arr(vec![num(le as f64), num(c as f64)]))
+            .collect(),
+    )
 }
 
 /// One connection: this (reader) thread parses ops and forwards them to
@@ -812,6 +892,7 @@ fn serve_pool(sess: Option<&Session>, cfg: &ServeConfig) -> Result<()> {
             transport::RemoteOpts {
                 steal: cfg.steal,
                 retry_after_ms: cfg.slo.retry_after_ms,
+                heartbeat_ms: cfg.heartbeat_ms,
             },
         )?;
         // a remote worker's clamp rides its own engine's max_seq; the
@@ -831,7 +912,7 @@ fn serve_pool(sess: Option<&Session>, cfg: &ServeConfig) -> Result<()> {
     let listener = TcpListener::bind(("127.0.0.1", cfg.port))?;
     println!(
         "qspec listening on 127.0.0.1:{} (replicas={}{}, engines={}, route={}, sched={}, \
-         slo={}, protocol v1.4)",
+         slo={}{}, protocol {PROTOCOL_VERSION})",
         cfg.port,
         total,
         if capacity > total { format!("/{capacity}") } else { String::new() },
@@ -844,6 +925,10 @@ fn serve_pool(sess: Option<&Session>, cfg: &ServeConfig) -> Result<()> {
         cfg.route.label(),
         cfg.sched.label(),
         if cfg.slo.enabled() { "on" } else { "off" },
+        match &cfg.metrics_addr {
+            Some(a) => format!(", metrics=http://{a}/metrics"),
+            None => String::new(),
+        },
     );
 
     // router: conn threads -> router -> replicas (local channel or
@@ -857,6 +942,8 @@ fn serve_pool(sess: Option<&Session>, cfg: &ServeConfig) -> Result<()> {
         })
         .collect();
     let mut core = RouterCore::new(statuses, cfg.route, cfg.slo.clone());
+    // router-side flight recorder: replica-death dumps land here
+    core.flight_dir = Some(crate::obs::flight::dir_from_env());
     for k in total..capacity {
         core.set_vacant(k, true);
     }
@@ -874,6 +961,13 @@ fn serve_pool(sess: Option<&Session>, cfg: &ServeConfig) -> Result<()> {
     }
     if cfg.autoscale_enabled() {
         life.autoscale = Some(AutoscaleCore::new(AutoscaleConfig::for_pool(cfg)));
+    }
+
+    if let Some(maddr) = cfg.metrics_addr.clone() {
+        // plain-HTTP Prometheus scrape endpoint: each GET is answered
+        // with the same exposition text as the {"op":"metrics"} op
+        let mtx = rtx.clone();
+        std::thread::spawn(move || serve_metrics_http(&maddr, mtx));
     }
 
     let ltx = rtx.clone();
@@ -899,6 +993,75 @@ fn serve_pool(sess: Option<&Session>, cfg: &ServeConfig) -> Result<()> {
         }
         // remote-only: this thread *is* the router
         None => pool::router_loop_dynamic(&rrx, &mut core, &mut slots, &mut life),
+    }
+}
+
+/// Minimal dependency-free HTTP/1.1 listener for `--metrics-addr`:
+/// answers every GET with the router's Prometheus exposition text
+/// (the `{"op":"metrics"}` op body). One connection per scrape, no
+/// keep-alive — exactly what a Prometheus scrape job does.
+fn serve_metrics_http(addr: &str, tx: mpsc::Sender<Inbound>) {
+    let listener = match TcpListener::bind(addr) {
+        Ok(l) => l,
+        Err(e) => {
+            log::error!("metrics endpoint: cannot bind {addr}: {e}");
+            return;
+        }
+    };
+    log::info!("metrics endpoint on http://{addr}/metrics");
+    for stream in listener.incoming().flatten() {
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = metrics_http_conn(stream, &tx) {
+                log::debug!("metrics scrape failed: {e}");
+            }
+        });
+    }
+}
+
+/// One scrape: drain the request head, ask the router for the metrics
+/// body (conn 0 = router-internal, like the stats fan-out), answer a
+/// complete HTTP response and close.
+fn metrics_http_conn(stream: TcpStream, tx: &mpsc::Sender<Inbound>) -> std::io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        // request line + headers up to the blank line; the body (none
+        // on GET) is ignored
+        if reader.read_line(&mut line)? == 0 || line.trim().is_empty() {
+            break;
+        }
+    }
+    let (resp_tx, resp_rx) = mpsc::channel::<String>();
+    let frame = if tx.send(Inbound::Op { conn: 0, op: Op::Metrics, resp: resp_tx }).is_ok() {
+        resp_rx
+            .recv_timeout(std::time::Duration::from_secs(5))
+            .unwrap_or_else(|_| format_error("unavailable", "metrics snapshot timed out"))
+    } else {
+        format_error("unavailable", "router is gone")
+    };
+    // the wire frame is {"op":"metrics","body":"<text>"}; unwrap it
+    let body = Json::parse(frame.trim())
+        .ok()
+        .and_then(|j| j.get("body").and_then(Json::as_str).map(str::to_string));
+    let mut w = stream;
+    match body {
+        Some(text) => write!(
+            w,
+            "HTTP/1.1 200 OK\r\nContent-Type: {}\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n{}",
+            crate::obs::export::PROMETHEUS_CONTENT_TYPE,
+            text.len(),
+            text,
+        ),
+        None => write!(
+            w,
+            "HTTP/1.1 503 Service Unavailable\r\nContent-Type: text/plain\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+            frame.len(),
+            frame,
+        ),
     }
 }
 
@@ -1058,6 +1221,15 @@ mod tests {
     }
 
     #[test]
+    fn v1_5_observability_ops_parse() {
+        assert_eq!(parse_op(r#"{"op":"metrics"}"#, 64, 512).unwrap(), Op::Metrics);
+        assert_eq!(parse_op(r#"{"op":"dump"}"#, 64, 512).unwrap(), Op::Dump);
+        // the unknown-op error advertises the full v1.5 surface
+        let e = parse_op(r#"{"op":"zap"}"#, 64, 512).unwrap_err().to_string();
+        assert!(e.contains("metrics") && e.contains("dump"), "{e}");
+    }
+
+    #[test]
     fn drain_ops_parse() {
         assert_eq!(
             parse_op(r#"{"op":"drain","replica":1}"#, 64, 512).unwrap(),
@@ -1131,6 +1303,8 @@ mod tests {
             }),
             Op::Cancel { id: 9 },
             Op::Stats,
+            Op::Metrics,
+            Op::Dump,
             Op::Drain { replica: 1 },
             Op::Undrain { replica: 0 },
             Op::Reconfigure { replica: 2, gamma: Some(4), kv_bits: Some(3) },

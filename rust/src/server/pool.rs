@@ -1,5 +1,5 @@
 //! Engine-pool serving: replica lifecycle + frontend router
-//! (protocol v1.3).
+//! (protocol v1.5).
 //!
 //! The v1.1 server drove exactly one engine on the main thread. This
 //! module turns that single loop into a pool:
@@ -76,10 +76,21 @@
 //!   `mpsc` face), so every path below is transport-agnostic. The
 //!   static [`router_loop`] wrapper keeps the v1.3 call shape for
 //!   fixed in-process pools.
+//! * **v1.5 observability** — the router keeps its own trace ring
+//!   ([`RouterCore::trace`]): `route.*` events on every placement and
+//!   shed, `replica.*` events on death/revival. `{"op":"metrics"}`
+//!   renders the pooled stats as Prometheus text;  `{"op":"dump"}`
+//!   answers the router's ring plus one flight snapshot per live
+//!   replica; a replica death writes the router's ring to a
+//!   `flight-*.json` artifact ([`RouterCore::flight_dir`]) so every
+//!   `replica_lost` incident is inspectable after the fact. The
+//!   pooled stats frame carries `uptime_ms` / `version` / `protocol`
+//!   and merges the per-replica `hist` histograms bucketwise.
 //!
 //! [`transport`]: super::transport
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
@@ -88,6 +99,7 @@ use crate::config::{EngineKind, RouteKind, ServeConfig, SloConfig};
 use crate::coordinator::{build_engine, Engine, Overload, StepEvent};
 use crate::error::{QspecError, Result};
 use crate::model::Tokenizer;
+use crate::obs::{flight, Tracer};
 use crate::runtime::{ArtifactStore, Session};
 use crate::util::json::{num, obj, s, Json};
 
@@ -481,6 +493,15 @@ pub struct RouterCore {
     pub scale_ups: u64,
     /// drained replicas retired to vacancy; pooled `stats.scale_downs`.
     pub scale_downs: u64,
+    /// v1.5: the router's own trace ring — `route.*` placement/shed
+    /// events and `replica.*` lifecycle events. Snapshotted by
+    /// `{"op":"dump"}` and written to [`Self::flight_dir`] on replica
+    /// death.
+    pub trace: Arc<Tracer>,
+    /// Where router-side flight dumps land; `None` (the default, and
+    /// what every test/bench construction gets) disables writing.
+    /// `serve` sets it from `$QSPEC_FLIGHT_DIR`.
+    pub flight_dir: Option<PathBuf>,
 }
 
 impl RouterCore {
@@ -501,6 +522,8 @@ impl RouterCore {
             lost_streams: 0,
             scale_ups: 0,
             scale_downs: 0,
+            trace: Arc::new(Tracer::from_env()),
+            flight_dir: None,
         }
     }
 
@@ -930,16 +953,33 @@ fn dispatch(
         Inbound::Op { op: Op::Stats, resp, .. } => {
             let _ = resp.send(pool_stats(core, slots).to_string());
         }
+        Inbound::Op { op: Op::Metrics, resp, .. } => {
+            // v1.5: same snapshot as stats, rendered as Prometheus
+            // text and wrapped in one JSON line (the line protocol
+            // never carries raw multi-line bodies)
+            let text = crate::obs::export::prometheus(&pool_stats(core, slots));
+            let _ = resp
+                .send(obj(vec![("op", s("metrics")), ("body", s(&text))]).to_string());
+        }
+        Inbound::Op { op: Op::Dump, resp, .. } => {
+            let _ = resp.send(pool_dump(core, slots).to_string());
+        }
         Inbound::Op { op: Op::Drain { replica }, resp, .. } => {
             let line = match core.set_draining(replica, true) {
-                Ok(()) => format_drain(replica, true),
+                Ok(()) => {
+                    core.trace.instant("replica.drain", None, replica as u64);
+                    format_drain(replica, true)
+                }
                 Err(e) => format_error("bad_request", &e.to_string()),
             };
             let _ = resp.send(line);
         }
         Inbound::Op { op: Op::Undrain { replica }, resp, .. } => {
             let line = match core.set_draining(replica, false) {
-                Ok(()) => format_drain(replica, false),
+                Ok(()) => {
+                    core.trace.instant("replica.undrain", None, replica as u64);
+                    format_drain(replica, false)
+                }
                 Err(e) => format_error("bad_request", &e.to_string()),
             };
             let _ = resp.send(line);
@@ -962,6 +1002,9 @@ fn dispatch(
         Inbound::ReplicaDown { replica, reason, stolen, lost } => {
             core.stolen += stolen;
             core.lost_streams += lost;
+            if stolen > 0 {
+                core.trace.instant("route.steal", None, stolen);
+            }
             life.respawning.remove(&replica);
             if replica < core.len() && !core.is_dead(replica) && !core.is_vacant(replica) {
                 log::warn!(
@@ -974,6 +1017,7 @@ fn dispatch(
             if replica >= core.len() {
                 return;
             }
+            core.trace.instant("replica.up", None, replica as u64);
             life.respawning.remove(&replica);
             if let Some(h) = handle {
                 core.attach_status(replica, h.status.clone());
@@ -1005,6 +1049,14 @@ fn note_dead(
     if !core.is_dead(k) {
         let label = slots[k].as_ref().map(|r| r.label.as_str()).unwrap_or("vacant");
         log::warn!("replica {k} ({label}) {reason}; marked dead");
+        core.trace
+            .instant_with("replica.lost", None, k as u64, || format!("({label}) {reason}"));
+        // v1.5: every replica death leaves an inspectable artifact —
+        // the router's ring holds the routing/lifecycle timeline that
+        // led up to the loss
+        if let Some(dir) = core.flight_dir.clone() {
+            flight::record(&dir, &format!("replica_lost: {reason}"), Some(k), label, &core.trace);
+        }
     }
     core.mark_dead(k);
     life.maybe_respawn(k);
@@ -1078,6 +1130,7 @@ fn route_generate(
     loop {
         match core.route_for(g.priority, &g.prompt) {
             Err(ov) => {
+                core.trace.instant_with("route.shed", None, 0, || ov.message.clone());
                 let _ = resp.send(format_overloaded(&ov));
                 return;
             }
@@ -1100,6 +1153,8 @@ fn route_generate(
                     None => false,
                 };
                 if sent {
+                    core.trace
+                        .instant_with("route.assign", None, k as u64, || format!("conn {conn}"));
                     return;
                 }
                 // never route here again (until revived), try the
@@ -1208,6 +1263,30 @@ pub fn merge_stats(core: &RouterCore, entries: &[(usize, Json, bool)]) -> Json {
     // acceptance_rate
     let (prefix_q, prefix_hit) = (sum("prefix_queries"), sum("prefix_hit_tokens"));
     let prefix_rate = if prefix_q > 0.0 { num(prefix_hit / prefix_q) } else { Json::Null };
+    // v1.5: merge per-replica sparse histograms bucketwise (buckets
+    // align across replicas — same log-bucket layout — so summing
+    // counts per upper bound is exact). Frames predating v1.5 simply
+    // have no "hist" key and contribute nothing.
+    let merge_hist = |key: &str| -> Json {
+        let mut acc: BTreeMap<u64, u64> = BTreeMap::new();
+        for (_, j, _) in entries {
+            let Some(pairs) = j.get("hist").and_then(|h| h.get(key)).and_then(Json::as_arr)
+            else {
+                continue;
+            };
+            for p in pairs {
+                let Some(pair) = p.as_arr() else { continue };
+                let le = pair.first().and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                let c = pair.get(1).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                *acc.entry(le).or_insert(0) += c;
+            }
+        }
+        Json::Arr(
+            acc.into_iter()
+                .map(|(le, c)| Json::Arr(vec![num(le as f64), num(c as f64)]))
+                .collect(),
+        )
+    };
     obj(vec![
         ("engine", ident("engine")),
         ("sched", ident("sched")),
@@ -1243,7 +1322,64 @@ pub fn merge_stats(core: &RouterCore, entries: &[(usize, Json, bool)]) -> Json {
         ("lost_streams", num(core.lost_streams as f64)),
         ("scale_ups", num(core.scale_ups as f64)),
         ("scale_downs", num(core.scale_downs as f64)),
+        // v1.5 identity + distribution fields (additive)
+        ("uptime_ms", num(crate::obs::uptime_ms() as f64)),
+        ("version", s(crate::obs::version())),
+        ("protocol", s(super::PROTOCOL_VERSION)),
+        (
+            "hist",
+            obj(vec![
+                ("req_latency_ns", merge_hist("req_latency_ns")),
+                ("queue_wait_ns", merge_hist("queue_wait_ns")),
+                ("accept_len", merge_hist("accept_len")),
+            ]),
+        ),
         ("replicas", Json::Arr(replica_entries)),
+    ])
+}
+
+/// v1.5 `{"op":"dump"}` on the router: fan `Op::Dump` out to every
+/// live replica (same conn-0 / single-deadline pattern as
+/// [`pool_stats`]) and bundle the router's own ring alongside. A
+/// replica that misses the window is simply absent from `replicas` —
+/// a dump is a live diagnostic, not an accounting surface, so there is
+/// no stale-cache fallback.
+pub fn pool_dump(core: &RouterCore, replicas: &[Option<ReplicaHandle>]) -> Json {
+    let mut waiting: Vec<(usize, mpsc::Receiver<String>)> = Vec::new();
+    for (k, r) in replicas.iter().enumerate() {
+        let Some(r) = r else { continue };
+        if core.is_dead(k) || core.is_vacant(k) {
+            continue;
+        }
+        let (stx, srx) = mpsc::channel::<String>();
+        if r.tx.send(Inbound::Op { conn: 0, op: Op::Dump, resp: stx }).is_ok() {
+            waiting.push((k, srx));
+        }
+    }
+    let deadline = Instant::now() + STATS_TIMEOUT;
+    let mut reps: Vec<Json> = Vec::new();
+    for (k, srx) in waiting {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if let Some(mut j) = srx.recv_timeout(left).ok().and_then(|line| Json::parse(&line).ok())
+        {
+            if let Json::Obj(m) = &mut j {
+                m.insert("replica".into(), num(k as f64));
+            }
+            reps.push(j);
+        }
+    }
+    let router = flight::dump_json(
+        "explicit",
+        None,
+        "router",
+        &core.trace.snapshot(),
+        core.trace.dropped(),
+    );
+    obj(vec![
+        ("op", s("dump")),
+        ("reason", s("explicit")),
+        ("router", router),
+        ("replicas", Json::Arr(reps)),
     ])
 }
 
@@ -1387,6 +1523,24 @@ fn handle_inbound(
         }
         Inbound::Op { op: Op::Stats, resp, .. } => {
             let _ = resp.send(format_stats(engine));
+        }
+        Inbound::Op { op: Op::Metrics, resp, .. } => {
+            // v1.5: the engine's stats frame rendered as Prometheus
+            // text, shipped inside one JSON line
+            let stats = Json::parse(&format_stats(engine)).unwrap_or(Json::Null);
+            let text = crate::obs::export::prometheus(&stats);
+            let _ = resp
+                .send(obj(vec![("op", s("metrics")), ("body", s(&text))]).to_string());
+        }
+        Inbound::Op { op: Op::Dump, resp, .. } => {
+            // v1.5: live snapshot of this engine's trace ring
+            let t = &engine.core().trace;
+            let mut dump =
+                flight::dump_json("explicit", None, engine.name(), &t.snapshot(), t.dropped());
+            if let Json::Obj(m) = &mut dump {
+                m.insert("op".into(), s("dump"));
+            }
+            let _ = resp.send(dump.to_string());
         }
         Inbound::Op { op: Op::Drain { .. } | Op::Undrain { .. }, resp, .. } => {
             // only the pool router owns the drain lifecycle; a replica

@@ -1,4 +1,4 @@
-//! Cross-host replica transport (protocol v1.4): the router<->worker
+//! Cross-host replica transport (protocol v1.5): the router<->worker
 //! wire behind remote [`ReplicaHandle`]s.
 //!
 //! ```text
@@ -44,9 +44,11 @@
 //!
 //! # Lifecycle
 //!
-//! The proxy pings every tick (250 ms) and declares the worker dead on
-//! socket EOF/error or 2 s of silence (`kill -9` closes the socket, so
-//! detection is immediate; the timeout catches wedged hosts). On death
+//! The proxy pings every tick (an eighth of the heartbeat budget,
+//! 250 ms at the default `--heartbeat-ms 2000`) and declares the
+//! worker dead on socket EOF/error or `--heartbeat-ms` of silence
+//! (`kill -9` closes the socket, so detection is immediate; the
+//! timeout catches wedged hosts). On death
 //! every outstanding tag is drained: requests that already streamed
 //! output answer a terminal `replica_lost` frame (the dead engine held
 //! their KV state); requests that had not are *stolen* — re-admitted
@@ -83,18 +85,23 @@ use super::{format_error, format_op, format_replica_lost, parse_op, Inbound, Op}
 /// Handshake (hello/welcome) must complete within this budget — a
 /// worker that cannot answer promptly is treated as down.
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
-/// Proxy tick: ping cadence and the granularity of reconnect/backoff
-/// checks.
-const TICK: Duration = Duration::from_millis(250);
-/// Silence budget before the proxy declares the worker dead. Status
+/// Default silence budget (ms) before the proxy declares the worker
+/// dead (`--heartbeat-ms` overrides). The proxy tick — ping cadence
+/// and the granularity of reconnect/backoff checks — is derived as an
+/// eighth of the budget, floored at [`MIN_TICK_MS`]; at the default
+/// that is the historical 250 ms tick / 2 s timeout pair. Status
 /// pushes arrive every ~100 ms, so a healthy link never gets close.
-const HEARTBEAT_TIMEOUT: Duration = Duration::from_secs(2);
+pub const DEFAULT_HEARTBEAT_MS: u64 = 2000;
+/// Floor on the derived proxy tick, so an aggressive `--heartbeat-ms`
+/// cannot spin the proxy loop.
+const MIN_TICK_MS: u64 = 50;
 /// First reconnect delay after a death; doubled per failure.
 const RECONNECT_BACKOFF_BASE: Duration = Duration::from_millis(200);
 /// Reconnect delay ceiling.
 const RECONNECT_BACKOFF_CAP: Duration = Duration::from_secs(5);
-/// Worker-side cadence of unsolicited `status` pushes.
-const STATUS_INTERVAL: Duration = Duration::from_millis(100);
+/// Default worker-side cadence (ms) of unsolicited `status` pushes
+/// (`--status-push-ms` overrides).
+pub const DEFAULT_STATUS_PUSH_MS: u64 = 100;
 /// `max_tokens` fallback on the worker. Unused in practice: the router
 /// re-serializes ops through [`format_op`], which always emits
 /// `max_tokens` explicitly.
@@ -241,15 +248,16 @@ fn status_json(status: &ReplicaStatus, ops_seen: u64) -> Json {
     ])
 }
 
-/// Push the live status over the wire every [`STATUS_INTERVAL`] until
-/// the writer goes away.
+/// Push the live status over the wire every `interval` (the worker's
+/// `--status-push-ms`) until the writer goes away.
 fn worker_status_pusher(
     out_tx: &mpsc::Sender<String>,
     status: &ReplicaStatus,
     ops_seen: &AtomicU64,
+    interval: Duration,
 ) {
     loop {
-        std::thread::sleep(STATUS_INTERVAL);
+        std::thread::sleep(interval);
         let line =
             obj(vec![("status", status_json(status, ops_seen.load(Ordering::Relaxed)))])
                 .to_string();
@@ -339,12 +347,28 @@ fn worker_reader(
 /// router connection (so its proxy runs the failure path) but keeps
 /// the process alive for the reconnect.
 pub fn serve_worker(addr: &str, tok: &Tokenizer, engine: &mut dyn Engine) -> Result<()> {
+    serve_worker_with_opts(addr, tok, engine, WorkerOpts::default())
+}
+
+/// [`serve_worker`] with the v1.5 knobs: status-push cadence and a
+/// flight-recorder directory. A panic in the engine loop is caught,
+/// dumped (engine's own trace ring) into `opts.flight_dir`, and
+/// treated like an engine fault: the router connection drops (its
+/// proxy runs the failure path — steal/respawn) while the worker
+/// process stays up for the reconnect.
+pub fn serve_worker_with_opts(
+    addr: &str,
+    tok: &Tokenizer,
+    engine: &mut dyn Engine,
+    opts: WorkerOpts,
+) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     println!(
-        "qspec worker listening on {local} (engine={}, max_seq={}, protocol v1.4)",
+        "qspec worker listening on {local} (engine={}, max_seq={}, protocol {})",
         engine.name(),
         engine.max_seq(),
+        super::PROTOCOL_VERSION,
     );
     let status = Arc::new(ReplicaStatus::new());
     let ops_seen = Arc::new(AtomicU64::new(0));
@@ -404,9 +428,10 @@ pub fn serve_worker(addr: &str, tok: &Tokenizer, engine: &mut dyn Engine) -> Res
             let out_tx = out_tx.clone();
             let status = status.clone();
             let ops_seen = ops_seen.clone();
+            let interval = Duration::from_millis(opts.status_push_ms.max(1));
             std::thread::Builder::new()
                 .name("qspec-worker-status".into())
-                .spawn(move || worker_status_pusher(&out_tx, &status, &ops_seen))?;
+                .spawn(move || worker_status_pusher(&out_tx, &status, &ops_seen, interval))?;
         }
         {
             let status = status.clone();
@@ -417,14 +442,48 @@ pub fn serve_worker(addr: &str, tok: &Tokenizer, engine: &mut dyn Engine) -> Res
                 .spawn(move || worker_reader(reader, wtx, out_tx, cap, status, ops_seen))?;
         }
         // session: runs until the router hangs up (the reader drops the
-        // op channel) or the engine faults
-        if let Err(e) = pool::replica_loop(&wrx, tok, &mut *engine, &status) {
-            log::warn!("worker: engine fault, dropping router connection: {e}");
+        // op channel), the engine faults, or the engine panics — the
+        // panic is caught so the flight recorder can snapshot the
+        // engine's trace ring before the session is torn down
+        let session = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool::replica_loop(&wrx, tok, &mut *engine, &status)
+        }));
+        match session {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                log::warn!("worker: engine fault, dropping router connection: {e}");
+            }
+            Err(payload) => {
+                let msg = panic_message(payload.as_ref());
+                log::error!("worker: engine panicked ({msg}); dropping router connection");
+                if let Some(dir) = &opts.flight_dir {
+                    let t = &engine.core().trace;
+                    crate::obs::flight::record(
+                        dir,
+                        &format!("panic: {msg}"),
+                        Some(replica),
+                        engine.name(),
+                        t,
+                    );
+                }
+            }
         }
         let _ = stream.shutdown(Shutdown::Both);
         let _ = writer.join();
     }
     Ok(())
+}
+
+/// Best-effort text out of a caught panic payload (panics carry `&str`
+/// or `String` in practice).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -438,6 +497,32 @@ pub struct RemoteOpts {
     pub steal: bool,
     /// Backoff hint carried by `replica_lost` frames.
     pub retry_after_ms: u64,
+    /// v1.5 `--heartbeat-ms`: silence budget before the proxy declares
+    /// the worker dead; the ping tick is derived from it (see
+    /// [`DEFAULT_HEARTBEAT_MS`]).
+    pub heartbeat_ms: u64,
+}
+
+impl Default for RemoteOpts {
+    fn default() -> Self {
+        RemoteOpts { steal: true, retry_after_ms: 500, heartbeat_ms: DEFAULT_HEARTBEAT_MS }
+    }
+}
+
+/// v1.5 worker-side knobs for [`serve_worker_with_opts`].
+pub struct WorkerOpts {
+    /// `--status-push-ms`: cadence of unsolicited `status` pushes.
+    pub status_push_ms: u64,
+    /// Where a panic in the engine loop writes its flight-recorder
+    /// dump; `None` disables dumping (the library default — only the
+    /// `serve --worker` CLI path turns it on).
+    pub flight_dir: Option<std::path::PathBuf>,
+}
+
+impl Default for WorkerOpts {
+    fn default() -> Self {
+        WorkerOpts { status_push_ms: DEFAULT_STATUS_PUSH_MS, flight_dir: None }
+    }
 }
 
 /// What [`connect_remote`] hands the pool: the transport-agnostic
@@ -600,6 +685,10 @@ impl Proxy {
     /// heartbeat the link, and on death drain + reconnect. Exits when
     /// the handle is dropped (slot retired / pool shut down).
     fn run(mut self, first: TcpStream, erx: mpsc::Receiver<Event>, etx: mpsc::Sender<Event>) {
+        // v1.5: the heartbeat budget is a knob; the ping tick derives
+        // from it (hb/8, floored) so the two stay proportioned
+        let hb_timeout = Duration::from_millis(self.opts.heartbeat_ms.max(1));
+        let tick = Duration::from_millis((self.opts.heartbeat_ms / 8).max(MIN_TICK_MS));
         let mut sock = Some(first);
         let mut last_seen = Instant::now();
         let mut last_ping = Instant::now();
@@ -608,7 +697,7 @@ impl Proxy {
         let mut next_attempt = Instant::now();
         loop {
             let mut failure: Option<String> = None;
-            match erx.recv_timeout(TICK) {
+            match erx.recv_timeout(tick) {
                 Ok(Event::HandleClosed) => return,
                 Ok(Event::In(msg)) => {
                     if let Err(reason) = self.forward(msg, &mut sock) {
@@ -628,7 +717,7 @@ impl Proxy {
                 Err(mpsc::RecvTimeoutError::Disconnected) => return,
             }
             if sock.is_some() {
-                if failure.is_none() && last_ping.elapsed() >= TICK {
+                if failure.is_none() && last_ping.elapsed() >= tick {
                     ping_seq += 1;
                     last_ping = Instant::now();
                     let line = obj(vec![("ping", num(ping_seq as f64))]).to_string();
@@ -637,10 +726,10 @@ impl Proxy {
                         failure = Some("write to worker failed".into());
                     }
                 }
-                if failure.is_none() && last_seen.elapsed() >= HEARTBEAT_TIMEOUT {
+                if failure.is_none() && last_seen.elapsed() >= hb_timeout {
                     failure = Some(format!(
                         "heartbeat timeout ({} ms of silence)",
-                        HEARTBEAT_TIMEOUT.as_millis()
+                        hb_timeout.as_millis()
                     ));
                 }
                 if let Some(reason) = failure {
@@ -932,6 +1021,8 @@ mod tests {
             sample_generate(),
             Op::Cancel { id: 42 },
             Op::Stats,
+            Op::Metrics,
+            Op::Dump,
             Op::Drain { replica: 1 },
             Op::Undrain { replica: 1 },
             Op::Reconfigure { replica: 2, gamma: Some(4), kv_bits: Some(3) },
@@ -989,7 +1080,7 @@ mod tests {
             pool: 4,
             addr: "127.0.0.1:0".into(),
             router_tx: rtx,
-            opts: RemoteOpts { steal, retry_after_ms: 250 },
+            opts: RemoteOpts { steal, retry_after_ms: 250, ..RemoteOpts::default() },
             status: Arc::new(ReplicaStatus::new()),
             outstanding: HashMap::new(),
             next_tag: 1,

@@ -134,6 +134,18 @@ impl LogHistogram {
         }
         self.total += other.total;
     }
+
+    /// Sparse view of the occupied buckets as `(upper_value, count)`
+    /// pairs in ascending bucket order — the export form: a Prometheus
+    /// histogram (or a wire stats frame) only carries the handful of
+    /// non-empty buckets, never the full fixed table.
+    pub fn nonzero_buckets(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (Self::bucket_value(i), c))
+    }
 }
 
 #[cfg(test)]
@@ -184,6 +196,20 @@ mod tests {
         assert_eq!(percentile_sorted(&v, 50.0), 50);
         assert_eq!(percentile_sorted(&v, 99.0), 99);
         assert_eq!(percentile_sorted(&v, 100.0), 100);
+    }
+
+    #[test]
+    fn nonzero_buckets_sparse_and_ordered() {
+        let mut h = LogHistogram::new();
+        assert_eq!(h.nonzero_buckets().count(), 0);
+        h.record(3);
+        h.record(3);
+        h.record(1_000_000);
+        let pairs: Vec<(u64, u64)> = h.nonzero_buckets().collect();
+        assert_eq!(pairs.len(), 2);
+        assert_eq!(pairs[0].1, 2, "both 3s share one bucket");
+        assert!(pairs[0].0 < pairs[1].0, "ascending bucket order");
+        assert_eq!(pairs.iter().map(|&(_, c)| c).sum::<u64>(), h.count());
     }
 
     #[test]

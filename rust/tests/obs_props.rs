@@ -1,0 +1,304 @@
+//! Observability suite (protocol v1.5): properties of the tracing
+//! ring under concurrency, plus wire-level scenarios for the metrics
+//! op and the flight recorder — a request's spans must reconstruct
+//! end-to-end across the router and a TCP worker, and a worker whose
+//! engine panics must leave a parseable flight dump behind.
+//!
+//! Everything here runs artifact-free: the mock echo engine over real
+//! sockets, same as the transport suite.
+
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use qspec::config::{RouteKind, SloConfig};
+use qspec::coordinator::mock::FailureMode;
+use qspec::coordinator::EchoEngine;
+use qspec::obs::{EventKind, Tracer};
+use qspec::server::transport::{self, RemoteOpts, WorkerOpts};
+use qspec::server::{self, Inbound, PoolLifecycle, RouterCore};
+use qspec::util::json::Json;
+use qspec::util::prng::Pcg32;
+
+mod common;
+use common::{mock_tokenizer, Client};
+
+// ---------------------------------------------------------------------------
+// ring properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ring_never_exceeds_bound_under_concurrent_writers() {
+    let t = Arc::new(Tracer::new(64));
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let t = t.clone();
+        handles.push(thread::spawn(move || {
+            for _ in 0..5000 {
+                t.instant("tick", None, 0);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(t.len(), 64, "ring fills to its bound exactly");
+    assert_eq!(t.dropped(), 4 * 5000 - 64, "every eviction is counted");
+}
+
+#[test]
+fn disabled_tracing_emits_nothing_from_any_thread() {
+    let t = Arc::new(Tracer::disabled(256));
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let t = t.clone();
+        handles.push(thread::spawn(move || {
+            for _ in 0..100 {
+                t.instant("ev", Some(1), 2);
+                t.instant_with("ev2", None, 0, || unreachable!("lazy detail must not run"));
+                let _g = t.scope("quiet");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(t.is_empty());
+    assert_eq!(t.dropped(), 0);
+}
+
+/// Spans opened and closed by many threads interleave in the shared
+/// ring, but per emitting thread the Start/End sequence must replay as
+/// a well-formed nesting stack (every End matches the most recent
+/// unclosed Start of that thread).
+#[test]
+fn spans_nest_well_formed_under_random_interleavings() {
+    const NAMES: [&str; 4] = ["phase.prefill", "phase.draft", "phase.verify", "phase.commit"];
+    let t = Arc::new(Tracer::new(1 << 14));
+    let mut handles = Vec::new();
+    for seed in 0..4u64 {
+        let t = t.clone();
+        handles.push(thread::spawn(move || {
+            let mut rng = Pcg32::seeded(0xC0FFEE ^ seed);
+            let mut open = Vec::new();
+            for i in 0..200 {
+                match rng.below(3) {
+                    0 if open.len() < 5 => {
+                        let name = NAMES[rng.below(NAMES.len() as u32) as usize];
+                        open.push(t.scope_req(name, Some(i as u64), i as u64));
+                    }
+                    1 => {
+                        open.pop(); // closes the innermost span, if any
+                    }
+                    _ => t.instant("tick", None, 0),
+                }
+            }
+            drop(open); // close whatever is still open, innermost last
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(t.dropped(), 0, "capacity sized so the property sees every event");
+    let mut stacks: std::collections::HashMap<u64, Vec<u64>> = std::collections::HashMap::new();
+    let mut total_spans = 0u64;
+    for ev in t.snapshot() {
+        let stack = stacks.entry(ev.tid).or_default();
+        match ev.kind {
+            EventKind::Start => {
+                total_spans += 1;
+                stack.push(ev.span);
+            }
+            EventKind::End => {
+                assert_eq!(
+                    stack.pop(),
+                    Some(ev.span),
+                    "End must close this thread's most recent unclosed Start"
+                );
+            }
+            EventKind::Instant => assert_eq!(ev.span, 0),
+        }
+    }
+    for (tid, stack) in stacks {
+        assert!(stack.is_empty(), "thread {tid} left spans unclosed");
+    }
+    assert!(total_spans > 0, "the walk must actually open spans");
+}
+
+// ---------------------------------------------------------------------------
+// TCP harness (mock worker + router + frontend, as in the transport suite)
+// ---------------------------------------------------------------------------
+
+fn free_addr() -> String {
+    let l = TcpListener::bind("127.0.0.1:0").expect("probe bind");
+    let addr = format!("127.0.0.1:{}", l.local_addr().unwrap().port());
+    drop(l);
+    addr
+}
+
+fn wait_listening(addr: &str) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if TcpStream::connect(addr).is_ok() {
+            return;
+        }
+        assert!(Instant::now() < deadline, "worker at {addr} never came up");
+        thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn spawn_mock_worker(addr: &str, failure: Option<FailureMode>, flight_dir: Option<PathBuf>) {
+    let addr = addr.to_string();
+    thread::spawn(move || {
+        let tok = mock_tokenizer();
+        let mut engine = EchoEngine::new(8, 512, 0);
+        if let Some(mode) = failure {
+            engine = engine.with_failure(mode);
+        }
+        let opts = WorkerOpts { flight_dir, ..WorkerOpts::default() };
+        let _ = transport::serve_worker_with_opts(&addr, &tok, &mut engine, opts);
+    });
+}
+
+/// One remote mock replica behind the real router + frontend; returns
+/// the frontend address.
+fn start_router(worker_addr: &str) -> String {
+    wait_listening(worker_addr);
+    let (rtx, rrx) = mpsc::channel::<Inbound>();
+    let remote = transport::connect_remote(0, 1, worker_addr, rtx.clone(), RemoteOpts::default())
+        .expect("worker handshake");
+    let statuses = vec![remote.handle.status.clone()];
+    let mut slots = vec![Some(remote.handle)];
+    let mut core = RouterCore::new(statuses, RouteKind::RoundRobin, SloConfig::default());
+    thread::spawn(move || {
+        let mut life = PoolLifecycle::new();
+        let _ = server::pool::router_loop_dynamic(&rrx, &mut core, &mut slots, &mut life);
+    });
+    let listener = TcpListener::bind("127.0.0.1:0").expect("frontend bind");
+    let addr = format!("127.0.0.1:{}", listener.local_addr().unwrap().port());
+    thread::spawn(move || {
+        let mut conn = 0u64;
+        for stream in listener.incoming().flatten() {
+            conn += 1;
+            let rtx = rtx.clone();
+            let c = conn;
+            thread::spawn(move || server::conn_thread(stream, c, rtx, 16, 512));
+        }
+    });
+    addr
+}
+
+// ---------------------------------------------------------------------------
+// wire scenarios
+// ---------------------------------------------------------------------------
+
+/// `{"op":"metrics"}` answers Prometheus exposition text, and
+/// `{"op":"dump"}` reconstructs one request's timeline across both
+/// sides of the wire: the router's ring shows the placement, the
+/// worker's ring shows the request lifecycle with the same id.
+#[test]
+fn metrics_and_dump_reconstruct_a_request_across_router_and_worker() {
+    let waddr = free_addr();
+    spawn_mock_worker(&waddr, None, None);
+    let frontend = start_router(&waddr);
+    let mut c = Client::connect(&frontend);
+
+    c.send(r#"{"op":"generate","prompt":"q: traced ?\n","max_tokens":8}"#);
+    let (done, _) = c.recv_until(|j| j.get("finish_reason").is_some());
+    let id = done.get("id").and_then(Json::as_i64).expect("request id");
+
+    c.send(r#"{"op":"metrics"}"#);
+    let (m, _) = c.recv_until(|j| j.get("op").and_then(Json::as_str) == Some("metrics"));
+    let body = m.get("body").and_then(Json::as_str).expect("metrics body");
+    assert!(body.contains("# TYPE"), "exposition text has TYPE headers");
+    assert!(body.contains("qspec_build_info"), "identity series present");
+    assert!(body.contains("qspec_requests_done_total 1"), "the generate is counted");
+    assert!(body.contains("qspec_replica_queue_depth"), "per-replica series present");
+
+    c.send(r#"{"op":"dump"}"#);
+    let (d, _) = c.recv_until(|j| j.get("op").and_then(Json::as_str) == Some("dump"));
+    let router_events = d
+        .get("router")
+        .and_then(|r| r.get("events"))
+        .and_then(Json::as_arr)
+        .expect("router ring");
+    assert!(
+        router_events
+            .iter()
+            .any(|e| e.get("name").and_then(Json::as_str) == Some("route.assign")),
+        "router ring shows the placement"
+    );
+    let reps = d.get("replicas").and_then(Json::as_arr).expect("replica dumps");
+    assert_eq!(reps.len(), 1);
+    let ev_named = |name: &str| {
+        reps[0]
+            .get("events")
+            .and_then(Json::as_arr)
+            .into_iter()
+            .flatten()
+            .find(|e| {
+                e.get("name").and_then(Json::as_str) == Some(name)
+                    && e.get("request").and_then(Json::as_i64) == Some(id)
+            })
+            .cloned()
+    };
+    assert!(ev_named("request.submitted").is_some(), "worker ring has the admission");
+    assert!(ev_named("request.done").is_some(), "worker ring has the completion");
+    // the whole dump frame round-trips through the line protocol
+    assert!(Json::parse(&d.to_string()).is_ok());
+}
+
+/// A worker whose engine panics mid-session writes a parseable flight
+/// dump (and survives to accept the next router session).
+#[test]
+fn worker_panic_leaves_a_parseable_flight_dump() {
+    let dir = std::env::temp_dir()
+        .join(format!("qspec-obs-panic-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let waddr = free_addr();
+    spawn_mock_worker(&waddr, Some(FailureMode::PanicAfterN(3)), Some(dir.clone()));
+    wait_listening(&waddr);
+
+    // drive the worker directly over its own documented wire: hello,
+    // then one generate envelope long enough to cross the fault cycle
+    let mut w = Client::connect(&waddr);
+    w.send(r#"{"hello":{"pool":1,"replica":0}}"#);
+    let welcome = w.recv();
+    assert!(welcome.get("welcome").is_some(), "handshake completes");
+    w.send(
+        r#"{"conn":1,"op":{"op":"generate","prompt":"q: g abcd ?\n","max_tokens":64},"tag":1}"#,
+    );
+
+    // the panic tears the session down after writing the dump
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let dump_path = loop {
+        let found = std::fs::read_dir(&dir).ok().and_then(|rd| {
+            rd.flatten()
+                .map(|e| e.path())
+                .find(|p| p.file_name().is_some_and(|n| {
+                    n.to_string_lossy().starts_with("flight-")
+                }))
+        });
+        if let Some(p) = found {
+            break p;
+        }
+        assert!(Instant::now() < deadline, "no flight dump appeared in {}", dir.display());
+        thread::sleep(Duration::from_millis(20));
+    };
+    let text = std::fs::read_to_string(&dump_path).expect("read dump");
+    let dump = Json::parse(text.trim()).expect("flight dump is one JSON object");
+    let reason = dump.get("reason").and_then(Json::as_str).expect("reason");
+    assert!(reason.starts_with("panic:"), "reason records the panic: {reason}");
+    assert!(reason.contains("injected failure"), "panic message rides along");
+    assert_eq!(dump.get("engine").and_then(Json::as_str), Some("mock"));
+    let events = dump.get("events").and_then(Json::as_arr).expect("events");
+    assert!(
+        events
+            .iter()
+            .any(|e| e.get("name").and_then(Json::as_str) == Some("request.submitted")),
+        "the in-flight request's spans are in the dump"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -86,7 +86,7 @@ fn start_router(worker_addrs: &[String], steal: bool, n_conns: usize) -> String 
             n,
             addr,
             rtx.clone(),
-            RemoteOpts { steal, retry_after_ms: 250 },
+            RemoteOpts { steal, retry_after_ms: 250, ..RemoteOpts::default() },
         )
         .expect("worker handshake");
         statuses.push(remote.handle.status.clone());
