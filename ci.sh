@@ -6,8 +6,9 @@
 #   ./ci.sh lint     # fmt + clippy + doc only (skip build/tests)
 #   ./ci.sh test     # the cross-engine conformance + property suites
 #                    # (incl. the session-free pool/router v1.3 suite,
-#                    # the paged-KV/prefix-cache properties, and the
-#                    # v1.5 observability suite) with --nocapture
+#                    # the paged-KV/prefix-cache properties, the v1.5
+#                    # observability suite, and the v1.6 stochastic
+#                    # acceptance properties) with --nocapture
 #                    # summaries, then bench smokes: pool_router +
 #                    # prefix_reuse + pool_failover + obs_overhead
 #                    # always (mock replicas/engines, no artifacts
@@ -33,7 +34,8 @@ if [ "${1:-}" = "test" ]; then
     # conformance battery (every EngineKind) + pool/router protocol
     # v1.3 scenarios + the v1.4 distributed-transport suite (TCP
     # workers, mid-stream death, stealing, rejoin, autoscaler
-    # properties) + acceptance losslessness + quantized-KV shadow
+    # properties) + acceptance losslessness (greedy exact-match and
+    # v1.6 stochastic distribution-equality) + quantized-KV shadow
     # and paged-KV/prefix-cache properties + the v1.5 observability
     # suite (tracing-ring properties, metrics/dump wire ops, flight
     # recorder), with per-engine summaries
@@ -100,6 +102,20 @@ if [ "${1:-}" = "test" ]; then
             *'"done"'*) ;;
             *) echo "smoke: bad pre-kill response: $RESP" >&2; exit 1 ;;
         esac
+        # --- seeded sampling smoke (protocol v1.6) -----------------
+        # temperature > 0 must stream to completion through the pool
+        # (the mock worker serves the stochastic path); a bad_request
+        # here would mean the argmax-only guard regressed
+        printf '%s\n' \
+            '{"op":"generate","prompt":"q: warm ?\n","max_tokens":8,"temperature":0.7,"seed":7,"stream":false}' >&3
+        IFS= read -r -t 30 RESP <&3 \
+            || { echo "smoke: no response to the sampled request" >&2; exit 1; }
+        case "$RESP" in
+            *'"error"'*) echo "smoke: sampled request rejected: $RESP" >&2; exit 1 ;;
+            *'"done"'*) ;;
+            *) echo "smoke: bad sampled response: $RESP" >&2; exit 1 ;;
+        esac
+        echo "ci.sh: seeded sampling smoke passed"
         # --- metrics-endpoint smoke (protocol v1.5) ----------------
         # plain-HTTP scrape of the router's --metrics-addr: the body
         # must be well-formed Prometheus exposition text naming the

@@ -96,12 +96,13 @@ class ModuleSpec:
     scheme: str      # atom | quarot (ignored for w16a16)
     mode: str        # w16a16 | w4a16 | w4a4
     entry: str       # prefill | decode | draft | verify | score
+                     # | prefill_logits | decode_logits | verify_logits
     batch: int
     gamma: int = GAMMA  # draft length (draft/verify entries)
 
     @property
     def name(self) -> str:
-        g = f"_g{self.gamma}" if self.entry in ("draft", "verify") else ""
+        g = f"_g{self.gamma}" if self.entry in ("draft", "verify", "verify_logits") else ""
         return f"{self.size}_{self.scheme}_{self.mode}_{self.entry}_b{self.batch}{g}"
 
     def weights_key(self) -> str:
@@ -135,8 +136,14 @@ def default_manifest() -> list:
             for mode in MODES:
                 add(size, "atom", mode, "prefill", b)
                 add(size, "atom", mode, "decode", b)
+                # stochastic-sampling twins (raw logits cross the host
+                # boundary; w4a4 decode_logits doubles as the sampled
+                # draft step)
+                add(size, "atom", mode, "prefill_logits", b)
+                add(size, "atom", mode, "decode_logits", b)
             add(size, "atom", "w4a4", "draft", b)
             add(size, "atom", "w4a16", "verify", b)
+            add(size, "atom", "w4a16", "verify_logits", b)
 
     # --- gamma ablation (fig5): s@8 and m@16 -------------------------
     for size, b in (("s", 8), ("m", 16)):
@@ -148,8 +155,11 @@ def default_manifest() -> list:
     for mode in ("w4a16", "w4a4"):
         add("s", "quarot", mode, "prefill", 8)
         add("s", "quarot", mode, "decode", 8)
+        add("s", "quarot", mode, "prefill_logits", 8)
+        add("s", "quarot", mode, "decode_logits", 8)
     add("s", "quarot", "w4a4", "draft", 8)
     add("s", "quarot", "w4a16", "verify", 8)
+    add("s", "quarot", "w4a16", "verify_logits", 8)
 
     # --- fidelity scoring (tables 1/3): perplexity entries -----------
     for mode in MODES:
@@ -161,7 +171,9 @@ def default_manifest() -> list:
     for b in (1, 8, 16):
         add("eagle", "atom", "w16a16", "prefill", b)
         add("eagle", "atom", "w16a16", "draft", b, 5)      # fp chain draft
+        add("eagle", "atom", "w16a16", "decode_logits", b)  # sampled draft chain
         add("m", "atom", "w4a16", "verify", b, 5)          # target verify
+        add("m", "atom", "w4a16", "verify_logits", b, 5)
         if b != 8:  # b=8 already in core grid
             add("m", "atom", "w4a16", "prefill", b)
             add("m", "atom", "w4a16", "decode", b)
@@ -172,13 +184,20 @@ def default_manifest() -> list:
         add("m", "atom", "w4a16", "decode", b)
         add("m", "atom", "w4a4", "draft", b)
         add("m", "atom", "w4a16", "verify", b)
+        add("m", "atom", "w4a16", "prefill_logits", b)
+        add("m", "atom", "w4a4", "decode_logits", b)
+        add("m", "atom", "w4a16", "decode_logits", b)
+        add("m", "atom", "w4a16", "verify_logits", b)
 
     # --- tiny config for rust integration tests ----------------------
     for mode in MODES:
         add("tiny", "atom", mode, "prefill", 4)
         add("tiny", "atom", mode, "decode", 4)
+        add("tiny", "atom", mode, "prefill_logits", 4)
+        add("tiny", "atom", mode, "decode_logits", 4)
     add("tiny", "atom", "w4a4", "draft", 4)
     add("tiny", "atom", "w4a16", "verify", 4)
+    add("tiny", "atom", "w4a16", "verify_logits", 4)
     add("tiny", "atom", "w4a16", "score", 4)
 
     # dedupe (order-preserving)

@@ -18,6 +18,14 @@ Serving entries (exported to HLO text by aot.py, executed from rust):
                 -> (vtok[B,G1], vtop[B,G1], pfed[B,G1], kv')
   score   : (rows[B,T1], *w)                         -> (nll[B], cnt[B])
 
+Logits-returning twins (same compute + cache writes, but the raw
+un-tempered logits cross the host boundary so rust can sample —
+temperature/seed live host-side; cheap because vocab is small):
+
+  prefill_logits : same args as prefill -> (logits[B,V], kv')
+  decode_logits  : same args as decode  -> (logits[B,V], kv')
+  verify_logits  : same args as verify  -> (logits[B,G1,V], kv')
+
 Cache convention (DESIGN.md §7): kv[L,2,B,Hkv,S,hd] holds K/V for all
 *committed* tokens; pos[b] = the write index of the pending token. A
 chunk of T tokens writes K/V at pos..pos+T-1 and its logits at offset t
@@ -322,6 +330,35 @@ def verify_entry(cfg, mode, scheme, params, tokens, pos, start, mask, kv):
     return vtok, vtop, pfed, kv
 
 
+def prefill_logits_entry(cfg, mode, scheme, params, tokens, start, mask, kv):
+    """`prefill` twin returning the last-position logits row [B,V] raw,
+    so the host can temperature-sample the first generated token."""
+    b, _ = tokens.shape
+    zeros = jnp.zeros((b,), jnp.int32)
+    logits, kv = forward_chunk(cfg, params, tokens, zeros, start, kv, mode,
+                               scheme, update_mask=mask)
+    return logits[:, -1, :], kv
+
+
+def decode_logits_entry(cfg, mode, scheme, params, tok, pos, start, kv):
+    """`decode` twin returning the logits row [B,V] raw. Stochastic
+    drafting chains this sequentially: the host samples token j from
+    softmax(logits/T) and feeds it back as tok for step j+1."""
+    logits, kv = forward_chunk(cfg, params, tok[:, None], pos, start, kv,
+                               mode, scheme)
+    return logits[:, 0, :], kv
+
+
+def verify_logits_entry(cfg, mode, scheme, params, tokens, pos, start, mask, kv):
+    """`verify` twin returning the full logits block [B,G1,V] raw — the
+    verifier distribution p at every fed position, which the stochastic
+    accept rule (min(1, p/q), residual resample) needs host-side.
+    Writes A16 K/V for every fed position exactly like `verify`."""
+    logits, kv = forward_chunk(cfg, params, tokens, pos, start, kv, mode,
+                               scheme, update_mask=mask)
+    return logits, kv
+
+
 def score_entry(cfg, mode, scheme, params, rows):
     """Perplexity scoring: rows [B,T+1] -> (nll_sum[B], token_count[B])."""
     inp, tgt = rows[:, :-1], rows[:, 1:]
@@ -353,6 +390,15 @@ def make_entry_fn(cfg, spec):
     if e == "verify":
         return lambda tokens, pos, start, mask, kv, params: verify_entry(
             cfg, mode, scheme, params, tokens, pos, start, mask, kv)
+    if e == "prefill_logits":
+        return lambda tokens, start, mask, kv, params: prefill_logits_entry(
+            cfg, mode, scheme, params, tokens, start, mask, kv)
+    if e == "decode_logits":
+        return lambda tok, pos, start, kv, params: decode_logits_entry(
+            cfg, mode, scheme, params, tok, pos, start, kv)
+    if e == "verify_logits":
+        return lambda tokens, pos, start, mask, kv, params: verify_logits_entry(
+            cfg, mode, scheme, params, tokens, pos, start, mask, kv)
     if e == "score":
         return lambda rows, params: score_entry(cfg, mode, scheme, params, rows)
     raise ValueError(e)
@@ -367,13 +413,13 @@ def entry_arg_specs(cfg, spec, score_t=SCORE_T):
     i32, f32 = jnp.int32, jnp.float32
     kv = jax.ShapeDtypeStruct(kv_shape(cfg, b), f32)
     vec = jax.ShapeDtypeStruct((b,), i32)
-    if spec.entry == "prefill":
+    if spec.entry in ("prefill", "prefill_logits"):
         return [jax.ShapeDtypeStruct((b, PREFILL_T), i32), vec, vec, kv]
-    if spec.entry == "decode":
+    if spec.entry in ("decode", "decode_logits"):
         return [vec, vec, vec, kv]
     if spec.entry == "draft":
         return [vec, vec, vec, kv]
-    if spec.entry == "verify":
+    if spec.entry in ("verify", "verify_logits"):
         return [jax.ShapeDtypeStruct((b, spec.gamma + 1), i32), vec, vec, vec, kv]
     if spec.entry == "score":
         return [jax.ShapeDtypeStruct((b, score_t + 1), i32)]

@@ -140,6 +140,80 @@ def test_verify_equals_decode_sequence(params):
     np.testing.assert_array_equal(np.asarray(vtok), np.stack(outs, 1))
 
 
+def test_logits_entries_match_argmax_twins(params):
+    """The *_logits twins must agree with their greedy counterparts:
+    same argmax tokens, same KV cache writes (stochastic sampling must
+    not perturb the compute graph, only where sampling happens)."""
+    b, gamma = 2, 3
+    zeros = jnp.zeros((b,), jnp.int32)
+    ones = jnp.ones((b,), jnp.int32)
+
+    # prefill vs prefill_logits
+    prompt = rand_tokens(b, 8, seed=10)
+    tok, _, kv_a = model.prefill_entry(CFG, "w16a16", "atom", params, prompt,
+                                       zeros, ones, empty_kv(b))
+    logits, kv_b = model.prefill_logits_entry(CFG, "w16a16", "atom", params,
+                                              prompt, zeros, ones, empty_kv(b))
+    assert logits.shape == (b, CFG.vocab)
+    np.testing.assert_array_equal(np.asarray(tok),
+                                  np.asarray(jnp.argmax(logits, axis=-1)))
+    np.testing.assert_allclose(np.asarray(kv_a), np.asarray(kv_b),
+                               rtol=1e-5, atol=1e-5)
+
+    # decode vs decode_logits
+    cur = rand_tokens(b, 1, seed=11)[:, 0]
+    pos = jnp.full((b,), 8, jnp.int32)
+    t, _, kv_a = model.decode_entry(CFG, "w16a16", "atom", params, cur, pos,
+                                    zeros, kv_a)
+    dl, kv_b = model.decode_logits_entry(CFG, "w16a16", "atom", params, cur,
+                                         pos, zeros, kv_b)
+    assert dl.shape == (b, CFG.vocab)
+    np.testing.assert_array_equal(np.asarray(t),
+                                  np.asarray(jnp.argmax(dl, axis=-1)))
+    np.testing.assert_allclose(np.asarray(kv_a), np.asarray(kv_b),
+                               rtol=1e-5, atol=1e-5)
+
+    # verify vs verify_logits: same argmax grid, same softmax rows
+    toks = rand_tokens(b, gamma + 1, seed=12)
+    vtok, vtop, _, kv_a = model.verify_entry(CFG, "w16a16", "atom", params,
+                                             toks, zeros, zeros, ones,
+                                             empty_kv(b))
+    vl, kv_b = model.verify_logits_entry(CFG, "w16a16", "atom", params, toks,
+                                         zeros, zeros, ones, empty_kv(b))
+    assert vl.shape == (b, gamma + 1, CFG.vocab)
+    np.testing.assert_array_equal(np.asarray(vtok),
+                                  np.asarray(jnp.argmax(vl, axis=-1)))
+    p = jax.nn.softmax(vl, axis=-1)
+    np.testing.assert_allclose(np.asarray(jnp.max(p, axis=-1)),
+                               np.asarray(vtop), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kv_a), np.asarray(kv_b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_logits_entries_export_specs():
+    """Manifest/naming plumbing for the logits twins: arg specs mirror
+    the greedy twins; verify_logits carries the gamma suffix."""
+    from compile.configs import default_manifest
+
+    for entry, twin in (("prefill_logits", "prefill"),
+                        ("decode_logits", "decode"),
+                        ("verify_logits", "verify")):
+        s_l = ModuleSpec("tiny", "atom", "w4a16", entry, 4)
+        s_g = ModuleSpec("tiny", "atom", "w4a16", twin, 4)
+        shapes_l = [a.shape for a in model.entry_arg_specs(CFG, s_l)]
+        shapes_g = [a.shape for a in model.entry_arg_specs(CFG, s_g)]
+        assert shapes_l == shapes_g
+        fn = model.make_entry_fn(CFG, s_l)
+        assert callable(fn)
+    assert ModuleSpec("s", "atom", "w4a16", "verify_logits", 8, 5).name \
+        == "s_atom_w4a16_verify_logits_b8_g5"
+    names = {m.name for m in default_manifest()}
+    # the tiny grid used by rust integration tests ships all three twins
+    assert "tiny_atom_w4a16_prefill_logits_b4" in names
+    assert "tiny_atom_w4a4_decode_logits_b4" in names
+    assert "tiny_atom_w4a16_verify_logits_b4_g3" in names
+
+
 def test_score_entry_counts_and_positive_nll(params):
     rows = rand_tokens(2, 33, seed=7)
     nll, cnt = model.score_entry(CFG, "w16a16", "atom", params, rows)

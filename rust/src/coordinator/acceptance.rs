@@ -6,6 +6,20 @@
 //! emitted in its place (resample). When everything matches, the
 //! verifier's extra prediction is appended as a bonus token — so a cycle
 //! always commits between 1 and gamma+1 tokens.
+//!
+//! For `temperature > 0` the greedy rule is not enough: speculative
+//! decoding is only *distribution*-lossless under the canonical
+//! stochastic accept rule (Leviathan et al.; the mistralrs
+//! `SpeculativePipeline` implements the same): accept draft token j
+//! with probability `min(1, p_j(x) / q_j(x))` where `q` is the draft
+//! distribution the token was actually sampled from and `p` the
+//! verifier's distribution at that position; on rejection, resample
+//! from the residual `norm(max(0, p_j - q_j))` and drop the tail; when
+//! every draft survives, sample the bonus token from `p_gamma`.
+//! [`stochastic_accept`] implements this, drawing every random number
+//! from the request's seeded [`Sampler`] so replays are exact.
+
+use crate::sampler::Sampler;
 
 /// Result of applying an acceptance policy to one slot's cycle.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -67,9 +81,89 @@ pub fn threshold_accept(
     AcceptDecision { accepted, committed }
 }
 
+/// Stochastic (distribution-lossless) acceptance — the canonical
+/// accept/resample rule for sampled speculative decoding.
+///
+/// * `drafts` — gamma tokens, token j sampled from `q` row j
+/// * `q` — draft distributions, row-major `[gamma, vocab]`: row j is
+///   the distribution draft token j was sampled from
+/// * `p` — verifier distributions, row-major `[gamma+1, vocab]`: row j
+///   is the verifier's distribution after the prefix + drafts[..j]
+/// * `sampler` — the request's seeded sampler; consumes one accept
+///   draw per considered draft plus exactly one resample/bonus draw
+///
+/// Per position j: accept draft token `d` with probability
+/// `min(1, p_j[d] / q_j[d])`. On rejection, commit a token sampled
+/// from the residual `norm(max(0, p_j - q_j))` and stop. If all gamma
+/// drafts are accepted, commit a bonus token sampled from `p[gamma]`.
+/// The committed stream is then distributed exactly as a pure
+/// verifier rollout, whatever `q` was (q only changes *speed*).
+///
+/// Edge cases: `q_j[d] <= 0` (the draft proposed a token its own
+/// distribution says is impossible — numerically degenerate) accepts
+/// iff `p_j[d] > 0`; a numerically empty residual (p ≈ q) resamples
+/// from `p_j` directly, which is the correct limit.
+pub fn stochastic_accept(
+    drafts: &[i32],
+    q: &[f32],
+    p: &[f32],
+    vocab: usize,
+    sampler: &mut Sampler,
+) -> AcceptDecision {
+    debug_assert_eq!(q.len(), drafts.len() * vocab);
+    debug_assert_eq!(p.len(), (drafts.len() + 1) * vocab);
+    let mut committed = Vec::with_capacity(drafts.len() + 1);
+    let mut accepted = 0;
+    for (j, &d) in drafts.iter().enumerate() {
+        let qr = &q[j * vocab..(j + 1) * vocab];
+        let pr = &p[j * vocab..(j + 1) * vocab];
+        let t = (d as usize).min(vocab.saturating_sub(1));
+        let (qd, pd) = (qr[t], pr[t]);
+        let ratio = if qd > 0.0 {
+            (pd as f64 / qd as f64).min(1.0)
+        } else if pd > 0.0 {
+            1.0
+        } else {
+            0.0
+        };
+        if sampler.accept_draw() < ratio {
+            committed.push(d);
+            accepted += 1;
+            continue;
+        }
+        // rejection: resample from norm(max(0, p - q)), drop the tail
+        let mut residual: Vec<f32> = pr.iter().zip(qr).map(|(&pv, &qv)| (pv - qv).max(0.0)).collect();
+        let z: f32 = residual.iter().sum();
+        if z > 0.0 && z.is_finite() {
+            for r in residual.iter_mut() {
+                *r /= z;
+            }
+            committed.push(sampler.sample_probs(&residual) as i32);
+        } else {
+            // p == q numerically: the residual is the zero measure and
+            // resampling from p itself is the correct limit
+            committed.push(sampler.sample_probs(pr) as i32);
+        }
+        return AcceptDecision { accepted, committed };
+    }
+    // all drafts accepted: bonus token sampled from p_gamma
+    let bonus = &p[drafts.len() * vocab..(drafts.len() + 1) * vocab];
+    committed.push(sampler.sample_probs(bonus) as i32);
+    AcceptDecision { accepted, committed }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::SamplingParams;
+
+    fn warm_sampler(seed: u64) -> Sampler {
+        Sampler::new(&SamplingParams {
+            temperature: 1.0,
+            seed,
+            ..SamplingParams::default()
+        })
+    }
 
     #[test]
     fn all_accepted_appends_bonus() {
@@ -129,6 +223,63 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn stochastic_identical_distributions_accept_everything() {
+        // q == p => min(1, p/q) == 1 at every position: all drafts
+        // accepted, bonus sampled from p_gamma
+        let vocab = 4;
+        let q = vec![0.25f32; 2 * vocab];
+        let p = vec![0.25f32; 3 * vocab];
+        for seed in 0..50 {
+            let mut s = warm_sampler(seed);
+            let dec = stochastic_accept(&[1, 2], &q, &p, vocab, &mut s);
+            assert_eq!(dec.accepted, 2);
+            assert_eq!(dec.committed.len(), 3);
+            assert_eq!(&dec.committed[..2], &[1, 2]);
+            assert!((0..vocab as i32).contains(dec.committed.last().unwrap()));
+        }
+    }
+
+    #[test]
+    fn stochastic_impossible_draft_always_rejected() {
+        // p assigns zero mass to the draft token: accept prob is 0,
+        // and the residual (== p here, since q's mass is elsewhere)
+        // never yields that token either
+        let vocab = 3;
+        let q = vec![0.0f32, 1.0, 0.0]; // draft sampled token 1
+        let p = vec![0.5f32, 0.0, 0.5, /* bonus row */ 1.0, 0.0, 0.0];
+        for seed in 0..100 {
+            let mut s = warm_sampler(seed);
+            let dec = stochastic_accept(&[1], &q, &p, vocab, &mut s);
+            assert_eq!(dec.accepted, 0);
+            assert_eq!(dec.committed.len(), 1);
+            assert_ne!(dec.committed[0], 1, "zero-p token resampled");
+        }
+    }
+
+    #[test]
+    fn stochastic_degenerate_q_zero_accepts_when_p_positive() {
+        // q[d] == 0 but p[d] > 0: the ratio limit is +inf, clamp to 1
+        let vocab = 2;
+        let q = vec![1.0f32, 0.0];
+        let p = vec![0.0f32, 1.0, 0.5, 0.5];
+        let mut s = warm_sampler(7);
+        let dec = stochastic_accept(&[1], &q, &p, vocab, &mut s);
+        assert_eq!(dec.accepted, 1);
+    }
+
+    #[test]
+    fn stochastic_same_seed_replays_identically() {
+        let vocab = 5;
+        let q: Vec<f32> = (0..3 * vocab).map(|i| ((i % 5) as f32 + 1.0) / 15.0).collect();
+        let p: Vec<f32> = (0..4 * vocab).map(|i| ((i % 5) as f32 + 1.0) / 15.0).collect();
+        let a = stochastic_accept(&[0, 3, 1], &q, &p, vocab, &mut warm_sampler(11));
+        let b = stochastic_accept(&[0, 3, 1], &q, &p, vocab, &mut warm_sampler(11));
+        assert_eq!(a, b);
+        // bounds hold like the greedy rule: 1..=gamma+1 committed
+        assert_eq!(a.committed.len(), a.accepted + 1);
     }
 
     #[test]

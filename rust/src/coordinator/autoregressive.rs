@@ -11,6 +11,7 @@ use crate::costmodel::{twins::Twin, CostModel, Phase};
 use crate::error::Result;
 use crate::kvcache::SlotManager;
 use crate::metrics::{PhaseKind, PhaseTimer};
+use crate::model::tokenizer::PAD;
 use crate::model::Mode;
 use crate::runtime::{ModelMeta, Module, Session, WeightSet};
 
@@ -25,6 +26,10 @@ pub struct ArEngine<'s> {
     pub meta: ModelMeta,
     prefill_m: Rc<Module>,
     decode_m: Rc<Module>,
+    // logits twins (newer artifact sets only): present => the engine can
+    // serve temperature > 0; absent => argmax-only
+    prefill_logits_m: Option<Rc<Module>>,
+    decode_logits_m: Option<Rc<Module>>,
     weights: Rc<WeightSet>,
     kv: Option<xla::PjRtBuffer>,
     pub core: BatchCore,
@@ -42,6 +47,10 @@ impl<'s> ArEngine<'s> {
         let m = &sess.store.manifest;
         let prefill_m = sess.module(size, scheme, mode.as_str(), "prefill", batch, 0)?;
         let decode_m = sess.module(size, scheme, mode.as_str(), "decode", batch, 0)?;
+        let prefill_logits_m =
+            sess.module(size, scheme, mode.as_str(), "prefill_logits", batch, 0).ok();
+        let decode_logits_m =
+            sess.module(size, scheme, mode.as_str(), "decode_logits", batch, 0).ok();
         let weights = sess.weights(&prefill_m.meta.weights_key)?;
         let kv = Some(sess.fresh_kv(size, batch)?);
         let slots = SlotManager::new(batch, meta.max_seq, m.prefill_t);
@@ -55,6 +64,8 @@ impl<'s> ArEngine<'s> {
             meta,
             prefill_m,
             decode_m,
+            prefill_logits_m,
+            decode_logits_m,
             weights,
             kv,
             core: BatchCore::new(slots, cost),
@@ -69,10 +80,33 @@ impl<'s> ArEngine<'s> {
         let p = self.core.slots.prefill_t();
         let timer = PhaseTimer::start();
         let kv = self.kv.take().expect("kv");
-        let r = self
-            .prefill_m
-            .call_prefill(&pb.tokens, &pb.start, &pb.mask, &kv, &self.weights)?;
-        self.kv = Some(r.kv);
+        let stochastic = pb.admitted.iter().any(|(i, _)| self.core.slot_stochastic(*i));
+        let ftok = if stochastic && self.prefill_logits_m.is_some() {
+            // logits twin: identical KV writes, first token sampled (or
+            // argmax'd for greedy slots) host-side
+            let pm = self.prefill_logits_m.clone().expect("prefill_logits");
+            let r = pm.call_prefill_logits(&pb.tokens, &pb.start, &pb.mask, &kv, &self.weights)?;
+            self.kv = Some(r.kv);
+            let vocab = self.meta.vocab;
+            let mut tok = vec![PAD; self.core.slots.batch()];
+            for (i, _) in &pb.admitted {
+                let row = &r.logits[i * vocab..(i + 1) * vocab];
+                tok[*i] = match self.core.sampler_mut(*i) {
+                    Some(s) => {
+                        let pr = s.probs(row);
+                        s.sample_probs(&pr) as i32
+                    }
+                    None => crate::sampler::argmax(row) as i32,
+                };
+            }
+            tok
+        } else {
+            let r = self
+                .prefill_m
+                .call_prefill(&pb.tokens, &pb.start, &pb.mask, &kv, &self.weights)?;
+            self.kv = Some(r.kv);
+            r.tok
+        };
         // prefill is priced per *uncached* token: blocks attached from
         // the prefix cache carry committed KV and cost no compute
         let virt = self
@@ -80,7 +114,7 @@ impl<'s> ArEngine<'s> {
             .cost
             .charge(self.mode, Phase::Chunk, pb.admitted.len(), pb.uncached_tokens(), p);
         self.core.metrics.add_phase(PhaseKind::Prefill, timer.elapsed_ns(), virt);
-        self.core.finish_prefill(&pb, &r.tok, out);
+        self.core.finish_prefill(&pb, &ftok, out);
         Ok(())
     }
 
@@ -91,6 +125,31 @@ impl<'s> ArEngine<'s> {
         };
         let timer = PhaseTimer::start();
         let kv = self.kv.take().expect("kv");
+        if self.core.any_stochastic(&sb.active) && self.decode_logits_m.is_some() {
+            // logits twin: per-slot host sampling (argmax for greedy
+            // slots commits tokens identical to the fused path)
+            let dm = self.decode_logits_m.clone().expect("decode_logits");
+            let r = dm.call_decode_logits(&sb.tok, &sb.pos, &sb.start, &kv, &self.weights)?;
+            self.kv = Some(r.kv);
+            let vocab = self.meta.vocab;
+            let virt = self
+                .core
+                .cost
+                .charge(self.mode, Phase::Decode, sb.active.len(), 1, sb.mean_ctx);
+            self.core.metrics.add_phase(PhaseKind::Decode, timer.elapsed_ns(), virt);
+            for &i in &sb.active {
+                let row = &r.logits[i * vocab..(i + 1) * vocab];
+                let t = match self.core.sampler_mut(i) {
+                    Some(s) => {
+                        let pr = s.probs(row);
+                        s.sample_probs(&pr) as i32
+                    }
+                    None => crate::sampler::argmax(row) as i32,
+                };
+                self.core.commit(i, &[t], 1, out);
+            }
+            return Ok(());
+        }
         let r = self
             .decode_m
             .call_decode(&sb.tok, &sb.pos, &sb.start, &kv, &self.weights)?;
@@ -110,6 +169,10 @@ impl<'s> ArEngine<'s> {
 impl<'s> Engine for ArEngine<'s> {
     fn name(&self) -> &'static str {
         self.mode.as_str()
+    }
+
+    fn argmax_only(&self) -> bool {
+        self.prefill_logits_m.is_none() || self.decode_logits_m.is_none()
     }
 
     fn core(&self) -> &BatchCore {

@@ -26,8 +26,8 @@ use crate::model::tokenizer::PAD;
 use crate::model::Mode;
 use crate::runtime::{ModelMeta, Module, Session, WeightSet};
 
-use super::acceptance::greedy_accept;
-use super::engine::{BatchCore, Engine};
+use super::acceptance::{greedy_accept, stochastic_accept};
+use super::engine::{BatchCore, Engine, StepBatch};
 use super::request::StepEvent;
 
 /// EAGLE baseline configuration.
@@ -84,6 +84,11 @@ pub struct EagleEngine<'s> {
     d_prefill: Rc<Module>,
     d_draft: Rc<Module>,
     d_weights: Rc<WeightSet>,
+    // logits twins (newer artifact sets only): present => the engine can
+    // serve temperature > 0; absent => argmax-only
+    t_prefill_logits: Option<Rc<Module>>,
+    t_verify_logits: Option<Rc<Module>>,
+    d_decode_logits: Option<Rc<Module>>,
     kv_target: Option<xla::PjRtBuffer>,
     kv_draft: Option<xla::PjRtBuffer>,
     pub core: BatchCore,
@@ -102,6 +107,14 @@ impl<'s> EagleEngine<'s> {
         let d_prefill = sess.module("eagle", "atom", "w16a16", "prefill", cfg.batch, 0)?;
         let d_draft = sess.module("eagle", "atom", "w16a16", "draft", cfg.batch, cfg.gamma)?;
         let d_weights = sess.weights(&d_prefill.meta.weights_key)?;
+        let t_prefill_logits = sess
+            .module(&cfg.size, &cfg.scheme, "w4a16", "prefill_logits", cfg.batch, 0)
+            .ok();
+        let t_verify_logits = sess
+            .module(&cfg.size, &cfg.scheme, "w4a16", "verify_logits", cfg.batch, cfg.gamma)
+            .ok();
+        let d_decode_logits =
+            sess.module("eagle", "atom", "w16a16", "decode_logits", cfg.batch, 0).ok();
 
         let cost = CostModel::new(Twin::lookup(&meta.paper_twin));
         let draft_twin = Twin::lookup("eagle-head");
@@ -142,6 +155,9 @@ impl<'s> EagleEngine<'s> {
             d_prefill,
             d_draft,
             d_weights,
+            t_prefill_logits,
+            t_verify_logits,
+            d_decode_logits,
             kv_target,
             kv_draft,
             core: BatchCore::new(slots, cost),
@@ -157,10 +173,33 @@ impl<'s> EagleEngine<'s> {
         // target prefill
         let timer = PhaseTimer::start();
         let kv = self.kv_target.take().expect("kv");
-        let r = self
-            .t_prefill
-            .call_prefill(&pb.tokens, &pb.start, &pb.mask, &kv, &self.t_weights)?;
-        self.kv_target = Some(r.kv);
+        let stochastic = pb.admitted.iter().any(|(i, _)| self.core.slot_stochastic(*i));
+        let ftok = if stochastic && self.t_prefill_logits.is_some() {
+            // logits twin: identical KV writes, first token sampled (or
+            // argmax'd for greedy slots) host-side
+            let pm = self.t_prefill_logits.clone().expect("prefill_logits");
+            let r = pm.call_prefill_logits(&pb.tokens, &pb.start, &pb.mask, &kv, &self.t_weights)?;
+            self.kv_target = Some(r.kv);
+            let vocab = self.meta.vocab;
+            let mut tok = vec![PAD; self.cfg.batch];
+            for (i, _) in &pb.admitted {
+                let row = &r.logits[i * vocab..(i + 1) * vocab];
+                tok[*i] = match self.core.sampler_mut(*i) {
+                    Some(s) => {
+                        let pr = s.probs(row);
+                        s.sample_probs(&pr) as i32
+                    }
+                    None => crate::sampler::argmax(row) as i32,
+                };
+            }
+            tok
+        } else {
+            let r = self
+                .t_prefill
+                .call_prefill(&pb.tokens, &pb.start, &pb.mask, &kv, &self.t_weights)?;
+            self.kv_target = Some(r.kv);
+            r.tok
+        };
         // prefill is priced per *uncached* token: blocks attached from
         // the prefix cache carry committed KV and cost no compute
         let virt = self
@@ -176,7 +215,7 @@ impl<'s> EagleEngine<'s> {
             .call_prefill(&pb.tokens, &pb.start, &pb.mask, &dkv, &self.d_weights)?;
         self.kv_draft = Some(r2.kv);
         self.core.metrics.add_phase(PhaseKind::Prefill, timer.elapsed_ns(), 0);
-        self.core.finish_prefill(&pb, &r.tok, out);
+        self.core.finish_prefill(&pb, &ftok, out);
         Ok(())
     }
 
@@ -185,6 +224,12 @@ impl<'s> EagleEngine<'s> {
             Some(sb) => sb,
             None => return Ok(()),
         };
+        if self.core.any_stochastic(&sb.active)
+            && self.d_decode_logits.is_some()
+            && self.t_verify_logits.is_some()
+        {
+            return self.cycle_stochastic(&sb, out);
+        }
         let b = self.cfg.batch;
         let g = self.cfg.gamma;
 
@@ -246,6 +291,109 @@ impl<'s> EagleEngine<'s> {
         Ok(())
     }
 
+    /// The stochastic cycle: the fp draft head chain-drafts via gamma
+    /// sequential `decode_logits` steps (host sampling from the draft
+    /// distribution q), the target verifies via `verify_logits`, then
+    /// the Leviathan accept rule runs per slot — the two-model setting
+    /// the rule was designed for (q and p genuinely diverge). Cost
+    /// charges match the greedy cycle (incl. the modeled tree tokens).
+    fn cycle_stochastic(&mut self, sb: &StepBatch, out: &mut Vec<StepEvent>) -> Result<()> {
+        let b = self.cfg.batch;
+        let g = self.cfg.gamma;
+        let vocab = self.meta.vocab;
+        let dm = self.d_decode_logits.clone().expect("decode_logits");
+        let vm = self.t_verify_logits.clone().expect("verify_logits");
+
+        // draft: sequential chain on the separate fp head, own cache
+        let timer = PhaseTimer::start();
+        let mut cur = sb.tok.clone();
+        let mut drafts = vec![PAD; b * g];
+        let mut q = vec![0f32; b * g * vocab];
+        for j in 0..g {
+            let pos: Vec<i32> = sb.pos.iter().map(|&p| p + j as i32).collect();
+            let dkv = self.kv_draft.take().expect("dkv");
+            let r = dm.call_decode_logits(&cur, &pos, &sb.start, &dkv, &self.d_weights)?;
+            self.kv_draft = Some(r.kv);
+            for &i in &sb.active {
+                let row = &r.logits[i * vocab..(i + 1) * vocab];
+                let d = match self.core.sampler_mut(i) {
+                    Some(s) => {
+                        let qp = s.probs(row);
+                        let d = s.sample_probs(&qp);
+                        let at = (i * g + j) * vocab;
+                        q[at..at + vocab].copy_from_slice(&qp);
+                        d
+                    }
+                    None => crate::sampler::argmax(row),
+                } as i32;
+                drafts[i * g + j] = d;
+                cur[i] = d;
+            }
+        }
+        let draft_twin = Twin::lookup("eagle-head");
+        let mut virt = 0u128;
+        for _ in 0..g {
+            virt += CostModel::ns_for(
+                &draft_twin,
+                Mode::W16A16,
+                Phase::Decode,
+                sb.active.len(),
+                1,
+                sb.mean_ctx,
+            );
+        }
+        self.core.cost.virtual_ns += virt;
+        self.core.metrics.add_phase(PhaseKind::Draft, timer.elapsed_ns(), virt);
+
+        // verify on the target (tree cost modeled via tree_tokens)
+        let mut vtokens = vec![PAD; b * (g + 1)];
+        for slot in 0..b {
+            vtokens[slot * (g + 1)] = sb.tok[slot];
+            for j in 0..g {
+                vtokens[slot * (g + 1) + 1 + j] = drafts[slot * g + j];
+            }
+        }
+        let timer = PhaseTimer::start();
+        let kv = self.kv_target.take().expect("kv");
+        let v = vm.call_verify_logits(&vtokens, &sb.pos, &sb.start, &sb.mask, &kv, &self.t_weights)?;
+        self.kv_target = Some(v.kv);
+        let virt = self.core.cost.charge(
+            Mode::W4A16,
+            Phase::Chunk,
+            sb.active.len(),
+            self.cfg.tree_tokens(),
+            sb.mean_ctx,
+        );
+        self.core.metrics.add_phase(PhaseKind::Verify, timer.elapsed_ns(), virt);
+
+        let timer = PhaseTimer::start();
+        for &i in &sb.active {
+            let dr = &drafts[i * g..(i + 1) * g];
+            let vrows = &v.logits[i * (g + 1) * vocab..(i + 1) * (g + 1) * vocab];
+            let dec = match self.core.sampler_mut(i) {
+                Some(s) => {
+                    let mut p = Vec::with_capacity((g + 1) * vocab);
+                    for j in 0..=g {
+                        p.extend(s.probs(&vrows[j * vocab..(j + 1) * vocab]));
+                    }
+                    stochastic_accept(dr, &q[i * g * vocab..(i + 1) * g * vocab], &p, vocab, s)
+                }
+                None => {
+                    let vt: Vec<i32> = (0..=g)
+                        .map(|j| crate::sampler::argmax(&vrows[j * vocab..(j + 1) * vocab]) as i32)
+                        .collect();
+                    greedy_accept(dr, &vt)
+                }
+            };
+            self.core.metrics.drafted += g as u64;
+            self.core.metrics.accepted += dec.accepted as u64;
+            self.core.metrics.record_accept(dec.accepted as u64);
+            self.core.commit(i, &dec.committed, g, out);
+        }
+        self.core.metrics.add_phase(PhaseKind::Host, timer.elapsed_ns(), 0);
+        Ok(())
+    }
+
     pub fn draft_model_meta(&self) -> &ModelMeta {
         &self.draft_meta
     }
@@ -254,6 +402,12 @@ impl<'s> EagleEngine<'s> {
 impl<'s> Engine for EagleEngine<'s> {
     fn name(&self) -> &'static str {
         "eagle"
+    }
+
+    fn argmax_only(&self) -> bool {
+        self.t_prefill_logits.is_none()
+            || self.t_verify_logits.is_none()
+            || self.d_decode_logits.is_none()
     }
 
     fn core(&self) -> &BatchCore {

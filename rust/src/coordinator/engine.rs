@@ -45,6 +45,7 @@ use crate::metrics::EngineMetrics;
 use crate::model::tokenizer::{EOS, PAD};
 use crate::obs::Tracer;
 use crate::runtime::Session;
+use crate::sampler::Sampler;
 
 use super::autoregressive::ArEngine;
 use super::eagle::{EagleConfig, EagleEngine};
@@ -115,13 +116,16 @@ pub trait Engine {
         )))
     }
 
-    /// Whether this engine can only decode greedily. Every current
-    /// engine runs AOT entries that return argmax tokens and never
-    /// expose logits to the host, so the default is `true`; an engine
-    /// gaining a logits-returning entry (ROADMAP: host-side sampling)
-    /// overrides this. The server rejects `temperature > 0` against an
-    /// argmax-only engine with a precise `bad_request` instead of
-    /// silently decoding greedily.
+    /// Whether this engine can only decode greedily. `false` means the
+    /// engine loaded logits-returning AOT entries (`*_logits` twins)
+    /// and serves `temperature > 0` distribution-losslessly via the
+    /// stochastic accept rule ([`crate::coordinator::stochastic_accept`]).
+    /// The default stays `true` as a conservative contract for new
+    /// engines: the conformance battery fails an engine that reports
+    /// `false` without actually sampling, and the server answers
+    /// `temperature > 0` against an argmax-only engine (e.g. one built
+    /// from a pre-logits artifact set) with a precise `bad_request`
+    /// instead of silently decoding greedily.
     fn argmax_only(&self) -> bool {
         true
     }
@@ -304,6 +308,12 @@ pub struct BatchCore {
     /// strides by the pool size so ids stay unique pool-wide.
     id_stride: u64,
     inflight: HashMap<u64, Inflight>,
+    /// Per-slot sampler state (parallel to the slot table): `Some` for
+    /// slots whose request samples (`temperature > 0`), `None` for
+    /// greedy slots. Each slot owns its request's seeded PRNG, so a
+    /// request's draw sequence is independent of how it was batched —
+    /// same seed, same tokens, whatever else is in flight.
+    samplers: Vec<Option<Sampler>>,
     /// Trace ring (obs, protocol v1.5): `request.*` lifecycle instants
     /// land here and the engines open `phase.*` spans against it; the
     /// flight recorder snapshots it on death. `Arc` so phase code can
@@ -313,6 +323,7 @@ pub struct BatchCore {
 
 impl BatchCore {
     pub fn new(slots: SlotManager, cost: CostModel) -> Self {
+        let samplers = (0..slots.batch()).map(|_| None).collect();
         BatchCore {
             slots,
             queue: build_policy(SchedKind::Fcfs),
@@ -323,6 +334,7 @@ impl BatchCore {
             next_id: 0,
             id_stride: 1,
             inflight: HashMap::new(),
+            samplers,
             trace: Arc::new(Tracer::from_env()),
         }
     }
@@ -597,6 +609,11 @@ impl BatchCore {
                 self.metrics.prefix_hit_tokens += cached as u64;
             }
             uncached.push(plen - cached);
+            self.samplers[idx] = if req.params.temperature > 0.0 {
+                Some(Sampler::new(&req.params))
+            } else {
+                None
+            };
             self.trace.instant("request.admitted", Some(req.id), plen as u64);
             admitted.push((idx, req));
         }
@@ -673,6 +690,25 @@ impl BatchCore {
         Some(StepBatch { active, tok, pos, start, mask, mean_ctx })
     }
 
+    /// The sampler owned by slot `idx`, if its request samples
+    /// (`temperature > 0`); `None` for greedy slots and free slots.
+    pub fn sampler_mut(&mut self, idx: usize) -> Option<&mut Sampler> {
+        self.samplers.get_mut(idx).and_then(Option::as_mut)
+    }
+
+    /// Whether slot `idx` holds a sampling (`temperature > 0`) request.
+    pub fn slot_stochastic(&self, idx: usize) -> bool {
+        self.samplers.get(idx).is_some_and(Option::is_some)
+    }
+
+    /// Whether any of `slots` holds a sampling request — engines use
+    /// this to pick the logits path for a cycle (one stochastic slot
+    /// moves the whole batch onto it; greedy slots then argmax
+    /// host-side, which commits the identical tokens).
+    pub fn any_stochastic(&self, slots: &[usize]) -> bool {
+        slots.iter().any(|&i| self.slot_stochastic(i))
+    }
+
     /// Commit verified/sampled tokens for slot `idx`, update the token
     /// counters, emit the `Delta` (and `Done` if the request completed).
     /// Returns how many tokens were actually committed.
@@ -711,6 +747,7 @@ impl BatchCore {
     /// finish reason, end-to-end latency and queue wait.
     pub fn finish(&mut self, idx: usize, out: &mut Vec<StepEvent>) {
         let finish_reason = self.slots.slot(idx).finish;
+        self.samplers[idx] = None;
         if let Some((id, tokens)) = self.slots.release(idx) {
             let (latency_ns, queue_ns, prompt_tokens) = match self.inflight.remove(&id) {
                 Some(inf) => (inf.submitted.elapsed().as_nanos(), inf.queue_ns, inf.prompt_tokens),
@@ -761,6 +798,7 @@ impl BatchCore {
             });
         }
         let idx = self.slots.slot_of(id)?;
+        self.samplers[idx] = None;
         let (id, tokens) = self.slots.release(idx)?;
         let (latency_ns, queue_ns, prompt_tokens) = match self.inflight.remove(&id) {
             Some(inf) => (inf.submitted.elapsed().as_nanos(), inf.queue_ns, inf.prompt_tokens),

@@ -38,8 +38,8 @@ use crate::model::Mode;
 use crate::runtime::{ModelMeta, Module, Session, WeightSet};
 use crate::util::prng::Pcg32;
 
-use super::acceptance::greedy_accept;
-use super::engine::{BatchCore, Engine};
+use super::acceptance::{greedy_accept, stochastic_accept};
+use super::engine::{BatchCore, Engine, StepBatch};
 use super::request::StepEvent;
 use super::SimilaritySample;
 
@@ -51,6 +51,17 @@ const QUANT_FLIP_SENSITIVITY: f32 = 3.0;
 
 /// Flip probability is capped: even a 1-bit shadow still carries signal.
 const MAX_FLIP_PROB: f32 = 0.5;
+
+/// Stochastic-path analogue of the flip model: the shadow's round-trip
+/// error perturbs the draft *distribution* via deterministic logit-space
+/// noise of amplitude `err * QUANT_NOISE_SENSITIVITY` (capped below).
+/// Acceptance degrades as `kv_bits` shrinks, exactly like the greedy
+/// flip model, but the draft stays a proper q-distribution so the
+/// stochastic accept rule keeps the committed stream lossless.
+const QUANT_NOISE_SENSITIVITY: f32 = 8.0;
+
+/// Noise amplitude cap: even a 1-bit shadow still carries signal.
+const MAX_NOISE_AMP: f32 = 4.0;
 
 /// HierSpec engine configuration.
 #[derive(Clone, Debug)]
@@ -91,6 +102,11 @@ pub struct HierSpecEngine<'s> {
     prefill_m: Rc<Module>,
     decode_m: Rc<Module>,
     verify_m: Rc<Module>,
+    // logits twins (newer artifact sets only): present => the engine can
+    // serve temperature > 0; absent => argmax-only
+    prefill_logits_m: Option<Rc<Module>>,
+    decode_logits_m: Option<Rc<Module>>,
+    verify_logits_m: Option<Rc<Module>>,
     weights: Rc<WeightSet>,
     kv: Option<xla::PjRtBuffer>,
     pub core: BatchCore,
@@ -105,6 +121,15 @@ impl<'s> HierSpecEngine<'s> {
         let decode_m = sess.module(&cfg.size, &cfg.scheme, "w4a16", "decode", cfg.batch, 0)?;
         let verify_m =
             sess.module(&cfg.size, &cfg.scheme, "w4a16", "verify", cfg.batch, cfg.gamma)?;
+        let prefill_logits_m = sess
+            .module(&cfg.size, &cfg.scheme, "w4a16", "prefill_logits", cfg.batch, 0)
+            .ok();
+        let decode_logits_m = sess
+            .module(&cfg.size, &cfg.scheme, "w4a16", "decode_logits", cfg.batch, 0)
+            .ok();
+        let verify_logits_m = sess
+            .module(&cfg.size, &cfg.scheme, "w4a16", "verify_logits", cfg.batch, cfg.gamma)
+            .ok();
         // self-speculation: draft and verify share the one checkpoint
         let weights = sess.weights(&verify_m.meta.weights_key)?;
         let kv = Some(sess.fresh_kv(&cfg.size, cfg.batch)?);
@@ -127,6 +152,9 @@ impl<'s> HierSpecEngine<'s> {
             prefill_m,
             decode_m,
             verify_m,
+            prefill_logits_m,
+            decode_logits_m,
+            verify_logits_m,
             weights,
             kv,
             core: BatchCore::new(slots, cost),
@@ -145,10 +173,33 @@ impl<'s> HierSpecEngine<'s> {
         let span = self.core.trace.scope("phase.prefill");
         let timer = PhaseTimer::start();
         let kv = self.kv.take().expect("kv");
-        let r = self
-            .prefill_m
-            .call_prefill(&pb.tokens, &pb.start, &pb.mask, &kv, &self.weights)?;
-        self.kv = Some(r.kv);
+        let stochastic = pb.admitted.iter().any(|(i, _)| self.core.slot_stochastic(*i));
+        let ftok = if stochastic && self.prefill_logits_m.is_some() {
+            // logits twin: identical KV writes, first token sampled (or
+            // argmax'd for greedy slots) host-side
+            let pm = self.prefill_logits_m.clone().expect("prefill_logits");
+            let r = pm.call_prefill_logits(&pb.tokens, &pb.start, &pb.mask, &kv, &self.weights)?;
+            self.kv = Some(r.kv);
+            let vocab = self.meta.vocab;
+            let mut tok = vec![PAD; self.cfg.batch];
+            for (i, _) in &pb.admitted {
+                let row = &r.logits[i * vocab..(i + 1) * vocab];
+                tok[*i] = match self.core.sampler_mut(*i) {
+                    Some(s) => {
+                        let pr = s.probs(row);
+                        s.sample_probs(&pr) as i32
+                    }
+                    None => crate::sampler::argmax(row) as i32,
+                };
+            }
+            tok
+        } else {
+            let r = self
+                .prefill_m
+                .call_prefill(&pb.tokens, &pb.start, &pb.mask, &kv, &self.weights)?;
+            self.kv = Some(r.kv);
+            r.tok
+        };
         // prefill is priced per *uncached* token: blocks attached from
         // the prefix cache carry committed KV and cost no compute
         let virt = self
@@ -156,7 +207,7 @@ impl<'s> HierSpecEngine<'s> {
             .cost
             .charge(Mode::W4A16, Phase::Chunk, pb.admitted.len(), pb.uncached_tokens(), p);
         self.core.metrics.add_phase(PhaseKind::Prefill, timer.elapsed_ns(), virt);
-        self.core.finish_prefill(&pb, &r.tok, out);
+        self.core.finish_prefill(&pb, &ftok, out);
         drop(span);
         Ok(())
     }
@@ -183,6 +234,23 @@ impl<'s> HierSpecEngine<'s> {
         (t + off).rem_euclid(vocab)
     }
 
+    /// Stochastic-path shadow lossiness: the quantized attention's
+    /// logits, modeled as the exact logits plus deterministic noise in
+    /// (request, position, step, vocab entry), amplitude scaled by the
+    /// shadow's measured round-trip error. The result is a proper draft
+    /// distribution q for the stochastic accept rule (the greedy path
+    /// keeps the token-flip model instead).
+    fn shadow_noisy_logits(&self, row: &[f32], req_id: u64, pos: i32, j: usize, err: f32) -> Vec<f32> {
+        let amp = (err * QUANT_NOISE_SENSITIVITY).min(MAX_NOISE_AMP);
+        if amp <= 0.0 {
+            return row.to_vec();
+        }
+        let mut rng = Pcg32::new((pos as u64) << 8 | j as u64, req_id ^ 0xa5a5_a5a5);
+        row.iter()
+            .map(|&l| l + amp * ((2.0 * rng.next_f64() - 1.0) as f32))
+            .collect()
+    }
+
     /// One draft(gamma over the shadow) + verify(gamma+1 over full
     /// precision) + accept cycle over the active slots.
     fn cycle(&mut self, out: &mut Vec<StepEvent>) -> Result<()> {
@@ -190,6 +258,12 @@ impl<'s> HierSpecEngine<'s> {
             Some(sb) => sb,
             None => return Ok(()),
         };
+        if self.core.any_stochastic(&sb.active)
+            && self.decode_logits_m.is_some()
+            && self.verify_logits_m.is_some()
+        {
+            return self.cycle_stochastic(&sb, out);
+        }
         let b = self.cfg.batch;
         let g = self.cfg.gamma;
         let bits = self.cfg.kv_bits;
@@ -295,11 +369,143 @@ impl<'s> HierSpecEngine<'s> {
         drop(span);
         Ok(())
     }
+
+    /// The stochastic cycle: the shadow tier's lossiness becomes a
+    /// draft *distribution* q (see [`Self::shadow_noisy_logits`])
+    /// rather than a token flip; drafts are sampled from q and the
+    /// Leviathan accept rule keeps the committed stream distributed
+    /// exactly as the full-precision verifier — the stochastic analogue
+    /// of the greedy losslessness invariant. Greedy slots in the same
+    /// batch keep the flip model. Cost charges match the greedy cycle
+    /// (draft priced at kv_bits bandwidth).
+    fn cycle_stochastic(&mut self, sb: &StepBatch, out: &mut Vec<StepEvent>) -> Result<()> {
+        let b = self.cfg.batch;
+        let g = self.cfg.gamma;
+        let bits = self.cfg.kv_bits;
+        let vocab = self.meta.vocab;
+        let dm = self.decode_logits_m.clone().expect("decode_logits");
+        let vm = self.verify_logits_m.clone().expect("verify_logits");
+
+        // ---- draft phase: gamma sequential logits steps over the
+        // quantized shadow tier ------------------------------------------
+        let span = self.core.trace.scope("phase.draft");
+        let timer = PhaseTimer::start();
+        let mut cur = sb.tok.clone();
+        let mut pos = sb.pos.clone();
+        let mut drafts = vec![PAD; b * g];
+        let mut q = vec![0f32; b * g * vocab];
+        let mut shadow_err = vec![0f32; b];
+        for &i in &sb.active {
+            shadow_err[i] = self.core.slots.shadow_error(i);
+        }
+        let mut virt = 0u128;
+        for j in 0..g {
+            let kv = self.kv.take().expect("kv");
+            let r = dm.call_decode_logits(&cur, &pos, &sb.start, &kv, &self.weights)?;
+            self.kv = Some(r.kv);
+            // the draft reads the shadow, not the fp16 cache: charge
+            // this step at kv_bits bandwidth — the HierSpec win
+            virt += self.core.cost.charge_kv_bits(
+                Mode::W4A16,
+                Phase::Decode,
+                sb.active.len(),
+                1,
+                sb.mean_ctx,
+                bits,
+            );
+            for &i in &sb.active {
+                let req_id = self.core.slots.slot(i).req_id.unwrap_or(0);
+                let row = &r.logits[i * vocab..(i + 1) * vocab];
+                let d = if self.core.slot_stochastic(i) {
+                    let noisy = self.shadow_noisy_logits(row, req_id, pos[i], j, shadow_err[i]);
+                    let s = self.core.sampler_mut(i).expect("sampler");
+                    let qp = s.probs(&noisy);
+                    let d = s.sample_probs(&qp);
+                    let at = (i * g + j) * vocab;
+                    q[at..at + vocab].copy_from_slice(&qp);
+                    d as i32
+                } else {
+                    let mut t = crate::sampler::argmax(row) as i32;
+                    if self.quant_flips(req_id, pos[i], j, shadow_err[i]) {
+                        // the quantized attention would have argmax'd elsewhere
+                        t = self.perturb(t, req_id, pos[i], j);
+                    }
+                    t
+                };
+                drafts[i * g + j] = d;
+                cur[i] = d;
+                pos[i] += 1;
+            }
+        }
+        // draft writes land in the shadow tier as speculative entries
+        for &i in &sb.active {
+            let toks: Vec<i32> = (0..g).map(|j| drafts[i * g + j]).collect();
+            self.core.slots.shadow_speculate(i, &toks);
+        }
+        self.core.metrics.add_phase(PhaseKind::Draft, timer.elapsed_ns(), virt);
+        drop(span);
+
+        // ---- verify phase: one parallel chunk over full precision ------
+        let span = self.core.trace.scope("phase.verify");
+        let mut vtokens = vec![PAD; b * (g + 1)];
+        for slot in 0..b {
+            vtokens[slot * (g + 1)] = sb.tok[slot];
+            for j in 0..g {
+                vtokens[slot * (g + 1) + 1 + j] = drafts[slot * g + j];
+            }
+        }
+        let timer = PhaseTimer::start();
+        let kv = self.kv.take().expect("kv");
+        let v = vm.call_verify_logits(&vtokens, &sb.pos, &sb.start, &sb.mask, &kv, &self.weights)?;
+        self.kv = Some(v.kv);
+        let virt = self
+            .core
+            .cost
+            .charge(Mode::W4A16, Phase::Chunk, sb.active.len(), g + 1, sb.mean_ctx);
+        self.core.metrics.add_phase(PhaseKind::Verify, timer.elapsed_ns(), virt);
+        drop(span);
+
+        // ---- acceptance + commit (requantizes the shadow) --------------
+        let span = self.core.trace.scope("phase.commit");
+        let timer = PhaseTimer::start();
+        for &i in &sb.active {
+            let dr = &drafts[i * g..(i + 1) * g];
+            let vrows = &v.logits[i * (g + 1) * vocab..(i + 1) * (g + 1) * vocab];
+            let dec = match self.core.sampler_mut(i) {
+                Some(s) => {
+                    let mut p = Vec::with_capacity((g + 1) * vocab);
+                    for j in 0..=g {
+                        p.extend(s.probs(&vrows[j * vocab..(j + 1) * vocab]));
+                    }
+                    stochastic_accept(dr, &q[i * g * vocab..(i + 1) * g * vocab], &p, vocab, s)
+                }
+                None => {
+                    let vt: Vec<i32> = (0..=g)
+                        .map(|j| crate::sampler::argmax(&vrows[j * vocab..(j + 1) * vocab]) as i32)
+                        .collect();
+                    greedy_accept(dr, &vt)
+                }
+            };
+            self.core.metrics.drafted += g as u64;
+            self.core.metrics.accepted += dec.accepted as u64;
+            self.core.metrics.record_accept(dec.accepted as u64);
+            self.core.commit(i, &dec.committed, g, out);
+        }
+        self.core.metrics.add_phase(PhaseKind::Host, timer.elapsed_ns(), 0);
+        drop(span);
+        Ok(())
+    }
 }
 
 impl<'s> Engine for HierSpecEngine<'s> {
     fn name(&self) -> &'static str {
         "hierspec"
+    }
+
+    fn argmax_only(&self) -> bool {
+        self.prefill_logits_m.is_none()
+            || self.decode_logits_m.is_none()
+            || self.verify_logits_m.is_none()
     }
 
     fn core(&self) -> &BatchCore {

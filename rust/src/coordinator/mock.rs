@@ -25,6 +25,19 @@
 //! The protocol test suites and `benches/pool_router.rs` build mock
 //! replica pools from this engine; `tests/engine_trait.rs` runs it
 //! through the same conformance battery as the real engines.
+//!
+//! **Stochastic sampling** (`temperature > 0`) is served too, exactly
+//! the way the real engines do it: slots with a per-request
+//! [`Sampler`](crate::sampler::Sampler) decode against a deterministic
+//! toy conditional LM ([`mock_logits`]) — the "verifier" distribution
+//! `p` — and, in acceptance-simulation mode, draft from a deliberately
+//! perturbed distribution `q` ([`mock_draft_logits`], noise amplitude
+//! shrinking as the acceptance knob rises) run through
+//! [`stochastic_accept`]. The accept rule makes the committed stream
+//! distributed exactly as a pure rollout of `p` whatever `q` is, which
+//! the session-free TV-distance suite checks end-to-end. Greedy slots
+//! keep the deterministic echo, so every pre-existing test is
+//! unchanged.
 
 use std::time::Duration;
 
@@ -33,6 +46,7 @@ use crate::error::{QspecError, Result};
 use crate::kvcache::SlotManager;
 use crate::model::{Mode, Tokenizer};
 
+use super::acceptance::stochastic_accept;
 use super::engine::{BatchCore, Engine};
 use super::request::StepEvent;
 
@@ -74,6 +88,50 @@ pub const MOCK_ALPHABET: &str =
 /// protocol test suites and the pool benches.
 pub fn mock_tokenizer() -> Tokenizer {
     Tokenizer::from_alphabet(MOCK_ALPHABET, 64).expect("mock tokenizer")
+}
+
+/// Vocab of the toy conditional LM behind the mock's stochastic path
+/// (matches [`mock_tokenizer`]).
+pub const MOCK_VOCAB: usize = 64;
+
+fn mix(mut h: u64) -> u64 {
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    h ^= h >> 29;
+    h = h.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    h ^ (h >> 32)
+}
+
+fn unit(h: u64) -> f32 {
+    ((h >> 11) as f64 / (1u64 << 53) as f64) as f32 // [0, 1)
+}
+
+/// The mock's "verifier" model: a deterministic first-order toy LM.
+/// The logits row after context token `ctx` is a pure hash of
+/// `(ctx, v)` — no state, so parallel verification and sequential
+/// rollout agree by construction, like a real verify entry.
+pub fn mock_logits(ctx: i32) -> Vec<f32> {
+    (0..MOCK_VOCAB)
+        .map(|v| {
+            let h = mix((ctx as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ (v as u64 | (1u64 << 40)));
+            6.0 * unit(h) - 3.0
+        })
+        .collect()
+}
+
+/// The mock's "draft" model: the verifier logits plus deterministic
+/// per-`(ctx, v)` noise. `acceptance` shapes how far `q` strays from
+/// `p` — 1.0 means a perfect draft (noise 0), lower values degrade it
+/// (and with it the measured acceptance rate), `None` (plain AR mode,
+/// which never drafts) gets a fixed mid-size perturbation.
+pub fn mock_draft_logits(ctx: i32, acceptance: Option<f64>) -> Vec<f32> {
+    let amp = acceptance.map(|a| 3.0 * (1.0 - a)).unwrap_or(1.5) as f32;
+    let mut row = mock_logits(ctx);
+    for (v, r) in row.iter_mut().enumerate() {
+        let h = mix((ctx as u64).wrapping_mul(0x517c_c1b7_2722_0a95) ^ ((v as u64) << 7) ^ 0xd6e8);
+        *r += amp * (2.0 * unit(h) - 1.0);
+    }
+    row
 }
 
 /// Deterministic echo engine over the real `BatchCore` (see module
@@ -143,6 +201,54 @@ impl EchoEngine {
     pub fn cycles(&self) -> u64 {
         self.cycles
     }
+
+    /// One stochastic scheduling cycle for slot `i` (see module docs).
+    /// Plain AR mode samples one token from the toy verifier `p`;
+    /// acceptance mode drafts `gamma` tokens from the perturbed draft
+    /// distribution `q` and runs the stochastic accept rule, so the
+    /// committed stream stays distributed as a pure `p` rollout.
+    fn step_stochastic_slot(
+        &mut self,
+        i: usize,
+        pending: i32,
+        gamma: usize,
+        drafting: bool,
+        out: &mut Vec<StepEvent>,
+    ) {
+        let acceptance = self.acceptance;
+        let Some(s) = self.core.sampler_mut(i) else { return };
+        if !drafting {
+            let p = s.probs(&mock_logits(pending));
+            let t = s.sample_probs(&p) as i32;
+            self.core.commit(i, &[t], 1, out);
+            return;
+        }
+        let mut drafts = Vec::with_capacity(gamma);
+        let mut q = Vec::with_capacity(gamma * MOCK_VOCAB);
+        let mut cur = pending;
+        for _ in 0..gamma {
+            let qp = s.probs(&mock_draft_logits(cur, acceptance));
+            let d = s.sample_probs(&qp) as i32;
+            q.extend_from_slice(&qp);
+            drafts.push(d);
+            cur = d;
+        }
+        // verifier distributions at every fed position (a first-order
+        // toy LM, so "parallel verification" is just per-context rows)
+        let mut p = Vec::with_capacity((gamma + 1) * MOCK_VOCAB);
+        let mut prev = pending;
+        for j in 0..=gamma {
+            p.extend(s.probs(&mock_logits(prev)));
+            if j < gamma {
+                prev = drafts[j];
+            }
+        }
+        let dec = stochastic_accept(&drafts, &q, &p, MOCK_VOCAB, s);
+        self.core.metrics.drafted += gamma as u64;
+        self.core.metrics.accepted += dec.accepted as u64;
+        self.core.metrics.record_accept(dec.accepted as u64);
+        self.core.commit(i, &dec.committed, gamma, out);
+    }
 }
 
 impl Engine for EchoEngine {
@@ -189,7 +295,17 @@ impl Engine for EchoEngine {
                 pb.uncached_tokens(),
                 self.core.slots.prefill_t(),
             );
-            let first = vec![10i32; self.core.batch()];
+            let mut first = vec![10i32; self.core.batch()];
+            for (idx, req) in &pb.admitted {
+                // stochastic slots sample their first token from the
+                // toy verifier conditioned on the last prompt token;
+                // greedy slots keep the deterministic echo
+                if let Some(s) = self.core.sampler_mut(*idx) {
+                    let ctx = req.prompt.last().copied().unwrap_or(0);
+                    let p = s.probs(&mock_logits(ctx));
+                    first[*idx] = s.sample_probs(&p) as i32;
+                }
+            }
             self.core.finish_prefill(&pb, &first, &mut out);
         }
         if let Some(sb) = self.core.step_inputs() {
@@ -204,9 +320,14 @@ impl Engine for EchoEngine {
             // the virtual clock must advance every cycle (conformance
             // battery invariant); one batched decode charge per cycle
             self.core.cost.charge(Mode::W4A16, Phase::Decode, sb.active.len(), k, sb.mean_ctx);
+            let drafting = self.acceptance.is_some();
             for &i in &sb.active {
+                if self.core.slot_stochastic(i) {
+                    self.step_stochastic_slot(i, sb.tok[i], gamma, drafting, &mut out);
+                    continue;
+                }
                 let toks: Vec<i32> = (1..=k as i32).map(|d| sb.tok[i] + d).collect();
-                if self.acceptance.is_some() {
+                if drafting {
                     self.core.metrics.drafted += gamma as u64;
                     self.core.metrics.accepted += accepted as u64;
                     self.core.metrics.record_accept(accepted as u64);
@@ -215,6 +336,12 @@ impl Engine for EchoEngine {
             }
         }
         Ok(out)
+    }
+
+    /// The mock serves `temperature > 0` through the real stochastic
+    /// accept rule (see module docs), so it is not argmax-only.
+    fn argmax_only(&self) -> bool {
+        false
     }
 
     fn reconfigure(&mut self, gamma: Option<usize>, kv_bits: Option<u8>) -> Result<()> {
@@ -239,7 +366,24 @@ impl Engine for EchoEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::FinishReason;
+    use crate::coordinator::request::{FinishReason, GenerationRequest, SamplingParams};
+
+    /// Run one stochastic request to completion; `acc` None = plain AR
+    /// echo, Some = acceptance-simulation (drafting) mode.
+    fn stochastic_tokens(acc: Option<f64>, seed: u64, n: usize) -> Vec<i32> {
+        let mut e = EchoEngine::new(1, 256, 0);
+        if let Some(a) = acc {
+            e = e.with_acceptance(a);
+        }
+        let params = SamplingParams {
+            max_tokens: n,
+            temperature: 0.8,
+            seed,
+            ..SamplingParams::default()
+        };
+        e.submit_request(GenerationRequest::new(vec![1, 4, 9], params));
+        e.run_to_completion().unwrap().remove(0).tokens
+    }
 
     #[test]
     fn echo_engine_is_deterministic() {
@@ -287,6 +431,51 @@ mod tests {
         assert!(e.reconfigure(Some(0), None).is_err(), "gamma 0 rejected");
         assert!(e.reconfigure(None, Some(16)).is_err(), "kv_bits 16 rejected");
         assert_eq!(e.gamma(), 2, "failed reconfigure must not change state");
+    }
+
+    #[test]
+    fn mock_serves_temperature_and_is_not_argmax_only() {
+        assert!(!EchoEngine::new(1, 64, 0).argmax_only());
+        let toks = stochastic_tokens(Some(0.6), 7, 24);
+        assert!(!toks.is_empty());
+        // sampled stream stays in-vocab (EOS may end it early)
+        assert!(toks.iter().all(|&t| (0..MOCK_VOCAB as i32).contains(&t)), "{toks:?}");
+    }
+
+    #[test]
+    fn stochastic_mock_replays_on_seed_and_diverges_across_seeds() {
+        for acc in [None, Some(0.3), Some(0.9)] {
+            let a = stochastic_tokens(acc, 7, 24);
+            assert_eq!(a, stochastic_tokens(acc, 7, 24), "same seed must replay, acc {acc:?}");
+        }
+        // across seeds the streams diverge (64-token vocab, 24 draws:
+        // a collision over three seeds is astronomically unlikely)
+        let runs: Vec<_> = (1..=3).map(|s| stochastic_tokens(Some(0.6), s, 24)).collect();
+        assert!(
+            runs[0] != runs[1] || runs[1] != runs[2],
+            "different seeds should diverge: {runs:?}"
+        );
+    }
+
+    #[test]
+    fn stochastic_and_greedy_slots_coexist_in_one_batch() {
+        let mut e = EchoEngine::new(2, 256, 0).with_acceptance(0.6);
+        let params = SamplingParams {
+            max_tokens: 8,
+            temperature: 0.8,
+            seed: 11,
+            ..SamplingParams::default()
+        };
+        let sid = e.submit_request(GenerationRequest::new(vec![1, 4, 9], params));
+        let gid = e.submit(vec![1, 2], 6);
+        let fins = e.run_to_completion().unwrap();
+        let greedy = fins.iter().find(|f| f.id == gid).unwrap();
+        assert_eq!(greedy.tokens, vec![10, 11, 12, 13, 14, 15], "greedy echo unchanged");
+        let stoch = fins.iter().find(|f| f.id == sid).unwrap();
+        assert_eq!(stoch.tokens, stochastic_tokens(Some(0.6), 11, 8),
+                   "per-slot sampler is batch-placement independent");
+        // drafted/accepted counters cover the stochastic slot too
+        assert!(e.metrics().drafted > 0);
     }
 
     #[test]

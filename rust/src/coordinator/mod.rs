@@ -37,7 +37,7 @@ pub mod queue;
 pub mod request;
 pub mod spec_decode;
 
-pub use acceptance::{greedy_accept, AcceptDecision};
+pub use acceptance::{greedy_accept, stochastic_accept, AcceptDecision};
 pub use autoregressive::ArEngine;
 pub use eagle::{EagleConfig, EagleEngine};
 pub use hierspec::{HierSpecConfig, HierSpecEngine};

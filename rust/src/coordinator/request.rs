@@ -39,14 +39,17 @@ pub const DEFAULT_PRIORITY: u8 = 1;
 
 /// Per-request sampling / termination parameters.
 ///
-/// `temperature` and `seed` are threaded through every layer and
-/// validated, but the AOT-compiled entries return greedy argmax tokens
-/// (the paper's reproducibility setup) and logits never cross the host
-/// boundary. Engines advertise this via `Engine::argmax_only`: the
-/// server rejects `temperature > 0` against such an engine with a
-/// precise `bad_request` (and the CLI warns) instead of silently
-/// decoding greedily; the fields exist so host-side samplers and
-/// future sampling entries consume them without another API change.
+/// `temperature > 0` is served end-to-end: engines whose artifact set
+/// exports the `*_logits` entry twins sample host-side (per-request
+/// [`Sampler`](crate::sampler::Sampler), seeded by `seed`) and run
+/// stochastic speculative acceptance
+/// ([`stochastic_accept`](crate::coordinator::stochastic_accept)), so
+/// the committed stream is distributed exactly as a verifier-only
+/// rollout and identical requests replay identically. Engines built
+/// from a pre-logits artifact set advertise `Engine::argmax_only`; the
+/// server rejects `temperature > 0` against those with a precise
+/// `bad_request` (and the CLI warns) instead of silently decoding
+/// greedily.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SamplingParams {
     /// generation budget (counting the prefill's first token).

@@ -22,8 +22,8 @@ use crate::model::tokenizer::PAD;
 use crate::model::Mode;
 use crate::runtime::{ModelMeta, Module, Session, WeightSet};
 
-use super::acceptance::greedy_accept;
-use super::engine::{BatchCore, Engine};
+use super::acceptance::{greedy_accept, stochastic_accept};
+use super::engine::{BatchCore, Engine, StepBatch};
 use super::request::StepEvent;
 use super::SimilaritySample;
 
@@ -65,6 +65,11 @@ pub struct QSpecEngine<'s> {
     draft_m: Rc<Module>,
     verify_m: Rc<Module>,
     draft_prefill_m: Option<Rc<Module>>,
+    // logits twins (newer artifact sets only): present => the engine can
+    // serve temperature > 0 distribution-losslessly; absent => argmax-only
+    prefill_logits_m: Option<Rc<Module>>,
+    decode_logits_m: Option<Rc<Module>>,
+    verify_logits_m: Option<Rc<Module>>,
     w_verify: Rc<WeightSet>,
     w_draft: Rc<WeightSet>,
     kv: Option<xla::PjRtBuffer>,
@@ -80,6 +85,18 @@ impl<'s> QSpecEngine<'s> {
         let prefill_m = sess.module(&cfg.size, &cfg.scheme, "w4a16", "prefill", cfg.batch, cfg.gamma)?;
         let draft_m = sess.module(&cfg.size, &cfg.scheme, "w4a4", "draft", cfg.batch, cfg.gamma)?;
         let verify_m = sess.module(&cfg.size, &cfg.scheme, "w4a16", "verify", cfg.batch, cfg.gamma)?;
+        // optional logits twins: older artifact sets don't export them,
+        // in which case the engine stays argmax-only (server rejects
+        // temperature > 0 with a precise bad_request)
+        let prefill_logits_m = sess
+            .module(&cfg.size, &cfg.scheme, "w4a16", "prefill_logits", cfg.batch, cfg.gamma)
+            .ok();
+        let decode_logits_m = sess
+            .module(&cfg.size, &cfg.scheme, "w4a4", "decode_logits", cfg.batch, cfg.gamma)
+            .ok();
+        let verify_logits_m = sess
+            .module(&cfg.size, &cfg.scheme, "w4a16", "verify_logits", cfg.batch, cfg.gamma)
+            .ok();
         let w_verify = sess.weights(&verify_m.meta.weights_key)?;
         let w_draft = sess.weights(&draft_m.meta.weights_key)?;
         let kv = Some(sess.fresh_kv(&cfg.size, cfg.batch)?);
@@ -109,6 +126,9 @@ impl<'s> QSpecEngine<'s> {
             draft_m,
             verify_m,
             draft_prefill_m,
+            prefill_logits_m,
+            decode_logits_m,
+            verify_logits_m,
             w_verify,
             w_draft,
             kv,
@@ -129,10 +149,33 @@ impl<'s> QSpecEngine<'s> {
 
         let timer = PhaseTimer::start();
         let kv = self.kv.take().expect("kv");
-        let r = self
-            .prefill_m
-            .call_prefill(&pb.tokens, &pb.start, &pb.mask, &kv, &self.w_verify)?;
-        self.kv = Some(r.kv);
+        let stochastic = pb.admitted.iter().any(|(i, _)| self.core.slot_stochastic(*i));
+        let ftok = if stochastic && self.prefill_logits_m.is_some() {
+            // logits twin: identical KV writes, first token sampled (or
+            // argmax'd for greedy slots) host-side
+            let pm = self.prefill_logits_m.clone().expect("prefill_logits");
+            let r = pm.call_prefill_logits(&pb.tokens, &pb.start, &pb.mask, &kv, &self.w_verify)?;
+            self.kv = Some(r.kv);
+            let vocab = self.meta.vocab;
+            let mut tok = vec![PAD; self.cfg.batch];
+            for (i, _) in &pb.admitted {
+                let row = &r.logits[i * vocab..(i + 1) * vocab];
+                tok[*i] = match self.core.sampler_mut(*i) {
+                    Some(s) => {
+                        let pr = s.probs(row);
+                        s.sample_probs(&pr) as i32
+                    }
+                    None => crate::sampler::argmax(row) as i32,
+                };
+            }
+            tok
+        } else {
+            let r = self
+                .prefill_m
+                .call_prefill(&pb.tokens, &pb.start, &pb.mask, &kv, &self.w_verify)?;
+            self.kv = Some(r.kv);
+            r.tok
+        };
         // prefill is priced per *uncached* token: blocks attached from
         // the prefix cache carry committed KV and cost no compute
         let virt = self
@@ -152,7 +195,7 @@ impl<'s> QSpecEngine<'s> {
             self.core.metrics.add_phase(PhaseKind::Prefill, 0, virt);
         }
 
-        self.core.finish_prefill(&pb, &r.tok, out);
+        self.core.finish_prefill(&pb, &ftok, out);
         drop(span);
         Ok(())
     }
@@ -163,6 +206,12 @@ impl<'s> QSpecEngine<'s> {
             Some(sb) => sb,
             None => return Ok(()),
         };
+        if self.core.any_stochastic(&sb.active)
+            && self.decode_logits_m.is_some()
+            && self.verify_logits_m.is_some()
+        {
+            return self.cycle_stochastic(&sb, out);
+        }
         let b = self.cfg.batch;
         let g = self.cfg.gamma;
 
@@ -240,11 +289,127 @@ impl<'s> QSpecEngine<'s> {
         drop(span);
         Ok(())
     }
+
+    /// The stochastic cycle: gamma sequential W4A4 `decode_logits` steps
+    /// (host sampling chains the drafts), one W4A16 `verify_logits`
+    /// chunk, then the Leviathan accept rule per slot. Greedy slots in
+    /// the same batch argmax host-side, which commits tokens identical
+    /// to the fused greedy path (same tie-break: lowest index). Cost
+    /// charges match the greedy cycle exactly — the stochastic path
+    /// changes where sampling happens, not what compute is priced.
+    fn cycle_stochastic(&mut self, sb: &StepBatch, out: &mut Vec<StepEvent>) -> Result<()> {
+        let b = self.cfg.batch;
+        let g = self.cfg.gamma;
+        let vocab = self.meta.vocab;
+        let dm = self.decode_logits_m.clone().expect("decode_logits");
+        let vm = self.verify_logits_m.clone().expect("verify_logits");
+
+        // ---- draft phase (sequential W4A4 logits steps) ----------------
+        let span = self.core.trace.scope("phase.draft");
+        let timer = PhaseTimer::start();
+        let mut cur = sb.tok.clone();
+        let mut drafts = vec![PAD; b * g];
+        // draft distributions, [slot][step][vocab] row-major (greedy
+        // slots leave their rows zeroed — never read)
+        let mut q = vec![0f32; b * g * vocab];
+        let mut virt = 0u128;
+        for j in 0..g {
+            let pos: Vec<i32> = sb.pos.iter().map(|&p| p + j as i32).collect();
+            let dkv = if self.cfg.overwrite {
+                self.kv.take().expect("kv")
+            } else {
+                self.kv_draft.take().expect("kv_draft")
+            };
+            let r = dm.call_decode_logits(&cur, &pos, &sb.start, &dkv, &self.w_draft)?;
+            if self.cfg.overwrite {
+                self.kv = Some(r.kv);
+            } else {
+                self.kv_draft = Some(r.kv);
+            }
+            for &i in &sb.active {
+                let row = &r.logits[i * vocab..(i + 1) * vocab];
+                let d = match self.core.sampler_mut(i) {
+                    Some(s) => {
+                        let qp = s.probs(row);
+                        let d = s.sample_probs(&qp);
+                        let at = (i * g + j) * vocab;
+                        q[at..at + vocab].copy_from_slice(&qp);
+                        d
+                    }
+                    None => crate::sampler::argmax(row),
+                } as i32;
+                drafts[i * g + j] = d;
+                cur[i] = d;
+            }
+            virt += self
+                .core
+                .cost
+                .charge(Mode::W4A4, Phase::Decode, sb.active.len(), 1, sb.mean_ctx);
+        }
+        self.core.metrics.add_phase(PhaseKind::Draft, timer.elapsed_ns(), virt);
+        drop(span);
+
+        // ---- verify phase (W4A16 parallel chunk; KV-overwriting) -------
+        let span = self.core.trace.scope("phase.verify");
+        let mut vtokens = vec![PAD; b * (g + 1)];
+        for slot in 0..b {
+            vtokens[slot * (g + 1)] = sb.tok[slot];
+            for j in 0..g {
+                vtokens[slot * (g + 1) + 1 + j] = drafts[slot * g + j];
+            }
+        }
+        let timer = PhaseTimer::start();
+        let kv = self.kv.take().expect("kv");
+        let v = vm.call_verify_logits(&vtokens, &sb.pos, &sb.start, &sb.mask, &kv, &self.w_verify)?;
+        self.kv = Some(v.kv);
+        let virt = self
+            .core
+            .cost
+            .charge(Mode::W4A16, Phase::Chunk, sb.active.len(), g + 1, sb.mean_ctx);
+        self.core.metrics.add_phase(PhaseKind::Verify, timer.elapsed_ns(), virt);
+        drop(span);
+
+        // ---- acceptance + commit ---------------------------------------
+        let span = self.core.trace.scope("phase.commit");
+        let timer = PhaseTimer::start();
+        for &i in &sb.active {
+            let dr = &drafts[i * g..(i + 1) * g];
+            let vrows = &v.logits[i * (g + 1) * vocab..(i + 1) * (g + 1) * vocab];
+            let dec = match self.core.sampler_mut(i) {
+                Some(s) => {
+                    let mut p = Vec::with_capacity((g + 1) * vocab);
+                    for j in 0..=g {
+                        p.extend(s.probs(&vrows[j * vocab..(j + 1) * vocab]));
+                    }
+                    stochastic_accept(dr, &q[i * g * vocab..(i + 1) * g * vocab], &p, vocab, s)
+                }
+                None => {
+                    let vt: Vec<i32> = (0..=g)
+                        .map(|j| crate::sampler::argmax(&vrows[j * vocab..(j + 1) * vocab]) as i32)
+                        .collect();
+                    greedy_accept(dr, &vt)
+                }
+            };
+            self.core.metrics.drafted += g as u64;
+            self.core.metrics.accepted += dec.accepted as u64;
+            self.core.metrics.record_accept(dec.accepted as u64);
+            self.core.commit(i, &dec.committed, g, out);
+        }
+        self.core.metrics.add_phase(PhaseKind::Host, timer.elapsed_ns(), 0);
+        drop(span);
+        Ok(())
+    }
 }
 
 impl<'s> Engine for QSpecEngine<'s> {
     fn name(&self) -> &'static str {
         "qspec"
+    }
+
+    fn argmax_only(&self) -> bool {
+        self.prefill_logits_m.is_none()
+            || self.decode_logits_m.is_none()
+            || self.verify_logits_m.is_none()
     }
 
     fn core(&self) -> &BatchCore {

@@ -15,6 +15,12 @@
 //! Dumps are one JSON object per file so `jq` / `Json::parse` read
 //! them directly; the filename embeds who dumped and when:
 //! `flight-<replica|router>-<uptime_ms>-<seq>.json`.
+//!
+//! Retention: every write rotates the directory down to at most
+//! `$QSPEC_FLIGHT_KEEP` dumps (default 32, `0` = unbounded), deleting
+//! oldest-first by mtime; the dump just written is never a deletion
+//! candidate, so the artifact for the incident that triggered the
+//! rotation always survives it.
 
 use std::fs;
 use std::io::{self, Write};
@@ -37,6 +43,71 @@ pub fn dir_from_env() -> PathBuf {
     std::env::var(FLIGHT_DIR_ENV)
         .map(PathBuf::from)
         .unwrap_or_else(|_| PathBuf::from("flight-dumps"))
+}
+
+/// Environment variable bounding how many `flight-*.json` files are
+/// kept in the dump directory (oldest deleted first). Default
+/// [`FLIGHT_KEEP_DEFAULT`]; `0` disables rotation (unbounded, the
+/// pre-retention behavior).
+pub const FLIGHT_KEEP_ENV: &str = "QSPEC_FLIGHT_KEEP";
+
+/// Default retention: enough to cover a burst of replica deaths plus
+/// operator dumps without growing without bound on a long-lived pool.
+pub const FLIGHT_KEEP_DEFAULT: usize = 32;
+
+/// The retention cap: `$QSPEC_FLIGHT_KEEP` or [`FLIGHT_KEEP_DEFAULT`];
+/// unparseable values fall back to the default.
+pub fn keep_from_env() -> usize {
+    std::env::var(FLIGHT_KEEP_ENV)
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(FLIGHT_KEEP_DEFAULT)
+}
+
+/// Delete the oldest `flight-*.json` files in `dir` until at most
+/// `keep` remain. `just_written` is never deleted, whatever the
+/// clock says — the dump that triggered rotation must survive it.
+/// Ordered by modification time (filename as tie-break, which embeds
+/// uptime+seq and so orders same-mtime dumps correctly). Best-effort:
+/// I/O errors skip the file rather than propagate — rotation runs on
+/// death paths and must never make things worse.
+fn rotate(dir: &Path, keep: usize, just_written: &Path) {
+    if keep == 0 {
+        return; // rotation disabled
+    }
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    let mut dumps: Vec<(std::time::SystemTime, PathBuf)> = Vec::new();
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let is_dump = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .map(|n| n.starts_with("flight-") && n.ends_with(".json"))
+            .unwrap_or(false);
+        if !is_dump || path == just_written {
+            continue;
+        }
+        let mtime = entry
+            .metadata()
+            .and_then(|m| m.modified())
+            .unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+        dumps.push((mtime, path));
+    }
+    // `just_written` is excluded above, so it occupies one of the
+    // `keep` slots unconditionally
+    let budget = keep.saturating_sub(1);
+    if dumps.len() <= budget {
+        return;
+    }
+    dumps.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+    for (_, path) in dumps.drain(..dumps.len() - budget) {
+        if let Err(e) = fs::remove_file(&path) {
+            log::warn!("flight recorder: rotation failed to remove {}: {e}", path.display());
+        }
+    }
 }
 
 /// Monotone per-process dump counter — keeps filenames unique even
@@ -88,6 +159,7 @@ pub fn write_dump(dir: &Path, dump: &Json) -> io::Result<PathBuf> {
     let mut f = fs::File::create(&path)?;
     f.write_all(dump.to_string().as_bytes())?;
     f.write_all(b"\n")?;
+    rotate(dir, keep_from_env(), &path);
     Ok(path)
 }
 
@@ -165,6 +237,61 @@ mod tests {
         assert_eq!(back.get("reason").and_then(Json::as_str), Some("panic: boom"));
         assert!(p1.file_name().unwrap().to_str().unwrap().starts_with("flight-0-"));
         let _ = fs::remove_dir_all(&dir);
+    }
+
+    fn dump_names(dir: &Path) -> Vec<String> {
+        let mut names: Vec<String> = fs::read_dir(dir)
+            .map(|rd| {
+                rd.flatten()
+                    .filter_map(|e| e.file_name().to_str().map(String::from))
+                    .filter(|n| n.starts_with("flight-") && n.ends_with(".json"))
+                    .collect()
+            })
+            .unwrap_or_default();
+        names.sort();
+        names
+    }
+
+    #[test]
+    fn rotation_caps_count_oldest_first_and_spares_newest() {
+        let dir = tmpdir("rotate");
+        let d = dump_json("test", Some(0), "mock", &[], 0);
+        let mut paths = Vec::new();
+        for _ in 0..6 {
+            paths.push(write_dump(&dir, &d).expect("write"));
+        }
+        assert_eq!(dump_names(&dir).len(), 6, "default keep (32) must not rotate 6 dumps");
+        let newest = paths.last().unwrap().clone();
+        rotate(&dir, 3, &newest);
+        let left = dump_names(&dir);
+        assert_eq!(left.len(), 3, "rotation caps the directory at keep");
+        assert!(
+            left.contains(&newest.file_name().unwrap().to_str().unwrap().to_string()),
+            "rotation must never delete the newest dump"
+        );
+        // oldest-first: the first writes are the ones gone
+        for gone in &paths[..3] {
+            assert!(!gone.exists(), "{} should have been rotated out", gone.display());
+        }
+        // keep=1 keeps exactly the protected newest dump
+        rotate(&dir, 1, &newest);
+        assert_eq!(dump_names(&dir).len(), 1);
+        assert!(newest.exists());
+        // keep=0 disables rotation entirely
+        let extra = write_dump(&dir, &d).expect("write");
+        rotate(&dir, 0, &extra);
+        assert_eq!(dump_names(&dir).len(), 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn keep_from_env_defaults_sanely() {
+        // do not mutate the process env here (tests run concurrently);
+        // just pin the default constant the env path falls back to
+        assert_eq!(FLIGHT_KEEP_DEFAULT, 32);
+        if std::env::var(FLIGHT_KEEP_ENV).is_err() {
+            assert_eq!(keep_from_env(), FLIGHT_KEEP_DEFAULT);
+        }
     }
 
     #[test]

@@ -110,7 +110,8 @@ impl ArtifactStore {
                     && m.mode == mode
                     && m.entry == entry
                     && m.batch == batch
-                    && (m.gamma == gamma || !matches!(m.entry.as_str(), "draft" | "verify"))
+                    && (m.gamma == gamma
+                        || !matches!(m.entry.as_str(), "draft" | "verify" | "verify_logits"))
             })
             .ok_or_else(|| {
                 QspecError::Artifact(format!(

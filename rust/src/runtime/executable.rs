@@ -48,6 +48,16 @@ pub struct ScoreOut {
     pub cnt: Vec<f32>,
 }
 
+/// Output of the `*_logits` twins: raw (un-tempered) logits rows.
+/// `prefill_logits`/`decode_logits` return `[B, V]`; `verify_logits`
+/// returns `[B, gamma+1, V]` — both row-major flattened. Temperature,
+/// softmax, and sampling all happen host-side (`crate::sampler`), which
+/// is affordable because the vocab is small.
+pub struct LogitsOut {
+    pub logits: Vec<f32>,
+    pub kv: xla::PjRtBuffer,
+}
+
 impl Module {
     pub fn compile(client: &xla::PjRtClient, meta: ModuleMeta) -> Result<Self> {
         let proto = xla::HloModuleProto::from_text_file(&meta.hlo_path)?;
@@ -194,6 +204,69 @@ impl Module {
             pfed: Self::read_f32(&out[2])?,
             kv: kv2,
         })
+    }
+
+    /// prefill_logits: same args + cache writes as `call_prefill`, but
+    /// returns the last-position logits rows [B,V] for host sampling.
+    pub fn call_prefill_logits(
+        &self,
+        tokens: &[i32],
+        start: &[i32],
+        mask: &[i32],
+        kv: &xla::PjRtBuffer,
+        w: &WeightSet,
+    ) -> Result<LogitsOut> {
+        let b = start.len();
+        let p = tokens.len() / b;
+        let t = self.buf_i32_2d(tokens, b, p)?;
+        let s = self.buf_i32(start)?;
+        let m = self.buf_i32(mask)?;
+        let mut out = self.run(&[&t, &s, &m], Some(kv), w)?;
+        let kv2 = out.pop().ok_or_else(|| QspecError::Xla("prefill_logits out".into()))?;
+        Ok(LogitsOut { logits: Self::read_f32(&out[0])?, kv: kv2 })
+    }
+
+    /// decode_logits: one AR step returning logits rows [B,V]. The
+    /// stochastic draft phase chains this sequentially, sampling on the
+    /// host between steps.
+    pub fn call_decode_logits(
+        &self,
+        tok: &[i32],
+        pos: &[i32],
+        start: &[i32],
+        kv: &xla::PjRtBuffer,
+        w: &WeightSet,
+    ) -> Result<LogitsOut> {
+        let t = self.buf_i32(tok)?;
+        let p = self.buf_i32(pos)?;
+        let s = self.buf_i32(start)?;
+        let mut out = self.run(&[&t, &p, &s], Some(kv), w)?;
+        let kv2 = out.pop().ok_or_else(|| QspecError::Xla("decode_logits out".into()))?;
+        Ok(LogitsOut { logits: Self::read_f32(&out[0])?, kv: kv2 })
+    }
+
+    /// verify_logits: parallel gamma+1-token verification returning the
+    /// full verifier distribution block [B,(gamma+1),V] (row-major) —
+    /// what the stochastic accept rule needs. KV-overwriting like
+    /// `call_verify`.
+    pub fn call_verify_logits(
+        &self,
+        tokens: &[i32],
+        pos: &[i32],
+        start: &[i32],
+        mask: &[i32],
+        kv: &xla::PjRtBuffer,
+        w: &WeightSet,
+    ) -> Result<LogitsOut> {
+        let b = pos.len();
+        let g1 = tokens.len() / b;
+        let t = self.buf_i32_2d(tokens, b, g1)?;
+        let p = self.buf_i32(pos)?;
+        let s = self.buf_i32(start)?;
+        let m = self.buf_i32(mask)?;
+        let mut out = self.run(&[&t, &p, &s, &m], Some(kv), w)?;
+        let kv2 = out.pop().ok_or_else(|| QspecError::Xla("verify_logits out".into()))?;
+        Ok(LogitsOut { logits: Self::read_f32(&out[0])?, kv: kv2 })
     }
 
     /// score: perplexity rows [B, T+1].

@@ -1,61 +1,116 @@
 //! Host-side sampling utilities.
 //!
-//! The HLO entries return greedy argmax tokens directly (the paper uses
-//! greedy decoding for reproducibility), so the hot path needs no host
-//! sampling. These helpers exist for the general API (temperature / top-k
-//! over returned logits) and for workload synthesis. [`Sampler`] is the
-//! per-request form: built from the request's
-//! [`SamplingParams`](crate::coordinator::SamplingParams), it applies
-//! the request's temperature and seed so a future logits-returning entry
-//! plugs into the serving API without another signature change.
+//! The greedy HLO entries return argmax tokens directly, so the greedy
+//! hot path needs no host sampling. The `*_logits` entries return raw
+//! (un-tempered) logits rows; everything distribution-shaped happens
+//! here on the host: temperature scaling, softmax, top-k, and the
+//! per-request [`Sampler`] that owns the request's seeded PRNG so
+//! identical requests replay identically. The stochastic speculative
+//! accept rule ([`crate::coordinator::stochastic_accept`]) draws all
+//! of its randomness through a `Sampler` for the same reason.
+//!
+//! Robustness contract: a quantized model can emit non-finite logits
+//! (overflowed activations → ±inf, 0/0 → NaN). Nothing in this module
+//! panics on them — NaN entries are treated as "never sampled", +inf
+//! entries split the probability mass uniformly among themselves, and
+//! an all-NaN row degrades to index 0 (callers cannot do better with
+//! no information, and a worker abort would be strictly worse).
 
 use crate::coordinator::request::SamplingParams;
 use crate::util::prng::Pcg32;
 
-/// Greedy argmax over a logits row.
+/// Greedy argmax over a logits row. NaN entries never win; an empty or
+/// all-NaN row returns 0 (degraded but defined — see module docs).
 pub fn argmax(logits: &[f32]) -> usize {
     let mut best = 0;
     let mut bv = f32::NEG_INFINITY;
+    let mut seen = false;
     for (i, &v) in logits.iter().enumerate() {
-        if v > bv {
+        if !v.is_nan() && (!seen || v > bv) {
             bv = v;
             best = i;
+            seen = true;
         }
     }
     best
 }
 
-/// Softmax (numerically stable).
+/// Softmax (numerically stable). NaN logits get probability 0; if any
+/// +inf logits are present the mass is split uniformly among them.
 pub fn softmax(logits: &[f32]) -> Vec<f32> {
-    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let exps: Vec<f32> = logits.iter().map(|&x| (x - m).exp()).collect();
+    let n_inf = logits.iter().filter(|v| **v == f32::INFINITY).count();
+    if n_inf > 0 {
+        let p = 1.0 / n_inf as f32;
+        return logits.iter().map(|&v| if v == f32::INFINITY { p } else { 0.0 }).collect();
+    }
+    let m = logits
+        .iter()
+        .cloned()
+        .filter(|v| !v.is_nan())
+        .fold(f32::NEG_INFINITY, f32::max);
+    if m == f32::NEG_INFINITY {
+        // all-NaN (or empty, or all -inf): no information — uniform
+        // over the row keeps downstream code total-mass-1 where
+        // possible rather than dividing by zero.
+        let n = logits.len().max(1);
+        return vec![1.0 / n as f32; logits.len()];
+    }
+    let exps: Vec<f32> = logits.iter().map(|&x| if x.is_nan() { 0.0 } else { (x - m).exp() }).collect();
     let z: f32 = exps.iter().sum();
     exps.iter().map(|&e| e / z).collect()
 }
 
+/// Temperature-scaled softmax over a logits row: the probability
+/// distribution a [`Sampler`] at `temperature` actually samples from.
+/// `temperature <= 0` degenerates to a one-hot on the argmax.
+pub fn softmax_t(logits: &[f32], temperature: f32) -> Vec<f32> {
+    if temperature <= 0.0 {
+        let mut p = vec![0.0; logits.len()];
+        if !logits.is_empty() {
+            p[argmax(logits)] = 1.0;
+        }
+        return p;
+    }
+    let scaled: Vec<f32> = logits.iter().map(|&x| x / temperature).collect();
+    softmax(&scaled)
+}
+
 /// Temperature + top-k sampling.
+///
+/// Non-finite logits are handled per the module contract: NaN rows are
+/// excluded from the ranking, +inf entries are sampled uniformly among
+/// themselves. When floating-point rounding leaves the draw unconsumed
+/// after walking every bucket, the fallback is the *most* likely
+/// top-k token (`idx[0]`), not the least.
 pub fn sample_topk(logits: &[f32], temperature: f32, k: usize, rng: &mut Pcg32) -> usize {
     if temperature <= 0.0 {
         return argmax(logits);
     }
-    let mut idx: Vec<usize> = (0..logits.len()).collect();
-    idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
-    let k = k.max(1).min(logits.len());
+    let mut idx: Vec<usize> = (0..logits.len()).filter(|&i| !logits[i].is_nan()).collect();
+    if idx.is_empty() {
+        return 0; // all-NaN row: degraded but defined
+    }
+    idx.sort_unstable_by(|&a, &b| f32::total_cmp(&logits[b], &logits[a]));
+    let k = k.max(1).min(idx.len());
     let top: Vec<f32> = idx[..k].iter().map(|&i| logits[i] / temperature).collect();
     let probs = softmax(&top);
-    let mut u = rng.next_f64() as f32;
+    let mut u = rng.next_f64();
     for (j, &p) in probs.iter().enumerate() {
-        if u < p {
+        if u < p as f64 {
             return idx[j];
         }
-        u -= p;
+        u -= p as f64;
     }
-    idx[k - 1]
+    idx[0]
 }
 
 /// Per-request sampler state: the request's temperature plus a PRNG
 /// seeded from its `seed`, so identical requests replay identically.
-#[derive(Debug)]
+///
+/// A request's draws happen in a fixed order regardless of how it was
+/// batched with other requests (each slot owns its own `Sampler`), so
+/// same-seed replay yields the same token stream byte-for-byte.
+#[derive(Debug, Clone)]
 pub struct Sampler {
     temperature: f32,
     rng: Pcg32,
@@ -69,9 +124,51 @@ impl Sampler {
         }
     }
 
+    /// The request's temperature.
+    pub fn temperature(&self) -> f32 {
+        self.temperature
+    }
+
+    /// True when this request decodes greedily (temperature 0): no
+    /// randomness is consumed and the committed stream is the argmax
+    /// stream.
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+
+    /// The distribution this sampler draws from for a logits row:
+    /// temperature-scaled softmax (one-hot argmax at temperature 0).
+    pub fn probs(&self, logits: &[f32]) -> Vec<f32> {
+        softmax_t(logits, self.temperature)
+    }
+
     /// Sample one token id from a logits row (greedy at temperature 0).
     pub fn sample(&mut self, logits: &[f32], top_k: usize) -> usize {
         sample_topk(logits, self.temperature, top_k, &mut self.rng)
+    }
+
+    /// Sample an index from an explicit probability row (already
+    /// normalized, e.g. from [`Sampler::probs`] or a residual
+    /// distribution). FP-rounding leftovers fall back to the row's
+    /// argmax. Consumes exactly one draw.
+    pub fn sample_probs(&mut self, probs: &[f32]) -> usize {
+        let mut u = self.rng.next_f64();
+        for (i, &p) in probs.iter().enumerate() {
+            if p > 0.0 {
+                if u < p as f64 {
+                    return i;
+                }
+                u -= p as f64;
+            }
+        }
+        argmax(probs)
+    }
+
+    /// One uniform draw in `[0, 1)` for the accept/reject test in
+    /// stochastic speculative sampling. Kept distinct from
+    /// `sample_probs` so the accept rule reads as the paper writes it.
+    pub fn accept_draw(&mut self) -> f64 {
+        self.rng.next_f64()
     }
 }
 
@@ -85,10 +182,41 @@ mod tests {
     }
 
     #[test]
+    fn argmax_ignores_nan_and_survives_all_nan() {
+        assert_eq!(argmax(&[f32::NAN, 1.0, 2.0, f32::NAN]), 2);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::INFINITY]), 1);
+    }
+
+    #[test]
     fn softmax_sums_to_one() {
         let p = softmax(&[1.0, 2.0, 3.0]);
         assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
         assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_handles_non_finite() {
+        // NaN gets zero mass, the rest renormalizes
+        let p = softmax(&[0.0, f32::NAN, 0.0]);
+        assert!((p[0] - 0.5).abs() < 1e-6 && p[1] == 0.0 && (p[2] - 0.5).abs() < 1e-6);
+        // +inf entries split the mass uniformly
+        let p = softmax(&[f32::INFINITY, 1.0, f32::INFINITY]);
+        assert!((p[0] - 0.5).abs() < 1e-6 && p[1] == 0.0 && (p[2] - 0.5).abs() < 1e-6);
+        // all-NaN: uniform, not a panic or division by zero
+        let p = softmax(&[f32::NAN, f32::NAN]);
+        assert!((p[0] - 0.5).abs() < 1e-6 && (p[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_t_temperature_sharpens_and_zero_is_onehot() {
+        let logits = [1.0f32, 2.0, 0.5];
+        let warm = softmax_t(&logits, 1.0);
+        let cold = softmax_t(&logits, 0.25);
+        assert!(cold[1] > warm[1], "lower temperature concentrates mass");
+        let hot = softmax_t(&logits, 0.0);
+        assert_eq!(hot, vec![0.0, 1.0, 0.0]);
     }
 
     #[test]
@@ -98,12 +226,58 @@ mod tests {
     }
 
     #[test]
+    fn sample_topk_does_not_panic_on_non_finite_logits() {
+        // regression: partial_cmp(..).unwrap() used to abort the
+        // worker on the first NaN logit row
+        let mut rng = Pcg32::seeded(9);
+        for _ in 0..200 {
+            let t = sample_topk(&[f32::NAN, 1.0, f32::NAN, 0.5], 0.8, 4, &mut rng);
+            assert!(t == 1 || t == 3, "NaN entries must never be sampled (got {t})");
+        }
+        // +inf dominates; all-NaN degrades to 0
+        for _ in 0..50 {
+            assert_eq!(sample_topk(&[0.0, f32::INFINITY, -1.0], 0.7, 3, &mut rng), 1);
+            assert_eq!(sample_topk(&[f32::NAN, f32::NAN], 0.7, 2, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn fp_fallback_returns_most_likely_not_least() {
+        // regression for the biased fallback: craft a top-k whose
+        // probabilities underflow the walk so the fallback branch is
+        // the *only* exit, then check it lands on idx[0]. Force it by
+        // monkey-walking: probs of a single +inf row are exact, so
+        // instead exercise sample_probs' fallback via an
+        // unnormalized-low row.
+        let mut s = Sampler::new(&SamplingParams {
+            temperature: 1.0,
+            seed: 3,
+            ..SamplingParams::default()
+        });
+        // total mass ~0.2: most draws leave u unconsumed -> fallback.
+        // argmax of the row is index 1 (the most likely), never 2.
+        let mut fell_back = false;
+        for _ in 0..100 {
+            let i = s.sample_probs(&[0.05, 0.1, 0.05]);
+            if !(0..3).contains(&i) {
+                panic!("out of range");
+            }
+            if i == 1 {
+                fell_back = true;
+            }
+            assert_ne!(i, 2, "fallback must prefer the most likely bucket");
+        }
+        assert!(fell_back);
+    }
+
+    #[test]
     fn sampler_respects_params_seed_and_temperature() {
         let logits = vec![1.0f32, 0.9, 0.8, -10.0];
         let greedy = SamplingParams { seed: 123, ..SamplingParams::default() };
         let mut s = Sampler::new(&greedy);
         // temperature 0: greedy regardless of seed
         assert_eq!(s.sample(&logits, 4), 0);
+        assert!(s.is_greedy());
 
         let warm = SamplingParams {
             temperature: 1.0,
@@ -112,10 +286,30 @@ mod tests {
         };
         // same seed -> identical draw sequence; support stays in top-k
         let (mut a, mut b) = (Sampler::new(&warm), Sampler::new(&warm));
+        assert!(!a.is_greedy());
         for _ in 0..100 {
             let d = a.sample(&logits, 3);
             assert_eq!(d, b.sample(&logits, 3));
             assert!(d < 3);
+        }
+    }
+
+    #[test]
+    fn sample_probs_matches_distribution_empirically() {
+        let mut s = Sampler::new(&SamplingParams {
+            temperature: 1.0,
+            seed: 42,
+            ..SamplingParams::default()
+        });
+        let probs = [0.5f32, 0.3, 0.2];
+        let mut counts = [0usize; 3];
+        let n = 20_000;
+        for _ in 0..n {
+            counts[s.sample_probs(&probs)] += 1;
+        }
+        for (i, &p) in probs.iter().enumerate() {
+            let f = counts[i] as f32 / n as f32;
+            assert!((f - p).abs() < 0.02, "bucket {i}: {f} vs {p}");
         }
     }
 

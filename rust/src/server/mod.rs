@@ -1,4 +1,4 @@
-//! TCP line-protocol serving frontend (protocol v1.5).
+//! TCP line-protocol serving frontend (protocol v1.6).
 //!
 //! Since v1.2 the server is an **engine pool**: `--replicas N` (or a
 //! repeated `--engine` for a heterogeneous pool) spawns one engine
@@ -35,7 +35,7 @@
 //! the owning replica. A single-replica pool behaves byte-for-byte
 //! like the v1.1 server on the v1/v1.1 surface.
 //!
-//! # Protocol v1.5 — one JSON object per line, both directions
+//! # Protocol v1.6 — one JSON object per line, both directions
 //!
 //! Eight ops, selected by the `"op"` field (absent = `generate`, the
 //! legacy bare-prompt form):
@@ -59,9 +59,12 @@
 //! clamped to `[1, max_seq]`, default from the server config);
 //! `stream` (bool, default false); `stop` (array of strings, each
 //! trimmed from the output on match); `temperature` (number in [0,2])
-//! and `seed` (integer) — parsed and threaded per-request, but every
-//! current engine serves argmax-only AOT entries
-//! ([`Engine::argmax_only`]), so `temperature > 0` is answered with a
+//! and `seed` (integer) — `temperature > 0` is served
+//! distribution-losslessly (v1.6: stochastic speculative sampling, the
+//! committed stream follows the verifier distribution exactly and
+//! `seed` makes it bit-replayable). Engines built from pre-v1.6
+//! artifact sets without logits-returning entries advertise
+//! [`Engine::argmax_only`] and still answer `temperature > 0` with a
 //! precise `bad_request` naming the engine instead of silently
 //! decoding greedily. v1.1 QoS fields: `priority` (integer in [0, 3];
 //! 0 = batch, 1 = normal [the default], 2 = high, 3 = critical) and
@@ -221,6 +224,23 @@
 //! `queue_wait_ns` and `accept_len` histograms as
 //! `[upper_bound, count]` pairs (pooled frames merge them bucketwise).
 //!
+//! # v1.6 — stochastic sampling: temperature > 0, end-to-end
+//!
+//! v1.6 changes no wire surface — same ops, same fields — it makes the
+//! already-parsed `temperature`/`seed` fields *work*. Engines built
+//! from artifact sets that export the `*_logits` entry twins draft and
+//! verify full distributions and run Leviathan-style stochastic
+//! speculative sampling host-side: draft token `i` is accepted with
+//! probability `min(1, p_i/q_i)`, a rejection resamples from the
+//! residual `norm(max(0, p - q))`, and a full acceptance samples the
+//! bonus token from the verifier's last row. The committed stream is
+//! distributed exactly as a verifier-only rollout — speculation still
+//! only changes speed, never the distribution — and each request's
+//! `seed` drives a private PRNG, so identical requests replay
+//! identically whatever batch they land in. Engines on older artifact
+//! sets keep advertising `argmax_only` and the v1.5 rejection
+//! behavior.
+//!
 //! Worker cadence knobs: `--heartbeat-ms` (router-side ping cadence;
 //! death is declared after one heartbeat interval of silence) and
 //! `--status-push-ms` (worker-side status push cadence) tune the v1.4
@@ -256,7 +276,7 @@ pub use pool::{
 /// Wire protocol version reported in `stats` frames, flight dumps and
 /// `qspec_build_info`. Bumped additively: a vX.Y client parses every
 /// vX.(Y+1) frame it knows about unchanged.
-pub const PROTOCOL_VERSION: &str = "v1.5";
+pub const PROTOCOL_VERSION: &str = "v1.6";
 
 /// A parsed protocol operation (v1.2 surface + the v1.4 `reconfigure`
 /// + the v1.5 observability ops).

@@ -1614,16 +1614,19 @@ fn handle_generate(
         let _ = resp.send(format_error("bad_request", &e.to_string()));
         return;
     }
-    // engine-level validation: temperature sampling needs a
-    // logits-returning entry; against an argmax-only engine the
-    // request is rejected precisely instead of silently decoding
-    // greedily (ROADMAP: temperature end-to-end)
+    // engine-level validation: temperature sampling needs the logits
+    // entry twins (v1.6). Engines that loaded them advertise
+    // `argmax_only() == false` and sample distribution-losslessly;
+    // engines built from a pre-logits artifact set are still rejected
+    // precisely instead of silently decoding greedily
     if req.params.temperature > 0.0 && engine.argmax_only() {
         let _ = resp.send(format_error(
             "bad_request",
             &format!(
-                "field \"temperature\": engine \"{}\" serves argmax-only AOT \
-                 entries and cannot sample; omit temperature or pass 0",
+                "field \"temperature\": engine \"{}\" was built from an \
+                 artifact set without logits entries and cannot sample; \
+                 omit temperature or pass 0 (re-run `make artifacts` for \
+                 a sampling-capable set)",
                 engine.name()
             ),
         ));

@@ -12,8 +12,19 @@
 //!      committed token stream equals the verifier's own greedy
 //!      rollout exactly, whatever the drafts were (losslessness: the
 //!      draft phase can only change *speed*, never *output*).
+//!
+//! And for `stochastic_accept(drafts, q, p, ...)` — the temperature>0
+//! analogue (Leviathan et al.), checked empirically with seeded
+//! samplers (every test is deterministic):
+//!   4. draft token `d` is accepted with probability `min(1, p_d/q_d)`;
+//!   5. a rejection resamples from the normalized residual
+//!      `norm(max(0, p - q))` — never the rejected token itself;
+//!   6. end-to-end, the committed stream is distributed exactly as a
+//!      verifier-only rollout (distribution-losslessness: whatever q
+//!      is, speculation changes speed, never the distribution).
 
-use qspec::coordinator::greedy_accept;
+use qspec::coordinator::{greedy_accept, stochastic_accept, SamplingParams};
+use qspec::sampler::Sampler;
 use qspec::util::check::check;
 use qspec::util::prng::Pcg32;
 
@@ -160,5 +171,216 @@ fn committed_stream_equals_verifier_rollout_regardless_of_drafts() {
             }
             Ok(())
         },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Stochastic acceptance (temperature > 0) — properties 4–6.
+//
+// These are statistical tests over *seeded* samplers: every run draws
+// the same trials, so they are deterministic in CI. Tolerances are set
+// several standard errors above the expected sampling noise.
+// ---------------------------------------------------------------------------
+
+const SV: usize = VOCAB as usize;
+
+fn sampler(seed: u64) -> Sampler {
+    Sampler::new(&SamplingParams { temperature: 1.0, seed, ..SamplingParams::default() })
+}
+
+/// Deterministic toy *verifier* logits over the small vocab — the
+/// stochastic analogue of `verifier_next` (a distribution per context
+/// token instead of a single argmax).
+fn p_logits(ctx: i32) -> Vec<f32> {
+    logits_from(ctx as u64 ^ 0x9e37_79b9_7f4a_7c15)
+}
+
+/// Deterministic toy *draft* logits: the verifier's logits plus a
+/// large context-keyed perturbation, so q is measurably wrong — the
+/// acceptance rule has to do real correcting for property 6 to hold.
+fn q_logits(ctx: i32) -> Vec<f32> {
+    let mut l = p_logits(ctx);
+    let noise = logits_from(ctx as u64 ^ 0x517c_c1b7_2722_0a95);
+    for (a, b) in l.iter_mut().zip(noise) {
+        *a += 0.8 * b;
+    }
+    l
+}
+
+fn logits_from(key: u64) -> Vec<f32> {
+    let mut r = Pcg32::new(key, 7);
+    (0..SV).map(|_| 4.0 * (r.next_f64() as f32) - 2.0).collect()
+}
+
+/// q (one row) and p (two rows: position 0 plus the bonus row scored
+/// after the draft token) for a single-draft `stochastic_accept` call.
+fn single_draft_qp(ctx: i32, d: usize) -> (Vec<f32>, Vec<f32>) {
+    let s0 = sampler(0);
+    let q = s0.probs(&q_logits(ctx));
+    let mut p = s0.probs(&p_logits(ctx));
+    p.extend_from_slice(&s0.probs(&p_logits(d as i32)));
+    (q, p)
+}
+
+/// Property 4: a pinned draft token `d` is accepted with empirical
+/// frequency `min(1, p_d / q_d)`.
+#[test]
+fn stochastic_acceptance_frequency_is_min_one_p_over_q() {
+    for d in 0..SV {
+        let (q, p) = single_draft_qp(5, d);
+        let expect = (p[d] as f64 / q[d] as f64).min(1.0);
+        let n = 20_000u64;
+        let mut hits = 0u64;
+        for t in 0..n {
+            let mut s = sampler(1_000 + t * (SV as u64) + d as u64);
+            let dec = stochastic_accept(&[d as i32], &q, &p, SV, &mut s);
+            if dec.accepted == 1 {
+                hits += 1;
+            }
+        }
+        let freq = hits as f64 / n as f64;
+        assert!(
+            (freq - expect).abs() < 0.02,
+            "draft {d}: empirical acceptance {freq:.4} vs min(1, p/q) = {expect:.4}"
+        );
+    }
+}
+
+/// Property 5: on rejection, the correction token is distributed as
+/// the normalized residual `norm(max(0, p - q))` — and the rejected
+/// token itself (whose residual is <= 0 by construction of rejection
+/// being possible) is never re-committed.
+#[test]
+fn rejection_resamples_from_the_normalized_residual() {
+    let s0 = sampler(0);
+    let q0 = s0.probs(&q_logits(9));
+    let p0 = s0.probs(&p_logits(9));
+    // the draft token with the largest q-overshoot rejects most often
+    let d = (0..SV)
+        .max_by(|&a, &b| (q0[a] - p0[a]).partial_cmp(&(q0[b] - p0[b])).unwrap())
+        .unwrap();
+    assert!(q0[d] > p0[d], "test setup: chosen draft must be rejectable");
+    let (q, p) = single_draft_qp(9, d);
+    let resid: Vec<f64> = (0..SV).map(|v| ((p[v] - q[v]) as f64).max(0.0)).collect();
+    let z: f64 = resid.iter().sum();
+    assert!(z > 1e-6, "test setup: residual must be nonzero");
+
+    let mut hist = vec![0u64; SV];
+    let mut rejects = 0u64;
+    for t in 0..40_000u64 {
+        let mut s = sampler(77_000 + t);
+        let dec = stochastic_accept(&[d as i32], &q, &p, SV, &mut s);
+        if dec.accepted == 0 {
+            rejects += 1;
+            hist[dec.committed[0] as usize] += 1;
+        }
+    }
+    assert!(rejects > 4_000, "rejection path barely exercised: {rejects} rejects");
+    assert_eq!(hist[d], 0, "rejected token must not be resampled");
+    let tv: f64 = (0..SV)
+        .map(|v| (hist[v] as f64 / rejects as f64 - resid[v] / z).abs())
+        .sum::<f64>()
+        / 2.0;
+    assert!(tv < 0.025, "residual TV distance {tv:.4} too large");
+}
+
+/// One full speculative rollout with the toy models, mirroring what
+/// the engines' stochastic cycles do: sample gamma drafts from q
+/// sequentially, score gamma+1 verifier rows, stochastic-accept.
+fn spec_rollout(seed: u64, len: usize, gamma: usize) -> Vec<i32> {
+    let mut s = sampler(seed);
+    let p0 = s.probs(&p_logits(0));
+    let mut committed = vec![s.sample_probs(&p0) as i32];
+    while committed.len() < len {
+        let pending = *committed.last().unwrap();
+        let mut drafts = Vec::with_capacity(gamma);
+        let mut q = Vec::with_capacity(gamma * SV);
+        let mut cur = pending;
+        for _ in 0..gamma {
+            let qp = s.probs(&q_logits(cur));
+            let d = s.sample_probs(&qp) as i32;
+            q.extend_from_slice(&qp);
+            drafts.push(d);
+            cur = d;
+        }
+        let mut p = Vec::with_capacity((gamma + 1) * SV);
+        let mut prev = pending;
+        for j in 0..=gamma {
+            p.extend_from_slice(&s.probs(&p_logits(prev)));
+            if j < gamma {
+                prev = drafts[j];
+            }
+        }
+        let dec = stochastic_accept(&drafts, &q, &p, SV, &mut s);
+        committed.extend(dec.committed);
+    }
+    committed.truncate(len);
+    committed
+}
+
+/// Property 6: the marginal distribution of the L-th committed token
+/// under speculative decoding equals the *exact* verifier-chain
+/// marginal (computed by powering the 8x8 transition matrix), while a
+/// draft-only rollout measurably does not — i.e. `stochastic_accept`
+/// is doing the correcting, and the correction is complete.
+#[test]
+fn committed_stream_is_distributed_as_verifier_rollout() {
+    const LEN: usize = 4;
+    const TRIALS: u64 = 8_000;
+
+    // exact verifier marginal of token LEN-1 via the transition matrix
+    let s0 = sampler(0);
+    let rows: Vec<Vec<f32>> = (0..SV).map(|c| s0.probs(&p_logits(c as i32))).collect();
+    let mut exact: Vec<f64> = s0.probs(&p_logits(0)).iter().map(|&x| x as f64).collect();
+    for _ in 1..LEN {
+        let mut next = vec![0f64; SV];
+        for a in 0..SV {
+            for b in 0..SV {
+                next[b] += exact[a] * rows[a][b] as f64;
+            }
+        }
+        exact = next;
+    }
+
+    let tv_to_exact = |hist: &[u64]| -> f64 {
+        let n: u64 = hist.iter().sum();
+        (0..SV)
+            .map(|v| (hist[v] as f64 / n as f64 - exact[v]).abs())
+            .sum::<f64>()
+            / 2.0
+    };
+
+    // speculative rollouts, two different gammas
+    for gamma in [2usize, 4] {
+        let mut hist = vec![0u64; SV];
+        for t in 0..TRIALS {
+            let toks = spec_rollout(500_000 + t, LEN, gamma);
+            hist[toks[LEN - 1] as usize] += 1;
+        }
+        let tv = tv_to_exact(&hist);
+        assert!(
+            tv < 0.03,
+            "gamma {gamma}: spec marginal TV {tv:.4} from exact verifier marginal"
+        );
+    }
+
+    // power check: a draft-only (q) rollout must be measurably off,
+    // otherwise this test could not detect a broken acceptance rule
+    let mut qhist = vec![0u64; SV];
+    for t in 0..TRIALS {
+        let mut s = sampler(900_000 + t);
+        let mut ctx = 0i32;
+        let mut last = 0i32;
+        for _ in 0..LEN {
+            let qp = s.probs(&q_logits(ctx));
+            last = s.sample_probs(&qp) as i32;
+            ctx = last;
+        }
+        qhist[last as usize] += 1;
+    }
+    let qtv = tv_to_exact(&qhist);
+    assert!(
+        qtv > 0.05,
+        "draft-only TV {qtv:.4} too close to the verifier marginal — test has no power"
     );
 }

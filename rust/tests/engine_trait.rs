@@ -6,7 +6,9 @@
 //!   `fn conformance(&mut dyn Engine, ...)` exercising the full engine
 //!   contract — admission/completion invariants, streaming deltas,
 //!   cancel-queued, cancel-mid-flight (slot verifiably freed), stop
-//!   sequences, deadline expiry, and the stats-snapshot shape. Every
+//!   sequences, deadline expiry, stochastic sampling (temperature > 0
+//!   completes and replays on the seed whenever the engine does not
+//!   advertise `argmax_only`), and the stats-snapshot shape. Every
 //!   present and future `EngineKind` must pass the *identical* battery;
 //!   [`conformance_kinds`] matches exhaustively on `EngineKind`, so
 //!   adding a variant fails this suite at compile time until the new
@@ -16,9 +18,9 @@
 //!   TCP frontend (`conn_thread` + `engine_loop`), covering the
 //!   protocol surface — streaming round trip, explicit +
 //!   disconnect-driven cancellation, stop sequences, QoS
-//!   (priority/shedding/deadlines), argmax-only temperature rejection,
-//!   stats snapshots, legacy one-line requests and precise error
-//!   frames.
+//!   (priority/shedding/deadlines), stochastic sampling served end to
+//!   end (v1.6), stats snapshots, legacy one-line requests and precise
+//!   error frames.
 //! * **Artifact-gated suite** (`make artifacts` first; skips silently
 //!   otherwise): every engine kind (QSPEC, AR, EAGLE, HierSpec) runs
 //!   the battery and the same TCP scenarios, plus the HierSpec
@@ -68,6 +70,7 @@ fn conformance(engine: &mut dyn Engine, tok: &Tokenizer, prompts: &[String]) {
     cancel_mid_flight(engine, tok, prompts);
     stop_sequences(engine, tok, &prompts[0]);
     deadline_expiry(engine, tok, &prompts[1]);
+    stochastic_sampling(engine, tok, &prompts[0]);
     stats_shape(engine);
     assert!(!engine.has_work(), "{}: battery must leave the engine idle", engine.name());
 }
@@ -274,6 +277,46 @@ fn deadline_expiry(engine: &mut dyn Engine, tok: &Tokenizer, prompt: &str) {
     assert!(!engine.has_work(), "{name}");
 }
 
+/// Stochastic sampling (v1.6): an engine that does not advertise
+/// `argmax_only` must serve `temperature > 0` to completion and replay
+/// the identical token stream for an identical `(params, seed)` pair.
+/// Engines built from pre-logits artifact sets skip the scenario — the
+/// server rejects their sampled requests up front instead.
+fn stochastic_sampling(engine: &mut dyn Engine, tok: &Tokenizer, prompt: &str) {
+    let name = engine.name();
+    if engine.argmax_only() {
+        eprintln!("{name}: argmax-only artifact set, skipping the stochastic scenario");
+        return;
+    }
+    let run = |engine: &mut dyn Engine, seed: u64| -> Vec<i32> {
+        let params = SamplingParams {
+            max_tokens: 12,
+            temperature: 0.7,
+            seed,
+            ..SamplingParams::default()
+        };
+        let id = engine
+            .submit_request(GenerationRequest::new(tok.encode_prompt(prompt), params));
+        let mut fins = engine.run_to_completion().expect("sampled run");
+        assert_eq!(fins.len(), 1, "{name}");
+        let f = fins.remove(0);
+        assert_eq!(f.id, id, "{name}");
+        assert!(!f.tokens.is_empty(), "{name}: sampled run produced no tokens");
+        // a sampled stream may hit EOS before the budget, so only the
+        // finish reason's *kind* is pinned, not the length
+        assert!(
+            matches!(f.finish_reason, FinishReason::Length | FinishReason::Stop),
+            "{name}: unexpected finish reason {:?}",
+            f.finish_reason
+        );
+        f.tokens
+    };
+    let a = run(engine, 42);
+    let b = run(engine, 42);
+    assert_eq!(a, b, "{name}: same seed must replay the identical stream");
+    assert!(!engine.has_work(), "{name}: stochastic scenario left work behind");
+}
+
 /// Stats shape: the `/stats` surface serializes for this engine with
 /// every required key, and `acceptance_rate` is `null` exactly when
 /// the engine never drafted.
@@ -381,6 +424,80 @@ fn mock_engine_with_acceptance_passes_conformance() {
     conformance(&mut engine, &tok, &prompts);
     let acc = engine.metrics().acceptance_rate_opt().expect("drafting mock");
     assert!((acc - 0.75).abs() < 1e-9);
+}
+
+/// v1.6 distribution-losslessness at the engine layer: the drafting
+/// mock's committed stream must be distributed exactly as the plain-AR
+/// mock's — both equal the toy verifier chain `p` behind
+/// `mock_logits`, whatever the (deliberately bad) draft distribution
+/// was. Checked empirically on the second committed token over many
+/// seeded single-request runs against the *exact* marginal computed
+/// from the toy model; a broken accept rule (committing draft samples
+/// directly) measures TV ~0.2 here, an order of magnitude above the
+/// lossless sampling noise (~0.055 at 4000 trials).
+#[test]
+fn mock_stochastic_stream_is_distributed_as_the_verifier_chain() {
+    use qspec::coordinator::mock::{mock_logits, MOCK_VOCAB};
+    use qspec::sampler::softmax_t;
+
+    const TEMP: f32 = 0.8;
+    const EOS: i32 = 2;
+    const N: u64 = 4000;
+    let prompt = vec![1i32, 4, 9];
+
+    // exact marginal of the second committed token, conditioned on the
+    // first not being EOS (those runs finish at length 1 and are
+    // skipped below): t0 ~ p(.|9), t1 ~ p(.|t0)
+    let p0 = softmax_t(&mock_logits(9), TEMP);
+    let z = 1.0 - p0[EOS as usize] as f64;
+    let mut exact = vec![0f64; MOCK_VOCAB];
+    for t0 in 0..MOCK_VOCAB {
+        if t0 as i32 == EOS {
+            continue;
+        }
+        let pr = softmax_t(&mock_logits(t0 as i32), TEMP);
+        for t1 in 0..MOCK_VOCAB {
+            exact[t1] += p0[t0] as f64 / z * pr[t1] as f64;
+        }
+    }
+
+    let second_token = |acc: Option<f64>, seed: u64| -> Option<i32> {
+        let mut e = EchoEngine::new(1, 64, 0);
+        if let Some(a) = acc {
+            e = e.with_acceptance(a);
+        }
+        let params = SamplingParams {
+            max_tokens: 2,
+            temperature: TEMP,
+            seed,
+            ..SamplingParams::default()
+        };
+        e.submit_request(GenerationRequest::new(prompt.clone(), params));
+        let fins = e.run_to_completion().expect("mock sampled run");
+        fins[0].tokens.get(1).copied()
+    };
+
+    // acceptance 0.3 puts the largest perturbation on q, so a broken
+    // accept rule would show up loudest; None is the plain-AR baseline
+    for acc in [None, Some(0.3)] {
+        let mut hist = vec![0u64; MOCK_VOCAB];
+        let mut n = 0u64;
+        for t in 0..N {
+            if let Some(t1) = second_token(acc, 123_000 + t) {
+                hist[t1 as usize] += 1;
+                n += 1;
+            }
+        }
+        assert!(n > N / 2, "too many EOS-terminated runs: {n}/{N}");
+        let tv: f64 = (0..MOCK_VOCAB)
+            .map(|v| (hist[v] as f64 / n as f64 - exact[v]).abs())
+            .sum::<f64>()
+            / 2.0;
+        assert!(
+            tv < 0.09,
+            "mock (acceptance {acc:?}): committed-stream TV {tv:.4} from the verifier marginal"
+        );
+    }
 }
 
 #[test]
@@ -507,18 +624,19 @@ fn mock_server_stop_sequence_legacy_form_and_errors() {
             "a".repeat(40)
         ));
         let bad_stop = c.recv();
-        // temperature parses (within [0,2]) but the mock engine is
-        // argmax-only: rejected precisely instead of silently greedy
-        c.send(r#"{"op":"generate","prompt":"x","max_tokens":4,"temperature":0.7}"#);
-        let bad_temp = c.recv();
-        // temperature 0 on the same engine is fine
+        // temperature parses (within [0,2]) and the mock serves it
+        // through the stochastic sampler (v1.6): a normal completion,
+        // not a bad_request
+        c.send(r#"{"op":"generate","prompt":"x","max_tokens":4,"temperature":0.7,"seed":9}"#);
+        let sampled = c.recv();
+        // temperature 0 on the same engine stays greedy
         c.send(r#"{"op":"generate","prompt":"x","max_tokens":3,"temperature":0}"#);
         let temp_zero = c.recv();
-        (stopped, legacy, bad_prompt, bad_op, not_found, bad_stop, bad_temp, temp_zero)
+        (stopped, legacy, bad_prompt, bad_op, not_found, bad_stop, sampled, temp_zero)
     });
     server::engine_loop(&rx, &tok, &mut engine).expect("engine_loop");
     lh.join().unwrap();
-    let (stopped, legacy, bad_prompt, bad_op, not_found, bad_stop, bad_temp, temp_zero) =
+    let (stopped, legacy, bad_prompt, bad_op, not_found, bad_stop, sampled, temp_zero) =
         client.join().unwrap();
     assert_eq!(stopped.get("finish_reason").unwrap().as_str(), Some("stop"));
     assert_eq!(stopped.get("text").unwrap().as_str(), Some("hi"));
@@ -536,12 +654,14 @@ fn mock_server_stop_sequence_legacy_form_and_errors() {
     let err = bad_stop.get("error").expect("error frame");
     assert_eq!(err.get("code").unwrap().as_str(), Some("bad_request"));
     assert!(err.get("message").unwrap().as_str().unwrap().contains("stop"));
-    let err = bad_temp.get("error").expect("argmax-only engines reject temperature > 0");
-    assert_eq!(err.get("code").unwrap().as_str(), Some("bad_request"));
-    let msg = err.get("message").unwrap().as_str().unwrap();
-    assert!(msg.contains("temperature") && msg.contains("mock"), "{msg}");
+    assert!(
+        sampled.get("error").is_none(),
+        "v1.6 engines with logits support serve temperature > 0: {sampled:?}"
+    );
+    let fr = sampled.get("finish_reason").unwrap().as_str().unwrap();
+    assert!(fr == "length" || fr == "stop", "sampled request completes, got {fr}");
     assert_eq!(temp_zero.get("finish_reason").unwrap().as_str(), Some("length"));
-    assert_eq!(engine.metrics().requests_done, 3);
+    assert_eq!(engine.metrics().requests_done, 4);
 }
 
 #[test]
