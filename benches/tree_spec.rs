@@ -1,0 +1,213 @@
+//! TreeSpec bench: accepted tokens per verify call — W-ary tree
+//! drafting vs linear speculation at an equal drafted-token budget.
+//!
+//! The number this bench exists to show (the PR's acceptance
+//! criterion): a token tree of `width * depth` nodes converts one
+//! verify call into strictly more committed tokens than a linear
+//! draft chain of `gamma = width * depth` tokens, because a sibling
+//! "rescue" salvages a cycle the linear chain would have ended at the
+//! first mismatch (plus the tree-row bonus token after the rescue).
+//!
+//! Two layers:
+//!   * **Mock race (always runs, session-free):** `EchoEngine` in tree
+//!     mode vs `EchoEngine::with_tree(1, width * depth)` — width 1 *is*
+//!     linear speculative decoding over the same toy draft/verifier
+//!     LMs and the same real accept rules, so the comparison holds the
+//!     models, the sampler and the drafted-token budget fixed and
+//!     varies only the tree shape. Seeded stochastic requests at
+//!     maximum draft divergence (`with_acceptance(0.0)`) keep the race
+//!     deterministic while exercising the recursive multi-branch
+//!     accept rule; the strict `tree > linear` assertion lives here.
+//!   * **Artifact race (gated on `make artifacts`):** AR W4A16 /
+//!     linear QSPEC / TreeSpec over real modules at size "s". The
+//!     manifest ships tree-masked verify rows at gamma 4 only, so the
+//!     real race compares TreeSpec{2,4} against QSPEC at the same
+//!     principal depth (gamma 4): identical draft chain, so every
+//!     sibling rescue is pure upside and accepted-per-verify must come
+//!     out strictly ahead there too.
+
+use qspec::bench::runner::{full_mode, open_session, run_engine, smoke_mode, RunSpec};
+use qspec::bench::Table;
+use qspec::config::EngineKind;
+use qspec::coordinator::{EchoEngine, Engine, GenerationRequest, SamplingParams};
+use qspec::kvcache::SlotManager;
+use qspec::metrics::EngineMetrics;
+use qspec::model::Mode;
+use qspec::util::json::{arr, num, obj, s};
+
+/// Committed tokens per verify call — `record_accept` fires exactly
+/// once per verify cycle in every drafting engine, so the histogram
+/// count is the number of verify calls.
+fn accepted_per_verify(m: &EngineMetrics) -> f64 {
+    m.accepted as f64 / m.accept_hist.count().max(1) as f64
+}
+
+/// Drive one mock engine shape to completion over a fixed seeded
+/// stochastic workload and return its metrics.
+fn mock_run(width: usize, depth: usize, n_req: usize, max_tok: usize) -> EngineMetrics {
+    let mut e = EchoEngine::new(4, 512, 0).with_tree(width, depth).with_acceptance(0.0);
+    for i in 0..n_req {
+        let params = SamplingParams {
+            max_tokens: max_tok,
+            temperature: 1.0,
+            seed: 0x5eed_0000 + i as u64,
+            ..SamplingParams::default()
+        };
+        e.submit_request(GenerationRequest::new(vec![10, 11, 12], params));
+    }
+    e.run_to_completion().expect("mock run");
+    assert_eq!(
+        e.core().slots.live_branches(),
+        0,
+        "tree cycle leaked KV branches ({width}x{depth})"
+    );
+    e.metrics().clone()
+}
+
+/// Direct audit of the acceptance criterion "sibling forks allocate no
+/// duplicate KV blocks for the shared prefix": forking W branches off
+/// a slot allocates nothing, and every branch's table aliases the
+/// parent's blocks until its first divergent append.
+fn fork_sharing_audit(width: usize) {
+    let mut m = SlotManager::new(1, 256, 64);
+    m.configure_paging(4, false);
+    m.admit(1, &[1, 2, 3, 4, 5, 6], 64, vec![]).expect("admit");
+    m.after_prefill(0, 50, -1);
+    let parent: Vec<_> = m.block_table(0).to_vec();
+    let before = m.live_blocks();
+    let branches: Vec<usize> = (0..width).map(|_| m.fork_branch(0)).collect();
+    assert_eq!(
+        m.live_blocks(),
+        before,
+        "forking {width} sibling branches must allocate no blocks"
+    );
+    for &b in &branches {
+        assert_eq!(m.branch_blocks(b), &parent[..], "fork must alias the parent table");
+    }
+    for &b in branches.iter().rev() {
+        m.release_branch(b);
+    }
+    assert_eq!(m.live_branches(), 0);
+    assert_eq!(m.live_blocks(), before);
+    println!("fork audit: {width} sibling forks over {} blocks, 0 allocated", parent.len());
+}
+
+fn main() {
+    // -- mock race: equal drafted budget, tree shape is the only knob --
+    const WIDTH: usize = 4;
+    const DEPTH: usize = 4;
+    let (n_req, max_tok) = if smoke_mode() { (16, 128) } else { (32, 200) };
+
+    fork_sharing_audit(WIDTH);
+
+    let tree_m = mock_run(WIDTH, DEPTH, n_req, max_tok);
+    let lin_m = mock_run(1, WIDTH * DEPTH, n_req, max_tok);
+    assert!(tree_m.tree_nodes_drafted > 0, "tree race never drafted a tree");
+    assert!(tree_m.tree_paths > 0, "tree race never offered a root path");
+
+    let mut table = Table::new(&["engine", "shape", "accept/verify", "acceptance", "p50 depth"]);
+    let mut out_rows = Vec::new();
+    let mut row = |label: &str, shape: String, m: &EngineMetrics| {
+        let apv = accepted_per_verify(m);
+        table.row(&[
+            label.to_string(),
+            shape.clone(),
+            format!("{apv:.3}"),
+            m.acceptance_rate_opt()
+                .map(|a| format!("{:.1}%", 100.0 * a))
+                .unwrap_or_else(|| "-".into()),
+            if m.accepted_depth.count() > 0 {
+                m.accepted_depth.percentile(50.0).to_string()
+            } else {
+                "-".into()
+            },
+        ]);
+        out_rows.push(obj(vec![
+            ("engine", s(label)),
+            ("shape", s(&shape)),
+            ("accepted_per_verify", num(apv)),
+            ("accepted", num(m.accepted as f64)),
+            ("verify_calls", num(m.accept_hist.count() as f64)),
+            ("tree_nodes_drafted", num(m.tree_nodes_drafted as f64)),
+        ]));
+    };
+    row("treespec (mock)", format!("{WIDTH}x{DEPTH}"), &tree_m);
+    row("linear (mock)", format!("1x{}", WIDTH * DEPTH), &lin_m);
+
+    let t = accepted_per_verify(&tree_m);
+    let l = accepted_per_verify(&lin_m);
+    assert!(
+        t > l,
+        "tree {WIDTH}x{DEPTH} accepted/verify {t:.3} must beat linear gamma={} {l:.3} \
+         at equal drafted budget",
+        WIDTH * DEPTH
+    );
+
+    // -- artifact race: real modules, same principal depth (gamma 4) --
+    match open_session() {
+        Err(e) => {
+            println!("\nartifact race skipped ({e}); run `make artifacts` to enable");
+        }
+        Ok((sess, tok)) => {
+            let n_req = if full_mode() {
+                64
+            } else if smoke_mode() {
+                8
+            } else {
+                24
+            };
+            let mut spec = RunSpec::new("s", 8, "sharegpt", n_req);
+            spec.gamma = 4; // the manifest's tree block ships verify rows at gamma 4
+
+            let ar = run_engine(&sess, &tok, &spec.with_engine(EngineKind::Ar(Mode::W4A16)))
+                .expect("w4a16 baseline");
+            let qs = run_engine(&sess, &tok, &spec.with_engine(EngineKind::QSpec)).expect("qspec");
+            let ts = run_engine(
+                &sess,
+                &tok,
+                &spec.with_engine(EngineKind::TreeSpec { width: 2, depth: 4 }),
+            )
+            .expect("treespec");
+
+            let ar_tok_s = ar.metrics.virt_tokens_per_s();
+            let mut real = Table::new(&["engine", "accept/verify", "virt tok/s", "vs w4a16"]);
+            for (label, m) in
+                [("w4a16", &ar.metrics), ("qspec g=4", &qs.metrics), ("treespec 2x4", &ts.metrics)]
+            {
+                let apv = accepted_per_verify(m);
+                real.row(&[
+                    label.to_string(),
+                    if m.drafted > 0 { format!("{apv:.3}") } else { "-".into() },
+                    format!("{:.1}", m.virt_tokens_per_s()),
+                    format!("{:.2}x", m.virt_tokens_per_s() / ar_tok_s.max(1e-9)),
+                ]);
+                out_rows.push(obj(vec![
+                    ("engine", s(label)),
+                    ("shape", s("real")),
+                    ("accepted_per_verify", num(apv)),
+                    ("virt_tok_s", num(m.virt_tokens_per_s())),
+                ]));
+            }
+            real.print("TreeSpec vs linear QSPEC — real modules, size s (virtual L20 clock)");
+
+            let tq = accepted_per_verify(&ts.metrics);
+            let lq = accepted_per_verify(&qs.metrics);
+            assert!(
+                tq > lq,
+                "treespec 2x4 accepted/verify {tq:.3} must beat qspec gamma=4 {lq:.3}: \
+                 same principal chain, rescues are pure upside"
+            );
+            assert!(ts.metrics.tree_paths > 0, "real treespec never offered a root path");
+        }
+    }
+
+    table.print("TreeSpec — tree vs linear drafting at equal drafted budget (mock toy LM)");
+    println!(
+        "\nmock race: tree {WIDTH}x{DEPTH} {t:.3} accepted/verify vs linear gamma={} {l:.3} \
+         ({:+.1}%)",
+        WIDTH * DEPTH,
+        100.0 * (t / l - 1.0)
+    );
+
+    qspec::bench::write_json("tree_spec", &arr(out_rows)).unwrap();
+}

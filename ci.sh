@@ -10,10 +10,10 @@
 #                    # observability suite, and the v1.6 stochastic
 #                    # acceptance properties) with --nocapture
 #                    # summaries, then bench smokes: pool_router +
-#                    # prefix_reuse + pool_failover + obs_overhead
-#                    # always (mock replicas/engines, no artifacts
-#                    # needed); sched_qos + hierspec_selfspec when
-#                    # artifacts/ is present
+#                    # prefix_reuse + pool_failover + obs_overhead +
+#                    # tree_spec always (mock replicas/engines, no
+#                    # artifacts needed); sched_qos + hierspec_selfspec
+#                    # when artifacts/ is present
 #
 # Integration tests skip themselves when artifacts/ is absent; run
 # `make artifacts` first for full end-to-end coverage.
@@ -34,11 +34,13 @@ if [ "${1:-}" = "test" ]; then
     # conformance battery (every EngineKind) + pool/router protocol
     # v1.3 scenarios + the v1.4 distributed-transport suite (TCP
     # workers, mid-stream death, stealing, rejoin, autoscaler
-    # properties) + acceptance losslessness (greedy exact-match and
-    # v1.6 stochastic distribution-equality) + quantized-KV shadow
-    # and paged-KV/prefix-cache properties + the v1.5 observability
-    # suite (tracing-ring properties, metrics/dump wire ops, flight
-    # recorder), with per-engine summaries
+    # properties) + acceptance losslessness (greedy exact-match,
+    # v1.6 stochastic distribution-equality and the v1.7 tree-accept
+    # marginal properties) + quantized-KV shadow and paged-KV/
+    # prefix-cache properties (incl. tree-shaped CoW branch forks)
+    # + the v1.5 observability suite (tracing-ring properties,
+    # metrics/dump wire ops, flight recorder), with per-engine
+    # summaries
     cargo test --release \
         --test engine_trait --test pool_router --test transport \
         --test acceptance_props --test kv_quant_props \
@@ -54,6 +56,11 @@ if [ "${1:-}" = "test" ]; then
     QSPEC_BENCH_SMOKE=1 cargo bench --bench prefix_reuse
     QSPEC_BENCH_SMOKE=1 cargo bench --bench pool_failover
     QSPEC_BENCH_SMOKE=1 cargo bench --bench obs_overhead
+    # the tree-spec bench races W-ary tree drafting against a linear
+    # chain at equal drafted budget over the mock toy LM and asserts
+    # tree accepted-per-verify strictly ahead; its real-module race is
+    # self-gated on artifacts/, so the smoke is session-free too
+    QSPEC_BENCH_SMOKE=1 cargo bench --bench tree_spec
 
     # --- two-process failover smoke (protocol v1.4) ----------------
     # the real binary as a standalone worker process on loopback,

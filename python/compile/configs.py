@@ -83,6 +83,11 @@ TRAIN_LR = 3e-3
 PREFILL_T = 96
 # Default draft length gamma (paper default: 3).
 GAMMA = 3
+# Branching factor of the tree-masked verify chunk (v1.7 TreeSpec). The
+# exported `verify_tree_logits` entry scores `TREE_WIDTH * gamma` nodes;
+# the rust engine falls back to per-branch sequential verify when the
+# entry is absent or compiled for a different width.
+TREE_WIDTH = 2
 
 SCHEMES = ("atom", "quarot")
 MODES = ("w16a16", "w4a16", "w4a4")
@@ -97,12 +102,14 @@ class ModuleSpec:
     mode: str        # w16a16 | w4a16 | w4a4
     entry: str       # prefill | decode | draft | verify | score
                      # | prefill_logits | decode_logits | verify_logits
+                     # | verify_tree_logits
     batch: int
     gamma: int = GAMMA  # draft length (draft/verify entries)
 
     @property
     def name(self) -> str:
-        g = f"_g{self.gamma}" if self.entry in ("draft", "verify", "verify_logits") else ""
+        gamma_entries = ("draft", "verify", "verify_logits", "verify_tree_logits")
+        g = f"_g{self.gamma}" if self.entry in gamma_entries else ""
         return f"{self.size}_{self.scheme}_{self.mode}_{self.entry}_b{self.batch}{g}"
 
     def weights_key(self) -> str:
@@ -150,6 +157,15 @@ def default_manifest() -> list:
         for g in (2, 4, 5, 6):  # gamma=3 already in the core grid
             add(size, "atom", "w4a4", "draft", b, g)
             add(size, "atom", "w4a16", "verify", b, g)
+
+    # --- TreeSpec tree-masked verify (v1.7): tiny@4 + s@8 at the
+    # default depth 4 (gamma doubles as tree depth; TREE_WIDTH fixes
+    # the branching factor the entry is compiled for) ----------------
+    for size, b in (("tiny", 4), ("s", 8)):
+        add(size, "atom", "w4a4", "draft", b, 4)
+        add(size, "atom", "w4a16", "verify", b, 4)
+        add(size, "atom", "w4a16", "verify_logits", b, 4)
+        add(size, "atom", "w4a16", "verify_tree_logits", b, 4)
 
     # --- quarot scheme (table3 fidelity, table9 acceptance): s@8 -----
     for mode in ("w4a16", "w4a4"):

@@ -26,6 +26,20 @@ temperature/seed live host-side; cheap because vocab is small):
   decode_logits  : same args as decode  -> (logits[B,V], kv')
   verify_logits  : same args as verify  -> (logits[B,G1,V], kv')
 
+Tree-masked verify (v1.7 TreeSpec; READ-ONLY — no cache writes):
+
+  verify_tree_logits : (tokens[B,N], parents[B,N], pos[B], start[B], kv, *w)
+                           -> (logits[B,N,V], kv unchanged)
+
+  N = TREE_WIDTH * gamma flattened tree nodes; parents[b,i] indexes the
+  in-chunk parent of node i (-1 = child of the pending token). Node i
+  attends the committed cache (slots start..pos, i.e. prefix + pending,
+  already upgraded by the linear verify chunk that runs first) plus its
+  own in-chunk ancestors and itself — so every row is the verifier
+  distribution conditioned on that node's root path, whatever branch it
+  lies on. Runs after `verify` each cycle and writes nothing, keeping
+  the KV-overwriting invariant with the linear chunk as sole writer.
+
 Cache convention (DESIGN.md §7): kv[L,2,B,Hkv,S,hd] holds K/V for all
 *committed* tokens; pos[b] = the write index of the pending token. A
 chunk of T tokens writes K/V at pos..pos+T-1 and its logits at offset t
@@ -38,7 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from .configs import N_OUTLIER, PREFILL_T, ModelConfig
+from .configs import N_OUTLIER, PREFILL_T, TREE_WIDTH, ModelConfig
 from .kernels import hadamard as khad
 from .kernels import w4a4 as kw4a4
 from .kernels import w4a16 as kw4a16
@@ -190,6 +204,89 @@ def forward_chunk(cfg, params, tokens, pos, start, kv, mode, scheme,
 
     x = rmsnorm(x, params["out_norm"])
     logits = x @ params["lm_head"]                                    # [B,T,V] fp head
+    return logits, kv
+
+
+# --------------------------------------------------------------------------
+# tree-masked (read-only) forward: the v1.7 TreeSpec verify chunk
+# --------------------------------------------------------------------------
+
+def ancestor_matrix(parents, n):
+    """Boolean closure [B,N,N] of the in-chunk parent pointers: out[b,i,j]
+    iff node j is node i or one of its ancestors (-1 terminates a path).
+    N is small (TREE_WIDTH * gamma), so an unrolled N-step pointer chase
+    is cheaper than anything clever."""
+    b = parents.shape[0]
+    anc = jnp.broadcast_to(jnp.eye(n, dtype=bool)[None], (b, n, n))
+    ptr = parents
+    for _ in range(n):
+        valid = ptr >= 0
+        idx = jnp.clip(ptr, 0, n - 1)
+        hot = jax.nn.one_hot(idx, n, dtype=jnp.bool_) & valid[..., None]
+        anc = anc | hot
+        ptr = jnp.where(valid, jnp.take_along_axis(parents, idx, axis=1), -1)
+    return anc
+
+
+def forward_tree(cfg, params, tokens, parents, pos, start, kv, mode, scheme,
+                 interpret=True):
+    """Score N flattened tree nodes per slot in one chunk; returns
+    (logits [B,N,V], kv) with the cache *untouched*.
+
+    Attention for node i = the committed cache part (slots
+    start <= s <= pos: the prefix plus the pending token the linear
+    verify chunk just wrote) + the in-chunk ancestor part (node i's own
+    root path, K/V recomputed inside the chunk, so sibling branches
+    never see each other or the cache's principal-path entries)."""
+    b, n = tokens.shape
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s_max = cfg.max_seq
+    grp = h // hkv
+
+    anc = ancestor_matrix(parents, n)                                 # [B,N,N]
+    level = jnp.sum(anc, axis=-1).astype(jnp.int32) - 1               # [B,N]
+    ap = pos[:, None] + 1 + level                                     # [B,N] abs pos
+    emb_idx = jnp.clip(ap - start[:, None], 0, s_max - 1)
+    x = params["tok_emb"][tokens] + params["pos_emb"][emb_idx]        # [B,N,d]
+
+    s_idx = jnp.arange(s_max, dtype=jnp.int32)
+    cache_mask = (s_idx[None, None, :] >= start[:, None, None]) & (
+        s_idx[None, None, :] <= pos[:, None, None]
+    )                                                                 # [B,1,S]
+    bias = jnp.concatenate(
+        [
+            jnp.where(cache_mask, 0.0, NEG_INF)
+            + jnp.zeros((b, n, s_max), jnp.float32),                  # [B,N,S]
+            jnp.where(anc, 0.0, NEG_INF),                             # [B,N,N]
+        ],
+        axis=-1,
+    )[:, None, :, :]                                                  # [B,1,N,S+N]
+
+    for i in range(cfg.n_layers):
+        lk = f"l{i:02d}"
+        xa = rmsnorm(x, params[f"{lk}.attn_norm"])
+        q = linear(params, f"{lk}.wq", xa, mode, scheme, interpret).reshape(b, n, h, hd)
+        k = linear(params, f"{lk}.wk", xa, mode, scheme, interpret).reshape(b, n, hkv, hd)
+        v = linear(params, f"{lk}.wv", xa, mode, scheme, interpret).reshape(b, n, hkv, hd)
+
+        # read-only: committed cache K/V concatenated with in-chunk K/V
+        kfull = jnp.concatenate([kv[i, 0], k.transpose(0, 2, 1, 3)], axis=2)
+        vfull = jnp.concatenate([kv[i, 1], v.transpose(0, 2, 1, 3)], axis=2)
+
+        qh = q.reshape(b, n, hkv, grp, hd)
+        scores = jnp.einsum("btkgh,bksh->bkgts", qh, kfull) / np.sqrt(hd)
+        scores = scores.reshape(b, hkv * grp, n, s_max + n) + bias
+        probs = jax.nn.softmax(scores, axis=-1)
+        probs = probs.reshape(b, hkv, grp, n, s_max + n)
+        ctx = jnp.einsum("bkgts,bksh->btkgh", probs, vfull).reshape(b, n, h * hd)
+        x = x + linear(params, f"{lk}.wo", ctx, mode, scheme, interpret)
+
+        xm = rmsnorm(x, params[f"{lk}.mlp_norm"])
+        hm = _silu(linear(params, f"{lk}.gate", xm, mode, scheme, interpret)) * \
+            linear(params, f"{lk}.up", xm, mode, scheme, interpret)
+        x = x + linear(params, f"{lk}.down", hm, mode, scheme, interpret)
+
+    logits = rmsnorm(x, params["out_norm"]) @ params["lm_head"]       # [B,N,V]
     return logits, kv
 
 
@@ -359,6 +456,16 @@ def verify_logits_entry(cfg, mode, scheme, params, tokens, pos, start, mask, kv)
     return logits, kv
 
 
+def verify_tree_logits_entry(cfg, mode, scheme, params, tokens, parents, pos,
+                             start, kv):
+    """Tree-masked READ-ONLY verify chunk (v1.7): per-node verifier
+    logits [B,N,V], each row conditioned on the node's own root path
+    (see `forward_tree`). The cache passes through unchanged — the
+    linear `verify` chunk that runs first stays the sole KV writer."""
+    return forward_tree(cfg, params, tokens, parents, pos, start, kv, mode,
+                        scheme)
+
+
 def score_entry(cfg, mode, scheme, params, rows):
     """Perplexity scoring: rows [B,T+1] -> (nll_sum[B], token_count[B])."""
     inp, tgt = rows[:, :-1], rows[:, 1:]
@@ -399,6 +506,10 @@ def make_entry_fn(cfg, spec):
     if e == "verify_logits":
         return lambda tokens, pos, start, mask, kv, params: verify_logits_entry(
             cfg, mode, scheme, params, tokens, pos, start, mask, kv)
+    if e == "verify_tree_logits":
+        return lambda tokens, parents, pos, start, kv, params: \
+            verify_tree_logits_entry(
+                cfg, mode, scheme, params, tokens, parents, pos, start, kv)
     if e == "score":
         return lambda rows, params: score_entry(cfg, mode, scheme, params, rows)
     raise ValueError(e)
@@ -421,6 +532,10 @@ def entry_arg_specs(cfg, spec, score_t=SCORE_T):
         return [vec, vec, vec, kv]
     if spec.entry in ("verify", "verify_logits"):
         return [jax.ShapeDtypeStruct((b, spec.gamma + 1), i32), vec, vec, vec, kv]
+    if spec.entry == "verify_tree_logits":
+        n = TREE_WIDTH * spec.gamma
+        tree = jax.ShapeDtypeStruct((b, n), i32)
+        return [tree, tree, vec, vec, kv]
     if spec.entry == "score":
         return [jax.ShapeDtypeStruct((b, score_t + 1), i32)]
     raise ValueError(spec.entry)

@@ -18,6 +18,11 @@ pub const MAX_REPLICAS: usize = 16;
 pub const HIERSPEC_DEFAULT_GAMMA: usize = 3;
 pub const HIERSPEC_DEFAULT_KV_BITS: u8 = 4;
 
+/// Default branching factor / draft depth of the TreeSpec engine (CLI
+/// `--tree-width` / `--tree-depth` override them).
+pub const TREESPEC_DEFAULT_WIDTH: usize = 2;
+pub const TREESPEC_DEFAULT_DEPTH: usize = 4;
+
 /// Which engine drives generation.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum EngineKind {
@@ -31,13 +36,19 @@ pub enum EngineKind {
     /// drafts over a `kv_bits` quantized shadow KV cache and verifies
     /// over full precision (requantizing the shadow).
     HierSpec { gamma: usize, kv_bits: u8 },
+    /// Tree speculation (v1.7): the W4A4 drafter expands a token tree
+    /// (`width` candidates per level, `depth` levels), W4A16 verifies
+    /// every branch in one tree-masked chunk, and tree-aware acceptance
+    /// commits the longest accepted root-path.
+    TreeSpec { width: usize, depth: usize },
 }
 
 impl EngineKind {
     /// Parse a CLI engine name: `qspec`, an AR mode (`w16a16`/`w4a16`/
-    /// `w4a4`), `eagle` (chain), `eagle-tree` (tree_k = 2) or
-    /// `hierspec` (defaults gamma = 3, kv_bits = 4; `--gamma` /
-    /// `--kv-bits` adjust them).
+    /// `w4a4`), `eagle` (chain), `eagle-tree` (tree_k = 2), `hierspec`
+    /// (defaults gamma = 3, kv_bits = 4; `--gamma` / `--kv-bits`
+    /// adjust them) or `treespec` (defaults width = 2, depth = 4;
+    /// `--tree-width` / `--tree-depth` adjust them).
     pub fn parse(s: &str) -> Option<EngineKind> {
         match s {
             "qspec" => Some(EngineKind::QSpec),
@@ -46,6 +57,10 @@ impl EngineKind {
             "hierspec" => Some(EngineKind::HierSpec {
                 gamma: HIERSPEC_DEFAULT_GAMMA,
                 kv_bits: HIERSPEC_DEFAULT_KV_BITS,
+            }),
+            "treespec" => Some(EngineKind::TreeSpec {
+                width: TREESPEC_DEFAULT_WIDTH,
+                depth: TREESPEC_DEFAULT_DEPTH,
             }),
             m => Mode::parse(m).map(EngineKind::Ar),
         }
@@ -58,6 +73,7 @@ impl EngineKind {
             EngineKind::Ar(m) => m.as_str(),
             EngineKind::Eagle { .. } => "eagle",
             EngineKind::HierSpec { .. } => "hierspec",
+            EngineKind::TreeSpec { .. } => "treespec",
         }
     }
 }
@@ -492,6 +508,19 @@ impl ServeConfig {
                 )));
             }
         }
+        if let EngineKind::TreeSpec { width, depth } = kind {
+            if !(1..=4).contains(width) {
+                return Err(QspecError::Config(format!(
+                    "tree width {width} outside 1..=4 (width 1 degenerates to \
+                     the linear chain; wider trees blow up the verify chunk)"
+                )));
+            }
+            if !(1..=8).contains(depth) {
+                return Err(QspecError::Config(format!(
+                    "tree depth {depth} outside 1..=8"
+                )));
+            }
+        }
         Ok(())
     }
 
@@ -614,9 +643,30 @@ mod tests {
             EngineKind::parse("hierspec"),
             Some(EngineKind::HierSpec { gamma: 3, kv_bits: 4 })
         );
+        assert_eq!(
+            EngineKind::parse("treespec"),
+            Some(EngineKind::TreeSpec {
+                width: TREESPEC_DEFAULT_WIDTH,
+                depth: TREESPEC_DEFAULT_DEPTH
+            })
+        );
         assert_eq!(EngineKind::parse("nope"), None);
         assert_eq!(EngineKind::Eagle { tree_k: 2 }.label(), "eagle");
         assert_eq!(EngineKind::HierSpec { gamma: 3, kv_bits: 4 }.label(), "hierspec");
+        assert_eq!(EngineKind::TreeSpec { width: 2, depth: 4 }.label(), "treespec");
+    }
+
+    #[test]
+    fn treespec_width_depth_validated() {
+        let mut c = ServeConfig::default();
+        c.engine = EngineKind::TreeSpec { width: 2, depth: 4 };
+        assert!(c.validate().is_ok());
+        c.engine = EngineKind::TreeSpec { width: 1, depth: 1 };
+        assert!(c.validate().is_ok(), "width 1 = linear chain is legal");
+        for (w, d) in [(0usize, 4usize), (5, 4), (2, 0), (2, 9)] {
+            c.engine = EngineKind::TreeSpec { width: w, depth: d };
+            assert!(c.validate().is_err(), "width {w} depth {d} must be rejected");
+        }
     }
 
     #[test]

@@ -20,6 +20,7 @@
 //! from the request's seeded [`Sampler`] so replays are exact.
 
 use crate::sampler::Sampler;
+use crate::tree::TokenTree;
 
 /// Result of applying an acceptance policy to one slot's cycle.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -150,6 +151,217 @@ pub fn stochastic_accept(
     let bonus = &p[drafts.len() * vocab..(drafts.len() + 1) * vocab];
     committed.push(sampler.sample_probs(bonus) as i32);
     AcceptDecision { accepted, committed }
+}
+
+/// Result of tree-aware acceptance over one slot's drafted
+/// [`TokenTree`] (TreeSpec, protocol v1.7).
+///
+/// Unlike [`AcceptDecision`], `committed` is *not* always
+/// `accepted + 1`: when the accepted root-path ends on a non-principal
+/// sibling and no tree-masked verifier row is available for it, no
+/// correction/bonus can be produced and `committed == accepted` — the
+/// sibling becomes the slot's pending token and the next cycle
+/// continues from it (the KV-overwriting design makes that lossless).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TreeAcceptDecision {
+    /// number of accepted draft tree nodes (the committed root-path
+    /// depth; feeds the `accepted_depth` histogram)
+    pub accepted: usize,
+    /// tokens to commit: the accepted root-path, plus the
+    /// correction/bonus token whenever one could be produced
+    pub committed: Vec<i32>,
+    /// whether the path ended on a non-principal sibling (a "rescue":
+    /// linear acceptance would have rejected at that level)
+    pub rescued: bool,
+}
+
+/// Greedy tree acceptance: commit the deepest root-path whose every
+/// node matches the verifier argmax, plus one correction/bonus token.
+///
+/// * `tree` — the drafted token tree (principal chain + siblings; all
+///   level-`j` nodes share the principal prefix, so one verifier row
+///   per level judges them all)
+/// * `verify_argmax` — `n_levels + 1` argmax tokens along the
+///   principal chain (row `j` = the verifier's prediction after the
+///   prefix + principal drafts `[..j]`)
+/// * `tree_argmax` — per-node argmax from the tree-masked verify
+///   chunk (`tree.len()` entries) when the artifact set exports
+///   `verify_tree_logits`; enables a bonus token after a sibling
+///   rescue. `None` falls back to ending the path at the sibling.
+///
+/// The committed stream stays byte-identical to an AR verifier
+/// rollout: every committed token is the verifier argmax given the
+/// already-committed prefix (a matching sibling *is* the correction
+/// token linear acceptance would emit; a sibling bonus comes from the
+/// row conditioned on that sibling).
+pub fn greedy_tree_accept(
+    tree: &TokenTree,
+    verify_argmax: &[i32],
+    tree_argmax: Option<&[i32]>,
+) -> TreeAcceptDecision {
+    debug_assert!(tree.n_levels() >= 1);
+    debug_assert_eq!(verify_argmax.len(), tree.n_levels() + 1);
+    if let Some(t) = tree_argmax {
+        debug_assert_eq!(t.len(), tree.len());
+    }
+    let mut committed = Vec::with_capacity(tree.n_levels() + 1);
+    for j in 0..tree.n_levels() {
+        let v = verify_argmax[j];
+        let lvl = tree.level(j);
+        if lvl[0].token == v {
+            // principal match: descend the chain
+            committed.push(v);
+            continue;
+        }
+        if let Some(k) = lvl.iter().position(|n| n.token == v) {
+            // sibling rescue: the matching sibling IS the correction
+            // token, and it counts as an accepted draft node
+            committed.push(v);
+            let accepted = committed.len();
+            if let Some(ta) = tree_argmax {
+                // bonus from the row conditioned on the sibling
+                committed.push(ta[tree.level_range(j).start + k]);
+            }
+            return TreeAcceptDecision { accepted, committed, rescued: true };
+        }
+        // no candidate matches: plain correction, drop the tail
+        let accepted = committed.len();
+        committed.push(v);
+        return TreeAcceptDecision { accepted, committed, rescued: false };
+    }
+    // full principal accept: bonus from the last linear row
+    let accepted = committed.len();
+    committed.push(verify_argmax[tree.n_levels()]);
+    TreeAcceptDecision { accepted, committed, rescued: false }
+}
+
+/// Stochastic tree acceptance — SpecInfer-style recursive multi-branch
+/// rejection, distribution-lossless for any tree whose level-`j`
+/// candidates are i.i.d. draws from the draft distribution `q_j`.
+///
+/// * `tree` — the drafted token tree; level-`j` candidates are tried
+///   in draw order (principal first)
+/// * `q` — draft distributions along the principal chain, row-major
+///   `[n_levels, vocab]`
+/// * `p` — verifier distributions along the principal chain,
+///   `[n_levels + 1, vocab]` (row `j` conditions on the principal
+///   prefix `[..j]`, which every level-`j` candidate shares)
+/// * `tree_p` — per-node verifier rows `[tree.len(), vocab]` from the
+///   tree-masked chunk, enabling a bonus draw after a sibling rescue;
+///   `None` ends the path at the sibling (still lossless — each
+///   committed token's conditional marginal is untouched)
+/// * `sampler` — the request's seeded sampler; one accept draw per
+///   tried candidate plus at most one resample/bonus draw
+///
+/// Per level: the residual starts at the verifier row `p_j`; candidate
+/// `x` is accepted with probability `min(1, residual[x] / q_j[x])`, and
+/// on rejection the *original* `q_j` is subtracted from the residual
+/// (clamped at 0, renormalized) before the next sibling is tried —
+/// rejected branches' mass is removed exactly once, which is what makes
+/// the committed marginal equal the verifier distribution for any
+/// number of candidate draws. When every candidate is rejected the
+/// level resolves by sampling the final residual (the multi-branch
+/// generalization of [`stochastic_accept`]'s rejection resample). A
+/// rejected candidate's token always has residual 0 afterwards, so
+/// duplicate draws auto-reject and cost only an accept draw.
+///
+/// At `width == 1` this consumes draws and commits tokens *identically*
+/// to [`stochastic_accept`] over the principal chain.
+pub fn stochastic_tree_accept(
+    tree: &TokenTree,
+    q: &[f32],
+    p: &[f32],
+    tree_p: Option<&[f32]>,
+    vocab: usize,
+    sampler: &mut Sampler,
+) -> TreeAcceptDecision {
+    debug_assert!(tree.n_levels() >= 1);
+    debug_assert_eq!(q.len(), tree.n_levels() * vocab);
+    debug_assert_eq!(p.len(), (tree.n_levels() + 1) * vocab);
+    if let Some(t) = tree_p {
+        debug_assert_eq!(t.len(), tree.len() * vocab);
+    }
+    let mut committed = Vec::with_capacity(tree.n_levels() + 1);
+    for j in 0..tree.n_levels() {
+        let qr = &q[j * vocab..(j + 1) * vocab];
+        let pr = &p[j * vocab..(j + 1) * vocab];
+        let lvl = tree.level(j);
+        let mut residual: Vec<f32> = pr.to_vec();
+        let mut winner: Option<usize> = None;
+        for (k, node) in lvl.iter().enumerate() {
+            let t = (node.token as usize).min(vocab.saturating_sub(1));
+            let (qd, rd) = (qr[t], residual[t]);
+            let ratio = if qd > 0.0 {
+                (rd as f64 / qd as f64).min(1.0)
+            } else if rd > 0.0 {
+                1.0
+            } else {
+                0.0
+            };
+            if sampler.accept_draw() < ratio {
+                winner = Some(k);
+                break;
+            }
+            // rejection: subtract this branch's draft distribution from
+            // the residual and renormalize before trying the next
+            // sibling (the SpecInfer recursion)
+            let mut z = 0.0f32;
+            for (r, &qv) in residual.iter_mut().zip(qr) {
+                *r = (*r - qv).max(0.0);
+                z += *r;
+            }
+            if z > 0.0 && z.is_finite() {
+                for r in residual.iter_mut() {
+                    *r /= z;
+                }
+            } else {
+                // measure-zero residual (p ≈ q): remaining candidates
+                // auto-reject off the zero row; the final resample
+                // falls back to p_j below, the correct limit
+                for r in residual.iter_mut() {
+                    *r = 0.0;
+                }
+            }
+        }
+        match winner {
+            Some(k) => {
+                let node = &lvl[k];
+                committed.push(node.token);
+                if node.principal {
+                    continue; // descend the principal chain
+                }
+                // sibling rescue: the path ends here (siblings are
+                // leaves); a bonus draw needs a row conditioned on
+                // the sibling, which only the tree chunk provides
+                let accepted = committed.len();
+                if let Some(tp) = tree_p {
+                    let i = tree.level_range(j).start + k;
+                    let row = &tp[i * vocab..(i + 1) * vocab];
+                    committed.push(sampler.sample_probs(row) as i32);
+                }
+                return TreeAcceptDecision { accepted, committed, rescued: true };
+            }
+            None => {
+                // every candidate rejected: resolve the level from the
+                // final residual (already normalized), or from p_j in
+                // the measure-zero limit
+                let z: f32 = residual.iter().sum();
+                let accepted = committed.len();
+                let tok = if z > 0.0 && z.is_finite() {
+                    sampler.sample_probs(&residual)
+                } else {
+                    sampler.sample_probs(pr)
+                };
+                committed.push(tok as i32);
+                return TreeAcceptDecision { accepted, committed, rescued: false };
+            }
+        }
+    }
+    // full principal accept: bonus sampled from the last linear row
+    let accepted = committed.len();
+    let bonus = &p[tree.n_levels() * vocab..(tree.n_levels() + 1) * vocab];
+    committed.push(sampler.sample_probs(bonus) as i32);
+    TreeAcceptDecision { accepted, committed, rescued: false }
 }
 
 #[cfg(test)]
@@ -294,5 +506,182 @@ mod tests {
         let d = threshold_accept(&[5, 6], &[5, 9, 8], &[0.9, 0.2, 0.1], 0.5);
         assert_eq!(d.accepted, 1);
         assert_eq!(d.committed, vec![5, 9]);
+    }
+
+    /// width-2 tree: principal chain + one sibling per level.
+    fn two_wide_tree(principal: &[i32], siblings: &[i32]) -> TokenTree {
+        assert_eq!(principal.len(), siblings.len());
+        let mut t = TokenTree::new(2, principal.len());
+        for (&p, &s) in principal.iter().zip(siblings) {
+            t.push_level(&[(p, 0.5), (s, 0.25)]);
+        }
+        t
+    }
+
+    #[test]
+    fn greedy_tree_full_principal_accept_appends_bonus() {
+        let t = two_wide_tree(&[5, 6, 7], &[50, 60, 70]);
+        let d = greedy_tree_accept(&t, &[5, 6, 7, 8], None);
+        assert_eq!(d.accepted, 3);
+        assert_eq!(d.committed, vec![5, 6, 7, 8]);
+        assert!(!d.rescued);
+    }
+
+    #[test]
+    fn greedy_tree_sibling_rescue_ends_path() {
+        // level 1: principal 6 mismatches but sibling 60 is the argmax —
+        // the sibling is committed as an accepted draft node (linear
+        // acceptance would emit the same token as a correction and
+        // count it rejected)
+        let t = two_wide_tree(&[5, 6, 7], &[50, 60, 70]);
+        let d = greedy_tree_accept(&t, &[5, 60, 7, 8], None);
+        assert_eq!(d.accepted, 2);
+        assert_eq!(d.committed, vec![5, 60], "no tree rows: no bonus after a sibling");
+        assert!(d.rescued);
+        // the committed stream matches linear greedy_accept byte-for-byte
+        let lin = greedy_accept(&[5, 6, 7], &[5, 60, 7, 8]);
+        assert_eq!(lin.committed, d.committed);
+    }
+
+    #[test]
+    fn greedy_tree_sibling_bonus_comes_from_tree_row() {
+        let t = two_wide_tree(&[5, 6], &[50, 60]);
+        // per-node argmax rows: nodes are [5, 50, 6, 60]
+        let tree_argmax = vec![100, 101, 102, 103];
+        let d = greedy_tree_accept(&t, &[5, 60, 7], Some(&tree_argmax));
+        assert_eq!(d.accepted, 2);
+        // bonus = the argmax conditioned on sibling 60 (node index 3)
+        assert_eq!(d.committed, vec![5, 60, 103]);
+        assert!(d.rescued);
+    }
+
+    #[test]
+    fn greedy_tree_total_mismatch_commits_correction() {
+        let t = two_wide_tree(&[5, 6], &[50, 60]);
+        let d = greedy_tree_accept(&t, &[9, 6, 7], None);
+        assert_eq!(d.accepted, 0);
+        assert_eq!(d.committed, vec![9]);
+        assert!(!d.rescued);
+    }
+
+    #[test]
+    fn stochastic_tree_width_one_matches_linear_rule_exactly() {
+        // a width-1 tree is the linear chain: the tree rule must
+        // consume the same draws and commit the same tokens as
+        // stochastic_accept, for any seed
+        let vocab = 5;
+        let drafts = [0i32, 3, 1];
+        let q: Vec<f32> = (0..3 * vocab).map(|i| ((i % 5) as f32 + 1.0) / 15.0).collect();
+        let p: Vec<f32> = (0..4 * vocab).map(|i| ((i % 5) as f32 + 1.0) / 15.0).collect();
+        for seed in 0..200 {
+            let mut t = TokenTree::new(1, 3);
+            for (j, &d) in drafts.iter().enumerate() {
+                t.push_level(&[(d, q[j * vocab + d as usize])]);
+            }
+            let lin = stochastic_accept(&drafts, &q, &p, vocab, &mut warm_sampler(seed));
+            let tr =
+                stochastic_tree_accept(&t, &q, &p, None, vocab, &mut warm_sampler(seed));
+            assert_eq!(tr.accepted, lin.accepted, "seed {seed}");
+            assert_eq!(tr.committed, lin.committed, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn stochastic_tree_sibling_rescues_rejected_principal() {
+        // principal token 0 has p = 0 (always rejected); after
+        // subtracting q the residual is one-hot on the sibling token 1,
+        // whose accept ratio is then 1 — deterministic rescue
+        let vocab = 4;
+        let q = vec![0.5f32, 0.5, 0.0, 0.0];
+        let p = vec![0.0f32, 1.0, 0.0, 0.0, /* bonus row */ 0.0, 0.0, 1.0, 0.0];
+        for seed in 0..50 {
+            let mut t = TokenTree::new(2, 1);
+            t.push_level(&[(0, 0.5), (1, 0.5)]);
+            let d = stochastic_tree_accept(&t, &q, &p, None, vocab, &mut warm_sampler(seed));
+            assert_eq!(d.accepted, 1);
+            assert_eq!(d.committed, vec![1], "no tree rows: path ends at the sibling");
+            assert!(d.rescued);
+            // with tree rows the bonus is drawn from the sibling's row
+            let mut t2 = TokenTree::new(2, 1);
+            t2.push_level(&[(0, 0.5), (1, 0.5)]);
+            // node rows: [0] = principal's, [1] = sibling's (one-hot 3)
+            let tree_p = vec![0.25f32, 0.25, 0.25, 0.25, 0.0, 0.0, 0.0, 1.0];
+            let d2 = stochastic_tree_accept(
+                &t2,
+                &q,
+                &p,
+                Some(&tree_p),
+                vocab,
+                &mut warm_sampler(seed),
+            );
+            assert_eq!(d2.committed, vec![1, 3], "bonus from the sibling-conditioned row");
+            assert_eq!(d2.accepted, 1);
+        }
+    }
+
+    #[test]
+    fn stochastic_tree_total_rejection_samples_residual() {
+        // both candidates carry zero verifier mass: two rejections,
+        // then a resample from the residual — which never yields a
+        // rejected token
+        let vocab = 4;
+        let q = vec![0.5f32, 0.5, 0.0, 0.0];
+        let p = vec![0.0f32, 0.0, 0.7, 0.3, /* bonus row */ 0.25, 0.25, 0.25, 0.25];
+        for seed in 0..100 {
+            let mut t = TokenTree::new(2, 1);
+            t.push_level(&[(0, 0.5), (1, 0.5)]);
+            let d = stochastic_tree_accept(&t, &q, &p, None, vocab, &mut warm_sampler(seed));
+            assert_eq!(d.accepted, 0);
+            assert_eq!(d.committed.len(), 1);
+            assert!(d.committed[0] == 2 || d.committed[0] == 3, "{:?}", d.committed);
+            assert!(!d.rescued);
+        }
+    }
+
+    #[test]
+    fn stochastic_tree_duplicate_candidate_auto_rejects() {
+        // rejection zeroes the candidate's residual mass, so an i.i.d.
+        // duplicate draw can never be accepted afterwards
+        let vocab = 3;
+        let q = vec![1.0f32, 0.0, 0.0];
+        let p = vec![0.0f32, 0.6, 0.4, /* bonus row */ 1.0, 0.0, 0.0];
+        for seed in 0..100 {
+            let mut t = TokenTree::new(2, 1);
+            t.push_level(&[(0, 1.0), (0, 1.0)]);
+            let d = stochastic_tree_accept(&t, &q, &p, None, vocab, &mut warm_sampler(seed));
+            assert_eq!(d.accepted, 0);
+            assert_ne!(d.committed[0], 0, "zero-p token committed");
+        }
+    }
+
+    #[test]
+    fn stochastic_tree_single_level_marginal_matches_verifier() {
+        // the committed-token marginal over (draft candidates ~ q) x
+        // (accept draws) must equal p exactly — the SpecInfer recursion
+        // property, checked empirically at width 3
+        let vocab = 4;
+        let q = vec![0.4f32, 0.3, 0.2, 0.1];
+        let p = vec![0.1f32, 0.2, 0.3, 0.4, /* bonus row */ 0.25, 0.25, 0.25, 0.25];
+        let mut counts = [0usize; 4];
+        let n = 20_000;
+        for seed in 0..n {
+            let mut s = warm_sampler(seed as u64);
+            // draft: width i.i.d. candidate draws from q (first is the
+            // "principal", matching the engine's draft order)
+            let mut t = TokenTree::new(3, 1);
+            let cands: Vec<(i32, f32)> = (0..3)
+                .map(|_| {
+                    let c = s.sample_probs(&q);
+                    (c as i32, q[c])
+                })
+                .collect();
+            t.push_level(&cands);
+            let d = stochastic_tree_accept(&t, &q, &p, None, vocab, &mut s);
+            counts[d.committed[0] as usize] += 1;
+        }
+        for (i, &pi) in p[..vocab].iter().enumerate() {
+            let f = counts[i] as f32 / n as f32;
+            assert!((f - pi).abs() < 0.02, "bucket {i}: {f} vs {pi}");
+        }
     }
 }

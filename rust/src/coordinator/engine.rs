@@ -56,6 +56,7 @@ use super::request::{
     NUM_PRIORITY_CLASSES,
 };
 use super::spec_decode::{QSpecConfig, QSpecEngine};
+use super::treespec::{TreeSpecConfig, TreeSpecEngine};
 use super::SimilaritySample;
 
 /// Stuck-guard ceiling for [`Engine::run_to_completion`]: no legitimate
@@ -856,6 +857,13 @@ pub fn build_engine<'s>(
             h.kv_bits = *kv_bits;
             h.collect_similarity = cfg.collect_similarity;
             Box::new(HierSpecEngine::new(sess, h)?)
+        }
+        EngineKind::TreeSpec { width, depth } => {
+            // tree depth plays gamma's role (the principal chain
+            // length); `cfg.gamma` steers linear QSPEC only
+            let mut t = TreeSpecConfig::new(&cfg.size, cfg.batch, *width, *depth);
+            t.scheme = cfg.scheme.clone();
+            Box::new(TreeSpecEngine::new(sess, t)?)
         }
     };
     engine.core_mut().set_policy(build_policy(cfg.sched));

@@ -46,9 +46,13 @@ use crate::error::{QspecError, Result};
 use crate::kvcache::SlotManager;
 use crate::model::{Mode, Tokenizer};
 
-use super::acceptance::stochastic_accept;
+use crate::sampler::{argmax, softmax};
+use crate::tree::TokenTree;
+
+use super::acceptance::{greedy_tree_accept, stochastic_accept, stochastic_tree_accept};
 use super::engine::{BatchCore, Engine};
 use super::request::StepEvent;
+use super::treespec::top_candidates;
 
 /// Default draft depth of the simulated speculative mode (retunable
 /// per engine instance through [`Engine::reconfigure`]).
@@ -152,6 +156,10 @@ pub struct EchoEngine {
     failure: Option<FailureMode>,
     /// working scheduling cycles completed (idle waits excluded).
     cycles: u64,
+    /// `(width, depth)` when simulating the v1.7 TreeSpec cycle: a real
+    /// [`TokenTree`] drafted from the toy draft LM, verified against the
+    /// toy verifier, committed through the real tree accept rules.
+    tree: Option<(usize, usize)>,
 }
 
 impl EchoEngine {
@@ -169,6 +177,7 @@ impl EchoEngine {
             kv_bits: None,
             failure: None,
             cycles: 0,
+            tree: None,
         }
     }
 
@@ -184,6 +193,20 @@ impl EchoEngine {
     /// the failover bench kill mock replicas through this.
     pub fn with_failure(mut self, mode: FailureMode) -> Self {
         self.failure = Some(mode);
+        self
+    }
+
+    /// Simulate the TreeSpec engine session-free: every cycle drafts a
+    /// `width`-ary token tree of the given depth from the toy draft LM
+    /// ([`mock_draft_logits`]; `with_acceptance` tunes its divergence),
+    /// verifies against the toy verifier rows and commits through the
+    /// real [`greedy_tree_accept`] / [`stochastic_tree_accept`] rules —
+    /// sibling KV branches fork CoW around every accept step, exactly
+    /// like the real engine. Greedy output equals a pure argmax rollout
+    /// of [`mock_logits`] (tree losslessness, testable byte-for-byte);
+    /// stochastic output stays distributed as a `p` rollout.
+    pub fn with_tree(mut self, width: usize, depth: usize) -> Self {
+        self.tree = Some((width.max(1), depth.max(1)));
         self
     }
 
@@ -248,6 +271,89 @@ impl EchoEngine {
         self.core.metrics.accepted += dec.accepted as u64;
         self.core.metrics.record_accept(dec.accepted as u64);
         self.core.commit(i, &dec.committed, gamma, out);
+    }
+
+    /// One TreeSpec scheduling cycle for slot `i` (see [`with_tree`]):
+    /// the full v1.7 engine cycle — multi-branch draft, per-node
+    /// verifier rows (the toy LM is first-order, so the row after any
+    /// node is just `mock_logits(node token)`, which doubles as the
+    /// tree-masked chunk), tree acceptance, CoW branch forks — without
+    /// a session.
+    ///
+    /// [`with_tree`]: EchoEngine::with_tree
+    fn step_tree_slot(&mut self, i: usize, pending: i32, out: &mut Vec<StepEvent>) {
+        let (width, depth) = self.tree.expect("tree mode");
+        let acceptance = self.acceptance;
+        let stochastic = self.core.slot_stochastic(i);
+
+        // ---- draft: width candidates per level off the principal chain
+        let mut tree = TokenTree::new(width, depth);
+        let mut q = Vec::with_capacity(depth * MOCK_VOCAB);
+        let mut cur = pending;
+        for _ in 0..depth {
+            let row = mock_draft_logits(cur, acceptance);
+            let cands = if stochastic {
+                let s = self.core.sampler_mut(i).expect("stochastic slot");
+                let qp = s.probs(&row);
+                let cands: Vec<(i32, f32)> = (0..width)
+                    .map(|_| {
+                        let d = s.sample_probs(&qp);
+                        (d as i32, qp[d])
+                    })
+                    .collect();
+                q.extend_from_slice(&qp);
+                cands
+            } else {
+                top_candidates(&row, &softmax(&row), width)
+            };
+            cur = cands[0].0;
+            tree.push_level(&cands);
+        }
+
+        // ---- verify + accept
+        let mut chain = vec![pending];
+        chain.extend(tree.principal_tokens());
+        let dec = if stochastic {
+            let s = self.core.sampler_mut(i).expect("stochastic slot");
+            let mut p = Vec::with_capacity((depth + 1) * MOCK_VOCAB);
+            for &c in &chain {
+                p.extend(s.probs(&mock_logits(c)));
+            }
+            let mut tp = Vec::with_capacity(tree.len() * MOCK_VOCAB);
+            for node in tree.nodes() {
+                tp.extend(s.probs(&mock_logits(node.token)));
+            }
+            stochastic_tree_accept(&tree, &q, &p, Some(&tp), MOCK_VOCAB, s)
+        } else {
+            let vt: Vec<i32> = chain.iter().map(|&c| argmax(&mock_logits(c)) as i32).collect();
+            let ta: Vec<i32> =
+                tree.nodes().iter().map(|n| argmax(&mock_logits(n.token)) as i32).collect();
+            greedy_tree_accept(&tree, &vt, Some(&ta))
+        };
+
+        // sibling branches fork the slot's block table CoW for the
+        // accept step, exactly like the real engine
+        let principal = tree.principal_tokens();
+        let mut branches = Vec::new();
+        for node in tree.nodes().iter().filter(|n| !n.principal) {
+            let br = self.core.slots.fork_branch(i);
+            for &t in &principal[..node.level] {
+                self.core.slots.branch_append(br, t);
+            }
+            self.core.slots.branch_append(br, node.token);
+            branches.push(br);
+        }
+        self.core.metrics.drafted += depth as u64;
+        self.core.metrics.tree_nodes_drafted += tree.len() as u64;
+        self.core.metrics.tree_paths += tree.n_paths() as u64;
+        self.core.metrics.accepted += dec.accepted as u64;
+        self.core.metrics.record_accept(dec.accepted as u64);
+        self.core.metrics.accepted_depth.record(dec.accepted as u64);
+        for br in branches {
+            self.core.slots.release_branch(br);
+        }
+        debug_assert_eq!(self.core.slots.live_branches(), 0);
+        self.core.commit(i, &dec.committed, depth, out);
     }
 }
 
@@ -322,6 +428,10 @@ impl Engine for EchoEngine {
             self.core.cost.charge(Mode::W4A16, Phase::Decode, sb.active.len(), k, sb.mean_ctx);
             let drafting = self.acceptance.is_some();
             for &i in &sb.active {
+                if self.tree.is_some() {
+                    self.step_tree_slot(i, sb.tok[i], &mut out);
+                    continue;
+                }
                 if self.core.slot_stochastic(i) {
                     self.step_stochastic_slot(i, sb.tok[i], gamma, drafting, &mut out);
                     continue;
@@ -476,6 +586,55 @@ mod tests {
                    "per-slot sampler is batch-placement independent");
         // drafted/accepted counters cover the stochastic slot too
         assert!(e.metrics().drafted > 0);
+    }
+
+    #[test]
+    fn tree_mode_commits_the_verifier_argmax_rollout() {
+        // tree losslessness: whatever the tree accepts, the greedy
+        // committed stream must be byte-identical to a pure argmax
+        // rollout of the toy verifier from the prefill token
+        let mut e = EchoEngine::new(1, 256, 0).with_tree(2, 3).with_acceptance(0.7);
+        e.submit(vec![1, 2], 12);
+        let fins = e.run_to_completion().unwrap();
+        let got = &fins[0].tokens;
+        let mut want = vec![10i32];
+        while want.len() < got.len() {
+            want.push(argmax(&mock_logits(*want.last().unwrap())) as i32);
+        }
+        assert_eq!(got, &want, "tree acceptance changed the greedy stream");
+        assert!(e.metrics().tree_nodes_drafted > 0, "v1.7 stats populated");
+        assert!(e.metrics().tree_paths > 0);
+        assert!(e.metrics().accepted_depth.count() > 0);
+        assert_eq!(e.core().slots.live_branches(), 0, "all branches released");
+    }
+
+    #[test]
+    fn tree_mode_width_one_matches_linear_argmax_rollout() {
+        // width 1 is the linear degenerate: same rollout, fewer nodes
+        let run = |w: usize| {
+            let mut e = EchoEngine::new(1, 256, 0).with_tree(w, 3).with_acceptance(0.7);
+            e.submit(vec![1, 2], 10);
+            e.run_to_completion().unwrap().remove(0).tokens
+        };
+        assert_eq!(run(1), run(3), "committed stream is width-invariant under greedy");
+    }
+
+    #[test]
+    fn stochastic_tree_mode_replays_on_seed_and_diverges_across_seeds() {
+        let run = |seed: u64| {
+            let mut e = EchoEngine::new(1, 256, 0).with_tree(2, 3).with_acceptance(0.6);
+            let params = SamplingParams {
+                max_tokens: 16,
+                temperature: 0.9,
+                seed,
+                ..SamplingParams::default()
+            };
+            e.submit_request(GenerationRequest::new(vec![1, 4, 9], params));
+            e.run_to_completion().unwrap().remove(0).tokens
+        };
+        assert_eq!(run(5), run(5), "same seed must replay");
+        let runs: Vec<_> = (1..=3).map(run).collect();
+        assert!(runs[0] != runs[1] || runs[1] != runs[2], "seeds should diverge: {runs:?}");
     }
 
     #[test]

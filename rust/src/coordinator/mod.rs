@@ -23,6 +23,10 @@
 //!                     one W4A16 module, quantized shadow KV for the
 //!                     draft phase, full-precision verify that
 //!                     requantizes the shadow.
+//! * `treespec`      — tree speculation over the QSPEC precision pair
+//!                     (v1.7): multi-branch W4A4 drafting, tree-masked
+//!                     W4A16 verify chunk, recursive multi-branch
+//!                     stochastic acceptance, CoW KV branch forks.
 //! * `mock`          — session-free deterministic [`EchoEngine`] over
 //!                     the real `BatchCore` (protocol tests, pool
 //!                     benches; runs everywhere artifacts don't).
@@ -36,8 +40,12 @@ pub mod mock;
 pub mod queue;
 pub mod request;
 pub mod spec_decode;
+pub mod treespec;
 
-pub use acceptance::{greedy_accept, stochastic_accept, AcceptDecision};
+pub use acceptance::{
+    greedy_accept, greedy_tree_accept, stochastic_accept, stochastic_tree_accept,
+    AcceptDecision, TreeAcceptDecision,
+};
 pub use autoregressive::ArEngine;
 pub use eagle::{EagleConfig, EagleEngine};
 pub use hierspec::{HierSpecConfig, HierSpecEngine};
@@ -52,6 +60,7 @@ pub use request::{
     DEFAULT_PRIORITY, MAX_PRIORITY, NUM_PRIORITY_CLASSES,
 };
 pub use spec_decode::{QSpecConfig, QSpecEngine};
+pub use treespec::{TreeSpecConfig, TreeSpecEngine};
 
 /// A similarity sample for fig 2: draft top-1 prob, verify prob of the
 /// draft token, and whether the token was accepted.

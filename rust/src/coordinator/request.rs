@@ -62,11 +62,30 @@ pub struct SamplingParams {
     pub temperature: f32,
     /// PRNG seed for temperature sampling (unused when greedy).
     pub seed: u64,
+    /// v1.7: keep only the `top_k` most probable tokens (0 = off).
+    /// Truncation is applied to *both* the draft and verifier
+    /// distributions before the stochastic accept test, then each is
+    /// renormalized — so speculation stays lossless with respect to
+    /// the truncated verifier distribution. Ignored when greedy.
+    pub top_k: usize,
+    /// v1.7: nucleus truncation — keep the smallest prefix of the
+    /// probability-sorted vocabulary whose cumulative mass reaches
+    /// `top_p` (1.0 = off). Validated to (0, 1]; composes with
+    /// `top_k` (top-k first, then the nucleus cut). Ignored when
+    /// greedy.
+    pub top_p: f32,
 }
 
 impl Default for SamplingParams {
     fn default() -> Self {
-        SamplingParams { max_tokens: 64, stop: Vec::new(), temperature: 0.0, seed: 0 }
+        SamplingParams {
+            max_tokens: 64,
+            stop: Vec::new(),
+            temperature: 0.0,
+            seed: 0,
+            top_k: 0,
+            top_p: 1.0,
+        }
     }
 }
 
@@ -85,6 +104,12 @@ impl SamplingParams {
             return Err(QspecError::Config(format!(
                 "temperature {} outside [0, 2]",
                 self.temperature
+            )));
+        }
+        if !self.top_p.is_finite() || !(self.top_p > 0.0 && self.top_p <= 1.0) {
+            return Err(QspecError::Config(format!(
+                "top_p {} outside (0, 1]",
+                self.top_p
             )));
         }
         if self.stop.len() > MAX_STOP_SEQUENCES {
@@ -307,6 +332,15 @@ mod tests {
         p.temperature = f32::NAN;
         assert!(p.validate().is_err());
         p.temperature = 0.7;
+        assert!(p.validate().is_ok());
+        p.top_p = 0.0;
+        assert!(p.validate().is_err());
+        p.top_p = 1.5;
+        assert!(p.validate().is_err());
+        p.top_p = f32::NAN;
+        assert!(p.validate().is_err());
+        p.top_p = 0.9;
+        p.top_k = 5;
         assert!(p.validate().is_ok());
         p.stop = vec![Vec::new()];
         assert!(p.validate().is_err());

@@ -1,0 +1,613 @@
+//! The TreeSpec engine (protocol v1.7): tree speculation over the
+//! QSPEC precision pair.
+//!
+//! Same weight set and KV cache as the QSPEC engine, but the W4A4
+//! drafter expands a token *tree* instead of a chain: at each of
+//! `depth` levels the draft logits row yields `width` candidates (the
+//! principal token the chain decodes through, plus `width - 1`
+//! siblings). One W4A16 chunk over the principal chain verifies the
+//! chain *and* upgrades the cache (the KV-overwriting design, exactly
+//! as in linear qspec); an optional second, *read-only* tree-masked
+//! chunk (`verify_tree_logits`) scores every non-principal node
+//! conditioned on its own root path, enabling a bonus token after a
+//! sibling acceptance. Tree-aware acceptance
+//! ([`greedy_tree_accept`] / [`stochastic_tree_accept`]) commits the
+//! longest accepted root-path.
+//!
+//! Why siblings are "free": every level-`j` candidate shares the
+//! principal prefix, so the draft row and the verifier row the chain
+//! already produced at level `j` judge all of them. A rejection that
+//! linear qspec would pay a full cycle for is *rescued* whenever a
+//! sibling matches (greedy) or survives the SpecInfer recursive accept
+//! rule (stochastic) — that is exactly the accepted-tokens-per-verify
+//! advantage `benches/tree_spec.rs` measures.
+//!
+//! KV consistency after a sibling acceptance costs nothing: the
+//! committed sibling becomes the slot's *pending* token, and the next
+//! cycle's verify chunk overwrites the stale speculative entries past
+//! the commit point — the same KV-overwriting argument that makes
+//! linear qspec lossless. Sibling branches additionally fork the paged
+//! allocator's CoW block tables ([`SlotManager::fork_branch`]) for the
+//! duration of the accept step, proving the shared prefix is shared by
+//! refcount (never copied) and that losing branches free exactly their
+//! non-shared blocks.
+//!
+//! Fallbacks: without the `decode_logits` twin the drafter cannot
+//! expand siblings (no host-visible rows) and the engine degenerates to
+//! the linear chain (width 1) over the fused draft entry; without
+//! `verify_tree_logits` acceptance runs tree-aware but bonus-less after
+//! rescues — both keep pre-v1.7 artifact sets serving correctly.
+
+use std::rc::Rc;
+
+use crate::costmodel::{twins::Twin, CostModel, Phase};
+use crate::error::Result;
+use crate::kvcache::SlotManager;
+use crate::metrics::{PhaseKind, PhaseTimer};
+use crate::model::tokenizer::PAD;
+use crate::model::Mode;
+use crate::runtime::{ModelMeta, Module, Session, WeightSet};
+use crate::sampler::{argmax, softmax};
+use crate::tree::TokenTree;
+
+use super::acceptance::{greedy_tree_accept, stochastic_tree_accept, TreeAcceptDecision};
+use super::engine::{BatchCore, Engine, StepBatch};
+use super::request::StepEvent;
+
+/// Top-`width` distinct candidates of a greedy draft logits row,
+/// principal (= the argmax, same tie-break as [`argmax`]: lowest index)
+/// first, each with its draft probability. Shared with the mock
+/// engine's tree mode so both expand identically.
+pub(crate) fn top_candidates(row: &[f32], q: &[f32], width: usize) -> Vec<(i32, f32)> {
+    let principal = argmax(row);
+    let mut rest: Vec<usize> = (0..row.len()).filter(|&i| i != principal).collect();
+    rest.sort_by(|&a, &b| {
+        row[b].partial_cmp(&row[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let mut cands = Vec::with_capacity(width);
+    cands.push((principal as i32, q[principal]));
+    for &i in rest.iter().take(width.saturating_sub(1)) {
+        cands.push((i as i32, q[i]));
+    }
+    cands
+}
+
+/// TreeSpec engine configuration.
+#[derive(Clone, Debug)]
+pub struct TreeSpecConfig {
+    pub size: String,
+    pub scheme: String,
+    pub batch: usize,
+    /// branching factor: candidates per tree level (1 = linear chain).
+    pub width: usize,
+    /// draft depth: levels per cycle (the principal chain length).
+    pub depth: usize,
+}
+
+impl TreeSpecConfig {
+    pub fn new(size: &str, batch: usize, width: usize, depth: usize) -> Self {
+        TreeSpecConfig {
+            size: size.to_string(),
+            scheme: "atom".to_string(),
+            batch,
+            width,
+            depth,
+        }
+    }
+}
+
+/// The engine. Owns the device cache and modules; the shared
+/// [`BatchCore`] owns queue/slots/metrics.
+pub struct TreeSpecEngine<'s> {
+    #[allow(dead_code)]
+    sess: &'s Session,
+    pub cfg: TreeSpecConfig,
+    pub meta: ModelMeta,
+    prefill_m: Rc<Module>,
+    /// fused W4A4 draft loop — the linear fallback when the logits twin
+    /// is absent.
+    draft_m: Rc<Module>,
+    verify_m: Rc<Module>,
+    // logits twins: decode_logits is what makes sibling expansion (and
+    // stochastic serving) possible; verify_logits enables the
+    // stochastic accept rule; prefill_logits samples the first token
+    prefill_logits_m: Option<Rc<Module>>,
+    decode_logits_m: Option<Rc<Module>>,
+    verify_logits_m: Option<Rc<Module>>,
+    /// tree-masked read-only verify chunk (v1.7 artifact sets only).
+    tree_m: Option<Rc<Module>>,
+    /// set when a tree-chunk call failed at runtime (e.g. an artifact
+    /// set compiled for a different width): the engine keeps serving
+    /// without per-node rows instead of dying mid-request.
+    tree_broken: bool,
+    w_verify: Rc<WeightSet>,
+    w_draft: Rc<WeightSet>,
+    kv: Option<xla::PjRtBuffer>,
+    pub core: BatchCore,
+}
+
+impl<'s> TreeSpecEngine<'s> {
+    pub fn new(sess: &'s Session, cfg: TreeSpecConfig) -> Result<Self> {
+        let meta = sess.store.model(&cfg.size)?.clone();
+        let m = &sess.store.manifest;
+        let g = cfg.depth;
+        let prefill_m = sess.module(&cfg.size, &cfg.scheme, "w4a16", "prefill", cfg.batch, g)?;
+        let draft_m = sess.module(&cfg.size, &cfg.scheme, "w4a4", "draft", cfg.batch, g)?;
+        let verify_m = sess.module(&cfg.size, &cfg.scheme, "w4a16", "verify", cfg.batch, g)?;
+        let prefill_logits_m = sess
+            .module(&cfg.size, &cfg.scheme, "w4a16", "prefill_logits", cfg.batch, g)
+            .ok();
+        let decode_logits_m = sess
+            .module(&cfg.size, &cfg.scheme, "w4a4", "decode_logits", cfg.batch, g)
+            .ok();
+        let verify_logits_m = sess
+            .module(&cfg.size, &cfg.scheme, "w4a16", "verify_logits", cfg.batch, g)
+            .ok();
+        let tree_m = sess
+            .module(&cfg.size, &cfg.scheme, "w4a16", "verify_tree_logits", cfg.batch, g)
+            .ok();
+        let w_verify = sess.weights(&verify_m.meta.weights_key)?;
+        let w_draft = sess.weights(&draft_m.meta.weights_key)?;
+        let kv = Some(sess.fresh_kv(&cfg.size, cfg.batch)?);
+        let slots = SlotManager::new(cfg.batch, meta.max_seq, m.prefill_t);
+        let cost = CostModel::new(Twin::lookup(&meta.paper_twin));
+
+        // virtual-device admission check: same residency as qspec
+        // (shared weights, single A16 cache; the tree chunk reads it
+        // without a second buffer)
+        let resident =
+            cost.weight_bytes(Mode::W4A16) + cost.kv_bytes(Mode::W4A16, cfg.batch, 2048);
+        cost.check_memory(resident, "treespec engine")?;
+
+        Ok(TreeSpecEngine {
+            sess,
+            cfg,
+            meta,
+            prefill_m,
+            draft_m,
+            verify_m,
+            prefill_logits_m,
+            decode_logits_m,
+            verify_logits_m,
+            tree_m,
+            tree_broken: false,
+            w_verify,
+            w_draft,
+            kv,
+            core: BatchCore::new(slots, cost),
+        })
+    }
+
+    /// Admission + batched prefill (same W4A16 chunk as qspec).
+    fn admit_and_prefill(&mut self, out: &mut Vec<StepEvent>) -> Result<()> {
+        let pb = match self.core.admit_batch(out)? {
+            Some(pb) => pb,
+            None => return Ok(()),
+        };
+        let p = self.core.slots.prefill_t();
+        let span = self.core.trace.scope("phase.prefill");
+
+        let timer = PhaseTimer::start();
+        let kv = self.kv.take().expect("kv");
+        let stochastic = pb.admitted.iter().any(|(i, _)| self.core.slot_stochastic(*i));
+        let ftok = if stochastic && self.prefill_logits_m.is_some() {
+            let pm = self.prefill_logits_m.clone().expect("prefill_logits");
+            let r = pm.call_prefill_logits(&pb.tokens, &pb.start, &pb.mask, &kv, &self.w_verify)?;
+            self.kv = Some(r.kv);
+            let vocab = self.meta.vocab;
+            let mut tok = vec![PAD; self.cfg.batch];
+            for (i, _) in &pb.admitted {
+                let row = &r.logits[i * vocab..(i + 1) * vocab];
+                tok[*i] = match self.core.sampler_mut(*i) {
+                    Some(s) => {
+                        let pr = s.probs(row);
+                        s.sample_probs(&pr) as i32
+                    }
+                    None => argmax(row) as i32,
+                };
+            }
+            tok
+        } else {
+            let r = self
+                .prefill_m
+                .call_prefill(&pb.tokens, &pb.start, &pb.mask, &kv, &self.w_verify)?;
+            self.kv = Some(r.kv);
+            r.tok
+        };
+        let virt = self
+            .core
+            .cost
+            .charge(Mode::W4A16, Phase::Chunk, pb.admitted.len(), pb.uncached_tokens(), p);
+        self.core.metrics.add_phase(PhaseKind::Prefill, timer.elapsed_ns(), virt);
+
+        self.core.finish_prefill(&pb, &ftok, out);
+        drop(span);
+        Ok(())
+    }
+
+    /// Run the optional tree-masked read-only chunk over the flattened
+    /// trees (`None` when the module is absent/broken or every tree is
+    /// width-1 — nothing a linear row doesn't already cover). Returns
+    /// the per-node logits `[batch, n, vocab]` with `n = width*depth`.
+    fn tree_chunk(
+        &mut self,
+        sb: &StepBatch,
+        trees: &[Option<TokenTree>],
+    ) -> Result<Option<Vec<f32>>> {
+        let n = self.cfg.width * self.cfg.depth;
+        if self.tree_broken || self.cfg.width < 2 {
+            return Ok(None);
+        }
+        let tm = match &self.tree_m {
+            Some(tm) => tm.clone(),
+            None => return Ok(None),
+        };
+        // all active trees are full-width (the expansion always pushes
+        // exactly `width` candidates), so the flattening is rectangular
+        debug_assert!(trees.iter().flatten().all(|t| t.len() == n));
+        let b = self.cfg.batch;
+        let mut tokens = vec![PAD; b * n];
+        let mut parents = vec![-1i32; b * n];
+        for (i, t) in trees.iter().enumerate() {
+            let Some(t) = t else { continue };
+            for (k, node) in t.nodes().iter().enumerate() {
+                tokens[i * n + k] = node.token;
+                parents[i * n + k] = node.parent;
+            }
+        }
+        let kv = self.kv.take().expect("kv");
+        match tm.call_verify_tree_logits(
+            &tokens,
+            &parents,
+            &sb.pos,
+            &sb.start,
+            &kv,
+            &self.w_verify,
+        ) {
+            Ok(r) => {
+                self.kv = Some(r.kv);
+                Ok(Some(r.logits))
+            }
+            Err(_) => {
+                // artifact/width mismatch: keep serving without
+                // per-node rows rather than dying mid-request
+                self.kv = Some(kv);
+                self.tree_broken = true;
+                Ok(None)
+            }
+        }
+    }
+
+    /// Acceptance bookkeeping + CoW branch-fork proof for one slot,
+    /// then the commit itself. Sibling branches fork the slot's block
+    /// table for the duration of the accept step (scoped per slot so
+    /// peak block pressure stays one slot's worth), asserting the
+    /// shared prefix is attached by refcount and losing branches free
+    /// exactly their non-shared blocks.
+    fn accept_and_commit(
+        &mut self,
+        i: usize,
+        tree: &TokenTree,
+        dec: TreeAcceptDecision,
+        out: &mut Vec<StepEvent>,
+    ) {
+        let depth = tree.n_levels();
+        let principal = tree.principal_tokens();
+        let mut branches = Vec::new();
+        for node in tree.nodes().iter().filter(|n| !n.principal) {
+            let br = self.core.slots.fork_branch(i);
+            for &t in &principal[..node.level] {
+                self.core.slots.branch_append(br, t);
+            }
+            self.core.slots.branch_append(br, node.token);
+            branches.push(br);
+        }
+        self.core.metrics.drafted += depth as u64;
+        self.core.metrics.tree_nodes_drafted += tree.len() as u64;
+        self.core.metrics.tree_paths += tree.n_paths() as u64;
+        self.core.metrics.accepted += dec.accepted as u64;
+        self.core.metrics.record_accept(dec.accepted as u64);
+        self.core.metrics.accepted_depth.record(dec.accepted as u64);
+        // losing branches free exactly their non-shared blocks; the
+        // commit then appends to the slot's canonical table with no
+        // sibling refs left to CoW against
+        for br in branches {
+            self.core.slots.release_branch(br);
+        }
+        self.core.commit(i, &dec.committed, depth, out);
+    }
+
+    /// One tree cycle: `depth` sequential W4A4 logits steps expanding
+    /// `width` candidates per level, the linear W4A16 verify chunk on
+    /// the principal chain (KV-overwriting), the optional tree-masked
+    /// chunk, then tree-aware acceptance per slot.
+    fn cycle(&mut self, out: &mut Vec<StepEvent>) -> Result<()> {
+        let sb = match self.core.step_inputs() {
+            Some(sb) => sb,
+            None => return Ok(()),
+        };
+        if self.decode_logits_m.is_none() {
+            // no host-visible draft rows: linear fallback (width 1)
+            return self.cycle_linear(&sb, out);
+        }
+        let stochastic = self.core.any_stochastic(&sb.active) && self.verify_logits_m.is_some();
+        let b = self.cfg.batch;
+        let depth = self.cfg.depth;
+        let vocab = self.meta.vocab;
+        let dm = self.decode_logits_m.clone().expect("decode_logits");
+
+        // ---- draft phase (sequential W4A4 logits steps + expansion) ----
+        let span = self.core.trace.scope("phase.draft");
+        let timer = PhaseTimer::start();
+        let mut cur = sb.tok.clone();
+        let mut trees: Vec<Option<TokenTree>> = vec![None; b];
+        for &i in &sb.active {
+            trees[i] = Some(TokenTree::new(self.cfg.width, depth));
+        }
+        // principal-chain draft distributions, [slot][level][vocab]
+        // (greedy slots leave their rows zeroed — never read)
+        let mut q = vec![0f32; b * depth * vocab];
+        let mut virt = 0u128;
+        for j in 0..depth {
+            let pos: Vec<i32> = sb.pos.iter().map(|&p| p + j as i32).collect();
+            let kv = self.kv.take().expect("kv");
+            let r = dm.call_decode_logits(&cur, &pos, &sb.start, &kv, &self.w_draft)?;
+            self.kv = Some(r.kv);
+            for &i in &sb.active {
+                let row = &r.logits[i * vocab..(i + 1) * vocab];
+                let tree = trees[i].as_mut().expect("active tree");
+                let principal = match self.core.sampler_mut(i) {
+                    Some(s) if stochastic => {
+                        // stochastic: width i.i.d. draws from q (the
+                        // recursive accept rule requires draw order and
+                        // tolerates duplicates — they auto-reject)
+                        let qp = s.probs(row);
+                        let mut cands = Vec::with_capacity(self.cfg.width);
+                        for _ in 0..self.cfg.width {
+                            let c = s.sample_probs(&qp);
+                            cands.push((c as i32, qp[c]));
+                        }
+                        let principal = cands[0].0;
+                        let at = (i * depth + j) * vocab;
+                        q[at..at + vocab].copy_from_slice(&qp);
+                        tree.push_level(&cands);
+                        principal
+                    }
+                    _ => {
+                        // greedy: top-width distinct candidates
+                        let qp = softmax(row);
+                        let cands = top_candidates(row, &qp, self.cfg.width);
+                        let principal = cands[0].0;
+                        tree.push_level(&cands);
+                        principal
+                    }
+                };
+                cur[i] = principal;
+            }
+            virt += self
+                .core
+                .cost
+                .charge(Mode::W4A4, Phase::Decode, sb.active.len(), 1, sb.mean_ctx);
+        }
+        self.core.metrics.add_phase(PhaseKind::Draft, timer.elapsed_ns(), virt);
+        drop(span);
+
+        // ---- verify phase ----------------------------------------------
+        // linear chunk on the principal chain: the executed backbone —
+        // it both judges the chain and overwrites the cache with A16
+        // entries (exactly the qspec verify). The optional tree chunk
+        // adds read-only per-node rows for the siblings.
+        let span = self.core.trace.scope("phase.verify");
+        let mut vtokens = vec![PAD; b * (depth + 1)];
+        for &i in &sb.active {
+            let tree = trees[i].as_ref().expect("active tree");
+            vtokens[i * (depth + 1)] = sb.tok[i];
+            for (j, &t) in tree.principal_tokens().iter().enumerate() {
+                vtokens[i * (depth + 1) + 1 + j] = t;
+            }
+        }
+        let timer = PhaseTimer::start();
+        let kv = self.kv.take().expect("kv");
+        // (vtok rows for greedy acceptance, logits rows for stochastic)
+        let (vtok, vlogits) = if stochastic {
+            let vm = self.verify_logits_m.clone().expect("verify_logits");
+            let v = vm.call_verify_logits(&vtokens, &sb.pos, &sb.start, &sb.mask, &kv, &self.w_verify)?;
+            self.kv = Some(v.kv);
+            (None, Some(v.logits))
+        } else {
+            let v = self
+                .verify_m
+                .call_verify(&vtokens, &sb.pos, &sb.start, &sb.mask, &kv, &self.w_verify)?;
+            self.kv = Some(v.kv);
+            (Some(v.vtok), None)
+        };
+        let tree_logits = self.tree_chunk(&sb, &trees)?;
+        // the verify charge prices the whole tree at chunk width: the
+        // principal chain plus every sibling row scored this cycle
+        let chunk_tokens = if tree_logits.is_some() {
+            self.cfg.width * depth + 1
+        } else {
+            depth + 1
+        };
+        let virt = self
+            .core
+            .cost
+            .charge(Mode::W4A16, Phase::Chunk, sb.active.len(), chunk_tokens, sb.mean_ctx);
+        self.core.metrics.add_phase(PhaseKind::Verify, timer.elapsed_ns(), virt);
+        drop(span);
+
+        // ---- acceptance + commit ---------------------------------------
+        let span = self.core.trace.scope("phase.commit");
+        let timer = PhaseTimer::start();
+        let n = self.cfg.width * depth;
+        for &i in &sb.active {
+            let tree = trees[i].take().expect("active tree");
+            let dec = match (&vlogits, self.core.sampler_mut(i)) {
+                (Some(vl), Some(s)) => {
+                    let vrows = &vl[i * (depth + 1) * vocab..(i + 1) * (depth + 1) * vocab];
+                    let mut p = Vec::with_capacity((depth + 1) * vocab);
+                    for j in 0..=depth {
+                        p.extend(s.probs(&vrows[j * vocab..(j + 1) * vocab]));
+                    }
+                    let tp = tree_logits.as_ref().map(|tl| {
+                        let rows = &tl[i * n * vocab..(i + 1) * n * vocab];
+                        let mut tp = Vec::with_capacity(n * vocab);
+                        for k in 0..n {
+                            tp.extend(s.probs(&rows[k * vocab..(k + 1) * vocab]));
+                        }
+                        tp
+                    });
+                    stochastic_tree_accept(
+                        &tree,
+                        &q[i * depth * vocab..(i + 1) * depth * vocab],
+                        &p,
+                        tp.as_deref(),
+                        vocab,
+                        s,
+                    )
+                }
+                _ => {
+                    // greedy slot (argmax host- or device-side)
+                    let vt: Vec<i32> = match (&vtok, &vlogits) {
+                        (Some(vt), _) => vt[i * (depth + 1)..(i + 1) * (depth + 1)].to_vec(),
+                        (None, Some(vl)) => {
+                            let vrows = &vl[i * (depth + 1) * vocab..];
+                            (0..=depth)
+                                .map(|j| argmax(&vrows[j * vocab..(j + 1) * vocab]) as i32)
+                                .collect()
+                        }
+                        (None, None) => unreachable!("verify ran one of the two entries"),
+                    };
+                    let ta: Option<Vec<i32>> = tree_logits.as_ref().map(|tl| {
+                        let rows = &tl[i * n * vocab..(i + 1) * n * vocab];
+                        (0..n).map(|k| argmax(&rows[k * vocab..(k + 1) * vocab]) as i32).collect()
+                    });
+                    greedy_tree_accept(&tree, &vt, ta.as_deref())
+                }
+            };
+            self.accept_and_commit(i, &tree, dec, out);
+        }
+        debug_assert_eq!(self.core.slots.live_branches(), 0);
+        self.core.metrics.add_phase(PhaseKind::Host, timer.elapsed_ns(), 0);
+        drop(span);
+        Ok(())
+    }
+
+    /// Linear fallback (no `decode_logits` twin): fused W4A4 draft +
+    /// W4A16 verify, exactly the qspec greedy cycle, flowed through the
+    /// tree-acceptance layer as width-1 trees so the v1.7 stats stay
+    /// meaningful.
+    fn cycle_linear(&mut self, sb: &StepBatch, out: &mut Vec<StepEvent>) -> Result<()> {
+        let b = self.cfg.batch;
+        let depth = self.cfg.depth;
+
+        let span = self.core.trace.scope("phase.draft");
+        let timer = PhaseTimer::start();
+        let kv = self.kv.take().expect("kv");
+        let d = self.draft_m.call_draft(&sb.tok, &sb.pos, &sb.start, &kv, &self.w_draft)?;
+        self.kv = Some(d.kv);
+        let mut virt = 0u128;
+        for _ in 0..depth {
+            virt += self
+                .core
+                .cost
+                .charge(Mode::W4A4, Phase::Decode, sb.active.len(), 1, sb.mean_ctx);
+        }
+        self.core.metrics.add_phase(PhaseKind::Draft, timer.elapsed_ns(), virt);
+        drop(span);
+
+        let span = self.core.trace.scope("phase.verify");
+        let mut vtokens = vec![PAD; b * (depth + 1)];
+        for slot in 0..b {
+            vtokens[slot * (depth + 1)] = sb.tok[slot];
+            for j in 0..depth {
+                vtokens[slot * (depth + 1) + 1 + j] = d.toks[slot * depth + j];
+            }
+        }
+        let timer = PhaseTimer::start();
+        let kv = self.kv.take().expect("kv");
+        let v = self
+            .verify_m
+            .call_verify(&vtokens, &sb.pos, &sb.start, &sb.mask, &kv, &self.w_verify)?;
+        self.kv = Some(v.kv);
+        let virt = self
+            .core
+            .cost
+            .charge(Mode::W4A16, Phase::Chunk, sb.active.len(), depth + 1, sb.mean_ctx);
+        self.core.metrics.add_phase(PhaseKind::Verify, timer.elapsed_ns(), virt);
+        drop(span);
+
+        let span = self.core.trace.scope("phase.commit");
+        let timer = PhaseTimer::start();
+        for &i in &sb.active {
+            let mut tree = TokenTree::new(1, depth);
+            for j in 0..depth {
+                tree.push_level(&[(d.toks[i * depth + j], d.probs[i * depth + j])]);
+            }
+            let vt = &v.vtok[i * (depth + 1)..(i + 1) * (depth + 1)];
+            let dec = greedy_tree_accept(&tree, vt, None);
+            self.accept_and_commit(i, &tree, dec, out);
+        }
+        debug_assert_eq!(self.core.slots.live_branches(), 0);
+        self.core.metrics.add_phase(PhaseKind::Host, timer.elapsed_ns(), 0);
+        drop(span);
+        Ok(())
+    }
+}
+
+impl<'s> Engine for TreeSpecEngine<'s> {
+    fn name(&self) -> &'static str {
+        "treespec"
+    }
+
+    fn argmax_only(&self) -> bool {
+        self.prefill_logits_m.is_none()
+            || self.decode_logits_m.is_none()
+            || self.verify_logits_m.is_none()
+    }
+
+    fn core(&self) -> &BatchCore {
+        &self.core
+    }
+
+    fn core_mut(&mut self) -> &mut BatchCore {
+        &mut self.core
+    }
+
+    fn step(&mut self) -> Result<Vec<StepEvent>> {
+        let mut out = Vec::new();
+        self.admit_and_prefill(&mut out)?;
+        self.cycle(&mut out)?;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_candidates_are_distinct_and_argmax_led() {
+        let row = [0.1, 2.0, 2.0, -1.0, 0.5];
+        let q = softmax(&row);
+        let c = top_candidates(&row, &q, 3);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c[0].0, argmax(&row) as i32, "principal is the argmax");
+        assert_eq!(c[0].0, 1, "ties break to the lowest index");
+        assert_eq!(c[1].0, 2, "runner-up is the tied twin");
+        assert_eq!(c[2].0, 4);
+        let mut toks: Vec<i32> = c.iter().map(|x| x.0).collect();
+        toks.sort_unstable();
+        toks.dedup();
+        assert_eq!(toks.len(), 3, "candidates are distinct");
+        assert!((c[0].1 - q[1]).abs() < 1e-6, "probabilities ride along");
+    }
+
+    #[test]
+    fn top_candidates_width_one_is_just_the_argmax() {
+        let row = [0.0, 3.0, 1.0];
+        let q = softmax(&row);
+        let c = top_candidates(&row, &q, 1);
+        assert_eq!(c, vec![(1, q[1])]);
+    }
+}

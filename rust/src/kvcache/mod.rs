@@ -257,6 +257,15 @@ fn stop_suffix_len(generated: &[i32], stops: &[Vec<i32>]) -> Option<usize> {
         .map(Vec::len)
 }
 
+/// A forked view of one slot's block table (TreeSpec sibling branch):
+/// shares the slot's blocks by refcount; appends diverge the tail via
+/// CoW, so the shared prefix is never duplicated and never corrupted.
+#[derive(Debug)]
+struct BranchView {
+    table: Vec<BlockId>,
+    len: usize,
+}
+
 /// The paging layer of one [`SlotManager`]: the shared block pool, the
 /// per-slot block tables over it, and the radix prefix cache hanging
 /// off committed full blocks. Block `k` of a table covers the slot's
@@ -273,6 +282,10 @@ struct Pager {
     lens: Vec<usize>,
     /// per-slot count of full blocks already offered to the cache.
     published: Vec<usize>,
+    /// transient sibling branches (TreeSpec): forked views of a slot's
+    /// block table, sharing its blocks by refcount until a write
+    /// diverges them. Freed entries are recycled by id.
+    branches: Vec<Option<BranchView>>,
     prefix_enabled: bool,
     /// width of the paged quantized shadow codes (one shadow block per
     /// full block), present exactly when the manager has a shadow tier.
@@ -299,6 +312,7 @@ impl Pager {
             tables: vec![Vec::new(); batch],
             lens: vec![0; batch],
             published: vec![0; batch],
+            branches: Vec::new(),
             prefix_enabled,
             shadow_bits,
         }
@@ -330,14 +344,25 @@ impl Pager {
     /// Append one token to slot `idx`'s stream: open a fresh block at
     /// block boundaries, CoW-diverge a shared tail block, then write.
     fn append(&mut self, idx: usize, tok: i32) {
-        let pos = self.lens[idx];
+        let mut table = std::mem::take(&mut self.tables[idx]);
+        let mut len = self.lens[idx];
+        self.append_raw(&mut table, &mut len, tok);
+        self.tables[idx] = table;
+        self.lens[idx] = len;
+    }
+
+    /// The append core, generic over whose table is written (a slot's
+    /// or a forked branch's): open a fresh block at block boundaries,
+    /// CoW-diverge a shared tail block, then write.
+    fn append_raw(&mut self, table: &mut Vec<BlockId>, len: &mut usize, tok: i32) {
+        let pos = *len;
         let code = self.code(tok, pos);
         let bs = self.alloc.block_size();
         if pos % bs == 0 {
             let id = self.alloc_block();
-            self.tables[idx].push(id);
+            table.push(id);
         } else {
-            let last = *self.tables[idx].last().expect("partial stream without a tail block");
+            let last = *table.last().expect("partial stream without a tail block");
             if self.alloc.refcount(last) > 1 {
                 // CoW: writing in place would corrupt the other
                 // holders' shared prefix bytes
@@ -351,12 +376,51 @@ impl Pager {
                     );
                 };
                 self.alloc.release(last);
-                *self.tables[idx].last_mut().expect("tail block") = copy;
+                *table.last_mut().expect("tail block") = copy;
             }
         }
-        let id = *self.tables[idx].last().expect("tail block");
+        let id = *table.last().expect("tail block");
         self.alloc.push(id, tok, code);
-        self.lens[idx] = pos + 1;
+        *len = pos + 1;
+    }
+
+    /// Fork a sibling branch off slot `idx`'s current stream: the
+    /// branch attaches every block of the slot's table by refcount (no
+    /// copies). Returns the branch id.
+    fn fork_branch(&mut self, idx: usize) -> usize {
+        let table = self.tables[idx].clone();
+        for &b in &table {
+            self.alloc.retain(b);
+        }
+        let view = BranchView { table, len: self.lens[idx] };
+        match self.branches.iter().position(Option::is_none) {
+            Some(id) => {
+                self.branches[id] = Some(view);
+                id
+            }
+            None => {
+                self.branches.push(Some(view));
+                self.branches.len() - 1
+            }
+        }
+    }
+
+    /// Append one token to a forked branch's stream (CoW-diverging the
+    /// tail block shared with the parent slot / other branches).
+    fn branch_append(&mut self, branch: usize, tok: i32) {
+        let mut view = self.branches[branch].take().expect("append to released branch");
+        self.append_raw(&mut view.table, &mut view.len, tok);
+        self.branches[branch] = Some(view);
+    }
+
+    /// Release a branch: drops exactly the branch's references — shared
+    /// prefix blocks stay with their other holders, diverged/fresh
+    /// blocks (refcount 1) return to the free list.
+    fn release_branch(&mut self, branch: usize) {
+        let view = self.branches[branch].take().expect("double release of branch");
+        for b in view.table {
+            self.alloc.release(b);
+        }
     }
 
     /// Page in a prompt at admission: attach the longest cached prefix
@@ -505,9 +569,54 @@ impl SlotManager {
         self.pager.prefix.cached_blocks()
     }
 
+    /// Fork a transient sibling branch off slot `idx`'s current stream
+    /// (TreeSpec): the branch shares every block of the slot's table by
+    /// refcount — no block is copied until a [`Self::branch_append`]
+    /// diverges the tail. Returns the branch id. Branches are per-cycle
+    /// bookkeeping: release them before the slot itself is released.
+    pub fn fork_branch(&mut self, idx: usize) -> usize {
+        self.pager.fork_branch(idx)
+    }
+
+    /// Append one token to a forked branch's stream, CoW-diverging the
+    /// tail block it shares with the parent slot (or other branches).
+    pub fn branch_append(&mut self, branch: usize, tok: i32) {
+        self.pager.branch_append(branch, tok);
+    }
+
+    /// Release a branch: frees exactly the blocks no other holder
+    /// shares (the diverged tail / fresh blocks); the parent slot's
+    /// prefix stays resident.
+    pub fn release_branch(&mut self, branch: usize) {
+        self.pager.release_branch(branch);
+    }
+
+    /// A live branch's block table.
+    pub fn branch_blocks(&self, branch: usize) -> &[BlockId] {
+        &self.pager.branches[branch].as_ref().expect("released branch").table
+    }
+
+    /// A live branch's logical stream length (tokens paged in).
+    pub fn branch_len(&self, branch: usize) -> usize {
+        self.pager.branches[branch].as_ref().expect("released branch").len
+    }
+
+    /// Count of live (unreleased) branches — commit-path hygiene
+    /// assertions use this.
+    pub fn live_branches(&self) -> usize {
+        self.pager.branches.iter().flatten().count()
+    }
+
     /// Blocks in use across slots and the prefix cache.
     pub fn live_blocks(&self) -> usize {
         self.pager.alloc.live_count()
+    }
+
+    /// Reference count of a live block — holders are slots, forked
+    /// branches and the prefix cache; the tree-CoW property suite
+    /// audits sharing through this.
+    pub fn block_refcount(&self, id: BlockId) -> u32 {
+        self.pager.alloc.refcount(id)
     }
 
     /// Shadow-tier width, when one is configured.
@@ -1037,6 +1146,78 @@ mod tests {
         }
         // 20 x 5 blocks exceed the pool: LRU eviction must have run
         assert!(m.prefix_cached_blocks() <= cap);
+    }
+
+    #[test]
+    fn branch_fork_shares_blocks_and_cow_diverges_on_append() {
+        let mut m = SlotManager::new(1, 64, 16);
+        m.configure_paging(2, true);
+        let i = m.admit(1, &[1, 2, 3], 10, vec![]).unwrap();
+        m.after_prefill(i, 4, -1);
+        // stream [1,2,3,4]: two full blocks
+        let before = m.live_blocks();
+        let parent = m.block_table(i).to_vec();
+        let b = m.fork_branch(i);
+        assert_eq!(m.branch_blocks(b), &parent[..], "fork copies no blocks");
+        assert_eq!(m.branch_len(b), 4);
+        assert_eq!(m.live_blocks(), before, "fork allocates nothing");
+        assert_eq!(m.live_branches(), 1);
+        // stream length 4 = block boundary: the branch append opens a
+        // fresh block, the shared prefix stays shared
+        m.branch_append(b, 99);
+        assert_eq!(m.branch_len(b), 5);
+        assert_eq!(m.branch_blocks(b)[..2], parent[..]);
+        assert_eq!(m.live_blocks(), before + 1);
+        // a second sibling diverges independently
+        let c = m.fork_branch(i);
+        m.branch_append(c, 77);
+        assert_ne!(
+            m.branch_blocks(b)[2],
+            m.branch_blocks(c)[2],
+            "siblings own distinct tail blocks"
+        );
+        // releasing frees exactly the non-shared tails
+        m.release_branch(b);
+        m.release_branch(c);
+        assert_eq!(m.live_blocks(), before);
+        assert_eq!(m.live_branches(), 0);
+        assert_eq!(m.block_table(i), &parent[..], "parent table untouched");
+        // branch ids are recycled
+        let d = m.fork_branch(i);
+        assert!(d <= 1, "freed branch slots are reused (got {d})");
+        m.release_branch(d);
+    }
+
+    #[test]
+    fn branch_append_mid_block_copies_only_the_tail() {
+        let mut m = SlotManager::new(1, 64, 16);
+        m.configure_paging(4, true);
+        let i = m.admit(1, &[1, 2, 3, 4, 5, 6], 10, vec![]).unwrap();
+        m.after_prefill(i, 7, -1);
+        // stream [1..7]: one full block + a partial tail [5,6,7]
+        let parent = m.block_table(i).to_vec();
+        let before = m.live_blocks();
+        let b = m.fork_branch(i);
+        m.branch_append(b, 99);
+        // CoW: exactly one clone of the partial tail
+        assert_eq!(m.live_blocks(), before + 1);
+        assert_eq!(m.branch_blocks(b)[0], parent[0], "full prefix block shared");
+        assert_ne!(m.branch_blocks(b)[1], parent[1], "tail diverged");
+        assert_eq!(m.block_tokens(m.branch_blocks(b)[1]), &[5, 6, 7, 99]);
+        assert_eq!(m.block_tokens(parent[1]), &[5, 6, 7], "parent tail untouched");
+        m.release_branch(b);
+        assert_eq!(m.live_blocks(), before);
+    }
+
+    #[test]
+    #[should_panic(expected = "double release")]
+    fn branch_double_release_traps() {
+        let mut m = SlotManager::new(1, 64, 16);
+        let i = m.admit(1, &[1, 2, 3], 10, vec![]).unwrap();
+        m.after_prefill(i, 4, -1);
+        let b = m.fork_branch(i);
+        m.release_branch(b);
+        m.release_branch(b);
     }
 
     #[test]

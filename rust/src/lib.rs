@@ -13,7 +13,8 @@
 //!   shedding), continuous batcher, speculative scheduler with
 //!   KV-overwriting, AR + EAGLE baselines, L20 roofline cost model,
 //!   metrics, workloads, observability (tracing / Prometheus export /
-//!   flight recorder), TCP server (protocol v1.5). All engines
+//!   flight recorder), tree speculation (`tree::TokenTree` +
+//!   TreeSpec engine), TCP server (protocol v1.7). All engines
 //!   implement `coordinator::Engine` over a shared
 //!   `coordinator::BatchCore`; drivers hold `&mut dyn Engine` built by
 //!   `coordinator::build_engine`.
@@ -37,6 +38,7 @@ pub mod obs;
 pub mod runtime;
 pub mod sampler;
 pub mod server;
+pub mod tree;
 pub mod util;
 pub mod workload;
 

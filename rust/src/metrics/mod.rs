@@ -81,6 +81,15 @@ pub struct EngineMetrics {
     /// fraction of cycles accepted 0, 1, ..., gamma drafts — for the
     /// Prometheus export and the acceptance-tuning loops.
     pub accept_hist: LogHistogram,
+    /// v1.7 (TreeSpec only): total tree nodes drafted — principal chain
+    /// plus sibling candidates (`drafted` counts the chain alone, so
+    /// `tree_nodes_drafted - drafted` is the sibling overdraft).
+    pub tree_nodes_drafted: u64,
+    /// v1.7 (TreeSpec only): total root-paths (tree leaves) drafted.
+    pub tree_paths: u64,
+    /// v1.7 (TreeSpec only): per-cycle accepted root-path depth
+    /// distribution — how deep the committed path reached.
+    pub accepted_depth: LogHistogram,
 }
 
 impl EngineMetrics {
@@ -205,6 +214,8 @@ impl EngineMetrics {
             ("acceptance_rate", self.acceptance_rate_opt().map_or(Json::Null, num)),
             ("wall_tok_s", num(self.wall_tokens_per_s())),
             ("virt_tok_s", num(self.virt_tokens_per_s())),
+            ("tree_nodes_drafted", num(self.tree_nodes_drafted as f64)),
+            ("tree_paths", num(self.tree_paths as f64)),
             ("latency_p50_ns", num(self.req_latency.percentile(50.0) as f64)),
             ("latency_p99_ns", num(self.req_latency.percentile(99.0) as f64)),
             ("queue_p50_ns", num(self.queue_wait.percentile(50.0) as f64)),
@@ -287,6 +298,8 @@ mod tests {
         assert!(j.get("deadline_expired").is_some());
         assert!(j.get("prefix_queries").is_some());
         assert!(j.get("prefix_hit_tokens").is_some());
+        assert!(j.get("tree_nodes_drafted").is_some());
+        assert!(j.get("tree_paths").is_some());
     }
 
     #[test]

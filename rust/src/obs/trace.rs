@@ -78,6 +78,11 @@ impl EventKind {
 /// enabled fast path allocates only when a lazy `detail` closure runs.
 #[derive(Clone, Debug)]
 pub struct TraceEvent {
+    /// monotone per-ring sequence number, assigned at push (first
+    /// event is 1). Survives eviction and `clear`, so it doubles as
+    /// the cursor for incremental tail reads ([`Tracer::snapshot_since`]
+    /// / the v1.7 `{"op":"trace","since":N}` server op).
+    pub seq: u64,
     /// microseconds since `obs::init` (process time base)
     pub t_us: u64,
     pub kind: EventKind,
@@ -98,6 +103,7 @@ impl TraceEvent {
     /// Dump form (flight recorder / `{"op":"dump"}` bodies).
     pub fn to_json(&self) -> Json {
         let mut fields = vec![
+            ("seq", num(self.seq as f64)),
             ("t_us", num(self.t_us as f64)),
             ("kind", s(self.kind.as_str())),
             ("name", s(self.name)),
@@ -122,6 +128,10 @@ struct RingState {
     ring: VecDeque<TraceEvent>,
     /// events evicted from the full ring since creation/clear
     dropped: u64,
+    /// highest sequence number assigned so far (0 = none yet). Never
+    /// reset — not even by `clear` — so client cursors stay valid
+    /// across ring wipes.
+    next_seq: u64,
 }
 
 /// The tracing core: an enable flag, a span-id counter, and the
@@ -190,8 +200,10 @@ impl Tracer {
         self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
     }
 
-    fn push(&self, ev: TraceEvent) {
+    fn push(&self, mut ev: TraceEvent) {
         let mut st = self.lock();
+        st.next_seq += 1;
+        ev.seq = st.next_seq;
         if st.ring.len() >= self.capacity {
             st.ring.pop_front();
             st.dropped += 1;
@@ -205,6 +217,7 @@ impl Tracer {
             return;
         }
         self.push(TraceEvent {
+            seq: 0, // assigned in push
             t_us: now_us(),
             kind: EventKind::Instant,
             name,
@@ -230,6 +243,7 @@ impl Tracer {
             return;
         }
         self.push(TraceEvent {
+            seq: 0, // assigned in push
             t_us: now_us(),
             kind: EventKind::Instant,
             name,
@@ -260,6 +274,7 @@ impl Tracer {
         }
         let span = self.next_span.fetch_add(1, Ordering::Relaxed);
         self.push(TraceEvent {
+            seq: 0, // assigned in push
             t_us: now_us(),
             kind: EventKind::Start,
             name,
@@ -275,6 +290,34 @@ impl Tracer {
     /// Clone out the ring's current contents, oldest first.
     pub fn snapshot(&self) -> Vec<TraceEvent> {
         self.lock().ring.iter().cloned().collect()
+    }
+
+    /// Incremental tail read (v1.7 `{"op":"trace","since":N}`).
+    ///
+    /// Returns `(events, next_since, dropped)`:
+    ///
+    /// - `events` — ring contents with `seq > since`, oldest first.
+    ///   `since = 0` reads the whole ring (seqs start at 1).
+    /// - `next_since` — the cursor to pass on the next call: the
+    ///   highest sequence number assigned so far (equals `since`'s
+    ///   echo when nothing new happened).
+    /// - `dropped` — how many events in `(since, next_since]` were
+    ///   already evicted (or cleared) before this read: the gap the
+    ///   caller can never recover. 0 means the tail is gapless.
+    pub fn snapshot_since(&self, since: u64) -> (Vec<TraceEvent>, u64, u64) {
+        let st = self.lock();
+        let next_since = st.next_seq;
+        let events: Vec<TraceEvent> =
+            st.ring.iter().filter(|e| e.seq > since).cloned().collect();
+        // oldest seq still unavailable to this cursor: everything up
+        // to (ring front - 1), or everything assigned if the ring is
+        // empty (cleared / fully evicted).
+        let oldest_gone = match st.ring.front() {
+            Some(front) => front.seq - 1,
+            None => st.next_seq,
+        };
+        let dropped = oldest_gone.saturating_sub(since.min(next_since));
+        (events, next_since, dropped)
     }
 
     /// Events evicted from the full ring since creation/clear.
@@ -312,6 +355,7 @@ impl Drop for SpanScope {
     fn drop(&mut self) {
         if let Some(t) = self.tracer.take() {
             t.push(TraceEvent {
+                seq: 0, // assigned in push
                 t_us: now_us(),
                 kind: EventKind::End,
                 name: self.name,
@@ -390,6 +434,66 @@ mod tests {
         assert_eq!(j.get("detail").unwrap().as_str(), Some("pool full"));
         // round-trips through the line protocol's JSON
         assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn snapshot_since_tails_the_ring_incrementally() {
+        let t = Tracer::new(64);
+        t.instant("a", None, 0);
+        t.instant("b", None, 0);
+
+        // cursor 0 reads everything assigned so far
+        let (evs, next, dropped) = t.snapshot_since(0);
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].seq, 1);
+        assert_eq!(evs[1].seq, 2);
+        assert_eq!(next, 2);
+        assert_eq!(dropped, 0);
+
+        // nothing new: empty tail, cursor echoes back
+        let (evs, next2, dropped) = t.snapshot_since(next);
+        assert!(evs.is_empty());
+        assert_eq!(next2, next);
+        assert_eq!(dropped, 0);
+
+        // new events appear after the cursor only
+        t.instant("c", None, 0);
+        let (evs, next3, dropped) = t.snapshot_since(next2);
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].name, "c");
+        assert_eq!(evs[0].seq, 3);
+        assert_eq!(next3, 3);
+        assert_eq!(dropped, 0);
+    }
+
+    #[test]
+    fn snapshot_since_counts_the_evicted_gap() {
+        let t = Tracer::new(4);
+        for _ in 0..10 {
+            t.instant("tick", None, 0);
+        }
+        // ring holds seqs 7..=10; a cursor at 2 lost 3..=6
+        let (evs, next, dropped) = t.snapshot_since(2);
+        assert_eq!(evs.len(), 4);
+        assert_eq!(evs[0].seq, 7);
+        assert_eq!(next, 10);
+        assert_eq!(dropped, 4);
+
+        // a caught-up cursor sees no gap despite past evictions
+        let (_, _, dropped) = t.snapshot_since(next);
+        assert_eq!(dropped, 0);
+
+        // clear wipes the ring but keeps seqs monotone: the stale
+        // cursor reports the wiped span as dropped, new events resume
+        t.clear();
+        t.instant("fresh", None, 0);
+        let (evs, next2, dropped) = t.snapshot_since(next);
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].seq, 11);
+        assert_eq!(next2, 11);
+        assert_eq!(dropped, 0);
+        let (_, _, dropped_stale) = t.snapshot_since(2);
+        assert_eq!(dropped_stale, 8); // 3..=10 gone
     }
 
     #[test]

@@ -111,7 +111,10 @@ impl ArtifactStore {
                     && m.entry == entry
                     && m.batch == batch
                     && (m.gamma == gamma
-                        || !matches!(m.entry.as_str(), "draft" | "verify" | "verify_logits"))
+                        || !matches!(
+                            m.entry.as_str(),
+                            "draft" | "verify" | "verify_logits" | "verify_tree_logits"
+                        ))
             })
             .ok_or_else(|| {
                 QspecError::Artifact(format!(

@@ -269,6 +269,35 @@ impl Module {
         Ok(LogitsOut { logits: Self::read_f32(&out[0])?, kv: kv2 })
     }
 
+    /// verify_tree_logits: tree-masked read-only verification chunk
+    /// (TreeSpec, v1.7). `tokens`/`parents` are [B,N] row-major — the
+    /// flattened token tree and its parent indices (-1 = the chunk
+    /// root); each node attends the committed cache plus its own root
+    /// path. Returns the per-node verifier logits [B,N,V]. The KV
+    /// buffer passes through *unchanged* — siblings are alternatives
+    /// for the same positions, so nothing can be written; the linear
+    /// `verify`/`verify_logits` chunk on the principal chain is what
+    /// upgrades the cache.
+    pub fn call_verify_tree_logits(
+        &self,
+        tokens: &[i32],
+        parents: &[i32],
+        pos: &[i32],
+        start: &[i32],
+        kv: &xla::PjRtBuffer,
+        w: &WeightSet,
+    ) -> Result<LogitsOut> {
+        let b = pos.len();
+        let n = tokens.len() / b;
+        let t = self.buf_i32_2d(tokens, b, n)?;
+        let pr = self.buf_i32_2d(parents, b, n)?;
+        let p = self.buf_i32(pos)?;
+        let s = self.buf_i32(start)?;
+        let mut out = self.run(&[&t, &pr, &p, &s], Some(kv), w)?;
+        let kv2 = out.pop().ok_or_else(|| QspecError::Xla("verify_tree_logits out".into()))?;
+        Ok(LogitsOut { logits: Self::read_f32(&out[0])?, kv: kv2 })
+    }
+
     /// score: perplexity rows [B, T+1].
     pub fn call_score(&self, rows: &[i32], batch: usize, w: &WeightSet) -> Result<ScoreOut> {
         let cols = rows.len() / batch;

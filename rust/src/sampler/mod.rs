@@ -104,6 +104,58 @@ pub fn sample_topk(logits: &[f32], temperature: f32, k: usize, rng: &mut Pcg32) 
     idx[0]
 }
 
+/// Truncate a probability row in place (v1.7 `top_k` / `top_p`) and
+/// renormalize the survivors to total mass 1.
+///
+/// `top_k = 0` and `top_p >= 1` are both "off". When both are active,
+/// top-k applies first and the nucleus cut runs over the survivors:
+/// entries are ranked by probability (ties by lower index, via the
+/// sort's stability on equal keys) and the smallest prefix whose
+/// cumulative mass reaches `top_p` is kept. At least one entry (the
+/// row argmax) always survives, so the row never degrades to all-zero.
+///
+/// Speculative decoding stays lossless under truncation because the
+/// *same* rule is applied to the draft distribution q and the verifier
+/// distribution p before the accept test — the committed marginal is
+/// then exactly the truncated-and-renormalized p, the distribution an
+/// autoregressive verifier with the same knobs would sample.
+pub fn truncate_probs(probs: &mut [f32], top_k: usize, top_p: f32) {
+    let no_k = top_k == 0 || top_k >= probs.len();
+    let no_p = top_p >= 1.0;
+    if probs.is_empty() || (no_k && no_p) {
+        return;
+    }
+    let mut idx: Vec<usize> = (0..probs.len()).collect();
+    // stable sort: equal probabilities keep ascending-index order, so
+    // truncation is deterministic across platforms
+    idx.sort_by(|&a, &b| f32::total_cmp(&probs[b], &probs[a]));
+    let mut keep = if no_k { probs.len() } else { top_k.min(probs.len()) };
+    if !no_p {
+        let mut cum = 0.0f32;
+        let mut nucleus = keep;
+        for (j, &i) in idx[..keep].iter().enumerate() {
+            cum += probs[i];
+            if cum >= top_p {
+                nucleus = j + 1;
+                break;
+            }
+        }
+        keep = nucleus.max(1);
+    }
+    for &i in &idx[keep..] {
+        probs[i] = 0.0;
+    }
+    let z: f32 = idx[..keep].iter().map(|&i| probs[i]).sum();
+    if z > 0.0 {
+        for &i in &idx[..keep] {
+            probs[i] /= z;
+        }
+    } else {
+        // zero-mass survivors (degenerate input row): one-hot the top
+        probs[idx[0]] = 1.0;
+    }
+}
+
 /// Per-request sampler state: the request's temperature plus a PRNG
 /// seeded from its `seed`, so identical requests replay identically.
 ///
@@ -113,6 +165,12 @@ pub fn sample_topk(logits: &[f32], temperature: f32, k: usize, rng: &mut Pcg32) 
 #[derive(Debug, Clone)]
 pub struct Sampler {
     temperature: f32,
+    /// v1.7 truncation knobs (0 / 1.0 = off), applied inside
+    /// [`Sampler::probs`] so every distribution the request touches —
+    /// draft q rows, verifier p rows, tree sibling rows — is truncated
+    /// and renormalized by the same rule.
+    top_k: usize,
+    top_p: f32,
     rng: Pcg32,
 }
 
@@ -120,6 +178,8 @@ impl Sampler {
     pub fn new(params: &SamplingParams) -> Self {
         Sampler {
             temperature: params.temperature,
+            top_k: params.top_k,
+            top_p: params.top_p,
             rng: Pcg32::seeded(params.seed),
         }
     }
@@ -137,9 +197,15 @@ impl Sampler {
     }
 
     /// The distribution this sampler draws from for a logits row:
-    /// temperature-scaled softmax (one-hot argmax at temperature 0).
+    /// temperature-scaled softmax, truncated and renormalized by the
+    /// request's `top_k`/`top_p` (one-hot argmax at temperature 0,
+    /// where truncation is a no-op).
     pub fn probs(&self, logits: &[f32]) -> Vec<f32> {
-        softmax_t(logits, self.temperature)
+        let mut p = softmax_t(logits, self.temperature);
+        if !self.is_greedy() {
+            truncate_probs(&mut p, self.top_k, self.top_p);
+        }
+        p
     }
 
     /// Sample one token id from a logits row (greedy at temperature 0).
@@ -311,6 +377,94 @@ mod tests {
             let f = counts[i] as f32 / n as f32;
             assert!((f - p).abs() < 0.02, "bucket {i}: {f} vs {p}");
         }
+    }
+
+    #[test]
+    fn truncate_probs_topk_keeps_k_highest_renormalized() {
+        let mut p = vec![0.4f32, 0.1, 0.3, 0.2];
+        truncate_probs(&mut p, 2, 1.0);
+        assert_eq!(p[1], 0.0);
+        assert_eq!(p[3], 0.0);
+        assert!((p[0] - 0.4 / 0.7).abs() < 1e-6);
+        assert!((p[2] - 0.3 / 0.7).abs() < 1e-6);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn truncate_probs_nucleus_keeps_smallest_covering_prefix() {
+        let mut p = vec![0.5f32, 0.3, 0.15, 0.05];
+        // cum after 2 entries = 0.8 >= 0.75 -> keep exactly 2
+        truncate_probs(&mut p, 0, 0.75);
+        assert_eq!(&p[2..], &[0.0, 0.0]);
+        assert!((p[0] - 0.5 / 0.8).abs() < 1e-6);
+        assert!((p[1] - 0.3 / 0.8).abs() < 1e-6);
+        // a top_p at/below the max keeps only the argmax (never empty)
+        let mut p = vec![0.5f32, 0.3, 0.2];
+        truncate_probs(&mut p, 0, 0.1);
+        assert_eq!(p, vec![1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn truncate_probs_composes_and_off_is_identity() {
+        let mut p = vec![0.25f32; 4];
+        let orig = p.clone();
+        truncate_probs(&mut p, 0, 1.0);
+        assert_eq!(p, orig, "both knobs off leaves the row untouched");
+        // top-k first (keep 3), then nucleus over the survivors
+        let mut p = vec![0.4f32, 0.3, 0.2, 0.1];
+        truncate_probs(&mut p, 3, 0.6);
+        // survivors of k=3: {0,1,2}; nucleus 0.6 -> keep {0,1}
+        assert_eq!(&p[2..], &[0.0, 0.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn truncated_residual_stays_a_distribution_on_truncated_support() {
+        // the lossless-acceptance invariant truncation must preserve:
+        // with p and q truncated by the same rule, the rejection
+        // residual norm(max(0, p - q)) is still a probability row
+        // supported inside p's truncated support.
+        let params = SamplingParams {
+            temperature: 1.0,
+            seed: 5,
+            top_k: 3,
+            top_p: 0.9,
+            ..SamplingParams::default()
+        };
+        let s = Sampler::new(&params);
+        let p = s.probs(&[2.0, 1.0, 0.5, -1.0, 0.1]);
+        let q = s.probs(&[0.3, 2.5, 0.4, 0.2, -2.0]);
+        let mut resid: Vec<f32> = p.iter().zip(&q).map(|(&a, &b)| (a - b).max(0.0)).collect();
+        let z: f32 = resid.iter().sum();
+        assert!(z > 0.0, "distinct rows leave residual mass");
+        for r in &mut resid {
+            *r /= z;
+        }
+        assert!((resid.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        for (i, &r) in resid.iter().enumerate() {
+            assert!(r >= 0.0);
+            if p[i] == 0.0 {
+                assert_eq!(r, 0.0, "residual must not resurrect truncated token {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn sampler_probs_honors_truncation_knobs() {
+        let warm = SamplingParams {
+            temperature: 1.0,
+            seed: 7,
+            top_k: 2,
+            ..SamplingParams::default()
+        };
+        let p = Sampler::new(&warm).probs(&[3.0, 2.0, 1.0, 0.0]);
+        assert!(p[0] > 0.0 && p[1] > 0.0);
+        assert_eq!(&p[2..], &[0.0, 0.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        // greedy rows are one-hot already; truncation is a no-op
+        let greedy = SamplingParams { top_k: 1, ..SamplingParams::default() };
+        let p = Sampler::new(&greedy).probs(&[0.0, 4.0]);
+        assert_eq!(p, vec![0.0, 1.0]);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! TCP line-protocol serving frontend (protocol v1.6).
+//! TCP line-protocol serving frontend (protocol v1.7).
 //!
 //! Since v1.2 the server is an **engine pool**: `--replicas N` (or a
 //! repeated `--engine` for a heterogeneous pool) spawns one engine
@@ -35,15 +35,15 @@
 //! the owning replica. A single-replica pool behaves byte-for-byte
 //! like the v1.1 server on the v1/v1.1 surface.
 //!
-//! # Protocol v1.6 — one JSON object per line, both directions
+//! # Protocol v1.7 — one JSON object per line, both directions
 //!
-//! Eight ops, selected by the `"op"` field (absent = `generate`, the
+//! Nine ops, selected by the `"op"` field (absent = `generate`, the
 //! legacy bare-prompt form):
 //!
 //! ```text
 //! generate   : {"op":"generate","prompt":"q: g xy ?\n","max_tokens":64,
 //!               "stream":true,"stop":["\n"],"temperature":0,"seed":1,
-//!               "priority":2,"deadline_ms":1500}
+//!               "top_k":0,"top_p":1,"priority":2,"deadline_ms":1500}
 //!   legacy   : {"prompt":"q: g xy ?\n","max_tokens":64}
 //! cancel     : {"op":"cancel","id":3}
 //! stats      : {"op":"stats"}
@@ -53,6 +53,7 @@
 //!               "kv_bits":4}                                   (v1.4)
 //! metrics    : {"op":"metrics"}                                (v1.5)
 //! dump       : {"op":"dump"}                                   (v1.5)
+//! trace      : {"op":"trace","since":120}                      (v1.7)
 //! ```
 //!
 //! Generate fields: `prompt` (required string); `max_tokens` (integer,
@@ -66,7 +67,9 @@
 //! artifact sets without logits-returning entries advertise
 //! [`Engine::argmax_only`] and still answer `temperature > 0` with a
 //! precise `bad_request` naming the engine instead of silently
-//! decoding greedily. v1.1 QoS fields: `priority` (integer in [0, 3];
+//! decoding greedily. v1.7 adds `top_k` / `top_p` truncation of the
+//! sampled distributions (see the v1.7 section below). v1.1 QoS
+//! fields: `priority` (integer in [0, 3];
 //! 0 = batch, 1 = normal [the default], 2 = high, 3 = critical) and
 //! `deadline_ms` (integer >= 1): a latency budget relative to
 //! submission — a request still queued when its budget lapses answers
@@ -241,6 +244,42 @@
 //! sets keep advertising `argmax_only` and the v1.5 rejection
 //! behavior.
 //!
+//! # v1.7 — tree speculation + truncated sampling + trace tail
+//!
+//! v1.7 is additive: one new op, two new `generate` fields, and a few
+//! new `stats` fields; every v1.6 frame keeps its exact shape.
+//!
+//! *TreeSpec engine* — `--engine treespec` serves multi-branch
+//! speculation: a W4A4 token *tree* (top-`--tree-width` branching per
+//! level, `--tree-depth` levels) is drafted per cycle and verified in
+//! one W4A16 chunk, so a rejected principal token can be rescued by an
+//! accepted sibling instead of ending the cycle. No wire changes —
+//! the same `generate` surface rides on it — but `stats` frames gain
+//! the tree counters `tree_nodes_drafted` (tree nodes scored) and
+//! `tree_paths` (root paths drafted), plus an `accepted_depth`
+//! histogram under `hist` (committed depth per verify call). The
+//! counters stay 0 on linear engines, so pooled merges are unchanged.
+//!
+//! *Truncated sampling* — `generate` gains `top_k` (integer >= 0;
+//! 0 = off) and `top_p` (number in (0, 1]; 1 = off): nucleus/top-k
+//! truncation applied to *both* the draft and verifier distributions
+//! before the stochastic acceptance test, so speculation stays
+//! lossless with respect to the truncated-and-renormalized verifier
+//! distribution. Absent fields keep full-vocabulary v1.6 behavior;
+//! both are ignored at `temperature == 0`.
+//!
+//! *`trace` op* — `{"op":"trace","since":N}` answers one line
+//! `{"op":"trace","events":[...],"next_since":M,"dropped":D}`: the
+//! trace-ring events with sequence number `> N` (oldest first — each
+//! event now carries its `seq`), the cursor to pass next time, and how
+//! many matching events were already evicted from the bounded ring
+//! (`0` = the tail is gapless). `since` defaults to 0 (read the whole
+//! ring — a one-shot `dump` without the per-replica fan-out). Polling
+//! `trace` with the returned cursor tails the ring incrementally
+//! instead of re-downloading `dump`'s full snapshot. On a pool router
+//! the op answers the *router's* ring (route/lifecycle events);
+//! per-replica rings stay reachable via `dump`.
+//!
 //! Worker cadence knobs: `--heartbeat-ms` (router-side ping cadence;
 //! death is declared after one heartbeat interval of silence) and
 //! `--status-push-ms` (worker-side status push cadence) tune the v1.4
@@ -276,7 +315,7 @@ pub use pool::{
 /// Wire protocol version reported in `stats` frames, flight dumps and
 /// `qspec_build_info`. Bumped additively: a vX.Y client parses every
 /// vX.(Y+1) frame it knows about unchanged.
-pub const PROTOCOL_VERSION: &str = "v1.6";
+pub const PROTOCOL_VERSION: &str = "v1.7";
 
 /// A parsed protocol operation (v1.2 surface + the v1.4 `reconfigure`
 /// + the v1.5 observability ops).
@@ -300,6 +339,10 @@ pub enum Op {
     /// (router + live replicas on a pool; the engine's own ring on a
     /// bare engine loop / worker).
     Dump,
+    /// v1.7: incremental trace tail — events with ring sequence number
+    /// `> since`, plus the cursor for the next poll (`since = 0` reads
+    /// the whole ring).
+    Trace { since: u64 },
 }
 
 /// The `generate` op: prompt + wire-level sampling params + QoS.
@@ -310,6 +353,14 @@ pub struct GenerateOp {
     pub stream: bool,
     pub temperature: f32,
     pub seed: u64,
+    /// v1.7: keep only the `top_k` highest-probability tokens before
+    /// sampling (0 = off). Applied to both draft and verifier
+    /// distributions, then renormalized, so acceptance stays lossless
+    /// w.r.t. the truncated verifier distribution.
+    pub top_k: usize,
+    /// v1.7: nucleus truncation — keep the smallest prefix of the
+    /// sorted distribution with cumulative mass >= `top_p` (1 = off).
+    pub top_p: f32,
     pub stop: Vec<String>,
     /// v1.1: priority class in [0, MAX_PRIORITY]; DEFAULT_PRIORITY
     /// when absent (legacy frames).
@@ -426,6 +477,19 @@ pub fn parse_op(
                 }
             };
             let seed = opt_uint(&j, "seed")?.unwrap_or(0);
+            let top_k = opt_uint(&j, "top_k")?.map(|v| v as usize).unwrap_or(0);
+            let top_p = match j.get("top_p") {
+                None => 1.0f32,
+                Some(v) => {
+                    let p = v.as_f64().ok_or_else(|| bad_field("top_p", "number", v))?;
+                    if !(p > 0.0 && p <= 1.0) {
+                        return Err(QspecError::Config(format!(
+                            "field \"top_p\": {p} outside (0, 1]"
+                        )));
+                    }
+                    p as f32
+                }
+            };
             let priority = match opt_uint(&j, "priority")? {
                 None => DEFAULT_PRIORITY,
                 Some(v) if v <= MAX_PRIORITY as u64 => v as u8,
@@ -476,6 +540,8 @@ pub fn parse_op(
                 stream,
                 temperature,
                 seed,
+                top_k,
+                top_p,
                 stop,
                 priority,
                 deadline_ms,
@@ -490,6 +556,7 @@ pub fn parse_op(
         "stats" => Ok(Op::Stats),
         "metrics" => Ok(Op::Metrics),
         "dump" => Ok(Op::Dump),
+        "trace" => Ok(Op::Trace { since: opt_uint(&j, "since")?.unwrap_or(0) }),
         "drain" | "undrain" => match opt_uint(&j, "replica")? {
             Some(k) if op_name == "drain" => Ok(Op::Drain { replica: k as usize }),
             Some(k) => Ok(Op::Undrain { replica: k as usize }),
@@ -529,8 +596,8 @@ pub fn parse_op(
             Ok(Op::Reconfigure { replica, gamma, kv_bits })
         }
         other => Err(QspecError::Config(format!(
-            "unknown op \"{other}\" \
-             (expected generate|cancel|stats|metrics|dump|drain|undrain|reconfigure)"
+            "unknown op \"{other}\" (expected generate|cancel|stats|metrics|dump|\
+             trace|drain|undrain|reconfigure)"
         ))),
     }
 }
@@ -551,6 +618,14 @@ pub fn format_op(op: &Op) -> String {
                 ("seed", num(g.seed as f64)),
                 ("priority", num(g.priority as f64)),
             ];
+            // v1.7 truncation knobs: emitted only when active, so
+            // untruncated frames keep their exact v1.6 shape
+            if g.top_k > 0 {
+                fields.push(("top_k", num(g.top_k as f64)));
+            }
+            if g.top_p < 1.0 {
+                fields.push(("top_p", num(g.top_p as f64)));
+            }
             if !g.stop.is_empty() {
                 fields.push(("stop", Json::Arr(g.stop.iter().map(|t| s(t)).collect())));
             }
@@ -563,6 +638,9 @@ pub fn format_op(op: &Op) -> String {
         Op::Stats => obj(vec![("op", s("stats"))]),
         Op::Metrics => obj(vec![("op", s("metrics"))]),
         Op::Dump => obj(vec![("op", s("dump"))]),
+        Op::Trace { since } => {
+            obj(vec![("op", s("trace")), ("since", num(*since as f64))])
+        }
         Op::Drain { replica } => {
             obj(vec![("op", s("drain")), ("replica", num(*replica as f64))])
         }
@@ -676,6 +754,26 @@ pub fn format_replica_lost(id: Option<u64>, replica: usize, retry_after_ms: u64)
     obj(fields).to_string()
 }
 
+/// Response frame for the v1.7 `trace` op: the ring events after the
+/// client's cursor (oldest first, each carrying its `seq`), the cursor
+/// to pass on the next poll, and the evicted-gap count (0 = gapless).
+pub fn format_trace(
+    events: &[crate::obs::TraceEvent],
+    next_since: u64,
+    dropped: u64,
+) -> String {
+    obj(vec![
+        ("op", s("trace")),
+        (
+            "events",
+            Json::Arr(events.iter().map(|e| e.to_json()).collect()),
+        ),
+        ("next_since", num(next_since as f64)),
+        ("dropped", num(dropped as f64)),
+    ])
+    .to_string()
+}
+
 /// Structured error line for protocol violations.
 pub fn format_error(code: &str, message: &str) -> String {
     obj(vec![(
@@ -744,6 +842,9 @@ pub fn format_stats(engine: &dyn Engine) -> String {
         ("drafted", num(m.drafted as f64)),
         ("accepted", num(m.accepted as f64)),
         ("acceptance_rate", m.acceptance_rate_opt().map_or(Json::Null, num)),
+        // v1.7 tree-speculation counters (0 on linear engines)
+        ("tree_nodes_drafted", num(m.tree_nodes_drafted as f64)),
+        ("tree_paths", num(m.tree_paths as f64)),
         ("prefix_queries", num(m.prefix_queries as f64)),
         ("prefix_hit_tokens", num(m.prefix_hit_tokens as f64)),
         ("prefix_hit_rate", m.prefix_hit_rate_opt().map_or(Json::Null, num)),
@@ -763,6 +864,8 @@ pub fn format_stats(engine: &dyn Engine) -> String {
                 ("req_latency_ns", hist_pairs(&m.req_latency)),
                 ("queue_wait_ns", hist_pairs(&m.queue_wait)),
                 ("accept_len", hist_pairs(&m.accept_hist)),
+                // v1.7: committed root-path depth per tree verify call
+                ("accepted_depth", hist_pairs(&m.accepted_depth)),
             ]),
         ),
     ])
@@ -1250,6 +1353,57 @@ mod tests {
     }
 
     #[test]
+    fn v1_7_trace_op_parses() {
+        assert_eq!(parse_op(r#"{"op":"trace"}"#, 64, 512).unwrap(), Op::Trace { since: 0 });
+        assert_eq!(
+            parse_op(r#"{"op":"trace","since":120}"#, 64, 512).unwrap(),
+            Op::Trace { since: 120 }
+        );
+        let e = parse_op(r#"{"op":"trace","since":-3}"#, 64, 512).unwrap_err().to_string();
+        assert!(e.contains("\"since\""), "{e}");
+        // the unknown-op error advertises the v1.7 surface
+        let e = parse_op(r#"{"op":"zap"}"#, 64, 512).unwrap_err().to_string();
+        assert!(e.contains("trace"), "{e}");
+    }
+
+    #[test]
+    fn v1_7_truncation_fields_parse_and_validate() {
+        let g = gen(r#"{"op":"generate","prompt":"hi","top_k":5,"top_p":0.5}"#);
+        assert_eq!(g.top_k, 5);
+        assert_eq!(g.top_p, 0.5);
+        // absent fields mean "off" (full vocabulary, v1.6 behavior)
+        let g = gen(r#"{"prompt":"hi"}"#);
+        assert_eq!(g.top_k, 0);
+        assert_eq!(g.top_p, 1.0);
+        for line in [
+            r#"{"prompt":"x","top_p":0}"#,
+            r#"{"prompt":"x","top_p":1.5}"#,
+            r#"{"prompt":"x","top_p":"most"}"#,
+        ] {
+            let e = parse_op(line, 64, 512).unwrap_err().to_string();
+            assert!(e.contains("\"top_p\""), "{e}");
+        }
+        let e = parse_op(r#"{"prompt":"x","top_k":-1}"#, 64, 512).unwrap_err().to_string();
+        assert!(e.contains("\"top_k\""), "{e}");
+    }
+
+    #[test]
+    fn trace_frame_is_structured() {
+        let t = crate::obs::Tracer::new(8);
+        t.instant("route.admit", Some(3), 1);
+        t.instant("route.admit", Some(4), 1);
+        let (evs, next, dropped) = t.snapshot_since(1);
+        let j = Json::parse(&format_trace(&evs, next, dropped)).unwrap();
+        assert_eq!(j.get("op").unwrap().as_str(), Some("trace"));
+        assert_eq!(j.get("next_since").unwrap().as_i64(), Some(2));
+        assert_eq!(j.get("dropped").unwrap().as_i64(), Some(0));
+        let events = j.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1, "cursor 1 skips the first event");
+        assert_eq!(events[0].get("seq").unwrap().as_i64(), Some(2));
+        assert_eq!(events[0].get("name").unwrap().as_str(), Some("route.admit"));
+    }
+
+    #[test]
     fn drain_ops_parse() {
         assert_eq!(
             parse_op(r#"{"op":"drain","replica":1}"#, 64, 512).unwrap(),
@@ -1307,6 +1461,8 @@ mod tests {
                 stream: true,
                 temperature: 0.5,
                 seed: 7,
+                top_k: 4,
+                top_p: 0.75,
                 stop: vec!["\n".into(), "a: ".into()],
                 priority: 3,
                 deadline_ms: Some(1500),
@@ -1317,6 +1473,8 @@ mod tests {
                 stream: false,
                 temperature: 0.0,
                 seed: 0,
+                top_k: 0,
+                top_p: 1.0,
                 stop: Vec::new(),
                 priority: DEFAULT_PRIORITY,
                 deadline_ms: None,
@@ -1325,6 +1483,8 @@ mod tests {
             Op::Stats,
             Op::Metrics,
             Op::Dump,
+            Op::Trace { since: 0 },
+            Op::Trace { since: 1234 },
             Op::Drain { replica: 1 },
             Op::Undrain { replica: 0 },
             Op::Reconfigure { replica: 2, gamma: Some(4), kv_bits: Some(3) },

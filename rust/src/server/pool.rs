@@ -106,8 +106,8 @@ use crate::util::json::{num, obj, s, Json};
 use super::autoscale::{Action, AutoscaleCore, ReplicaSample};
 use super::{
     format_cancelled, format_delta, format_drain, format_error, format_overloaded,
-    format_reconfigured, format_response, format_stats, format_stream_done, GenerateOp,
-    Inbound, Op,
+    format_reconfigured, format_response, format_stats, format_stream_done, format_trace,
+    GenerateOp, Inbound, Op,
 };
 use crate::coordinator::request::NUM_PRIORITY_CLASSES;
 use crate::coordinator::{GenerationRequest, SamplingParams};
@@ -964,6 +964,13 @@ fn dispatch(
         Inbound::Op { op: Op::Dump, resp, .. } => {
             let _ = resp.send(pool_dump(core, slots).to_string());
         }
+        Inbound::Op { op: Op::Trace { since }, resp, .. } => {
+            // v1.7: incremental tail of the router's own ring (route +
+            // lifecycle events); per-replica rings stay reachable via
+            // the fan-out `dump`
+            let (evs, next, dropped) = core.trace.snapshot_since(since);
+            let _ = resp.send(format_trace(&evs, next, dropped));
+        }
         Inbound::Op { op: Op::Drain { replica }, resp, .. } => {
             let line = match core.set_draining(replica, true) {
                 Ok(()) => {
@@ -1307,6 +1314,9 @@ pub fn merge_stats(core: &RouterCore, entries: &[(usize, Json, bool)]) -> Json {
         ("drafted", num(drafted)),
         ("accepted", num(accepted)),
         ("acceptance_rate", acceptance),
+        // v1.7 tree-speculation counters (0 on linear-engine pools)
+        ("tree_nodes_drafted", num(sum("tree_nodes_drafted"))),
+        ("tree_paths", num(sum("tree_paths"))),
         ("prefix_queries", num(prefix_q)),
         ("prefix_hit_tokens", num(prefix_hit)),
         ("prefix_hit_rate", prefix_rate),
@@ -1332,6 +1342,7 @@ pub fn merge_stats(core: &RouterCore, entries: &[(usize, Json, bool)]) -> Json {
                 ("req_latency_ns", merge_hist("req_latency_ns")),
                 ("queue_wait_ns", merge_hist("queue_wait_ns")),
                 ("accept_len", merge_hist("accept_len")),
+                ("accepted_depth", merge_hist("accepted_depth")),
             ]),
         ),
         ("replicas", Json::Arr(replica_entries)),
@@ -1542,6 +1553,13 @@ fn handle_inbound(
             }
             let _ = resp.send(dump.to_string());
         }
+        Inbound::Op { op: Op::Trace { since }, resp, .. } => {
+            // v1.7: incremental tail of this engine's own ring (on a
+            // pool the router answers `trace` itself; this arm serves
+            // bare engine loops and standalone workers)
+            let (evs, next, dropped) = engine.core().trace.snapshot_since(since);
+            let _ = resp.send(format_trace(&evs, next, dropped));
+        }
         Inbound::Op { op: Op::Drain { .. } | Op::Undrain { .. }, resp, .. } => {
             // only the pool router owns the drain lifecycle; a replica
             // (or a standalone single-engine loop) rejects it precisely
@@ -1602,6 +1620,8 @@ fn handle_generate(
         stop,
         temperature: g.temperature,
         seed: g.seed,
+        top_k: g.top_k,
+        top_p: g.top_p,
     };
     let mut req = GenerationRequest::new(prompt, params).with_priority(g.priority);
     if let Some(ms) = g.deadline_ms {

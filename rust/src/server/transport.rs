@@ -1009,6 +1009,8 @@ mod tests {
             stream: true,
             temperature: 0.5,
             seed: 7,
+            top_k: 8,
+            top_p: 0.75,
             stop: vec!["END".into()],
             priority: 1,
             deadline_ms: Some(1500),
@@ -1023,6 +1025,7 @@ mod tests {
             Op::Stats,
             Op::Metrics,
             Op::Dump,
+            Op::Trace { since: 64 },
             Op::Drain { replica: 1 },
             Op::Undrain { replica: 1 },
             Op::Reconfigure { replica: 2, gamma: Some(4), kv_bits: Some(3) },

@@ -1,0 +1,311 @@
+//! Token-tree container for tree speculation (TreeSpec, protocol v1.7).
+//!
+//! A [`TokenTree`] holds one slot's drafted token tree for a cycle: a
+//! *principal chain* of `depth` tokens (the sequence the W4A4 drafter
+//! actually decoded, exactly the linear-qspec draft) plus up to
+//! `width - 1` *sibling* alternatives per level, all expanded host-side
+//! from the same draft logits row as that level's principal token —
+//! every level-`j` candidate shares the principal prefix as parent
+//! context, so the one row the drafter produced at level `j` is the
+//! correct draft distribution for all of them.
+//!
+//! The container owns the flattening contract the verify path needs:
+//! nodes are stored level-major (principal first within a level), and
+//! [`TokenTree::parents`], [`TokenTree::rel_positions`] and
+//! [`TokenTree::ancestor_mask`] pack the topology for a single
+//! tree-masked verify chunk (`verify_tree_logits`): token `i` may
+//! attend the committed cache plus exactly the in-chunk nodes on its
+//! own root path. Tree-aware acceptance
+//! ([`crate::coordinator::greedy_tree_accept`] /
+//! [`crate::coordinator::stochastic_tree_accept`]) consumes the same
+//! structure to commit the longest accepted root-path.
+
+/// One node of a drafted token tree.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TreeNode {
+    /// drafted token id.
+    pub token: i32,
+    /// flat index of the parent node; `-1` for level-0 nodes (their
+    /// parent is the slot's pending token, outside the tree).
+    pub parent: i32,
+    /// 0-based level (= distance from the root in draft steps).
+    pub level: usize,
+    /// whether this node is on the principal chain.
+    pub principal: bool,
+    /// draft probability of `token` at this level (`q_level[token]`).
+    pub q: f32,
+    /// product of `q` along the root path ending at this node.
+    pub cum_q: f32,
+}
+
+/// One slot's drafted token tree for a speculation cycle.
+///
+/// Built level by level via [`TokenTree::push_level`]; level 0's
+/// candidates continue the last committed token. The first candidate of
+/// every level is the principal token (the one the draft chain actually
+/// decoded through); the rest are siblings sharing the same parent —
+/// the principal node of the previous level.
+#[derive(Clone, Debug)]
+pub struct TokenTree {
+    width: usize,
+    depth: usize,
+    nodes: Vec<TreeNode>,
+    /// flat index where each pushed level starts.
+    level_starts: Vec<usize>,
+}
+
+impl TokenTree {
+    /// Empty tree with a target branching factor and draft depth.
+    pub fn new(width: usize, depth: usize) -> Self {
+        assert!(width >= 1, "tree width must be >= 1");
+        assert!(depth >= 1, "tree depth must be >= 1");
+        TokenTree {
+            width,
+            depth,
+            nodes: Vec::with_capacity(width * depth),
+            level_starts: Vec::with_capacity(depth),
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Number of nodes pushed so far.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Number of levels pushed so far (`<= depth`).
+    pub fn n_levels(&self) -> usize {
+        self.level_starts.len()
+    }
+
+    /// Append one level of candidates: `(token, q_prob)` pairs, the
+    /// principal token first. Duplicate sibling tokens are allowed
+    /// (stochastic drafting draws candidates i.i.d. from `q`, and the
+    /// recursive accept rule auto-rejects repeats); a level carries
+    /// between 1 and `width` candidates.
+    pub fn push_level(&mut self, candidates: &[(i32, f32)]) {
+        assert!(
+            !candidates.is_empty() && candidates.len() <= self.width,
+            "level must carry 1..=width candidates (got {})",
+            candidates.len()
+        );
+        assert!(self.n_levels() < self.depth, "tree already at depth {}", self.depth);
+        let level = self.n_levels();
+        let (parent, parent_cum_q) = if level == 0 {
+            (-1i32, 1.0f32)
+        } else {
+            let p = self.level_starts[level - 1];
+            (p as i32, self.nodes[p].cum_q)
+        };
+        self.level_starts.push(self.nodes.len());
+        for (k, &(token, q)) in candidates.iter().enumerate() {
+            self.nodes.push(TreeNode {
+                token,
+                parent,
+                level,
+                principal: k == 0,
+                q,
+                cum_q: parent_cum_q * q,
+            });
+        }
+    }
+
+    /// All nodes, level-major (principal first within each level).
+    pub fn nodes(&self) -> &[TreeNode] {
+        &self.nodes
+    }
+
+    /// The nodes of level `j`.
+    pub fn level(&self, j: usize) -> &[TreeNode] {
+        let r = self.level_range(j);
+        &self.nodes[r]
+    }
+
+    /// Flat index range of level `j`'s nodes.
+    pub fn level_range(&self, j: usize) -> std::ops::Range<usize> {
+        assert!(j < self.n_levels(), "level {j} not pushed (have {})", self.n_levels());
+        let start = self.level_starts[j];
+        let end =
+            if j + 1 < self.n_levels() { self.level_starts[j + 1] } else { self.nodes.len() };
+        start..end
+    }
+
+    /// The principal chain: one token per pushed level.
+    pub fn principal_tokens(&self) -> Vec<i32> {
+        (0..self.n_levels()).map(|j| self.nodes[self.level_starts[j]].token).collect()
+    }
+
+    /// Per-node parent indices, flattened for the tree-masked verify
+    /// entry (`-1` = the chunk's root).
+    pub fn parents(&self) -> Vec<i32> {
+        self.nodes.iter().map(|n| n.parent).collect()
+    }
+
+    /// Per-node position offsets relative to the root position: node
+    /// `i` occupies absolute position `root_pos + rel_positions()[i]`.
+    /// Siblings share their level's offset — they are *alternatives*
+    /// for the same position, which is why a linear KV write cannot
+    /// serve them and the tree chunk reads the cache without writing.
+    pub fn rel_positions(&self) -> Vec<i32> {
+        self.nodes.iter().map(|n| n.level as i32).collect()
+    }
+
+    /// Packed `[n, n]` row-major ancestor mask: `mask[i * n + j] == 1`
+    /// iff node `j` is node `i` itself or one of its ancestors — the
+    /// in-chunk attention pattern of the tree-masked verify call (each
+    /// node attends the committed cache plus its own root path).
+    pub fn ancestor_mask(&self) -> Vec<i32> {
+        let n = self.nodes.len();
+        let mut mask = vec![0i32; n * n];
+        for i in 0..n {
+            mask[i * n + i] = 1;
+            let mut a = self.nodes[i].parent;
+            while a >= 0 {
+                mask[i * n + a as usize] = 1;
+                a = self.nodes[a as usize].parent;
+            }
+        }
+        mask
+    }
+
+    /// Number of leaves = number of distinct root-paths the tree
+    /// drafts (the `tree_paths` stat counts these per cycle).
+    pub fn n_paths(&self) -> usize {
+        let mut leaf = vec![true; self.nodes.len()];
+        for n in &self.nodes {
+            if n.parent >= 0 {
+                leaf[n.parent as usize] = false;
+            }
+        }
+        leaf.into_iter().filter(|&l| l).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// width 2, depth 3: principal chain 10 -> 20 -> 30 with one
+    /// sibling per level (11, 21, 31).
+    fn sample_tree() -> TokenTree {
+        let mut t = TokenTree::new(2, 3);
+        t.push_level(&[(10, 0.5), (11, 0.25)]);
+        t.push_level(&[(20, 0.4), (21, 0.2)]);
+        t.push_level(&[(30, 0.8), (31, 0.1)]);
+        t
+    }
+
+    #[test]
+    fn level_major_layout_with_principal_first() {
+        let t = sample_tree();
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.n_levels(), 3);
+        assert_eq!(t.principal_tokens(), vec![10, 20, 30]);
+        for j in 0..3 {
+            let lvl = t.level(j);
+            assert_eq!(lvl.len(), 2);
+            assert!(lvl[0].principal);
+            assert!(!lvl[1].principal);
+            for n in lvl {
+                assert_eq!(n.level, j);
+            }
+        }
+    }
+
+    #[test]
+    fn parents_point_at_previous_level_principal() {
+        let t = sample_tree();
+        // level 0 hangs off the chunk root (-1); every deeper level
+        // hangs off the previous level's principal node
+        assert_eq!(t.parents(), vec![-1, -1, 0, 0, 2, 2]);
+        assert_eq!(t.rel_positions(), vec![0, 0, 1, 1, 2, 2]);
+    }
+
+    #[test]
+    fn cum_q_multiplies_along_the_root_path() {
+        let t = sample_tree();
+        let nodes = t.nodes();
+        assert!((nodes[0].cum_q - 0.5).abs() < 1e-6);
+        assert!((nodes[1].cum_q - 0.25).abs() < 1e-6);
+        // level-1 nodes: parent is node 0 (cum 0.5)
+        assert!((nodes[2].cum_q - 0.5 * 0.4).abs() < 1e-6);
+        assert!((nodes[3].cum_q - 0.5 * 0.2).abs() < 1e-6);
+        // level-2 nodes: parent is node 2 (cum 0.2)
+        assert!((nodes[4].cum_q - 0.5 * 0.4 * 0.8).abs() < 1e-6);
+        assert!((nodes[5].cum_q - 0.5 * 0.4 * 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ancestor_mask_marks_exactly_the_root_path() {
+        let t = sample_tree();
+        let n = t.len();
+        let m = t.ancestor_mask();
+        // node 5 (sibling at level 2): path is 5 <- 2 <- 0
+        let row: Vec<i32> = m[5 * n..6 * n].to_vec();
+        assert_eq!(row, vec![1, 0, 1, 0, 0, 1]);
+        // node 1 (sibling at level 0): only itself
+        let row: Vec<i32> = m[n..2 * n].to_vec();
+        assert_eq!(row, vec![0, 1, 0, 0, 0, 0]);
+        // every node attends itself; mask is lower-triangular in the
+        // level-major order (ancestors precede descendants)
+        for i in 0..n {
+            assert_eq!(m[i * n + i], 1);
+            for j in i + 1..n {
+                assert_eq!(m[i * n + j], 0, "node {i} attends later node {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn paths_count_leaves() {
+        // width 2 depth 3: 3 sibling leaves + the principal leaf
+        assert_eq!(sample_tree().n_paths(), 4);
+        // width 1 degenerates to the linear chain: one path
+        let mut lin = TokenTree::new(1, 3);
+        for j in 0..3 {
+            lin.push_level(&[(j as i32, 1.0)]);
+        }
+        assert_eq!(lin.n_paths(), 1);
+        // a partially drafted tree still counts its paths
+        let mut t = TokenTree::new(3, 4);
+        t.push_level(&[(1, 0.5), (2, 0.3), (3, 0.2)]);
+        assert_eq!(t.n_paths(), 3);
+    }
+
+    #[test]
+    fn variable_level_width_is_allowed() {
+        let mut t = TokenTree::new(3, 2);
+        t.push_level(&[(5, 0.9)]);
+        t.push_level(&[(6, 0.5), (7, 0.3), (8, 0.1)]);
+        assert_eq!(t.level(0).len(), 1);
+        assert_eq!(t.level(1).len(), 3);
+        assert_eq!(t.parents(), vec![-1, 0, 0, 0]);
+        assert_eq!(t.n_paths(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "1..=width")]
+    fn over_wide_level_rejected() {
+        let mut t = TokenTree::new(2, 2);
+        t.push_level(&[(1, 0.5), (2, 0.3), (3, 0.2)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "already at depth")]
+    fn over_deep_tree_rejected() {
+        let mut t = TokenTree::new(2, 1);
+        t.push_level(&[(1, 0.5)]);
+        t.push_level(&[(2, 0.5)]);
+    }
+}

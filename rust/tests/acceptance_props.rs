@@ -23,8 +23,11 @@
 //!      verifier-only rollout (distribution-losslessness: whatever q
 //!      is, speculation changes speed, never the distribution).
 
-use qspec::coordinator::{greedy_accept, stochastic_accept, SamplingParams};
+use qspec::coordinator::{
+    greedy_accept, stochastic_accept, stochastic_tree_accept, SamplingParams,
+};
 use qspec::sampler::Sampler;
+use qspec::tree::TokenTree;
 use qspec::util::check::check;
 use qspec::util::prng::Pcg32;
 
@@ -323,16 +326,14 @@ fn spec_rollout(seed: u64, len: usize, gamma: usize) -> Vec<i32> {
 /// marginal (computed by powering the 8x8 transition matrix), while a
 /// draft-only rollout measurably does not — i.e. `stochastic_accept`
 /// is doing the correcting, and the correction is complete.
-#[test]
-fn committed_stream_is_distributed_as_verifier_rollout() {
-    const LEN: usize = 4;
-    const TRIALS: u64 = 8_000;
-
-    // exact verifier marginal of token LEN-1 via the transition matrix
-    let s0 = sampler(0);
+/// Exact verifier-chain marginal of token `len - 1` by powering the
+/// 8x8 transition matrix built from `s0.probs` — so any truncation
+/// knobs on `s0` (v1.7 top-k/top-p) shape the exact answer the same
+/// way they shape every row the rollouts sample from.
+fn exact_p_marginal(s0: &Sampler, len: usize) -> Vec<f64> {
     let rows: Vec<Vec<f32>> = (0..SV).map(|c| s0.probs(&p_logits(c as i32))).collect();
     let mut exact: Vec<f64> = s0.probs(&p_logits(0)).iter().map(|&x| x as f64).collect();
-    for _ in 1..LEN {
+    for _ in 1..len {
         let mut next = vec![0f64; SV];
         for a in 0..SV {
             for b in 0..SV {
@@ -341,6 +342,16 @@ fn committed_stream_is_distributed_as_verifier_rollout() {
         }
         exact = next;
     }
+    exact
+}
+
+#[test]
+fn committed_stream_is_distributed_as_verifier_rollout() {
+    const LEN: usize = 4;
+    const TRIALS: u64 = 8_000;
+
+    // exact verifier marginal of token LEN-1 via the transition matrix
+    let exact = exact_p_marginal(&sampler(0), LEN);
 
     let tv_to_exact = |hist: &[u64]| -> f64 {
         let n: u64 = hist.iter().sum();
@@ -383,4 +394,142 @@ fn committed_stream_is_distributed_as_verifier_rollout() {
         qtv > 0.05,
         "draft-only TV {qtv:.4} too close to the verifier marginal — test has no power"
     );
+}
+
+// ---------------------------------------------------------------------------
+// Tree acceptance (v1.7) — the SpecInfer-style recursive multi-branch
+// rule, end to end. Same toy models, same exact-marginal oracle; the
+// rollout now drafts a token *tree* per cycle.
+// ---------------------------------------------------------------------------
+
+/// A sampler with the v1.7 truncation knobs armed (top-k 5 of 8 +
+/// nucleus 0.9): both q and p rows come out truncated-renormalized, so
+/// the accept rule runs entirely on the truncated support.
+fn tsampler(seed: u64) -> Sampler {
+    Sampler::new(&SamplingParams {
+        temperature: 1.0,
+        seed,
+        top_k: 5,
+        top_p: 0.9,
+        ..SamplingParams::default()
+    })
+}
+
+/// One full tree-speculative rollout with the toy models, mirroring
+/// the TreeSpec engine's stochastic cycle: each level draws `width`
+/// i.i.d. candidates from the draft row (first draw = principal
+/// chain), the verifier scores the principal chain, the tree-masked
+/// rows (when `tree_rows`) are the first-order toy LM's row keyed by
+/// each node's token, and `stochastic_tree_accept` commits a root
+/// path.
+fn tree_rollout(
+    seed: u64,
+    len: usize,
+    width: usize,
+    depth: usize,
+    tree_rows: bool,
+    truncated: bool,
+) -> Vec<i32> {
+    let mut s = if truncated { tsampler(seed) } else { sampler(seed) };
+    let p0 = s.probs(&p_logits(0));
+    let mut committed = vec![s.sample_probs(&p0) as i32];
+    while committed.len() < len {
+        let pending = *committed.last().unwrap();
+        let mut tree = TokenTree::new(width, depth);
+        let mut q = Vec::with_capacity(depth * SV);
+        let mut cur = pending;
+        for _ in 0..depth {
+            let qp = s.probs(&q_logits(cur));
+            let mut cands = Vec::with_capacity(width);
+            for _ in 0..width {
+                let d = s.sample_probs(&qp);
+                cands.push((d as i32, qp[d]));
+            }
+            q.extend_from_slice(&qp);
+            cur = cands[0].0;
+            tree.push_level(&cands);
+        }
+        let mut p = Vec::with_capacity((depth + 1) * SV);
+        let mut prev = pending;
+        for j in 0..=depth {
+            p.extend_from_slice(&s.probs(&p_logits(prev)));
+            if j < depth {
+                prev = tree.level(j)[0].token;
+            }
+        }
+        let tp: Vec<f32> =
+            tree.nodes().iter().flat_map(|n| s.probs(&p_logits(n.token))).collect();
+        let dec = stochastic_tree_accept(
+            &tree,
+            &q,
+            &p,
+            if tree_rows { Some(&tp) } else { None },
+            SV,
+            &mut s,
+        );
+        committed.extend(dec.committed);
+    }
+    committed.truncate(len);
+    committed
+}
+
+/// v1.7 property: the marginal of the L-th committed token under tree
+/// speculation equals the exact verifier-chain marginal for every
+/// (width, depth) shape — recursive multi-branch rejection is
+/// distribution-lossless, sibling rescues and all. Both the
+/// tree-masked-rows path (sibling bonus) and its `None` fallback are
+/// covered.
+#[test]
+fn tree_committed_stream_is_distributed_as_verifier_rollout() {
+    const LEN: usize = 4;
+    const TRIALS: u64 = 8_000;
+    let exact = exact_p_marginal(&sampler(0), LEN);
+    for (width, depth, tree_rows) in
+        [(2usize, 2usize, true), (2, 4, false), (3, 2, false), (3, 4, true)]
+    {
+        let mut hist = vec![0u64; SV];
+        for t in 0..TRIALS {
+            let toks = tree_rollout(700_000 + t, LEN, width, depth, tree_rows, false);
+            hist[toks[LEN - 1] as usize] += 1;
+        }
+        let tv: f64 = (0..SV)
+            .map(|v| (hist[v] as f64 / TRIALS as f64 - exact[v]).abs())
+            .sum::<f64>()
+            / 2.0;
+        assert!(
+            tv < 0.03,
+            "width {width} depth {depth} (tree rows {tree_rows}): \
+             tree marginal TV {tv:.4} from exact verifier marginal"
+        );
+    }
+}
+
+/// v1.7 satellite: truncation stays lossless under tree speculation.
+/// With top-k/top-p armed, every q and p row is truncated-renormalized
+/// by the same rule before any accept draw, so the committed stream
+/// must be distributed as the *truncated* verifier chain — which is
+/// measurably different from the untruncated one (the power check).
+#[test]
+fn truncated_tree_stream_matches_truncated_verifier_marginal() {
+    const LEN: usize = 4;
+    const TRIALS: u64 = 8_000;
+    let exact = exact_p_marginal(&tsampler(0), LEN);
+    let mut hist = vec![0u64; SV];
+    for t in 0..TRIALS {
+        let toks = tree_rollout(800_000 + t, LEN, 2, 3, true, true);
+        hist[toks[LEN - 1] as usize] += 1;
+    }
+    let tv: f64 = (0..SV)
+        .map(|v| (hist[v] as f64 / TRIALS as f64 - exact[v]).abs())
+        .sum::<f64>()
+        / 2.0;
+    assert!(tv < 0.03, "truncated tree marginal TV {tv:.4} from truncated verifier marginal");
+
+    // power: truncation must actually move the target (else this test
+    // proves nothing beyond the untruncated one). Exact-vs-exact, so
+    // the check is deterministic.
+    let full = exact_p_marginal(&sampler(0), LEN);
+    let shift: f64 =
+        (0..SV).map(|v| (exact[v] - full[v]).abs()).sum::<f64>() / 2.0;
+    assert!(shift > 1e-3, "truncation barely shifts the toy marginal ({shift:.5})");
 }

@@ -22,10 +22,14 @@
 //!   end (v1.6), stats snapshots, legacy one-line requests and precise
 //!   error frames.
 //! * **Artifact-gated suite** (`make artifacts` first; skips silently
-//!   otherwise): every engine kind (QSPEC, AR, EAGLE, HierSpec) runs
-//!   the battery and the same TCP scenarios, plus the HierSpec
-//!   losslessness check (its committed output must equal the W4A16
-//!   verifier baseline token-for-token). One #[test] drives the
+//!   otherwise): every engine kind (QSPEC, AR, EAGLE, HierSpec,
+//!   TreeSpec) runs the battery and the same TCP scenarios, plus the
+//!   HierSpec and TreeSpec losslessness checks (their committed greedy
+//!   output must equal the W4A16 verifier baseline token-for-token)
+//!   and the v1.7 stochastic-losslessness sweep (every drafting
+//!   engine's committed sampled stream must stay distributed as the AR
+//!   verifier's, measured by total variation against an AR baseline
+//!   with a self-calibrated noise floor). One #[test] drives the
 //!   artifact layer: PJRT client creation is expensive and the handles
 //!   are not Send, so a single test owns the session.
 
@@ -424,6 +428,24 @@ fn mock_engine_with_acceptance_passes_conformance() {
     conformance(&mut engine, &tok, &prompts);
     let acc = engine.metrics().acceptance_rate_opt().expect("drafting mock");
     assert!((acc - 0.75).abs() < 1e-9);
+}
+
+/// The v1.7 tree-drafting mock must pass the identical battery — it
+/// runs the real tree container, the real tree acceptance rules and
+/// real CoW branch forks per cycle — and its tree counters must show
+/// through the metrics surface.
+#[test]
+fn mock_tree_engine_passes_conformance() {
+    let tok = mock_tokenizer();
+    let prompts: Vec<String> =
+        ["hi there", "yo", "abc def", "012 345"].iter().map(|s| s.to_string()).collect();
+    let mut engine = EchoEngine::new(2, 512, 0).with_tree(2, 3).with_acceptance(0.7);
+    conformance(&mut engine, &tok, &prompts);
+    let m = engine.metrics();
+    assert!(m.tree_nodes_drafted > 0, "tree mock never drafted a tree");
+    assert!(m.tree_paths > 0, "tree mock never offered a root path");
+    assert!(m.accepted_depth.count() > 0, "accepted-depth histogram never recorded");
+    assert!(m.drafted >= m.accepted, "acceptance counters inverted");
 }
 
 /// v1.6 distribution-losslessness at the engine layer: the drafting
@@ -830,7 +852,8 @@ fn conformance_kinds() -> Vec<(EngineKind, &'static str)> {
             EngineKind::QSpec
             | EngineKind::Ar(_)
             | EngineKind::Eagle { .. }
-            | EngineKind::HierSpec { .. } => {}
+            | EngineKind::HierSpec { .. }
+            | EngineKind::TreeSpec { .. } => {}
         }
     }
     let kinds = vec![
@@ -838,6 +861,7 @@ fn conformance_kinds() -> Vec<(EngineKind, &'static str)> {
         (EngineKind::Ar(Mode::W4A16), "s"),
         (EngineKind::Eagle { tree_k: 1 }, "m"),
         (EngineKind::HierSpec { gamma: 3, kv_bits: 4 }, "s"),
+        (EngineKind::TreeSpec { width: 2, depth: 4 }, "s"),
     ];
     for (k, _) in &kinds {
         covered(k);
@@ -873,6 +897,8 @@ fn engine_trait_suite() {
         server_scenarios(&sess, &tok, kind, size, &prompts);
     }
     hierspec_losslessness(&sess, &tok, &prompts);
+    treespec_losslessness(&sess, &tok, &prompts);
+    stochastic_losslessness_sweep(&sess, &tok, &prompts[0]);
 }
 
 /// The HierSpec losslessness invariant, end-to-end: its draft phase is
@@ -908,6 +934,157 @@ fn hierspec_losslessness(sess: &Session, tok: &Tokenizer, prompts: &[String]) {
     assert!(acc > 0.0, "a 4-bit shadow must still accept some drafts ({acc})");
     assert!(acc < 1.0, "a 4-bit shadow must be measurably lossy ({acc})");
     eprintln!("hierspec losslessness: outputs match w4a16, acceptance {:.1}%", 100.0 * acc);
+}
+
+/// The v1.7 TreeSpec losslessness invariant, end-to-end: whatever
+/// branches the W4A4 tree draft offers and whichever root path the
+/// tree acceptance commits, the greedy committed stream must equal the
+/// W4A16 AR baseline token-for-token — the verifier chain is the sole
+/// author of the output. Also pins the tree counters: a tree engine
+/// that never drafted a sibling or never recorded an accepted depth is
+/// silently running linear.
+fn treespec_losslessness(sess: &Session, tok: &Tokenizer, prompts: &[String]) {
+    let run = |kind: EngineKind| {
+        let cfg = ServeConfig {
+            size: "s".to_string(),
+            batch: 8,
+            engine: kind,
+            ..ServeConfig::default()
+        };
+        let mut engine = build_engine(sess, &cfg).expect("engine");
+        for p in prompts {
+            engine.submit_request(greedy(tok, p, 24));
+        }
+        let mut fins = engine.run_to_completion().expect("run");
+        fins.sort_by_key(|f| f.id);
+        let outs: Vec<Vec<i32>> = fins.into_iter().map(|f| f.tokens).collect();
+        let m = engine.metrics().clone();
+        (outs, m)
+    };
+    let (baseline, _) = run(EngineKind::Ar(Mode::W4A16));
+    let (spec, m) = run(EngineKind::TreeSpec { width: 2, depth: 4 });
+    assert_eq!(
+        spec, baseline,
+        "treespec committed output must equal the W4A16 verifier exactly"
+    );
+    assert!(m.tree_nodes_drafted > 0, "treespec never drafted a tree node");
+    assert!(m.tree_paths > 0, "treespec never offered a root path");
+    assert!(m.accepted_depth.count() > 0, "treespec never recorded an accepted depth");
+    eprintln!(
+        "treespec losslessness: outputs match w4a16, {} nodes over {} paths, accepted depth p50 {}",
+        m.tree_nodes_drafted,
+        m.tree_paths,
+        m.accepted_depth.percentile(50.0)
+    );
+}
+
+/// The v1.7 stochastic-losslessness sweep: satellite of the tree PR —
+/// the empirical TV property graduates from the toy mock
+/// (`mock_stochastic_stream_is_distributed_as_the_verifier_chain`) to
+/// the real engines. Every drafting engine serving `temperature > 0`
+/// must commit a stream distributed as its *verifier* chain, so the
+/// second committed token's empirical marginal must match the W4A16 AR
+/// baseline's up to sampling noise. The noise floor is self-calibrated
+/// — two independent AR baselines of the same trial count measure it —
+/// so the bound holds for any tokenizer vocabulary. A broken accept
+/// rule (committing draft samples directly) sits an order of magnitude
+/// above it.
+fn stochastic_losslessness_sweep(sess: &Session, tok: &Tokenizer, prompt: &str) {
+    use std::collections::HashMap;
+
+    const TEMP: f32 = 0.7;
+    const N: usize = 800;
+
+    // empirical marginal of the second committed token over N seeded
+    // single-prompt runs, submitted in batch-size waves to amortize
+    // scheduling cycles. Returns None when the artifact set is
+    // argmax-only (pre-logits sets cannot serve temperature > 0).
+    let hist = |kind: EngineKind, size: &str, seed_base: u64| -> Option<HashMap<i32, f64>> {
+        let cfg = ServeConfig {
+            size: size.to_string(),
+            batch: 8,
+            engine: kind,
+            ..ServeConfig::default()
+        };
+        let mut engine = build_engine(sess, &cfg).expect("engine");
+        if engine.argmax_only() {
+            return None;
+        }
+        let toks = tok.encode_prompt(prompt);
+        let mut counts: HashMap<i32, u64> = HashMap::new();
+        let mut n = 0u64;
+        let mut submitted = 0usize;
+        while submitted < N {
+            let wave = 8.min(N - submitted);
+            for w in 0..wave {
+                let params = SamplingParams {
+                    max_tokens: 2,
+                    temperature: TEMP,
+                    seed: seed_base + (submitted + w) as u64,
+                    ..SamplingParams::default()
+                };
+                engine.submit_request(GenerationRequest::new(toks.clone(), params));
+            }
+            submitted += wave;
+            for f in engine.run_to_completion().expect("sampled run") {
+                // EOS-at-one runs carry no second token; skip them the
+                // same way for every engine so the marginals compare
+                if let Some(&t) = f.tokens.get(1) {
+                    *counts.entry(t).or_insert(0) += 1;
+                    n += 1;
+                }
+            }
+        }
+        assert!(n as usize > N / 2, "{kind:?}: too many EOS-terminated runs ({n}/{N})");
+        Some(counts.into_iter().map(|(t, c)| (t, c as f64 / n as f64)).collect())
+    };
+    let tv = |a: &HashMap<i32, f64>, b: &HashMap<i32, f64>| -> f64 {
+        let mut support: Vec<i32> = a.keys().chain(b.keys()).copied().collect();
+        support.sort_unstable();
+        support.dedup();
+        support
+            .iter()
+            .map(|t| (a.get(t).unwrap_or(&0.0) - b.get(t).unwrap_or(&0.0)).abs())
+            .sum::<f64>()
+            / 2.0
+    };
+
+    // per-size AR(W4A16) baselines: Eagle artifacts live at "m", the
+    // rest at "s"; each drafting engine compares against the baseline
+    // of its own model size
+    for (size, engines) in [
+        (
+            "s",
+            vec![
+                ("qspec", EngineKind::QSpec),
+                ("hierspec", EngineKind::HierSpec { gamma: 3, kv_bits: 4 }),
+                ("treespec", EngineKind::TreeSpec { width: 2, depth: 4 }),
+            ],
+        ),
+        ("m", vec![("eagle", EngineKind::Eagle { tree_k: 1 })]),
+    ] {
+        let Some(base_a) = hist(EngineKind::Ar(Mode::W4A16), size, 900_000) else {
+            eprintln!("stochastic sweep: size {size} is argmax-only, skipping");
+            continue;
+        };
+        let base_b = hist(EngineKind::Ar(Mode::W4A16), size, 910_000).expect("second baseline");
+        // the measured AR-vs-AR sampling noise at this N and vocab,
+        // with an absolute floor against a lucky near-zero draw
+        let noise = tv(&base_a, &base_b).max(0.02);
+        for (name, kind) in engines {
+            let Some(h) = hist(kind, size, 920_000) else {
+                eprintln!("stochastic sweep: {name} is argmax-only, skipping");
+                continue;
+            };
+            let d = tv(&h, &base_a);
+            eprintln!("stochastic sweep: {name}@{size} TV {d:.4} (noise floor {noise:.4})");
+            assert!(
+                d < noise * 3.0,
+                "{name}: committed-stream TV {d:.4} vs AR baseline exceeds 3x the \
+                 measured sampling noise {noise:.4} — sampled serving is not lossless"
+            );
+        }
+    }
 }
 
 /// The protocol-v1 acceptance scenario, against a real engine over real

@@ -26,7 +26,12 @@
 //!   6. end to end through `BatchCore`: a follow-up request sharing a
 //!      committed prefix is admitted with its matched blocks attached,
 //!      so prefill is priced on the uncached remainder only and the
-//!      hit shows up in the engine metrics.
+//!      hit shows up in the engine metrics;
+//!   7. tree-shaped CoW (v1.7 TreeSpec): sibling branches forked off a
+//!      shared committed prefix allocate no duplicate blocks for that
+//!      prefix, diverge only on write (interleaved appends copy only
+//!      tail blocks, parent bytes intact), and release frees exactly
+//!      the non-shared blocks — refcounts audited block by block.
 
 use std::collections::HashMap;
 
@@ -441,6 +446,147 @@ fn check_streams(
         }
     }
     Ok(())
+}
+
+/// Property 7 — the TreeSpec fork pattern: every cycle the engine
+/// forks one branch per non-principal tree node off the slot's
+/// committed stream, appends that branch's divergent path, then
+/// releases all branches before committing. Under random shapes the
+/// pager must (a) share every prefix block at fork time (zero
+/// allocation), (b) copy only tail blocks on write, sibling by
+/// sibling, (c) leave the parent's bytes untouched, and (d) on
+/// release free exactly the non-shared blocks, restoring the
+/// pre-fork refcounts.
+#[test]
+fn tree_branch_forks_share_prefix_and_release_exactly_non_shared() {
+    check(
+        "tree-branch-cow",
+        300,
+        |r: &mut Pcg32| {
+            let bs = r.range_inclusive(1, 4);
+            let plen = r.range_inclusive(2, 10);
+            let branches = r.range_inclusive(1, 4);
+            let appends: Vec<u32> = (0..4).map(|_| r.next_u32()).collect();
+            (bs, (plen, (branches, appends)))
+        },
+        |(bs, (plen, (branches, appends)))| {
+            let bs = (*bs).clamp(1, 4) as usize;
+            let plen = (*plen).clamp(2, 10) as usize;
+            let nb = (*branches).clamp(1, 4) as usize;
+            let mut m = SlotManager::new(1, 512, 64);
+            m.configure_paging(bs, true);
+            let prompt: Vec<i32> = (0..plen as i32).collect();
+            let i = m.admit(1, &prompt, 64, vec![]).map_err(|e| e.to_string())?;
+            m.after_prefill(i, 50, -1);
+            let parent_stream = [prompt.clone(), vec![50]].concat();
+            let parent_table = m.block_table(i).to_vec();
+            let rc0: Vec<u32> = parent_table.iter().map(|&b| m.block_refcount(b)).collect();
+            let baseline = m.live_blocks();
+            let read_parent = |m: &SlotManager| -> Vec<i32> {
+                m.block_table(i).iter().flat_map(|&id| m.block_tokens(id)).copied().collect()
+            };
+            let read_branch = |m: &SlotManager, b: usize| -> Vec<i32> {
+                m.branch_blocks(b).iter().flat_map(|&id| m.block_tokens(id)).copied().collect()
+            };
+
+            // (a) fork: every branch shares every parent block by
+            // refcount; the forks themselves allocate nothing
+            let ids: Vec<usize> = (0..nb).map(|_| m.fork_branch(i)).collect();
+            if m.live_branches() != nb {
+                return Err(format!("{} live branches after {nb} forks", m.live_branches()));
+            }
+            if m.live_blocks() != baseline {
+                return Err("forking allocated blocks for an unchanged stream".into());
+            }
+            for &b in &ids {
+                if m.branch_blocks(b) != parent_table.as_slice() {
+                    return Err(format!("branch {b} does not share the parent table"));
+                }
+                if m.branch_len(b) != parent_stream.len() {
+                    return Err(format!("branch {b} stream length diverged at fork"));
+                }
+            }
+            for (k, &blk) in parent_table.iter().enumerate() {
+                let want = rc0[k] + nb as u32;
+                if m.block_refcount(blk) != want {
+                    return Err(format!(
+                        "block {blk}: refcount {} != {want} after {nb} forks",
+                        m.block_refcount(blk)
+                    ));
+                }
+            }
+
+            // (b) diverge: interleaved round-robin appends, so siblings
+            // CoW off the same partial tail one after another
+            let goal: Vec<usize> =
+                (0..nb).map(|j| (appends[j % appends.len()] as usize % 4) + 1).collect();
+            let mut want: Vec<Vec<i32>> = vec![parent_stream.clone(); nb];
+            for round in 0..4usize {
+                for (j, &b) in ids.iter().enumerate() {
+                    if round < goal[j] {
+                        let tok = 100 + (j * 10 + round) as i32;
+                        m.branch_append(b, tok);
+                        want[j].push(tok);
+                    }
+                }
+            }
+            // every branch reads back exactly its own path; the parent
+            // and the full prefix blocks are untouched and still shared
+            for (j, &b) in ids.iter().enumerate() {
+                if read_branch(&m, b) != want[j] {
+                    return Err(format!(
+                        "branch {b}: paged {:?}, appended {:?}",
+                        read_branch(&m, b),
+                        want[j]
+                    ));
+                }
+                let shared = parent_stream.len() / bs; // full blocks only
+                if m.branch_blocks(b)[..shared] != parent_table[..shared] {
+                    return Err(format!("branch {b} duplicated shared prefix blocks"));
+                }
+            }
+            if read_parent(&m) != parent_stream {
+                return Err("branch writes leaked into the parent stream".into());
+            }
+            // exact allocation accounting: each branch owns only its
+            // diverged tail — ceil(len/bs) total blocks minus the full
+            // parent blocks it still shares
+            let fresh: usize = (0..nb)
+                .map(|j| want[j].len().div_ceil(bs) - parent_stream.len() / bs)
+                .sum();
+            if m.live_blocks() != baseline + fresh {
+                return Err(format!(
+                    "{} live blocks; shared prefix should cap it at {baseline} + {fresh}",
+                    m.live_blocks()
+                ));
+            }
+
+            // (d) release in a scrambled order: each release frees only
+            // that branch's non-shared tail; the full drain restores
+            // the exact pre-fork state
+            for (n, &b) in ids.iter().rev().enumerate() {
+                m.release_branch(b);
+                if read_parent(&m) != parent_stream {
+                    return Err("branch release corrupted the parent stream".into());
+                }
+                if m.live_branches() != nb - 1 - n {
+                    return Err("live branch count out of step".into());
+                }
+            }
+            if m.live_blocks() != baseline {
+                return Err(format!(
+                    "{} live blocks after drain, {baseline} before forking",
+                    m.live_blocks()
+                ));
+            }
+            for (k, &blk) in parent_table.iter().enumerate() {
+                if m.block_refcount(blk) != rc0[k] {
+                    return Err(format!("block {blk}: refcount not restored after drain"));
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
